@@ -1,0 +1,101 @@
+//! The L3 coordinator end-to-end: a batched gradient-surrogate service
+//! feeding several concurrent HMC chains, with the PJRT (AOT JAX/Pallas)
+//! backend when artifacts are available and the native engine otherwise.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_gradients
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gdkron::coordinator::{BatchPolicy, Engine, PjrtEngine, SurrogateServer};
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::Metric;
+use gdkron::hmc::{run_hmc, Banana, HmcConfig, Target};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::runtime::ArtifactRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let d = 100;
+    let n_train = 10;
+    let inv_l2 = 1.0 / (0.4 * d as f64);
+    let target = Banana::new(d);
+
+    // training set: 10 spread-out gradient observations (as GPG-HMC would pick)
+    let mut rng = Rng::new(11);
+    let mut x = Mat::zeros(d, n_train);
+    let mut g = Mat::zeros(d, n_train);
+    for j in 0..n_train {
+        let xj = rng.uniform_vec(d, -2.0, 2.0);
+        let gj = target.grad_energy(&xj);
+        x.set_col(j, &xj);
+        g.set_col(j, &gj);
+    }
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(inv_l2),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )?;
+    let z = gp.z().clone();
+
+    // engine: PJRT artifact when available, native engine otherwise.
+    let policy = BatchPolicy { max_batch: 8, deadline: Duration::from_micros(500) };
+    let use_pjrt = ArtifactRegistry::open("artifacts")
+        .map(|r| r.spec("predict_d100_n10_b8").is_some())
+        .unwrap_or(false);
+    let server = if use_pjrt {
+        println!("serving through the AOT PJRT artifact `predict_d100_n10_b8`");
+        let xc = x.clone();
+        SurrogateServer::spawn(
+            move || {
+                let reg = ArtifactRegistry::open("artifacts")?;
+                let e = PjrtEngine::new(reg, "predict_d100_n10_b8", xc, z, inv_l2)?;
+                Ok(Box::new(e) as Box<dyn Engine>)
+            },
+            policy,
+        )?
+    } else {
+        println!("(PJRT artifacts unavailable — serving with the native engine)");
+        SurrogateServer::spawn_native(gp, policy)?
+    };
+
+    // four concurrent HMC chains share the surrogate service
+    let chains = 4;
+    let samples = 100;
+    let cfg = HmcConfig::paper_scaled(d, 0.004);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..chains {
+        let mut client = server.client();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let target = Banana::new(d);
+            let mut rng = Rng::new(1000 + c as u64);
+            let x0 = rng.gauss_vec(d);
+            let run = run_hmc(&target, &mut client, &x0, samples, &cfg, &mut rng);
+            (c, run.accept_rate)
+        }));
+    }
+    for h in handles {
+        let (c, rate) = h.join().unwrap();
+        println!("chain {c}: accept rate {rate:.2}");
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!(
+        "\nserved {} gradient requests in {} batches (mean batch {:.1}, max {}) in {wall:.2?}; \
+         {:.0} req/s; errors: {}",
+        m.requests,
+        m.batches,
+        m.mean_batch(),
+        m.max_batch,
+        m.requests as f64 / wall.as_secs_f64(),
+        m.errors
+    );
+    Ok(())
+}

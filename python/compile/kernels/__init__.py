@@ -1,0 +1,6 @@
+"""L1 Pallas kernels + pure-jnp reference oracle."""
+
+from . import ref  # noqa: F401
+from .gram_matvec import gram_matvec_pallas  # noqa: F401
+from .pairwise import choose_block, pairwise_panels_pallas  # noqa: F401
+from .predict import predict_gradients_pallas  # noqa: F401

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: pairwise scalar-derivative panels K', K'' (Def. 2).
+
+Computes, for the isotropic SE kernel, the two N x N panels that fully
+describe the derivative Gram matrix (Sec. 2.3): ``kp_eff = k(r)`` and
+``kpp_eff = -k(r)`` with ``r = ||x_a - x_b||^2 / l^2``.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the grid tiles the N x N
+output into ``(bn, bn)`` blocks; each program loads two (D, bn) panels of X
+into VMEM and performs one MXU-shaped ``(bn, D) x (D, bn)`` matmul plus VPU
+elementwise work. ``interpret=True`` everywhere on this image - the CPU PJRT
+plugin cannot execute Mosaic custom-calls; structure (not wallclock) is what
+we optimize at this layer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pairwise_panels_pallas", "choose_block"]
+
+
+def choose_block(n, cap=128):
+    """Largest divisor of n that is <= cap (TPU-friendly tile width)."""
+    best = 1
+    for b in range(1, min(n, cap) + 1):
+        if n % b == 0:
+            best = b
+    return best
+
+
+def _panels_kernel(xa_ref, xb_ref, il2_ref, kp_ref, kpp_ref):
+    xa = xa_ref[...]  # (D, bn) rows-tile of X
+    xb = xb_ref[...]  # (D, bn) cols-tile of X
+    il2 = il2_ref[0, 0]
+    qa = jnp.sum(xa * xa, axis=0)
+    qb = jnp.sum(xb * xb, axis=0)
+    cross = jnp.dot(xa.T, xb, preferred_element_type=jnp.float32)
+    r = (qa[:, None] + qb[None, :] - 2.0 * cross) * il2
+    r = jnp.maximum(r, 0.0)
+    k = jnp.exp(-0.5 * r)
+    kp_ref[...] = k
+    kpp_ref[...] = -k
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_panels_pallas(x, inv_l2, block_n=None):
+    """SE panels via Pallas. x: (D, N) f32; inv_l2: scalar.
+
+    Returns (kp_eff, kpp_eff), each (N, N).
+    """
+    d, n = x.shape
+    bn = block_n or choose_block(n)
+    assert n % bn == 0, f"N = {n} must be divisible by block {bn}"
+    il2 = jnp.asarray(inv_l2, jnp.float32).reshape(1, 1)
+    grid = (n // bn, n // bn)
+    out_shape = [
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _panels_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, bn), lambda i, j: (0, i)),  # rows-tile
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),  # cols-tile
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(x.astype(jnp.float32), x.astype(jnp.float32), il2)

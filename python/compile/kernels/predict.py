@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: batched posterior-mean gradient prediction (App. D.2).
+
+The GPG-HMC hot path: given the fitted representer weights Z, predict
+``grad f`` at a batch of query points. Grid tiles the query batch; each
+program performs two MXU-shaped contractions against the full (D, N)
+training panels (resident in VMEM - at the Fig. 5 shape D=100, N=10 they
+are tiny).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pairwise import choose_block
+
+__all__ = ["predict_gradients_pallas"]
+
+
+def _predict_kernel(x_ref, z_ref, xq_ref, zx_ref, qx_ref, il2_ref, out_ref):
+    x = x_ref[...]  # (D, N)
+    z = z_ref[...]  # (D, N)
+    xq = xq_ref[...]  # (D, bq) query tile
+    zx = zx_ref[...]  # (1, N): z_b . x_b
+    qx = qx_ref[...]  # (1, N): ||x_b||^2
+    il2 = il2_ref[0, 0]
+
+    qq = jnp.sum(xq * xq, axis=0)  # (bq,)
+    cross = jnp.dot(x.T, xq, preferred_element_type=jnp.float32)  # (N, bq)
+    r = (qx.T + qq[None, :] - 2.0 * cross) * il2
+    r = jnp.maximum(r, 0.0)
+    k = jnp.exp(-0.5 * r)
+    kp = -0.5 * k
+    kpp = 0.25 * k
+    m = il2 * (jnp.dot(z.T, xq, preferred_element_type=jnp.float32) - zx.T)  # (N, bq)
+    t1 = -2.0 * jnp.dot(z, kp, preferred_element_type=jnp.float32)  # (D, bq)
+    wm = kpp * m
+    t2 = -4.0 * (xq * jnp.sum(wm, axis=0)[None, :]
+                 - jnp.dot(x, wm, preferred_element_type=jnp.float32))
+    out_ref[...] = il2 * (t1 + t2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def predict_gradients_pallas(x, z, xq, inv_l2, block_b=None):
+    """Batched gradient prediction via Pallas.
+
+    Args:
+      x, z: (D, N) training locations / representer weights;
+      xq: (D, B) query points; inv_l2: scalar.
+
+    Returns: (D, B) posterior-mean gradients.
+    """
+    d, n = x.shape
+    _, b = xq.shape
+    bq = block_b or choose_block(b)
+    assert b % bq == 0, f"B = {b} must be divisible by block {bq}"
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    xq = xq.astype(jnp.float32)
+    il2 = jnp.asarray(inv_l2, jnp.float32).reshape(1, 1)
+    zx = jnp.sum(z * x, axis=0).reshape(1, n)
+    qx = jnp.sum(x * x, axis=0).reshape(1, n)
+    grid = (b // bq,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, n), lambda q: (0, 0)),
+            pl.BlockSpec((d, n), lambda q: (0, 0)),
+            pl.BlockSpec((d, bq), lambda q: (0, q)),
+            pl.BlockSpec((1, n), lambda q: (0, 0)),
+            pl.BlockSpec((1, n), lambda q: (0, 0)),
+            pl.BlockSpec((1, 1), lambda q: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, bq), lambda q: (0, q)),
+        out_shape=jax.ShapeDtypeStruct((d, b), jnp.float32),
+        interpret=True,
+    )(x, z, xq, zx, qx, il2)

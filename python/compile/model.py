@@ -1,0 +1,113 @@
+"""L2: JAX compute graphs composed from the L1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO-text artifacts for the rust
+runtime. Python never runs at request time - each entry point is a pure
+function of arrays, jitted once per shape:
+
+* ``se_gram_matvec``  - implicit Gram matvec (Fig. 4 iterative-solver body),
+* ``se_fit``          - exact Woodbury solve for the representer weights Z
+  (App. C.1, stationary branch, N^2 x N^2 core in-graph),
+* ``se_predict``      - batched posterior-mean gradients (GPG-HMC hot path),
+* ``se_fit_predict``  - fused fit + predict for one-shot surrogate queries.
+
+All use the isotropic squared-exponential kernel; the scalar ``inv_l2`` is
+an HLO *parameter*, so one artifact serves any lengthscale at a fixed shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gram_matvec import gram_matvec_pallas
+from .kernels.pairwise import pairwise_panels_pallas
+from .kernels.predict import predict_gradients_pallas
+
+__all__ = ["se_gram_matvec", "se_fit", "se_predict", "se_fit_predict"]
+
+
+def se_gram_matvec(x, v, inv_l2):
+    """(grad-K-grad') vec(V): Pallas panels + Pallas matvec."""
+    kp_eff, kpp_eff = pairwise_panels_pallas(x, inv_l2)
+    return gram_matvec_pallas(x, v, kp_eff, kpp_eff, inv_l2)
+
+
+FIT_CG_ITERS = 256
+
+
+def se_fit(x, g, inv_l2):
+    """In-graph solve of (grad-K-grad') vec(Z) = vec(G): returns Z (D, N).
+
+    Implemented as ``FIT_CG_ITERS`` iterations of Jacobi-preconditioned CG on
+    the structured matvec (Sec. 2.3 "General Improvements"). Deliberately
+    *not* ``jnp.linalg``: LAPACK lowers to typed-FFI custom-calls that the
+    deployment XLA (xla_extension 0.5.1) rejects, while this loop is pure
+    HLO — and it is the same iterative engine the paper proposes for the
+    `N > D` regime, here specialized to the artifact's fixed shape. The
+    iteration count is a static bound; convergence at the shipped shapes is
+    certified by `python/tests/test_model.py` + the rust cross-check.
+    """
+    import jax.lax as lax
+
+    x = x.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    kp_eff, kpp_eff = pairwise_panels_pallas(x, inv_l2)
+
+    def matvec(v):
+        lam_term = inv_l2 * (v @ kp_eff)
+        p = inv_l2 * (x.T @ v)
+        w = kpp_eff * (p - jnp.diag(p)[None, :])
+        wsum = jnp.sum(w, axis=1)
+        corr = inv_l2 * (x * wsum[None, :] - x @ w.T)
+        return lam_term + corr
+
+    # Jacobi preconditioner: Gram diagonal = kp_eff_aa * inv_l2 (the
+    # stationary correction vanishes on the diagonal).
+    diag = jnp.diag(kp_eff) * inv_l2  # (N,)
+    precond = lambda r: r / diag[None, :]
+
+    z0 = jnp.zeros_like(g)
+    r0 = g
+    p0 = precond(r0)
+    rz0 = jnp.sum(r0 * p0)
+
+    def body(_, state):
+        z, r, p, rz = state
+        ap = matvec(p)
+        pap = jnp.sum(p * ap)
+        alpha = rz / jnp.maximum(pap, 1e-30)
+        z = z + alpha * p
+        r = r - alpha * ap
+        s = precond(r)
+        rz_new = jnp.sum(r * s)
+        beta = rz_new / jnp.maximum(rz, 1e-30)
+        p = s + beta * p
+        return z, r, p, rz_new
+
+    z, _, _, _ = lax.fori_loop(0, FIT_CG_ITERS, body, (z0, r0, p0, rz0))
+    return z
+
+
+def se_predict(x, z, xq, inv_l2):
+    """Batched posterior-mean gradients at query points (Pallas)."""
+    return predict_gradients_pallas(x, z, xq, inv_l2)
+
+
+def se_fit_predict(x, g, xq, inv_l2):
+    """Fused fit + batched predict (one-shot surrogate queries)."""
+    z = se_fit(x, g, inv_l2)
+    return se_predict(x, z, xq, inv_l2)
+
+
+def lower_to_hlo_text(fn, *args):
+    """Lower a jitted function to HLO text (the rust-loadable format).
+
+    HLO *text*, not a serialized proto: jax >= 0.5 emits 64-bit instruction
+    ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle vs JAX autodiff.
+
+Two-level oracle chain:
+  1. `ref.py` formulas are validated against jax.grad / jax.jacfwd of the
+     scalar kernel (the ground truth nobody hand-derived),
+  2. the Pallas kernels are validated against `ref.py` over a hypothesis
+     sweep of shapes and a dtype check.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gram_matvec import gram_matvec_pallas
+from compile.kernels.pairwise import choose_block, pairwise_panels_pallas
+from compile.kernels.predict import predict_gradients_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def se_kernel(xa, xb, inv_l2):
+    r = jnp.sum((xa - xb) ** 2) * inv_l2
+    return jnp.exp(-0.5 * r)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- ref vs autodiff
+
+
+def test_ref_gram_matvec_matches_autodiff_gram():
+    """The structured matvec equals the autodiff cross-derivative Gram matvec."""
+    d, n, il2 = 4, 3, 0.7
+    key = jax.random.PRNGKey(0)
+    x = rand(key, d, n)
+    v = rand(jax.random.PRNGKey(1), d, n)
+    # dense Gram via autodiff: block (a,b) = d^2 k / dx_a dx_b
+    block = jax.jacfwd(jax.grad(se_kernel, argnums=0), argnums=1)
+    dense = np.zeros((n * d, n * d))
+    for a in range(n):
+        for b in range(n):
+            blk = block(x[:, a], x[:, b], il2)
+            dense[a * d:(a + 1) * d, b * d:(b + 1) * d] = np.asarray(blk)
+    want = dense @ np.asarray(v).T.reshape(-1)
+    got = np.asarray(ref.gram_matvec(x, v, il2)).T.reshape(-1)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_ref_dense_gram_matches_autodiff():
+    d, n, il2 = 3, 3, 0.5
+    x = rand(jax.random.PRNGKey(2), d, n)
+    block = jax.jacfwd(jax.grad(se_kernel, argnums=0), argnums=1)
+    dense = np.asarray(ref.dense_gram(x, il2))
+    for a in range(n):
+        for b in range(n):
+            blk = np.asarray(block(x[:, a], x[:, b], il2))
+            np.testing.assert_allclose(
+                dense[a * d:(a + 1) * d, b * d:(b + 1) * d], blk, rtol=2e-5, atol=2e-6
+            )
+
+
+def test_ref_predict_interpolates_and_matches_autodiff_cross():
+    """Prediction at training inputs reproduces the solved-for observations."""
+    d, n, il2 = 4, 3, 0.6
+    x = rand(jax.random.PRNGKey(3), d, n)
+    g = rand(jax.random.PRNGKey(4), d, n)
+    z = ref.woodbury_core_solve(x, g, il2)
+    pred = ref.predict_gradients(x, z, x, il2)
+    np.testing.assert_allclose(np.asarray(pred), np.asarray(g), rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------- pallas vs ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=16),
+    n=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    il2=st.floats(min_value=0.05, max_value=5.0),
+)
+def test_pairwise_pallas_matches_ref(d, n, seed, il2):
+    x = rand(jax.random.PRNGKey(seed), d, n)
+    kp, kpp = pairwise_panels_pallas(x, il2)
+    _, kp_ref, kpp_ref = ref.pairwise_panels(x, il2)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(kp_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kpp), np.asarray(kpp_ref), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=12),
+    n=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    il2=st.floats(min_value=0.05, max_value=3.0),
+)
+def test_gram_matvec_pallas_matches_ref(d, n, seed, il2):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, d, n)
+    v = rand(k2, d, n)
+    kp, kpp = pairwise_panels_pallas(x, il2)
+    got = gram_matvec_pallas(x, v, kp, kpp, il2)
+    want = ref.gram_matvec(x, v, il2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=12),
+    n=st.integers(min_value=1, max_value=16),
+    b=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_predict_pallas_matches_ref(d, n, b, seed):
+    il2 = 0.4
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, d, n)
+    z = rand(k2, d, n)
+    xq = rand(k3, d, b)
+    got = predict_gradients_pallas(x, z, xq, il2)
+    want = ref.predict_gradients(x, z, xq, il2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_pallas_explicit_blocking_matches_unblocked():
+    """Tiled execution (several grid programs) must equal the 1-tile path."""
+    d, n, il2 = 8, 12, 0.3
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, d, n)
+    v = rand(k2, d, n)
+    kp, kpp = pairwise_panels_pallas(x, il2, block_n=4)
+    kp1, kpp1 = pairwise_panels_pallas(x, il2, block_n=12)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(kp1), rtol=1e-6)
+    got = gram_matvec_pallas(x, v, kp, kpp, il2, block_n=3)
+    want = gram_matvec_pallas(x, v, kp, kpp, il2, block_n=12)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_float32_inputs_accepted_from_float64():
+    """Kernels coerce f64 inputs to f32 (the artifact dtype)."""
+    d, n = 4, 4
+    x = np.random.RandomState(0).randn(d, n)  # float64
+    v = np.random.RandomState(1).randn(d, n)
+    kp, kpp = pairwise_panels_pallas(jnp.asarray(x), 0.5)
+    out = gram_matvec_pallas(jnp.asarray(x), jnp.asarray(v), kp, kpp, 0.5)
+    assert out.dtype == jnp.float32
+
+
+def test_choose_block_divides():
+    for n in [1, 7, 12, 100, 128, 1000]:
+        b = choose_block(n)
+        assert n % b == 0
+        assert b <= 128

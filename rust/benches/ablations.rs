@@ -1,0 +1,128 @@
+//! Ablation benches for the design choices called out in DESIGN.md:
+//! observation-window size, Jacobi preconditioning, the structured
+//! Hessian solve, and the exact-vs-iterative fit crossover.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::gp::{FitMethod, FitOptions, GradientGp};
+use gdkron::gram::{GramFactors, GramOperator, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::{Lu, Mat};
+use gdkron::opt::{GpHessianOptimizer, LineSearch, OptOptions, RelaxedRosenbrock};
+use gdkron::rng::Rng;
+use gdkron::solvers::{cg_solve, CgOptions, JacobiPrecond};
+
+fn main() {
+    let t = Duration::from_millis(300);
+
+    println!("## window-size ablation — GP-H on D=60 relaxed Rosenbrock");
+    let obj = RelaxedRosenbrock::new(60);
+    let x0 = vec![0.8; 60];
+    for m in [2usize, 3, 5, 10] {
+        let opt = GpHessianOptimizer {
+            kernel: Arc::new(SquaredExponential),
+            metric: Metric::Iso(9.0),
+            window: m,
+            center: None,
+            prior_grad_mean: None,
+            opts: OptOptions { gtol: 1e-5, max_iters: 120, line_search: LineSearch::Backtracking },
+        };
+        let trace = opt.minimize(&obj, &x0);
+        println!(
+            "gp_h window m={m:<2}: {} iters, f_end {:.2e}, {} g-evals",
+            trace.iterations(),
+            trace.f.last().unwrap(),
+            trace.g_evals
+        );
+        bench_with(&format!("gp_h full-run m={m}"), t, 3, &mut || {
+            black_box(opt.minimize(&obj, &x0));
+        });
+    }
+
+    println!("## preconditioner ablation — iterative solve, D=50, N=300");
+    let mut rng = Rng::new(3);
+    let x = Mat::from_fn(50, 300, |_, _| rng.uniform_in(-2.0, 2.0));
+    let g = Mat::from_fn(50, 300, |_, _| rng.gauss());
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(1.0 / 500.0), None);
+    let op = GramOperator::new(&f);
+    for precond in [false, true] {
+        let opts = CgOptions {
+            rtol: 1e-4,
+            max_iters: 3000,
+            precond: precond.then(|| JacobiPrecond::new(&f.gram_diag())),
+            track_history: false,
+        };
+        let res = cg_solve(&op, g.as_slice(), None, &opts);
+        println!(
+            "cg precond={precond:<5}: {} iters (converged={})",
+            res.iters, res.converged
+        );
+    }
+
+    println!("## hessian-step ablation — structured Woodbury vs dense LU");
+    for d in [100usize, 400] {
+        let mut rng = Rng::new(d as u64);
+        let x = Mat::from_fn(d, 10, |_, _| rng.gauss());
+        let gm = Mat::from_fn(d, 10, |_, _| rng.gauss());
+        let gp = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(1.0 / d as f64),
+            &x,
+            &gm,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let xq = rng.gauss_vec(d);
+        let b = rng.gauss_vec(d);
+        let parts = gp.predict_hessian_parts(&xq);
+        bench_with(&format!("hessian_solve structured d={d} n=10"), t, 7, &mut || {
+            black_box(parts.solve(&gp, &b).unwrap());
+        });
+        let dense = parts.to_dense(&gp);
+        bench_with(&format!("hessian_solve dense_lu   d={d} n=10"), t, 5, &mut || {
+            black_box(Lu::factor(&dense).unwrap().solve_vec(&b));
+        });
+    }
+
+    // n = 48 exact costs ~74 s/solve (measured once; see EXPERIMENTS.md) —
+    // excluded here to keep `cargo bench` under control.
+    println!("## fit-engine crossover — exact Woodbury vs iterative CG, D=64");
+    for n in [4usize, 8, 16, 32] {
+        let mut rng = Rng::new(100 + n as u64);
+        let x = Mat::from_fn(64, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(64, n, |_, _| rng.gauss());
+        bench_with(&format!("fit exact     d=64 n={n}"), t, 5, &mut || {
+            black_box(
+                GradientGp::fit(
+                    Arc::new(SquaredExponential),
+                    Metric::Iso(1.0 / 64.0),
+                    &x,
+                    &g,
+                    &FitOptions { method: FitMethod::Exact, ..Default::default() },
+                )
+                .unwrap(),
+            );
+        });
+        bench_with(&format!("fit iterative d=64 n={n}"), t, 5, &mut || {
+            black_box(
+                GradientGp::fit(
+                    Arc::new(SquaredExponential),
+                    Metric::Iso(1.0 / 64.0),
+                    &x,
+                    &g,
+                    &FitOptions {
+                        method: FitMethod::Iterative(CgOptions {
+                            rtol: 1e-8,
+                            max_iters: 20_000,
+                            ..Default::default()
+                        }),
+                        ..Default::default()
+                    },
+                )
+                .unwrap(),
+            );
+        });
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: FIG2 end-to-end — CG vs the probabilistic linear solvers on the
+//! D=100 App. F.1 quadratic (full solves to rtol 1e-5).
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::opt::{plinalg, LinearCg, Quadratic};
+use gdkron::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    println!("# fig2_quadratic — D=100 full solves (paper Fig. 2)");
+    let mut rng = Rng::new(1);
+    let (q, x0) = Quadratic::paper_f1(100, 0.5, 100.0, 0.6, &mut rng);
+
+    let t = Duration::from_millis(500);
+    bench_with("cg_full_solve d=100", t, 7, &mut || {
+        black_box(LinearCg { gtol: 1e-5, max_iters: 300 }.minimize(&q, &x0));
+    });
+    bench_with("gpx_solution_solver d=100", t, 7, &mut || {
+        black_box(plinalg::solution_solver(&q, &x0, 1e-5, 300));
+    });
+    bench_with("gph_hessian_solver d=100", t, 5, &mut || {
+        black_box(plinalg::hessian_solver(&q, &x0, 1e-5, 120));
+    });
+}

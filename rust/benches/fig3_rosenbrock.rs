@@ -1,0 +1,49 @@
+//! Bench: FIG3 end-to-end — BFGS / GP-H / GP-X on the D=100 relaxed
+//! Rosenbrock (full optimizer runs, shared backtracking line search).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::gram::Metric;
+use gdkron::kernels::SquaredExponential;
+use gdkron::opt::{
+    Bfgs, GpHessianOptimizer, GpMinOptimizer, LineSearch, OptOptions, RelaxedRosenbrock,
+};
+
+fn main() {
+    println!("# fig3_rosenbrock — D=100 full optimizer runs (paper Fig. 3)");
+    let d = 100;
+    let obj = RelaxedRosenbrock::new(d);
+    let x0 = vec![0.8; d];
+    let shared = OptOptions { gtol: 1e-5, max_iters: 150, line_search: LineSearch::Backtracking };
+    let t = Duration::from_millis(500);
+
+    let bfgs = Bfgs::new(shared.clone());
+    bench_with("bfgs d=100", t, 5, &mut || {
+        black_box(bfgs.minimize(&obj, &x0));
+    });
+
+    let gph = GpHessianOptimizer {
+        kernel: Arc::new(SquaredExponential),
+        metric: Metric::Iso(9.0),
+        window: 2,
+        center: None,
+        prior_grad_mean: None,
+        opts: shared.clone(),
+    };
+    bench_with("gp_h rbf m=2 d=100", t, 5, &mut || {
+        black_box(gph.minimize(&obj, &x0));
+    });
+
+    let gpx = GpMinOptimizer {
+        kernel: Arc::new(SquaredExponential),
+        metric: Metric::Iso(0.05),
+        window: 2,
+        center_at_current_gradient: false,
+        opts: shared,
+    };
+    bench_with("gp_x rbf m=2 d=100", t, 5, &mut || {
+        black_box(gpx.minimize(&obj, &x0));
+    });
+}

@@ -1,0 +1,65 @@
+//! Bench: FIG4 hot path — the structured matvec at the paper's scale
+//! (D=100, N=1000: a 10⁵×10⁵ implicit operator), native vs PJRT artifact,
+//! plus a capped CG solve.
+
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::gram::{GramFactors, GramOperator, MatvecWorkspace, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::runtime::{ArgValue, ArtifactRegistry};
+use gdkron::solvers::{cg_solve, CgOptions, JacobiPrecond};
+
+fn main() {
+    println!("# fig4_matvec — D=100, N=1000 implicit operator (paper Fig. 4)");
+    let (d, n) = (100, 1000);
+    let mut rng = Rng::new(1);
+    let x = Mat::from_fn(d, n, |_, _| rng.uniform_in(-2.0, 2.0));
+    let v = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let inv_l2 = 1.0 / (10.0 * d as f64);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(inv_l2), None);
+
+    let mut out = Mat::zeros(d, n);
+    let mut ws = MatvecWorkspace::new(d, n);
+    bench_with("matvec native d=100 n=1000", Duration::from_millis(800), 9, &mut || {
+        f.matvec_into(&v, &mut out, &mut ws);
+        black_box(&out);
+    });
+
+    match ArtifactRegistry::open("artifacts") {
+        Ok(reg) if reg.spec("gram_matvec_d100_n1000").is_some() => {
+            bench_with("matvec pjrt   d=100 n=1000", Duration::from_millis(800), 5, &mut || {
+                let r = reg
+                    .execute_mat(
+                        "gram_matvec_d100_n1000",
+                        &[ArgValue::Mat(&x), ArgValue::Mat(&v), ArgValue::Scalar(inv_l2)],
+                        d,
+                        n,
+                    )
+                    .unwrap();
+                black_box(r);
+            });
+        }
+        _ => println!("(pjrt artifact unavailable — run `make artifacts`)"),
+    }
+
+    // capped CG solve (50 iterations) — per-iteration cost at scale
+    let op = GramOperator::new(&f);
+    let pre = JacobiPrecond::new(&f.gram_diag());
+    bench_with("cg_50_iters d=100 n=1000", Duration::from_millis(800), 5, &mut || {
+        let res = cg_solve(
+            &op,
+            v.as_slice(),
+            None,
+            &CgOptions {
+                rtol: 1e-30, // force the full 50 iterations
+                max_iters: 50,
+                precond: Some(pre.clone()),
+                track_history: false,
+            },
+        );
+        black_box(res.iters);
+    });
+}

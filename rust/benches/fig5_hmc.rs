@@ -1,0 +1,99 @@
+//! Bench: FIG5 hot paths — leapfrog throughput with true vs GP-surrogate
+//! gradients (D=100, N=10), single prediction latency, and coordinator
+//! serving throughput.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::coordinator::{BatchPolicy, SurrogateServer};
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::Metric;
+use gdkron::hmc::{leapfrog, Banana, GradientSource, HmcConfig, SurrogateGradient, Target, TrueGradient};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+
+fn main() {
+    println!("# fig5_hmc — surrogate vs true gradient trajectories (paper Fig. 5)");
+    let d = 100;
+    let n = 10;
+    let target = Banana::new(d);
+    let l2 = 0.4 * d as f64;
+    let mut rng = Rng::new(1);
+    let mut x = Mat::zeros(d, n);
+    let mut g = Mat::zeros(d, n);
+    for j in 0..n {
+        let xj = rng.uniform_vec(d, -2.0, 2.0);
+        g.set_col(j, &target.grad_energy(&xj));
+        x.set_col(j, &xj);
+    }
+
+    let t = Duration::from_millis(400);
+    bench_with("gp_fit d=100 n=10 (woodbury)", t, 9, &mut || {
+        let gp = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(1.0 / l2),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        black_box(gp.n());
+    });
+
+    let mut surrogate = SurrogateGradient::fit(&x, &g, l2).unwrap();
+    let xq = rng.gauss_vec(d);
+    bench_with("predict_gradient single d=100 n=10", t, 9, &mut || {
+        black_box(surrogate.grad(&xq));
+    });
+
+    let cfg = HmcConfig { step_size: 0.025, leapfrog_steps: 128, mass: 1.0 };
+    let p = rng.gauss_vec(d);
+    bench_with("leapfrog_128 surrogate", t, 7, &mut || {
+        black_box(leapfrog(&mut surrogate, &xq, &p, &cfg));
+    });
+    let mut true_g = TrueGradient::new(&target);
+    bench_with("leapfrog_128 true_gradient", t, 7, &mut || {
+        black_box(leapfrog(&mut true_g, &xq, &p, &cfg));
+    });
+
+    // coordinator serving throughput (4 concurrent clients, native engine)
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(1.0 / l2),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    let server = SurrogateServer::spawn_native(
+        gp,
+        BatchPolicy { max_batch: 8, deadline: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let reqs = 2000;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c);
+            for _ in 0..reqs / 4 {
+                let q = rng.gauss_vec(100);
+                black_box(client.predict(&q).unwrap());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!(
+        "coordinator_throughput 4 clients                {:.0} req/s (mean batch {:.1}, {} batches)",
+        reqs as f64 / wall.as_secs_f64(),
+        m.mean_batch(),
+        m.batches
+    );
+}

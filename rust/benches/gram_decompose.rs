@@ -1,0 +1,56 @@
+//! Bench: the core Gram machinery (FIG1 / Sec. 2) — factor construction,
+//! dense assembly (the thing the paper avoids), structured matvec, and
+//! the exact Woodbury solve.
+
+use gdkron::bench_util::{bench, black_box};
+use gdkron::gram::{woodbury_solve, GramFactors, GramOperator, MatvecWorkspace, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::LinearOp;
+
+fn sample(d: usize, n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (Mat::from_fn(d, n, |_, _| rng.gauss()), Mat::from_fn(d, n, |_, _| rng.gauss()))
+}
+
+fn main() {
+    println!("# gram_decompose — factors / matvec / woodbury (Sec. 2)");
+    for (d, n) in [(100usize, 5usize), (100, 10), (500, 10), (1000, 10)] {
+        let (x, g) = sample(d, n, 1);
+        let inv_l2 = 1.0 / d as f64;
+
+        bench(&format!("factors_build d={d} n={n}"), || {
+            let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(inv_l2), None);
+            black_box(&f);
+        });
+
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(inv_l2), None);
+        let mut out = Mat::zeros(d, n);
+        let mut ws = MatvecWorkspace::new(d, n);
+        bench(&format!("matvec (structured) d={d} n={n}"), || {
+            f.matvec_into(&g, &mut out, &mut ws);
+            black_box(&out);
+        });
+
+        if n * d <= 2000 {
+            bench(&format!("dense_assembly d={d} n={n}"), || {
+                black_box(f.to_dense());
+            });
+        }
+
+        bench(&format!("woodbury_solve d={d} n={n}"), || {
+            black_box(woodbury_solve(&f, &g).unwrap());
+        });
+    }
+
+    // operator-wrapped matvec (what CG sees)
+    let (x, g) = sample(100, 100, 2);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.01), None);
+    let op = GramOperator::new(&f);
+    let mut y = vec![0.0; 100 * 100];
+    bench("operator_matvec d=100 n=100", || {
+        op.apply(g.as_slice(), &mut y);
+        black_box(&y);
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench: TAB-C — exact-solve cost vs dimension (the linear-in-D headline)
+//! and vs N (the N⁶ core), against the naive dense solve where feasible.
+
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::gram::{woodbury_solve, GramFactors, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::{Lu, Mat};
+use gdkron::rng::Rng;
+
+fn main() {
+    println!("# scaling_dims — solve cost vs D and vs N (Sec. 1–2 claims)");
+    let t = Duration::from_millis(300);
+
+    println!("## woodbury vs D (N = 8) — expect ~linear growth");
+    for d in [64usize, 128, 256, 512, 1024, 2048] {
+        let mut rng = Rng::new(d as u64);
+        let x = Mat::from_fn(d, 8, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, 8, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(1.0 / d as f64), None);
+        bench_with(&format!("woodbury d={d} n=8"), t, 7, &mut || {
+            black_box(woodbury_solve(&f, &g).unwrap());
+        });
+    }
+
+    println!("## dense baseline vs D (N = 8) — expect ~cubic growth");
+    for d in [64usize, 128, 256] {
+        let mut rng = Rng::new(d as u64);
+        let x = Mat::from_fn(d, 8, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, 8, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(1.0 / d as f64), None);
+        let dense = f.to_dense();
+        bench_with(&format!("dense_lu d={d} n=8 (ND={})", 8 * d), t, 5, &mut || {
+            black_box(Lu::factor(&dense).unwrap().solve_vec(g.as_slice()));
+        });
+    }
+
+    println!("## woodbury vs N (D = 512) — the O(N⁶) core");
+    for n in [2usize, 4, 8, 16, 24] {
+        let mut rng = Rng::new(1000 + n as u64);
+        let x = Mat::from_fn(512, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(512, n, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(1.0 / 512.0), None);
+        bench_with(&format!("woodbury d=512 n={n}"), t, 5, &mut || {
+            black_box(woodbury_solve(&f, &g).unwrap());
+        });
+    }
+}

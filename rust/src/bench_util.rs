@@ -1,0 +1,123 @@
+//! Minimal benchmarking harness for the `cargo bench` targets.
+//!
+//! Substitution (DESIGN.md §6): criterion is not in the offline registry, so
+//! the bench binaries (`harness = false`) use this auto-calibrating
+//! measure-and-report loop instead. Methodology mirrors criterion's core:
+//! warmup, then batches sized so one measurement ≈ `target_time`, median +
+//! MAD over `samples` batches.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics (per-iteration).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters_per_sample: usize,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+/// Benchmark `f`, printing a criterion-style line. `f` is called repeatedly;
+/// keep any setup outside.
+pub fn bench(name: &str, mut f: impl FnMut()) -> BenchStats {
+    bench_with(name, Duration::from_millis(300), 11, &mut f)
+}
+
+/// Fully parameterized variant.
+pub fn bench_with(
+    name: &str,
+    target_time: Duration,
+    samples: usize,
+    f: &mut dyn FnMut(),
+) -> BenchStats {
+    // warmup + calibration: how many iters fit in target_time?
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters_per_sample =
+        ((target_time.as_nanos() / once.as_nanos().max(1)) as usize).clamp(1, 1_000_000);
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+
+    let stats = BenchStats {
+        name: name.to_string(),
+        median_ns: median,
+        mad_ns: mad,
+        iters_per_sample,
+        samples,
+    };
+    println!(
+        "{:<44} {:>14} ± {:<12} ({} iters × {} samples)",
+        stats.name,
+        fmt_ns(median),
+        fmt_ns(mad),
+        iters_per_sample,
+        samples
+    );
+    stats
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut acc = 0u64;
+        let s = bench_with(
+            "noop-ish",
+            Duration::from_millis(5),
+            5,
+            &mut || {
+                acc = acc.wrapping_add(black_box(1));
+            },
+        );
+        assert!(s.median_ns > 0.0);
+        assert!(s.median_ns < 1e7, "a no-op should be far under 10ms: {}", s.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Minimal TOML-subset configuration system.
+//!
+//! The launcher (`gdkron run <config.toml>`) and the artifact manifest
+//! (`artifacts/manifest.toml`, written by `python/compile/aot.py`) share this
+//! parser. Supported subset: `[section]` / `[section.sub]` headers, `key =
+//! value` with string, integer, float, boolean and flat arrays, `#` comments.
+//! That is everything our configs need; no external crates.
+
+mod parse;
+mod value;
+
+pub use parse::{parse_str, ParseError};
+pub use value::Value;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed configuration: flattened `section.key → value` map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse from a string.
+    pub fn from_str(s: &str) -> Result<Self, ParseError> {
+        parse_str(s).map(|entries| Config { entries })
+    }
+
+    /// Parse from a file.
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+        Self::from_str(&text).map_err(|e| anyhow::anyhow!("parsing {:?}: {e}", path.as_ref()))
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// All keys with the given section prefix (`prefix.`), with the prefix
+    /// stripped. Used to enumerate artifact entries in the manifest.
+    pub fn section_keys(&self, prefix: &str) -> Vec<String> {
+        let pat = format!("{prefix}.");
+        let mut out: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(&pat).map(|s| s.to_string()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Names of the direct child sections under `prefix` (deduplicated).
+    pub fn subsections(&self, prefix: &str) -> Vec<String> {
+        let pat = format!("{prefix}.");
+        let mut out: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(&pat))
+            .filter_map(|rest| rest.split('.').next().map(|s| s.to_string()))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.get(key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Float getter; integer values coerce.
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Value::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn int_array(&self, key: &str) -> Option<Vec<i64>> {
+        match self.get(key) {
+            Some(Value::Array(vs)) => vs
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    pub fn float_array(&self, key: &str) -> Option<Vec<f64>> {
+        match self.get(key) {
+            Some(Value::Array(vs)) => vs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(f) => Some(*f),
+                    Value::Int(i) => Some(*i as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    pub fn str_array(&self, key: &str) -> Option<Vec<String>> {
+        match self.get(key) {
+            Some(Value::Array(vs)) => vs
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => Some(s.clone()),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Typed getter with default.
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    /// Insert programmatically (used to apply CLI overrides on top of a file).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "fig2"
+[problem]
+dim = 100
+lambda_min = 0.5
+lambda_max = 100.0
+rho = 0.6
+verbose = true
+methods = ["cg", "gp-h", "gp-x"]
+seeds = [1, 2, 3]
+
+[kernel]
+name = "poly2"
+lengthscale = 1.0
+
+[kernel.advanced]
+jitter = 1e-10
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.str("title"), Some("fig2"));
+        assert_eq!(c.int("problem.dim"), Some(100));
+        assert_eq!(c.float("problem.lambda_min"), Some(0.5));
+        assert_eq!(c.bool("problem.verbose"), Some(true));
+        assert_eq!(c.str("kernel.name"), Some("poly2"));
+        assert_eq!(c.float("kernel.advanced.jitter"), Some(1e-10));
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.str_array("problem.methods").unwrap(), vec!["cg", "gp-h", "gp-x"]);
+        assert_eq!(c.int_array("problem.seeds").unwrap(), vec![1, 2, 3]);
+        // ints coerce to float arrays
+        assert_eq!(c.float_array("problem.seeds").unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let c = Config::from_str("x = 3").unwrap();
+        assert_eq!(c.float("x"), Some(3.0));
+        assert_eq!(c.int("x"), Some(3));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::from_str("").unwrap();
+        assert_eq!(c.float_or("nope", 2.5), 2.5);
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert!(c.bool_or("nope", true));
+        assert_eq!(c.str_or("nope", "dft"), "dft");
+    }
+
+    #[test]
+    fn subsections_enumeration() {
+        let c = Config::from_str(
+            "[a.x]\nk = 1\n[a.y]\nk = 2\n[a.y.deep]\nk = 3\n[b]\nk = 4\n",
+        )
+        .unwrap();
+        assert_eq!(c.subsections("a"), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::from_str("x = 1").unwrap();
+        c.set("x", Value::Int(5));
+        assert_eq!(c.int("x"), Some(5));
+    }
+}

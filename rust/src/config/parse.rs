@@ -1,0 +1,217 @@
+//! Line-oriented parser for the TOML subset.
+
+use super::Value;
+use std::collections::BTreeMap;
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, message: impl Into<String>) -> ParseError {
+    ParseError { line, message: message.into() }
+}
+
+/// Parse a config string into the flattened key map.
+pub fn parse_str(s: &str) -> Result<BTreeMap<String, Value>, ParseError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw) in s.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            validate_key(name, lineno)?;
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, format!("expected `key = value`, got {line:?}")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        validate_key(key, lineno)?;
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if out.insert(full.clone(), value).is_some() {
+            return Err(err(lineno, format!("duplicate key {full:?}")));
+        }
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key(key: &str, lineno: usize) -> Result<(), ParseError> {
+    let ok = key
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.');
+    if !ok {
+        return Err(err(lineno, format!("invalid key {key:?}")));
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quotes not supported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array (arrays must be single-line)"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // integer (no '.', 'e', 'E')
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(v) = s.parse::<i64>() {
+            return Ok(Value::Int(v));
+        }
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(err(lineno, format!("cannot parse value {s:?}")))
+}
+
+/// Split array items on commas outside string literals.
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = parse_str("# header\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(m["x"], Value::Int(1));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let m = parse_str("s = \"a#b\"").unwrap();
+        assert_eq!(m["s"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let m = parse_str("a = 1e-6\nb = 2.5E3\nc = -4e-3").unwrap();
+        assert_eq!(m["a"], Value::Float(1e-6));
+        assert_eq!(m["b"], Value::Float(2.5e3));
+        assert_eq!(m["c"], Value::Float(-4e-3));
+    }
+
+    #[test]
+    fn negative_integers() {
+        let m = parse_str("a = -42").unwrap();
+        assert_eq!(m["a"], Value::Int(-42));
+    }
+
+    #[test]
+    fn mixed_array_with_strings() {
+        let m = parse_str(r#"a = ["x,y", 2, 3.5, true]"#).unwrap();
+        match &m["a"] {
+            Value::Array(items) => {
+                assert_eq!(items[0], Value::Str("x,y".into()));
+                assert_eq!(items[1], Value::Int(2));
+                assert_eq!(items[2], Value::Float(3.5));
+                assert_eq!(items[3], Value::Bool(true));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let e = parse_str("x = 1\nx = 2").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn error_reports_line_numbers() {
+        let e = parse_str("a = 1\nbogus line").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn unterminated_section_rejected() {
+        assert!(parse_str("[oops").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(parse_str("x = @!").is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Size-or-deadline micro-batching over an mpsc channel.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy: a batch closes when it reaches `max_batch` items or when
+/// `deadline` has elapsed since its first item, whichever comes first.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, deadline: Duration::from_micros(200) }
+    }
+}
+
+/// Pulls items off a receiver according to a [`BatchPolicy`].
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is closed
+    /// and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first item
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let start = Instant::now();
+        while batch.len() < self.policy.max_batch {
+            let left = self.policy.deadline.saturating_sub(start.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            match self.rx.recv_timeout(left) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    #[test]
+    fn full_batch_closes_at_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, deadline: Duration::from_secs(1) });
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 100, deadline: Duration::from_millis(5) },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![42]);
+    }
+
+    #[test]
+    fn closed_channel_returns_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn items_from_other_thread_coalesce() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 8, deadline: Duration::from_millis(50) },
+        );
+        let h = std::thread::spawn(move || {
+            for i in 0..5 {
+                tx.send(i).unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert!(batch.len() >= 2, "expected coalescing, got {batch:?}");
+    }
+}

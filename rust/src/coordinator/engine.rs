@@ -1,0 +1,129 @@
+//! Prediction backends for the surrogate server.
+
+use crate::gp::GradientGp;
+use crate::linalg::Mat;
+use crate::runtime::{ArgValue, ArtifactRegistry};
+
+/// A batched gradient-prediction backend.
+///
+/// Deliberately **not** `Send`: the PJRT client wraps thread-affine handles,
+/// so the server constructs its engine *inside* the worker thread (see
+/// [`super::SurrogateServer::spawn`]'s factory handshake).
+pub trait Engine {
+    /// Input dimension `D`.
+    fn dim(&self) -> usize;
+    /// Predict gradients at the query columns of `xq` (`D×B`).
+    fn predict_batch(&self, xq: &Mat) -> anyhow::Result<Mat>;
+    /// Backend label for metrics/logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Native engine: the in-process [`GradientGp`] (f64, exact Woodbury fit).
+pub struct NativeEngine {
+    gp: GradientGp,
+}
+
+impl NativeEngine {
+    pub fn new(gp: GradientGp) -> Self {
+        NativeEngine { gp }
+    }
+
+    pub fn gp(&self) -> &GradientGp {
+        &self.gp
+    }
+}
+
+impl Engine for NativeEngine {
+    fn dim(&self) -> usize {
+        self.gp.d()
+    }
+    fn predict_batch(&self, xq: &Mat) -> anyhow::Result<Mat> {
+        Ok(self.gp.predict_gradients(xq))
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT engine: an AOT-compiled `predict` artifact at fixed `(D, N, B)`.
+/// Batches are padded up to the artifact batch width and split when larger.
+pub struct PjrtEngine {
+    registry: ArtifactRegistry,
+    artifact: String,
+    /// Training state fed to every call.
+    x: Mat,
+    z: Mat,
+    inv_l2: f64,
+    /// Fixed artifact batch width.
+    batch_width: usize,
+}
+
+impl PjrtEngine {
+    /// `artifact` must take `(x: D×N, z: D×N, xq: D×B, inv_l2)` inputs.
+    pub fn new(
+        registry: ArtifactRegistry,
+        artifact: &str,
+        x: Mat,
+        z: Mat,
+        inv_l2: f64,
+    ) -> anyhow::Result<Self> {
+        let spec = registry
+            .spec(artifact)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {artifact:?}"))?;
+        anyhow::ensure!(spec.inputs.len() == 4, "predict artifact must take 4 inputs");
+        let dx = &spec.inputs[0].dims;
+        let dq = &spec.inputs[2].dims;
+        anyhow::ensure!(
+            dx.len() == 2 && dx[0] == x.rows() && dx[1] == x.cols(),
+            "training shape {}x{} does not match artifact {:?}",
+            x.rows(),
+            x.cols(),
+            dx
+        );
+        let batch_width = dq[1];
+        Ok(PjrtEngine { registry, artifact: artifact.to_string(), x, z, inv_l2, batch_width })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn dim(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn predict_batch(&self, xq: &Mat) -> anyhow::Result<Mat> {
+        let d = self.dim();
+        anyhow::ensure!(xq.rows() == d, "query dim mismatch");
+        let b = xq.cols();
+        let w = self.batch_width;
+        let mut out = Mat::zeros(d, b);
+        let mut start = 0;
+        while start < b {
+            let take = (b - start).min(w);
+            // pad the chunk to the fixed artifact width
+            let mut chunk = Mat::zeros(d, w);
+            for j in 0..take {
+                chunk.set_col(j, xq.col(start + j));
+            }
+            let res = self.registry.execute_mat(
+                &self.artifact,
+                &[
+                    ArgValue::Mat(&self.x),
+                    ArgValue::Mat(&self.z),
+                    ArgValue::Mat(&chunk),
+                    ArgValue::Scalar(self.inv_l2),
+                ],
+                d,
+                w,
+            )?;
+            for j in 0..take {
+                out.set_col(start + j, res.col(j));
+            }
+            start += take;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 coordinator: batched gradient-surrogate serving.
+//!
+//! The paper's algorithmic contribution lives in [`crate::gram`]/[`crate::gp`];
+//! the coordinator turns it into a *service*: many concurrent consumers
+//! (HMC chains, optimizers, external probes) query one shared GP gradient
+//! surrogate, and a micro-batcher coalesces their requests so the backend —
+//! native rust or an AOT-compiled PJRT executable — sees MXU-shaped batches
+//! instead of single vectors.
+//!
+//! ```text
+//!  chain 0 ─┐                                   ┌─ NativeEngine (GradientGp)
+//!  chain 1 ─┼─▶ SurrogateClient ─▶ micro-batcher ┼─ PjrtEngine (artifacts/*.hlo.txt)
+//!  chain k ─┘      (mpsc)        (size/deadline) └─ …
+//! ```
+//!
+//! Substitution note (DESIGN.md §6): the environment has no async runtime
+//! crate, so the coordinator uses `std::thread` + `mpsc` channels — the
+//! batching semantics (collect up to `max_batch` requests or `deadline`,
+//! whichever first) match a tokio implementation.
+
+mod batcher;
+mod engine;
+mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use server::{ServerMetrics, SurrogateClient, SurrogateServer};

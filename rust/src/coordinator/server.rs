@@ -1,0 +1,331 @@
+//! The surrogate server: worker thread + micro-batcher + engine.
+
+use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::hmc::GradientSource;
+use crate::linalg::Mat;
+
+use super::{BatchPolicy, Batcher, Engine};
+
+struct Request {
+    x: Vec<f64>,
+    resp: SyncSender<anyhow::Result<Vec<f64>>>,
+}
+
+/// Channel message: a prediction request or the shutdown sentinel.
+///
+/// The sentinel (rather than channel closure) ends the worker because client
+/// handles hold `Sender` clones — the channel only closes once *every*
+/// client is dropped, which would make [`SurrogateServer::shutdown`] hang on
+/// the join while any chain is still alive.
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// Serving telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct ServerMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub max_batch: usize,
+    pub errors: usize,
+}
+
+impl ServerMetrics {
+    /// Mean coalesced batch size — the number the batching policy is tuned on.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Owns the worker thread; dropping it shuts the service down cleanly.
+pub struct SurrogateServer {
+    tx: Option<Sender<Msg>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    dim: usize,
+}
+
+/// Cheap cloneable handle used by the chains.
+#[derive(Clone)]
+pub struct SurrogateClient {
+    tx: Sender<Msg>,
+    dim: usize,
+    true_evals: usize,
+}
+
+impl SurrogateServer {
+    /// Spawn the worker; the engine is built *inside* the worker thread by
+    /// `factory` (PJRT handles are thread-affine, so engines are not `Send`).
+    /// Blocks until the engine is up; factory errors surface here.
+    pub fn spawn<F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let metrics_w = metrics.clone();
+        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
+        let worker = std::thread::spawn(move || {
+            let engine = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(e.dim()));
+                    e
+                }
+                Err(err) => {
+                    let _ = ready_tx.send(Err(err));
+                    return;
+                }
+            };
+            let dim = engine.dim();
+            let batcher = Batcher::new(rx, policy);
+            'serve: while let Some(msgs) = batcher.next_batch() {
+                let mut stop = false;
+                let batch: Vec<Request> = msgs
+                    .into_iter()
+                    .filter_map(|m| match m {
+                        Msg::Req(r) => Some(r),
+                        Msg::Stop => {
+                            stop = true;
+                            None
+                        }
+                    })
+                    .collect();
+                if !batch.is_empty() {
+                    let b = batch.len();
+                    let mut xq = Mat::zeros(dim, b);
+                    for (j, req) in batch.iter().enumerate() {
+                        xq.set_col(j, &req.x);
+                    }
+                    let result = engine.predict_batch(&xq);
+                    {
+                        let mut m = metrics_w.lock().unwrap();
+                        m.requests += b;
+                        m.batches += 1;
+                        m.max_batch = m.max_batch.max(b);
+                        if result.is_err() {
+                            m.errors += b;
+                        }
+                    }
+                    match result {
+                        Ok(out) => {
+                            for (j, req) in batch.iter().enumerate() {
+                                let _ = req.resp.send(Ok(out.col(j).to_vec()));
+                            }
+                        }
+                        Err(e) => {
+                            for req in &batch {
+                                let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
+                            }
+                        }
+                    }
+                }
+                if stop {
+                    break 'serve;
+                }
+            }
+            // after the sentinel, rx drops here: pending/future client sends
+            // fail fast instead of hanging.
+        });
+        let dim = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("surrogate worker died during startup"))??;
+        Ok(SurrogateServer { tx: Some(tx), worker: Some(worker), metrics, dim })
+    }
+
+    /// Convenience: serve an in-process [`GradientGp`]
+    /// (wraps it in a [`super::NativeEngine`]).
+    pub fn spawn_native(gp: crate::gp::GradientGp, policy: BatchPolicy) -> anyhow::Result<Self> {
+        Self::spawn(move || Ok(Box::new(super::NativeEngine::new(gp)) as Box<dyn Engine>), policy)
+    }
+
+    /// New client handle.
+    pub fn client(&self) -> SurrogateClient {
+        SurrogateClient { tx: self.tx.as_ref().unwrap().clone(), dim: self.dim, true_evals: 0 }
+    }
+
+    /// Snapshot of the serving metrics.
+    pub fn metrics(&self) -> ServerMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Shut down: send the stop sentinel and join the worker. In-flight
+    /// requests already queued ahead of the sentinel are still served.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Stop);
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for SurrogateServer {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Stop);
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl SurrogateClient {
+    /// Blocking gradient query.
+    pub fn predict(&self, x: &[f64]) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(x.len() == self.dim, "query dimension mismatch");
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Req(Request { x: x.to_vec(), resp: rtx }))
+            .map_err(|_| anyhow::anyhow!("surrogate server is down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("surrogate server dropped the request"))?
+    }
+}
+
+/// A [`SurrogateClient`] is a [`GradientSource`]: HMC chains can run their
+/// leapfrog trajectories directly against the shared service.
+impl GradientSource for SurrogateClient {
+    fn grad(&mut self, x: &[f64]) -> Vec<f64> {
+        match self.predict(x) {
+            Ok(g) => g,
+            // a failed query degrades to a zero gradient; the Metropolis
+            // test still guards correctness (acceptance uses true E).
+            Err(_) => {
+                self.true_evals = usize::MAX; // poison marker for diagnostics
+                vec![0.0; self.dim]
+            }
+        }
+    }
+    fn true_grad_evals(&self) -> usize {
+        0 // the client never queries the true target
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeEngine;
+    use crate::gp::{FitOptions, GradientGp};
+    use crate::gram::Metric;
+    use crate::kernels::SquaredExponential;
+    use crate::rng::Rng;
+    use std::sync::Arc as StdArc;
+
+    fn make_engine(d: usize, n: usize, seed: u64) -> (NativeEngine, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let gp = GradientGp::fit(
+            StdArc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        (NativeEngine::new(gp), x, g)
+    }
+
+    #[test]
+    fn serves_single_client_correctly() {
+        let (engine, x, g) = make_engine(5, 3, 1);
+        let expected = engine.gp().predict_gradient(&vec![0.1; 5]);
+        let server =
+            SurrogateServer::spawn(move || Ok(Box::new(engine) as _), BatchPolicy::default())
+                .unwrap();
+        let client = server.client();
+        let got = client.predict(&vec![0.1; 5]).unwrap();
+        assert_eq!(got, expected);
+        // interpolation through the service
+        let at_obs = client.predict(x.col(0)).unwrap();
+        for i in 0..5 {
+            assert!((at_obs[i] - g[(i, 0)]).abs() < 1e-7);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn concurrent_clients_get_consistent_answers() {
+        let (engine, _, _) = make_engine(6, 4, 2);
+        // reference answers from a second identical engine
+        let (engine_ref, _, _) = make_engine(6, 4, 2);
+        let server = SurrogateServer::spawn(
+            move || Ok(Box::new(engine) as _),
+            BatchPolicy { max_batch: 4, deadline: std::time::Duration::from_millis(2) },
+        )
+        .unwrap();
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let client = server.client();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let mut results = Vec::new();
+                for _ in 0..20 {
+                    let q = rng.gauss_vec(6);
+                    let r = client.predict(&q).unwrap();
+                    results.push((q, r));
+                }
+                results
+            }));
+        }
+        let mut metrics_checked = 0;
+        for h in handles {
+            for (q, r) in h.join().unwrap() {
+                let want = engine_ref.gp().predict_gradient(&q);
+                for i in 0..6 {
+                    assert!((r[i] - want[i]).abs() < 1e-12, "mismatch through service");
+                }
+                metrics_checked += 1;
+            }
+        }
+        assert_eq!(metrics_checked, 160);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 160);
+        assert!(m.batches <= 160);
+        assert!(m.max_batch >= 1);
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_inflight_queue() {
+        let (engine, _, _) = make_engine(4, 2, 3);
+        let server =
+            SurrogateServer::spawn(move || Ok(Box::new(engine) as _), BatchPolicy::default())
+                .unwrap();
+        let client = server.client();
+        let _ = client.predict(&vec![0.0; 4]).unwrap();
+        drop(server); // must not hang or panic
+        // further queries fail gracefully
+        assert!(client.predict(&vec![0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dimension() {
+        let (engine, _, _) = make_engine(4, 2, 4);
+        let server =
+            SurrogateServer::spawn(move || Ok(Box::new(engine) as _), BatchPolicy::default())
+                .unwrap();
+        let client = server.client();
+        assert!(client.predict(&vec![0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn factory_error_surfaces_at_spawn() {
+        let res = SurrogateServer::spawn(
+            || Err(anyhow::anyhow!("backend unavailable")),
+            BatchPolicy::default(),
+        );
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! Shared experiment plumbing: CSV emission and terminal plots.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV file with a header row and one row per record.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> anyhow::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| format!("{v:.10e}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Minimal ASCII line plot of one or more log-scale series (what the paper's
+/// matplotlib figures show; the CSVs carry the exact numbers).
+pub fn ascii_log_plot(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) {
+    println!("── {title}");
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .filter(|v| *v > 0.0 && v.is_finite())
+        .collect();
+    if all.is_empty() {
+        println!("   (no positive data)");
+        return;
+    }
+    let (lo, hi) = all.iter().fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+    let (llo, lhi) = (lo.log10(), hi.log10().max(lo.log10() + 1e-9));
+    let maxlen = series.iter().map(|(_, s)| s.len()).max().unwrap_or(1);
+    let marks = ['*', '+', 'o', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for (i, &v) in s.iter().enumerate() {
+            if !(v > 0.0) || !v.is_finite() {
+                continue;
+            }
+            let col = if maxlen <= 1 { 0 } else { i * (width - 1) / (maxlen - 1) };
+            let frac = (v.log10() - llo) / (lhi - llo);
+            let row = height - 1 - ((frac * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    for (r, line) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{hi:9.1e} ")
+        } else if r == height - 1 {
+            format!("{lo:9.1e} ")
+        } else {
+            " ".repeat(10)
+        };
+        println!("{label}│{}", line.iter().collect::<String>());
+    }
+    println!("{}└{}", " ".repeat(10), "─".repeat(width));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    println!("{}  {}", " ".repeat(10), legend.join("   "));
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("gdkron_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn ascii_plot_does_not_panic_on_edge_cases() {
+        ascii_log_plot("empty", &[("s", &[])], 20, 5);
+        ascii_log_plot("zeros", &[("s", &[0.0, 0.0])], 20, 5);
+        ascii_log_plot("one", &[("s", &[1.0])], 20, 5);
+        ascii_log_plot("two", &[("a", &[10.0, 1.0]), ("b", &[5.0, 0.5])], 30, 8);
+    }
+}

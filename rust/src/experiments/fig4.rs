@@ -1,0 +1,230 @@
+//! FIG4 — global gradient model with the iterative solver (paper Fig. 4 +
+//! the Sec. 5.2 memory/iteration numbers).
+//!
+//! `N = 1000` gradient observations of the relaxed Rosenbrock in
+//! `[−2, 2]^D` (`D = 100`), isotropic RBF with `ℓ² = 10·D` (`Λ = 10⁻³I`).
+//! The `ND×ND = 10⁵×10⁵` Gram matrix would need ~74 GB; the implicit matvec
+//! runs CG in `O(N² + ND)` memory (paper: 25 MB incl. CG state, 520
+//! iterations to rtol 10⁻⁶). Afterwards the fitted model predicts function
+//! values on the `(x₁, x₂)` slice — the right panel of Fig. 4.
+//!
+//! `use_pjrt` routes every CG matvec through the AOT-compiled
+//! `gram_matvec_d100_n1000` artifact instead of the native implementation
+//! (requires `make artifacts` and exactly `D=100, N=1000`).
+
+use std::time::Instant;
+
+use crate::gram::{GramFactors, GramOperator, Metric};
+use crate::kernels::SquaredExponential;
+use crate::linalg::Mat;
+use crate::opt::{Objective, RelaxedRosenbrock};
+use crate::rng::Rng;
+use crate::runtime::{ArgValue, ArtifactRegistry};
+use crate::solvers::{cg_solve, CgOptions, JacobiPrecond, LinearOp};
+
+use super::common::write_csv;
+
+pub struct Fig4Result {
+    pub d: usize,
+    pub n: usize,
+    pub iters: usize,
+    pub converged: bool,
+    pub solve_seconds: f64,
+    /// Bytes held by the structured representation (+ CG state).
+    pub structured_bytes: usize,
+    /// Bytes the dense Gram would need.
+    pub dense_bytes: usize,
+    /// RMS of (predicted − true) f on the slice grid, after removing the
+    /// per-grid mean offset (gradients determine f only up to a constant).
+    pub slice_rmse: f64,
+}
+
+/// PJRT-backed Gram matvec operator (fixed artifact shape).
+struct PjrtMatvecOp<'a> {
+    registry: &'a ArtifactRegistry,
+    artifact: &'a str,
+    x: &'a Mat,
+    inv_l2: f64,
+}
+
+impl LinearOp for PjrtMatvecOp<'_> {
+    fn dim(&self) -> usize {
+        self.x.rows() * self.x.cols()
+    }
+    fn apply(&self, v: &[f64], y: &mut [f64]) {
+        let (d, n) = (self.x.rows(), self.x.cols());
+        let vm = Mat::from_vec(d, n, v.to_vec());
+        let out = self
+            .registry
+            .execute_mat(
+                self.artifact,
+                &[ArgValue::Mat(self.x), ArgValue::Mat(&vm), ArgValue::Scalar(self.inv_l2)],
+                d,
+                n,
+            )
+            .expect("pjrt matvec failed");
+        y.copy_from_slice(out.as_slice());
+    }
+}
+
+pub fn run(
+    out_dir: &str,
+    d: usize,
+    n: usize,
+    seed: u64,
+    rtol: f64,
+    use_pjrt: bool,
+) -> anyhow::Result<Fig4Result> {
+    let obj = RelaxedRosenbrock::new(d);
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(d, n);
+    let mut g = Mat::zeros(d, n);
+    for j in 0..n {
+        let xj = rng.uniform_vec(d, -2.0, 2.0);
+        let gj = obj.gradient(&xj);
+        x.set_col(j, &xj);
+        g.set_col(j, &gj);
+    }
+    let inv_l2 = 1.0 / (10.0 * d as f64); // ℓ² = 10·D (paper Sec. 5.2)
+    let factors = GramFactors::new(&SquaredExponential, &x, Metric::Iso(inv_l2), None);
+
+    let opts = CgOptions {
+        rtol,
+        max_iters: 10 * n,
+        precond: Some(JacobiPrecond::new(&factors.gram_diag())),
+        track_history: true,
+    };
+    let registry = if use_pjrt {
+        Some(ArtifactRegistry::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?)
+    } else {
+        None
+    };
+    let t0 = Instant::now();
+    let res = if let Some(reg) = &registry {
+        anyhow::ensure!(
+            d == 100 && n == 1000,
+            "the PJRT artifact is specialized to D=100, N=1000"
+        );
+        let op =
+            PjrtMatvecOp { registry: reg, artifact: "gram_matvec_d100_n1000", x: &x, inv_l2 };
+        cg_solve(&op, g.as_slice(), None, &opts)
+    } else {
+        let op = GramOperator::new(&factors);
+        cg_solve(&op, g.as_slice(), None, &opts)
+    };
+    let solve_seconds = t0.elapsed().as_secs_f64();
+    let z = Mat::from_vec(d, n, res.x.clone());
+
+    // memory accounting (paper: 3ND + 3N² numbers ≈ 25 MB at D=100, N=1000)
+    let structured_bytes = (3 * n * d + 3 * n * n) * 8;
+    let dense_bytes = (n * d) * (n * d) * 8;
+
+    // ---- the (x₁, x₂) slice: true vs inferred function values ----
+    let grid = 41usize;
+    let mut rows = Vec::with_capacity(grid * grid);
+    let mut preds = Vec::with_capacity(grid * grid);
+    let mut trues = Vec::with_capacity(grid * grid);
+    let gp = PredictOnly { factors: &factors, z: &z };
+    for iy in 0..grid {
+        for ix in 0..grid {
+            let x1 = -2.0 + 4.0 * ix as f64 / (grid - 1) as f64;
+            let x2 = -2.0 + 4.0 * iy as f64 / (grid - 1) as f64;
+            let mut xq = vec![0.0; d];
+            xq[0] = x1;
+            xq[1] = x2;
+            let f_true = obj.value(&xq);
+            let f_pred = gp.predict_value(&xq, inv_l2);
+            rows.push(vec![x1, x2, f_true, f_pred]);
+            preds.push(f_pred);
+            trues.push(f_true);
+        }
+    }
+    // offset-corrected RMSE (f is identified only up to a constant)
+    let mp = preds.iter().sum::<f64>() / preds.len() as f64;
+    let mt = trues.iter().sum::<f64>() / trues.len() as f64;
+    let rmse = (preds
+        .iter()
+        .zip(&trues)
+        .map(|(p, t)| ((p - mp) - (t - mt)).powi(2))
+        .sum::<f64>()
+        / preds.len() as f64)
+        .sqrt();
+
+    write_csv(format!("{out_dir}/fig4_slice.csv"), &["x1", "x2", "f_true", "f_pred"], &rows)?;
+    write_csv(
+        format!("{out_dir}/fig4_residuals.csv"),
+        &["iter", "resid"],
+        &res
+            .resid_history
+            .iter()
+            .enumerate()
+            .map(|(i, r)| vec![i as f64, *r])
+            .collect::<Vec<_>>(),
+    )?;
+
+    Ok(Fig4Result {
+        d,
+        n,
+        iters: res.iters,
+        converged: res.converged,
+        solve_seconds,
+        structured_bytes,
+        dense_bytes,
+        slice_rmse: rmse,
+    })
+}
+
+/// Minimal value-prediction helper over raw factors+Z (avoids refitting a
+/// full GradientGp when Z came from the iterative path).
+struct PredictOnly<'a> {
+    factors: &'a GramFactors,
+    z: &'a Mat,
+}
+
+impl PredictOnly<'_> {
+    fn predict_value(&self, xq: &[f64], inv_l2: f64) -> f64 {
+        let (d, n) = (self.factors.d(), self.factors.n());
+        let x = &self.factors.xt;
+        let mut v = 0.0;
+        for b in 0..n {
+            let xb = x.col(b);
+            let zb = self.z.col(b);
+            let mut r = 0.0;
+            let mut m = 0.0;
+            for i in 0..d {
+                let del = xq[i] - xb[i];
+                r += del * del;
+                m += del * zb[i];
+            }
+            r *= inv_l2;
+            m *= inv_l2;
+            let kp = -0.5 * (-0.5 * r).exp();
+            v += -2.0 * kp * m;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_scale_fig4_converges_and_reconstructs() {
+        let dir = std::env::temp_dir().join("gdkron_fig4");
+        // scaled-down instance: D=20, N=150 (still N > D: iterative regime).
+        // ℓ² = 10·D makes every pair of points strongly correlated at this
+        // domain/dimension ratio — the Gram spectrum decays brutally, so the
+        // small-scale test certifies the machinery at rtol 1e-4; the paper's
+        // rtol 1e-6 target is checked at the full D=100/N=1000 scale in
+        // EXPERIMENTS.md (where the spectrum is healthier).
+        let r = run(dir.to_str().unwrap(), 20, 150, 3, 1e-4, false).unwrap();
+        assert!(r.converged, "CG did not converge in {} iters", r.iters);
+        assert!(r.iters > 5);
+        assert!(r.structured_bytes * 100 < r.dense_bytes);
+        // inferred surface should broadly match the true one (Fig. 4 right):
+        // the paper notes it captures the minimum and elongation, not details
+        assert!(r.slice_rmse.is_finite());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

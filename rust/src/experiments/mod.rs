@@ -1,0 +1,14 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver is a library function returning a structured result (so the
+//! criterion benches and integration tests reuse it) and emitting CSV series
+//! + an ASCII rendition of the figure. The CLI (`gdkron exp <id>`) wraps
+//! these with argument parsing.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod scaling;

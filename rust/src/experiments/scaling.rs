@@ -1,0 +1,149 @@
+//! TAB-C — the complexity claims of Sec. 1–2 as measurements.
+//!
+//! * exact solve wall-time vs `D` at fixed `N`: naive dense `O((ND)³)` vs
+//!   structured Woodbury `O(N²D + N⁶)` (linear in D — the headline),
+//! * solve wall-time vs `N` at fixed `D` (the `N⁶` core becoming dominant),
+//! * memory: dense `(ND)²` vs structured `O(N² + ND)` (Sec. 2.3), including
+//!   the paper's 74 GB-vs-25 MB Fig. 4 configuration.
+
+use std::time::Instant;
+
+use crate::gram::{woodbury_solve, GramFactors, Metric};
+use crate::kernels::SquaredExponential;
+use crate::linalg::{Lu, Mat};
+use crate::rng::Rng;
+
+use super::common::write_csv;
+
+pub struct ScalingRow {
+    pub d: usize,
+    pub n: usize,
+    pub woodbury_secs: f64,
+    /// `None` when the dense solve would be unreasonable (> `dense_cap`).
+    pub dense_secs: Option<f64>,
+}
+
+fn time_once(f: impl FnOnce()) -> f64 {
+    let t = Instant::now();
+    f();
+    t.elapsed().as_secs_f64()
+}
+
+/// Solve-time sweep. `dense_cap` bounds the `ND` size for which the dense
+/// baseline is attempted.
+pub fn run_time_sweep(
+    out_dir: &str,
+    dims: &[usize],
+    ns: &[usize],
+    dense_cap: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<ScalingRow>> {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &n in ns {
+        for &d in dims {
+            let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+            let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+            let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(1.0 / d as f64), None);
+            let woodbury_secs = time_once(|| {
+                let z = woodbury_solve(&f, &g).expect("woodbury");
+                std::hint::black_box(&z);
+            });
+            let dense_secs = if n * d <= dense_cap {
+                let dense = f.to_dense();
+                Some(time_once(|| {
+                    let z = Lu::factor(&dense).unwrap().solve_vec(g.as_slice());
+                    std::hint::black_box(&z);
+                }))
+            } else {
+                None
+            };
+            csv.push(vec![
+                d as f64,
+                n as f64,
+                woodbury_secs,
+                dense_secs.unwrap_or(f64::NAN),
+            ]);
+            rows.push(ScalingRow { d, n, woodbury_secs, dense_secs });
+        }
+    }
+    write_csv(
+        format!("{out_dir}/scaling_time.csv"),
+        &["d", "n", "woodbury_secs", "dense_secs"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+pub struct MemoryRow {
+    pub d: usize,
+    pub n: usize,
+    pub structured_bytes: usize,
+    pub dense_bytes: usize,
+}
+
+/// Memory table (Sec. 2.3 / Sec. 5.2).
+pub fn run_memory_table(out_dir: &str, cases: &[(usize, usize)]) -> anyhow::Result<Vec<MemoryRow>> {
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &(d, n) in cases {
+        let structured = (3 * n * n + 2 * n * d) * 8;
+        let dense = (n * d) * (n * d) * 8;
+        csv.push(vec![d as f64, n as f64, structured as f64, dense as f64]);
+        rows.push(MemoryRow { d, n, structured_bytes: structured, dense_bytes: dense });
+    }
+    write_csv(
+        format!("{out_dir}/scaling_memory.csv"),
+        &["d", "n", "structured_bytes", "dense_bytes"],
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn woodbury_scales_linearly_in_d() {
+        let dir = std::env::temp_dir().join("gdkron_scaling");
+        let rows =
+            run_time_sweep(dir.to_str().unwrap(), &[64, 128, 256, 512], &[6], 1600, 1).unwrap();
+        // time(D=512) should be far closer to 8×time(D=64) (linear) than to
+        // 512× (cubic). Generous bound: ratio < 64.
+        let t64 = rows.iter().find(|r| r.d == 64).unwrap().woodbury_secs;
+        let t512 = rows.iter().find(|r| r.d == 512).unwrap().woodbury_secs;
+        assert!(
+            t512 / t64 < 64.0,
+            "woodbury not linear-ish in D: {t64:.2e} → {t512:.2e}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dense_baseline_blows_up_faster() {
+        let dir = std::env::temp_dir().join("gdkron_scaling2");
+        let rows = run_time_sweep(dir.to_str().unwrap(), &[32, 128], &[6], 1600, 2).unwrap();
+        let w = |d: usize| rows.iter().find(|r| r.d == d).unwrap();
+        let dense_ratio =
+            w(128).dense_secs.unwrap() / w(32).dense_secs.unwrap().max(1e-9);
+        let wood_ratio = w(128).woodbury_secs / w(32).woodbury_secs.max(1e-9);
+        assert!(
+            dense_ratio > wood_ratio,
+            "dense {dense_ratio:.1}x should grow faster than woodbury {wood_ratio:.1}x"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn paper_memory_numbers() {
+        // Sec. 5.2: (1000·100)² doubles > 74 GB dense; factors ~ MBs
+        let dir = std::env::temp_dir().join("gdkron_scaling3");
+        let rows = run_memory_table(dir.to_str().unwrap(), &[(100, 1000)]).unwrap();
+        let r = &rows[0];
+        assert!(r.dense_bytes as f64 > 74e9, "{}", r.dense_bytes);
+        assert!(r.structured_bytes < 30_000_000, "{}", r.structured_bytes);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

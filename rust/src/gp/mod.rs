@@ -1,0 +1,386 @@
+//! Gaussian-process posterior over gradients, Hessians and function values.
+//!
+//! [`GradientGp`] conditions a GP `f ∼ GP(μ, k)` on `N` gradient
+//! observations `G` at locations `X` (both `D×N`) and exposes the posterior
+//! means the paper's applications need:
+//!
+//! * `∇f(x⋆)`  — [`GradientGp::predict_gradient`] (App. D.1/D.2),
+//! * `∇∇ᵀf(x⋆)` — [`GradientGp::predict_hessian`] (Eq. 12),
+//! * `f(x⋆)` (+ variance) — [`GradientGp::predict_value`],
+//! * the optimum `x(∇f = 0)` — [`infer_optimum`] (Eq. 13, flipped inference).
+//!
+//! Fitting means solving `(∇K∇′) vec(Z) = vec(G̃)` once; the engine is chosen
+//! by [`FitMethod`]: exact Woodbury (`O(N²D + N⁶)`, Sec. 2.3), the poly(2)
+//! analytic path (`O(N²D + N³)`, Sec. 4.2), or matrix-free CG on the implicit
+//! matvec (`O(N²D)` per iteration, any `N`).
+
+mod optimum;
+mod predict;
+
+pub use optimum::{infer_optimum, infer_optimum_with};
+pub use predict::HessianParts;
+
+use std::sync::Arc;
+
+use crate::gram::{poly2_solve, GramFactors, GramOperator, Metric, WoodburySolver};
+use crate::kernels::ScalarKernel;
+use crate::linalg::Mat;
+use crate::solvers::{cg_solve, CgOptions, JacobiPrecond};
+
+/// How to solve the gradient Gram system.
+#[derive(Clone, Debug)]
+pub enum FitMethod {
+    /// Pick automatically: poly(2) analytic when applicable, exact Woodbury
+    /// while `N²×N²` stays small, iterative CG otherwise.
+    Auto,
+    /// Exact Woodbury solve (App. C.1).
+    Exact,
+    /// Analytic poly(2) path (Sec. 4.2); errors for other kernels.
+    Poly2,
+    /// Matrix-free preconditioned CG on the `O(N²+ND)` implicit matvec.
+    Iterative(CgOptions),
+}
+
+impl Default for FitMethod {
+    fn default() -> Self {
+        FitMethod::Auto
+    }
+}
+
+/// Options for [`GradientGp::fit`].
+#[derive(Clone, Debug, Default)]
+pub struct FitOptions {
+    /// Dot-product center `c` (ignored by stationary kernels).
+    pub center: Option<Vec<f64>>,
+    /// Constant prior gradient mean `g_c` (Sec. 4.2); subtracted from `G`
+    /// before solving and added back to gradient predictions. The implied
+    /// prior mean on `f` is the linear function `g_cᵀx`.
+    pub prior_grad_mean: Option<Vec<f64>>,
+    /// iid observation noise `σ²` on every gradient entry (isotropic `Λ` only).
+    pub noise: f64,
+    /// Solver selection.
+    pub method: FitMethod,
+}
+
+/// How the fit was actually performed (diagnostics).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FitReport {
+    Exact,
+    Poly2 { asymmetry: f64 },
+    Iterative { iters: usize, converged: bool, final_rel_residual: f64 },
+}
+
+/// A GP conditioned on gradient observations.
+pub struct GradientGp {
+    kernel: Arc<dyn ScalarKernel>,
+    factors: GramFactors,
+    /// Raw observation locations (`D×N`).
+    x: Mat,
+    /// Representer weights: solution of `(∇K∇′)vec(Z) = vec(G̃)`.
+    z: Mat,
+    /// Prior gradient mean (if any).
+    prior_grad_mean: Option<Vec<f64>>,
+    /// Dot-product center (zeros if none).
+    center: Vec<f64>,
+    /// Cached exact solver for extra right-hand sides (variance queries).
+    solver: Option<WoodburySolver>,
+    /// Fit diagnostics.
+    report: FitReport,
+}
+
+/// Above this `N`, [`FitMethod::Auto`] switches from the exact `O(N⁶)`
+/// Woodbury core to the iterative engine. Set empirically from the
+/// `ablations` bench (D=64): exact wins through N≈8 (≈0.15 ms), roughly
+/// ties at N≈12, and loses catastrophically beyond (N=32: 3.5 s vs 3 ms) —
+/// the `N²×N²` LU dominates everything.
+pub const AUTO_EXACT_MAX_N: usize = 16;
+
+impl GradientGp {
+    /// Condition on gradients `G` at locations `X` (both `D×N`).
+    pub fn fit(
+        kernel: Arc<dyn ScalarKernel>,
+        metric: Metric,
+        x: &Mat,
+        g: &Mat,
+        opts: &FitOptions,
+    ) -> anyhow::Result<Self> {
+        let (d, n) = (x.rows(), x.cols());
+        anyhow::ensure!(n > 0, "need at least one observation");
+        anyhow::ensure!((g.rows(), g.cols()) == (d, n), "G must be D×N like X");
+
+        let factors = GramFactors::with_noise(
+            kernel.as_ref(),
+            x,
+            metric,
+            opts.center.as_deref(),
+            opts.noise,
+        );
+        // centered RHS
+        let gt = match &opts.prior_grad_mean {
+            Some(gc) => {
+                anyhow::ensure!(gc.len() == d, "prior_grad_mean length != D");
+                let mut m = g.clone();
+                for j in 0..n {
+                    let col = m.col_mut(j);
+                    for i in 0..d {
+                        col[i] -= gc[i];
+                    }
+                }
+                m
+            }
+            None => g.clone(),
+        };
+
+        let is_poly2 = kernel.name() == "poly2";
+        let method = match &opts.method {
+            FitMethod::Auto => {
+                if is_poly2 {
+                    FitMethod::Poly2
+                } else if n <= AUTO_EXACT_MAX_N {
+                    FitMethod::Exact
+                } else {
+                    FitMethod::Iterative(CgOptions::default())
+                }
+            }
+            m => m.clone(),
+        };
+
+        let (z, solver, report) = match method {
+            FitMethod::Poly2 => {
+                let sol = poly2_solve(&factors, &gt)?;
+                (sol.z, None, FitReport::Poly2 { asymmetry: sol.asymmetry })
+            }
+            FitMethod::Exact => {
+                let solver = WoodburySolver::new(&factors)?;
+                let z = solver.solve(&factors, &gt);
+                (z, Some(solver), FitReport::Exact)
+            }
+            FitMethod::Iterative(cg_opts) => {
+                let op = GramOperator::new(&factors);
+                let mut cg_opts = cg_opts;
+                if cg_opts.precond.is_none() {
+                    cg_opts.precond = Some(JacobiPrecond::new(&factors.gram_diag()));
+                }
+                let res = cg_solve(&op, gt.as_slice(), None, &cg_opts);
+                let bnorm = gt.fro_norm().max(f64::MIN_POSITIVE);
+                let rel = res.resid_history.last().copied().unwrap_or(f64::NAN) / bnorm;
+                let z = Mat::from_vec(d, n, res.x);
+                (
+                    z,
+                    None,
+                    FitReport::Iterative {
+                        iters: res.iters,
+                        converged: res.converged,
+                        final_rel_residual: rel,
+                    },
+                )
+            }
+            FitMethod::Auto => unreachable!(),
+        };
+
+        let center = opts.center.clone().unwrap_or_else(|| vec![0.0; d]);
+        Ok(GradientGp {
+            kernel,
+            factors,
+            x: x.clone(),
+            z,
+            prior_grad_mean: opts.prior_grad_mean.clone(),
+            center,
+            solver,
+            report,
+        })
+    }
+
+    /// Input dimension `D`.
+    pub fn d(&self) -> usize {
+        self.factors.d()
+    }
+
+    /// Number of observations `N`.
+    pub fn n(&self) -> usize {
+        self.factors.n()
+    }
+
+    /// The representer weights `Z`.
+    pub fn z(&self) -> &Mat {
+        &self.z
+    }
+
+    /// The Gram factors.
+    pub fn factors(&self) -> &GramFactors {
+        &self.factors
+    }
+
+    /// Observation locations.
+    pub fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    /// The kernel.
+    pub fn kernel(&self) -> &dyn ScalarKernel {
+        self.kernel.as_ref()
+    }
+
+    /// Fit diagnostics.
+    pub fn report(&self) -> &FitReport {
+        &self.report
+    }
+
+    pub(crate) fn prior_grad_mean_opt(&self) -> Option<&[f64]> {
+        self.prior_grad_mean.as_deref()
+    }
+
+    pub(crate) fn center_vec(&self) -> &[f64] {
+        &self.center
+    }
+
+    /// Solve `(∇K∇′)vec(W) = vec(RHS)` for an extra right-hand side, reusing
+    /// the exact factorization when available and falling back to CG.
+    pub fn solve_rhs(&self, rhs: &Mat) -> anyhow::Result<Mat> {
+        if let Some(solver) = &self.solver {
+            return Ok(solver.solve(&self.factors, rhs));
+        }
+        let op = GramOperator::new(&self.factors);
+        let res = cg_solve(
+            &op,
+            rhs.as_slice(),
+            None,
+            &CgOptions {
+                rtol: 1e-10,
+                precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
+                track_history: false,
+                ..Default::default()
+            },
+        );
+        anyhow::ensure!(res.converged, "CG did not converge on extra RHS");
+        Ok(Mat::from_vec(rhs.rows(), rhs.cols(), res.x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Poly2Kernel, SquaredExponential};
+    use crate::rng::Rng;
+
+    fn sample(d: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (Mat::from_fn(d, n, |_, _| rng.gauss()), Mat::from_fn(d, n, |_, _| rng.gauss()))
+    }
+
+    #[test]
+    fn exact_fit_reproduces_observations() {
+        // interpolation: predicted gradient at an observed point = observation
+        let (x, g) = sample(6, 4, 1);
+        let gp = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(*gp.report(), FitReport::Exact);
+        for b in 0..4 {
+            let pred = gp.predict_gradient(x.col(b));
+            for i in 0..6 {
+                assert!(
+                    (pred[i] - g[(i, b)]).abs() < 1e-7,
+                    "obs {b} dim {i}: {} vs {}",
+                    pred[i],
+                    g[(i, b)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn iterative_fit_matches_exact_fit() {
+        let (x, g) = sample(8, 5, 2);
+        let kern = Arc::new(SquaredExponential);
+        let exact =
+            GradientGp::fit(kern.clone(), Metric::Iso(0.4), &x, &g, &FitOptions::default())
+                .unwrap();
+        let iter = GradientGp::fit(
+            kern,
+            Metric::Iso(0.4),
+            &x,
+            &g,
+            &FitOptions {
+                method: FitMethod::Iterative(CgOptions {
+                    rtol: 1e-12,
+                    max_iters: 10_000,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!((&exact.z - &iter.z).max_abs() < 1e-6 * (1.0 + exact.z.max_abs()));
+    }
+
+    #[test]
+    fn auto_selects_poly2_for_poly2_kernel() {
+        // quadratic data so the analytic path applies
+        let d = 5;
+        let mut rng = Rng::new(3);
+        let a = {
+            let b = Mat::from_fn(d, d, |_, _| rng.gauss());
+            let mut a = b.t_matmul(&b);
+            for i in 0..d {
+                a[(i, i)] += d as f64;
+            }
+            a
+        };
+        let x = Mat::from_fn(d, 3, |_, _| rng.gauss());
+        let g = a.matmul(&x); // gradients of ½xᵀAx (x* = 0)
+        let gp = GradientGp::fit(
+            Arc::new(Poly2Kernel),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        match gp.report() {
+            FitReport::Poly2 { asymmetry } => assert!(*asymmetry < 1e-9),
+            other => panic!("expected poly2 fit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prior_gradient_mean_is_respected() {
+        let (x, _) = sample(4, 3, 4);
+        // constant gradient field = prior mean ⇒ Z = 0 and predictions = g_c
+        let gc = vec![1.0, -2.0, 0.5, 3.0];
+        let g = Mat::from_fn(4, 3, |i, _| gc[i]);
+        let gp = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.7),
+            &x,
+            &g,
+            &FitOptions { prior_grad_mean: Some(gc.clone()), ..Default::default() },
+        )
+        .unwrap();
+        assert!(gp.z.max_abs() < 1e-10);
+        let far = vec![10.0, -10.0, 10.0, -10.0];
+        let pred = gp.predict_gradient(&far);
+        for i in 0..4 {
+            assert!((pred[i] - gc[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let (x, _) = sample(4, 3, 5);
+        let g = Mat::zeros(4, 2);
+        assert!(GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &FitOptions::default()
+        )
+        .is_err());
+    }
+}

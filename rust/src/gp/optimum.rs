@@ -1,0 +1,211 @@
+//! Inferring the optimum by *flipped* inference (Sec. 4.1.2 / App. E.1).
+//!
+//! Gradient inference learns `x ↦ ∇f(x)`; flipping input and output learns
+//! the inverse map `g ↦ x(g)` with the same structured machinery — the
+//! kernel now measures similarity *between gradients* and the "observations"
+//! are the evaluation points. Querying the flipped posterior at `g⋆ = 0`
+//! yields the model's belief about the location of the optimum (Eq. 13):
+//!
+//! ```text
+//! x̄⋆ = x_t + [∇K∇′(0, G)] [∇K∇′(G, G)]⁻¹ vec(X − x_t)
+//! ```
+//!
+//! with the prior mean of the flipped map set to the current iterate `x_t`.
+
+use std::sync::Arc;
+
+use crate::gram::Metric;
+use crate::kernels::ScalarKernel;
+use crate::linalg::Mat;
+
+use super::{FitOptions, GradientGp};
+
+/// Posterior mean of the minimizer location given gradient observations `G`
+/// at points `X`, anchored at the current iterate `x_t`.
+///
+/// This is [`infer_optimum_with`] with default fit options (e.g. the exact
+/// Woodbury engine, no noise) and query gradient `g⋆ = 0`.
+pub fn infer_optimum(
+    kernel: Arc<dyn ScalarKernel>,
+    metric: Metric,
+    x: &Mat,
+    g: &Mat,
+    x_t: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    infer_optimum_with(kernel, metric, x, g, x_t, &FitOptions::default(), None)
+}
+
+/// Full-control variant: custom [`FitOptions`] for the flipped GP (its
+/// `center` lives in *gradient* space) and an arbitrary query gradient
+/// (`None` = the optimum query `g⋆ = 0`).
+pub fn infer_optimum_with(
+    kernel: Arc<dyn ScalarKernel>,
+    metric: Metric,
+    x: &Mat,
+    g: &Mat,
+    x_t: &[f64],
+    opts: &FitOptions,
+    query_gradient: Option<&[f64]>,
+) -> anyhow::Result<Vec<f64>> {
+    let (d, n) = (x.rows(), x.cols());
+    anyhow::ensure!(g.rows() == d && g.cols() == n, "G must be D×N like X");
+    anyhow::ensure!(x_t.len() == d, "x_t dimension mismatch");
+    // flipped observations: Y = X − x_t (prior mean of the inverse map = x_t)
+    let mut y = x.clone();
+    for j in 0..n {
+        let col = y.col_mut(j);
+        for i in 0..d {
+            col[i] -= x_t[i];
+        }
+    }
+    // inputs are the gradients
+    let flipped = GradientGp::fit(kernel, metric, g, &y, opts)?;
+    let zero = vec![0.0; d];
+    let q = query_gradient.unwrap_or(&zero);
+    let delta = flipped.predict_gradient(q);
+    Ok((0..d).map(|i| x_t[i] + delta[i]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Poly2Kernel, SquaredExponential};
+    use crate::linalg::random_orthogonal;
+    use crate::rng::Rng;
+
+    /// Quadratic problem: exact inverse map is x(g) = x* + A⁻¹g — linear, so
+    /// the poly2 flipped GP (whose posterior mean is linear in g) should
+    /// recover the optimum essentially exactly once N is large enough.
+    #[test]
+    fn poly2_flip_recovers_quadratic_optimum() {
+        let d = 6;
+        let mut rng = Rng::new(1);
+        let q = random_orthogonal(d, &mut rng);
+        let spec: Vec<f64> = (0..d).map(|i| 1.0 + i as f64).collect();
+        let a = q.matmul(&Mat::diag(&spec)).matmul_t(&q);
+        let xstar: Vec<f64> = rng.gauss_vec(d);
+        // D data points + a separate anchor: the anchor must NOT be part of
+        // the data since its centered gradient would be the zero column
+        // (H = G̃ᵀΛG̃ singular) — same convention as App. E.2.
+        let n = d;
+        let x = Mat::from_fn(d, n, |_, _| 2.0 * rng.gauss());
+        let mut diff = x.clone();
+        for j in 0..n {
+            for i in 0..d {
+                diff[(i, j)] -= xstar[i];
+            }
+        }
+        let g = a.matmul(&diff);
+        let x_t: Vec<f64> = rng.gauss_vec(d);
+        let g_t: Vec<f64> = {
+            let dt: Vec<f64> = (0..d).map(|i| x_t[i] - xstar[i]).collect();
+            a.matvec(&dt)
+        };
+        // E.2 setup: dot-product kernel over gradients, centered at the
+        // current gradient, prior mean x_t.
+        let opts = FitOptions { center: Some(g_t), ..Default::default() };
+        let xhat = infer_optimum_with(
+            Arc::new(Poly2Kernel),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &x_t,
+            &opts,
+            None,
+        )
+        .unwrap();
+        for i in 0..d {
+            assert!(
+                (xhat[i] - xstar[i]).abs() < 1e-6,
+                "dim {i}: {} vs {}",
+                xhat[i],
+                xstar[i]
+            );
+        }
+    }
+
+    #[test]
+    fn flipped_gp_interpolates_known_points() {
+        // querying at an *observed gradient* must return the observed point
+        let d = 5;
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(d, 3, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, 3, |_, _| rng.gauss());
+        let x_t = vec![0.0; d];
+        let xhat = infer_optimum_with(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &x_t,
+            &FitOptions::default(),
+            Some(g.col(1)),
+        )
+        .unwrap();
+        for i in 0..d {
+            assert!((xhat[i] - x[(i, 1)]).abs() < 1e-7, "dim {i}");
+        }
+    }
+
+    #[test]
+    fn far_query_reverts_to_prior_anchor() {
+        // for a stationary kernel, querying far from all observed gradients
+        // must return ≈ x_t (the prior mean of the flipped map)
+        let d = 4;
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(d, 3, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, 3, |_, _| rng.gauss());
+        let x_t = vec![1.0, -2.0, 0.5, 3.0];
+        let far_g = vec![100.0, 100.0, -100.0, 100.0];
+        let xhat = infer_optimum_with(
+            Arc::new(SquaredExponential),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &x_t,
+            &FitOptions::default(),
+            Some(&far_g),
+        )
+        .unwrap();
+        for i in 0..d {
+            assert!((xhat[i] - x_t[i]).abs() < 1e-6, "dim {i}");
+        }
+    }
+
+    #[test]
+    fn se_flip_moves_toward_quadratic_optimum() {
+        // with an RBF kernel the inverse map is only locally modeled, but the
+        // predicted optimum should still be much closer than the iterate.
+        let d = 5;
+        let mut rng = Rng::new(4);
+        let spec: Vec<f64> = (0..d).map(|i| 1.0 + 0.5 * i as f64).collect();
+        let a = Mat::diag(&spec);
+        let xstar: Vec<f64> = rng.gauss_vec(d);
+        let n = 4;
+        let x = Mat::from_fn(d, n, |i, _| xstar[i] + 0.5 * rng.gauss());
+        let mut diff = x.clone();
+        for j in 0..n {
+            for i in 0..d {
+                diff[(i, j)] -= xstar[i];
+            }
+        }
+        let g = a.matmul(&diff);
+        let x_t = x.col(n - 1).to_vec();
+        let xhat = infer_optimum(
+            Arc::new(SquaredExponential),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &x_t,
+        )
+        .unwrap();
+        let dist = |p: &[f64]| -> f64 {
+            p.iter().zip(&xstar).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+        };
+        assert!(
+            dist(&xhat) < 0.8 * dist(&x_t),
+            "prediction {:?} not closer to optimum than iterate",
+            xhat
+        );
+    }
+}

@@ -1,0 +1,715 @@
+//! Posterior-mean predictions from the representer weights `Z` (App. D).
+//!
+//! All formulas below are re-derived from the cross-covariance blocks (the
+//! paper's App. D has a couple of Λ/δ_ab typos — see DESIGN.md §5) and
+//! validated in the tests against (a) dense cross-covariance × dense solve
+//! and (b) finite differences of the predicted fields:
+//!
+//! dot product (`x̃ = x − c`, `m_b = x̃⋆ᵀΛz_b`):
+//! ```text
+//! ḡ(x⋆) = ΛZk′⋆ + ΛX̃(k″⋆ ⊙ ZᵀΛx̃⋆)                          f̄(x⋆) = Σ_b k′⋆b m_b
+//! H̄(x⋆) = ΛX̃ diag(k‴⋆⊙m) X̃ᵀΛ + ΛZ diag(k″⋆) X̃ᵀΛ + ΛX̃ diag(k″⋆) ZᵀΛ
+//! ```
+//! stationary (`δ_b = x⋆ − x_b`, `X̃⋆ = [δ_1 … δ_N]`, `m_b = δ_bᵀΛz_b`):
+//! ```text
+//! ḡ(x⋆) = −2ΛZk′⋆ − 4ΛX̃⋆(k″⋆ ⊙ m)                          f̄(x⋆) = −2 Σ_b k′⋆b m_b
+//! H̄(x⋆) = −8ΛX̃⋆ diag(k‴⋆⊙m) X̃⋆ᵀΛ − 4[ΛZ diag(k″⋆) X̃⋆ᵀΛ + ΛX̃⋆ diag(k″⋆) ZᵀΛ]
+//!          − 4Λ·Σ_b k″⋆b m_b
+//! ```
+//! (the last term is the paper's `Λ·Tr(M̆)`; it exists only in the
+//! stationary case, where `∂²r/∂x∂x = 2Λ ≠ 0`).
+
+use crate::kernels::KernelClass;
+use crate::linalg::Mat;
+
+use super::GradientGp;
+
+/// Low-rank structure of the posterior Hessian mean (Eq. 12):
+/// `H̄ = α·Λ + W S Wᵀ` with `W = [ΛX̃⋆, ΛZ] ∈ R^{D×2N}`.
+///
+/// With a diagonal `Λ` this is diagonal + rank-2N — invertible in
+/// `O(N²D + N³)` via Woodbury, which is what makes the GP-H optimizer's step
+/// computation as cheap as a classical quasi-Newton update (Sec. 4.1.1).
+pub struct HessianParts {
+    /// Coefficient of `Λ` (0 for dot-product kernels).
+    pub alpha: f64,
+    /// `D×2N` factor `[ΛX̃⋆, ΛZ]`.
+    pub w: Mat,
+    /// `2N×2N` symmetric middle block `[[M, M̂],[M̂, 0]]`.
+    pub s: Mat,
+}
+
+impl HessianParts {
+    /// Materialize the dense `D×D` Hessian mean.
+    pub fn to_dense(&self, gp: &GradientGp) -> Mat {
+        let d = gp.d();
+        let mut h = gp.factors().metric.to_dense(d).scale(self.alpha);
+        let ws = self.w.matmul(&self.s);
+        let wswt = ws.matmul_t(&self.w);
+        h += &wswt;
+        h.symmetrized()
+    }
+
+    /// Solve `H̄ x = b` in `O(N²D + N³)` via Woodbury on the
+    /// diagonal + rank-2N structure — the step that makes a GP-H iteration
+    /// as cheap as a classical quasi-Newton update (Sec. 4.1.1), instead of
+    /// the `O(D³)` dense factorization.
+    ///
+    /// `H̄ = αΛ + W S Wᵀ` ⇒
+    /// `H̄⁻¹b = (αΛ)⁻¹b − (αΛ)⁻¹W (S⁻¹ + Wᵀ(αΛ)⁻¹W)⁻¹ Wᵀ(αΛ)⁻¹b`.
+    ///
+    /// Requires `α ≠ 0` (stationary kernels; the dot-product case has
+    /// `α = 0` and a genuinely rank-deficient mean) and an invertible core —
+    /// errors otherwise so callers can fall back to a dense solve.
+    pub fn solve(&self, gp: &GradientGp, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+        use crate::linalg::Lu;
+        let d = gp.d();
+        anyhow::ensure!(b.len() == d, "rhs dimension mismatch");
+        anyhow::ensure!(self.alpha.abs() > 1e-300, "α = 0: no Woodbury base (dot-product kernel)");
+        let metric = &gp.factors().metric;
+        let k = self.w.cols();
+        // B⁻¹ = (αΛ)⁻¹ applications
+        let inv_base_vec = |v: &[f64]| -> Vec<f64> {
+            let m = Mat::from_vec(d, 1, v.to_vec());
+            metric.apply_inv_mat(&m).scale(1.0 / self.alpha).into_vec()
+        };
+        let binv_b = inv_base_vec(b);
+        let binv_w = metric.apply_inv_mat(&self.w).scale(1.0 / self.alpha);
+        // core = S⁻¹ + Wᵀ B⁻¹ W  (2N×2N)
+        let s_lu = Lu::factor(&self.s)
+            .map_err(|e| anyhow::anyhow!("Hessian middle block singular: {e}"))?;
+        let s_inv = s_lu.inverse();
+        let mut core = self.w.t_matmul(&binv_w);
+        core += &s_inv;
+        let core_lu = Lu::factor(&core)
+            .map_err(|e| anyhow::anyhow!("Hessian Woodbury core singular: {e}"))?;
+        // x = B⁻¹b − B⁻¹W core⁻¹ Wᵀ B⁻¹ b
+        let wtb = self.w.t_matvec(&binv_b);
+        let y = core_lu.solve_vec(&wtb);
+        let corr = binv_w.matvec(&y);
+        let mut x = binv_b;
+        for i in 0..d {
+            x[i] -= corr[i];
+        }
+        anyhow::ensure!(x.iter().all(|v| v.is_finite()), "non-finite Hessian solve");
+        let _ = k;
+        Ok(x)
+    }
+}
+
+/// Per-query scratch: the scalar-derivative vectors at the query point.
+struct QueryPanels {
+    /// `x̃⋆` (dot) or the `D×N` matrix of `δ_b = x⋆ − x_b` (stationary: `xt_q`
+    /// holds the query-centered differences).
+    xtq: Mat,
+    /// `Λ · xtq`.
+    lam_xtq: Mat,
+    /// `k′(r⋆b)`, `k″(r⋆b)`, `k‴(r⋆b)` (raw, no class factors).
+    kp: Vec<f64>,
+    kpp: Vec<f64>,
+    kppp: Vec<f64>,
+    /// `m_b` (see module docs).
+    m: Vec<f64>,
+}
+
+impl GradientGp {
+    fn query_panels(&self, xq: &[f64]) -> QueryPanels {
+        let (d, n) = (self.d(), self.n());
+        assert_eq!(xq.len(), d, "query dimension mismatch");
+        let f = self.factors();
+        let kern = self.kernel();
+        match f.class {
+            KernelClass::DotProduct => {
+                let c = self.center_vec();
+                let xtq_v: Vec<f64> = (0..d).map(|i| xq[i] - c[i]).collect();
+                let xtq = Mat::from_vec(d, 1, xtq_v);
+                let lam_xtq = f.metric.apply_mat(&xtq);
+                // r⋆b = x̃⋆ᵀΛx̃_b = lam_xtqᵀ · x̃_b
+                let mut kp = vec![0.0; n];
+                let mut kpp = vec![0.0; n];
+                let mut kppp = vec![0.0; n];
+                let mut m = vec![0.0; n];
+                for b in 0..n {
+                    let xb = f.xt.col(b);
+                    let zb = self.z().col(b);
+                    let mut r = 0.0;
+                    let mut mb = 0.0;
+                    let lq = lam_xtq.col(0);
+                    for i in 0..d {
+                        r += lq[i] * xb[i];
+                        mb += lq[i] * zb[i];
+                    }
+                    kp[b] = kern.dk(r);
+                    kpp[b] = kern.d2k(r);
+                    kppp[b] = kern.d3k(r);
+                    m[b] = mb;
+                }
+                QueryPanels { xtq, lam_xtq, kp, kpp, kppp, m }
+            }
+            KernelClass::Stationary => {
+                let mut xtq = Mat::zeros(d, n);
+                for b in 0..n {
+                    let xb = f.xt.col(b);
+                    let col = xtq.col_mut(b);
+                    for i in 0..d {
+                        col[i] = xq[i] - xb[i];
+                    }
+                }
+                let lam_xtq = f.metric.apply_mat(&xtq);
+                let mut kp = vec![0.0; n];
+                let mut kpp = vec![0.0; n];
+                let mut kppp = vec![0.0; n];
+                let mut m = vec![0.0; n];
+                for b in 0..n {
+                    let db = xtq.col(b);
+                    let ldb = lam_xtq.col(b);
+                    let zb = self.z().col(b);
+                    let mut r = 0.0;
+                    let mut mb = 0.0;
+                    for i in 0..d {
+                        r += db[i] * ldb[i];
+                        mb += ldb[i] * zb[i];
+                    }
+                    let r = r.max(0.0);
+                    kp[b] = kern.dk(r);
+                    // Matérn guard: at r = 0 higher derivatives may diverge
+                    // but they always multiply δ_b = 0 terms; zero them.
+                    let g2 = kern.d2k(r);
+                    let g3 = kern.d3k(r);
+                    kpp[b] = if g2.is_finite() { g2 } else { 0.0 };
+                    kppp[b] = if g3.is_finite() { g3 } else { 0.0 };
+                    m[b] = mb;
+                }
+                QueryPanels { xtq, lam_xtq, kp, kpp, kppp, m }
+            }
+        }
+    }
+
+    /// Posterior mean of `∇f(x⋆)`.
+    pub fn predict_gradient(&self, xq: &[f64]) -> Vec<f64> {
+        let (d, n) = (self.d(), self.n());
+        let f = self.factors();
+        let q = self.query_panels(xq);
+        let mut out = vec![0.0; d];
+        match f.class {
+            KernelClass::DotProduct => {
+                // Λ(Z k′⋆ + X̃ (k″⋆ ⊙ m)) — accumulate raw, apply Λ once below
+                for b in 0..n {
+                    let zb = self.z().col(b);
+                    let xb = f.xt.col(b);
+                    let w1 = q.kp[b];
+                    let w2 = q.kpp[b] * q.m[b];
+                    for i in 0..d {
+                        out[i] += w1 * zb[i] + w2 * xb[i];
+                    }
+                }
+            }
+            KernelClass::Stationary => {
+                for b in 0..n {
+                    let zb = self.z().col(b);
+                    let db = q.xtq.col(b);
+                    let w1 = -2.0 * q.kp[b];
+                    let w2 = -4.0 * q.kpp[b] * q.m[b];
+                    for i in 0..d {
+                        out[i] += w1 * zb[i] + w2 * db[i];
+                    }
+                }
+            }
+        }
+        // apply Λ to the accumulated (Z k′ + X̃(k″⊙m)) combination
+        let out_mat = Mat::from_vec(d, 1, out);
+        let mut out = f.metric.apply_mat(&out_mat).into_vec();
+        if let Some(gc) = self.prior_grad_mean_opt() {
+            for i in 0..d {
+                out[i] += gc[i];
+            }
+        }
+        out
+    }
+
+    /// Batched gradient prediction: one column of `out` per column of `xqs`.
+    pub fn predict_gradients(&self, xqs: &Mat) -> Mat {
+        assert_eq!(xqs.rows(), self.d());
+        let mut out = Mat::zeros(self.d(), xqs.cols());
+        for j in 0..xqs.cols() {
+            out.set_col(j, &self.predict_gradient(xqs.col(j)));
+        }
+        out
+    }
+
+    /// Posterior mean of `f(x⋆)`.
+    ///
+    /// Gradients determine `f` only up to a constant; the reported value uses
+    /// the zero-mean prior convention (plus `g_cᵀx⋆` when a prior gradient
+    /// mean is set), so *differences* of predicted values are meaningful.
+    pub fn predict_value(&self, xq: &[f64]) -> f64 {
+        let n = self.n();
+        let f = self.factors();
+        let q = self.query_panels(xq);
+        let scale = match f.class {
+            KernelClass::DotProduct => 1.0,
+            KernelClass::Stationary => -2.0,
+        };
+        let mut v = 0.0;
+        for b in 0..n {
+            v += scale * q.kp[b] * q.m[b];
+        }
+        if let Some(gc) = self.prior_grad_mean_opt() {
+            for i in 0..self.d() {
+                v += gc[i] * xq[i];
+            }
+        }
+        v
+    }
+
+    /// Posterior variance of `f(x⋆)`: `k(r⋆⋆) − cᵀ (∇K∇′)⁻¹ c` with `c` the
+    /// cross-covariance between `f(x⋆)` and the gradient observations.
+    /// Costs one extra Gram solve (amortized via the cached factorization).
+    pub fn predict_value_var(&self, xq: &[f64]) -> anyhow::Result<f64> {
+        let (d, n) = (self.d(), self.n());
+        let f = self.factors();
+        let q = self.query_panels(xq);
+        // cross-covariance D×N matrix: col b = cov(f(x⋆), ∇f(x_b))
+        let mut cross = Mat::zeros(d, n);
+        let scale = match f.class {
+            KernelClass::DotProduct => 1.0,
+            KernelClass::Stationary => -2.0,
+        };
+        for b in 0..n {
+            let lq = match f.class {
+                KernelClass::DotProduct => q.lam_xtq.col(0),
+                KernelClass::Stationary => q.lam_xtq.col(b),
+            };
+            let col = cross.col_mut(b);
+            for i in 0..d {
+                col[i] = scale * q.kp[b] * lq[i];
+            }
+        }
+        // prior variance k(r⋆⋆)
+        let r_star = match f.class {
+            KernelClass::DotProduct => {
+                let c = self.center_vec();
+                let xtq: Vec<f64> = (0..d).map(|i| xq[i] - c[i]).collect();
+                f.metric.quad(&xtq, &xtq)
+            }
+            KernelClass::Stationary => 0.0,
+        };
+        let prior = self.kernel().k(r_star);
+        let w = self.solve_rhs(&cross)?;
+        let reduction: f64 =
+            cross.as_slice().iter().zip(w.as_slice()).map(|(a, b)| a * b).sum();
+        Ok((prior - reduction).max(0.0))
+    }
+
+    /// Posterior mean of the Hessian `∇∇ᵀf(x⋆)` in its low-rank form
+    /// (Eq. 12). Use [`HessianParts::to_dense`] for the `D×D` matrix.
+    pub fn predict_hessian_parts(&self, xq: &[f64]) -> HessianParts {
+        let (d, n) = (self.d(), self.n());
+        let f = self.factors();
+        let q = self.query_panels(xq);
+        // W = [Λ·xtq-panel, ΛZ]
+        let lam_z = f.metric.apply_mat(self.z());
+        let (xpanel, s_m, s_hat, alpha) = match f.class {
+            KernelClass::DotProduct => {
+                // xtq is D×1 but the Hessian needs the per-observation panel ΛX̃
+                // (data side), not the query: M diag uses k‴⊙m over b with
+                // columns Λx̃_b.
+                let m: Vec<f64> = (0..n).map(|b| q.kppp[b] * q.m[b]).collect();
+                let hat: Vec<f64> = q.kpp.clone();
+                (f.lam_xt.clone(), m, hat, 0.0)
+            }
+            KernelClass::Stationary => {
+                let m: Vec<f64> = (0..n).map(|b| -8.0 * q.kppp[b] * q.m[b]).collect();
+                let hat: Vec<f64> = q.kpp.iter().map(|v| -4.0 * v).collect();
+                let alpha: f64 =
+                    (0..n).map(|b| -4.0 * q.kpp[b] * q.m[b]).sum();
+                (q.lam_xtq.clone(), m, hat, alpha)
+            }
+        };
+        let w = xpanel.hcat(&lam_z);
+        let mut s = Mat::zeros(2 * n, 2 * n);
+        for b in 0..n {
+            s[(b, b)] = s_m[b];
+            s[(b, n + b)] = s_hat[b];
+            s[(n + b, b)] = s_hat[b];
+        }
+        let _ = d;
+        HessianParts { alpha, w, s }
+    }
+
+    /// Posterior mean of the Hessian as a dense `D×D` matrix.
+    pub fn predict_hessian(&self, xq: &[f64]) -> Mat {
+        self.predict_hessian_parts(xq).to_dense(self)
+    }
+
+    /// Posterior covariance of `∇f(x⋆)` (full `D×D`).
+    ///
+    /// `cov = K⋆⋆ − C (∇K∇′)⁻¹ Cᵀ` with `C` the `D×ND` cross-covariance;
+    /// needs `D` extra Gram solves (amortized through the cached exact
+    /// factorization) — `O(N²D²)` total, intended for diagnostics and
+    /// moderate `D` (e.g. the posterior ellipses of Fig. 5).
+    pub fn predict_gradient_cov(&self, xq: &[f64]) -> anyhow::Result<Mat> {
+        let (d, n) = (self.d(), self.n());
+        let f = self.factors();
+        let q = self.query_panels(xq);
+        // prior block K⋆⋆ = ∂⋆∂⋆′k at coincident arguments
+        let mut prior = match f.class {
+            KernelClass::DotProduct => {
+                let c = self.center_vec();
+                let xtq: Vec<f64> = (0..d).map(|i| xq[i] - c[i]).collect();
+                let r = f.metric.quad(&xtq, &xtq);
+                let lam_x = f.metric.apply_mat(&Mat::from_vec(d, 1, xtq));
+                let mut m = f.metric.to_dense(d).scale(self.kernel().dk(r));
+                let lx = lam_x.col(0);
+                let k2 = self.kernel().d2k(r);
+                for j in 0..d {
+                    for i in 0..d {
+                        m[(i, j)] += k2 * lx[i] * lx[j];
+                    }
+                }
+                m
+            }
+            // δ = 0: block = −2k′(0)Λ
+            KernelClass::Stationary => f.metric.to_dense(d).scale(-2.0 * self.kernel().dk(0.0)),
+        };
+        // cross-covariance rows: C_i as D×N matrices, solved in one batch of
+        // D right-hand sides through the Gram factorization.
+        // C[(i), (l,b)] = ∂⋆^i ∂_b^l k — same blocks as prediction.
+        let scale2 = match f.class {
+            KernelClass::DotProduct => 1.0,
+            KernelClass::Stationary => -4.0,
+        };
+        let scale1 = match f.class {
+            KernelClass::DotProduct => 1.0,
+            KernelClass::Stationary => -2.0,
+        };
+        let lam = f.metric.to_dense(d);
+        // build all D cross matrices; reuse the per-b panels
+        let mut reduction = Mat::zeros(d, d);
+        for i in 0..d {
+            let mut cross_i = Mat::zeros(d, n);
+            for b in 0..n {
+                let (ui, ul) = match f.class {
+                    KernelClass::DotProduct => (q.lam_xtq.col(0), f.lam_xt.col(b)),
+                    KernelClass::Stationary => (q.lam_xtq.col(b), q.lam_xtq.col(b)),
+                };
+                let col = cross_i.col_mut(b);
+                for l in 0..d {
+                    col[l] = scale1 * q.kp[b] * lam[(i, l)]
+                        + scale2 * q.kpp[b] * ul[i] * ui[l];
+                }
+            }
+            let w = self.solve_rhs(&cross_i)?;
+            // reduction row i: Σ_{l,b} cross_j[l,b] · w[l,b] per column j —
+            // use symmetry: reduction[(i,j)] = ⟨C_j, (∇K∇′)⁻¹ C_iᵀ⟩; compute
+            // via the already-built cross_i and the solved w of C_i against
+            // every C_j: instead accumulate v_j = Σ cross_j ⊙ w.
+            // To avoid rebuilding C_j for each i, exploit that we loop over
+            // all i anyway: reduction[(j,i)] needs C_j·w_i; we fill column i
+            // with dot(C_j, w_i) lazily below using a second pass.
+            // Simpler (kept O(N D²)): recompute C_j entry-wise against w.
+            for j in 0..d {
+                let mut acc = 0.0;
+                for b in 0..n {
+                    let (uj, ul) = match f.class {
+                        KernelClass::DotProduct => (q.lam_xtq.col(0), f.lam_xt.col(b)),
+                        KernelClass::Stationary => (q.lam_xtq.col(b), q.lam_xtq.col(b)),
+                    };
+                    let wcol = w.col(b);
+                    for l in 0..d {
+                        let cjl = scale1 * q.kp[b] * lam[(j, l)]
+                            + scale2 * q.kpp[b] * ul[j] * uj[l];
+                        acc += cjl * wcol[l];
+                    }
+                }
+                reduction[(j, i)] = acc;
+            }
+        }
+        prior -= &reduction;
+        Ok(prior.symmetrized())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{FitOptions, GradientGp};
+    use crate::gram::Metric;
+    use crate::kernels::{
+        ExponentialKernel, Matern52, RationalQuadratic, ScalarKernel, SquaredExponential,
+    };
+    use crate::rng::Rng;
+    use std::sync::Arc;
+
+    fn fit(
+        kern: Arc<dyn ScalarKernel>,
+        metric: Metric,
+        d: usize,
+        n: usize,
+        seed: u64,
+        opts: FitOptions,
+    ) -> GradientGp {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        GradientGp::fit(kern, metric, &x, &g, &opts).unwrap()
+    }
+
+    /// Dense oracle: cross-covariance blocks ∂⋆∂_b k via finite differences
+    /// of the kernel, times the representer weights.
+    fn dense_gradient_oracle(gp: &GradientGp, xq: &[f64]) -> Vec<f64> {
+        let (d, n) = (gp.d(), gp.n());
+        let f = gp.factors();
+        let h = 1e-5;
+        let kern = gp.kernel();
+        let kfun = |xa: &[f64], xb: &[f64]| {
+            let r = match f.class {
+                KernelClass::DotProduct => {
+                    let c = gp.center_vec();
+                    let xa_c: Vec<f64> = (0..d).map(|i| xa[i] - c[i]).collect();
+                    let xb_c: Vec<f64> = (0..d).map(|i| xb[i] - c[i]).collect();
+                    f.metric.quad(&xa_c, &xb_c)
+                }
+                KernelClass::Stationary => {
+                    let dd: Vec<f64> = (0..d).map(|i| xa[i] - xb[i]).collect();
+                    f.metric.quad(&dd, &dd)
+                }
+            };
+            kern.k(r)
+        };
+        let mut out = vec![0.0; d];
+        for b in 0..n {
+            let xb = gp.x().col(b);
+            for i in 0..d {
+                for l in 0..d {
+                    // ∂/∂xq_i ∂/∂xb_l k(xq, xb)
+                    let mut qp = xq.to_vec();
+                    let mut qm = xq.to_vec();
+                    qp[i] += h;
+                    qm[i] -= h;
+                    let mut bp = xb.to_vec();
+                    let mut bm = xb.to_vec();
+                    bp[l] += h;
+                    bm[l] -= h;
+                    let fd = (kfun(&qp, &bp) - kfun(&qp, &bm) - kfun(&qm, &bp) + kfun(&qm, &bm))
+                        / (4.0 * h * h);
+                    out[i] += fd * gp.z()[(l, b)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gradient_prediction_matches_dense_oracle_stationary() {
+        for (kern, seed) in [
+            (Arc::new(SquaredExponential) as Arc<dyn ScalarKernel>, 1u64),
+            (Arc::new(Matern52), 2),
+            (Arc::new(RationalQuadratic::new(1.4)), 3),
+        ] {
+            let gp = fit(kern, Metric::Iso(0.6), 5, 3, seed, FitOptions::default());
+            let xq = vec![0.3, -0.8, 0.5, 1.2, -0.1];
+            let got = gp.predict_gradient(&xq);
+            let want = dense_gradient_oracle(&gp, &xq);
+            for i in 0..5 {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()),
+                    "dim {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_prediction_matches_dense_oracle_dot() {
+        let gp = fit(
+            Arc::new(ExponentialKernel),
+            Metric::Iso(0.2),
+            5,
+            3,
+            4,
+            FitOptions { center: Some(vec![0.1, -0.2, 0.3, 0.0, 0.2]), ..Default::default() },
+        );
+        let xq = vec![0.4, 0.1, -0.6, 0.8, 0.2];
+        let got = gp.predict_gradient(&xq);
+        let want = dense_gradient_oracle(&gp, &xq);
+        for i in 0..5 {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()),
+                "dim {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn hessian_is_jacobian_of_predicted_gradient() {
+        // H̄(x) must equal ∂ḡ(x)/∂x — check by central differences, both classes.
+        let cases: Vec<(Arc<dyn ScalarKernel>, Option<Vec<f64>>)> = vec![
+            (Arc::new(SquaredExponential), None),
+            (Arc::new(Matern52), None),
+            (Arc::new(ExponentialKernel), Some(vec![0.1, -0.3, 0.2, 0.05])),
+        ];
+        for (idx, (kern, center)) in cases.into_iter().enumerate() {
+            let gp = fit(
+                kern,
+                Metric::Iso(0.5),
+                4,
+                3,
+                10 + idx as u64,
+                FitOptions { center, ..Default::default() },
+            );
+            let xq = vec![0.25, -0.4, 0.6, 0.1];
+            let hmat = gp.predict_hessian(&xq);
+            let h = 1e-5;
+            for j in 0..4 {
+                let mut xp = xq.clone();
+                let mut xm = xq.clone();
+                xp[j] += h;
+                xm[j] -= h;
+                let gp_ = gp.predict_gradient(&xp);
+                let gm_ = gp.predict_gradient(&xm);
+                for i in 0..4 {
+                    let fd = (gp_[i] - gm_[i]) / (2.0 * h);
+                    assert!(
+                        (hmat[(i, j)] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                        "case {idx} H[{i},{j}] = {} vs fd {}",
+                        hmat[(i, j)],
+                        fd
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn value_gradient_consistency() {
+        // ∇ predict_value = predict_gradient (finite differences)
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.7), 4, 3, 20, FitOptions::default());
+        let xq = vec![0.2, 0.5, -0.3, 0.9];
+        let grad = gp.predict_gradient(&xq);
+        let h = 1e-6;
+        for i in 0..4 {
+            let mut xp = xq.clone();
+            let mut xm = xq.clone();
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (gp.predict_value(&xp) - gp.predict_value(&xm)) / (2.0 * h);
+            assert!((fd - grad[i]).abs() < 1e-5 * (1.0 + grad[i].abs()), "dim {i}");
+        }
+    }
+
+    #[test]
+    fn value_variance_zero_at_observations_positive_far_away() {
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(1.0), 4, 3, 30, FitOptions::default());
+        let far = vec![25.0, -25.0, 25.0, -25.0];
+        let var_far = gp.predict_value_var(&far).unwrap();
+        // far away the posterior reverts to the prior variance k(0) = 1
+        assert!(var_far > 0.9, "far variance {var_far}");
+        // variance shrinks near data (gradients pin the function shape but
+        // not its offset, so it does not vanish entirely)
+        let at = gp.x().col(0).to_vec();
+        let var_at = gp.predict_value_var(&at).unwrap();
+        assert!(var_at < var_far, "{var_at} vs {var_far}");
+    }
+
+    #[test]
+    fn hessian_parts_match_dense() {
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.5), 5, 4, 40, FitOptions::default());
+        let xq = vec![0.1, 0.2, -0.4, 0.7, -0.9];
+        let parts = gp.predict_hessian_parts(&xq);
+        let dense = parts.to_dense(&gp);
+        // symmetric + correct shape
+        assert!((&dense - &dense.t()).max_abs() < 1e-12);
+        assert_eq!((dense.rows(), dense.cols()), (5, 5));
+        assert_eq!(parts.w.cols(), 8);
+    }
+
+    #[test]
+    fn hessian_woodbury_solve_matches_dense() {
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.6), 6, 4, 60, FitOptions::default());
+        let xq = vec![0.3, -0.2, 0.5, 0.1, -0.7, 0.4];
+        let parts = gp.predict_hessian_parts(&xq);
+        let dense = parts.to_dense(&gp);
+        let b: Vec<f64> = (0..6).map(|i| ((i + 1) as f64).sin()).collect();
+        let fast = parts.solve(&gp, &b).unwrap();
+        let slow = crate::linalg::Lu::factor(&dense).unwrap().solve_vec(&b);
+        let scale = slow.iter().fold(1.0_f64, |m, v| m.max(v.abs()));
+        for i in 0..6 {
+            assert!(
+                (fast[i] - slow[i]).abs() < 1e-8 * scale,
+                "dim {i}: {} vs {}",
+                fast[i],
+                slow[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_cov_vanishes_at_observations_and_reverts_far_away() {
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.8), 4, 3, 61, FitOptions::default());
+        // at an observed point the (noise-free) gradient is pinned: cov ≈ 0
+        let at = gp.x().col(1).to_vec();
+        let cov_at = gp.predict_gradient_cov(&at).unwrap();
+        assert!(cov_at.max_abs() < 1e-6, "cov at data = {}", cov_at.max_abs());
+        // far away it reverts to the prior block −2k′(0)Λ = Λ (SE)
+        let far = vec![40.0; 4];
+        let cov_far = gp.predict_gradient_cov(&far).unwrap();
+        let prior = gp.factors().metric.to_dense(4);
+        assert!((&cov_far - &prior).max_abs() < 1e-6);
+        // PSD-ness (eigenvalues ≥ −tol)
+        let (w, _) = crate::linalg::sym_eig(&cov_far);
+        assert!(w.iter().all(|&l| l > -1e-9));
+    }
+
+    #[test]
+    fn gradient_cov_matches_brute_force_small_case() {
+        use crate::linalg::Lu;
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.5), 3, 2, 62, FitOptions::default());
+        let xq = vec![0.4, -0.3, 0.8];
+        let got = gp.predict_gradient_cov(&xq).unwrap();
+        // brute force: extend the dense Gram with the query point and read
+        // off the Schur complement.
+        let (d, n) = (3, 2);
+        let mut xall = Mat::zeros(d, n + 1);
+        for b in 0..n {
+            xall.set_col(b, gp.x().col(b));
+        }
+        xall.set_col(n, &xq);
+        let fall = crate::gram::GramFactors::new(
+            gp.kernel(),
+            &xall,
+            gp.factors().metric.clone(),
+            None,
+        );
+        let dense = fall.to_dense();
+        let kqq = dense.block(n * d, n * d, d, d);
+        let kqd = dense.block(n * d, 0, d, n * d);
+        let kdd = dense.block(0, 0, n * d, n * d);
+        let sol = Lu::factor(&kdd).unwrap().solve_mat(&kqd.t());
+        let want = &kqq - &kqd.matmul(&sol);
+        assert!(
+            (&got - &want).max_abs() < 1e-7 * (1.0 + want.max_abs()),
+            "cov mismatch: {:?} vs {:?}",
+            got,
+            want
+        );
+    }
+
+    #[test]
+    fn batch_prediction_matches_single() {
+        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.8), 4, 3, 50, FitOptions::default());
+        let mut rng = Rng::new(51);
+        let xqs = Mat::from_fn(4, 6, |_, _| rng.gauss());
+        let batch = gp.predict_gradients(&xqs);
+        for j in 0..6 {
+            let single = gp.predict_gradient(xqs.col(j));
+            for i in 0..4 {
+                assert_eq!(batch[(i, j)], single[i]);
+            }
+        }
+    }
+}

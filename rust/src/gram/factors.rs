@@ -1,0 +1,421 @@
+//! The structured factors of the derivative Gram matrix.
+//!
+//! For both kernel classes the `ND×ND` Gram matrix is fully described by
+//! `O(N² + ND)` numbers (Sec. 2.3 "General Improvements"):
+//!
+//! ```text
+//! ∇K∇′ = K̂′ ⊗ Λ + (correction built from K̂″ and ΛX̃)
+//! ```
+//!
+//! with the *effective* scalar-derivative matrices
+//!
+//! * dot product:  `K̂′ = K′`,   correction block `(a,b) = K̂″_ab (Λx̃_b)(Λx̃_a)ᵀ`, `K̂″ = K″`,
+//! * stationary:   `K̂′ = −2K′`, correction block `(a,b) = K̂″_ab (Λδ_ab)(Λδ_ab)ᵀ`, `K̂″ = −4K″`,
+//!
+//! where `x̃ = x − c` and `δ_ab = x_a − x_b`. The ±2/±4 factors come from the
+//! chain rule on `r` (App. B.2 / B.3); folding them into `K̂′/K̂″` at
+//! construction keeps every downstream formula identical for both classes.
+
+use crate::kernels::{KernelClass, ScalarKernel};
+use crate::linalg::Mat;
+
+use super::Metric;
+
+/// Compact representation of `∇K∇′`: everything inference needs, in
+/// `O(N² + ND)` memory.
+#[derive(Clone, Debug)]
+pub struct GramFactors {
+    /// Kernel class (fixes which correction structure applies).
+    pub class: KernelClass,
+    /// `X̃ ∈ R^{D×N}`: centered inputs `X − c` (dot product) or raw `X`
+    /// (stationary).
+    pub xt: Mat,
+    /// `ΛX̃` precomputed (shared by matvec, Woodbury and prediction).
+    pub lam_xt: Mat,
+    /// Pairwise scalar arguments `r_ab` (kept for higher-order derivatives).
+    pub r: Mat,
+    /// Effective first-derivative matrix `K̂′` (see module docs).
+    pub kp_eff: Mat,
+    /// Effective correction coefficients `K̂″` (see module docs). For
+    /// stationary kernels the diagonal is zeroed when `k″(0)` is not finite —
+    /// it multiplies `δ_aa = 0` anyway (Matérn guard).
+    pub kpp_eff: Mat,
+    /// `(ΛX̃)ᵀ` cached (`N×D`): lets the matvec form `P = X̃ᵀΛV` as a
+    /// column-SAXPY matmul instead of latency-bound dot products (§Perf).
+    pub lam_xt_t: Mat,
+    /// The metric `Λ`.
+    pub metric: Metric,
+    /// Observation noise folded into `K̂′` (isotropic metrics only).
+    pub noise: f64,
+}
+
+impl GramFactors {
+    /// Build the factors from data `X ∈ R^{D×N}` (columns = points).
+    ///
+    /// `center` is the dot-product offset `c` (ignored for stationary
+    /// kernels; pass `None` for `c = 0`).
+    pub fn new(kernel: &dyn ScalarKernel, x: &Mat, metric: Metric, center: Option<&[f64]>) -> Self {
+        Self::with_noise(kernel, x, metric, center, 0.0)
+    }
+
+    /// Like [`GramFactors::new`] with iid observation noise `σ²` on every
+    /// gradient component. Exactly representable only for isotropic `Λ = λI`,
+    /// where `∇K∇′ + σ²I = (K̂′ + σ²/λ·I) ⊗ Λ + correction`.
+    pub fn with_noise(
+        kernel: &dyn ScalarKernel,
+        x: &Mat,
+        metric: Metric,
+        center: Option<&[f64]>,
+        noise: f64,
+    ) -> Self {
+        let (d, n) = (x.rows(), x.cols());
+        metric.validate(d);
+        assert!(noise >= 0.0);
+        if noise > 0.0 {
+            assert!(
+                matches!(metric, Metric::Iso(_)),
+                "noise folding requires an isotropic metric"
+            );
+        }
+        let class = kernel.class();
+
+        // X̃
+        let xt = match (class, center) {
+            (KernelClass::DotProduct, Some(c)) => {
+                assert_eq!(c.len(), d, "center length != D");
+                let mut m = x.clone();
+                for j in 0..n {
+                    let col = m.col_mut(j);
+                    for i in 0..d {
+                        col[i] -= c[i];
+                    }
+                }
+                m
+            }
+            _ => x.clone(),
+        };
+        let lam_xt = metric.apply_mat(&xt);
+
+        // pairwise r
+        let r = match class {
+            KernelClass::DotProduct => {
+                // r_ab = x̃_aᵀ Λ x̃_b — one Gram product
+                xt.t_matmul(&lam_xt)
+            }
+            KernelClass::Stationary => {
+                // r_ab = (x_a − x_b)ᵀΛ(x_a − x_b) = q_a + q_b − 2 x_aᵀΛx_b
+                let cross = xt.t_matmul(&lam_xt);
+                let q: Vec<f64> = (0..n).map(|a| cross[(a, a)]).collect();
+                Mat::from_fn(n, n, |a, b| (q[a] + q[b] - 2.0 * cross[(a, b)]).max(0.0))
+            }
+        };
+
+        // effective scalar-derivative matrices
+        let (s1, s2) = match class {
+            KernelClass::DotProduct => (1.0, 1.0),
+            KernelClass::Stationary => (-2.0, -4.0),
+        };
+        let mut kp_eff = Mat::from_fn(n, n, |a, b| s1 * kernel.dk(r[(a, b)]));
+        let mut kpp_eff = Mat::from_fn(n, n, |a, b| s2 * kernel.d2k(r[(a, b)]));
+        if class == KernelClass::Stationary {
+            // Matérn guard: k″(0) can diverge but multiplies δ_aa = 0.
+            for a in 0..n {
+                if !kpp_eff[(a, a)].is_finite() {
+                    kpp_eff[(a, a)] = 0.0;
+                }
+                debug_assert!(
+                    kp_eff[(a, a)].is_finite(),
+                    "kernel {} has non-differentiable samples: k'(0) not finite",
+                    kernel.name()
+                );
+            }
+        }
+        if noise > 0.0 {
+            let lam = match metric {
+                Metric::Iso(l) => l,
+                Metric::Diag(_) => unreachable!(),
+            };
+            for a in 0..n {
+                kp_eff[(a, a)] += noise / lam;
+            }
+        }
+
+        let lam_xt_t = lam_xt.t();
+        GramFactors { class, xt, lam_xt, r, kp_eff, kpp_eff, lam_xt_t, metric, noise }
+    }
+
+    /// Number of observations `N`.
+    pub fn n(&self) -> usize {
+        self.xt.cols()
+    }
+
+    /// Input dimension `D`.
+    pub fn d(&self) -> usize {
+        self.xt.rows()
+    }
+
+    /// Memory held by the factors, in f64 counts (for the Sec. 5.2 memory
+    /// table: `O(N² + ND)` vs the dense `(ND)²`).
+    pub fn memory_f64(&self) -> usize {
+        3 * self.n() * self.n() + 2 * self.n() * self.d()
+    }
+
+    /// Diagonal of the full Gram matrix (Jacobi preconditioner for the
+    /// iterative solver). Entry `(a,i)`:
+    /// `K̂′_aa Λ_ii + K̂″_aa [Λx̃_a]_i²` (the correction vanishes on the
+    /// stationary diagonal since `δ_aa = 0`).
+    pub fn gram_diag(&self) -> Vec<f64> {
+        let (n, d) = (self.n(), self.d());
+        let mut out = vec![0.0; n * d];
+        for a in 0..n {
+            let kpa = self.kp_eff[(a, a)];
+            let corr = match self.class {
+                KernelClass::DotProduct => Some(self.kpp_eff[(a, a)]),
+                KernelClass::Stationary => None,
+            };
+            let lxa = self.lam_xt.col(a);
+            for i in 0..d {
+                let mut v = kpa * self.metric.diag_entry(i);
+                if let Some(c2) = corr {
+                    v += c2 * lxa[i] * lxa[i];
+                }
+                out[a * d + i] = v;
+            }
+        }
+        out
+    }
+
+    /// Assemble the dense `ND×ND` Gram matrix (test oracle / Fig. 1 only —
+    /// this is exactly the object the paper's decomposition avoids).
+    ///
+    /// Ordering follows Eq. 19: blocks indexed by data point, entries within
+    /// a block by dimension, i.e. flat index `(a, i) ↦ a·D + i`.
+    pub fn to_dense(&self) -> Mat {
+        let (n, d) = (self.n(), self.d());
+        let lam = self.metric.to_dense(d);
+        let mut out = Mat::zeros(n * d, n * d);
+        for a in 0..n {
+            for b in 0..n {
+                // Kronecker part
+                let mut block = lam.scale(self.kp_eff[(a, b)]);
+                // correction part
+                let c2 = self.kpp_eff[(a, b)];
+                if c2 != 0.0 {
+                    match self.class {
+                        KernelClass::DotProduct => {
+                            // K̂″_ab (Λx̃_b)(Λx̃_a)ᵀ — note the index flip (Eq. 21)
+                            let u = self.lam_xt.col(b);
+                            let v = self.lam_xt.col(a);
+                            for j in 0..d {
+                                for i in 0..d {
+                                    block[(i, j)] += c2 * u[i] * v[j];
+                                }
+                            }
+                        }
+                        KernelClass::Stationary => {
+                            // K̂″_ab (Λδ_ab)(Λδ_ab)ᵀ
+                            let ua = self.lam_xt.col(a);
+                            let ub = self.lam_xt.col(b);
+                            for j in 0..d {
+                                for i in 0..d {
+                                    block[(i, j)] += c2 * (ua[i] - ub[i]) * (ua[j] - ub[j]);
+                                }
+                            }
+                        }
+                    }
+                }
+                out.set_block(a * d, b * d, &block);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Poly2Kernel, SquaredExponential};
+    use crate::rng::Rng;
+
+    fn sample_x(d: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(d, n, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn dot_r_matches_definition() {
+        let x = sample_x(4, 3, 1);
+        let c = vec![0.5, -0.2, 0.1, 0.0];
+        let f = GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.7), Some(&c));
+        for a in 0..3 {
+            for b in 0..3 {
+                let mut want = 0.0;
+                for i in 0..4 {
+                    want += (x[(i, a)] - c[i]) * 0.7 * (x[(i, b)] - c[i]);
+                }
+                assert!((f.r[(a, b)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn stationary_r_matches_definition() {
+        let x = sample_x(5, 4, 2);
+        let lam = vec![1.0, 2.0, 0.5, 1.5, 3.0];
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Diag(lam.clone()), None);
+        for a in 0..4 {
+            for b in 0..4 {
+                let mut want = 0.0;
+                for i in 0..5 {
+                    let d = x[(i, a)] - x[(i, b)];
+                    want += d * lam[i] * d;
+                }
+                assert!((f.r[(a, b)] - want).abs() < 1e-12, "({a},{b})");
+            }
+        }
+        // diagonal exactly zero
+        for a in 0..4 {
+            assert_eq!(f.r[(a, a)], 0.0);
+        }
+    }
+
+    #[test]
+    fn dense_gram_is_symmetric() {
+        let x = sample_x(6, 4, 3);
+        for f in [
+            GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.8), None),
+            GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.8), None),
+        ] {
+            let dense = f.to_dense();
+            assert!((&dense - &dense.t()).max_abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_gram_matches_finite_differences_of_kernel() {
+        // ∂_a^i ∂_b^j k(x_a, x_b) via central differences on both arguments.
+        let d = 3;
+        let x = sample_x(d, 3, 4);
+        let kern = SquaredExponential;
+        let metric = Metric::Diag(vec![0.9, 1.4, 0.6]);
+        let f = GramFactors::new(&kern, &x, metric.clone(), None);
+        let dense = f.to_dense();
+        let h = 1e-5;
+        let kfun = |xa: &[f64], xb: &[f64]| {
+            let mut r = 0.0;
+            for i in 0..d {
+                let dd = xa[i] - xb[i];
+                r += dd * metric.diag_entry(i) * dd;
+            }
+            kern.k(r)
+        };
+        for a in 0..3 {
+            for b in 0..3 {
+                if a == b {
+                    continue; // FD of k(x,x) needs the one-argument chain rule
+                }
+                for i in 0..d {
+                    for j in 0..d {
+                        let mut xa_p = x.col(a).to_vec();
+                        let mut xa_m = x.col(a).to_vec();
+                        xa_p[i] += h;
+                        xa_m[i] -= h;
+                        let mut xb_p = x.col(b).to_vec();
+                        let mut xb_m = x.col(b).to_vec();
+                        xb_p[j] += h;
+                        xb_m[j] -= h;
+                        let fd = (kfun(&xa_p, &xb_p) - kfun(&xa_p, &xb_m) - kfun(&xa_m, &xb_p)
+                            + kfun(&xa_m, &xb_m))
+                            / (4.0 * h * h);
+                        let got = dense[(a * d + i, b * d + j)];
+                        assert!(
+                            (got - fd).abs() < 1e-6,
+                            "block ({a},{b}) entry ({i},{j}): {got} vs fd {fd}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_dense_gram_matches_finite_differences() {
+        let d = 3;
+        let x = sample_x(d, 3, 8);
+        let kern = Poly2Kernel;
+        let c = [0.2, -0.4, 0.1];
+        let metric = Metric::Iso(0.85);
+        let f = GramFactors::new(&kern, &x, metric.clone(), Some(&c));
+        let dense = f.to_dense();
+        let h = 1e-5;
+        let kfun = |xa: &[f64], xb: &[f64]| {
+            let mut r = 0.0;
+            for i in 0..d {
+                r += (xa[i] - c[i]) * 0.85 * (xb[i] - c[i]);
+            }
+            kern.k(r)
+        };
+        for a in 0..3 {
+            for b in 0..3 {
+                for i in 0..d {
+                    for j in 0..d {
+                        let mut xa_p = x.col(a).to_vec();
+                        let mut xa_m = x.col(a).to_vec();
+                        xa_p[i] += h;
+                        xa_m[i] -= h;
+                        let mut xb_p = x.col(b).to_vec();
+                        let mut xb_m = x.col(b).to_vec();
+                        xb_p[j] += h;
+                        xb_m[j] -= h;
+                        let fd = (kfun(&xa_p, &xb_p) - kfun(&xa_p, &xb_m) - kfun(&xa_m, &xb_p)
+                            + kfun(&xa_m, &xb_m))
+                            / (4.0 * h * h);
+                        let got = dense[(a * d + i, b * d + j)];
+                        assert!(
+                            (got - fd).abs() < 1e-5,
+                            "block ({a},{b}) entry ({i},{j}): {got} vs fd {fd}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memory_footprint_is_small() {
+        let x = sample_x(100, 10, 5);
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(1e-3), None);
+        // paper Sec. 2.3: O(N² + ND) vs (ND)²
+        assert!(f.memory_f64() < 10_000);
+        assert_eq!(1_000_000, (10 * 100) * (10 * 100)); // dense would be 1e6
+    }
+
+    #[test]
+    fn noise_folds_into_kp_diagonal() {
+        let x = sample_x(4, 3, 6);
+        let f0 = GramFactors::new(&SquaredExponential, &x, Metric::Iso(2.0), None);
+        let f1 = GramFactors::with_noise(&SquaredExponential, &x, Metric::Iso(2.0), None, 0.3);
+        let dense0 = f0.to_dense();
+        let dense1 = f1.to_dense();
+        let mut expect = dense0.clone();
+        for i in 0..12 {
+            expect[(i, i)] += 0.3;
+        }
+        assert!((&dense1 - &expect).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_diag_matches_dense_diagonal() {
+        let x = sample_x(5, 4, 7);
+        for f in [
+            GramFactors::new(&SquaredExponential, &x, Metric::Diag(vec![1.0, 0.5, 2.0, 1.2, 0.8]), None),
+            GramFactors::new(&Poly2Kernel, &x, Metric::Iso(1.3), None),
+        ] {
+            let dense = f.to_dense();
+            let diag = f.gram_diag();
+            for i in 0..diag.len() {
+                assert!((diag[i] - dense[(i, i)]).abs() < 1e-12, "entry {i}");
+            }
+        }
+    }
+}

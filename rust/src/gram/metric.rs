@@ -1,0 +1,212 @@
+//! The scaling matrix `Λ` of the kernel scalarization.
+//!
+//! The paper allows an arbitrary SPD `Λ` but notes it is "commonly chosen
+//! diagonal or even scalar" — every experiment in the paper uses an isotropic
+//! `Λ = λI`. We support isotropic and diagonal metrics, which keeps all
+//! `Λ`-applications `O(D)`-per-column and `Λ⁻¹` trivial.
+
+use crate::linalg::Mat;
+
+/// Isotropic or diagonal SPD metric `Λ`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Metric {
+    /// `Λ = λ I` with `λ > 0`. For an isotropic kernel with lengthscale `ℓ`,
+    /// `λ = 1/ℓ²`.
+    Iso(f64),
+    /// `Λ = diag(λ₁, …, λ_D)`, all positive (ARD lengthscales).
+    Diag(Vec<f64>),
+}
+
+impl Metric {
+    /// Isotropic metric from a lengthscale: `Λ = ℓ⁻² I`.
+    pub fn from_lengthscale(ell: f64) -> Self {
+        assert!(ell > 0.0);
+        Metric::Iso(1.0 / (ell * ell))
+    }
+
+    /// Validate against a dimension; panics on mismatch or non-positive entries.
+    pub fn validate(&self, d: usize) {
+        match self {
+            Metric::Iso(l) => assert!(*l > 0.0, "Λ must be positive"),
+            Metric::Diag(ls) => {
+                assert_eq!(ls.len(), d, "Λ diagonal length != D");
+                assert!(ls.iter().all(|&l| l > 0.0), "Λ must be positive definite");
+            }
+        }
+    }
+
+    /// `Λ x` for a length-`D` slice, written into `out`.
+    pub fn apply_slice(&self, x: &[f64], out: &mut [f64]) {
+        match self {
+            Metric::Iso(l) => {
+                for i in 0..x.len() {
+                    out[i] = l * x[i];
+                }
+            }
+            Metric::Diag(ls) => {
+                for i in 0..x.len() {
+                    out[i] = ls[i] * x[i];
+                }
+            }
+        }
+    }
+
+    /// `Λ V` for a `D×N` matrix.
+    pub fn apply_mat(&self, v: &Mat) -> Mat {
+        match self {
+            Metric::Iso(l) => v.scale(*l),
+            Metric::Diag(ls) => {
+                assert_eq!(v.rows(), ls.len());
+                let mut out = v.clone();
+                for j in 0..v.cols() {
+                    let col = out.col_mut(j);
+                    for i in 0..col.len() {
+                        col[i] *= ls[i];
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// `dst ← Λ src` (single pass, no allocation).
+    pub fn apply_mat_into(&self, src: &Mat, dst: &mut Mat) {
+        assert_eq!((src.rows(), src.cols()), (dst.rows(), dst.cols()));
+        match self {
+            Metric::Iso(l) => {
+                for (d, s) in dst.as_mut_slice().iter_mut().zip(src.as_slice()) {
+                    *d = l * s;
+                }
+            }
+            Metric::Diag(ls) => {
+                assert_eq!(src.rows(), ls.len());
+                for j in 0..src.cols() {
+                    let s = src.col(j);
+                    let d = dst.col_mut(j);
+                    for i in 0..s.len() {
+                        d[i] = ls[i] * s[i];
+                    }
+                }
+            }
+        }
+    }
+
+    /// `Λ V` in place.
+    pub fn apply_mat_in_place(&self, v: &mut Mat) {
+        match self {
+            Metric::Iso(l) => {
+                for x in v.as_mut_slice() {
+                    *x *= l;
+                }
+            }
+            Metric::Diag(ls) => {
+                assert_eq!(v.rows(), ls.len());
+                for j in 0..v.cols() {
+                    let col = v.col_mut(j);
+                    for i in 0..col.len() {
+                        col[i] *= ls[i];
+                    }
+                }
+            }
+        }
+    }
+
+    /// `Λ⁻¹ V`.
+    pub fn apply_inv_mat(&self, v: &Mat) -> Mat {
+        match self {
+            Metric::Iso(l) => v.scale(1.0 / l),
+            Metric::Diag(ls) => {
+                assert_eq!(v.rows(), ls.len());
+                let mut out = v.clone();
+                for j in 0..v.cols() {
+                    let col = out.col_mut(j);
+                    for i in 0..col.len() {
+                        col[i] /= ls[i];
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Quadratic form `xᵀ Λ y`.
+    pub fn quad(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            Metric::Iso(l) => l * x.iter().zip(y).map(|(a, b)| a * b).sum::<f64>(),
+            Metric::Diag(ls) => x.iter().zip(y).zip(ls).map(|((a, b), l)| a * b * l).sum(),
+        }
+    }
+
+    /// Dense `D×D` representation (tests / dense oracle only).
+    pub fn to_dense(&self, d: usize) -> Mat {
+        match self {
+            Metric::Iso(l) => Mat::eye(d).scale(*l),
+            Metric::Diag(ls) => {
+                assert_eq!(ls.len(), d);
+                Mat::diag(ls)
+            }
+        }
+    }
+
+    /// Entry `Λ_ii`.
+    pub fn diag_entry(&self, i: usize) -> f64 {
+        match self {
+            Metric::Iso(l) => *l,
+            Metric::Diag(ls) => ls[i],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iso_matches_dense() {
+        let m = Metric::Iso(2.5);
+        let v = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        let got = m.apply_mat(&v);
+        let want = m.to_dense(3).matmul(&v);
+        assert!((&got - &want).max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn diag_matches_dense() {
+        let m = Metric::Diag(vec![1.0, 2.0, 3.0]);
+        let v = Mat::from_fn(3, 4, |i, j| (i as f64) - (j as f64));
+        let got = m.apply_mat(&v);
+        let want = m.to_dense(3).matmul(&v);
+        assert!((&got - &want).max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let m = Metric::Diag(vec![0.5, 4.0, 9.0]);
+        let v = Mat::from_fn(3, 3, |i, j| (i * j) as f64 + 1.0);
+        let round = m.apply_inv_mat(&m.apply_mat(&v));
+        assert!((&round - &v).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn quad_matches_dense() {
+        let m = Metric::Diag(vec![1.0, 2.0, 0.5]);
+        let x = [1.0, -1.0, 2.0];
+        let y = [0.5, 3.0, 1.0];
+        let want = {
+            let lx = m.to_dense(3).matvec(&x);
+            lx.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>()
+        };
+        assert!((m.quad(&x, &y) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn lengthscale_convention() {
+        // paper Sec. 5.2: ℓ² = 10·D with D=100 gives Λ = 1e-3 I
+        let m = Metric::from_lengthscale((10.0_f64 * 100.0).sqrt());
+        match m {
+            Metric::Iso(l) => assert!((l - 1e-3).abs() < 1e-18),
+            _ => unreachable!(),
+        }
+    }
+}

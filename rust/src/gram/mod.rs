@@ -1,0 +1,21 @@
+//! Structured derivative Gram matrices — the paper's core contribution.
+//!
+//! * [`GramFactors`] — the `O(N² + ND)` representation of `∇K∇′` (Sec. 2.2),
+//! * [`GramFactors::matvec`] — the implicit matvec, Eq. 9 / Alg. 2,
+//! * [`WoodburySolver`] / [`woodbury_solve`] — exact `O(N²D + N⁶)` inference
+//!   (App. C.1),
+//! * [`poly2_solve`] — the `O(N²D + N³)` probabilistic-linear-algebra special
+//!   case (Sec. 4.2),
+//! * [`Metric`] — the scaling matrix `Λ`.
+
+mod factors;
+mod matvec;
+mod metric;
+mod poly2;
+mod woodbury;
+
+pub use factors::GramFactors;
+pub use matvec::{GramOperator, MatvecWorkspace};
+pub use metric::Metric;
+pub use poly2::{poly2_solve, Poly2Solve};
+pub use woodbury::{woodbury_solve, WoodburySolver};

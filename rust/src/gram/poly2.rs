@@ -1,0 +1,191 @@
+//! The `O(N²D + N³)` analytic special case (Sec. 4.2).
+//!
+//! For the second-order polynomial kernel `k(r) = r²/2` the Woodbury core
+//! equation `Qᵀ + HQH⁻¹ = T` (Eq. 25, with `H = X̃ᵀΛX̃ = K′`) has the closed
+//! form `Q = ½H⁻¹(X̃ᵀG̃)` *provided* `X̃ᵀG̃` is symmetric — which holds
+//! exactly in the probabilistic-linear-algebra setting where the centered
+//! gradients are `G̃ = AX̃` with `A` the (symmetric) Hessian of the quadratic
+//! (App. C.1 "Special Case"). This replaces the `N²×N²` solve by an `N×N`
+//! one, dropping the total cost to `O(N²D + N³)` — the same complexity class
+//! as matrix-based probabilistic linear solvers (Hennig 2015).
+//!
+//! **Why the analytic path is the *only* exact route for poly(2):** the
+//! kernel's RKHS is the `D(D+1)/2`-dimensional space of quadratic forms, and
+//! for `N ≥ 2` the `ND` gradient-evaluation functionals are linearly
+//! dependent — the Gram matrix is rank-deficient by exactly `N(N−1)/2` (the
+//! "antisymmetric" directions), so both the dense inverse and the general
+//! Woodbury core are singular. The gradient system is nevertheless
+//! *consistent* precisely when `X̃ᵀG̃` is symmetric (gradients of an actual
+//! quadratic), and the closed form below produces a particular solution from
+//! which all posterior predictions are well-defined.
+
+use crate::kernels::KernelClass;
+use crate::linalg::{Cholesky, Mat};
+
+use super::GramFactors;
+
+/// Outcome of the analytic poly(2) solve.
+pub struct Poly2Solve {
+    /// `Z` with `(∇K∇′) vec(Z) = vec(G̃)`.
+    pub z: Mat,
+    /// Asymmetry `‖X̃ᵀG̃ − (X̃ᵀG̃)ᵀ‖_∞ / ‖X̃ᵀG̃‖_∞` actually observed — the
+    /// closed form is exact only at 0; callers may inspect this to decide
+    /// whether to fall back to the general Woodbury path.
+    pub asymmetry: f64,
+}
+
+/// Solve `(∇K∇′) vec(Z) = vec(G̃)` analytically for the poly(2) kernel.
+///
+/// `g_tilde` must already have the prior gradient mean subtracted
+/// (`G̃ = G − g_c`, Sec. 4.2). Errors if the factors are not a dot-product
+/// kernel with `K′ = X̃ᵀΛX̃` (i.e. not poly(2)) or if `H` is singular
+/// (`N > D` or affinely dependent points).
+pub fn poly2_solve(f: &GramFactors, g_tilde: &Mat) -> anyhow::Result<Poly2Solve> {
+    anyhow::ensure!(f.class == KernelClass::DotProduct, "poly2_solve needs a dot-product kernel");
+    let n = f.n();
+    assert_eq!((g_tilde.rows(), g_tilde.cols()), (f.d(), n));
+    anyhow::ensure!(n <= f.d(), "poly2 analytic solve needs N ≤ D (H = X̃ᵀΛX̃ must be invertible)");
+    // H = X̃ᵀΛX̃; for poly(2), K′ = H — verify to catch misuse with other kernels.
+    let h = f.xt.t_matmul(&f.lam_xt);
+    anyhow::ensure!(
+        (&h - &f.kp_eff).max_abs() <= 1e-10 * (1.0 + h.max_abs()),
+        "K′ ≠ X̃ᵀΛX̃: the analytic path only applies to the poly(2) kernel"
+    );
+    let chol = Cholesky::factor(&h).map_err(|e| {
+        anyhow::anyhow!("H = X̃ᵀΛX̃ not invertible ({e}): need linearly independent points")
+    })?;
+
+    // S = X̃ᵀG̃ (must be symmetric for exactness)
+    let s = f.xt.t_matmul(g_tilde);
+    let asym = (&s - &s.t()).max_abs() / (1.0 + s.max_abs());
+
+    // Q = ½ H⁻¹ S;   Z = Λ⁻¹G̃H⁻¹ − X̃QH⁻¹ = (Λ⁻¹G̃ − ½X̃H⁻¹S) H⁻¹
+    let q = chol.solve_mat(&s).scale(0.5);
+    let xq = f.xt.matmul(&q);
+    let num = &f.metric.apply_inv_mat(g_tilde) - &xq;
+    // right-multiply by H⁻¹: (H⁻¹ numᵀ)ᵀ
+    let z = chol.solve_mat(&num.t()).t();
+    Ok(Poly2Solve { z, asymmetry: asym })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gram::{woodbury_solve, Metric};
+    use crate::kernels::Poly2Kernel;
+    use crate::linalg::{random_orthogonal, Lu};
+    use crate::rng::Rng;
+
+    /// Quadratic test problem: f(x) = ½(x−x*)ᵀA(x−x*), gradients A(x−x*).
+    fn quadratic_setup(d: usize, n: usize, seed: u64) -> (Mat, Mat, Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let spec: Vec<f64> = (0..d).map(|i| 0.5 + i as f64).collect();
+        let q = random_orthogonal(d, &mut rng);
+        let a = q.matmul(&Mat::diag(&spec)).matmul_t(&q);
+        let xstar: Vec<f64> = rng.gauss_vec(d);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let mut diff = x.clone();
+        for j in 0..n {
+            let col = diff.col_mut(j);
+            for i in 0..d {
+                col[i] -= xstar[i];
+            }
+        }
+        let g = a.matmul(&diff);
+        (a, x, g, xstar)
+    }
+
+    #[test]
+    fn analytic_matches_dense_solve_single_observation() {
+        // for N = 1 the poly2 gradient Gram is nonsingular (rank D), so the
+        // dense solve is a valid oracle; for N ≥ 2 it is rank-deficient by
+        // N(N−1)/2 (see module docs) and only residual checks apply.
+        let (a, x, g, xstar) = quadratic_setup(7, 1, 1);
+        let gc = a.matvec(&xstar).iter().map(|v| -v).collect::<Vec<_>>();
+        let mut gt = g.clone();
+        for i in 0..7 {
+            gt.col_mut(0)[i] -= gc[i];
+        }
+        let f = GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.6), None);
+        let sol = poly2_solve(&f, &gt).unwrap();
+        assert!(sol.asymmetry < 1e-10, "asymmetry {}", sol.asymmetry);
+        let dense = f.to_dense();
+        let zd = Lu::factor(&dense).unwrap().solve_vec(gt.as_slice());
+        let err: f64 = sol
+            .z
+            .as_slice()
+            .iter()
+            .zip(&zd)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        let scale = zd.iter().fold(1.0_f64, |m, &v| m.max(v.abs()));
+        assert!(err < 1e-8 * scale, "err {err}");
+    }
+
+    #[test]
+    fn general_woodbury_core_is_singular_for_poly2() {
+        // documents the rank deficiency: the N²×N² Woodbury core is singular
+        // for poly(2) with N ≥ 2, which is exactly why the analytic special
+        // case exists (Sec. 4.2).
+        let (a, x, g, xstar) = quadratic_setup(6, 3, 2);
+        let gc: Vec<f64> = a.matvec(&xstar).iter().map(|v| -v).collect();
+        let mut gt = g.clone();
+        for j in 0..3 {
+            let col = gt.col_mut(j);
+            for i in 0..6 {
+                col[i] -= gc[i];
+            }
+        }
+        let f = GramFactors::new(&Poly2Kernel, &x, Metric::Iso(1.0), None);
+        assert!(woodbury_solve(&f, &gt).is_err());
+        // …while the analytic path succeeds with zero residual
+        let fast = poly2_solve(&f, &gt).unwrap();
+        assert!((&f.matvec(&fast.z) - &gt).max_abs() < 1e-8 * (1.0 + gt.max_abs()));
+    }
+
+    #[test]
+    fn residual_through_matvec_is_zero() {
+        let (a, x, g, xstar) = quadratic_setup(9, 5, 3);
+        let gc: Vec<f64> = a.matvec(&xstar).iter().map(|v| -v).collect();
+        let mut gt = g.clone();
+        for j in 0..5 {
+            let col = gt.col_mut(j);
+            for i in 0..9 {
+                col[i] -= gc[i];
+            }
+        }
+        let f = GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.4), None);
+        let sol = poly2_solve(&f, &gt).unwrap();
+        let back = f.matvec(&sol.z);
+        assert!((&back - &gt).max_abs() < 1e-8 * (1.0 + gt.max_abs()));
+    }
+
+    #[test]
+    fn reports_asymmetry_for_nonquadratic_rhs() {
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(6, 3, |_, _| rng.gauss());
+        let g = Mat::from_fn(6, 3, |_, _| rng.gauss()); // not a quadratic's gradients
+        let f = GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.5), None);
+        let sol = poly2_solve(&f, &g).unwrap();
+        assert!(sol.asymmetry > 1e-6, "random RHS should be asymmetric");
+    }
+
+    #[test]
+    fn rejects_wrong_kernel() {
+        use crate::kernels::SquaredExponential;
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(5, 3, |_, _| rng.gauss());
+        let g = Mat::from_fn(5, 3, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+        assert!(poly2_solve(&f, &g).is_err());
+    }
+
+    #[test]
+    fn rejects_n_bigger_than_d() {
+        let mut rng = Rng::new(6);
+        let x = Mat::from_fn(3, 5, |_, _| rng.gauss());
+        let g = Mat::from_fn(3, 5, |_, _| rng.gauss());
+        let f = GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.5), None);
+        assert!(poly2_solve(&f, &g).is_err());
+    }
+}

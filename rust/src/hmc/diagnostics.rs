@@ -1,0 +1,110 @@
+//! Chain diagnostics: moments, effective sample size, 2-D projections.
+
+use crate::linalg::Mat;
+
+/// Per-coordinate mean of a sample matrix (`D×N`, one sample per column).
+pub fn sample_mean(samples: &Mat) -> Vec<f64> {
+    let n = samples.cols().max(1) as f64;
+    samples.row_sums().iter().map(|s| s / n).collect()
+}
+
+/// Per-coordinate variance.
+pub fn sample_var(samples: &Mat) -> Vec<f64> {
+    let (d, n) = (samples.rows(), samples.cols());
+    let mean = sample_mean(samples);
+    let mut var = vec![0.0; d];
+    for j in 0..n {
+        let col = samples.col(j);
+        for i in 0..d {
+            let dv = col[i] - mean[i];
+            var[i] += dv * dv;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= n.max(1) as f64;
+    }
+    var
+}
+
+/// Effective sample size of a scalar chain via the initial-positive-sequence
+/// autocorrelation estimator (Geyer 1992).
+pub fn ess(chain: &[f64]) -> f64 {
+    let n = chain.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let mean = chain.iter().sum::<f64>() / n as f64;
+    let var = chain.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    if var <= 0.0 {
+        return n as f64;
+    }
+    let autocorr = |lag: usize| -> f64 {
+        let mut s = 0.0;
+        for t in 0..n - lag {
+            s += (chain[t] - mean) * (chain[t + lag] - mean);
+        }
+        s / (n as f64 * var)
+    };
+    // sum paired autocorrelations while positive
+    let mut tau = 1.0;
+    let mut lag = 1;
+    while lag + 1 < n / 2 {
+        let pair = autocorr(lag) + autocorr(lag + 1);
+        if pair <= 0.0 {
+            break;
+        }
+        tau += 2.0 * pair;
+        lag += 2;
+    }
+    (n as f64 / tau).min(n as f64)
+}
+
+/// Extract the `(i, j)` projection of the samples as (xs, ys) rows — what
+/// Fig. 5 plots for dimensions (0, 1).
+pub fn projection(samples: &Mat, i: usize, j: usize) -> (Vec<f64>, Vec<f64>) {
+    (samples.row(i), samples.row(j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn moments_of_known_samples() {
+        let samples = Mat::from_rows(&[&[1.0, 2.0, 3.0, 4.0], &[0.0, 0.0, 0.0, 0.0]]);
+        let mean = sample_mean(&samples);
+        assert!((mean[0] - 2.5).abs() < 1e-12);
+        assert_eq!(mean[1], 0.0);
+        let var = sample_var(&samples);
+        assert!((var[0] - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ess_of_iid_chain_close_to_n() {
+        let mut rng = Rng::new(1);
+        let chain: Vec<f64> = (0..4000).map(|_| rng.gauss()).collect();
+        let e = ess(&chain);
+        assert!(e > 2500.0, "iid ESS {e}");
+    }
+
+    #[test]
+    fn ess_of_sticky_chain_is_small() {
+        // AR(1) with strong correlation
+        let mut rng = Rng::new(2);
+        let mut chain = vec![0.0; 4000];
+        for t in 1..4000 {
+            chain[t] = 0.98 * chain[t - 1] + 0.02 * rng.gauss();
+        }
+        let e = ess(&chain);
+        assert!(e < 600.0, "sticky ESS {e}");
+    }
+
+    #[test]
+    fn projection_picks_rows() {
+        let samples = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let (xs, ys) = projection(&samples, 0, 2);
+        assert_eq!(xs, vec![1.0, 2.0]);
+        assert_eq!(ys, vec![5.0, 6.0]);
+    }
+}

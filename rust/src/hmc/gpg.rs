@@ -1,0 +1,284 @@
+//! GPG-HMC: HMC with a GP gradient surrogate (Sec. 5.3).
+//!
+//! Training procedure exactly as the paper describes: with budget
+//! `N = ⌊√D⌋`, run plain HMC until `N/2` gradient observations more than one
+//! kernel lengthscale apart have been collected; then switch to surrogate
+//! mode, querying the true `∇E` only when the chain reaches a location
+//! sufficiently far from all previous training points, until the budget is
+//! exhausted. The surrogate is a [`GradientGp`] with an isotropic RBF
+//! kernel; the acceptance step always uses the true energy, so the samples
+//! remain exact.
+
+use std::sync::Arc;
+
+use crate::gp::{FitOptions, GradientGp};
+use crate::gram::Metric;
+use crate::kernels::SquaredExponential;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+use super::{leapfrog, GradientSource, HmcConfig, HmcRun, Target, TrueGradient};
+
+/// GPG-HMC configuration.
+#[derive(Clone, Debug)]
+pub struct GpgConfig {
+    /// Gradient-observation budget (paper: `⌊√D⌋`).
+    pub budget: usize,
+    /// Squared kernel lengthscale `ℓ²` (paper: `0.4·D` aligned, `0.25·D`
+    /// rotated). The spatial-diversity threshold is `ℓ`.
+    pub lengthscale2: f64,
+    /// HMC tuning shared by both phases.
+    pub hmc: HmcConfig,
+    /// Cap on phase-1 iterations while hunting for diverse points.
+    pub max_training_iters: usize,
+}
+
+impl GpgConfig {
+    pub fn paper_defaults(d: usize, eps0: f64) -> Self {
+        GpgConfig {
+            budget: (d as f64).sqrt().floor() as usize,
+            lengthscale2: 0.4 * d as f64,
+            hmc: HmcConfig::paper_scaled(d, eps0),
+            max_training_iters: 50 * d,
+        }
+    }
+}
+
+/// Outcome of a GPG-HMC run.
+pub struct GpgRun {
+    /// The sampling-phase run (surrogate gradients).
+    pub run: HmcRun,
+    /// HMC iterations spent in the training phase (paper reports 650 ± 82).
+    pub training_iters: usize,
+    /// Acceptance rate during the training phase.
+    pub training_accept_rate: f64,
+    /// The training inputs finally conditioned on (`D×N`).
+    pub train_x: Mat,
+    /// The training gradients (`D×N`).
+    pub train_g: Mat,
+}
+
+/// GP surrogate gradient source.
+pub struct SurrogateGradient {
+    gp: GradientGp,
+    true_evals: usize,
+}
+
+impl SurrogateGradient {
+    /// Fit the surrogate on gradient observations (isotropic RBF, `ℓ²`).
+    pub fn fit(train_x: &Mat, train_g: &Mat, lengthscale2: f64) -> anyhow::Result<Self> {
+        let gp = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(1.0 / lengthscale2),
+            train_x,
+            train_g,
+            &FitOptions::default(),
+        )?;
+        Ok(SurrogateGradient { gp, true_evals: 0 })
+    }
+
+    pub fn gp(&self) -> &GradientGp {
+        &self.gp
+    }
+}
+
+impl GradientSource for SurrogateGradient {
+    fn grad(&mut self, x: &[f64]) -> Vec<f64> {
+        self.gp.predict_gradient(x)
+    }
+    fn true_grad_evals(&self) -> usize {
+        self.true_evals
+    }
+}
+
+fn min_dist(points: &[Vec<f64>], x: &[f64]) -> f64 {
+    points
+        .iter()
+        .map(|p| p.iter().zip(x).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt())
+        .fold(f64::MAX, f64::min)
+}
+
+/// Run the full GPG-HMC procedure: train (Sec. 5.3) then sample.
+pub fn run_gpg_hmc(
+    target: &dyn Target,
+    x0: &[f64],
+    n_samples: usize,
+    cfg: &GpgConfig,
+    rng: &mut Rng,
+) -> anyhow::Result<GpgRun> {
+    let d = target.dim();
+    let ell = cfg.lengthscale2.sqrt();
+    let budget = cfg.budget.max(2);
+    let phase1_quota = budget / 2;
+
+    let mut train_x: Vec<Vec<f64>> = Vec::with_capacity(budget);
+    let mut train_g: Vec<Vec<f64>> = Vec::with_capacity(budget);
+    let mut x = x0.to_vec();
+    let mut e_x = target.energy(&x);
+    let mut training_iters = 0usize;
+    let mut training_accepts = 0usize;
+    let mut true_evals_training = 0usize;
+
+    // consider the start point
+    train_x.push(x.clone());
+    train_g.push(target.grad_energy(&x));
+    true_evals_training += 1;
+
+    // ---- phase 1: plain HMC until N/2 diverse points collected ----
+    {
+        let mut tg = TrueGradient::new(target);
+        while train_x.len() < phase1_quota && training_iters < cfg.max_training_iters {
+            let p: Vec<f64> = (0..d).map(|_| rng.gauss() * cfg.hmc.mass.sqrt()).collect();
+            let h0 = e_x + 0.5 * p.iter().map(|v| v * v).sum::<f64>() / cfg.hmc.mass;
+            let (x_new, p_new) = leapfrog(&mut tg, &x, &p, &cfg.hmc);
+            let e_new = target.energy(&x_new);
+            let h_new = e_new + 0.5 * p_new.iter().map(|v| v * v).sum::<f64>() / cfg.hmc.mass;
+            if rng.uniform() < (h0 - h_new).exp() {
+                x = x_new;
+                e_x = e_new;
+                training_accepts += 1;
+            }
+            training_iters += 1;
+            if min_dist(&train_x, &x) > ell {
+                train_x.push(x.clone());
+                train_g.push(target.grad_energy(&x));
+                true_evals_training += 1;
+            }
+        }
+        true_evals_training += tg.true_grad_evals();
+    }
+
+    // ---- phase 2: surrogate-driven HMC, query true ∇E only at new
+    //      sufficiently-distant locations, until the budget is reached ----
+    let to_mat = |cols: &[Vec<f64>]| {
+        let mut m = Mat::zeros(d, cols.len());
+        for (j, c) in cols.iter().enumerate() {
+            m.set_col(j, c);
+        }
+        m
+    };
+    let mut surrogate =
+        SurrogateGradient::fit(&to_mat(&train_x), &to_mat(&train_g), cfg.lengthscale2)?;
+    while train_x.len() < budget && training_iters < cfg.max_training_iters {
+        let p: Vec<f64> = (0..d).map(|_| rng.gauss() * cfg.hmc.mass.sqrt()).collect();
+        let h0 = e_x + 0.5 * p.iter().map(|v| v * v).sum::<f64>() / cfg.hmc.mass;
+        let (x_new, p_new) = leapfrog(&mut surrogate, &x, &p, &cfg.hmc);
+        let e_new = target.energy(&x_new);
+        let h_new = e_new + 0.5 * p_new.iter().map(|v| v * v).sum::<f64>() / cfg.hmc.mass;
+        if rng.uniform() < (h0 - h_new).exp() {
+            x = x_new;
+            e_x = e_new;
+            training_accepts += 1;
+        }
+        training_iters += 1;
+        if min_dist(&train_x, &x) > ell {
+            train_x.push(x.clone());
+            train_g.push(target.grad_energy(&x));
+            true_evals_training += 1;
+            surrogate =
+                SurrogateGradient::fit(&to_mat(&train_x), &to_mat(&train_g), cfg.lengthscale2)?;
+        }
+    }
+
+    // ---- sampling phase: fixed surrogate ----
+    let tx = to_mat(&train_x);
+    let tg_m = to_mat(&train_g);
+    let mut run = super::run_hmc(target, &mut surrogate, &x, n_samples, &cfg.hmc, rng);
+    run.true_grad_evals = true_evals_training;
+    Ok(GpgRun {
+        run,
+        training_iters,
+        training_accept_rate: training_accepts as f64 / training_iters.max(1) as f64,
+        train_x: tx,
+        train_g: tg_m,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmc::Banana;
+
+    #[test]
+    fn collects_budget_and_samples() {
+        let d = 16; // budget = 4
+        let t = Banana::new(d);
+        let cfg = GpgConfig {
+            budget: 4,
+            lengthscale2: 0.4 * d as f64,
+            hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 16, mass: 1.0 },
+            max_training_iters: 4000,
+        };
+        let mut rng = Rng::new(1);
+        let x0 = rng.gauss_vec(d);
+        let out = run_gpg_hmc(&t, &x0, 300, &cfg, &mut rng).unwrap();
+        assert!(out.train_x.cols() >= 2, "too few training points");
+        assert!(out.train_x.cols() <= 4);
+        assert_eq!(out.run.samples.cols(), 300);
+        // true-gradient budget: phase-1 leapfrog + one query per training
+        // point — far fewer than plain HMC's (T+1) per iteration over the
+        // whole run (the paper's headline saving).
+        assert!(out.run.true_grad_evals >= out.train_x.cols());
+        let plain_hmc_cost = (out.training_iters + 300) * (cfg.hmc.leapfrog_steps + 1);
+        assert!(
+            out.run.true_grad_evals * 5 < plain_hmc_cost,
+            "surrogate saved too little: {} vs {}",
+            out.run.true_grad_evals,
+            plain_hmc_cost
+        );
+        assert!(out.run.accept_rate > 0.05, "acceptance {}", out.run.accept_rate);
+    }
+
+    #[test]
+    fn training_points_are_spatially_diverse() {
+        let d = 16;
+        let t = Banana::new(d);
+        let cfg = GpgConfig {
+            budget: 4,
+            lengthscale2: 0.4 * d as f64,
+            hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 16, mass: 1.0 },
+            max_training_iters: 4000,
+        };
+        let mut rng = Rng::new(2);
+        let x0 = rng.gauss_vec(d);
+        let out = run_gpg_hmc(&t, &x0, 50, &cfg, &mut rng).unwrap();
+        let ell = cfg.lengthscale2.sqrt();
+        let n = out.train_x.cols();
+        for a in 0..n {
+            for b in 0..a {
+                let dist: f64 = (0..d)
+                    .map(|i| (out.train_x[(i, a)] - out.train_x[(i, b)]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(dist > 0.5 * ell, "train points {a},{b} too close: {dist} vs ℓ = {ell}");
+            }
+        }
+    }
+
+    #[test]
+    fn surrogate_gradient_close_to_truth_near_training_points() {
+        let d = 9;
+        let t = Banana::new(d);
+        let cfg = GpgConfig {
+            budget: 3,
+            lengthscale2: 0.4 * d as f64,
+            hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 12, mass: 1.0 },
+            max_training_iters: 3000,
+        };
+        let mut rng = Rng::new(3);
+        let x0 = rng.gauss_vec(d);
+        let out = run_gpg_hmc(&t, &x0, 10, &cfg, &mut rng).unwrap();
+        let mut sur = SurrogateGradient::fit(&out.train_x, &out.train_g, cfg.lengthscale2).unwrap();
+        for b in 0..out.train_x.cols() {
+            let xq = out.train_x.col(b).to_vec();
+            let pred = sur.grad(&xq);
+            let truth = t.grad_energy(&xq);
+            for i in 0..d {
+                assert!(
+                    (pred[i] - truth[i]).abs() < 1e-6 * (1.0 + truth[i].abs()),
+                    "interpolation broken at train point {b}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Hamiltonian Monte Carlo with GP gradient surrogates (Sec. 4.3 / 5.3).
+//!
+//! * [`run_hmc`] — standard HMC (Alg. 3) over a [`Target`], with a pluggable
+//!   [`GradientSource`] for the leapfrog trajectories,
+//! * [`run_gpg_hmc`] — GPG-HMC: the two-phase training procedure of Sec. 5.3
+//!   followed by surrogate-driven sampling,
+//! * [`Banana`] — the 100-D banana density of Eq. 30 (+ random [`Rotated`]
+//!   variants), and chain [`diagnostics`].
+
+pub mod diagnostics;
+mod gpg;
+mod sampler;
+mod target;
+
+pub use gpg::{run_gpg_hmc, GpgConfig, GpgRun, SurrogateGradient};
+pub use sampler::{leapfrog, run_hmc, GradientSource, HmcConfig, HmcRun, TrueGradient};
+pub use target::{Banana, Rotated, StdGaussian, Target};

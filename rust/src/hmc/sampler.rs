@@ -1,0 +1,237 @@
+//! Hamiltonian Monte Carlo (Alg. 3) with a pluggable gradient source.
+//!
+//! The acceptance test always queries the **true** potential energy `E`, so
+//! the chain remains a valid sampler of `e^{−E}` even when the leapfrog
+//! trajectories are driven by a surrogate gradient (Sec. 5.3) — surrogate
+//! error only costs acceptance rate, never correctness.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+use super::Target;
+
+/// Where the leapfrog integrator gets `∇E` from.
+pub trait GradientSource {
+    fn grad(&mut self, x: &[f64]) -> Vec<f64>;
+    /// Number of *true* target-gradient evaluations consumed so far.
+    fn true_grad_evals(&self) -> usize;
+}
+
+/// The exact gradient of the target.
+pub struct TrueGradient<'a> {
+    target: &'a dyn Target,
+    evals: usize,
+}
+
+impl<'a> TrueGradient<'a> {
+    pub fn new(target: &'a dyn Target) -> Self {
+        TrueGradient { target, evals: 0 }
+    }
+}
+
+impl GradientSource for TrueGradient<'_> {
+    fn grad(&mut self, x: &[f64]) -> Vec<f64> {
+        self.evals += 1;
+        self.target.grad_energy(x)
+    }
+    fn true_grad_evals(&self) -> usize {
+        self.evals
+    }
+}
+
+/// HMC tuning parameters (App. F.3 conventions).
+#[derive(Clone, Debug)]
+pub struct HmcConfig {
+    /// Leapfrog step size `ε`.
+    pub step_size: f64,
+    /// Leapfrog steps per proposal `T`.
+    pub leapfrog_steps: usize,
+    /// Particle mass `m` (paper: 1).
+    pub mass: f64,
+}
+
+impl HmcConfig {
+    /// The paper's dimension scaling: `ε = ε₀/⌈D^¼⌉`, `T = 32·⌈D^¼⌉`
+    /// (App. F.3, following Neal 2011). `ε₀` is left as a parameter; see
+    /// EXPERIMENTS.md for the calibration discussion.
+    pub fn paper_scaled(d: usize, eps0: f64) -> Self {
+        let s = (d as f64).powf(0.25).ceil();
+        HmcConfig { step_size: eps0 / s, leapfrog_steps: (32.0 * s) as usize, mass: 1.0 }
+    }
+}
+
+/// Outcome of an HMC run.
+pub struct HmcRun {
+    /// Retained samples, one per column (`D×n_samples`).
+    pub samples: Mat,
+    /// Fraction of proposals accepted.
+    pub accept_rate: f64,
+    /// Energy evaluations (always true-target queries).
+    pub energy_evals: usize,
+    /// True-gradient evaluations consumed by the gradient source.
+    pub true_grad_evals: usize,
+    /// Final state of the chain.
+    pub x_final: Vec<f64>,
+}
+
+/// One leapfrog trajectory: returns the proposal `(x_new, p_new)`.
+pub fn leapfrog(
+    grad: &mut dyn GradientSource,
+    x: &[f64],
+    p: &[f64],
+    cfg: &HmcConfig,
+) -> (Vec<f64>, Vec<f64>) {
+    let d = x.len();
+    let eps = cfg.step_size;
+    let mut xq = x.to_vec();
+    let mut pq = p.to_vec();
+    // half kick
+    let g = grad.grad(&xq);
+    for i in 0..d {
+        pq[i] -= 0.5 * eps * g[i];
+    }
+    for t in 0..cfg.leapfrog_steps {
+        // drift
+        for i in 0..d {
+            xq[i] += eps * pq[i] / cfg.mass;
+        }
+        // kick (full inside, half at the end)
+        let g = grad.grad(&xq);
+        let scale = if t + 1 == cfg.leapfrog_steps { 0.5 } else { 1.0 };
+        for i in 0..d {
+            pq[i] -= scale * eps * g[i];
+        }
+    }
+    (xq, pq)
+}
+
+/// Run `n_samples` HMC iterations from `x0` (Alg. 3). Every iteration
+/// appends the current state to the sample set (including rejections, as
+/// standard MCMC does).
+pub fn run_hmc(
+    target: &dyn Target,
+    grad: &mut dyn GradientSource,
+    x0: &[f64],
+    n_samples: usize,
+    cfg: &HmcConfig,
+    rng: &mut Rng,
+) -> HmcRun {
+    let d = target.dim();
+    assert_eq!(x0.len(), d);
+    let mut x = x0.to_vec();
+    let mut e_x = target.energy(&x);
+    let mut energy_evals = 1;
+    let mut samples = Mat::zeros(d, n_samples);
+    let mut accepted = 0usize;
+
+    for s in 0..n_samples {
+        let p: Vec<f64> = (0..d).map(|_| rng.gauss() * cfg.mass.sqrt()).collect();
+        let h0 = e_x + 0.5 * p.iter().map(|v| v * v).sum::<f64>() / cfg.mass;
+        let (x_new, p_new) = leapfrog(grad, &x, &p, cfg);
+        let e_new = target.energy(&x_new);
+        energy_evals += 1;
+        let h_new = e_new + 0.5 * p_new.iter().map(|v| v * v).sum::<f64>() / cfg.mass;
+        let dh = h_new - h0;
+        if rng.uniform() < (-dh).exp() {
+            x = x_new;
+            e_x = e_new;
+            accepted += 1;
+        }
+        samples.set_col(s, &x);
+    }
+    HmcRun {
+        samples,
+        accept_rate: accepted as f64 / n_samples.max(1) as f64,
+        energy_evals,
+        true_grad_evals: grad.true_grad_evals(),
+        x_final: x,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmc::{Banana, StdGaussian};
+
+    #[test]
+    fn leapfrog_conserves_energy_for_small_steps() {
+        let t = StdGaussian::new(4, 1.0);
+        let mut g = TrueGradient::new(&t);
+        let cfg = HmcConfig { step_size: 1e-3, leapfrog_steps: 100, mass: 1.0 };
+        let x = vec![1.0, -0.5, 0.3, 0.8];
+        let p = vec![0.2, 0.4, -0.7, 0.1];
+        let h0 = t.energy(&x) + 0.5 * p.iter().map(|v| v * v).sum::<f64>();
+        let (xn, pn) = leapfrog(&mut g, &x, &p, &cfg);
+        let h1 = t.energy(&xn) + 0.5 * pn.iter().map(|v| v * v).sum::<f64>();
+        assert!((h1 - h0).abs() < 1e-5, "ΔH = {}", h1 - h0);
+    }
+
+    #[test]
+    fn leapfrog_is_reversible() {
+        let t = StdGaussian::new(3, 1.0);
+        let mut g = TrueGradient::new(&t);
+        let cfg = HmcConfig { step_size: 0.05, leapfrog_steps: 20, mass: 1.0 };
+        let x = vec![0.5, -0.2, 1.1];
+        let p = vec![0.3, 0.9, -0.4];
+        let (xn, pn) = leapfrog(&mut g, &x, &p, &cfg);
+        // integrate back with negated momentum
+        let pneg: Vec<f64> = pn.iter().map(|v| -v).collect();
+        let (xb, pb) = leapfrog(&mut g, &xn, &pneg, &cfg);
+        for i in 0..3 {
+            assert!((xb[i] - x[i]).abs() < 1e-10, "x not reversed");
+            assert!((pb[i] + p[i]).abs() < 1e-10, "p not reversed");
+        }
+    }
+
+    #[test]
+    fn hmc_samples_gaussian_with_correct_moments() {
+        let t = StdGaussian::new(4, 1.0);
+        let mut g = TrueGradient::new(&t);
+        // trajectory length 1.5 — deliberately away from the resonant π/2π
+        // lengths where leapfrog degenerates to x ↦ ±x for Gaussians.
+        let cfg = HmcConfig { step_size: 0.3, leapfrog_steps: 5, mass: 1.0 };
+        let mut rng = Rng::new(11);
+        let run = run_hmc(&t, &mut g, &vec![0.0; 4], 4000, &cfg, &mut rng);
+        assert!(run.accept_rate > 0.8, "acceptance {}", run.accept_rate);
+        // per-coordinate mean ≈ 0, var ≈ 1
+        for i in 0..4 {
+            let row = run.samples.row(i);
+            let mean = row.iter().sum::<f64>() / row.len() as f64;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / row.len() as f64;
+            assert!(mean.abs() < 0.12, "dim {i} mean {mean}");
+            assert!((var - 1.0).abs() < 0.25, "dim {i} var {var}");
+        }
+    }
+
+    #[test]
+    fn hmc_on_banana_explores_both_tails() {
+        let t = Banana::new(5);
+        let mut g = TrueGradient::new(&t);
+        let cfg = HmcConfig { step_size: 0.12, leapfrog_steps: 24, mass: 1.0 };
+        let mut rng = Rng::new(3);
+        let run = run_hmc(&t, &mut g, &vec![0.1; 5], 3000, &cfg, &mut rng);
+        assert!(run.accept_rate > 0.5);
+        let x0_row = run.samples.row(0);
+        let min = x0_row.iter().cloned().fold(f64::MAX, f64::min);
+        let max = x0_row.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(min < -0.5 && max > 0.5, "x₁ range [{min}, {max}] too narrow");
+    }
+
+    #[test]
+    fn zero_step_size_never_rejects() {
+        // degenerate integrator: proposal = start ⇒ ΔH = 0 ⇒ always accept
+        let t = StdGaussian::new(3, 1.0);
+        let mut g = TrueGradient::new(&t);
+        let cfg = HmcConfig { step_size: 0.0, leapfrog_steps: 4, mass: 1.0 };
+        let mut rng = Rng::new(4);
+        let run = run_hmc(&t, &mut g, &vec![0.3; 3], 100, &cfg, &mut rng);
+        assert_eq!(run.accept_rate, 1.0);
+    }
+
+    #[test]
+    fn paper_scaling_for_d100() {
+        let cfg = HmcConfig::paper_scaled(100, 4e-3);
+        assert_eq!(cfg.leapfrog_steps, 128);
+        assert!((cfg.step_size - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,197 @@
+//! Sampling targets: the paper's banana density (Eq. 30) and helpers.
+
+use crate::linalg::Mat;
+
+/// An unnormalized target density through its potential energy
+/// `E(x) = −log P(x)` and gradient.
+pub trait Target: Send + Sync {
+    fn dim(&self) -> usize;
+    fn energy(&self, x: &[f64]) -> f64;
+    fn grad_energy(&self, x: &[f64]) -> Vec<f64>;
+}
+
+/// The 100-dimensional banana target of App. F.3:
+///
+/// ```text
+/// E(x) = ½ (x₁² + (a₀x₁² + a₁x₂ + a₂)² + Σ_{i≥3} aᵢxᵢ²),   a = [2, −2, 2, …, 2]
+/// ```
+///
+/// banana-shaped in `(x₁, x₂)`, Gaussian with variance ½ elsewhere.
+pub struct Banana {
+    d: usize,
+    a: Vec<f64>,
+}
+
+impl Banana {
+    /// Paper parameterization `a = [2, −2, 2, …, 2]`.
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 3);
+        let mut a = vec![2.0; d];
+        a[1] = -2.0;
+        Banana { d, a }
+    }
+
+    /// Custom parameter vector.
+    pub fn with_params(d: usize, a: Vec<f64>) -> Self {
+        assert!(d >= 3 && a.len() == d);
+        Banana { d, a }
+    }
+
+    fn t(&self, x: &[f64]) -> f64 {
+        self.a[0] * x[0] * x[0] + self.a[1] * x[1] + self.a[2]
+    }
+}
+
+impl Target for Banana {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn energy(&self, x: &[f64]) -> f64 {
+        let t = self.t(x);
+        let mut e = x[0] * x[0] + t * t;
+        for i in 2..self.d {
+            // note: the paper indexes aᵢxᵢ² from i = 3 (1-based) — the third
+            // coordinate onwards; a₂ (0-based index 2) doubles as the shift
+            // inside t. We follow Eq. 30 literally: shift a₂ and quadratic
+            // coefficients a₃… (0-based: a[2] used in t, a[i] for i ≥ 2 on x_i).
+            if i >= 2 {
+                e += self.a[i.min(self.a.len() - 1)] * x[i] * x[i];
+            }
+        }
+        0.5 * e
+    }
+
+    fn grad_energy(&self, x: &[f64]) -> Vec<f64> {
+        let t = self.t(x);
+        let mut g = vec![0.0; self.d];
+        g[0] = x[0] + 2.0 * self.a[0] * x[0] * t;
+        g[1] = self.a[1] * t;
+        for i in 2..self.d {
+            g[i] = self.a[i.min(self.a.len() - 1)] * x[i];
+        }
+        g
+    }
+}
+
+/// Target rotated by an orthonormal matrix: `E_R(x) = E(Rx)` (Sec. 5.3's
+/// "10 arbitrary rotations" experiment — breaks the alignment between the
+/// isotropic kernel and the intrinsic coordinates).
+pub struct Rotated<T: Target> {
+    inner: T,
+    r: Mat,
+}
+
+impl<T: Target> Rotated<T> {
+    pub fn new(inner: T, r: Mat) -> Self {
+        assert_eq!(r.rows(), inner.dim());
+        assert!(r.is_square());
+        Rotated { inner, r }
+    }
+}
+
+impl<T: Target> Target for Rotated<T> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn energy(&self, x: &[f64]) -> f64 {
+        self.inner.energy(&self.r.matvec(x))
+    }
+    fn grad_energy(&self, x: &[f64]) -> Vec<f64> {
+        let rx = self.r.matvec(x);
+        let g = self.inner.grad_energy(&rx);
+        self.r.t_matvec(&g)
+    }
+}
+
+/// Isotropic Gaussian `N(0, σ²I)` (test target with known statistics).
+pub struct StdGaussian {
+    d: usize,
+    pub sigma2: f64,
+}
+
+impl StdGaussian {
+    pub fn new(d: usize, sigma2: f64) -> Self {
+        StdGaussian { d, sigma2 }
+    }
+}
+
+impl Target for StdGaussian {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn energy(&self, x: &[f64]) -> f64 {
+        0.5 * x.iter().map(|v| v * v).sum::<f64>() / self.sigma2
+    }
+    fn grad_energy(&self, x: &[f64]) -> Vec<f64> {
+        x.iter().map(|v| v / self.sigma2).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthogonal;
+    use crate::rng::Rng;
+
+    fn fd_grad(t: &dyn Target, x: &[f64]) -> Vec<f64> {
+        let h = 1e-6;
+        (0..x.len())
+            .map(|i| {
+                let mut xp = x.to_vec();
+                let mut xm = x.to_vec();
+                xp[i] += h;
+                xm[i] -= h;
+                (t.energy(&xp) - t.energy(&xm)) / (2.0 * h)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn banana_gradient_matches_fd() {
+        let b = Banana::new(6);
+        let x = [0.4, -1.2, 0.3, 0.8, -0.5, 0.1];
+        let g = b.grad_energy(&x);
+        let fd = fd_grad(&b, &x);
+        for i in 0..6 {
+            assert!((g[i] - fd[i]).abs() < 1e-5 * (1.0 + fd[i].abs()), "dim {i}");
+        }
+    }
+
+    #[test]
+    fn rotated_gradient_matches_fd() {
+        let mut rng = Rng::new(1);
+        let r = random_orthogonal(5, &mut rng);
+        let t = Rotated::new(Banana::new(5), r);
+        let x = [0.2, 0.7, -0.4, 0.9, -0.3];
+        let g = t.grad_energy(&x);
+        let fd = fd_grad(&t, &x);
+        for i in 0..5 {
+            assert!((g[i] - fd[i]).abs() < 1e-5 * (1.0 + fd[i].abs()), "dim {i}");
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_energy_distribution() {
+        // E_R(x) = E(Rx): energies agree on rotated points
+        let mut rng = Rng::new(2);
+        let r = random_orthogonal(4, &mut rng);
+        let base = Banana::new(4);
+        let rot = Rotated::new(Banana::new(4), r.clone());
+        let x = [0.5, -0.2, 0.8, 0.1];
+        let rx = r.matvec(&x);
+        assert!((rot.energy(&x) - base.energy(&rx)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_tail_coordinates_have_half_variance_energy() {
+        // coordinates i ≥ 3 contribute ½·2·x² = x² ⇒ variance ½ densities
+        let b = Banana::new(5);
+        let zero = vec![0.0; 5];
+        let mut x = zero.clone();
+        x[4] = 1.5;
+        // relative to the baseline E(0) (the t-offset a₂ contributes there)
+        let de = b.energy(&x) - b.energy(&zero);
+        assert!((de - 1.5 * 1.5).abs() < 1e-12, "tail energy increment {de}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Dot-product kernels (Table 1): `r = (x_a − c)ᵀ Λ (x_b − c)`.
+
+use super::{KernelClass, ScalarKernel};
+
+/// Polynomial kernel of degree `p ≥ 2`, normalized as in the paper's Table 1:
+/// `k(r) = rᵖ / (p(p−1))` so that `k″(r) = r^{p−2}`.
+#[derive(Clone, Debug)]
+pub struct PolynomialKernel {
+    p: u32,
+}
+
+impl PolynomialKernel {
+    pub fn new(p: u32) -> Self {
+        assert!(p >= 2, "polynomial kernel needs degree >= 2 for gradient inference");
+        PolynomialKernel { p }
+    }
+
+    pub fn degree(&self) -> u32 {
+        self.p
+    }
+}
+
+/// r^e with integer e, defined as 0 for negative exponents at r = 0 handled
+/// by the caller (the Gram code never evaluates k‴ of poly(2) at r=0 where
+/// it would be discontinuous — it is identically 0).
+fn powi(r: f64, e: i64) -> f64 {
+    if e < 0 {
+        // Negative powers only arise for p < 3 in d3k, where the coefficient
+        // is zero; return 0 to keep the product well-defined.
+        0.0
+    } else {
+        r.powi(e as i32)
+    }
+}
+
+impl ScalarKernel for PolynomialKernel {
+    fn class(&self) -> KernelClass {
+        KernelClass::DotProduct
+    }
+    fn k(&self, r: f64) -> f64 {
+        let p = self.p as f64;
+        powi(r, self.p as i64) / (p * (p - 1.0))
+    }
+    fn dk(&self, r: f64) -> f64 {
+        let p = self.p as f64;
+        powi(r, self.p as i64 - 1) / (p - 1.0)
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        powi(r, self.p as i64 - 2)
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        let e = self.p as i64 - 3;
+        if self.p <= 2 {
+            0.0
+        } else {
+            (self.p as f64 - 2.0) * powi(r, e)
+        }
+    }
+    fn name(&self) -> &'static str {
+        "polynomial"
+    }
+}
+
+/// Second-order polynomial kernel `k(r) = r²/2` — the probabilistic
+/// linear-algebra kernel of Sec. 4.2 (`k′ = r`, `k″ = 1`, `k‴ = 0`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Poly2Kernel;
+
+impl ScalarKernel for Poly2Kernel {
+    fn class(&self) -> KernelClass {
+        KernelClass::DotProduct
+    }
+    fn k(&self, r: f64) -> f64 {
+        0.5 * r * r
+    }
+    fn dk(&self, r: f64) -> f64 {
+        r
+    }
+    fn d2k(&self, _r: f64) -> f64 {
+        1.0
+    }
+    fn d3k(&self, _r: f64) -> f64 {
+        0.0
+    }
+    fn name(&self) -> &'static str {
+        "poly2"
+    }
+}
+
+/// Exponential / Taylor kernel `k(r) = exp(r)` (all derivatives equal).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExponentialKernel;
+
+impl ScalarKernel for ExponentialKernel {
+    fn class(&self) -> KernelClass {
+        KernelClass::DotProduct
+    }
+    fn k(&self, r: f64) -> f64 {
+        r.exp()
+    }
+    fn dk(&self, r: f64) -> f64 {
+        r.exp()
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        r.exp()
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        r.exp()
+    }
+    fn name(&self) -> &'static str {
+        "exponential"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::fd::check_derivatives;
+
+    const RS: &[f64] = &[-1.5, -0.3, 0.2, 0.9, 2.4, 7.0];
+
+    #[test]
+    fn poly2_derivatives_match_fd() {
+        check_derivatives(&Poly2Kernel, RS, 1e-6);
+    }
+
+    #[test]
+    fn poly2_matches_general_polynomial() {
+        let gen = PolynomialKernel::new(2);
+        for &r in RS {
+            assert!((gen.k(r) - Poly2Kernel.k(r)).abs() < 1e-14);
+            assert!((gen.dk(r) - Poly2Kernel.dk(r)).abs() < 1e-14);
+            assert!((gen.d2k(r) - Poly2Kernel.d2k(r)).abs() < 1e-14);
+            assert!((gen.d3k(r) - Poly2Kernel.d3k(r)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn poly3_poly5_derivatives_match_fd() {
+        // positive r only: odd powers of negative r are fine too but keep
+        // away from r=0 where high-order FD loses accuracy.
+        let rs = [0.3, 1.1, 2.0, 4.5];
+        check_derivatives(&PolynomialKernel::new(3), &rs, 1e-5);
+        check_derivatives(&PolynomialKernel::new(5), &rs, 1e-5);
+    }
+
+    #[test]
+    fn exponential_derivatives_match_fd() {
+        check_derivatives(&ExponentialKernel, RS, 1e-6);
+    }
+
+    #[test]
+    fn table1_normalization() {
+        // Table 1: k''(r) = r^{p-2}
+        let k = PolynomialKernel::new(4);
+        assert!((k.d2k(3.0) - 9.0).abs() < 1e-12);
+        assert!((k.dk(3.0) - 27.0 / 3.0).abs() < 1e-12);
+        assert!((k.k(3.0) - 81.0 / 12.0).abs() < 1e-12);
+    }
+}

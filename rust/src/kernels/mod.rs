@@ -1,0 +1,89 @@
+//! Kernel zoo: scalarized kernels `k(r)` and their derivatives.
+//!
+//! Every kernel the paper touches is expressible as a scalar function of
+//! `r(x_a, x_b)` (Def. 2):
+//!
+//! * dot-product kernels: `r = (x_a − c)ᵀ Λ (x_b − c)`   (Table 1),
+//! * stationary kernels:  `r = (x_a − x_b)ᵀ Λ (x_a − x_b)` (Table 2 — note
+//!   `r` is the *squared* scaled distance).
+//!
+//! The Gram decomposition only ever needs the scalar derivatives
+//! `k(r), k′(r), k″(r)` (and `k‴(r)` for Hessian inference, App. D), which is
+//! what [`ScalarKernel`] provides.
+
+mod dot;
+mod matern_general;
+mod stationary;
+
+pub use dot::{ExponentialKernel, Poly2Kernel, PolynomialKernel};
+pub use matern_general::MaternHalfInteger;
+pub use stationary::{Matern12, Matern32, Matern52, RationalQuadratic, SquaredExponential};
+
+/// Which scalarization `r(x_a, x_b)` the kernel uses; drives the block
+/// structure of the Gram matrix (Sec. 2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelClass {
+    /// `r = (x_a − c)ᵀ Λ (x_b − c)`.
+    DotProduct,
+    /// `r = (x_a − x_b)ᵀ Λ (x_a − x_b)`.
+    Stationary,
+}
+
+/// A kernel as a scalar function of `r` with derivatives up to third order.
+pub trait ScalarKernel: Send + Sync {
+    /// Kernel class (decides how `r` is formed and how blocks decompose).
+    fn class(&self) -> KernelClass;
+    /// `k(r)`.
+    fn k(&self, r: f64) -> f64;
+    /// `∂k/∂r`.
+    fn dk(&self, r: f64) -> f64;
+    /// `∂²k/∂r²`.
+    fn d2k(&self, r: f64) -> f64;
+    /// `∂³k/∂r³` (needed only for Hessian inference, Eq. 11/12).
+    fn d3k(&self, r: f64) -> f64;
+    /// Stable display name (used by configs and logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Finite-difference check utilities shared by the per-kernel tests.
+#[cfg(test)]
+pub(crate) mod fd {
+    use super::ScalarKernel;
+
+    /// central finite difference of a scalar function
+    pub fn fdiff(f: impl Fn(f64) -> f64, x: f64, h: f64) -> f64 {
+        (f(x + h) - f(x - h)) / (2.0 * h)
+    }
+
+    /// Assert k′, k″, k‴ match finite differences of k at the given points.
+    pub fn check_derivatives(kern: &dyn ScalarKernel, rs: &[f64], tol: f64) {
+        for &r in rs {
+            let h = (r.abs().max(1e-2)) * 1e-5;
+            let dk_fd = fdiff(|x| kern.k(x), r, h);
+            let d2k_fd = fdiff(|x| kern.dk(x), r, h);
+            let d3k_fd = fdiff(|x| kern.d2k(x), r, h);
+            let scale = |v: f64| v.abs().max(1.0);
+            assert!(
+                (kern.dk(r) - dk_fd).abs() / scale(dk_fd) < tol,
+                "{}: k'({r}) = {} vs fd {}",
+                kern.name(),
+                kern.dk(r),
+                dk_fd
+            );
+            assert!(
+                (kern.d2k(r) - d2k_fd).abs() / scale(d2k_fd) < tol,
+                "{}: k''({r}) = {} vs fd {}",
+                kern.name(),
+                kern.d2k(r),
+                d2k_fd
+            );
+            assert!(
+                (kern.d3k(r) - d3k_fd).abs() / scale(d3k_fd) < tol,
+                "{}: k'''({r}) = {} vs fd {}",
+                kern.name(),
+                kern.d3k(r),
+                d3k_fd
+            );
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Stationary kernels (Table 2): `r = (x_a − x_b)ᵀ Λ (x_a − x_b)`.
+//!
+//! Note the paper's convention: `r` is the *squared* scaled distance, so the
+//! familiar isotropic RBF with lengthscale `ℓ` is `Λ = ℓ⁻²I`, `k(r) = e^{−r/2}`.
+//!
+//! Smoothness caveat inherited from the paper: Matérn ν=1/2 has `k′(r) → −∞`
+//! as `r → 0`, i.e. its sample paths are not differentiable; it is provided
+//! for completeness (Table 2) and can be conditioned on gradients only at
+//! strictly distinct points with the diagonal-block guard in [`crate::gram`].
+
+use super::{KernelClass, ScalarKernel};
+
+/// Squared-exponential (RBF / exponentiated quadratic): `k(r) = e^{−r/2}`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SquaredExponential;
+
+impl ScalarKernel for SquaredExponential {
+    fn class(&self) -> KernelClass {
+        KernelClass::Stationary
+    }
+    fn k(&self, r: f64) -> f64 {
+        (-r / 2.0).exp()
+    }
+    fn dk(&self, r: f64) -> f64 {
+        -0.5 * self.k(r)
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        0.25 * self.k(r)
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        -0.125 * self.k(r)
+    }
+    fn name(&self) -> &'static str {
+        "squared_exponential"
+    }
+}
+
+/// Matérn ν = 1/2 (Ornstein–Uhlenbeck): `k(r) = e^{−√r}`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Matern12;
+
+impl ScalarKernel for Matern12 {
+    fn class(&self) -> KernelClass {
+        KernelClass::Stationary
+    }
+    fn k(&self, r: f64) -> f64 {
+        (-r.sqrt()).exp()
+    }
+    fn dk(&self, r: f64) -> f64 {
+        let s = r.sqrt();
+        -(-s).exp() / (2.0 * s)
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        let s = r.sqrt();
+        (-s).exp() * (s + 1.0) / (4.0 * s * s * s)
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        let s = r.sqrt();
+        -(-s).exp() * (s * s + 3.0 * s + 3.0) / (8.0 * s.powi(5))
+    }
+    fn name(&self) -> &'static str {
+        "matern12"
+    }
+}
+
+/// Matérn ν = 3/2: `k(r) = (1 + √(3r)) e^{−√(3r)}`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Matern32;
+
+impl ScalarKernel for Matern32 {
+    fn class(&self) -> KernelClass {
+        KernelClass::Stationary
+    }
+    fn k(&self, r: f64) -> f64 {
+        let u = (3.0 * r).sqrt();
+        (1.0 + u) * (-u).exp()
+    }
+    fn dk(&self, r: f64) -> f64 {
+        // dk/dr = −(3/2) e^{−u},  u = √(3r); finite at r = 0.
+        let u = (3.0 * r).sqrt();
+        -1.5 * (-u).exp()
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        let u = (3.0 * r).sqrt();
+        2.25 * (-u).exp() / u
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        let u = (3.0 * r).sqrt();
+        -3.375 * (-u).exp() * (u + 1.0) / (u * u * u)
+    }
+    fn name(&self) -> &'static str {
+        "matern32"
+    }
+}
+
+/// Matérn ν = 5/2: `k(r) = (1 + √(5r) + 5r/3) e^{−√(5r)}`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Matern52;
+
+impl ScalarKernel for Matern52 {
+    fn class(&self) -> KernelClass {
+        KernelClass::Stationary
+    }
+    fn k(&self, r: f64) -> f64 {
+        let u = (5.0 * r).sqrt();
+        (1.0 + u + u * u / 3.0) * (-u).exp()
+    }
+    fn dk(&self, r: f64) -> f64 {
+        // dk/dr = −(5/6)(1 + u) e^{−u}; finite at r = 0.
+        let u = (5.0 * r).sqrt();
+        -(5.0 / 6.0) * (1.0 + u) * (-u).exp()
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        // k″ = (25/12) e^{−u}; finite everywhere.
+        let u = (5.0 * r).sqrt();
+        (25.0 / 12.0) * (-u).exp()
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        let u = (5.0 * r).sqrt();
+        -(125.0 / 24.0) * (-u).exp() / u
+    }
+    fn name(&self) -> &'static str {
+        "matern52"
+    }
+}
+
+/// Rational quadratic: `k(r) = (1 + r/(2α))^{−α}`.
+#[derive(Clone, Copy, Debug)]
+pub struct RationalQuadratic {
+    pub alpha: f64,
+}
+
+impl RationalQuadratic {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0);
+        RationalQuadratic { alpha }
+    }
+}
+
+impl Default for RationalQuadratic {
+    fn default() -> Self {
+        RationalQuadratic { alpha: 1.0 }
+    }
+}
+
+impl ScalarKernel for RationalQuadratic {
+    fn class(&self) -> KernelClass {
+        KernelClass::Stationary
+    }
+    fn k(&self, r: f64) -> f64 {
+        (1.0 + r / (2.0 * self.alpha)).powf(-self.alpha)
+    }
+    fn dk(&self, r: f64) -> f64 {
+        -0.5 * (1.0 + r / (2.0 * self.alpha)).powf(-self.alpha - 1.0)
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        let a = self.alpha;
+        (a + 1.0) / (4.0 * a) * (1.0 + r / (2.0 * a)).powf(-a - 2.0)
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        let a = self.alpha;
+        -(a + 1.0) * (a + 2.0) / (8.0 * a * a) * (1.0 + r / (2.0 * a)).powf(-a - 3.0)
+    }
+    fn name(&self) -> &'static str {
+        "rational_quadratic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::fd::check_derivatives;
+
+    // strictly positive r: Matérn derivatives blow up or lose FD accuracy
+    // near 0, and stationary r is nonnegative by construction.
+    const RS: &[f64] = &[0.15, 0.7, 1.3, 2.9, 6.0];
+
+    #[test]
+    fn se_derivatives_match_fd() {
+        check_derivatives(&SquaredExponential, RS, 1e-6);
+    }
+
+    #[test]
+    fn se_known_values() {
+        let k = SquaredExponential;
+        assert!((k.k(0.0) - 1.0).abs() < 1e-15);
+        assert!((k.dk(0.0) + 0.5).abs() < 1e-15);
+        assert!((k.d2k(0.0) - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matern12_derivatives_match_fd() {
+        check_derivatives(&Matern12, RS, 1e-5);
+    }
+
+    #[test]
+    fn matern32_derivatives_match_fd() {
+        check_derivatives(&Matern32, RS, 1e-5);
+    }
+
+    #[test]
+    fn matern52_derivatives_match_fd() {
+        check_derivatives(&Matern52, RS, 1e-5);
+    }
+
+    #[test]
+    fn rq_derivatives_match_fd() {
+        check_derivatives(&RationalQuadratic::new(1.5), RS, 1e-6);
+        check_derivatives(&RationalQuadratic::new(0.7), RS, 1e-6);
+    }
+
+    #[test]
+    fn rq_converges_to_se_for_large_alpha() {
+        // (1 + r/2α)^{−α} → e^{−r/2} as α → ∞
+        let rq = RationalQuadratic::new(1e6);
+        let se = SquaredExponential;
+        for &r in RS {
+            assert!((rq.k(r) - se.k(r)).abs() < 1e-5);
+            assert!((rq.dk(r) - se.dk(r)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matern_finite_diagonal_limits() {
+        // values the Gram diagonal blocks rely on (r = 0 limits)
+        assert!((Matern32.dk(0.0) + 1.5).abs() < 1e-15);
+        assert!((Matern52.dk(0.0) + 5.0 / 6.0).abs() < 1e-15);
+        assert!((Matern52.d2k(0.0) - 25.0 / 12.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stationary_kernels_decay() {
+        for k in [&SquaredExponential as &dyn ScalarKernel, &Matern32, &Matern52] {
+            assert!(k.k(0.0) > k.k(1.0));
+            assert!(k.k(1.0) > k.k(10.0));
+            assert!(k.k(10.0) > 0.0);
+        }
+    }
+}

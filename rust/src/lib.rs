@@ -1,0 +1,51 @@
+//! # gdkron — High-Dimensional Gaussian Process Inference with Derivatives
+//!
+//! Production-grade reproduction of de Roos, Gessner & Hennig (ICML 2021).
+//!
+//! A GP conditioned on `N` gradient observations in `D` dimensions naively
+//! needs `O(N³D³)` time and `O((ND)²)` memory. This library implements the
+//! paper's structured decomposition of the derivative Gram matrix
+//!
+//! ```text
+//! ∇K∇′ = K̂′ ⊗ Λ + U C Uᵀ
+//! ```
+//!
+//! for dot-product and stationary kernels, giving
+//! * exact inference in `O(N²D + N⁶)` (linear in `D`) via Woodbury ([`gram`]),
+//! * an `O(N² + ND)`-memory implicit matvec + iterative solver for any `N`
+//!   ([`gram`], [`solvers`]),
+//! * the `O(N²D + N³)` polynomial-kernel special case ([`gram::poly2`]),
+//!
+//! and the paper's applications on top: Hessian / optimum inference for
+//! nonparametric optimization ([`gp`], [`opt`]), probabilistic linear algebra
+//! ([`opt::plinalg`]) and gradient-surrogate Hamiltonian Monte Carlo
+//! ([`hmc`]).
+//!
+//! ## Architecture
+//!
+//! Three layers (see `DESIGN.md`):
+//! * **L3 (this crate)** — coordinator: engine selection, observation-window
+//!   state, optimizers, samplers, async batched surrogate serving
+//!   ([`coordinator`]), CLI launcher, config system ([`config`]).
+//! * **L2 (`python/compile/model.py`)** — JAX compute graphs, AOT-lowered to
+//!   HLO text artifacts loaded by [`runtime`] (PJRT CPU client; python never
+//!   runs at request time).
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the pairwise
+//!   scalar-derivative panels and the structured matvec.
+
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gp;
+pub mod gram;
+pub mod hmc;
+pub mod kernels;
+pub mod linalg;
+pub mod opt;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+
+pub use linalg::Mat;
+pub use rng::Rng;

@@ -1,0 +1,219 @@
+//! Cholesky factorization for the symmetric positive-definite solves.
+//!
+//! All the `N×N` solves of the paper (`K′⁻¹`, `X̃ᵀΛX̃⁻¹`, `G̃ᵀΛG̃⁻¹`, …) and the
+//! `N²×N²` Woodbury core are SPD (or symmetrized SPD) systems, so Cholesky is
+//! the workhorse factorization of the whole library.
+
+use super::{Mat, EPS};
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+/// Error raised when the matrix is not (numerically) positive definite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    /// Pivot index at which the factorization broke down.
+    pub pivot: usize,
+    /// Value of the offending pivot.
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite: pivot {} = {:.3e}", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Fails with [`NotPositiveDefinite`] on a
+    /// non-positive pivot (relative to the largest diagonal entry).
+    pub fn factor(a: &Mat) -> Result<Self, NotPositiveDefinite> {
+        assert!(a.is_square(), "Cholesky requires a square matrix");
+        let n = a.rows();
+        let mut l = a.clone();
+        let scale = (0..n).map(|i| a[(i, i)].abs()).fold(1.0_f64, f64::max);
+        for j in 0..n {
+            // pivot
+            let mut d = l[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            if d <= scale * EPS {
+                return Err(NotPositiveDefinite { pivot: j, value: d });
+            }
+            let d = d.sqrt();
+            l[(j, j)] = d;
+            // column below the pivot
+            for i in (j + 1)..n {
+                let mut s = l[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = s / d;
+            }
+        }
+        // zero the strict upper triangle
+        for j in 1..n {
+            for i in 0..j {
+                l[(i, j)] = 0.0;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with a diagonal jitter fallback: tries `A`, then
+    /// `A + jitter·scale·I` with geometrically growing jitter. Used by the GP
+    /// layer where round-off can push tiny eigenvalues slightly negative.
+    pub fn factor_with_jitter(a: &Mat, max_tries: usize) -> Result<(Self, f64), NotPositiveDefinite> {
+        match Self::factor(a) {
+            Ok(c) => return Ok((c, 0.0)),
+            Err(e) if max_tries == 0 => return Err(e),
+            Err(_) => {}
+        }
+        let n = a.rows();
+        let scale = (0..n).map(|i| a[(i, i)].abs()).fold(EPS, f64::max);
+        let mut jitter = 1e-10 * scale;
+        let mut last = NotPositiveDefinite { pivot: 0, value: 0.0 };
+        for _ in 0..max_tries {
+            let mut aj = a.clone();
+            for i in 0..n {
+                aj[(i, i)] += jitter;
+            }
+            match Self::factor(&aj) {
+                Ok(c) => return Ok((c, jitter)),
+                Err(e) => last = e,
+            }
+            jitter *= 10.0;
+        }
+        Err(last)
+    }
+
+    /// The lower factor `L`.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b` in place for a single right-hand side.
+    pub fn solve_vec_in_place(&self, b: &mut [f64]) {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * b[k];
+            }
+            b[i] = s / self.l[(i, i)];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * b[k];
+            }
+            b[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_vec_in_place(&mut x);
+        x
+    }
+
+    /// Solve `A X = B` column by column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows(), self.l.rows());
+        let mut out = b.clone();
+        for j in 0..b.cols() {
+            self.solve_vec_in_place(out.col_mut(j));
+        }
+        out
+    }
+
+    /// Explicit inverse (only used for `Λ⁻¹`-style small matrices and tests).
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.l.rows()))
+    }
+
+    /// log-determinant of `A` (twice the log of the diagonal product of `L`).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let b = Mat::from_fn(n, n, |_, _| rng.gauss());
+        let mut a = b.t_matmul(&b);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(8, 7);
+        let c = Cholesky::factor(&a).unwrap();
+        let rec = c.l().matmul_t(c.l());
+        assert!((&rec - &a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        let a = spd(12, 3);
+        let c = Cholesky::factor(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let x = c.solve_vec(&b);
+        let r = a.matvec(&x);
+        let err: f64 = r.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "residual {err}");
+    }
+
+    #[test]
+    fn solve_mat_matches_columns() {
+        let a = spd(6, 11);
+        let c = Cholesky::factor(&a).unwrap();
+        let b = Mat::from_fn(6, 3, |i, j| ((i + j) as f64).cos());
+        let x = c.solve_mat(&b);
+        let rec = a.matmul(&x);
+        assert!((&rec - &b).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_semidefinite() {
+        // rank-1 PSD matrix: plain Cholesky fails, jitter path succeeds.
+        let v = Mat::col_vec(&[1.0, 2.0, 3.0]);
+        let a = v.matmul_t(&v);
+        assert!(Cholesky::factor(&a).is_err());
+        let (c, jitter) = Cholesky::factor_with_jitter(&a, 12).unwrap();
+        assert!(jitter > 0.0);
+        let rec = c.l().matmul_t(c.l());
+        assert!((&rec - &a).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn log_det_matches_known() {
+        let a = Mat::diag(&[2.0, 3.0, 4.0]);
+        let c = Cholesky::factor(&a).unwrap();
+        assert!((c.log_det() - (24.0_f64).ln()).abs() < 1e-12);
+    }
+}

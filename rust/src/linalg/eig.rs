@@ -1,0 +1,131 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Used to (a) verify the synthetic spectra of the App. F.1 quadratic
+//! experiment, (b) build SPD test matrices with prescribed eigenvalues, and
+//! (c) sanity-check conditioning in the diagnostics CLI. Not a hot path.
+
+use super::Mat;
+
+/// Eigendecomposition `A = V diag(w) Vᵀ` of a symmetric matrix.
+///
+/// Returns `(w, V)` with eigenvalues ascending and eigenvectors in the
+/// corresponding columns of `V`.
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert!(a.is_square(), "sym_eig requires a square matrix");
+    let n = a.rows();
+    let mut m = a.symmetrized();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for j in 0..n {
+            for i in 0..j {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| m[(i, i)].partial_cmp(&m[(j, j)]).unwrap());
+    let w: Vec<f64> = idx.iter().map(|&i| m[(i, i)]).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (new_j, &old_j) in idx.iter().enumerate() {
+        for i in 0..n {
+            vs[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    (w, vs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthogonal;
+    use crate::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::diag(&[3.0, 1.0, 2.0]);
+        let (w, _) = sym_eig(&a);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_symmetric_matrix() {
+        let mut rng = Rng::new(14);
+        let n = 10;
+        let b = Mat::from_fn(n, n, |_, _| rng.gauss());
+        let a = b.symmetrized();
+        let (w, v) = sym_eig(&a);
+        let rec = v.matmul(&Mat::diag(&w)).matmul_t(&v);
+        assert!((&rec - &a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn recovers_prescribed_spectrum() {
+        let mut rng = Rng::new(2);
+        let spec = [0.5, 1.0, 4.0, 9.0, 100.0];
+        let q = random_orthogonal(5, &mut rng);
+        let a = q.matmul(&Mat::diag(&spec)).matmul_t(&q);
+        let (w, _) = sym_eig(&a);
+        for (got, want) in w.iter().zip(&spec) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_satisfy_av_equals_wv() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (w, v) = sym_eig(&a);
+        for j in 0..2 {
+            let av = a.matvec(v.col(j));
+            for i in 0..2 {
+                assert!((av[i] - w[j] * v[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+}

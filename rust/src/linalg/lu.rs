@@ -1,0 +1,174 @@
+//! LU factorization with partial pivoting.
+//!
+//! Used for the general (possibly non-symmetric) solves: the `N²×N²` Woodbury
+//! core `C⁻¹ + UᵀB⁻¹U` is symmetric only up to the shuffle permutation, and
+//! the flipped inference of Sec. 4.1.2 can produce mildly non-symmetric
+//! systems after round-off, so a pivoted LU is the robust default there.
+
+use super::{Mat, EPS};
+
+/// `P A = L U` with partial (row) pivoting.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    num_swaps: usize,
+}
+
+/// Error raised when the matrix is numerically singular.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Singular {
+    pub column: usize,
+}
+
+impl std::fmt::Display for Singular {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix numerically singular at column {}", self.column)
+    }
+}
+
+impl std::error::Error for Singular {}
+
+impl Lu {
+    /// Factor a square matrix.
+    pub fn factor(a: &Mat) -> Result<Self, Singular> {
+        assert!(a.is_square(), "LU requires a square matrix");
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut num_swaps = 0;
+        let scale = a.max_abs().max(EPS);
+        for k in 0..n {
+            // find pivot row
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax <= scale * EPS {
+                return Err(Singular { column: k });
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                piv.swap(k, p);
+                num_swaps += 1;
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m == 0.0 {
+                    continue;
+                }
+                for j in (k + 1)..n {
+                    let v = lu[(k, j)];
+                    lu[(i, j)] -= m * v;
+                }
+            }
+        }
+        Ok(Lu { lu, piv, num_swaps })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward L (unit diagonal)
+        for i in 1..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s;
+        }
+        // backward U
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A X = B`.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            out.set_col(j, &self.solve_vec(b.col(j)));
+        }
+        out
+    }
+
+    /// Explicit inverse.
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.lu.rows()))
+    }
+
+    /// Determinant (product of U diagonal, sign-corrected for row swaps).
+    pub fn det(&self) -> f64 {
+        let sign = if self.num_swaps % 2 == 0 { 1.0 } else { -1.0 };
+        sign * (0..self.lu.rows()).map(|i| self.lu[(i, i)]).product::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn solve_random_system() {
+        let mut rng = Rng::new(42);
+        let n = 15;
+        let a = Mat::from_fn(n, n, |_, _| rng.gauss());
+        let xstar: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b = a.matvec(&xstar);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve_vec(&b);
+        let err: f64 = x.iter().zip(&xstar).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "err {err}");
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve_vec(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-14 && (x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn det_of_known_matrix() {
+        let a = Mat::from_rows(&[&[4.0, 3.0], &[6.0, 3.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.det() + 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Rng::new(9);
+        let n = 8;
+        let a = Mat::from_fn(n, n, |i, j| rng.gauss() + if i == j { 4.0 } else { 0.0 });
+        let inv = Lu::factor(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        assert!((&prod - &Mat::eye(n)).max_abs() < 1e-10);
+    }
+}

@@ -1,0 +1,570 @@
+//! Column-major dense matrix with the operations the paper's algorithms need.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub, SubAssign};
+
+/// Dense column-major `rows × cols` matrix of `f64`.
+///
+/// Column-major is the natural layout here: the data matrices `X, G, Z, V` of
+/// the paper are `D×N` with one *data point per column*, and `vec(·)` in all
+/// derivations is column stacking, so `Mat::data` *is* `vec(M)`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f64) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    /// Build from a column-major data vector (takes ownership).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a row-major slice of slices (test convenience).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    /// Build entrywise from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// The column-major backing store — identical to `vec(self)` of the paper.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the column-major data vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow column `j` as a slice.
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Borrow column `j` mutably.
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        let r = self.rows;
+        &mut self.data[j * r..(j + 1) * r]
+    }
+
+    /// Copy of row `i`.
+    pub fn row(&self, i: usize) -> Vec<f64> {
+        (0..self.cols).map(|j| self[(i, j)]).collect()
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        self.col_mut(j).copy_from_slice(v);
+    }
+
+    /// Transpose (allocates).
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Main diagonal as a vector.
+    pub fn diagonal(&self) -> Vec<f64> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        self.diagonal().iter().sum()
+    }
+
+    /// Matrix product `self * other`, blocked over columns; the `O(N²D)` hot
+    /// path of the structured matvec funnels through here.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch {}x{} * {}x{}",
+            self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// `out = self * other` without allocating. `out` must be pre-shaped.
+    ///
+    /// Column-major SAXPY ordering: for each output column, accumulate
+    /// `A[:,k] * B[k,j]` — unit-stride over `A` and `out`, auto-vectorizes.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        out.as_mut_slice().fill(0.0);
+        self.matmul_acc(other, out);
+    }
+
+    /// `out += self * other` (no zeroing) — lets callers fuse several
+    /// products into one accumulator buffer (§Perf).
+    pub fn matmul_acc(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.cols);
+        let m = self.rows;
+        // 4-wide rank-1 updates: fewer passes over the output column and
+        // enough independent FMA chains to keep the vector units busy
+        // (§Perf: this alone is ~1.6× on the Fig. 4 matvec).
+        for j in 0..other.cols {
+            let bcol = other.col(j);
+            let ocol = &mut out.data[j * m..(j + 1) * m];
+            let mut k = 0;
+            while k + 4 <= self.cols {
+                let b0 = bcol[k];
+                let b1 = bcol[k + 1];
+                let b2 = bcol[k + 2];
+                let b3 = bcol[k + 3];
+                if b0 == 0.0 && b1 == 0.0 && b2 == 0.0 && b3 == 0.0 {
+                    k += 4;
+                    continue;
+                }
+                let (a0, rest) = self.data[k * m..].split_at(m);
+                let (a1, rest) = rest.split_at(m);
+                let (a2, rest) = rest.split_at(m);
+                let a3 = &rest[..m];
+                for i in 0..m {
+                    ocol[i] += a0[i] * b0 + a1[i] * b1 + a2[i] * b2 + a3[i] * b3;
+                }
+                k += 4;
+            }
+            while k < self.cols {
+                let bkj = bcol[k];
+                if bkj != 0.0 {
+                    let acol = &self.data[k * m..(k + 1) * m];
+                    for i in 0..m {
+                        ocol[i] += acol[i] * bkj;
+                    }
+                }
+                k += 1;
+            }
+        }
+    }
+
+    /// `selfᵀ * other` without materializing the transpose.
+    ///
+    /// Each output entry is a dot of two columns — unit stride on both sides,
+    /// this is the preferred way to form Gram-style products `XᵀΛV`.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for j in 0..other.cols {
+            let bcol = other.col(j);
+            for i in 0..self.cols {
+                let acol = self.col(i);
+                let mut s = 0.0;
+                for k in 0..self.rows {
+                    s += acol[k] * bcol[k];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    /// `self * otherᵀ` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        let m = self.rows;
+        for k in 0..self.cols {
+            let acol = self.col(k);
+            for j in 0..other.rows {
+                let bjk = other[(j, k)];
+                if bjk == 0.0 {
+                    continue;
+                }
+                let ocol = &mut out.data[j * m..(j + 1) * m];
+                for i in 0..m {
+                    ocol[i] += acol[i] * bjk;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0.0; self.rows];
+        for (k, &vk) in v.iter().enumerate() {
+            if vk == 0.0 {
+                continue;
+            }
+            let acol = self.col(k);
+            for i in 0..self.rows {
+                out[i] += acol[i] * vk;
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ v`.
+    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        (0..self.cols).map(|j| dot(self.col(j), v)).collect()
+    }
+
+    /// Hadamard (elementwise) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise division (the `⊘` of App. A).
+    pub fn hadamard_div(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a / b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale every entry.
+    pub fn scale(&self, s: f64) -> Mat {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += s * other` (AXPY).
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|a| a * a).sum::<f64>().sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, &a| m.max(a.abs()))
+    }
+
+    /// Symmetrize: `(self + selfᵀ)/2`.
+    pub fn symmetrized(&self) -> Mat {
+        assert!(self.is_square());
+        Mat::from_fn(self.rows, self.cols, |i, j| 0.5 * (self[(i, j)] + self[(j, i)]))
+    }
+
+    /// Extract the contiguous block `rows r0..r0+nr`, `cols c0..c0+nc`.
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Mat {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        Mat::from_fn(nr, nc, |i, j| self[(r0 + i, c0 + j)])
+    }
+
+    /// Write `b` into the block starting at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for j in 0..b.cols {
+            for i in 0..b.rows {
+                self[(r0 + i, c0 + j)] = b[(i, j)];
+            }
+        }
+    }
+
+    /// Horizontal concatenation `[self, other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut data = Vec::with_capacity(self.data.len() + other.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows, cols: self.cols + other.cols, data }
+    }
+
+    /// Kronecker product `self ⊗ other` (test oracle only — never in the hot path).
+    pub fn kron(&self, other: &Mat) -> Mat {
+        let (m, n, p, q) = (self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(m * p, n * q);
+        for j in 0..n {
+            for i in 0..m {
+                let a = self[(i, j)];
+                if a == 0.0 {
+                    continue;
+                }
+                for jj in 0..q {
+                    for ii in 0..p {
+                        out[(i * p + ii, j * q + jj)] = a * other[(ii, jj)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Map entrywise.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let data = self.data.iter().map(|&a| f(a)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Row sums (length `rows`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            for (i, &v) in self.col(j).iter().enumerate() {
+                out[i] += v;
+            }
+        }
+        out
+    }
+
+    /// Column sums (length `cols`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        (0..self.cols).map(|j| self.col(j).iter().sum()).collect()
+    }
+}
+
+/// Dot product of two slices.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[j * self.rows + i]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[j * self.rows + i]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl Neg for &Mat {
+    type Output = Mat;
+    fn neg(self) -> Mat {
+        self.scale(-1.0)
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, other: &Mat) -> Mat {
+        self.matmul(other)
+    }
+}
+
+impl AddAssign<&Mat> for Mat {
+    fn add_assign(&mut self, other: &Mat) {
+        self.axpy(1.0, other);
+    }
+}
+
+impl SubAssign<&Mat> for Mat {
+    fn sub_assign(&mut self, other: &Mat) {
+        self.axpy(-1.0, other);
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_hand_computed() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn t_matmul_equals_explicit_transpose() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64 * 0.7 - 1.0);
+        let b = Mat::from_fn(4, 5, |i, j| (i + 2 * j) as f64 * 0.3);
+        let lhs = a.t_matmul(&b);
+        let rhs = a.t().matmul(&b);
+        assert!((&lhs - &rhs).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn matmul_t_equals_explicit_transpose() {
+        let a = Mat::from_fn(4, 3, |i, j| (i as f64 - j as f64) * 1.3);
+        let b = Mat::from_fn(5, 3, |i, j| (i * j) as f64 + 0.5);
+        let lhs = a.matmul_t(&b);
+        let rhs = a.matmul(&b.t());
+        assert!((&lhs - &rhs).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let a = Mat::from_fn(3, 4, |i, j| (i + j) as f64);
+        let v = vec![1.0, -1.0, 2.0, 0.5];
+        let got = a.matvec(&v);
+        let want = a.matmul(&Mat::col_vec(&v));
+        assert_eq!(got, want.as_slice());
+    }
+
+    #[test]
+    fn kron_identity_property() {
+        // (A ⊗ B)(C ⊗ D) = AC ⊗ BD
+        let a = Mat::from_fn(2, 2, |i, j| (i + 2 * j) as f64 + 1.0);
+        let b = Mat::from_fn(3, 3, |i, j| (i as f64) - (j as f64) * 0.5);
+        let c = Mat::from_fn(2, 2, |i, j| ((i * j) as f64).sin() + 2.0);
+        let d = Mat::from_fn(3, 3, |i, j| ((i + j) as f64).cos());
+        let lhs = a.kron(&b).matmul(&c.kron(&d));
+        let rhs = a.matmul(&c).kron(&b.matmul(&d));
+        assert!((&lhs - &rhs).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn kron_vec_identity() {
+        // (A ⊗ B) vec(X) = vec(B X Aᵀ) — the workhorse identity of App. A.
+        let a = Mat::from_fn(3, 3, |i, j| ((i + j) as f64).exp() / 10.0);
+        let b = Mat::from_fn(2, 2, |i, j| (i as f64 + 1.0) * (j as f64 - 0.3));
+        let x = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let lhs = a.kron(&b).matvec(x.as_slice());
+        let rhs = b.matmul(&x).matmul_t(&a);
+        let diff: f64 = lhs.iter().zip(rhs.as_slice()).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-12);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let a = Mat::from_fn(5, 6, |i, j| (i * 10 + j) as f64);
+        let b = a.block(1, 2, 3, 3);
+        let mut c = Mat::zeros(5, 6);
+        c.set_block(1, 2, &b);
+        assert_eq!(c[(1, 2)], a[(1, 2)]);
+        assert_eq!(c[(3, 4)], a[(3, 4)]);
+        assert_eq!(c[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.row_sums(), vec![3.0, 7.0]);
+        assert_eq!(a.col_sums(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn hcat_shapes() {
+        let a = Mat::zeros(3, 2);
+        let b = Mat::full(3, 4, 1.0);
+        let c = a.hcat(&b);
+        assert_eq!((c.rows(), c.cols()), (3, 6));
+        assert_eq!(c[(0, 3)], 1.0);
+        assert_eq!(c[(0, 1)], 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's algorithms need a small but complete dense toolbox:
+//! matrix products (the `O(N²D)` hot path of Eq. 9), Cholesky and LU
+//! factorizations (the `N×N` and `N²×N²` solves of App. C.1), Householder QR
+//! (random orthogonal matrices for the rotated HMC targets of Sec. 5.3) and a
+//! Jacobi eigensolver (to verify the synthetic spectra of App. F.1).
+//!
+//! Everything is `f64`, column-major, and allocation-explicit so the hot
+//! loops in [`crate::gram`] can reuse buffers.
+
+mod chol;
+mod eig;
+mod lu;
+mod mat;
+mod qr;
+
+pub use chol::Cholesky;
+pub use eig::sym_eig;
+pub use lu::Lu;
+pub use mat::Mat;
+pub use qr::{householder_qr, random_orthogonal};
+
+/// Machine-epsilon-scaled tolerance used by the factorizations.
+pub(crate) const EPS: f64 = 1e-12;

@@ -1,0 +1,144 @@
+//! Householder QR and random orthogonal matrices.
+//!
+//! The HMC experiment of Sec. 5.3 rotates the banana target by "applying a
+//! random orthonormal matrix on the input"; we generate those the standard
+//! way, as the Q factor of a Gaussian matrix with the sign convention fixed
+//! so Q is Haar-distributed.
+
+use super::Mat;
+use crate::rng::Rng;
+
+/// Householder QR: returns `(Q, R)` with `Q` orthogonal (`m×m`) and `R`
+/// upper triangular (`m×n`), such that `A = Q R`.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    let mut r = a.clone();
+    let mut q = Mat::eye(m);
+    let steps = n.min(m.saturating_sub(1));
+    let mut v = vec![0.0; m];
+    for k in 0..steps {
+        // Householder vector for column k
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0.0;
+        for i in k..m {
+            v[i] = r[(i, k)];
+            if i == k {
+                v[i] -= alpha;
+            }
+            vnorm2 += v[i] * v[i];
+        }
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        // apply H = I - 2 v vᵀ / (vᵀv) to R (from the left)
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i] * r[(i, j)];
+            }
+            let s = 2.0 * s / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= s * v[i];
+            }
+        }
+        // accumulate into Q (apply H from the right: Q ← Q H)
+        for i in 0..m {
+            let mut s = 0.0;
+            for l in k..m {
+                s += q[(i, l)] * v[l];
+            }
+            let s = 2.0 * s / vnorm2;
+            for l in k..m {
+                q[(i, l)] -= s * v[l];
+            }
+        }
+    }
+    // clean strictly-lower part of R
+    for j in 0..n {
+        for i in (j + 1)..m {
+            r[(i, j)] = 0.0;
+        }
+    }
+    (q, r)
+}
+
+/// Haar-distributed random orthogonal `n×n` matrix.
+///
+/// QR of a Ginibre (iid Gaussian) matrix with the diagonal-sign correction of
+/// Mezzadri (2007) so the distribution is exactly Haar.
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Mat {
+    let g = Mat::from_fn(n, n, |_, _| rng.gauss());
+    let (mut q, r) = householder_qr(&g);
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(5);
+        let a = Mat::from_fn(7, 5, |_, _| rng.gauss());
+        let (q, r) = householder_qr(&a);
+        let rec = q.matmul(&r);
+        assert!((&rec - &a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let mut rng = Rng::new(8);
+        let a = Mat::from_fn(6, 6, |_, _| rng.gauss());
+        let (q, _) = householder_qr(&a);
+        let qtq = q.t_matmul(&q);
+        assert!((&qtq - &Mat::eye(6)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(13);
+        let a = Mat::from_fn(6, 4, |_, _| rng.gauss());
+        let (_, r) = householder_qr(&a);
+        for j in 0..4 {
+            for i in (j + 1)..6 {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(21);
+        for n in [2, 5, 30] {
+            let q = random_orthogonal(n, &mut rng);
+            let qtq = q.t_matmul(&q);
+            assert!((&qtq - &Mat::eye(n)).max_abs() < 1e-11, "n={n}");
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_preserves_norms() {
+        let mut rng = Rng::new(77);
+        let q = random_orthogonal(40, &mut rng);
+        let v: Vec<f64> = (0..40).map(|i| (i as f64 * 0.11).sin()).collect();
+        let qv = q.matvec(&v);
+        let n1: f64 = v.iter().map(|x| x * x).sum();
+        let n2: f64 = qv.iter().map(|x| x * x).sum();
+        assert!((n1 - n2).abs() < 1e-10 * n1);
+    }
+}

@@ -1,0 +1,296 @@
+//! `gdkron` — CLI launcher for the reproduction experiments.
+//!
+//! ```text
+//! gdkron exp fig1|fig2|fig3|fig4|fig5|scaling [--key value …]
+//! gdkron run <config.toml> [--key value …]   # config-driven launcher
+//! gdkron artifacts [--dir artifacts]          # list AOT artifacts
+//! gdkron validate  [--dir artifacts]          # PJRT vs native cross-check
+//! ```
+//!
+//! (Arg parsing is in-tree — the build environment has no clap in its
+//! offline registry; see DESIGN.md §6.)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use gdkron::config::Config;
+use gdkron::experiments as exp;
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::{GramFactors, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::runtime::{ArgValue, ArtifactRegistry};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the positional arguments.
+fn parse_flags(args: &[String]) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?;
+        let val = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+        flags.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+/// Flags override config values override defaults.
+struct Opts {
+    flags: BTreeMap<String, String>,
+    config: Config,
+}
+
+impl Opts {
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .or_else(|| self.config.int(key).map(|v| v as usize))
+            .unwrap_or(default)
+    }
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .or_else(|| self.config.float(key))
+            .unwrap_or(default)
+    }
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.usize_or(key, default as usize) as u64
+    }
+    fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .or_else(|| self.config.bool(key))
+            .unwrap_or(default)
+    }
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .or_else(|| self.config.str(key).map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("exp") => {
+            let id = args.get(1).ok_or_else(|| {
+                anyhow::anyhow!("usage: gdkron exp <fig1|fig2|fig3|fig4|fig5|scaling>")
+            })?;
+            let opts = Opts { flags: parse_flags(&args[2..])?, config: Config::default() };
+            run_experiment(id, &opts)
+        }
+        Some("run") => {
+            let path = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: gdkron run <config.toml>"))?;
+            let config = Config::from_file(path)?;
+            let id = config
+                .str("experiment")
+                .ok_or_else(|| anyhow::anyhow!("config must set `experiment = \"figN\"`"))?
+                .to_string();
+            let opts = Opts { flags: parse_flags(&args[2..])?, config };
+            run_experiment(&id, &opts)
+        }
+        Some("artifacts") => {
+            let opts = Opts { flags: parse_flags(&args[1..])?, config: Config::default() };
+            let dir = opts.str_or("dir", "artifacts");
+            let reg = ArtifactRegistry::open(&dir)?;
+            println!("{} artifacts in {dir}/:", reg.names().len());
+            for name in reg.names() {
+                let spec = reg.spec(&name).unwrap();
+                let shapes: Vec<String> = spec
+                    .inputs
+                    .iter()
+                    .map(|t| {
+                        if t.dims.is_empty() {
+                            "scalar".to_string()
+                        } else {
+                            t.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+                        }
+                    })
+                    .collect();
+                println!("  {name:32} [{}]  {}", shapes.join(", "), spec.description);
+            }
+            Ok(())
+        }
+        Some("validate") => {
+            let opts = Opts { flags: parse_flags(&args[1..])?, config: Config::default() };
+            validate(&opts.str_or("dir", "artifacts"))
+        }
+        _ => {
+            eprintln!(
+                "gdkron — High-Dimensional GP Inference with Derivatives (ICML 2021)\n\
+                 usage:\n  gdkron exp <fig1|fig2|fig3|fig4|fig5|scaling> [--key value …]\n  \
+                 gdkron run <config.toml> [--key value …]\n  gdkron artifacts [--dir DIR]\n  \
+                 gdkron validate [--dir DIR]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn run_experiment(id: &str, opts: &Opts) -> anyhow::Result<()> {
+    let out = opts.str_or("out", "results");
+    let seed = opts.u64_or("seed", 1);
+    match id {
+        "fig1" => {
+            let r = exp::fig1::run(&out, seed)?;
+            println!(
+                "FIG1: N={}, D={} — ‖∇K∇′ − (B+UCUᵀ)‖∞ = {:.3e}; dense/structured memory = {:.1}×",
+                r.n, r.d, r.reconstruction_error, r.memory_ratio
+            );
+        }
+        "fig2" => {
+            let d = opts.usize_or("dim", 100);
+            let iters = opts.usize_or("max-iters", 300);
+            exp::fig2::run(&out, d, seed, iters)?;
+        }
+        "fig3" => {
+            let d = opts.usize_or("dim", 100);
+            let iters = opts.usize_or("max-iters", 200);
+            exp::fig3::run(&out, d, seed, iters)?;
+        }
+        "fig4" => {
+            let d = opts.usize_or("dim", 100);
+            let n = opts.usize_or("obs", 1000);
+            let rtol = opts.f64_or("rtol", 1e-6);
+            let pjrt = opts.bool_or("pjrt", false);
+            let r = exp::fig4::run(&out, d, n, seed, rtol, pjrt)?;
+            println!(
+                "FIG4: D={} N={} backend={} — CG {} iters (converged={}) in {:.2}s | \
+                 memory: structured {:.1} MB vs dense {:.1} GB | slice RMSE (offset-free) {:.3}",
+                r.d,
+                r.n,
+                if pjrt { "pjrt" } else { "native" },
+                r.iters,
+                r.converged,
+                r.solve_seconds,
+                r.structured_bytes as f64 / 1e6,
+                r.dense_bytes as f64 / 1e9,
+                r.slice_rmse
+            );
+        }
+        "fig5" => {
+            let d = opts.usize_or("dim", 100);
+            let samples = opts.usize_or("samples", 2000);
+            let eps0 = opts.f64_or("eps0", 0.004);
+            let a = exp::fig5::run_aligned(&out, d, samples, eps0, seed)?;
+            println!(
+                "FIG5 aligned: HMC accept {:.2} ({} true-grad evals) | GPG-HMC accept {:.2} \
+                 ({} true-grad evals, {} training iters, {} train points)",
+                a.hmc_accept,
+                a.hmc_true_grad_evals,
+                a.gpg_accept,
+                a.gpg_true_grad_evals,
+                a.gpg_training_iters,
+                a.gpg_train_points
+            );
+            let rotations = opts.usize_or("rotations", 0);
+            if rotations > 0 {
+                let seeds = opts.usize_or("rot-seeds", 3);
+                let r = exp::fig5::run_rotated(&out, d, samples, eps0, rotations, seeds, seed)?;
+                println!(
+                    "FIG5 rotated ({rotations}×{seeds}): HMC {:.2}±{:.2} | GPG-HMC {:.2}±{:.2} | \
+                     training iters {:.0}±{:.0}",
+                    r.hmc_mean, r.hmc_std, r.gpg_mean, r.gpg_std,
+                    r.training_iters_mean, r.training_iters_std
+                );
+            }
+        }
+        "scaling" => {
+            let dims: Vec<usize> = opts
+                .str_or("dims", "64,128,256,512,1024")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            let ns: Vec<usize> = opts
+                .str_or("ns", "4,8")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            let cap = opts.usize_or("dense-cap", 3000);
+            let rows = exp::scaling::run_time_sweep(&out, &dims, &ns, cap, seed)?;
+            println!("{:>6} {:>4} {:>14} {:>14}", "D", "N", "woodbury [s]", "dense [s]");
+            for r in &rows {
+                println!(
+                    "{:>6} {:>4} {:>14.4e} {:>14}",
+                    r.d,
+                    r.n,
+                    r.woodbury_secs,
+                    r.dense_secs.map(|s| format!("{s:.4e}")).unwrap_or_else(|| "—".into())
+                );
+            }
+            let mems = exp::scaling::run_memory_table(
+                &out,
+                &[(100, 10), (100, 100), (100, 1000), (1000, 100)],
+            )?;
+            println!("{:>6} {:>6} {:>16} {:>16}", "D", "N", "structured [B]", "dense [B]");
+            for m in &mems {
+                println!("{:>6} {:>6} {:>16} {:>16}", m.d, m.n, m.structured_bytes, m.dense_bytes);
+            }
+        }
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+/// Cross-check the PJRT artifacts against the native implementation
+/// (`gdkron validate`) — the rust/tests/runtime_pjrt.rs checks, runnable in
+/// deployed environments.
+fn validate(dir: &str) -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::open(dir)?;
+    let mut rng = Rng::new(7);
+    let (d, n) = (8, 4);
+    let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let inv_l2 = 0.5;
+
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(inv_l2), None);
+    let native = f.matvec(&g);
+    let pjrt = reg.execute_mat(
+        "smoke_matvec_d8_n4",
+        &[ArgValue::Mat(&x), ArgValue::Mat(&g), ArgValue::Scalar(inv_l2)],
+        d,
+        n,
+    )?;
+    let err = (&native - &pjrt).max_abs();
+    println!("matvec: native vs pjrt max|Δ| = {err:.3e}");
+    anyhow::ensure!(err < 1e-4, "matvec mismatch");
+
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(inv_l2),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )?;
+    let pjrt_z = reg.execute_mat(
+        "smoke_fit_d8_n4",
+        &[ArgValue::Mat(&x), ArgValue::Mat(&g), ArgValue::Scalar(inv_l2)],
+        d,
+        n,
+    )?;
+    let err = (gp.z() - &pjrt_z).max_abs();
+    println!("fit:    native vs pjrt max|Δ| = {err:.3e}");
+    anyhow::ensure!(err < 1e-3, "fit mismatch");
+    println!("validate OK — L1/L2 artifacts agree with the native L3 implementation");
+    Ok(())
+}

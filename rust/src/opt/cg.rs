@@ -1,0 +1,108 @@
+//! Linear conjugate gradients as an *optimizer* on quadratics — the
+//! gold-standard baseline of Fig. 2 (Hestenes & Stiefel 1952), instrumented
+//! to log the same per-iteration gradient norms as the GP methods.
+
+use super::{dot, norm2, Objective, OptTrace, Quadratic};
+
+/// CG on `f(x) = ½(x−x⋆)ᵀA(x−x⋆)`, using the optimal step
+/// `α = −dᵀg / dᵀAd` (the step all Fig. 2 methods share).
+pub struct LinearCg {
+    /// Relative gradient-norm tolerance (paper F.1: 1e-5).
+    pub gtol: f64,
+    pub max_iters: usize,
+}
+
+impl Default for LinearCg {
+    fn default() -> Self {
+        LinearCg { gtol: 1e-5, max_iters: 500 }
+    }
+}
+
+impl LinearCg {
+    pub fn minimize(&self, q: &Quadratic, x0: &[f64]) -> OptTrace {
+        let mut x = x0.to_vec();
+        let mut g = q.gradient(&x); // residual of Ax = b (up to sign)
+        let g0 = norm2(&g).max(1.0);
+        let mut d: Vec<f64> = g.iter().map(|v| -v).collect();
+
+        let mut trace = OptTrace::default();
+        trace.f.push(q.value(&x));
+        trace.gnorm.push(norm2(&g));
+        trace.g_evals = 1;
+
+        for _ in 0..self.max_iters {
+            if norm2(&g) <= self.gtol * g0 {
+                trace.converged = true;
+                break;
+            }
+            let ad = q.a.matvec(&d);
+            let dad = dot(&d, &ad);
+            if dad <= 0.0 {
+                break;
+            }
+            let alpha = -dot(&d, &g) / dad;
+            let mut g_new = g.clone();
+            for i in 0..x.len() {
+                x[i] += alpha * d[i];
+                g_new[i] += alpha * ad[i];
+            }
+            // β via Fletcher–Reeves on exact residuals
+            let beta = dot(&g_new, &g_new) / dot(&g, &g);
+            for i in 0..d.len() {
+                d[i] = -g_new[i] + beta * d[i];
+            }
+            g = g_new;
+            trace.f.push(q.value(&x));
+            trace.gnorm.push(norm2(&g));
+        }
+        trace.converged = trace.converged || norm2(&g) <= self.gtol * g0;
+        trace.x = x;
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn converges_on_f1_problem_in_expected_iterations() {
+        // App. F.1: "CG is expected to converge in slightly more than 15
+        // iterations" for the D=100 spectrum.
+        let mut rng = Rng::new(1);
+        let (q, x0) = Quadratic::paper_f1(100, 0.5, 100.0, 0.6, &mut rng);
+        let trace = LinearCg::default().minimize(&q, &x0);
+        assert!(trace.converged);
+        let iters = trace.iterations();
+        assert!(
+            (10..=60).contains(&iters),
+            "CG took {iters} iterations (expected ~15–40 for this spectrum)"
+        );
+    }
+
+    #[test]
+    fn exact_convergence_in_rank_iterations() {
+        // 3 distinct eigenvalues ⇒ ≤ 3 CG iterations
+        use crate::linalg::{random_orthogonal, Mat};
+        let mut rng = Rng::new(2);
+        let spec = [2.0, 2.0, 5.0, 5.0, 9.0, 9.0];
+        let qmat = random_orthogonal(6, &mut rng);
+        let a = qmat.matmul(&Mat::diag(&spec)).matmul_t(&qmat);
+        let q = Quadratic::new(a, rng.gauss_vec(6));
+        let x0 = rng.gauss_vec(6);
+        let trace = LinearCg { gtol: 1e-10, max_iters: 50 }.minimize(&q, &x0);
+        assert!(trace.converged);
+        assert!(trace.iterations() <= 4, "{} iterations", trace.iterations());
+    }
+
+    #[test]
+    fn gradient_norm_history_ends_below_tolerance() {
+        let mut rng = Rng::new(3);
+        let (q, x0) = Quadratic::paper_f1(40, 0.5, 50.0, 0.6, &mut rng);
+        let solver = LinearCg::default();
+        let trace = solver.minimize(&q, &x0);
+        let last = *trace.gnorm.last().unwrap();
+        assert!(last <= solver.gtol * trace.gnorm[0].max(1.0));
+    }
+}

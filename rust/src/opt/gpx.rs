@@ -1,0 +1,195 @@
+//! "GP-X": Alg. 1 with inferred-optimum steps (Sec. 4.1.2).
+//!
+//! Each iteration fits the *flipped* GP `g ↦ x(g)` on the history window and
+//! queries it at `g⋆ = 0`; the step direction is toward the model's belief
+//! about the minimizer, `d = x̄⋆ − x_t`, sign-flipped if it is not a descent
+//! direction (the `dᵀg > 0` guard of Alg. 1).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::gp::{infer_optimum_with, FitOptions};
+use crate::gram::Metric;
+use crate::kernels::{KernelClass, ScalarKernel};
+use crate::linalg::Mat;
+
+use super::{dot, norm2, search, Counted, Objective, OptOptions, OptTrace};
+
+/// GP-X optimizer configuration.
+pub struct GpMinOptimizer {
+    /// Kernel over *gradient space* (the flipped GP's inputs are gradients).
+    pub kernel: Arc<dyn ScalarKernel>,
+    pub metric: Metric,
+    /// Keep only the last `m` observations (0 = keep all).
+    pub window: usize,
+    /// For dot-product kernels: center the flipped GP at the current
+    /// gradient (`c = g_t`, App. E.2) instead of at 0.
+    pub center_at_current_gradient: bool,
+    pub opts: OptOptions,
+}
+
+impl GpMinOptimizer {
+    pub fn minimize(&self, obj: &dyn Objective, x0: &[f64]) -> OptTrace {
+        let d = obj.dim();
+        assert_eq!(x0.len(), d);
+        let counted = Counted::new(obj);
+        let mut x = x0.to_vec();
+        let mut f = counted.value(&x);
+        let mut g = counted.gradient(&x);
+        let g0 = norm2(&g).max(1.0);
+
+        let mut hist: VecDeque<(Vec<f64>, Vec<f64>)> = VecDeque::new();
+
+        let mut trace = OptTrace::default();
+        trace.f.push(f);
+        trace.gnorm.push(norm2(&g));
+
+        let mut dir: Vec<f64> = g.iter().map(|v| -v).collect();
+        for _ in 0..self.opts.max_iters {
+            if norm2(&g) <= self.opts.gtol * g0 {
+                trace.converged = true;
+                break;
+            }
+            let mut g0d = dot(&g, &dir);
+            if !(g0d < 0.0) || dir.iter().any(|v| !v.is_finite()) {
+                dir = g.iter().map(|v| -v).collect();
+                g0d = dot(&g, &dir);
+            }
+            let step = search(self.opts.line_search, &counted, &x, &dir, f, g0d);
+            for i in 0..d {
+                x[i] += step.alpha * dir[i];
+            }
+            f = step.f_new;
+            g = counted.gradient(&x);
+            trace.f.push(f);
+            trace.gnorm.push(norm2(&g));
+
+            // the anchor (x_t, g_t) stays out of the data for dot-product
+            // kernels centered at g_t (zero column would make H singular);
+            // for stationary kernels the current pair joins the window.
+            let use_anchor_in_data = !(self.center_at_current_gradient
+                && self.kernel.class() == KernelClass::DotProduct);
+            if use_anchor_in_data {
+                hist.push_back((x.clone(), g.clone()));
+            }
+            if self.window > 0 {
+                while hist.len() > self.window {
+                    hist.pop_front();
+                }
+            }
+
+            dir = self
+                .optimum_direction(&hist, &x, &g)
+                .unwrap_or_else(|| g.iter().map(|v| -v).collect());
+            // Alg. 1: ensure descent
+            if dot(&dir, &g) > 0.0 {
+                for v in dir.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            if !use_anchor_in_data {
+                hist.push_back((x.clone(), g.clone()));
+            }
+        }
+        trace.converged = trace.converged || norm2(&g) <= self.opts.gtol * g0;
+        trace.x = x;
+        trace.f_evals = counted.f_evals.get();
+        trace.g_evals = counted.g_evals.get();
+        trace
+    }
+
+    /// `d = x̄⋆ − x_t` via flipped inference on the window.
+    fn optimum_direction(
+        &self,
+        hist: &VecDeque<(Vec<f64>, Vec<f64>)>,
+        x: &[f64],
+        g: &[f64],
+    ) -> Option<Vec<f64>> {
+        let d = x.len();
+        let n = hist.len();
+        if n == 0 {
+            return None;
+        }
+        let mut xm = Mat::zeros(d, n);
+        let mut gm = Mat::zeros(d, n);
+        for (j, (xj, gj)) in hist.iter().enumerate() {
+            xm.set_col(j, xj);
+            gm.set_col(j, gj);
+        }
+        let opts = FitOptions {
+            center: self.center_at_current_gradient.then(|| g.to_vec()),
+            ..Default::default()
+        };
+        let xhat =
+            infer_optimum_with(self.kernel.clone(), self.metric.clone(), &xm, &gm, x, &opts, None)
+                .ok()?;
+        let dir: Vec<f64> = xhat.iter().zip(x).map(|(a, b)| a - b).collect();
+        if dir.iter().any(|v| !v.is_finite()) || norm2(&dir) < 1e-300 {
+            return None;
+        }
+        Some(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Poly2Kernel, SquaredExponential};
+    use crate::opt::{LineSearch, Quadratic, RelaxedRosenbrock};
+    use crate::rng::Rng;
+
+    #[test]
+    fn poly2_gpx_solves_quadratic() {
+        // solution-based probabilistic linear solver (Sec. 4.2 / App. E.2)
+        let mut rng = Rng::new(1);
+        let (q, x0) = Quadratic::paper_f1(20, 0.5, 50.0, 0.6, &mut rng);
+        let opt = GpMinOptimizer {
+            kernel: Arc::new(Poly2Kernel),
+            metric: Metric::Iso(1.0),
+            window: 0,
+            center_at_current_gradient: true,
+            opts: OptOptions { gtol: 1e-5, max_iters: 80, line_search: LineSearch::Exact },
+        };
+        let trace = opt.minimize(&q, &x0);
+        assert!(trace.converged, "gnorm end = {:?}", trace.gnorm.last());
+    }
+
+    #[test]
+    fn rbf_gpx_descends_on_rosenbrock() {
+        // Fig. 3 configuration: RBF over gradients, window m = 2, Λ = 0.05I
+        let r = RelaxedRosenbrock::new(20);
+        let x0 = vec![0.5; 20];
+        let opt = GpMinOptimizer {
+            kernel: Arc::new(SquaredExponential),
+            metric: Metric::Iso(0.05),
+            window: 2,
+            center_at_current_gradient: false,
+            opts: OptOptions {
+                gtol: 1e-5,
+                max_iters: 150,
+                line_search: LineSearch::Backtracking,
+            },
+        };
+        let trace = opt.minimize(&r, &x0);
+        let f_end = *trace.f.last().unwrap();
+        assert!(f_end < 1e-3 * trace.f[0], "insufficient descent: {} -> {}", trace.f[0], f_end);
+    }
+
+    #[test]
+    fn descent_guard_prevents_ascent_steps() {
+        // every accepted step must not increase f (backtracking + guard)
+        let r = RelaxedRosenbrock::new(10);
+        let x0 = vec![-0.7; 10];
+        let opt = GpMinOptimizer {
+            kernel: Arc::new(SquaredExponential),
+            metric: Metric::Iso(0.05),
+            window: 3,
+            center_at_current_gradient: false,
+            opts: OptOptions { gtol: 1e-6, max_iters: 60, ..Default::default() },
+        };
+        let trace = opt.minimize(&r, &x0);
+        for w in trace.f.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Line searches shared by all Fig. 2/3 optimizers (the paper stresses that
+//! every algorithm in an experiment uses the *same* line search).
+
+use super::Objective;
+
+/// Line-search strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineSearch {
+    /// Armijo backtracking (sufficient decrease only).
+    Backtracking,
+    /// Strong Wolfe conditions (Nocedal & Wright Alg. 3.5/3.6) — what
+    /// scipy's BFGS uses, our Fig. 3 baseline.
+    StrongWolfe,
+    /// Closed-form optimal step for quadratics (`Objective::exact_step`);
+    /// falls back to backtracking when unavailable.
+    Exact,
+}
+
+/// Result of a line search.
+#[derive(Clone, Copy, Debug)]
+pub struct StepResult {
+    pub alpha: f64,
+    pub f_new: f64,
+}
+
+const C1: f64 = 1e-4;
+const C2: f64 = 0.9;
+
+/// Run the chosen line search from `x` along descent direction `d`.
+/// `f0 = f(x)`, `g0d = ∇f(x)ᵀd` (must be negative).
+pub fn search(
+    kind: LineSearch,
+    obj: &dyn Objective,
+    x: &[f64],
+    d: &[f64],
+    f0: f64,
+    g0d: f64,
+) -> StepResult {
+    match kind {
+        LineSearch::Exact => match obj.exact_step(x, d) {
+            Some(alpha) => {
+                let f_new = obj.value(&step(x, d, alpha));
+                StepResult { alpha, f_new }
+            }
+            None => backtracking(obj, x, d, f0, g0d),
+        },
+        LineSearch::Backtracking => backtracking(obj, x, d, f0, g0d),
+        LineSearch::StrongWolfe => strong_wolfe(obj, x, d, f0, g0d),
+    }
+}
+
+fn step(x: &[f64], d: &[f64], alpha: f64) -> Vec<f64> {
+    x.iter().zip(d).map(|(xi, di)| xi + alpha * di).collect()
+}
+
+/// Armijo backtracking: shrink until `f(x+αd) ≤ f0 + c₁ α g0d`.
+pub fn backtracking(obj: &dyn Objective, x: &[f64], d: &[f64], f0: f64, g0d: f64) -> StepResult {
+    let mut alpha = 1.0;
+    for _ in 0..60 {
+        let f_new = obj.value(&step(x, d, alpha));
+        if f_new <= f0 + C1 * alpha * g0d && f_new.is_finite() {
+            return StepResult { alpha, f_new };
+        }
+        alpha *= 0.5;
+    }
+    StepResult { alpha, f_new: obj.value(&step(x, d, alpha)) }
+}
+
+/// Strong Wolfe line search (bracket + zoom).
+pub fn strong_wolfe(obj: &dyn Objective, x: &[f64], d: &[f64], f0: f64, g0d: f64) -> StepResult {
+    let phi = |a: f64| obj.value(&step(x, d, a));
+    let dphi = |a: f64| {
+        let g = obj.gradient(&step(x, d, a));
+        g.iter().zip(d).map(|(gi, di)| gi * di).sum::<f64>()
+    };
+
+    let mut a_prev = 0.0;
+    let mut f_prev = f0;
+    let mut a = 1.0;
+    let a_max = 64.0;
+    for i in 0..20 {
+        let f_a = phi(a);
+        if f_a > f0 + C1 * a * g0d || (i > 0 && f_a >= f_prev) {
+            return zoom(&phi, &dphi, f0, g0d, a_prev, f_prev, a);
+        }
+        let df_a = dphi(a);
+        if df_a.abs() <= -C2 * g0d {
+            return StepResult { alpha: a, f_new: f_a };
+        }
+        if df_a >= 0.0 {
+            return zoom(&phi, &dphi, f0, g0d, a, f_a, a_prev);
+        }
+        a_prev = a;
+        f_prev = f_a;
+        a = (2.0 * a).min(a_max);
+        if a >= a_max {
+            break;
+        }
+    }
+    let f_a = phi(a);
+    StepResult { alpha: a, f_new: f_a }
+}
+
+fn zoom(
+    phi: &dyn Fn(f64) -> f64,
+    dphi: &dyn Fn(f64) -> f64,
+    f0: f64,
+    g0d: f64,
+    mut lo: f64,
+    mut f_lo: f64,
+    mut hi: f64,
+) -> StepResult {
+    for _ in 0..30 {
+        let a = 0.5 * (lo + hi);
+        let f_a = phi(a);
+        if f_a > f0 + C1 * a * g0d || f_a >= f_lo {
+            hi = a;
+        } else {
+            let df_a = dphi(a);
+            if df_a.abs() <= -C2 * g0d {
+                return StepResult { alpha: a, f_new: f_a };
+            }
+            if df_a * (hi - lo) >= 0.0 {
+                hi = lo;
+            }
+            lo = a;
+            f_lo = f_a;
+        }
+        if (hi - lo).abs() < 1e-12 {
+            break;
+        }
+    }
+    StepResult { alpha: lo, f_new: f_lo }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::{Quadratic, RelaxedRosenbrock};
+    use crate::rng::Rng;
+
+    fn setup() -> (Quadratic, Vec<f64>, Vec<f64>, f64, f64) {
+        let mut rng = Rng::new(1);
+        let (q, x0) = Quadratic::paper_f1(6, 0.5, 20.0, 0.6, &mut rng);
+        let g = q.gradient(&x0);
+        let d: Vec<f64> = g.iter().map(|v| -v).collect();
+        let f0 = q.value(&x0);
+        let g0d: f64 = g.iter().zip(&d).map(|(a, b)| a * b).sum();
+        (q, x0, d, f0, g0d)
+    }
+
+    #[test]
+    fn backtracking_decreases() {
+        let (q, x0, d, f0, g0d) = setup();
+        let res = backtracking(&q, &x0, &d, f0, g0d);
+        assert!(res.f_new < f0);
+        assert!(res.alpha > 0.0);
+    }
+
+    #[test]
+    fn strong_wolfe_satisfies_conditions() {
+        let (q, x0, d, f0, g0d) = setup();
+        let res = strong_wolfe(&q, &x0, &d, f0, g0d);
+        // Armijo
+        assert!(res.f_new <= f0 + C1 * res.alpha * g0d + 1e-12);
+        // curvature
+        let xn: Vec<f64> = x0.iter().zip(&d).map(|(x, dd)| x + res.alpha * dd).collect();
+        let gd: f64 = q.gradient(&xn).iter().zip(&d).map(|(a, b)| a * b).sum();
+        assert!(gd.abs() <= -C2 * g0d + 1e-9, "curvature violated: {gd} vs {}", -C2 * g0d);
+    }
+
+    #[test]
+    fn exact_step_on_quadratic_is_line_minimum() {
+        let (q, x0, d, f0, g0d) = setup();
+        let res = search(LineSearch::Exact, &q, &x0, &d, f0, g0d);
+        let at = |a: f64| {
+            let x: Vec<f64> = x0.iter().zip(&d).map(|(x, dd)| x + a * dd).collect();
+            q.value(&x)
+        };
+        assert!(res.f_new <= at(res.alpha * 0.95) + 1e-12);
+        assert!(res.f_new <= at(res.alpha * 1.05) + 1e-12);
+    }
+
+    #[test]
+    fn exact_falls_back_without_closed_form() {
+        let r = RelaxedRosenbrock::new(5);
+        let x0 = vec![0.8; 5];
+        let g = r.gradient(&x0);
+        let d: Vec<f64> = g.iter().map(|v| -v).collect();
+        let f0 = r.value(&x0);
+        let g0d: f64 = g.iter().zip(&d).map(|(a, b)| a * b).sum();
+        let res = search(LineSearch::Exact, &r, &x0, &d, f0, g0d);
+        assert!(res.f_new < f0);
+    }
+
+    #[test]
+    fn wolfe_on_rosenbrock_makes_progress() {
+        let r = RelaxedRosenbrock::new(8);
+        let x0: Vec<f64> = (0..8).map(|i| 1.0 - 0.2 * i as f64).collect();
+        let g = r.gradient(&x0);
+        let d: Vec<f64> = g.iter().map(|v| -v).collect();
+        let f0 = r.value(&x0);
+        let g0d: f64 = g.iter().zip(&d).map(|(a, b)| a * b).sum();
+        let res = strong_wolfe(&r, &x0, &d, f0, g0d);
+        assert!(res.f_new < f0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Nonparametric optimization with gradient GPs (Sec. 4.1) and baselines.
+//!
+//! * [`GpHessianOptimizer`] — Alg. 1 "GP-H": quasi-Newton steps from the GP
+//!   posterior Hessian (Eq. 12),
+//! * [`GpMinOptimizer`] — Alg. 1 "GP-X": steps toward the inferred optimum
+//!   (Eq. 13, flipped inference),
+//! * [`Bfgs`] — classical BFGS baseline (scipy-equivalent, Fig. 3),
+//! * [`LinearCg`] — conjugate gradients on quadratics (Fig. 2 baseline),
+//! * [`plinalg`] — the probabilistic linear solvers of Sec. 4.2,
+//! * shared [`LineSearch`]es and test [`Objective`]s (F.1 quadratic, Eq. 17
+//!   relaxed Rosenbrock).
+
+mod bfgs;
+mod cg;
+mod gph;
+mod gpx;
+mod linesearch;
+mod objective;
+pub mod plinalg;
+
+pub use bfgs::Bfgs;
+pub use cg::LinearCg;
+pub use gph::GpHessianOptimizer;
+pub use gpx::GpMinOptimizer;
+pub use linesearch::{backtracking, search, strong_wolfe, LineSearch, StepResult};
+pub use objective::{Counted, Objective, Quadratic, RelaxedRosenbrock};
+
+/// Common optimizer telemetry: one entry per iteration (index 0 = start).
+#[derive(Clone, Debug, Default)]
+pub struct OptTrace {
+    /// Objective value per iteration.
+    pub f: Vec<f64>,
+    /// Gradient norm per iteration (what Fig. 2 plots).
+    pub gnorm: Vec<f64>,
+    /// Final iterate.
+    pub x: Vec<f64>,
+    /// Whether the gradient tolerance was reached.
+    pub converged: bool,
+    /// Gradient evaluations consumed.
+    pub g_evals: usize,
+    /// Function evaluations consumed.
+    pub f_evals: usize,
+}
+
+impl OptTrace {
+    pub fn iterations(&self) -> usize {
+        self.gnorm.len().saturating_sub(1)
+    }
+}
+
+/// Stopping/line-search options shared by all optimizers.
+#[derive(Clone, Debug)]
+pub struct OptOptions {
+    /// Stop when `‖∇f‖₂ ≤ gtol · max(1, ‖∇f(x₀)‖₂)`.
+    pub gtol: f64,
+    pub max_iters: usize,
+    pub line_search: LineSearch,
+}
+
+impl Default for OptOptions {
+    fn default() -> Self {
+        OptOptions { gtol: 1e-5, max_iters: 200, line_search: LineSearch::Backtracking }
+    }
+}
+
+pub(crate) fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}

@@ -1,0 +1,258 @@
+//! Optimization test problems and the objective abstraction.
+
+use std::cell::Cell;
+
+use crate::linalg::{random_orthogonal, Mat};
+use crate::rng::Rng;
+
+/// A differentiable scalar objective.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    fn value(&self, x: &[f64]) -> f64;
+    fn gradient(&self, x: &[f64]) -> Vec<f64>;
+    /// Optimal step length along `d` from `x` if available in closed form
+    /// (quadratics: `α = −dᵀg / dᵀAd`, the step CG and the probabilistic
+    /// solvers share in Fig. 2).
+    fn exact_step(&self, _x: &[f64], _d: &[f64]) -> Option<f64> {
+        None
+    }
+}
+
+/// `f(x) = ½(x−x⋆)ᵀA(x−x⋆)` — Eq. 14. Equivalent to solving `Ax = b` with
+/// `b = Ax⋆`.
+pub struct Quadratic {
+    pub a: Mat,
+    pub xstar: Vec<f64>,
+}
+
+impl Quadratic {
+    pub fn new(a: Mat, xstar: Vec<f64>) -> Self {
+        assert!(a.is_square());
+        assert_eq!(a.rows(), xstar.len());
+        Quadratic { a, xstar }
+    }
+
+    /// The App. F.1 synthetic problem: eigenvalues
+    /// `λ_i = λmin + (λmax−λmin)/(D−1) · ρ^{D−i} · (D−i)`, random orthogonal
+    /// eigenbasis, `x₀ ∼ N(0, 5²I)`, `x⋆ ∼ N(−2·1, I)`.
+    pub fn paper_f1(d: usize, lambda_min: f64, lambda_max: f64, rho: f64, rng: &mut Rng) -> (Self, Vec<f64>) {
+        let spec = Self::paper_f1_spectrum(d, lambda_min, lambda_max, rho);
+        let q = random_orthogonal(d, rng);
+        let a = q.matmul(&Mat::diag(&spec)).matmul_t(&q);
+        let xstar: Vec<f64> = (0..d).map(|_| -2.0 + rng.gauss()).collect();
+        let x0: Vec<f64> = (0..d).map(|_| 5.0 * rng.gauss()).collect();
+        (Quadratic::new(a, xstar), x0)
+    }
+
+    /// Just the spectrum of the F.1 problem (tested against its description).
+    ///
+    /// Paper erratum: App. F.1 prints
+    /// `λ_i = λmin + (λmax−λmin)/(N−1)·ρ^{N−i}·(N−i)`, whose maximum is
+    /// ≈ 1.22 for the stated parameters — inconsistent with the stated
+    /// κ(A) = 200 and "30 largest eigenvalues in [1,100]". The intended
+    /// spectrum is clearly the classic Strakoš test spectrum
+    /// `λ_i = λmin + (i−1)/(N−1)·(λmax−λmin)·ρ^{N−i}`, which reproduces
+    /// every property the paper describes (λmax = 100, λmin = 0.5,
+    /// ~a dozen eigenvalues above 1, the rest clustered near λmin, CG
+    /// converging in "slightly more than 15" iterations).
+    pub fn paper_f1_spectrum(d: usize, lambda_min: f64, lambda_max: f64, rho: f64) -> Vec<f64> {
+        (1..=d)
+            .map(|i| {
+                lambda_min
+                    + (i as f64 - 1.0) / (d as f64 - 1.0)
+                        * (lambda_max - lambda_min)
+                        * rho.powi((d - i) as i32)
+            })
+            .collect()
+    }
+
+    /// Right-hand side `b = Ax⋆` of the equivalent linear system.
+    pub fn b(&self) -> Vec<f64> {
+        self.a.matvec(&self.xstar)
+    }
+}
+
+impl Objective for Quadratic {
+    fn dim(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let diff: Vec<f64> = x.iter().zip(&self.xstar).map(|(a, b)| a - b).collect();
+        let ad = self.a.matvec(&diff);
+        0.5 * diff.iter().zip(&ad).map(|(a, b)| a * b).sum::<f64>()
+    }
+
+    fn gradient(&self, x: &[f64]) -> Vec<f64> {
+        let diff: Vec<f64> = x.iter().zip(&self.xstar).map(|(a, b)| a - b).collect();
+        self.a.matvec(&diff)
+    }
+
+    fn exact_step(&self, x: &[f64], d: &[f64]) -> Option<f64> {
+        let g = self.gradient(x);
+        let ad = self.a.matvec(d);
+        let dad: f64 = d.iter().zip(&ad).map(|(a, b)| a * b).sum();
+        if dad <= 0.0 {
+            return None;
+        }
+        let dg: f64 = d.iter().zip(&g).map(|(a, b)| a * b).sum();
+        Some(-dg / dad)
+    }
+}
+
+/// The relaxed 100-dimensional Rosenbrock function of Eq. 17:
+/// `f(x) = Σ_{i<D} x_i² + 2(x_{i+1} − x_i²)²`, minimum `f(0) = 0`.
+pub struct RelaxedRosenbrock {
+    d: usize,
+}
+
+impl RelaxedRosenbrock {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 2);
+        RelaxedRosenbrock { d }
+    }
+}
+
+impl Objective for RelaxedRosenbrock {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut f = 0.0;
+        for i in 0..self.d - 1 {
+            let t = x[i + 1] - x[i] * x[i];
+            f += x[i] * x[i] + 2.0 * t * t;
+        }
+        f
+    }
+
+    fn gradient(&self, x: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.d];
+        for i in 0..self.d - 1 {
+            let t = x[i + 1] - x[i] * x[i];
+            g[i] += 2.0 * x[i] - 8.0 * t * x[i];
+            g[i + 1] += 4.0 * t;
+        }
+        g
+    }
+}
+
+/// Wrapper counting function/gradient evaluations (shared-budget reporting
+/// across the Fig. 2/3 algorithms).
+pub struct Counted<'a> {
+    inner: &'a dyn Objective,
+    pub f_evals: Cell<usize>,
+    pub g_evals: Cell<usize>,
+}
+
+impl<'a> Counted<'a> {
+    pub fn new(inner: &'a dyn Objective) -> Self {
+        Counted { inner, f_evals: Cell::new(0), g_evals: Cell::new(0) }
+    }
+}
+
+impl Objective for Counted<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn value(&self, x: &[f64]) -> f64 {
+        self.f_evals.set(self.f_evals.get() + 1);
+        self.inner.value(x)
+    }
+    fn gradient(&self, x: &[f64]) -> Vec<f64> {
+        self.g_evals.set(self.g_evals.get() + 1);
+        self.inner.gradient(x)
+    }
+    fn exact_step(&self, x: &[f64], d: &[f64]) -> Option<f64> {
+        self.inner.exact_step(x, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_gradient(obj: &dyn Objective, x: &[f64]) -> Vec<f64> {
+        let h = 1e-6;
+        (0..x.len())
+            .map(|i| {
+                let mut xp = x.to_vec();
+                let mut xm = x.to_vec();
+                xp[i] += h;
+                xm[i] -= h;
+                (obj.value(&xp) - obj.value(&xm)) / (2.0 * h)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quadratic_gradient_matches_fd() {
+        let mut rng = Rng::new(1);
+        let (q, x0) = Quadratic::paper_f1(8, 0.5, 100.0, 0.6, &mut rng);
+        let g = q.gradient(&x0);
+        let fd = fd_gradient(&q, &x0);
+        for i in 0..8 {
+            assert!((g[i] - fd[i]).abs() < 1e-3 * (1.0 + fd[i].abs()), "dim {i}");
+        }
+    }
+
+    #[test]
+    fn rosenbrock_gradient_matches_fd() {
+        let r = RelaxedRosenbrock::new(7);
+        let x: Vec<f64> = (0..7).map(|i| 0.3 * (i as f64) - 1.0).collect();
+        let g = r.gradient(&x);
+        let fd = fd_gradient(&r, &x);
+        for i in 0..7 {
+            assert!((g[i] - fd[i]).abs() < 1e-4 * (1.0 + fd[i].abs()), "dim {i}");
+        }
+    }
+
+    #[test]
+    fn rosenbrock_minimum_at_origin() {
+        let r = RelaxedRosenbrock::new(10);
+        let zero = vec![0.0; 10];
+        assert_eq!(r.value(&zero), 0.0);
+        assert!(r.gradient(&zero).iter().all(|&g| g == 0.0));
+        let x = vec![0.1; 10];
+        assert!(r.value(&x) > 0.0);
+    }
+
+    #[test]
+    fn f1_spectrum_shape() {
+        // κ(A) = λmax/λmin = 200; roughly the 15 largest above 1 for ρ = 0.6
+        let spec = Quadratic::paper_f1_spectrum(100, 0.5, 100.0, 0.6);
+        let max = spec.iter().cloned().fold(f64::MIN, f64::max);
+        let min = spec.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max - 100.0).abs() < 1e-9, "λmax = {max}");
+        assert!((min - 0.5).abs() < 1e-9, "λmin = {min}");
+        let above_one = spec.iter().filter(|&&l| l > 1.0).count();
+        assert!((8..=20).contains(&above_one), "{above_one} eigenvalues above 1");
+    }
+
+    #[test]
+    fn exact_step_minimizes_along_direction() {
+        let mut rng = Rng::new(2);
+        let (q, x0) = Quadratic::paper_f1(6, 0.5, 10.0, 0.6, &mut rng);
+        let d: Vec<f64> = q.gradient(&x0).iter().map(|v| -v).collect();
+        let alpha = q.exact_step(&x0, &d).unwrap();
+        let at = |a: f64| {
+            let x: Vec<f64> = x0.iter().zip(&d).map(|(x, dd)| x + a * dd).collect();
+            q.value(&x)
+        };
+        assert!(at(alpha) < at(alpha * 0.9));
+        assert!(at(alpha) < at(alpha * 1.1));
+    }
+
+    #[test]
+    fn counter_counts() {
+        let r = RelaxedRosenbrock::new(4);
+        let c = Counted::new(&r);
+        let x = vec![0.5; 4];
+        c.value(&x);
+        c.value(&x);
+        c.gradient(&x);
+        assert_eq!(c.f_evals.get(), 2);
+        assert_eq!(c.g_evals.get(), 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO-text artifacts.
+//!
+//! The compile path (`make artifacts`) runs python/JAX **once** and writes
+//! `artifacts/*.hlo.txt` plus `manifest.toml`; this module is the only thing
+//! that touches them at run time:
+//!
+//! ```text
+//! manifest.toml ─▶ ArtifactRegistry ─▶ PjRtClient::cpu()
+//!                      │                    │
+//!                      └── HloModuleProto::from_text_file ─▶ compile ─▶ execute
+//! ```
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids — see `/opt/xla-example/README.md`.
+//!
+//! Conventions: all artifact tensors are `f32`, row-major in the python
+//! `(D, N)` layout. [`Mat`] is column-major `f64`, so the boundary helpers
+//! transpose + cast in both directions.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::Config;
+use crate::linalg::Mat;
+
+/// Shape+dtype of one artifact input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions; empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse the manifest encoding `"f32:8x4"` / `"f32:scalar"`.
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        let rest = s
+            .strip_prefix("f32:")
+            .ok_or_else(|| anyhow::anyhow!("unsupported dtype in spec {s:?} (only f32)"))?;
+        if rest == "scalar" {
+            return Ok(TensorSpec { dims: vec![] });
+        }
+        let dims = rest
+            .split('x')
+            .map(|p| p.parse::<usize>().map_err(|e| anyhow::anyhow!("bad dim {p:?}: {e}")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TensorSpec { dims })
+    }
+}
+
+/// One entry of `manifest.toml`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub description: String,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// Argument value for [`ArtifactRegistry::execute`].
+pub enum ArgValue<'a> {
+    /// A `D×N` matrix (transposed+cast to the python row-major f32 layout).
+    Mat(&'a Mat),
+    /// A scalar parameter (e.g. `inv_l2`).
+    Scalar(f64),
+}
+
+/// Loads artifacts per the manifest and executes them on the PJRT CPU
+/// client. Executables are compiled lazily on first use and cached.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the artifact directory (must contain `manifest.toml`).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Config::from_file(dir.join("manifest.toml"))?;
+        let mut specs = HashMap::new();
+        for name in manifest.subsections("artifact") {
+            let key = |k: &str| format!("artifact.{name}.{k}");
+            let file = manifest
+                .str(&key("file"))
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing file"))?;
+            let inputs = manifest
+                .str_array(&key("inputs"))
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(|s| TensorSpec::parse(s))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    description: manifest.str(&key("description")).unwrap_or("").to_string(),
+                    inputs,
+                },
+            );
+        }
+        anyhow::ensure!(!specs.is_empty(), "no artifacts found in {dir:?}");
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(ArtifactRegistry { client, specs, compiled: RefCell::new(HashMap::new()) })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Spec lookup.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Compile (or fetch the cached) executable.
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        if self.compiled.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow::anyhow!("parsing {:?}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.compiled.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Returns the first (and only) tuple element as a
+    /// flat row-major `f32` buffer converted to `f64`.
+    pub fn execute_raw(&self, name: &str, args: &[ArgValue]) -> anyhow::Result<Vec<f64>> {
+        self.ensure_compiled(name)?;
+        let spec = &self.specs[name];
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "artifact {name}: expected {} args, got {}",
+            spec.inputs.len(),
+            args.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, ts) in args.iter().zip(&spec.inputs) {
+            literals.push(to_literal(arg, ts)?);
+        }
+        let compiled = self.compiled.borrow();
+        let exe = &compiled[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untupling {name} result: {e:?}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("reading {name} result: {e:?}"))?;
+        Ok(v.into_iter().map(|x| x as f64).collect())
+    }
+
+    /// Execute an artifact whose output is a `(D, N)` python-layout tensor,
+    /// returned as a column-major [`Mat`].
+    pub fn execute_mat(
+        &self,
+        name: &str,
+        args: &[ArgValue],
+        d: usize,
+        n: usize,
+    ) -> anyhow::Result<Mat> {
+        let flat = self.execute_raw(name, args)?;
+        anyhow::ensure!(flat.len() == d * n, "output size {} != {d}x{n}", flat.len());
+        // row-major (D, N) → col-major D×N
+        Ok(Mat::from_fn(d, n, |i, j| flat[i * n + j]))
+    }
+}
+
+/// Convert an argument to an XLA literal in the artifact layout.
+fn to_literal(arg: &ArgValue, spec: &TensorSpec) -> anyhow::Result<xla::Literal> {
+    match arg {
+        ArgValue::Scalar(v) => {
+            anyhow::ensure!(spec.dims.is_empty(), "scalar passed for tensor input");
+            Ok(xla::Literal::scalar(*v as f32))
+        }
+        ArgValue::Mat(m) => {
+            anyhow::ensure!(
+                spec.dims.len() == 2 && spec.dims[0] == m.rows() && spec.dims[1] == m.cols(),
+                "matrix {}x{} does not match artifact input {:?}",
+                m.rows(),
+                m.cols(),
+                spec.dims
+            );
+            // col-major D×N f64 → row-major (D, N) f32
+            let (d, n) = (m.rows(), m.cols());
+            let mut buf = vec![0f32; d * n];
+            for j in 0..n {
+                let col = m.col(j);
+                for i in 0..d {
+                    buf[i * n + j] = col[i] as f32;
+                }
+            }
+            xla::Literal::vec1(&buf)
+                .reshape(&[d as i64, n as i64])
+                .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        assert_eq!(TensorSpec::parse("f32:8x4").unwrap().dims, vec![8, 4]);
+        assert!(TensorSpec::parse("f32:scalar").unwrap().dims.is_empty());
+        assert!(TensorSpec::parse("f64:8x4").is_err());
+        assert!(TensorSpec::parse("f32:8xq").is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! Property-based tests over randomized instances.
+//!
+//! Substitution note (DESIGN.md §6): proptest is not in the offline
+//! registry, so these use the in-tree deterministic [`Rng`] to sweep many
+//! random cases per invariant — same idea, seeded and reproducible. Each
+//! property runs against freshly sampled shapes, kernels, metrics and data.
+
+use std::sync::Arc;
+
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::{woodbury_solve, GramFactors, GramOperator, Metric};
+use gdkron::kernels::{
+    ExponentialKernel, Matern32, Matern52, RationalQuadratic, ScalarKernel, SquaredExponential,
+};
+use gdkron::linalg::{Lu, Mat};
+use gdkron::rng::Rng;
+use gdkron::solvers::{cg_solve, CgOptions, JacobiPrecond, LinearOp};
+
+fn random_kernel(rng: &mut Rng) -> Arc<dyn ScalarKernel> {
+    match rng.below(5) {
+        0 => Arc::new(SquaredExponential),
+        1 => Arc::new(Matern32),
+        2 => Arc::new(Matern52),
+        3 => Arc::new(RationalQuadratic::new(0.5 + 2.0 * rng.uniform())),
+        _ => Arc::new(ExponentialKernel),
+    }
+}
+
+fn random_metric(rng: &mut Rng, d: usize) -> Metric {
+    if rng.below(2) == 0 {
+        Metric::Iso(0.1 + rng.uniform())
+    } else {
+        Metric::Diag((0..d).map(|_| 0.1 + rng.uniform()).collect())
+    }
+}
+
+/// Dot-product kernels get a random center half the time.
+fn random_center(rng: &mut Rng, kern: &dyn ScalarKernel, d: usize) -> Option<Vec<f64>> {
+    use gdkron::kernels::KernelClass;
+    (kern.class() == KernelClass::DotProduct && rng.below(2) == 0)
+        .then(|| rng.gauss_vec(d).iter().map(|v| 0.3 * v).collect())
+}
+
+#[test]
+fn property_matvec_equals_dense_gram() {
+    let mut rng = Rng::new(0xA1);
+    for case in 0..40 {
+        let d = 2 + rng.below(7);
+        let n = 1 + rng.below(5);
+        let kern = random_kernel(&mut rng);
+        let metric = random_metric(&mut rng, d);
+        let center = random_center(&mut rng, kern.as_ref(), d);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let v = Mat::from_fn(d, n, |_, _| rng.gauss());
+        // exponential dot kernel can overflow for large r; damp inputs
+        let f = GramFactors::new(kern.as_ref(), &x.scale(0.5), metric, center.as_deref());
+        let dense = f.to_dense();
+        let got = f.matvec(&v);
+        let want = dense.matvec(v.as_slice());
+        let scale = 1.0 + want.iter().fold(0.0_f64, |m, v| m.max(v.abs()));
+        for (i, (g, w)) in got.as_slice().iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-9 * scale,
+                "case {case} ({}, d={d}, n={n}) entry {i}: {g} vs {w}",
+                kern.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn property_woodbury_solves_the_system() {
+    let mut rng = Rng::new(0xB2);
+    let mut solved = 0;
+    for case in 0..40 {
+        let d = 3 + rng.below(8);
+        let n = 1 + rng.below(4);
+        let kern = random_kernel(&mut rng);
+        let metric = random_metric(&mut rng, d);
+        let center = random_center(&mut rng, kern.as_ref(), d);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let f = GramFactors::new(kern.as_ref(), &x.scale(0.5), metric, center.as_deref());
+        // random instances can be genuinely singular (that's an Err, not a
+        // wrong answer); whenever the solver *claims* success the residual
+        // must vanish.
+        if let Ok(z) = woodbury_solve(&f, &g) {
+            let back = f.matvec(&z);
+            let err = (&back - &g).max_abs();
+            assert!(
+                err < 1e-6 * (1.0 + g.max_abs()),
+                "case {case} ({}): residual {err}",
+                kern.name()
+            );
+            solved += 1;
+        }
+    }
+    assert!(solved >= 30, "only {solved}/40 instances solvable — suspicious");
+}
+
+#[test]
+fn property_gp_interpolates_observations() {
+    let mut rng = Rng::new(0xC3);
+    for case in 0..25 {
+        let d = 3 + rng.below(6);
+        let n = 1 + rng.below(4);
+        let kern = random_kernel(&mut rng);
+        let metric = random_metric(&mut rng, d);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let Ok(gp) = GradientGp::fit(kern.clone(), metric, &x.scale(0.6), &g, &FitOptions::default())
+        else {
+            continue;
+        };
+        for b in 0..n {
+            let pred = gp.predict_gradient(gp.x().col(b));
+            for i in 0..d {
+                assert!(
+                    (pred[i] - g[(i, b)]).abs() < 1e-5 * (1.0 + g[(i, b)].abs()),
+                    "case {case} ({}): obs {b} dim {i}",
+                    kern.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_hessian_is_symmetric_and_consistent() {
+    let mut rng = Rng::new(0xD4);
+    for _ in 0..20 {
+        let d = 3 + rng.below(4);
+        let n = 2 + rng.below(3);
+        let kern = random_kernel(&mut rng);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let Ok(gp) =
+            GradientGp::fit(kern, Metric::Iso(0.4), &x.scale(0.6), &g, &FitOptions::default())
+        else {
+            continue;
+        };
+        let xq = rng.gauss_vec(d);
+        let h = gp.predict_hessian(&xq);
+        assert!((&h - &h.t()).max_abs() < 1e-10);
+        // Jacobian consistency at one random coordinate
+        let j = rng.below(d);
+        let eps = 1e-5;
+        let mut xp = xq.clone();
+        let mut xm = xq.clone();
+        xp[j] += eps;
+        xm[j] -= eps;
+        let gp_ = gp.predict_gradient(&xp);
+        let gm_ = gp.predict_gradient(&xm);
+        for i in 0..d {
+            let fd = (gp_[i] - gm_[i]) / (2.0 * eps);
+            assert!(
+                (h[(i, j)] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "H[{i},{j}] = {} vs fd {fd}",
+                h[(i, j)]
+            );
+        }
+    }
+}
+
+#[test]
+fn property_cg_residual_never_explodes() {
+    let mut rng = Rng::new(0xE5);
+    for _ in 0..20 {
+        let d = 4 + rng.below(8);
+        let n = 2 + rng.below(6);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let f = GramFactors::with_noise(
+            &SquaredExponential,
+            &x,
+            Metric::Iso(0.3 + rng.uniform()),
+            None,
+            1e-8,
+        );
+        let op = GramOperator::new(&f);
+        let b = rng.gauss_vec(d * n);
+        let res = cg_solve(
+            &op,
+            &b,
+            None,
+            &CgOptions {
+                rtol: 1e-8,
+                max_iters: 20 * d * n,
+                precond: Some(JacobiPrecond::new(&f.gram_diag())),
+                track_history: true,
+            },
+        );
+        let r0 = res.resid_history[0];
+        for (i, r) in res.resid_history.iter().enumerate() {
+            assert!(r.is_finite() && *r < 100.0 * r0, "iter {i}: residual {r} vs start {r0}");
+        }
+        assert!(res.converged, "CG failed on an SPD system with noise");
+    }
+}
+
+#[test]
+fn property_gram_operator_is_symmetric() {
+    // uᵀ(Av) == vᵀ(Au) for random u, v — the property CG relies on.
+    let mut rng = Rng::new(0xF6);
+    for _ in 0..20 {
+        let d = 3 + rng.below(6);
+        let n = 1 + rng.below(5);
+        let kern = random_kernel(&mut rng);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let f = GramFactors::new(kern.as_ref(), &x.scale(0.5), Metric::Iso(0.5), None);
+        let op = GramOperator::new(&f);
+        let u = rng.gauss_vec(d * n);
+        let v = rng.gauss_vec(d * n);
+        let mut au = vec![0.0; d * n];
+        let mut av = vec![0.0; d * n];
+        op.apply(&u, &mut au);
+        op.apply(&v, &mut av);
+        let utav: f64 = u.iter().zip(&av).map(|(a, b)| a * b).sum();
+        let vtau: f64 = v.iter().zip(&au).map(|(a, b)| a * b).sum();
+        let scale = utav.abs().max(vtau.abs()).max(1.0);
+        assert!(
+            (utav - vtau).abs() < 1e-9 * scale,
+            "{}: asymmetry {utav} vs {vtau}",
+            kern.name()
+        );
+    }
+}
+
+#[test]
+fn property_dense_and_factored_solve_agree_when_both_exist() {
+    let mut rng = Rng::new(0x17);
+    for _ in 0..20 {
+        let d = 3 + rng.below(5);
+        let n = 1 + rng.below(3);
+        let kern = random_kernel(&mut rng);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let f = GramFactors::new(kern.as_ref(), &x.scale(0.5), Metric::Iso(0.6), None);
+        let dense = f.to_dense();
+        let (Ok(z), Ok(lu)) = (woodbury_solve(&f, &g), Lu::factor(&dense)) else {
+            continue;
+        };
+        let zd = lu.solve_vec(g.as_slice());
+        let scale = zd.iter().fold(1.0_f64, |m, v| m.max(v.abs()));
+        for (a, b) in z.as_slice().iter().zip(&zd) {
+            assert!((a - b).abs() < 1e-6 * scale, "{}: {a} vs {b}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn property_config_parser_never_panics_on_garbage() {
+    use gdkron::config::Config;
+    let mut rng = Rng::new(0x28);
+    let alphabet: Vec<char> =
+        "abc=[]\"#.\n 0123456789-_eE+,xyz\t{}()!@".chars().collect();
+    for _ in 0..300 {
+        let len = rng.below(120);
+        let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        // must return Ok or Err, never panic
+        let _ = Config::from_str(&s);
+    }
+}
+
+#[test]
+fn property_coordinator_serves_exactly_once_per_request() {
+    use gdkron::coordinator::{BatchPolicy, SurrogateServer};
+    use std::time::Duration;
+    let mut rng = Rng::new(0x39);
+    for _ in 0..5 {
+        let d = 3 + rng.below(4);
+        let n = 2 + rng.below(3);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let gp = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let reference = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        // random batching policy — results must be invariant to it
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(9),
+            deadline: Duration::from_micros(rng.below(800) as u64),
+        };
+        let server = SurrogateServer::spawn_native(gp, policy).unwrap();
+        let client = server.client();
+        let total = 30;
+        for _ in 0..total {
+            let q = rng.gauss_vec(d);
+            let got = client.predict(&q).unwrap();
+            let want = reference.predict_gradient(&q);
+            for i in 0..d {
+                assert_eq!(got[i], want[i], "batching changed the answer");
+            }
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, total, "request accounting broken");
+        assert_eq!(m.errors, 0);
+    }
+}

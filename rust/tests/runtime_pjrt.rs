@@ -1,0 +1,168 @@
+//! End-to-end three-layer validation: the AOT artifacts produced by
+//! python/JAX/Pallas (`make artifacts`) are loaded through the PJRT runtime
+//! and cross-checked against the native rust implementation of the same
+//! math. This is the proof that L1 (Pallas), L2 (JAX) and L3 (rust) agree.
+//!
+//! Requires `artifacts/manifest.toml` (skipped with a message otherwise, so
+//! `cargo test` works before `make artifacts`).
+
+use std::sync::Arc;
+
+use gdkron::coordinator::{BatchPolicy, Engine, PjrtEngine, SurrogateServer};
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::{GramFactors, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::runtime::{ArgValue, ArtifactRegistry};
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match ArtifactRegistry::open(dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn sample(d: usize, n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (Mat::from_fn(d, n, |_, _| rng.gauss()), Mat::from_fn(d, n, |_, _| rng.gauss()))
+}
+
+const INV_L2: f64 = 0.5;
+
+#[test]
+fn pjrt_matvec_matches_native() {
+    let Some(reg) = registry() else { return };
+    let (x, v) = sample(8, 4, 1);
+    let got = reg
+        .execute_mat(
+            "smoke_matvec_d8_n4",
+            &[ArgValue::Mat(&x), ArgValue::Mat(&v), ArgValue::Scalar(INV_L2)],
+            8,
+            4,
+        )
+        .unwrap();
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(INV_L2), None);
+    let want = f.matvec(&v);
+    let err = (&got - &want).max_abs();
+    assert!(err < 1e-4 * (1.0 + want.max_abs()), "pjrt vs native matvec: {err}");
+}
+
+#[test]
+fn pjrt_fit_matches_native_woodbury() {
+    let Some(reg) = registry() else { return };
+    let (x, g) = sample(8, 4, 2);
+    let got = reg
+        .execute_mat(
+            "smoke_fit_d8_n4",
+            &[ArgValue::Mat(&x), ArgValue::Mat(&g), ArgValue::Scalar(INV_L2)],
+            8,
+            4,
+        )
+        .unwrap();
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(INV_L2),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    let err = (&got - gp.z()).max_abs();
+    assert!(err < 1e-3 * (1.0 + gp.z().max_abs()), "pjrt vs native fit: {err}");
+}
+
+#[test]
+fn pjrt_predict_matches_native() {
+    let Some(reg) = registry() else { return };
+    let (x, g) = sample(8, 4, 3);
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(INV_L2),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(33);
+    let xq = Mat::from_fn(8, 4, |_, _| rng.gauss());
+    let got = reg
+        .execute_mat(
+            "smoke_predict_d8_n4_b4",
+            &[
+                ArgValue::Mat(&x),
+                ArgValue::Mat(gp.z()),
+                ArgValue::Mat(&xq),
+                ArgValue::Scalar(INV_L2),
+            ],
+            8,
+            4,
+        )
+        .unwrap();
+    let want = gp.predict_gradients(&xq);
+    let err = (&got - &want).max_abs();
+    assert!(err < 1e-4 * (1.0 + want.max_abs()), "pjrt vs native predict: {err}");
+}
+
+#[test]
+fn pjrt_engine_through_surrogate_server() {
+    // the full L3 path: coordinator → batcher → PJRT engine → artifact
+    if registry().is_none() {
+        return;
+    }
+    let (x, g) = sample(8, 4, 4);
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(INV_L2),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    let z = gp.z().clone();
+    let want0 = gp.predict_gradient(&vec![0.25; 8]);
+    let xc = x.clone();
+    let server = SurrogateServer::spawn(
+        move || {
+            let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+            let reg = ArtifactRegistry::open(dir)?;
+            let engine = PjrtEngine::new(reg, "smoke_predict_d8_n4_b4", xc, z, INV_L2)?;
+            Ok(Box::new(engine) as Box<dyn Engine>)
+        },
+        BatchPolicy { max_batch: 4, deadline: std::time::Duration::from_millis(1) },
+    )
+    .unwrap();
+    let client = server.client();
+    let got = client.predict(&vec![0.25; 8]).unwrap();
+    for i in 0..8 {
+        assert!(
+            (got[i] - want0[i]).abs() < 1e-4 * (1.0 + want0[i].abs()),
+            "dim {i}: {} vs {}",
+            got[i],
+            want0[i]
+        );
+    }
+    // concurrent clients through the PJRT backend
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let c = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(50 + t);
+            for _ in 0..10 {
+                let q = rng.gauss_vec(8);
+                let r = c.predict(&q).unwrap();
+                assert!(r.iter().all(|v| v.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, 41);
+    assert_eq!(m.errors, 0);
+}
