@@ -4,11 +4,14 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_gradients
+//! # optional server config: [server] max_batch / deadline_us,
+//! #                         [runtime] threads
+//! cargo run --release --example serve_gradients -- server.toml
 //! ```
 
 use std::sync::Arc;
-use std::time::Duration;
 
+use gdkron::config::Config;
 use gdkron::coordinator::{BatchPolicy, Engine, PjrtEngine, SurrogateServer};
 use gdkron::gp::{FitOptions, GradientGp};
 use gdkron::gram::Metric;
@@ -19,6 +22,17 @@ use gdkron::rng::Rng;
 use gdkron::runtime::ArtifactRegistry;
 
 fn main() -> anyhow::Result<()> {
+    // batching + threads knobs from an optional config file argument
+    let config_path = std::env::args().nth(1);
+    let config = match &config_path {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    let threads = gdkron::config::resolve_threads(&config);
+    if threads >= 1 {
+        gdkron::linalg::par::set_threads(threads);
+    }
+
     let d = 100;
     let n_train = 10;
     let inv_l2 = 1.0 / (0.4 * d as f64);
@@ -43,11 +57,20 @@ fn main() -> anyhow::Result<()> {
     )?;
     let z = gp.z().clone();
 
-    // engine: PJRT artifact when available, native engine otherwise.
-    let policy = BatchPolicy { max_batch: 8, deadline: Duration::from_micros(500) };
-    let use_pjrt = ArtifactRegistry::open("artifacts")
-        .map(|r| r.spec("predict_d100_n10_b8").is_some())
-        .unwrap_or(false);
+    // engine: PJRT artifact when available, native engine otherwise. The
+    // cfg! gate matters: without the `pjrt` feature the registry still
+    // parses manifests but cannot execute, so artifacts on disk must not
+    // pull us off the native engine.
+    // Config file given → its [server] keys; bare run → the historical pin.
+    let policy = if config_path.is_some() {
+        BatchPolicy::from_config(&config)
+    } else {
+        BatchPolicy { max_batch: 8, deadline: std::time::Duration::from_micros(500) }
+    };
+    let use_pjrt = cfg!(feature = "pjrt")
+        && ArtifactRegistry::open("artifacts")
+            .map(|r| r.spec("predict_d100_n10_b8").is_some())
+            .unwrap_or(false);
     let server = if use_pjrt {
         println!("serving through the AOT PJRT artifact `predict_d100_n10_b8`");
         let xc = x.clone();

@@ -1,0 +1,75 @@
+//! Bench: batched multi-RHS solving — block CG vs sequential CG on the
+//! serving-scale SE Gram operator, plus the parallel-pool scaling of the
+//! gemm kernels that power the block applications.
+//!
+//! ```bash
+//! cargo bench --bench block_solve            # machine default pool
+//! GDKRON_THREADS=1 cargo bench --bench block_solve   # serial baseline
+//! ```
+
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box};
+use gdkron::gram::{GramFactors, GramOperator, Metric};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::{par, Mat};
+use gdkron::rng::Rng;
+use gdkron::solvers::{block_cg_solve, cg_solve, CgOptions, JacobiPrecond};
+
+fn main() {
+    println!(
+        "# block_solve — K=8 RHS on the D=256, N=8 SE Gram operator ({} pool threads)",
+        par::threads()
+    );
+    let (d, n, k) = (256usize, 8usize, 8usize);
+    let mut rng = Rng::new(1);
+    let x = Mat::from_fn(d, n, |_, _| rng.uniform_in(-2.0, 2.0));
+    let inv_l2 = 1.0 / (10.0 * d as f64);
+    let f = GramFactors::with_noise(&SquaredExponential, &x, Metric::Iso(inv_l2), None, 1e-4);
+    let op = GramOperator::new(&f);
+    let b = Mat::from_fn(d * n, k, |_, _| rng.gauss());
+    let opts = CgOptions {
+        rtol: 1e-6,
+        max_iters: 5000,
+        precond: Some(JacobiPrecond::new(&f.gram_diag())),
+        track_history: false,
+    };
+
+    // one instrumented pass for the op-count story
+    let mut seq_applies = 0;
+    for j in 0..k {
+        let res = cg_solve(&op, b.col(j), None, &opts);
+        seq_applies += res.iters + 1;
+    }
+    let block = block_cg_solve(&op, &b, &opts);
+    println!(
+        "operator applications (column-equivalents): sequential {} vs block {} ({} iters, all converged: {})",
+        seq_applies,
+        block.col_applies,
+        block.iters,
+        block.all_converged()
+    );
+
+    bench_with("sequential cg  K=8 d=256 n=8", Duration::from_millis(600), 7, &mut || {
+        let mut total = 0;
+        for j in 0..k {
+            total += cg_solve(&op, b.col(j), None, &opts).iters;
+        }
+        black_box(total);
+    });
+    bench_with("block cg       K=8 d=256 n=8", Duration::from_millis(600), 7, &mut || {
+        black_box(block_cg_solve(&op, &b, &opts).iters);
+    });
+
+    // gemm scaling of the pool behind apply_block
+    let a = Mat::from_fn(512, 512, |_, _| rng.gauss());
+    let c = Mat::from_fn(512, 512, |_, _| rng.gauss());
+    let mut out = Mat::zeros(512, 512);
+    for t in [1usize, 2, 4, 8] {
+        let label = format!("par matmul 512x512x512 threads={t}");
+        bench_with(&label, Duration::from_millis(400), 5, &mut || {
+            par::matmul_into_with(&a, &c, &mut out, t);
+            black_box(&out);
+        });
+    }
+}

@@ -163,6 +163,34 @@ impl Config {
     }
 }
 
+/// Resolve the worker-thread count for the parallel linalg pool
+/// ([`crate::linalg::par`]).
+///
+/// Priority: the `GDKRON_THREADS` environment variable, then the
+/// `runtime.threads` config key, then the machine default (`0` return means
+/// "let the pool pick", i.e. available parallelism). The launcher feeds the
+/// result to [`crate::linalg::par::set_threads`]; `threads = 1` is the
+/// fully serial fallback.
+pub fn resolve_threads(config: &Config) -> usize {
+    resolve_threads_from(config, std::env::var("GDKRON_THREADS").ok().as_deref())
+}
+
+/// Pure core of [`resolve_threads`] (env value injected for testability).
+/// Parsing/clamping is delegated to the pool's own
+/// [`crate::linalg::par::parse_threads`] so every spelling of the knob
+/// (env, CLI, config) lands in the same `1..=MAX_THREADS` range — in
+/// particular `0` means the serial fallback everywhere, never "auto".
+/// Only an *absent* (or non-integer) knob means "let the pool pick".
+fn resolve_threads_from(config: &Config, env_val: Option<&str>) -> usize {
+    if let Some(n) = env_val.and_then(crate::linalg::par::parse_threads) {
+        return n;
+    }
+    match config.int("runtime.threads") {
+        Some(n) if n >= 0 => crate::linalg::par::parse_threads(&n.to_string()).unwrap_or(0),
+        _ => 0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,5 +265,26 @@ jitter = 1e-10
         let mut c = Config::from_str("x = 1").unwrap();
         c.set("x", Value::Int(5));
         assert_eq!(c.int("x"), Some(5));
+    }
+
+    #[test]
+    fn threads_resolution_order() {
+        let cfg = Config::from_str("[runtime]\nthreads = 6\n").unwrap();
+        // env beats config
+        assert_eq!(resolve_threads_from(&cfg, Some("3")), 3);
+        assert_eq!(resolve_threads_from(&cfg, Some(" 2 ")), 2);
+        // bad env falls through to config
+        assert_eq!(resolve_threads_from(&cfg, Some("zonk")), 6);
+        assert_eq!(resolve_threads_from(&cfg, None), 6);
+        // 0 clamps to the serial fallback rather than "auto" — from the env
+        // and from the config alike
+        assert_eq!(resolve_threads_from(&cfg, Some("0")), 1);
+        let zero = Config::from_str("[runtime]\nthreads = 0\n").unwrap();
+        assert_eq!(resolve_threads_from(&zero, None), 1);
+        // no knob anywhere → 0 = let the pool pick the machine default
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(resolve_threads_from(&empty, None), 0);
+        let invalid = Config::from_str("[runtime]\nthreads = -2\n").unwrap();
+        assert_eq!(resolve_threads_from(&invalid, None), 0);
     }
 }

@@ -1,7 +1,15 @@
 //! Size-or-deadline micro-batching over an mpsc channel.
+//!
+//! A closed batch is handed to the engine as **one** `D×B` matrix, so
+//! everything downstream is batch-shaped: `NativeEngine` fans the columns
+//! out over the parallel linalg pool, and multi-RHS solves triggered by
+//! batched queries run through the block-CG solver
+//! ([`crate::solvers::block_cg_solve`]) instead of per-request solves.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+use crate::config::Config;
 
 /// Batching policy: a batch closes when it reaches `max_batch` items or when
 /// `deadline` has elapsed since its first item, whichever comes first.
@@ -14,6 +22,26 @@ pub struct BatchPolicy {
 impl Default for BatchPolicy {
     fn default() -> Self {
         BatchPolicy { max_batch: 8, deadline: Duration::from_micros(200) }
+    }
+}
+
+impl BatchPolicy {
+    /// Read the policy from a launcher config: `server.max_batch` (items)
+    /// and `server.deadline_us` (microseconds), defaulting to
+    /// [`BatchPolicy::default`] for missing keys. Bigger `max_batch` feeds
+    /// wider blocks to the parallel engine; `deadline` caps the latency a
+    /// request can pay waiting for coalescing.
+    pub fn from_config(config: &Config) -> Self {
+        let dft = BatchPolicy::default();
+        let max_batch = match config.int("server.max_batch") {
+            Some(n) if n >= 1 => n as usize,
+            _ => dft.max_batch,
+        };
+        let deadline = match config.int("server.deadline_us") {
+            Some(us) if us >= 0 => Duration::from_micros(us as u64),
+            _ => dft.deadline,
+        };
+        BatchPolicy { max_batch, deadline }
     }
 }
 
@@ -89,6 +117,22 @@ mod tests {
         let b = Batcher::new(rx, BatchPolicy::default());
         assert_eq!(b.next_batch().unwrap(), vec![1]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn policy_from_config_and_defaults() {
+        let cfg = Config::from_str("[server]\nmax_batch = 32\ndeadline_us = 500\n").unwrap();
+        let p = BatchPolicy::from_config(&cfg);
+        assert_eq!(p.max_batch, 32);
+        assert_eq!(p.deadline, Duration::from_micros(500));
+        // missing/invalid keys fall back to the defaults
+        let p = BatchPolicy::from_config(&Config::from_str("").unwrap());
+        assert_eq!(p.max_batch, BatchPolicy::default().max_batch);
+        assert_eq!(p.deadline, BatchPolicy::default().deadline);
+        let bad = Config::from_str("[server]\nmax_batch = 0\ndeadline_us = -3\n").unwrap();
+        let p = BatchPolicy::from_config(&bad);
+        assert_eq!(p.max_batch, BatchPolicy::default().max_batch);
+        assert_eq!(p.deadline, BatchPolicy::default().deadline);
     }
 
     #[test]

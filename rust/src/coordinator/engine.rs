@@ -19,6 +19,11 @@ pub trait Engine {
 }
 
 /// Native engine: the in-process [`GradientGp`] (f64, exact Woodbury fit).
+///
+/// `predict_batch` delegates to [`GradientGp::predict_gradients`], which
+/// fans the coalesced batch out over the parallel linalg pool — the
+/// micro-batcher therefore controls both latency (deadline) *and* the
+/// parallelism grain (batch width) of the serving path.
 pub struct NativeEngine {
     gp: GradientGp,
 }

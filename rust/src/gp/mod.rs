@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::gram::{poly2_solve, GramFactors, GramOperator, Metric, WoodburySolver};
 use crate::kernels::ScalarKernel;
 use crate::linalg::Mat;
-use crate::solvers::{cg_solve, CgOptions, JacobiPrecond};
+use crate::solvers::{block_cg_solve, cg_solve, CgOptions, JacobiPrecond};
 
 /// How to solve the gradient Gram system.
 #[derive(Clone, Debug)]
@@ -255,6 +255,53 @@ impl GradientGp {
         anyhow::ensure!(res.converged, "CG did not converge on extra RHS");
         Ok(Mat::from_vec(rhs.rows(), rhs.cols(), res.x))
     }
+
+    /// Solve `(∇K∇′)vec(W_i) = rhs_i` for `K` extra right-hand sides at
+    /// once. Each column of `rhs` is one vec'd `D×N` right-hand side (flat
+    /// index `(a, i) ↦ a·D + i`), so `rhs` is `(N·D)×K`.
+    ///
+    /// The exact (Woodbury) path factorizes once and back-substitutes per
+    /// column; the iterative path runs **one** block-CG Krylov sequence for
+    /// the whole batch ([`block_cg_solve`]) instead of `K` independent CG
+    /// runs — this is what the batched variance/covariance queries and the
+    /// serving path ride on.
+    pub fn solve_rhs_block(&self, rhs: &Mat) -> anyhow::Result<Mat> {
+        let (d, n) = (self.d(), self.n());
+        anyhow::ensure!(
+            rhs.rows() == d * n,
+            "stacked RHS must have N·D = {} rows, got {}",
+            d * n,
+            rhs.rows()
+        );
+        if let Some(solver) = &self.solver {
+            let mut out = Mat::zeros(d * n, rhs.cols());
+            for j in 0..rhs.cols() {
+                let col = Mat::from_vec(d, n, rhs.col(j).to_vec());
+                let sol = solver.solve(&self.factors, &col);
+                out.col_mut(j).copy_from_slice(sol.as_slice());
+            }
+            return Ok(out);
+        }
+        let op = GramOperator::new(&self.factors);
+        let res = block_cg_solve(
+            &op,
+            rhs,
+            &CgOptions {
+                rtol: 1e-10,
+                precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
+                track_history: false,
+                ..Default::default()
+            },
+        );
+        anyhow::ensure!(
+            res.all_converged(),
+            "block CG did not converge on {} extra RHS (iters {}, fallback cols {})",
+            rhs.cols(),
+            res.iters,
+            res.fallback_cols
+        );
+        Ok(res.x)
+    }
 }
 
 #[cfg(test)]
@@ -368,6 +415,49 @@ mod tests {
         for i in 0..4 {
             assert!((pred[i] - gc[i]).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn solve_rhs_block_matches_columnwise_and_exact() {
+        let (x, g) = sample(5, 4, 8);
+        let kern = Arc::new(SquaredExponential);
+        // iterative fit → no cached exact solver → the block-CG path
+        let gp_iter = GradientGp::fit(
+            kern.clone(),
+            Metric::Iso(0.6),
+            &x,
+            &g,
+            &FitOptions {
+                method: FitMethod::Iterative(CgOptions {
+                    rtol: 1e-12,
+                    max_iters: 10_000,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(9);
+        let stacked = Mat::from_fn(20, 3, |_, _| rng.gauss());
+        let block = gp_iter.solve_rhs_block(&stacked).unwrap();
+        assert_eq!((block.rows(), block.cols()), (20, 3));
+        for j in 0..3 {
+            let rhs = Mat::from_vec(5, 4, stacked.col(j).to_vec());
+            let want = gp_iter.solve_rhs(&rhs).unwrap();
+            let scale = 1.0 + want.max_abs();
+            let err: f64 = block
+                .col(j)
+                .iter()
+                .zip(want.as_slice())
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-6 * scale, "col {j}: err {err}");
+        }
+        // exact (Woodbury) fit answers the same block through its own path
+        let gp_exact =
+            GradientGp::fit(kern, Metric::Iso(0.6), &x, &g, &FitOptions::default()).unwrap();
+        let exact = gp_exact.solve_rhs_block(&stacked).unwrap();
+        assert!((&exact - &block).max_abs() < 1e-5 * (1.0 + exact.max_abs()));
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! stationary case, where `∂²r/∂x∂x = 2Λ ≠ 0`).
 
 use crate::kernels::KernelClass;
-use crate::linalg::Mat;
+use crate::linalg::{par, Mat};
 
 use super::GradientGp;
 
@@ -228,12 +228,30 @@ impl GradientGp {
     }
 
     /// Batched gradient prediction: one column of `out` per column of `xqs`.
+    ///
+    /// Queries are independent, so the batch fans out over the
+    /// [`crate::linalg::par`] worker pool — this is the compute path behind
+    /// the coordinator's micro-batched serving (`NativeEngine`): a coalesced
+    /// batch of `B` requests costs one fork-join instead of `B` sequential
+    /// query evaluations. Small batches (or `threads = 1`) run inline.
     pub fn predict_gradients(&self, xqs: &Mat) -> Mat {
+        // Per-query work is O(ND) *panel entries*, each far costlier than a
+        // matmul flop (kernel transcendentals, panel builds, allocations),
+        // so the bar is much lower than `par::MIN_PAR_FLOPS`. Calibrated so
+        // the serving example's batches (D=100, N=10, B=8 → 8000) fan out
+        // while the tiny unit-test fits stay inline.
+        const PAR_QUERY_WORK: usize = 4096;
         assert_eq!(xqs.rows(), self.d());
         let mut out = Mat::zeros(self.d(), xqs.cols());
-        for j in 0..xqs.cols() {
-            out.set_col(j, &self.predict_gradient(xqs.col(j)));
-        }
+        let work = self.d() * self.n() * xqs.cols();
+        let t = if xqs.cols() >= 2 && work >= PAR_QUERY_WORK {
+            par::threads()
+        } else {
+            1
+        };
+        par::par_columns(&mut out, t, |j, col| {
+            col.copy_from_slice(&self.predict_gradient(xqs.col(j)));
+        });
         out
     }
 
@@ -344,10 +362,13 @@ impl GradientGp {
 
     /// Posterior covariance of `∇f(x⋆)` (full `D×D`).
     ///
-    /// `cov = K⋆⋆ − C (∇K∇′)⁻¹ Cᵀ` with `C` the `D×ND` cross-covariance;
-    /// needs `D` extra Gram solves (amortized through the cached exact
-    /// factorization) — `O(N²D²)` total, intended for diagnostics and
-    /// moderate `D` (e.g. the posterior ellipses of Fig. 5).
+    /// `cov = K⋆⋆ − C (∇K∇′)⁻¹ Cᵀ` with `C` the `D×ND` cross-covariance.
+    /// The `D` extra Gram solves go through [`GradientGp::solve_rhs_block`]
+    /// as **one** stacked batch — the exact path back-substitutes through
+    /// the cached factorization, the iterative path runs a single block-CG
+    /// Krylov sequence instead of `D` independent CG runs. Intended for
+    /// diagnostics and moderate `D` (e.g. the posterior ellipses of Fig. 5);
+    /// the stacked right-hand sides take `O(ND·D)` memory.
     pub fn predict_gradient_cov(&self, xq: &[f64]) -> anyhow::Result<Mat> {
         let (d, n) = (self.d(), self.n());
         let f = self.factors();
@@ -384,47 +405,29 @@ impl GradientGp {
             KernelClass::Stationary => -2.0,
         };
         let lam = f.metric.to_dense(d);
-        // build all D cross matrices; reuse the per-b panels
-        let mut reduction = Mat::zeros(d, d);
+        // Stack all D vec'd cross matrices as columns of one (N·D)×D
+        // right-hand-side block: column i is vec(C_i) with C_i the D×N
+        // cross matrix of output component i.
+        let mut stacked = Mat::zeros(d * n, d);
         for i in 0..d {
-            let mut cross_i = Mat::zeros(d, n);
+            let scol = stacked.col_mut(i);
             for b in 0..n {
                 let (ui, ul) = match f.class {
                     KernelClass::DotProduct => (q.lam_xtq.col(0), f.lam_xt.col(b)),
                     KernelClass::Stationary => (q.lam_xtq.col(b), q.lam_xtq.col(b)),
                 };
-                let col = cross_i.col_mut(b);
+                let col = &mut scol[b * d..(b + 1) * d];
                 for l in 0..d {
                     col[l] = scale1 * q.kp[b] * lam[(i, l)]
                         + scale2 * q.kpp[b] * ul[i] * ui[l];
                 }
             }
-            let w = self.solve_rhs(&cross_i)?;
-            // reduction row i: Σ_{l,b} cross_j[l,b] · w[l,b] per column j —
-            // use symmetry: reduction[(i,j)] = ⟨C_j, (∇K∇′)⁻¹ C_iᵀ⟩; compute
-            // via the already-built cross_i and the solved w of C_i against
-            // every C_j: instead accumulate v_j = Σ cross_j ⊙ w.
-            // To avoid rebuilding C_j for each i, exploit that we loop over
-            // all i anyway: reduction[(j,i)] needs C_j·w_i; we fill column i
-            // with dot(C_j, w_i) lazily below using a second pass.
-            // Simpler (kept O(N D²)): recompute C_j entry-wise against w.
-            for j in 0..d {
-                let mut acc = 0.0;
-                for b in 0..n {
-                    let (uj, ul) = match f.class {
-                        KernelClass::DotProduct => (q.lam_xtq.col(0), f.lam_xt.col(b)),
-                        KernelClass::Stationary => (q.lam_xtq.col(b), q.lam_xtq.col(b)),
-                    };
-                    let wcol = w.col(b);
-                    for l in 0..d {
-                        let cjl = scale1 * q.kp[b] * lam[(j, l)]
-                            + scale2 * q.kpp[b] * ul[j] * uj[l];
-                        acc += cjl * wcol[l];
-                    }
-                }
-                reduction[(j, i)] = acc;
-            }
         }
+        // one block solve for all D right-hand sides …
+        let w = self.solve_rhs_block(&stacked)?;
+        // … then reduction[(j,i)] = ⟨vec(C_j), (∇K∇′)⁻¹ vec(C_i)⟩ is a
+        // single gemm: Cᵀ·W.
+        let reduction = par::t_matmul(&stacked, &w);
         prior -= &reduction;
         Ok(prior.symmetrized())
     }

@@ -11,7 +11,7 @@
 //! so both branches are sign-free here.
 
 use crate::kernels::KernelClass;
-use crate::linalg::Mat;
+use crate::linalg::{par, Mat};
 use crate::solvers::LinearOp;
 
 use super::GramFactors;
@@ -26,6 +26,11 @@ impl GramFactors {
     }
 
     /// Allocation-free matvec: `out ← (∇K∇′) vec(V)` using `ws` scratch.
+    ///
+    /// All gemm-shaped products route through [`crate::linalg::par`]: above
+    /// the parallel threshold they fan out over the worker pool (see the
+    /// `threads` knob), below it — and always when `threads = 1` — they run
+    /// the identical serial kernels.
     pub fn matvec_into(&self, v: &Mat, out: &mut Mat, ws: &mut MatvecWorkspace) {
         let (d, n) = (self.d(), self.n());
         assert_eq!((v.rows(), v.cols()), (d, n), "V must be D×N");
@@ -34,20 +39,20 @@ impl GramFactors {
         match self.class {
             KernelClass::DotProduct => {
                 // term1: Λ(V K̂′)
-                v.matmul_into(&self.kp_eff, &mut ws.dxn);
+                par::matmul_into(v, &self.kp_eff, &mut ws.dxn);
                 *out = self.metric.apply_mat(&ws.dxn);
                 // term2: ΛX̃ · (K̂″ ⊙ (VᵀΛX̃));  (VᵀΛX̃)_{b,a} = v_bᵀΛx̃_a
-                let p = v.t_matmul(&self.lam_xt); // (Λ on the X̃ side already)
+                let p = par::t_matmul(v, &self.lam_xt); // (Λ on the X̃ side already)
                 let m = self.kpp_eff.hadamard(&p);
-                self.lam_xt.matmul_into(&m, &mut ws.dxn);
+                par::matmul_into(&self.lam_xt, &m, &mut ws.dxn);
                 *out += &ws.dxn;
             }
             KernelClass::Stationary => {
                 // accumulate V K̂′ + X M3 into one buffer, apply Λ once
-                v.matmul_into(&self.kp_eff, &mut ws.dxn);
+                par::matmul_into(v, &self.kp_eff, &mut ws.dxn);
                 // P = XᵀΛV = (ΛX)ᵀ V — via the cached transpose so the
                 // product is column-SAXPY (vectorizes) instead of dots.
-                self.lam_xt_t.matmul_into(v, &mut ws.nxn_p);
+                par::matmul_into(&self.lam_xt_t, v, &mut ws.nxn_p);
                 let p = &ws.nxn_p;
                 // M3 = diag(w) − Wᵀ with W_ab = K̂″_ab (P_ab − P_bb);
                 // build M3 directly (transposed accumulation), then the
@@ -83,7 +88,7 @@ impl GramFactors {
                     m3[(a, a)] += wsum[a];
                 }
                 // out = Λ (V K̂′ + X M3)
-                self.xt.matmul_acc(m3, &mut ws.dxn);
+                par::matmul_acc(&self.xt, m3, &mut ws.dxn);
                 self.metric.apply_mat_into(&ws.dxn, out);
                 ws.nvec = wsum;
             }
@@ -145,6 +150,11 @@ impl LinearOp for GramOperator<'_> {
         self.factors.matvec_into(vin, vout, ws);
         y.copy_from_slice(vout.as_slice());
     }
+
+    // No `apply_block` override needed: the trait default loops `apply`,
+    // which already reuses the cached workspace, and each column is a full
+    // structured `O(N²D)` matvec whose inner products fan out over the
+    // parallel pool.
 }
 
 #[cfg(test)]

@@ -21,6 +21,25 @@
 //! ([`opt::plinalg`]) and gradient-surrogate Hamiltonian Monte Carlo
 //! ([`hmc`]).
 //!
+//! ## Parallel batched execution
+//!
+//! Throughput under multi-user traffic comes from two batched layers:
+//!
+//! * **[`linalg::par`]** — a dependency-free scoped-thread worker pool with
+//!   column-blocked parallel products (`matmul_into`, `matmul_acc`,
+//!   `t_matmul`, `matmul_t` and their `_into` variants). Every gemm-shaped
+//!   product in the structured matvec ([`gram`]) routes through it. The
+//!   worker count is the `threads` knob: `--threads N` on the CLI beats the
+//!   `GDKRON_THREADS` env var beats `runtime.threads` in a config file
+//!   ([`config::resolve_threads`]); `threads = 1` is a strict serial
+//!   fallback, and parallel results are bit-identical to serial ones.
+//! * **[`solvers::block_cg_solve`]** — block CG over
+//!   [`solvers::LinearOp::apply_block`]: `K` right-hand sides share one
+//!   Krylov sequence of gemm-shaped block applications instead of `K`
+//!   independent CG runs. Batched prediction ([`gp`]) and the coordinator's
+//!   micro-batched serving path ride on it via
+//!   `GradientGp::solve_rhs_block`.
+//!
 //! ## Architecture
 //!
 //! Three layers (see `DESIGN.md`):
@@ -29,9 +48,22 @@
 //!   ([`coordinator`]), CLI launcher, config system ([`config`]).
 //! * **L2 (`python/compile/model.py`)** — JAX compute graphs, AOT-lowered to
 //!   HLO text artifacts loaded by [`runtime`] (PJRT CPU client; python never
-//!   runs at request time).
+//!   runs at request time). Gated behind the `pjrt` cargo feature.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the pairwise
 //!   scalar-derivative panels and the structured matvec.
+//!
+//! ## Building and testing
+//!
+//! The workspace is dependency-free (the `anyhow` member under `vendor/` is
+//! an in-tree shim), so a plain toolchain suffices:
+//!
+//! ```bash
+//! cargo build --release          # library + gdkron CLI
+//! cargo test -q                  # unit + integration suites (rust/tests/)
+//! cargo bench --bench block_solve    # block-CG vs sequential CG
+//! cargo bench --bench fig4_matvec    # structured matvec at paper scale
+//! GDKRON_THREADS=1 cargo bench --bench block_solve  # serial baseline
+//! ```
 
 pub mod bench_util;
 pub mod config;

@@ -179,41 +179,8 @@ impl Mat {
         assert_eq!(out.rows, self.rows);
         assert_eq!(out.cols, other.cols);
         let m = self.rows;
-        // 4-wide rank-1 updates: fewer passes over the output column and
-        // enough independent FMA chains to keep the vector units busy
-        // (§Perf: this alone is ~1.6× on the Fig. 4 matvec).
         for j in 0..other.cols {
-            let bcol = other.col(j);
-            let ocol = &mut out.data[j * m..(j + 1) * m];
-            let mut k = 0;
-            while k + 4 <= self.cols {
-                let b0 = bcol[k];
-                let b1 = bcol[k + 1];
-                let b2 = bcol[k + 2];
-                let b3 = bcol[k + 3];
-                if b0 == 0.0 && b1 == 0.0 && b2 == 0.0 && b3 == 0.0 {
-                    k += 4;
-                    continue;
-                }
-                let (a0, rest) = self.data[k * m..].split_at(m);
-                let (a1, rest) = rest.split_at(m);
-                let (a2, rest) = rest.split_at(m);
-                let a3 = &rest[..m];
-                for i in 0..m {
-                    ocol[i] += a0[i] * b0 + a1[i] * b1 + a2[i] * b2 + a3[i] * b3;
-                }
-                k += 4;
-            }
-            while k < self.cols {
-                let bkj = bcol[k];
-                if bkj != 0.0 {
-                    let acol = &self.data[k * m..(k + 1) * m];
-                    for i in 0..m {
-                        ocol[i] += acol[i] * bkj;
-                    }
-                }
-                k += 1;
-            }
+            matmul_acc_col(self, other.col(j), &mut out.data[j * m..(j + 1) * m]);
         }
     }
 
@@ -222,26 +189,40 @@ impl Mat {
     /// Each output entry is a dot of two columns — unit stride on both sides,
     /// this is the preferred way to form Gram-style products `XᵀΛV`.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let mut out = Mat::zeros(self.cols, other.cols);
-        for j in 0..other.cols {
-            let bcol = other.col(j);
-            for i in 0..self.cols {
-                let acol = self.col(i);
-                let mut s = 0.0;
-                for k in 0..self.rows {
-                    s += acol[k] * bcol[k];
-                }
-                out[(i, j)] = s;
-            }
-        }
+        self.t_matmul_into(other, &mut out);
         out
+    }
+
+    /// `out = selfᵀ * other` without allocating. `out` must be pre-shaped
+    /// `self.cols × other.cols`.
+    pub fn t_matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        assert_eq!(out.rows, self.cols);
+        assert_eq!(out.cols, other.cols);
+        let m = self.cols;
+        for j in 0..other.cols {
+            t_matmul_col(self, other.col(j), &mut out.data[j * m..(j + 1) * m]);
+        }
     }
 
     /// `self * otherᵀ` without materializing the transpose.
     pub fn matmul_t(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let mut out = Mat::zeros(self.rows, other.rows);
+        self.matmul_t_into(other, &mut out);
+        out
+    }
+
+    /// `out = self * otherᵀ` without allocating. `out` must be pre-shaped
+    /// `self.rows × other.rows`.
+    ///
+    /// Iterates `k` in the outer loop so each column of `self` is streamed
+    /// once across all output columns (the transpose-free rank-1 order).
+    pub fn matmul_t_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.rows);
+        out.data.fill(0.0);
         let m = self.rows;
         for k in 0..self.cols {
             let acol = self.col(k);
@@ -256,7 +237,6 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// Matrix–vector product.
@@ -397,6 +377,74 @@ impl Mat {
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `ocol += a * bcol`, the per-output-column kernel shared by the serial
+/// ([`Mat::matmul_acc`]) and parallel ([`super::par`]) product paths.
+///
+/// 4-wide rank-1 updates: fewer passes over the output column and enough
+/// independent FMA chains to keep the vector units busy (§Perf: this alone
+/// is ~1.6× on the Fig. 4 matvec).
+pub(crate) fn matmul_acc_col(a: &Mat, bcol: &[f64], ocol: &mut [f64]) {
+    let m = a.rows;
+    debug_assert_eq!(bcol.len(), a.cols);
+    debug_assert_eq!(ocol.len(), m);
+    let mut k = 0;
+    while k + 4 <= a.cols {
+        let b0 = bcol[k];
+        let b1 = bcol[k + 1];
+        let b2 = bcol[k + 2];
+        let b3 = bcol[k + 3];
+        if b0 == 0.0 && b1 == 0.0 && b2 == 0.0 && b3 == 0.0 {
+            k += 4;
+            continue;
+        }
+        let (a0, rest) = a.data[k * m..].split_at(m);
+        let (a1, rest) = rest.split_at(m);
+        let (a2, rest) = rest.split_at(m);
+        let a3 = &rest[..m];
+        for i in 0..m {
+            ocol[i] += a0[i] * b0 + a1[i] * b1 + a2[i] * b2 + a3[i] * b3;
+        }
+        k += 4;
+    }
+    while k < a.cols {
+        let bkj = bcol[k];
+        if bkj != 0.0 {
+            let acol = &a.data[k * m..(k + 1) * m];
+            for i in 0..m {
+                ocol[i] += acol[i] * bkj;
+            }
+        }
+        k += 1;
+    }
+}
+
+/// `ocol = aᵀ * bcol`: one output column of the transpose product — every
+/// entry a unit-stride column dot.
+pub(crate) fn t_matmul_col(a: &Mat, bcol: &[f64], ocol: &mut [f64]) {
+    debug_assert_eq!(bcol.len(), a.rows);
+    debug_assert_eq!(ocol.len(), a.cols);
+    for (i, o) in ocol.iter_mut().enumerate() {
+        *o = dot(a.col(i), bcol);
+    }
+}
+
+/// `ocol += a * bᵀ[:, j]`, i.e. column `j` of `a * bᵀ` accumulated without
+/// materializing the transpose (row `j` of `b` gathered on the fly).
+pub(crate) fn matmul_t_col(a: &Mat, b: &Mat, j: usize, ocol: &mut [f64]) {
+    debug_assert_eq!(ocol.len(), a.rows);
+    debug_assert!(j < b.rows);
+    for k in 0..a.cols {
+        let bjk = b.data[k * b.rows + j];
+        if bjk == 0.0 {
+            continue;
+        }
+        let acol = a.col(k);
+        for i in 0..ocol.len() {
+            ocol[i] += acol[i] * bjk;
+        }
+    }
 }
 
 impl Index<(usize, usize)> for Mat {

@@ -3,16 +3,21 @@
 //! The paper's algorithms need a small but complete dense toolbox:
 //! matrix products (the `O(N²D)` hot path of Eq. 9), Cholesky and LU
 //! factorizations (the `N×N` and `N²×N²` solves of App. C.1), Householder QR
-//! (random orthogonal matrices for the rotated HMC targets of Sec. 5.3) and a
-//! Jacobi eigensolver (to verify the synthetic spectra of App. F.1).
+//! (random orthogonal matrices for the rotated HMC targets of Sec. 5.3), a
+//! Jacobi eigensolver (to verify the synthetic spectra of App. F.1), and a
+//! dependency-free parallel product layer ([`par`]) that the structured
+//! matvec and the serving path fan out on.
 //!
 //! Everything is `f64`, column-major, and allocation-explicit so the hot
-//! loops in [`crate::gram`] can reuse buffers.
+//! loops in [`crate::gram`] can reuse buffers. The [`par`] kernels reuse the
+//! exact serial per-column kernels, so parallel results are bit-identical to
+//! serial ones.
 
 mod chol;
 mod eig;
 mod lu;
 mod mat;
+pub mod par;
 mod qr;
 
 pub use chol::Cholesky;

@@ -1,0 +1,275 @@
+//! Dependency-free parallel matrix products over a scoped thread pool.
+//!
+//! The paper's throughput story is `O(N²D)` structured matvecs; at serving
+//! scale (D ≥ 10², many queries per batch) those are gemm-shaped and
+//! embarrassingly parallel over output columns. The environment has no
+//! rayon, so this module partitions output columns into contiguous blocks
+//! and fans them out over `std::thread::scope` workers — each worker owns a
+//! disjoint column range of the output buffer (`chunks_mut`), so there is no
+//! sharing, no locking, and bit-identical results to the serial kernels
+//! (same per-column kernel, same summation order).
+//!
+//! Knobs:
+//! * [`set_threads`] / [`threads`] — process-wide worker count. The first
+//!   read initializes from the `GDKRON_THREADS` environment variable, else
+//!   from `std::thread::available_parallelism`. `threads = 1` is the serial
+//!   fallback: no threads are spawned at all.
+//! * Small products stay serial regardless ([`MIN_PAR_FLOPS`]): a spawn
+//!   costs ~10µs, so parallelism must clear that bar to pay off.
+//!
+//! The `*_with` variants take an explicit thread count (used by the property
+//! tests to force the parallel path on tiny shapes, and by benches to sweep
+//! scaling).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::mat::{matmul_acc_col, matmul_t_col, t_matmul_col};
+use super::Mat;
+
+/// Upper bound on the worker count (sanity clamp for bad env values).
+pub const MAX_THREADS: usize = 256;
+
+/// Products below this many flops (`2·m·k·n`) run serially: thread spawn
+/// latency would dominate.
+pub const MIN_PAR_FLOPS: usize = 1 << 17;
+
+/// 0 = uninitialized; first [`threads`] call resolves the default.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Parse a thread-count string (CLI flag, env var or config value): trimmed
+/// integer, clamped to `1..=MAX_THREADS` (so `0` means the serial
+/// fallback). Single source of truth for every spelling of the knob —
+/// [`crate::config::resolve_threads`] and the launcher's `--threads` flag
+/// both route through it.
+pub fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().map(|n| n.clamp(1, MAX_THREADS))
+}
+
+fn env_threads() -> Option<usize> {
+    parse_threads(&std::env::var("GDKRON_THREADS").ok()?)
+}
+
+/// The process-wide worker count for parallel linalg.
+///
+/// Resolution order: last [`set_threads`] call, else `GDKRON_THREADS`, else
+/// the machine's available parallelism.
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let t = env_threads().unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS)
+    });
+    THREADS.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Set the process-wide worker count (clamped to `1..=MAX_THREADS`).
+/// `1` disables parallelism entirely (serial fallback).
+pub fn set_threads(n: usize) {
+    THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+/// Effective worker count for a product of `flops` total work spread over
+/// `cols` independent output columns. Beyond the on/off threshold, the
+/// worker count is bounded so each worker clears ~[`MIN_PAR_FLOPS`] of work
+/// — spawning the whole pool on a product barely above the threshold would
+/// pay more in spawn latency than it wins.
+fn effective_threads(flops: usize, cols: usize) -> usize {
+    if flops < MIN_PAR_FLOPS || cols < 2 {
+        return 1;
+    }
+    threads().min(cols).min((flops / MIN_PAR_FLOPS).max(1))
+}
+
+/// Run `f(j, column_j)` for every column of `out`, fanned out over
+/// `nthreads` scoped workers in contiguous column blocks. `nthreads <= 1`
+/// runs inline on the caller's thread.
+///
+/// This is the fork-join primitive behind every parallel product here, and
+/// it is public because higher layers reuse it for per-column work that is
+/// not a matmul (e.g. batched GP prediction in [`crate::gp`]).
+pub fn par_columns<F>(out: &mut Mat, nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    let m = out.rows();
+    let cols = out.cols();
+    if cols == 0 {
+        return;
+    }
+    let t = nthreads.clamp(1, cols);
+    if t == 1 || m == 0 {
+        for j in 0..cols {
+            f(j, out.col_mut(j));
+        }
+        return;
+    }
+    // ceil so every worker gets a block and the last may run short
+    let block = (cols + t - 1) / t;
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut chunks = out.as_mut_slice().chunks_mut(block * m).enumerate();
+        // the caller works too: keep the first block inline (one fewer
+        // spawn, no idle core blocked in the join)
+        let first = chunks.next();
+        for (ci, chunk) in chunks {
+            let j0 = ci * block;
+            s.spawn(move || {
+                for (dj, col) in chunk.chunks_mut(m).enumerate() {
+                    fref(j0 + dj, col);
+                }
+            });
+        }
+        if let Some((_, chunk)) = first {
+            for (dj, col) in chunk.chunks_mut(m).enumerate() {
+                fref(dj, col);
+            }
+        }
+    });
+}
+
+/// `out = a * b`, parallel over output columns (auto thread count).
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let t = effective_threads(2 * a.rows() * a.cols() * b.cols(), b.cols());
+    matmul_into_with(a, b, out, t);
+}
+
+/// `out = a * b` with an explicit worker count.
+pub fn matmul_into_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(out.rows(), a.rows());
+    assert_eq!(out.cols(), b.cols());
+    par_columns(out, nthreads, |j, col| {
+        col.fill(0.0);
+        matmul_acc_col(a, b.col(j), col);
+    });
+}
+
+/// `out += a * b`, parallel over output columns (auto thread count).
+pub fn matmul_acc(a: &Mat, b: &Mat, out: &mut Mat) {
+    let t = effective_threads(2 * a.rows() * a.cols() * b.cols(), b.cols());
+    matmul_acc_with(a, b, out, t);
+}
+
+/// `out += a * b` with an explicit worker count.
+pub fn matmul_acc_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(out.rows(), a.rows());
+    assert_eq!(out.cols(), b.cols());
+    par_columns(out, nthreads, |j, col| {
+        matmul_acc_col(a, b.col(j), col);
+    });
+}
+
+/// `a * b` allocating, parallel over output columns.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `out = aᵀ * b`, parallel over output columns (auto thread count).
+pub fn t_matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let t = effective_threads(2 * a.rows() * a.cols() * b.cols(), b.cols());
+    t_matmul_into_with(a, b, out, t);
+}
+
+/// `out = aᵀ * b` with an explicit worker count.
+pub fn t_matmul_into_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
+    assert_eq!(a.rows(), b.rows(), "t_matmul shape mismatch");
+    assert_eq!(out.rows(), a.cols());
+    assert_eq!(out.cols(), b.cols());
+    par_columns(out, nthreads, |j, col| {
+        t_matmul_col(a, b.col(j), col);
+    });
+}
+
+/// `aᵀ * b` allocating, parallel over output columns.
+pub fn t_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols(), b.cols());
+    t_matmul_into(a, b, &mut out);
+    out
+}
+
+/// `out = a * bᵀ`, parallel over output columns (auto thread count).
+pub fn matmul_t_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let t = effective_threads(2 * a.rows() * a.cols() * b.rows(), b.rows());
+    matmul_t_into_with(a, b, out, t);
+}
+
+/// `out = a * bᵀ` with an explicit worker count.
+pub fn matmul_t_into_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
+    assert_eq!(a.cols(), b.cols(), "matmul_t shape mismatch");
+    assert_eq!(out.rows(), a.rows());
+    assert_eq!(out.cols(), b.rows());
+    par_columns(out, nthreads, |j, col| {
+        col.fill(0.0);
+        matmul_t_col(a, b, j, col);
+    });
+}
+
+/// `a * bᵀ` allocating, parallel over output columns.
+pub fn matmul_t(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows(), b.rows());
+    matmul_t_into(a, b, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn knob_clamps_and_persists() {
+        let before = threads();
+        set_threads(0);
+        assert_eq!(threads(), 1);
+        set_threads(4);
+        assert_eq!(threads(), 4);
+        set_threads(before);
+    }
+
+    #[test]
+    fn forced_parallel_matches_serial_small() {
+        let a = sample(7, 5, 1);
+        let b = sample(5, 9, 2);
+        let want = a.matmul(&b);
+        let mut got = Mat::zeros(7, 9);
+        matmul_into_with(&a, &b, &mut got, 4);
+        assert!((&got - &want).max_abs() == 0.0, "parallel path must be bit-identical");
+    }
+
+    #[test]
+    fn par_columns_covers_every_column_once() {
+        let mut out = Mat::zeros(3, 10);
+        par_columns(&mut out, 4, |j, col| {
+            for v in col.iter_mut() {
+                *v += (j + 1) as f64;
+            }
+        });
+        for j in 0..10 {
+            for i in 0..3 {
+                assert_eq!(out[(i, j)], (j + 1) as f64, "col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sized_outputs_are_noops() {
+        let a = sample(4, 3, 3);
+        let b = Mat::zeros(3, 0);
+        let mut out = Mat::zeros(4, 0);
+        matmul_into_with(&a, &b, &mut out, 4);
+        let a0 = Mat::zeros(0, 3);
+        let mut out0 = Mat::zeros(0, 5);
+        matmul_into_with(&a0, &sample(3, 5, 4), &mut out0, 4);
+    }
+}

@@ -88,6 +88,21 @@ impl Opts {
     }
 }
 
+/// Apply the worker-thread knob: `--threads` flag beats `GDKRON_THREADS`
+/// beats `runtime.threads` in the config; absent everywhere, the pool picks
+/// the machine default. `threads = 1` (or `0`, clamped) runs fully serial.
+/// All three spellings share [`gdkron::linalg::par::parse_threads`].
+fn apply_threads(opts: &Opts) {
+    let resolved = opts
+        .flags
+        .get("threads")
+        .and_then(|v| gdkron::linalg::par::parse_threads(v))
+        .unwrap_or_else(|| gdkron::config::resolve_threads(&opts.config));
+    if resolved >= 1 {
+        gdkron::linalg::par::set_threads(resolved);
+    }
+}
+
 fn dispatch(args: &[String]) -> anyhow::Result<()> {
     match args.first().map(String::as_str) {
         Some("exp") => {
@@ -95,6 +110,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                 anyhow::anyhow!("usage: gdkron exp <fig1|fig2|fig3|fig4|fig5|scaling>")
             })?;
             let opts = Opts { flags: parse_flags(&args[2..])?, config: Config::default() };
+            apply_threads(&opts);
             run_experiment(id, &opts)
         }
         Some("run") => {
@@ -107,6 +123,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("config must set `experiment = \"figN\"`"))?
                 .to_string();
             let opts = Opts { flags: parse_flags(&args[2..])?, config };
+            apply_threads(&opts);
             run_experiment(&id, &opts)
         }
         Some("artifacts") => {
@@ -140,7 +157,9 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                 "gdkron — High-Dimensional GP Inference with Derivatives (ICML 2021)\n\
                  usage:\n  gdkron exp <fig1|fig2|fig3|fig4|fig5|scaling> [--key value …]\n  \
                  gdkron run <config.toml> [--key value …]\n  gdkron artifacts [--dir DIR]\n  \
-                 gdkron validate [--dir DIR]"
+                 gdkron validate [--dir DIR]\n\
+                 linalg worker pool: --threads N > GDKRON_THREADS > runtime.threads \
+                 (1 = serial)"
             );
             Ok(())
         }

@@ -17,7 +17,18 @@
 //! Conventions: all artifact tensors are `f32`, row-major in the python
 //! `(D, N)` layout. [`Mat`] is column-major `f64`, so the boundary helpers
 //! transpose + cast in both directions.
+//!
+//! Build gating: the `xla` crate is not in the offline registry, so all PJRT
+//! execution is behind the `pjrt` cargo feature. Without it the registry
+//! still opens and lists manifests (pure rust), but `execute_*` returns a
+//! descriptive error. Consumers must therefore not treat a successful
+//! `open()` as "execution available": gate engine selection on
+//! `cfg!(feature = "pjrt")` (as `examples/serve_gradients.rs` does) or
+//! handle the execute error (as the benches do). `gdkron validate`
+//! intentionally fails loudly in a non-pjrt build — it exists to prove the
+//! artifacts execute.
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -69,8 +80,10 @@ pub enum ArgValue<'a> {
 /// Loads artifacts per the manifest and executes them on the PJRT CPU
 /// client. Executables are compiled lazily on first use and cached.
 pub struct ArtifactRegistry {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     specs: HashMap<String, ArtifactSpec>,
+    #[cfg(feature = "pjrt")]
     compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
@@ -102,8 +115,20 @@ impl ArtifactRegistry {
             );
         }
         anyhow::ensure!(!specs.is_empty(), "no artifacts found in {dir:?}");
+        Self::finish(specs)
+    }
+
+    /// Attach the PJRT client to the parsed manifest.
+    #[cfg(feature = "pjrt")]
+    fn finish(specs: HashMap<String, ArtifactSpec>) -> anyhow::Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
         Ok(ArtifactRegistry { client, specs, compiled: RefCell::new(HashMap::new()) })
+    }
+
+    /// Without the `pjrt` feature the registry is manifest-only.
+    #[cfg(not(feature = "pjrt"))]
+    fn finish(specs: HashMap<String, ArtifactSpec>) -> anyhow::Result<Self> {
+        Ok(ArtifactRegistry { specs })
     }
 
     /// Artifact names available.
@@ -119,6 +144,7 @@ impl ArtifactRegistry {
     }
 
     /// Compile (or fetch the cached) executable.
+    #[cfg(feature = "pjrt")]
     fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
         if self.compiled.borrow().contains_key(name) {
             return Ok(());
@@ -140,6 +166,7 @@ impl ArtifactRegistry {
 
     /// Execute an artifact. Returns the first (and only) tuple element as a
     /// flat row-major `f32` buffer converted to `f64`.
+    #[cfg(feature = "pjrt")]
     pub fn execute_raw(&self, name: &str, args: &[ArgValue]) -> anyhow::Result<Vec<f64>> {
         self.ensure_compiled(name)?;
         let spec = &self.specs[name];
@@ -169,6 +196,17 @@ impl ArtifactRegistry {
         Ok(v.into_iter().map(|x| x as f64).collect())
     }
 
+    /// Stub without the `pjrt` feature: the manifest is known but there is no
+    /// execution backend; consumers fall back to the native engine.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_raw(&self, name: &str, _args: &[ArgValue]) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(self.specs.contains_key(name), "unknown artifact {name:?}");
+        anyhow::bail!(
+            "artifact {name:?}: PJRT backend not built — rebuild with `--features pjrt` \
+             and a vendored `xla` crate (see runtime module docs)"
+        )
+    }
+
     /// Execute an artifact whose output is a `(D, N)` python-layout tensor,
     /// returned as a column-major [`Mat`].
     pub fn execute_mat(
@@ -186,6 +224,7 @@ impl ArtifactRegistry {
 }
 
 /// Convert an argument to an XLA literal in the artifact layout.
+#[cfg(feature = "pjrt")]
 fn to_literal(arg: &ArgValue, spec: &TensorSpec) -> anyhow::Result<xla::Literal> {
     match arg {
         ArgValue::Scalar(v) => {

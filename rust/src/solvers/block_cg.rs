@@ -1,0 +1,378 @@
+//! Block conjugate gradients: `K` right-hand sides in one Krylov iteration
+//! (O'Leary 1980).
+//!
+//! Batched serving re-pays a full CG solve per query when the `ND×ND` Gram
+//! system is solved one right-hand side at a time. Block CG instead iterates
+//! all `K` columns together: every iteration performs **one** block operator
+//! application `Q = A·P` (gemm-shaped — it hits [`LinearOp::apply_block`],
+//! which the dense and Gram operators implement as batched products) and
+//! couples the columns through `K×K` projections. Because the block Krylov
+//! space after `k` iterations contains each column's own order-`k` Krylov
+//! space *and* its `K−1` siblings', per-column convergence is provably no
+//! slower than single-RHS CG and in practice far faster — the siblings
+//! deflate shared extremal modes. On the paper's SE Gram operator
+//! (`D=256, N=8, K=8`) this cuts total column-applications ~1.5× vs eight
+//! sequential [`cg_solve`] runs (pinned by `tests/block_cg.rs`).
+//!
+//! Breakdown handling: the `K×K` projection `PᵀAP` goes singular when
+//! search columns become linearly dependent — duplicate right-hand sides,
+//! or (inherently, for any `K ∤ dim` at tight tolerances) when the block
+//! Krylov space saturates the operator dimension on the final step. Rather
+//! than deflating (which reorders results), this implementation detects the
+//! breakdown — singular LU, non-finite updates, or residual stagnation over
+//! [`STAGNATION_WINDOW`] iterations — and finishes the still-unconverged
+//! columns with warm-started single-RHS CG: always correct, and the warm
+//! start keeps the cost near the deflated optimum.
+
+use crate::linalg::{par, Lu, Mat};
+
+use super::{cg_solve, norm2, CgOptions, JacobiPrecond, LinearOp};
+
+/// Iterations without **any** new best of the worst relative residual
+/// before the run is declared stagnant (an ill-conditioned projection
+/// slipped past the LU threshold) and handed to the single-RHS fallback.
+/// Any improvement, however small, resets the counter — a slowly
+/// converging system never trips this; only a genuinely stalled or
+/// oscillating one does.
+pub const STAGNATION_WINDOW: usize = 10;
+
+/// Outcome of a block-CG run.
+#[derive(Clone, Debug)]
+pub struct BlockCgResult {
+    /// Solution estimate, one column per right-hand side.
+    pub x: Mat,
+    /// Block iterations performed (each is one `apply_block`).
+    pub iters: usize,
+    /// Per-column convergence flags (‖r_j‖/‖b_j‖ ≤ rtol at exit).
+    pub converged: Vec<bool>,
+    /// Final per-column relative residuals.
+    pub rel_residuals: Vec<f64>,
+    /// Total single-column operator applications performed, counting each
+    /// block application as `K` — directly comparable against the
+    /// `iters + 1` applications of a [`cg_solve`] run.
+    pub col_applies: usize,
+    /// Columns finished by the warm-started single-RHS fallback after a
+    /// block breakdown (0 in the regular case).
+    pub fallback_cols: usize,
+    /// Max-over-columns ‖r_j‖₂ after every iteration (index 0 = initial);
+    /// empty unless [`CgOptions::track_history`].
+    pub resid_history: Vec<f64>,
+}
+
+impl BlockCgResult {
+    /// Did every column meet the tolerance?
+    pub fn all_converged(&self) -> bool {
+        self.converged.iter().all(|&c| c)
+    }
+}
+
+/// Apply the optional Jacobi preconditioner column-wise: `Z = M⁻¹ R`.
+fn precondition(precond: &Option<JacobiPrecond>, r: &Mat, z: &mut Mat) {
+    match precond {
+        Some(p) => {
+            for j in 0..r.cols() {
+                p.apply(r.col(j), z.col_mut(j));
+            }
+        }
+        None => z.as_mut_slice().copy_from_slice(r.as_slice()),
+    }
+}
+
+/// Per-column relative residuals `‖r_j‖/‖b_j‖`.
+fn rel_residuals(r: &Mat, bnorms: &[f64]) -> Vec<f64> {
+    (0..r.cols()).map(|j| norm2(r.col(j)) / bnorms[j]).collect()
+}
+
+/// Preconditioned block CG for `A X = B`, `A` SPD, `B` of shape `dim × K`.
+///
+/// Starts from `X = 0` (so the initial residual is `B` itself, with no
+/// operator application). `opts.max_iters = 0` falls back to 10× the
+/// operator dimension, like [`cg_solve`].
+pub fn block_cg_solve(op: &dyn LinearOp, b: &Mat, opts: &CgOptions) -> BlockCgResult {
+    let n = op.dim();
+    assert_eq!(b.rows(), n, "rhs rows {} != operator dim {n}", b.rows());
+    let k = b.cols();
+    let max_iters = if opts.max_iters == 0 { 10 * n } else { opts.max_iters };
+
+    let mut x = Mat::zeros(n, k);
+    if k == 0 {
+        return BlockCgResult {
+            x,
+            iters: 0,
+            converged: Vec::new(),
+            rel_residuals: Vec::new(),
+            col_applies: 0,
+            fallback_cols: 0,
+            resid_history: Vec::new(),
+        };
+    }
+
+    let bnorms: Vec<f64> = (0..k).map(|j| norm2(b.col(j)).max(f64::MIN_POSITIVE)).collect();
+    let mut r = b.clone();
+    let mut history = Vec::new();
+    if opts.track_history {
+        history.push((0..k).map(|j| norm2(r.col(j))).fold(0.0_f64, f64::max));
+    }
+    let mut rel = rel_residuals(&r, &bnorms);
+    if rel.iter().all(|&v| v <= opts.rtol) {
+        let converged = vec![true; k];
+        return BlockCgResult {
+            x,
+            iters: 0,
+            converged,
+            rel_residuals: rel,
+            col_applies: 0,
+            fallback_cols: 0,
+            resid_history: history,
+        };
+    }
+
+    let mut z = Mat::zeros(n, k);
+    precondition(&opts.precond, &r, &mut z);
+    let mut p = z.clone();
+    let mut q = Mat::zeros(n, k);
+    // one n×K scratch serves every P·α / Q·α / P·β product of the loop —
+    // the hot path allocates only the K×K projections per iteration
+    let mut tmp = Mat::zeros(n, k);
+
+    let mut iters = 0;
+    let mut col_applies = 0;
+    let mut broke_down = false;
+    let mut best_rel = f64::INFINITY;
+    let mut since_best = 0usize;
+    while iters < max_iters {
+        op.apply_block(&p, &mut q);
+        col_applies += k;
+        // α = (PᵀQ)⁻¹ (PᵀR): enforces R_new ⊥ P directly, which is the
+        // roundoff-robust form of the block update. One LU of the K×K
+        // projection serves both the α and β solves of this iteration.
+        let pq = par::t_matmul(&p, &q);
+        let pr = par::t_matmul(&p, &r);
+        let pq_lu = match Lu::factor(&pq) {
+            Ok(lu) => lu,
+            Err(_) => {
+                broke_down = true;
+                break;
+            }
+        };
+        let alpha = pq_lu.solve_mat(&pr);
+        if !alpha.as_slice().iter().all(|v| v.is_finite()) {
+            broke_down = true;
+            break;
+        }
+        par::matmul_into(&p, &alpha, &mut tmp);
+        x += &tmp;
+        par::matmul_into(&q, &alpha, &mut tmp);
+        r -= &tmp;
+        iters += 1;
+        rel = rel_residuals(&r, &bnorms);
+        if opts.track_history {
+            history.push((0..k).map(|j| norm2(r.col(j))).fold(0.0_f64, f64::max));
+        }
+        if rel.iter().any(|v| !v.is_finite()) {
+            // near-singular projection slipped past the LU threshold and
+            // poisoned the update — recover through the fallback path.
+            broke_down = true;
+            break;
+        }
+        if rel.iter().all(|&v| v <= opts.rtol) {
+            break;
+        }
+        // stagnation guard: an ill-conditioned projection that still passed
+        // the LU threshold stalls progress instead of erroring — detect it
+        // by the worst column's residual making no new best at all.
+        let max_rel = rel.iter().fold(0.0_f64, |m, &v| m.max(v));
+        if max_rel < best_rel {
+            best_rel = max_rel;
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best >= STAGNATION_WINDOW {
+                broke_down = true;
+                break;
+            }
+        }
+        precondition(&opts.precond, &r, &mut z);
+        // β = −(PᵀQ)⁻¹ (QᵀZ): makes the new search block A-conjugate to P.
+        let qz = par::t_matmul(&q, &z);
+        let beta = pq_lu.solve_mat(&qz).scale(-1.0);
+        par::matmul_into(&p, &beta, &mut tmp);
+        p.as_mut_slice().copy_from_slice(z.as_slice());
+        p += &tmp;
+    }
+
+    // Breakdown (rank-deficient block): finish the unconverged columns with
+    // warm-started single-RHS CG — correctness over elegance. Each column
+    // gets the *full* iteration budget, exactly what a sequential
+    // `cg_solve` would have had: a spurious breakdown (e.g. the stagnation
+    // guard tripping on a legitimate plateau) must never turn a solvable
+    // system into a failure, only cost extra applications.
+    let mut fallback_cols = 0;
+    if broke_down {
+        let col_opts = CgOptions {
+            rtol: opts.rtol,
+            max_iters,
+            precond: opts.precond.clone(),
+            track_history: false,
+        };
+        for j in 0..k {
+            if rel[j] <= opts.rtol {
+                continue;
+            }
+            // a poisoned (non-finite) column restarts cold instead of warm
+            let warm = x.col(j).to_vec();
+            let x0 = warm.iter().all(|v| v.is_finite()).then_some(warm.as_slice());
+            let res = cg_solve(op, b.col(j), x0, &col_opts);
+            col_applies += res.iters + 1;
+            x.set_col(j, &res.x);
+            fallback_cols += 1;
+        }
+        // recompute residuals from scratch for honest reporting
+        let mut ax = Mat::zeros(n, k);
+        op.apply_block(&x, &mut ax);
+        col_applies += k;
+        let resid = b - &ax;
+        rel = rel_residuals(&resid, &bnorms);
+    }
+
+    let converged: Vec<bool> = rel.iter().map(|&v| v <= opts.rtol).collect();
+    BlockCgResult {
+        x,
+        iters,
+        converged,
+        rel_residuals: rel,
+        col_applies,
+        fallback_cols,
+        resid_history: history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{random_orthogonal, Mat};
+    use crate::rng::Rng;
+
+    fn spd_with_spectrum(spec: &[f64], seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let q = random_orthogonal(spec.len(), &mut rng);
+        q.matmul(&Mat::diag(spec)).matmul_t(&q)
+    }
+
+    #[test]
+    fn matches_direct_solve_on_dense_spd() {
+        let spec: Vec<f64> = (1..=24).map(|i| i as f64).collect();
+        let a = spd_with_spectrum(&spec, 11);
+        let mut rng = Rng::new(12);
+        let b = Mat::from_fn(24, 5, |_, _| rng.gauss());
+        let res = block_cg_solve(&a, &b, &CgOptions { rtol: 1e-12, ..Default::default() });
+        assert!(res.all_converged(), "rel residuals {:?}", res.rel_residuals);
+        let want = crate::linalg::Lu::factor(&a).unwrap().solve_mat(&b);
+        assert!((&res.x - &want).max_abs() < 1e-7 * (1.0 + want.max_abs()));
+        // K=5 on a 24-dim operator at rtol 1e-12: the block Krylov space
+        // saturates on the final step, so the run may legitimately finish
+        // through the fallback — correctness above is what matters.
+    }
+
+    #[test]
+    fn single_column_degenerates_to_cg() {
+        let spec: Vec<f64> = (1..=16).map(|i| (i as f64).sqrt()).collect();
+        let a = spd_with_spectrum(&spec, 21);
+        let b: Vec<f64> = (0..16).map(|i| ((i + 1) as f64).cos()).collect();
+        let opts = CgOptions { rtol: 1e-10, ..Default::default() };
+        let single = cg_solve(&a, &b, None, &opts);
+        let block = block_cg_solve(&a, &Mat::col_vec(&b), &opts);
+        assert!(block.all_converged());
+        let err: f64 = block
+            .x
+            .as_slice()
+            .iter()
+            .zip(&single.x)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-8, "block K=1 should match plain CG: {err}");
+    }
+
+    #[test]
+    fn block_iterations_never_exceed_worst_single_column() {
+        // the block Krylov space contains each column's own — per-column
+        // convergence is at least as fast as single-RHS CG.
+        let spec: Vec<f64> = (1..=40).map(|i| (i as f64).powf(1.3)).collect();
+        let a = spd_with_spectrum(&spec, 31);
+        let mut rng = Rng::new(32);
+        let b = Mat::from_fn(40, 4, |_, _| rng.gauss());
+        let opts = CgOptions { rtol: 1e-9, ..Default::default() };
+        let worst = (0..4)
+            .map(|j| cg_solve(&a, b.col(j), None, &opts).iters)
+            .max()
+            .unwrap();
+        let block = block_cg_solve(&a, &b, &opts);
+        assert!(block.all_converged());
+        assert!(block.iters <= worst, "block iters {} vs worst single {worst}", block.iters);
+    }
+
+    #[test]
+    fn duplicate_rhs_columns_survive_via_fallback() {
+        // identical columns make PᵀAP singular after the first iteration;
+        // the solver must still return correct solutions for every column.
+        let spec: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let a = spd_with_spectrum(&spec, 41);
+        let mut rng = Rng::new(42);
+        let mut b = Mat::from_fn(20, 4, |_, _| rng.gauss());
+        let dup = b.col(0).to_vec();
+        b.set_col(2, &dup);
+        let res = block_cg_solve(&a, &b, &CgOptions { rtol: 1e-10, ..Default::default() });
+        assert!(res.all_converged(), "rel residuals {:?}", res.rel_residuals);
+        assert!(res.fallback_cols > 0, "duplicate columns must trip the breakdown path");
+        let want = crate::linalg::Lu::factor(&a).unwrap().solve_mat(&b);
+        assert!((&res.x - &want).max_abs() < 1e-6 * (1.0 + want.max_abs()));
+    }
+
+    #[test]
+    fn iteration_cap_reports_per_column_flags() {
+        let spec: Vec<f64> = (1..=30).map(|i| (i as f64).powi(2)).collect();
+        let a = spd_with_spectrum(&spec, 51);
+        let mut rng = Rng::new(52);
+        let b = Mat::from_fn(30, 3, |_, _| rng.gauss());
+        let res = block_cg_solve(
+            &a,
+            &b,
+            &CgOptions { rtol: 1e-14, max_iters: 2, ..Default::default() },
+        );
+        assert_eq!(res.iters, 2);
+        assert_eq!(res.converged.len(), 3);
+        assert!(!res.all_converged(), "2 iterations cannot reach 1e-14");
+        assert!(res.converged.iter().all(|&c| !c));
+        assert_eq!(res.rel_residuals.len(), 3);
+    }
+
+    #[test]
+    fn zero_and_empty_blocks() {
+        let a = Mat::eye(6);
+        let empty = Mat::zeros(6, 0);
+        let res = block_cg_solve(&a, &empty, &CgOptions::default());
+        assert_eq!(res.iters, 0);
+        assert!(res.converged.is_empty());
+        // an all-zero rhs converges immediately
+        let zero = Mat::zeros(6, 2);
+        let res = block_cg_solve(&a, &zero, &CgOptions::default());
+        assert_eq!(res.iters, 0);
+        assert!(res.all_converged());
+        assert_eq!(res.col_applies, 0);
+    }
+
+    #[test]
+    fn history_tracks_max_residual_when_enabled() {
+        let spec: Vec<f64> = (1..=12).map(|i| i as f64).collect();
+        let a = spd_with_spectrum(&spec, 61);
+        let b = Mat::from_fn(12, 2, |i, j| ((i + j) as f64).sin());
+        let on = block_cg_solve(&a, &b, &CgOptions { rtol: 1e-9, ..Default::default() });
+        assert_eq!(on.resid_history.len(), on.iters + 1);
+        let off = block_cg_solve(
+            &a,
+            &b,
+            &CgOptions { rtol: 1e-9, track_history: false, ..Default::default() },
+        );
+        assert!(off.resid_history.is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Block-CG oracle tests on the structured Gram operators.
+//!
+//! Mirrors the `gram_oracle.rs` harness: build `GramFactors` for a kernel,
+//! materialize the dense `ND×ND` Gram as the ground-truth oracle, and check
+//! the matrix-free solvers against it. On top of correctness, the
+//! `block_cg_beats_sequential_cg_on_serving_batch` test pins the PR's
+//! throughput claim: solving `K = 8` right-hand sides on a `D=256, N=8` SE
+//! Gram operator with one block-CG run costs **fewer total operator
+//! applications** than eight sequential `cg_solve` runs.
+
+use gdkron::gram::{GramFactors, GramOperator, Metric};
+use gdkron::kernels::{Matern52, ScalarKernel, SquaredExponential};
+use gdkron::linalg::{par, Lu, Mat};
+use gdkron::rng::Rng;
+use gdkron::solvers::{block_cg_solve, cg_solve, CgOptions, JacobiPrecond, LinearOp};
+
+fn sample_x(d: usize, n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(d, n, |_, _| rng.uniform_in(-2.0, 2.0))
+}
+
+/// Build a noised Gram operator (SPD) the way the serving path does.
+fn factors(kern: &dyn ScalarKernel, d: usize, n: usize, seed: u64) -> GramFactors {
+    let x = sample_x(d, n, seed);
+    let inv_l2 = 1.0 / (10.0 * d as f64);
+    GramFactors::with_noise(kern, &x, Metric::Iso(inv_l2), None, 1e-4)
+}
+
+fn gauss_block(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gauss())
+}
+
+/// Oracle check: block-CG on a stacked RHS matrix matches (a) `cg_solve`
+/// column-by-column and (b) the dense LU solve, on the given kernel.
+fn check_block_matches_columnwise(kern: &dyn ScalarKernel, seed: u64) {
+    let (d, n, k) = (12, 5, 4);
+    let f = factors(kern, d, n, seed);
+    let op = GramOperator::new(&f);
+    let b = gauss_block(d * n, k, seed + 100);
+    let opts = CgOptions {
+        rtol: 1e-11,
+        max_iters: 5000,
+        precond: Some(JacobiPrecond::new(&f.gram_diag())),
+        track_history: false,
+    };
+    let block = block_cg_solve(&op, &b, &opts);
+    assert!(block.all_converged(), "{}: rel {:?}", kern.name(), block.rel_residuals);
+
+    // (a) column-by-column single-RHS CG
+    for j in 0..k {
+        let single = cg_solve(&op, b.col(j), None, &opts);
+        assert!(single.converged, "{} col {j}", kern.name());
+        let err: f64 = block
+            .x
+            .col(j)
+            .iter()
+            .zip(&single.x)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        let scale: f64 = single.x.iter().fold(1.0_f64, |m, v| m.max(v.abs()));
+        assert!(err < 1e-6 * scale, "{} col {j}: block vs cg err {err}", kern.name());
+    }
+
+    // (b) dense oracle
+    let dense = f.to_dense();
+    let lu = Lu::factor(&dense).unwrap();
+    for j in 0..k {
+        let want = lu.solve_vec(b.col(j));
+        let err: f64 = block
+            .x
+            .col(j)
+            .iter()
+            .zip(&want)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        let scale: f64 = want.iter().fold(1.0_f64, |m, v| m.max(v.abs()));
+        assert!(err < 1e-5 * scale, "{} col {j}: block vs dense err {err}", kern.name());
+    }
+}
+
+#[test]
+fn block_cg_matches_columnwise_cg_on_se_gram() {
+    check_block_matches_columnwise(&SquaredExponential, 1);
+}
+
+#[test]
+fn block_cg_matches_columnwise_cg_on_matern52_gram() {
+    check_block_matches_columnwise(&Matern52, 2);
+}
+
+#[test]
+fn iteration_cap_exercises_per_column_convergence_flags() {
+    let f = factors(&SquaredExponential, 10, 4, 3);
+    let op = GramOperator::new(&f);
+    let b = gauss_block(40, 3, 33);
+    // unreachable tolerance + tiny cap: nothing converges, every column
+    // must report its own (false) flag and a finite residual.
+    let capped = block_cg_solve(
+        &op,
+        &b,
+        &CgOptions { rtol: 1e-15, max_iters: 2, precond: None, track_history: true },
+    );
+    assert_eq!(capped.iters, 2);
+    assert_eq!(capped.converged, vec![false, false, false]);
+    assert!(capped.rel_residuals.iter().all(|r| r.is_finite() && *r > 1e-15));
+    assert_eq!(capped.resid_history.len(), capped.iters + 1);
+    // the same system converges column-by-column once the cap is lifted
+    let free = block_cg_solve(
+        &op,
+        &b,
+        &CgOptions {
+            rtol: 1e-9,
+            max_iters: 5000,
+            precond: Some(JacobiPrecond::new(&f.gram_diag())),
+            track_history: false,
+        },
+    );
+    assert!(free.all_converged());
+}
+
+/// The PR's acceptance pin: K=8 RHS on the D=256, N=8 SE Gram operator —
+/// one block-CG run performs fewer total (column-equivalent) operator
+/// applications than 8 sequential CG solves, at matching accuracy; and the
+/// parallel and serial linalg paths agree on the operator itself to ≤1e-12.
+#[test]
+fn block_cg_beats_sequential_cg_on_serving_batch() {
+    let (d, n, k) = (256, 8, 8);
+    let f = factors(&SquaredExponential, d, n, 4);
+    let op = GramOperator::new(&f);
+    let b = gauss_block(d * n, k, 44);
+    let opts = CgOptions {
+        rtol: 1e-6,
+        max_iters: 5000,
+        precond: Some(JacobiPrecond::new(&f.gram_diag())),
+        track_history: false,
+    };
+
+    // sequential baseline: one CG run per column, each costing
+    // `iters + 1` operator applications (the +1 is the initial residual).
+    let mut seq_applies = 0;
+    let mut seq_x = Mat::zeros(d * n, k);
+    for j in 0..k {
+        let res = cg_solve(&op, b.col(j), None, &opts);
+        assert!(res.converged, "sequential col {j} did not converge");
+        seq_applies += res.iters + 1;
+        seq_x.set_col(j, &res.x);
+    }
+
+    let block = block_cg_solve(&op, &b, &opts);
+    assert!(block.all_converged(), "rel {:?}", block.rel_residuals);
+    assert_eq!(block.fallback_cols, 0, "random RHS must not trip the fallback");
+    assert!(
+        block.col_applies < seq_applies,
+        "block CG must beat sequential: {} vs {} column applications",
+        block.col_applies,
+        seq_applies
+    );
+
+    // both solvers agree with each other (same operator, same tolerance)
+    let scale = 1.0 + seq_x.max_abs();
+    assert!(
+        (&block.x - &seq_x).max_abs() < 1e-4 * scale,
+        "block and sequential solutions diverged"
+    );
+
+    // parallel vs serial operator application agree to ≤ 1e-12: toggle the
+    // global pool inside this one test (other tests don't pin the knob).
+    let before = par::threads();
+    let probe = gauss_block(d * n, 1, 45);
+    par::set_threads(1);
+    let mut serial = vec![0.0; d * n];
+    op.apply(probe.col(0), &mut serial);
+    par::set_threads(4);
+    let mut parallel = vec![0.0; d * n];
+    op.apply(probe.col(0), &mut parallel);
+    par::set_threads(before);
+    let err: f64 = serial
+        .iter()
+        .zip(&parallel)
+        .map(|(p, q)| (p - q).abs())
+        .fold(0.0, f64::max);
+    assert!(err <= 1e-12, "parallel vs serial Gram matvec differ by {err}");
+}

@@ -1,0 +1,172 @@
+//! Property tests: the parallel product kernels (`linalg::par`) agree with
+//! the serial `Mat` implementations across ragged shapes.
+//!
+//! The parallel layer partitions output columns over scoped workers but
+//! reuses the exact serial per-column kernels, so agreement must hold to
+//! ≤ 1e-12 (in fact bit-identically) for every shape — including rows/cols
+//! that are not multiples of the 4-wide unroll in `matmul_acc` or of the
+//! column-block width, and the 0×k / 1×k degenerate edges the unroll tail
+//! has no dedicated coverage for elsewhere.
+
+use gdkron::linalg::{par, Mat};
+use gdkron::rng::Rng;
+
+fn sample(r: usize, c: usize, rng: &mut Rng) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.gauss())
+}
+
+/// Shape sweep: degenerate (0, 1), unroll boundaries (3..5, 7..9) and
+/// block-ragged sizes (13, 17) — chosen so inner dims hit every tail length
+/// of the 4-wide unroll and column counts don't divide evenly over workers.
+const SIZES: [usize; 9] = [0, 1, 2, 3, 4, 5, 8, 13, 17];
+
+#[test]
+fn par_matmul_matches_serial_on_ragged_shapes() {
+    let mut rng = Rng::new(0xB1);
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &n in &SIZES {
+                let a = sample(m, k, &mut rng);
+                let b = sample(k, n, &mut rng);
+                let want = a.matmul(&b);
+                for t in [1, 2, 3, 4] {
+                    let mut got = Mat::zeros(m, n);
+                    par::matmul_into_with(&a, &b, &mut got, t);
+                    assert!(
+                        (&got - &want).max_abs() <= 1e-12,
+                        "matmul {m}x{k}*{k}x{n} threads={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn par_t_matmul_matches_serial_on_ragged_shapes() {
+    let mut rng = Rng::new(0xB2);
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &n in &SIZES {
+                // a is m×k, product is aᵀ(k) × b-cols(n), shared rows m
+                let a = sample(m, k, &mut rng);
+                let b = sample(m, n, &mut rng);
+                let want = a.t_matmul(&b);
+                for t in [1, 2, 4] {
+                    let mut got = Mat::zeros(k, n);
+                    par::t_matmul_into_with(&a, &b, &mut got, t);
+                    assert!(
+                        (&got - &want).max_abs() <= 1e-12,
+                        "t_matmul {m}x{k}ᵀ*{m}x{n} threads={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn par_matmul_t_matches_serial_on_ragged_shapes() {
+    let mut rng = Rng::new(0xB3);
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &p in &SIZES {
+                // a is m×k, b is p×k, product a·bᵀ is m×p
+                let a = sample(m, k, &mut rng);
+                let b = sample(p, k, &mut rng);
+                let want = a.matmul_t(&b);
+                for t in [1, 2, 4] {
+                    let mut got = Mat::zeros(m, p);
+                    par::matmul_t_into_with(&a, &b, &mut got, t);
+                    assert!(
+                        (&got - &want).max_abs() <= 1e-12,
+                        "matmul_t {m}x{k}*{p}x{k}ᵀ threads={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn par_matmul_acc_accumulates_like_serial() {
+    let mut rng = Rng::new(0xB4);
+    for &(m, k, n) in &[(5, 3, 7), (8, 4, 4), (9, 5, 13), (1, 1, 1), (3, 8, 2)] {
+        let a = sample(m, k, &mut rng);
+        let b = sample(k, n, &mut rng);
+        let seed = sample(m, n, &mut rng);
+        let mut want = seed.clone();
+        a.matmul_acc(&b, &mut want);
+        for t in [1, 2, 4] {
+            let mut got = seed.clone();
+            par::matmul_acc_with(&a, &b, &mut got, t);
+            assert!(
+                (&got - &want).max_abs() <= 1e-12,
+                "matmul_acc {m}x{k}*{k}x{n} threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_results_are_bit_identical_to_serial() {
+    // stronger than the 1e-12 bound: same per-column kernel, same summation
+    // order, so the parallel path reproduces the serial result exactly.
+    let mut rng = Rng::new(0xB5);
+    let a = sample(33, 29, &mut rng);
+    let b = sample(29, 31, &mut rng);
+    let want = a.matmul(&b);
+    let mut got = Mat::zeros(33, 31);
+    par::matmul_into_with(&a, &b, &mut got, 5);
+    assert!(got == want, "parallel matmul must be bit-identical to serial");
+}
+
+#[test]
+fn unroll_tail_shapes_hit_every_remainder() {
+    // inner dimension k ≡ 0,1,2,3 (mod 4) exercises every tail of the
+    // 4-wide unroll in the shared kernel, on both serial and parallel paths.
+    let mut rng = Rng::new(0xB6);
+    for k in [1usize, 2, 3, 4, 5, 6, 7, 8, 9] {
+        let a = sample(6, k, &mut rng);
+        let b = sample(k, 3, &mut rng);
+        // dense reference computed entrywise, independent of the unroll
+        let want = Mat::from_fn(6, 3, |i, j| {
+            (0..k).map(|kk| a[(i, kk)] * b[(kk, j)]).sum::<f64>()
+        });
+        let serial = a.matmul(&b);
+        assert!((&serial - &want).max_abs() <= 1e-12, "serial k={k}");
+        let mut par_out = Mat::zeros(6, 3);
+        par::matmul_into_with(&a, &b, &mut par_out, 3);
+        assert!((&par_out - &want).max_abs() <= 1e-12, "parallel k={k}");
+    }
+}
+
+#[test]
+fn transpose_into_variants_match_allocating_forms() {
+    let mut rng = Rng::new(0xB7);
+    let a = sample(7, 5, &mut rng);
+    let b = sample(7, 4, &mut rng);
+    let mut out = Mat::full(5, 4, f64::NAN); // must be fully overwritten
+    a.t_matmul_into(&b, &mut out);
+    assert!((&out - &a.t_matmul(&b)).max_abs() == 0.0);
+
+    let c = sample(6, 5, &mut rng);
+    let mut out = Mat::full(7, 6, f64::NAN);
+    a.matmul_t_into(&c, &mut out);
+    assert!((&out - &a.matmul_t(&c)).max_abs() == 0.0);
+}
+
+#[test]
+fn auto_dispatch_crosses_parallel_threshold_correctly() {
+    // large enough to engage the pool on a multicore machine; the result
+    // must still match the serial product exactly.
+    let mut rng = Rng::new(0xB8);
+    let a = sample(96, 64, &mut rng);
+    let b = sample(64, 80, &mut rng);
+    let want = a.matmul(&b);
+    let mut got = Mat::zeros(96, 80);
+    par::matmul_into(&a, &b, &mut got);
+    assert!((&got - &want).max_abs() <= 1e-12);
+    let got_t = par::t_matmul(&a, &sample(96, 70, &mut rng));
+    assert_eq!((got_t.rows(), got_t.cols()), (64, 70));
+}

@@ -1,0 +1,135 @@
+//! In-tree shim of the `anyhow` error API.
+//!
+//! Substitution note (DESIGN.md §6): the build environment has no network
+//! registry, so this workspace member stands in for the real crate under the
+//! same name. It implements exactly the subset the `gdkron` sources use —
+//! [`Error`], [`Result`], [`anyhow!`], [`ensure!`] and [`bail!`] — with the
+//! same semantics (a type-erased, `Send + Sync` error carrying a message, a
+//! blanket `From` for standard errors so `?` works on io/parse errors).
+//!
+//! Deliberately *not* implemented: `Context`/`with_context`, backtraces and
+//! downcasting. Code that needs those should extend this shim rather than
+//! work around it.
+
+use std::fmt;
+
+/// Type-erased error: a display message (the only thing the workspace ever
+/// reads back out of an `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything displayable — the workhorse behind [`anyhow!`].
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `?`-conversion from any standard error. Mirrors the real crate: `Error`
+/// itself does not implement `std::error::Error`, which is what keeps this
+/// blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as the default
+/// error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[allow(unused_imports)]
+    use super::*;
+
+    fn formats(x: i32) -> Result<()> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        if x > 100 {
+            bail!("x too big: {}", x);
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let v = 3;
+        let e = anyhow!("value {v}");
+        assert_eq!(e.to_string(), "value 3");
+        let e = anyhow!("value {}", 4);
+        assert_eq!(e.to_string(), "value 4");
+        assert!(formats(5).is_ok());
+        assert_eq!(formats(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(formats(101).unwrap_err().to_string(), "x too big: 101");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
