@@ -31,6 +31,7 @@ fn main() {
         window: 2,
         center: None,
         prior_grad_mean: None,
+        online: true,
         opts: shared.clone(),
     }
     .minimize(&obj, &x0);
@@ -42,6 +43,7 @@ fn main() {
         metric: Metric::Iso(0.05),
         window: 2,
         center_at_current_gradient: false,
+        online: true,
         opts: shared,
     }
     .minimize(&obj, &x0);

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use gdkron::config::Config;
-use gdkron::coordinator::{BatchPolicy, Engine, PjrtEngine, SurrogateServer};
+use gdkron::coordinator::{BatchPolicy, Engine, NativeEngine, PjrtEngine, SurrogateServer};
 use gdkron::gp::{FitOptions, GradientGp};
 use gdkron::gram::Metric;
 use gdkron::hmc::{run_hmc, Banana, HmcConfig, Target};
@@ -84,8 +84,28 @@ fn main() -> anyhow::Result<()> {
         )?
     } else {
         println!("(PJRT artifacts unavailable — serving with the native engine)");
-        SurrogateServer::spawn_native(gp, policy)?
+        // [gp] online / window keys control the engine's streaming behaviour
+        let engine_cfg = config.clone();
+        SurrogateServer::spawn(
+            move || {
+                Ok(Box::new(NativeEngine::from_config(gp, &engine_cfg)) as Box<dyn Engine>)
+            },
+            policy,
+        )?
     };
+
+    // stream a few fresh observations into the live service: the native
+    // engine conditions incrementally (no refit), so the serving state keeps
+    // learning while it serves.
+    if !use_pjrt {
+        let scout = server.client();
+        for _ in 0..3 {
+            let xj = rng.uniform_vec(d, -2.0, 2.0);
+            let gj = target.grad_energy(&xj);
+            scout.observe(&xj, &gj)?;
+        }
+        println!("streamed 3 observations into the live surrogate (N = {})", n_train + 3);
+    }
 
     // four concurrent HMC chains share the surrogate service
     let chains = 4;

@@ -27,6 +27,7 @@ fn main() {
             window: m,
             center: None,
             prior_grad_mean: None,
+            online: true,
             opts: OptOptions { gtol: 1e-5, max_iters: 120, line_search: LineSearch::Backtracking },
         };
         let trace = opt.minimize(&obj, &x0);

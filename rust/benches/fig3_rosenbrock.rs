@@ -30,6 +30,7 @@ fn main() {
         window: 2,
         center: None,
         prior_grad_mean: None,
+        online: true,
         opts: shared.clone(),
     };
     bench_with("gp_h rbf m=2 d=100", t, 5, &mut || {
@@ -41,6 +42,7 @@ fn main() {
         metric: Metric::Iso(0.05),
         window: 2,
         center_at_current_gradient: false,
+        online: true,
         opts: shared,
     };
     bench_with("gp_x rbf m=2 d=100", t, 5, &mut || {

@@ -1,6 +1,7 @@
 //! Prediction backends for the surrogate server.
 
-use crate::gp::GradientGp;
+use crate::config::Config;
+use crate::gp::{GradientGp, OnlineGradientGp};
 use crate::linalg::Mat;
 use crate::runtime::{ArgValue, ArtifactRegistry};
 
@@ -14,36 +15,76 @@ pub trait Engine {
     fn dim(&self) -> usize;
     /// Predict gradients at the query columns of `xq` (`D×B`).
     fn predict_batch(&self, xq: &Mat) -> anyhow::Result<Mat>;
+    /// Stream one observation into the engine's conditioning state.
+    /// Backends without mutable state reject (the server surfaces the error
+    /// to the observing client; prediction service is unaffected).
+    fn observe(&mut self, _x: &[f64], _g: &[f64]) -> anyhow::Result<()> {
+        anyhow::bail!("{} engine does not support observation streaming", self.name())
+    }
     /// Backend label for metrics/logs.
     fn name(&self) -> &'static str;
 }
 
-/// Native engine: the in-process [`GradientGp`] (f64, exact Woodbury fit).
+/// Native engine: the in-process GP as long-lived serving state
+/// ([`OnlineGradientGp`]).
 ///
 /// `predict_batch` delegates to [`GradientGp::predict_gradients`], which
 /// fans the coalesced batch out over the parallel linalg pool — the
 /// micro-batcher therefore controls both latency (deadline) *and* the
-/// parallelism grain (batch width) of the serving path.
+/// parallelism grain (batch width) of the serving path. `observe` streams
+/// new observations through the incremental conditioning engine (no refit in
+/// the steady state); with `gp.online = false` it cold-refits per
+/// observation instead (A/B validation), and `gp.window > 0` bounds the
+/// retained observation count by dropping the oldest.
 pub struct NativeEngine {
-    gp: GradientGp,
+    gp: OnlineGradientGp,
+    /// Sliding-window cap (0 = unbounded).
+    window: usize,
 }
 
 impl NativeEngine {
     pub fn new(gp: GradientGp) -> Self {
-        NativeEngine { gp }
+        Self::with_window(gp, 0)
+    }
+
+    /// Native engine with a sliding observation window (0 = unbounded).
+    pub fn with_window(gp: GradientGp, window: usize) -> Self {
+        NativeEngine { gp: OnlineGradientGp::from_fitted(gp), window }
+    }
+
+    /// Configure from `[gp]` config keys: `gp.online` (bool, default `true`;
+    /// `false` forces the cold-refit A/B path) and `gp.window` (int ≥ 0,
+    /// default 0 = unbounded).
+    pub fn from_config(gp: GradientGp, config: &Config) -> Self {
+        let online = config.bool_or("gp.online", true);
+        let window = config.int_or("gp.window", 0).max(0) as usize;
+        let mut engine = Self::with_window(gp, window);
+        engine.gp.set_online(online);
+        engine
     }
 
     pub fn gp(&self) -> &GradientGp {
-        &self.gp
+        self.gp.gp()
+    }
+
+    /// Cold refits performed by the conditioning engine (1 = initial fit).
+    pub fn cold_refits(&self) -> usize {
+        self.gp.cold_refits()
     }
 }
 
 impl Engine for NativeEngine {
     fn dim(&self) -> usize {
-        self.gp.d()
+        self.gp.gp().d()
     }
     fn predict_batch(&self, xq: &Mat) -> anyhow::Result<Mat> {
-        Ok(self.gp.predict_gradients(xq))
+        Ok(self.gp.gp().predict_gradients(xq))
+    }
+    fn observe(&mut self, x: &[f64], g: &[f64]) -> anyhow::Result<()> {
+        // atomic window-slide + append: a single solve per streamed
+        // observation, and any failure rolls the whole step back so the
+        // serving state never ends up half-applied.
+        self.gp.observe_windowed(x, g, self.window)
     }
     fn name(&self) -> &'static str {
         "native"

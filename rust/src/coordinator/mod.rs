@@ -7,6 +7,14 @@
 //! native rust or an AOT-compiled PJRT executable — sees MXU-shaped batches
 //! instead of single vectors.
 //!
+//! The native backend is *long-lived, mutable* serving state: clients stream
+//! new observations in ([`SurrogateClient::observe`]) and the engine
+//! conditions incrementally through [`crate::gp::OnlineGradientGp`] — no
+//! cold refit in the steady state. Observations act as barriers in the
+//! request stream (predictions enqueued after an observe see the updated
+//! surrogate), `gp.window` bounds the retained observation count, and
+//! `gp.online = false` forces the refit path for A/B validation.
+//!
 //! ```text
 //!  chain 0 ─┐                                   ┌─ NativeEngine (GradientGp)
 //!  chain 1 ─┼─▶ SurrogateClient ─▶ micro-batcher ┼─ PjrtEngine (artifacts/*.hlo.txt)

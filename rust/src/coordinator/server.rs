@@ -14,7 +14,14 @@ struct Request {
     resp: SyncSender<anyhow::Result<Vec<f64>>>,
 }
 
-/// Channel message: a prediction request or the shutdown sentinel.
+struct Observation {
+    x: Vec<f64>,
+    g: Vec<f64>,
+    resp: SyncSender<anyhow::Result<()>>,
+}
+
+/// Channel message: a prediction request, a streamed observation, or the
+/// shutdown sentinel.
 ///
 /// The sentinel (rather than channel closure) ends the worker because client
 /// handles hold `Sender` clones — the channel only closes once *every*
@@ -22,6 +29,7 @@ struct Request {
 /// the join while any chain is still alive.
 enum Msg {
     Req(Request),
+    Observe(Observation),
     Stop,
 }
 
@@ -32,6 +40,8 @@ pub struct ServerMetrics {
     pub batches: usize,
     pub max_batch: usize,
     pub errors: usize,
+    /// Observations streamed into the engine ([`SurrogateClient::observe`]).
+    pub observes: usize,
 }
 
 impl ServerMetrics {
@@ -74,7 +84,7 @@ impl SurrogateServer {
         let metrics_w = metrics.clone();
         let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
         let worker = std::thread::spawn(move || {
-            let engine = match factory() {
+            let mut engine = match factory() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(e.dim()));
                     e
@@ -88,45 +98,29 @@ impl SurrogateServer {
             let batcher = Batcher::new(rx, policy);
             'serve: while let Some(msgs) = batcher.next_batch() {
                 let mut stop = false;
-                let batch: Vec<Request> = msgs
-                    .into_iter()
-                    .filter_map(|m| match m {
-                        Msg::Req(r) => Some(r),
-                        Msg::Stop => {
-                            stop = true;
-                            None
-                        }
-                    })
-                    .collect();
-                if !batch.is_empty() {
-                    let b = batch.len();
-                    let mut xq = Mat::zeros(dim, b);
-                    for (j, req) in batch.iter().enumerate() {
-                        xq.set_col(j, &req.x);
-                    }
-                    let result = engine.predict_batch(&xq);
-                    {
-                        let mut m = metrics_w.lock().unwrap();
-                        m.requests += b;
-                        m.batches += 1;
-                        m.max_batch = m.max_batch.max(b);
-                        if result.is_err() {
-                            m.errors += b;
-                        }
-                    }
-                    match result {
-                        Ok(out) => {
-                            for (j, req) in batch.iter().enumerate() {
-                                let _ = req.resp.send(Ok(out.col(j).to_vec()));
+                let mut pending: Vec<Request> = Vec::new();
+                // preserve arrival order: an observation acts as a barrier —
+                // requests queued before it are answered by the old state,
+                // requests after it see the updated surrogate.
+                for msg in msgs {
+                    match msg {
+                        Msg::Req(r) => pending.push(r),
+                        Msg::Observe(o) => {
+                            serve_pending(engine.as_ref(), &mut pending, &metrics_w, dim);
+                            let res = engine.observe(&o.x, &o.g);
+                            {
+                                let mut m = metrics_w.lock().unwrap();
+                                m.observes += 1;
+                                if res.is_err() {
+                                    m.errors += 1;
+                                }
                             }
+                            let _ = o.resp.send(res);
                         }
-                        Err(e) => {
-                            for req in &batch {
-                                let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
-                            }
-                        }
+                        Msg::Stop => stop = true,
                     }
                 }
+                serve_pending(engine.as_ref(), &mut pending, &metrics_w, dim);
                 if stop {
                     break 'serve;
                 }
@@ -180,6 +174,46 @@ impl Drop for SurrogateServer {
     }
 }
 
+/// Coalesce-and-answer the pending prediction batch (one engine call).
+fn serve_pending(
+    engine: &dyn Engine,
+    pending: &mut Vec<Request>,
+    metrics: &Mutex<ServerMetrics>,
+    dim: usize,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let b = pending.len();
+    let mut xq = Mat::zeros(dim, b);
+    for (j, req) in pending.iter().enumerate() {
+        xq.set_col(j, &req.x);
+    }
+    let result = engine.predict_batch(&xq);
+    {
+        let mut m = metrics.lock().unwrap();
+        m.requests += b;
+        m.batches += 1;
+        m.max_batch = m.max_batch.max(b);
+        if result.is_err() {
+            m.errors += b;
+        }
+    }
+    match result {
+        Ok(out) => {
+            for (j, req) in pending.iter().enumerate() {
+                let _ = req.resp.send(Ok(out.col(j).to_vec()));
+            }
+        }
+        Err(e) => {
+            for req in pending.iter() {
+                let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
+            }
+        }
+    }
+    pending.clear();
+}
+
 impl SurrogateClient {
     /// Blocking gradient query.
     pub fn predict(&self, x: &[f64]) -> anyhow::Result<Vec<f64>> {
@@ -189,6 +223,22 @@ impl SurrogateClient {
             .send(Msg::Req(Request { x: x.to_vec(), resp: rtx }))
             .map_err(|_| anyhow::anyhow!("surrogate server is down"))?;
         rrx.recv().map_err(|_| anyhow::anyhow!("surrogate server dropped the request"))?
+    }
+
+    /// Stream a new observation into the shared surrogate. Blocks until the
+    /// engine has applied it (incrementally — see
+    /// [`crate::gp::OnlineGradientGp`]); predictions enqueued afterwards see
+    /// the updated state.
+    pub fn observe(&self, x: &[f64], g: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.dim && g.len() == self.dim,
+            "observation dimension mismatch"
+        );
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Observe(Observation { x: x.to_vec(), g: g.to_vec(), resp: rtx }))
+            .map_err(|_| anyhow::anyhow!("surrogate server is down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("surrogate server dropped the observation"))?
     }
 }
 
@@ -295,6 +345,78 @@ mod tests {
         assert_eq!(m.requests, 160);
         assert!(m.batches <= 160);
         assert!(m.max_batch >= 1);
+    }
+
+    #[test]
+    fn observe_streams_into_the_serving_state() {
+        let (engine, x, g) = make_engine(5, 3, 7);
+        let server =
+            SurrogateServer::spawn(move || Ok(Box::new(engine) as _), BatchPolicy::default())
+                .unwrap();
+        let client = server.client();
+        let mut rng = Rng::new(70);
+        let x_new = rng.gauss_vec(5);
+        let g_new = rng.gauss_vec(5);
+        client.observe(&x_new, &g_new).unwrap();
+        // the surrogate now interpolates the streamed observation …
+        let at_new = client.predict(&x_new).unwrap();
+        for i in 0..5 {
+            assert!(
+                (at_new[i] - g_new[i]).abs() < 1e-6,
+                "dim {i}: {} vs {}",
+                at_new[i],
+                g_new[i]
+            );
+        }
+        // … and the original ones are still interpolated
+        let at_old = client.predict(x.col(0)).unwrap();
+        for i in 0..5 {
+            assert!((at_old[i] - g[(i, 0)]).abs() < 1e-6);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.observes, 1);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn streamed_engine_matches_cold_refit_engine() {
+        // A/B knob: gp.online = false refits per observation; both paths
+        // must serve the same predictions. Also pins that the online engine
+        // really avoids cold refits in its steady state.
+        let (mut online, _, _) = make_engine(4, 3, 8);
+        let (gp_cold, _, _) = {
+            let mut rng = Rng::new(8);
+            let x = Mat::from_fn(4, 3, |_, _| rng.gauss());
+            let g = Mat::from_fn(4, 3, |_, _| rng.gauss());
+            let gp = GradientGp::fit(
+                StdArc::new(SquaredExponential),
+                Metric::Iso(0.5),
+                &x,
+                &g,
+                &FitOptions::default(),
+            )
+            .unwrap();
+            (gp, x, g)
+        };
+        let cfg = crate::config::Config::from_str("[gp]\nonline = false\n").unwrap();
+        let mut cold = NativeEngine::from_config(gp_cold, &cfg);
+        let mut rng = Rng::new(80);
+        for _ in 0..3 {
+            let xn = rng.gauss_vec(4);
+            let gn = rng.gauss_vec(4);
+            online.observe(&xn, &gn).unwrap();
+            cold.observe(&xn, &gn).unwrap();
+        }
+        assert_eq!(online.cold_refits(), 1, "online engine must not refit");
+        assert_eq!(cold.cold_refits(), 4, "A/B engine must refit per observe");
+        let xq = Mat::from_fn(4, 5, |i, j| ((i + 2 * j) as f64 * 0.37).sin());
+        let a = online.predict_batch(&xq).unwrap();
+        let b = cold.predict_batch(&xq).unwrap();
+        assert!(
+            (&a - &b).max_abs() < 1e-8 * (1.0 + b.max_abs()),
+            "A/B predictions diverged: {}",
+            (&a - &b).max_abs()
+        );
     }
 
     #[test]

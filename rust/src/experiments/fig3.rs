@@ -36,6 +36,7 @@ pub fn run(out_dir: &str, d: usize, seed: u64, max_iters: usize) -> anyhow::Resu
         window: 2,
         center: None,
         prior_grad_mean: None,
+        online: true,
         opts: shared.clone(),
     }
     .minimize(&obj, &x0);
@@ -44,6 +45,7 @@ pub fn run(out_dir: &str, d: usize, seed: u64, max_iters: usize) -> anyhow::Resu
         metric: Metric::Iso(0.05),
         window: 2,
         center_at_current_gradient: false,
+        online: true,
         opts: shared,
     }
     .minimize(&obj, &x0);

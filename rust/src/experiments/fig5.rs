@@ -174,6 +174,7 @@ mod tests {
             lengthscale2: 0.4 * 25.0,
             hmc: crate::hmc::HmcConfig { step_size: 0.02, leapfrog_steps: 8, mass: 1.0 },
             max_training_iters: 2000,
+            online: true,
         };
         let r = run_aligned_with(dir.to_str().unwrap(), 25, 200, cfg, 3).unwrap();
         assert!(r.hmc_accept > 0.1 && r.hmc_accept <= 1.0);

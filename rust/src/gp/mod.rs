@@ -10,22 +10,43 @@
 //! * the optimum `x(∇f = 0)` — [`infer_optimum`] (Eq. 13, flipped inference).
 //!
 //! Fitting means solving `(∇K∇′) vec(Z) = vec(G̃)` once; the engine is chosen
-//! by [`FitMethod`]: exact Woodbury (`O(N²D + N⁶)`, Sec. 2.3), the poly(2)
-//! analytic path (`O(N²D + N³)`, Sec. 4.2), or matrix-free CG on the implicit
-//! matvec (`O(N²D)` per iteration, any `N`).
+//! by [`FitMethod`]: exact Woodbury (`O(N²D + N⁶)`, Sec. 2.3), the analytic
+//! path for kernels declaring [`crate::kernels::AnalyticPath::Poly2`]
+//! (`O(N²D + N³)`, Sec. 4.2), or matrix-free CG on the implicit matvec
+//! (`O(N²D)` per iteration, any `N`).
+//!
+//! Sequential consumers (the optimizers, GPG-HMC, the serving coordinator)
+//! do not refit from scratch per observation: [`OnlineGradientGp`] maintains
+//! the same posterior under streaming `observe` / sliding-window
+//! `drop_first` updates, reusing the retained Gram panels and warm-starting
+//! the solvers. Both engines expose the identical prediction surface through
+//! the [`GradientModel`] trait.
+//!
+//! Extra right-hand-side solves (variance/covariance queries, online
+//! re-solves) share one tolerance, [`EXTRA_RHS_RTOL`].
 
+mod online;
 mod optimum;
 mod predict;
 
+pub use online::OnlineGradientGp;
 pub use optimum::{infer_optimum, infer_optimum_with};
 pub use predict::HessianParts;
 
 use std::sync::Arc;
 
 use crate::gram::{poly2_solve, GramFactors, GramOperator, Metric, WoodburySolver};
-use crate::kernels::ScalarKernel;
+use crate::kernels::{AnalyticPath, ScalarKernel};
 use crate::linalg::Mat;
 use crate::solvers::{block_cg_solve, cg_solve, CgOptions, JacobiPrecond};
+
+/// Relative CG tolerance for *extra* right-hand-side solves: the variance /
+/// covariance queries ([`GradientGp::solve_rhs`], [`GradientGp::solve_rhs_block`])
+/// and the online engine's warm-started re-solves. Tighter than the fit
+/// default (`CgOptions::default().rtol = 1e-6`) because these solutions feed
+/// subtractive formulas (`prior − reduction`) where residual error enters at
+/// first order. One named constant instead of duplicated literals.
+pub const EXTRA_RHS_RTOL: f64 = 1e-10;
 
 /// How to solve the gradient Gram system.
 #[derive(Clone, Debug)]
@@ -47,8 +68,29 @@ impl Default for FitMethod {
     }
 }
 
+impl FitMethod {
+    /// Resolve [`FitMethod::Auto`] for a kernel and observation count — the
+    /// single dispatch point shared by [`GradientGp::fit`] and the online
+    /// engine (which re-resolves as `N` evolves). Dispatch to the analytic
+    /// path is structural ([`ScalarKernel::analytic_path`]), never by name.
+    pub(crate) fn resolve(&self, kernel: &dyn ScalarKernel, n: usize) -> FitMethod {
+        match self {
+            FitMethod::Auto => {
+                if kernel.analytic_path() == AnalyticPath::Poly2 {
+                    FitMethod::Poly2
+                } else if n <= AUTO_EXACT_MAX_N {
+                    FitMethod::Exact
+                } else {
+                    FitMethod::Iterative(CgOptions::default())
+                }
+            }
+            m => m.clone(),
+        }
+    }
+}
+
 /// Options for [`GradientGp::fit`].
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct FitOptions {
     /// Dot-product center `c` (ignored by stationary kernels).
     pub center: Option<Vec<f64>>,
@@ -60,6 +102,23 @@ pub struct FitOptions {
     pub noise: f64,
     /// Solver selection.
     pub method: FitMethod,
+    /// Allow [`OnlineGradientGp`] to update incrementally (default `true`).
+    /// `false` forces a full cold refit on every `observe`/`drop_first` —
+    /// the A/B-validation knob, surfaced as the `gp.online` config key by
+    /// the serving coordinator. Ignored by the one-shot [`GradientGp::fit`].
+    pub online: bool,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions {
+            center: None,
+            prior_grad_mean: None,
+            noise: 0.0,
+            method: FitMethod::default(),
+            online: true,
+        }
+    }
 }
 
 /// How the fit was actually performed (diagnostics).
@@ -76,6 +135,9 @@ pub struct GradientGp {
     factors: GramFactors,
     /// Raw observation locations (`D×N`).
     x: Mat,
+    /// Raw observed gradients (`D×N`) — retained so the online engine can
+    /// re-solve against the full right-hand side after panel updates.
+    g: Mat,
     /// Representer weights: solution of `(∇K∇′)vec(Z) = vec(G̃)`.
     z: Mat,
     /// Prior gradient mean (if any).
@@ -86,6 +148,10 @@ pub struct GradientGp {
     solver: Option<WoodburySolver>,
     /// Fit diagnostics.
     report: FitReport,
+    /// The *configured* solver selection (pre-`Auto` resolution) — retained
+    /// so [`OnlineGradientGp::from_fitted`] keeps the caller's engine choice
+    /// (in particular custom CG tolerances) across streaming updates.
+    method: FitMethod,
 }
 
 /// Above this `N`, [`FitMethod::Auto`] switches from the exact `O(N⁶)`
@@ -131,19 +197,7 @@ impl GradientGp {
             None => g.clone(),
         };
 
-        let is_poly2 = kernel.name() == "poly2";
-        let method = match &opts.method {
-            FitMethod::Auto => {
-                if is_poly2 {
-                    FitMethod::Poly2
-                } else if n <= AUTO_EXACT_MAX_N {
-                    FitMethod::Exact
-                } else {
-                    FitMethod::Iterative(CgOptions::default())
-                }
-            }
-            m => m.clone(),
-        };
+        let method = opts.method.resolve(kernel.as_ref(), n);
 
         let (z, solver, report) = match method {
             FitMethod::Poly2 => {
@@ -183,11 +237,13 @@ impl GradientGp {
             kernel,
             factors,
             x: x.clone(),
+            g: g.clone(),
             z,
             prior_grad_mean: opts.prior_grad_mean.clone(),
             center,
             solver,
             report,
+            method: opts.method.clone(),
         })
     }
 
@@ -214,6 +270,11 @@ impl GradientGp {
     /// Observation locations.
     pub fn x(&self) -> &Mat {
         &self.x
+    }
+
+    /// Observed gradients (raw, prior mean not subtracted).
+    pub fn g(&self) -> &Mat {
+        &self.g
     }
 
     /// The kernel.
@@ -246,7 +307,7 @@ impl GradientGp {
             rhs.as_slice(),
             None,
             &CgOptions {
-                rtol: 1e-10,
+                rtol: EXTRA_RHS_RTOL,
                 precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
                 track_history: false,
                 ..Default::default()
@@ -287,7 +348,7 @@ impl GradientGp {
             &op,
             rhs,
             &CgOptions {
-                rtol: 1e-10,
+                rtol: EXTRA_RHS_RTOL,
                 precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
                 track_history: false,
                 ..Default::default()
@@ -301,6 +362,51 @@ impl GradientGp {
             res.fallback_cols
         );
         Ok(res.x)
+    }
+}
+
+/// The prediction surface shared by the batch [`GradientGp`] and the online
+/// [`OnlineGradientGp`] engines: consumers (optimizers, samplers, the
+/// serving coordinator) stay generic over *how* the conditioning state is
+/// maintained. All methods delegate to the underlying [`GradientGp`] (whose
+/// inherent methods these mirror — see [`predict`](self) for the formulas).
+pub trait GradientModel {
+    /// The underlying conditioned state.
+    fn gradient_gp(&self) -> &GradientGp;
+
+    /// Posterior mean of `∇f(x⋆)`.
+    fn predict_gradient(&self, xq: &[f64]) -> Vec<f64> {
+        self.gradient_gp().predict_gradient(xq)
+    }
+    /// Batched gradient prediction (one column per query).
+    fn predict_gradients(&self, xqs: &Mat) -> Mat {
+        self.gradient_gp().predict_gradients(xqs)
+    }
+    /// Posterior mean of `f(x⋆)` (zero-mean prior convention).
+    fn predict_value(&self, xq: &[f64]) -> f64 {
+        self.gradient_gp().predict_value(xq)
+    }
+    /// Posterior variance of `f(x⋆)`.
+    fn predict_value_var(&self, xq: &[f64]) -> anyhow::Result<f64> {
+        self.gradient_gp().predict_value_var(xq)
+    }
+    /// Posterior mean of the Hessian `∇∇ᵀf(x⋆)` (dense).
+    fn predict_hessian(&self, xq: &[f64]) -> Mat {
+        self.gradient_gp().predict_hessian(xq)
+    }
+    /// Posterior mean of the Hessian in its low-rank form (Eq. 12).
+    fn predict_hessian_parts(&self, xq: &[f64]) -> HessianParts {
+        self.gradient_gp().predict_hessian_parts(xq)
+    }
+    /// Posterior covariance of `∇f(x⋆)`.
+    fn predict_gradient_cov(&self, xq: &[f64]) -> anyhow::Result<Mat> {
+        self.gradient_gp().predict_gradient_cov(xq)
+    }
+}
+
+impl GradientModel for GradientGp {
+    fn gradient_gp(&self) -> &GradientGp {
+        self
     }
 }
 
@@ -393,6 +499,72 @@ mod tests {
             FitReport::Poly2 { asymmetry } => assert!(*asymmetry < 1e-9),
             other => panic!("expected poly2 fit, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn analytic_dispatch_is_structural_not_by_name() {
+        // a wrapper kernel with a different display name must still route to
+        // the analytic path — dispatch goes through `analytic_path()`, which
+        // wrappers forward, never through `name()` string matching.
+        struct RenamedPoly2;
+        impl crate::kernels::ScalarKernel for RenamedPoly2 {
+            fn class(&self) -> crate::kernels::KernelClass {
+                Poly2Kernel.class()
+            }
+            fn k(&self, r: f64) -> f64 {
+                Poly2Kernel.k(r)
+            }
+            fn dk(&self, r: f64) -> f64 {
+                Poly2Kernel.dk(r)
+            }
+            fn d2k(&self, r: f64) -> f64 {
+                Poly2Kernel.d2k(r)
+            }
+            fn d3k(&self, r: f64) -> f64 {
+                Poly2Kernel.d3k(r)
+            }
+            fn name(&self) -> &'static str {
+                "totally-not-poly2"
+            }
+            fn analytic_path(&self) -> crate::kernels::AnalyticPath {
+                Poly2Kernel.analytic_path()
+            }
+        }
+        let d = 5;
+        let mut rng = Rng::new(7);
+        let a = {
+            let b = Mat::from_fn(d, d, |_, _| rng.gauss());
+            let mut a = b.t_matmul(&b);
+            for i in 0..d {
+                a[(i, i)] += d as f64;
+            }
+            a
+        };
+        let x = Mat::from_fn(d, 3, |_, _| rng.gauss());
+        let g = a.matmul(&x);
+        let gp = GradientGp::fit(
+            Arc::new(RenamedPoly2),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        assert!(
+            matches!(gp.report(), FitReport::Poly2 { .. }),
+            "renamed wrapper kernel must still take the poly2 path, got {:?}",
+            gp.report()
+        );
+        // degree-2 PolynomialKernel is structurally poly2 as well
+        let gp2 = GradientGp::fit(
+            Arc::new(crate::kernels::PolynomialKernel::new(2)),
+            Metric::Iso(1.0),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        assert!(matches!(gp2.report(), FitReport::Poly2 { .. }));
     }
 
     #[test]

@@ -1,0 +1,679 @@
+//! Online conditioning: incremental Gram-factor and representer updates.
+//!
+//! [`GradientGp::fit`] is a *batch* artifact: every new observation pays the
+//! full `O(N²D)` factor build plus the engine's solve from scratch. The
+//! paper's whole point is that the structured decomposition makes gradients
+//! cheap to use once built (Sec. 2.3) — so sequential consumers (the GP-H /
+//! GP-X optimizers, GPG-HMC, the serving coordinator) should pay only for
+//! what changed. [`OnlineGradientGp`] is that long-lived, mutable state:
+//!
+//! * **append** ([`OnlineGradientGp::observe`]) extends the factor panels by
+//!   one row/column in `O(ND + N²)` ([`crate::gram::GramFactors::append`] —
+//!   `O(N)` kernel evaluations instead of `O(N²)`), then re-solves:
+//!   - *exact engine*: `K̂′⁻¹` is border-updated in `O(N²)`
+//!     ([`crate::linalg::bordered_inverse_append`]) and the `N²×N²` core is
+//!     rebuilt from the retained panels ([`WoodburySolver::from_panels`]) —
+//!     no raw-data product, no `O(N³)` re-inversion;
+//!   - *iterative engine*: CG is warm-started from the previous representer
+//!     weights `Z`, typically collapsing hundreds of Krylov iterations to a
+//!     handful;
+//!   - *analytic poly(2)*: the `O(N³)` closed form re-runs on the evolved
+//!     panels (its cost was never the bottleneck).
+//! * **drop** ([`OnlineGradientGp::drop_first`]) slides the observation
+//!   window: panels shrink in place, `K̂′⁻¹` is downdated, `Z` shifts.
+//!   [`OnlineGradientGp::observe_windowed`] fuses window drops and the
+//!   append into one atomic step with a *single* solve.
+//! * **re-target** ([`OnlineGradientGp::set_targets`]) replaces the
+//!   right-hand side wholesale and re-solves through the *retained*
+//!   factorization — zero Gram-factor work. This is the GP-X path, whose
+//!   flipped outputs shift with the anchor `x_t` every step.
+//!
+//! Every update is validated against the cold path: the incremental factors
+//! are arithmetically identical to a rebuild, and predictions match a cold
+//! [`GradientGp::fit`] on the same window to ≤1e-8 (`tests/online_gp.rs`).
+//! When an incremental step is numerically degenerate (duplicated point,
+//! vanishing Schur pivot, CG stagnation) the engine falls back to one cold
+//! refit; if that fails too, the update **rolls back** and the engine keeps
+//! serving its previous consistent posterior — a bad streamed observation is
+//! an error for that client, never an outage.
+//! [`OnlineGradientGp::cold_refits`] exposes the refit count so tests can
+//! pin "steady state never refits". Setting [`FitOptions::online`] to
+//! `false` forces the cold path on every update (the A/B-validation knob;
+//! config key `gp.online`).
+
+use std::sync::Arc;
+
+use crate::gram::{poly2_solve, GramFactors, GramOperator, Metric, WoodburySolver};
+use crate::kernels::ScalarKernel;
+use crate::linalg::{bordered_inverse_append, bordered_inverse_drop_first, Lu, Mat};
+use crate::solvers::{cg_solve, JacobiPrecond};
+
+use super::{FitMethod, FitOptions, FitReport, GradientGp, GradientModel};
+
+/// How the observation set changed since the last solve (drives cache reuse).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Delta {
+    /// One observation appended at the end.
+    Appended,
+    /// The oldest observation dropped.
+    Dropped,
+    /// Same locations, new right-hand side only.
+    Rhs,
+}
+
+/// Everything an update must restore on total failure: factors + raw data +
+/// weights + the `K̂′⁻¹` age. `gp.solver` is deliberately absent
+/// (`WoodburySolver` holds factorizations, not cheaply clonable state):
+/// `resolve_weights` mutates it only on success, so after a failed plain
+/// `observe`/`drop_first` the pre-update solver is still present and valid;
+/// the windowed/deferred paths may leave it `None` after rollback, in which
+/// case extra-RHS queries take the CG fallback and the next exact re-solve
+/// re-inverts `K̂′` cold (`O(N³)`) — predictions stay exact either way.
+type Snapshot = (GramFactors, Mat, Mat, Mat, usize);
+
+/// Re-invert `K̂′` from scratch after this many consecutive bordered
+/// updates: each `O(N²)` update is individually stable but drift compounds
+/// over long streams, so a periodic `O(N³)` refresh (negligible next to the
+/// `O(N⁶)` core rebuild it accompanies) keeps the panel at working accuracy.
+const KINV_REFRESH_PERIOD: usize = 64;
+
+/// A [`GradientGp`] that stays conditioned under streaming observations.
+///
+/// Construction mirrors the batch fit ([`OnlineGradientGp::fit`]) or wraps
+/// an existing one ([`OnlineGradientGp::from_fitted`]); afterwards the
+/// engine is mutated through `observe` / `drop_first` / `set_targets` and
+/// queried through the same [`GradientModel`] surface as [`GradientGp`].
+pub struct OnlineGradientGp {
+    gp: GradientGp,
+    opts: FitOptions,
+    /// Bordered updates applied to the exact engine's `K̂′⁻¹` (which lives
+    /// in `gp.solver`) since it was last computed cold.
+    kinv_age: usize,
+    /// Cold refits performed (1 = the initial fit; steady state stays there).
+    cold_refits: usize,
+}
+
+impl OnlineGradientGp {
+    /// Cold-start the engine with a batch fit (counts as the first — and in
+    /// the steady state only — cold refit).
+    pub fn fit(
+        kernel: Arc<dyn ScalarKernel>,
+        metric: Metric,
+        x: &Mat,
+        g: &Mat,
+        opts: &FitOptions,
+    ) -> anyhow::Result<Self> {
+        let gp = GradientGp::fit(kernel, metric, x, g, opts)?;
+        Ok(OnlineGradientGp { gp, opts: opts.clone(), kinv_age: 0, cold_refits: 1 })
+    }
+
+    /// Wrap an already-fitted batch GP as online state (the serving
+    /// coordinator's cold start). The fit configuration — including the
+    /// *configured* [`FitMethod`] with any custom CG tolerances — is taken
+    /// from the GP itself, so streaming re-solves run at exactly the
+    /// accuracy the caller fitted with (`Auto` keeps re-dispatching as `N`
+    /// evolves).
+    pub fn from_fitted(gp: GradientGp) -> Self {
+        let opts = FitOptions {
+            center: gp.factors.center.clone(),
+            prior_grad_mean: gp.prior_grad_mean.clone(),
+            noise: gp.factors.noise,
+            method: gp.method.clone(),
+            online: true,
+        };
+        OnlineGradientGp { gp, opts, kinv_age: 0, cold_refits: 1 }
+    }
+
+    /// The underlying conditioned GP (the full prediction surface).
+    pub fn gp(&self) -> &GradientGp {
+        &self.gp
+    }
+
+    /// Number of observations currently conditioned on.
+    pub fn n(&self) -> usize {
+        self.gp.n()
+    }
+
+    /// Input dimension `D`.
+    pub fn d(&self) -> usize {
+        self.gp.d()
+    }
+
+    /// Diagnostics for the most recent solve.
+    pub fn report(&self) -> &FitReport {
+        &self.gp.report
+    }
+
+    /// Cold refits performed so far (1 = initial fit only — the steady-state
+    /// invariant the consumer tests pin).
+    pub fn cold_refits(&self) -> usize {
+        self.cold_refits
+    }
+
+    /// Toggle the incremental path at runtime (`gp.online` config knob).
+    pub fn set_online(&mut self, online: bool) {
+        self.opts.online = online;
+    }
+
+    /// Condition on one more observation `(x_new, g_new)`.
+    ///
+    /// Steady state performs `O(N)` kernel evaluations and `O(ND + N²)`
+    /// panel work plus the engine re-solve — never a from-scratch factor
+    /// rebuild. Falls back to exactly one cold refit when the incremental
+    /// step is numerically degenerate (or `opts.online` is off). On error
+    /// the observation is **not applied**: the engine rolls back to its
+    /// previous consistent state and keeps serving.
+    pub fn observe(&mut self, x_new: &[f64], g_new: &[f64]) -> anyhow::Result<()> {
+        let d = self.gp.d();
+        anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
+        anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
+        if !self.opts.online {
+            let mut x = self.gp.x.clone();
+            let mut g = self.gp.g.clone();
+            x.push_col(x_new);
+            g.push_col(g_new);
+            return self.cold_refit(&x, &g);
+        }
+        let snapshot = self.snapshot();
+        self.gp.factors.append(self.gp.kernel.as_ref(), x_new);
+        self.gp.x.push_col(x_new);
+        self.gp.g.push_col(g_new);
+        self.resolve_or_rollback(Delta::Appended, snapshot)
+    }
+
+    /// Condition on one more observation while enforcing a sliding-window
+    /// cap (`window = 0` ⇒ unbounded, plain [`OnlineGradientGp::observe`])
+    /// — in **one atomic step with a single solve**: deferred (no-solve)
+    /// drops make room, the appending solve conditions the new window, and
+    /// any failure rolls the whole step back. This is the serving
+    /// coordinator's and GP-H's steady-state entry point.
+    pub fn observe_windowed(
+        &mut self,
+        x_new: &[f64],
+        g_new: &[f64],
+        window: usize,
+    ) -> anyhow::Result<()> {
+        if window == 0 {
+            return self.observe(x_new, g_new);
+        }
+        let d = self.gp.d();
+        anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
+        anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
+        if !self.opts.online {
+            // same append-then-trim window semantics as the online path
+            let mut x = self.gp.x.clone();
+            let mut g = self.gp.g.clone();
+            x.push_col(x_new);
+            g.push_col(g_new);
+            while x.cols() > 1 && x.cols() > window {
+                x.remove_first_col();
+                g.remove_first_col();
+            }
+            return self.cold_refit(&x, &g);
+        }
+        let snapshot = self.snapshot();
+        // append first, then trim — both deferred (no solves), so the step
+        // pays a single solve at the end; append-before-trim keeps even a
+        // window of 1 exact (the new point is what survives).
+        self.gp.factors.append(self.gp.kernel.as_ref(), x_new);
+        self.gp.x.push_col(x_new);
+        self.gp.g.push_col(g_new);
+        while self.gp.n() > 1 && self.gp.n() > window {
+            if let Err(e) = self.drop_first_panels_deferred() {
+                self.restore(snapshot);
+                return Err(e);
+            }
+        }
+        self.resolve_or_rollback(Delta::Appended, snapshot)
+    }
+
+    /// Slide the window: drop the oldest observation and re-solve. On error
+    /// the drop is rolled back (see [`OnlineGradientGp::observe`]).
+    pub fn drop_first(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
+        if !self.opts.online {
+            let mut x = self.gp.x.clone();
+            let mut g = self.gp.g.clone();
+            x.remove_first_col();
+            g.remove_first_col();
+            return self.cold_refit(&x, &g);
+        }
+        let snapshot = self.snapshot();
+        self.gp.factors.drop_first();
+        self.gp.x.remove_first_col();
+        self.gp.g.remove_first_col();
+        self.resolve_or_rollback(Delta::Dropped, snapshot)
+    }
+
+    /// Extend the panels by one observation **without re-solving** — for
+    /// callers that immediately install the real right-hand side via
+    /// [`OnlineGradientGp::set_targets`] (the GP-X anchor-shift pattern),
+    /// which then pays the *single* solve per step. The cached solver is
+    /// invalidated; predictions are stale until that next solve.
+    pub(crate) fn append_panels_deferred(
+        &mut self,
+        x_new: &[f64],
+        g_new: &[f64],
+    ) -> anyhow::Result<()> {
+        let d = self.gp.d();
+        anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
+        anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
+        self.gp.factors.append(self.gp.kernel.as_ref(), x_new);
+        self.gp.x.push_col(x_new);
+        self.gp.g.push_col(g_new);
+        self.gp.solver = None;
+        Ok(())
+    }
+
+    /// Deferred-solve companion of [`OnlineGradientGp::drop_first`] (see
+    /// [`OnlineGradientGp::append_panels_deferred`]).
+    pub(crate) fn drop_first_panels_deferred(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
+        self.gp.factors.drop_first();
+        self.gp.x.remove_first_col();
+        self.gp.g.remove_first_col();
+        self.gp.solver = None;
+        Ok(())
+    }
+
+    /// Replace the observation targets wholesale (same locations) and
+    /// re-solve through the retained factorization — zero Gram-factor work.
+    /// This is the GP-X steady-state path: the flipped GP's outputs shift
+    /// with the anchor `x_t` each step while its inputs only gain a column.
+    pub fn set_targets(&mut self, g: &Mat) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (g.rows(), g.cols()) == (self.gp.d(), self.gp.n()),
+            "targets must be D×N = {}×{}",
+            self.gp.d(),
+            self.gp.n()
+        );
+        if !self.opts.online {
+            let x = self.gp.x.clone();
+            return self.cold_refit(&x, g);
+        }
+        // a Rhs update can only touch `g` (and, on success, `z`): a full
+        // panel snapshot would be pure overhead on the cheapest update path
+        let g_prev = std::mem::replace(&mut self.gp.g, g.clone());
+        let first = match self.resolve_weights(Delta::Rhs) {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        let x = self.gp.x.clone();
+        let g_new = self.gp.g.clone();
+        match self.cold_refit(&x, &g_new) {
+            Ok(()) => Ok(()),
+            Err(e2) => {
+                self.gp.g = g_prev;
+                Err(anyhow::anyhow!(
+                    "online re-target failed ({first}); cold refit also failed ({e2}); \
+                     update rolled back"
+                ))
+            }
+        }
+    }
+
+    /// Centered right-hand side `G̃ = G − g_c`.
+    fn centered_targets(&self) -> Mat {
+        match &self.opts.prior_grad_mean {
+            Some(gc) => {
+                let (d, n) = (self.gp.d(), self.gp.n());
+                let mut m = self.gp.g.clone();
+                for j in 0..n {
+                    let col = m.col_mut(j);
+                    for i in 0..d {
+                        col[i] -= gc[i];
+                    }
+                }
+                m
+            }
+            None => self.gp.g.clone(),
+        }
+    }
+
+    /// Full cold refit from raw data (cold start + fallback path only).
+    /// Unlike the one-shot [`GradientGp::fit`] — whose report merely
+    /// *records* a non-converged iterative solve — the online fallback
+    /// treats non-convergence as an error, so a degenerate streamed
+    /// observation cannot silently install unconverged weights.
+    fn cold_refit(&mut self, x: &Mat, g: &Mat) -> anyhow::Result<()> {
+        let gp = GradientGp::fit(
+            self.gp.kernel.clone(),
+            self.gp.factors.metric.clone(),
+            x,
+            g,
+            &self.opts,
+        )?;
+        if let FitReport::Iterative { converged: false, iters, .. } = &gp.report {
+            anyhow::bail!("cold refit CG did not converge in {iters} iterations");
+        }
+        self.kinv_age = 0;
+        self.gp = gp;
+        self.cold_refits += 1;
+        Ok(())
+    }
+
+    /// Clone the state an update must restore on total failure —
+    /// `O(N² + ND)`, same order as the update itself.
+    fn snapshot(&self) -> Snapshot {
+        (
+            self.gp.factors.clone(),
+            self.gp.x.clone(),
+            self.gp.g.clone(),
+            self.gp.z.clone(),
+            self.kinv_age,
+        )
+    }
+
+    fn restore(&mut self, snapshot: Snapshot) {
+        let (factors, x, g, z, kinv_age) = snapshot;
+        self.gp.factors = factors;
+        self.gp.x = x;
+        self.gp.g = g;
+        self.gp.z = z;
+        self.kinv_age = kinv_age;
+    }
+
+    /// Incremental re-solve; on failure, one cold refit from the (already
+    /// updated) raw data; if that fails too, roll back to the snapshot so
+    /// the engine keeps serving its previous consistent posterior.
+    fn resolve_or_rollback(&mut self, delta: Delta, snapshot: Snapshot) -> anyhow::Result<()> {
+        let first = match self.resolve_weights(delta) {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        let x = self.gp.x.clone();
+        let g = self.gp.g.clone();
+        match self.cold_refit(&x, &g) {
+            Ok(()) => Ok(()),
+            Err(e2) => {
+                self.restore(snapshot);
+                Err(anyhow::anyhow!(
+                    "online update failed ({first}); cold refit also failed ({e2}); \
+                     update rolled back"
+                ))
+            }
+        }
+    }
+
+    /// Recompute the representer weights for the current factors + targets,
+    /// reusing whatever the `delta` keeps valid. Mutates `z`/`solver` only
+    /// on success (the rollback path relies on this).
+    fn resolve_weights(&mut self, delta: Delta) -> anyhow::Result<()> {
+        let gt = self.centered_targets();
+        let n = self.gp.factors.n();
+        let method = self.opts.method.resolve(self.gp.kernel.as_ref(), n);
+        match method {
+            FitMethod::Poly2 => {
+                let sol = poly2_solve(&self.gp.factors, &gt)?;
+                self.gp.z = sol.z;
+                self.gp.solver = None;
+                self.gp.report = FitReport::Poly2 { asymmetry: sol.asymmetry };
+            }
+            FitMethod::Exact => {
+                if delta == Delta::Rhs {
+                    if let Some(solver) = &self.gp.solver {
+                        // locations unchanged: pure back-substitution
+                        self.gp.z = solver.solve(&self.gp.factors, &gt);
+                        self.gp.report = FitReport::Exact;
+                        return Ok(());
+                    }
+                }
+                // the retained solver owns the live K̂′⁻¹ panel
+                let refresh = self.kinv_age + 1 >= KINV_REFRESH_PERIOD;
+                let prev_kinv = self.gp.solver.as_ref().map(|s| s.kinv());
+                let (kinv, age) = match (prev_kinv, delta) {
+                    (Some(prev), Delta::Appended) if prev.rows() + 1 == n && !refresh => {
+                        let bcol: Vec<f64> =
+                            (0..n - 1).map(|a| self.gp.factors.kp_eff[(a, n - 1)]).collect();
+                        let corner = self.gp.factors.kp_eff[(n - 1, n - 1)];
+                        let k = bordered_inverse_append(prev, &bcol, corner).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "bordered K̂′ update degenerate (near-duplicate observation?)"
+                            )
+                        })?;
+                        (k, self.kinv_age + 1)
+                    }
+                    (Some(prev), Delta::Dropped) if prev.rows() == n + 1 && !refresh => {
+                        let k = bordered_inverse_drop_first(prev)
+                            .ok_or_else(|| anyhow::anyhow!("K̂′ inverse downdate degenerate"))?;
+                        (k, self.kinv_age + 1)
+                    }
+                    _ => {
+                        // no usable cache (engine switch / deferred updates /
+                        // periodic refresh): O(N³) re-inversion — still no
+                        // O(N²D) raw-data work
+                        let k = Lu::factor(&self.gp.factors.kp_eff)
+                            .map_err(|e| anyhow::anyhow!("K̂′ singular ({e})"))?
+                            .inverse();
+                        (k, 0)
+                    }
+                };
+                let solver = WoodburySolver::from_panels(&self.gp.factors, kinv)?;
+                self.gp.z = solver.solve(&self.gp.factors, &gt);
+                self.gp.solver = Some(solver);
+                self.kinv_age = age;
+                self.gp.report = FitReport::Exact;
+            }
+            FitMethod::Iterative(cg) => {
+                let d = self.gp.factors.d();
+                // warm start from the previous representer weights
+                let zprev = &self.gp.z;
+                let mut z0 = Mat::zeros(d, n);
+                match delta {
+                    Delta::Appended if zprev.cols() + 1 == n => {
+                        for j in 0..zprev.cols() {
+                            z0.set_col(j, zprev.col(j));
+                        }
+                    }
+                    Delta::Dropped if zprev.cols() == n + 1 => {
+                        for j in 0..n {
+                            z0.set_col(j, zprev.col(j + 1));
+                        }
+                    }
+                    _ if zprev.cols() == n => z0 = zprev.clone(),
+                    _ => {}
+                }
+                let mut cg_opts = cg;
+                if cg_opts.precond.is_none() {
+                    cg_opts.precond = Some(JacobiPrecond::new(&self.gp.factors.gram_diag()));
+                }
+                let res = {
+                    let op = GramOperator::new(&self.gp.factors);
+                    cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), &cg_opts)
+                };
+                anyhow::ensure!(
+                    res.converged,
+                    "online CG re-solve did not converge in {} iterations",
+                    res.iters
+                );
+                let bnorm = gt.fro_norm().max(f64::MIN_POSITIVE);
+                let rel = res.resid_history.last().copied().unwrap_or(f64::NAN) / bnorm;
+                self.gp.z = Mat::from_vec(d, n, res.x);
+                self.gp.solver = None;
+                self.gp.report = FitReport::Iterative {
+                    iters: res.iters,
+                    converged: res.converged,
+                    final_rel_residual: rel,
+                };
+            }
+            FitMethod::Auto => unreachable!("resolve() eliminates Auto"),
+        }
+        Ok(())
+    }
+}
+
+impl GradientModel for OnlineGradientGp {
+    fn gradient_gp(&self) -> &GradientGp {
+        &self.gp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::SquaredExponential;
+    use crate::rng::Rng;
+
+    fn sample(d: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (Mat::from_fn(d, n, |_, _| rng.gauss()), Mat::from_fn(d, n, |_, _| rng.gauss()))
+    }
+
+    #[test]
+    fn observe_matches_cold_fit_exact_engine() {
+        let (x, g) = sample(6, 5, 1);
+        let kern = Arc::new(SquaredExponential);
+        let opts = FitOptions::default();
+        let mut online = OnlineGradientGp::fit(
+            kern.clone(),
+            Metric::Iso(0.5),
+            &x.block(0, 0, 6, 3),
+            &g.block(0, 0, 6, 3),
+            &opts,
+        )
+        .unwrap();
+        online.observe(x.col(3), g.col(3)).unwrap();
+        online.observe(x.col(4), g.col(4)).unwrap();
+        assert_eq!(online.cold_refits(), 1, "steady state must not refit");
+        let cold = GradientGp::fit(kern, Metric::Iso(0.5), &x, &g, &opts).unwrap();
+        let xq = vec![0.2, -0.4, 0.6, 0.1, -0.3, 0.5];
+        let po = online.gp().predict_gradient(&xq);
+        let pc = cold.predict_gradient(&xq);
+        for i in 0..6 {
+            assert!((po[i] - pc[i]).abs() < 1e-9, "dim {i}: {} vs {}", po[i], pc[i]);
+        }
+    }
+
+    #[test]
+    fn observe_windowed_is_single_step_and_matches_cold() {
+        let (x, g) = sample(5, 7, 9);
+        let kern = Arc::new(SquaredExponential);
+        let opts = FitOptions::default();
+        let w = 3;
+        let mut online = OnlineGradientGp::fit(
+            kern.clone(),
+            Metric::Iso(0.6),
+            &x.block(0, 0, 5, w),
+            &g.block(0, 0, 5, w),
+            &opts,
+        )
+        .unwrap();
+        for j in w..7 {
+            online.observe_windowed(x.col(j), g.col(j), w).unwrap();
+            assert_eq!(online.n(), w, "window cap violated at step {j}");
+        }
+        assert_eq!(online.cold_refits(), 1);
+        let cold = GradientGp::fit(
+            kern,
+            Metric::Iso(0.6),
+            &x.block(0, 7 - w, 5, w),
+            &g.block(0, 7 - w, 5, w),
+            &opts,
+        )
+        .unwrap();
+        let xq = vec![0.4, -0.2, 0.1, 0.5, -0.3];
+        let po = online.gp().predict_gradient(&xq);
+        let pc = cold.predict_gradient(&xq);
+        for i in 0..5 {
+            assert!((po[i] - pc[i]).abs() < 1e-8 * (1.0 + pc[i].abs()), "dim {i}");
+        }
+
+        // window = 1 edge: the NEW observation is what survives the slide
+        let mut one = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.6),
+            &x.block(0, 0, 5, 1),
+            &g.block(0, 0, 5, 1),
+            &FitOptions::default(),
+        )
+        .unwrap();
+        one.observe_windowed(x.col(1), g.col(1), 1).unwrap();
+        assert_eq!(one.n(), 1);
+        assert_eq!(one.gp().x().col(0), x.col(1));
+    }
+
+    #[test]
+    fn set_targets_matches_cold_fit() {
+        let (x, g) = sample(5, 4, 2);
+        let kern = Arc::new(SquaredExponential);
+        let opts = FitOptions::default();
+        let mut online =
+            OnlineGradientGp::fit(kern.clone(), Metric::Iso(0.7), &x, &g, &opts).unwrap();
+        let (_, g2) = sample(5, 4, 3);
+        online.set_targets(&g2).unwrap();
+        assert_eq!(online.cold_refits(), 1);
+        let cold = GradientGp::fit(kern, Metric::Iso(0.7), &x, &g2, &opts).unwrap();
+        let xq = vec![0.1, 0.4, -0.2, 0.8, -0.5];
+        let po = online.gp().predict_gradient(&xq);
+        let pc = cold.predict_gradient(&xq);
+        for i in 0..5 {
+            assert!((po[i] - pc[i]).abs() < 1e-9, "dim {i}");
+        }
+    }
+
+    #[test]
+    fn offline_knob_forces_cold_refit() {
+        let (x, g) = sample(4, 4, 4);
+        let opts = FitOptions { online: false, ..Default::default() };
+        let mut m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.6),
+            &x.block(0, 0, 4, 3),
+            &g.block(0, 0, 4, 3),
+            &opts,
+        )
+        .unwrap();
+        m.observe(x.col(3), g.col(3)).unwrap();
+        assert_eq!(m.cold_refits(), 2, "gp.online = false must refit per observation");
+        m.drop_first().unwrap();
+        assert_eq!(m.cold_refits(), 3);
+    }
+
+    #[test]
+    fn duplicate_observation_rolls_back_to_serving_state() {
+        let (x, g) = sample(5, 3, 5);
+        let mut m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let xq = vec![0.3, -0.1, 0.4, 0.2, -0.5];
+        let before = m.gp().predict_gradient(&xq);
+        // appending an exact duplicate makes the Gram singular: the bordered
+        // update detects it, the cold fallback reports the error, and the
+        // engine ROLLS BACK — a bad streamed observation must not take the
+        // serving state down.
+        let dup = x.col(0).to_vec();
+        let gd = g.col(0).to_vec();
+        assert!(m.observe(&dup, &gd).is_err());
+        assert_eq!(m.n(), 3, "failed observe must not change N");
+        let after = m.gp().predict_gradient(&xq);
+        for i in 0..5 {
+            assert_eq!(before[i], after[i], "rollback must restore the posterior exactly");
+        }
+        // and the engine still accepts further (valid) updates
+        let mut rng = Rng::new(55);
+        let xn = rng.gauss_vec(5);
+        let gn = rng.gauss_vec(5);
+        m.observe(&xn, &gn).unwrap();
+        assert_eq!(m.n(), 4);
+    }
+
+    #[test]
+    fn drop_below_two_is_rejected() {
+        let (x, g) = sample(4, 2, 6);
+        let mut m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        m.drop_first().unwrap();
+        assert!(m.drop_first().is_err());
+    }
+}

@@ -43,10 +43,18 @@ pub struct GramFactors {
     /// `(ΛX̃)ᵀ` cached (`N×D`): lets the matvec form `P = X̃ᵀΛV` as a
     /// column-SAXPY matmul instead of latency-bound dot products (§Perf).
     pub lam_xt_t: Mat,
+    /// Cross-Gram panel `H = X̃ᵀΛX̃` (`N×N`), retained so the Woodbury core
+    /// and the online [`GramFactors::append`] path never recompute the
+    /// `O(N²D)` product from raw data. (For dot-product kernels `H = r`;
+    /// kept separately anyway so both classes share one update path.)
+    pub h: Mat,
     /// The metric `Λ`.
     pub metric: Metric,
     /// Observation noise folded into `K̂′` (isotropic metrics only).
     pub noise: f64,
+    /// Dot-product center `c` (`None` = zero center / stationary kernel) —
+    /// retained so appended columns are centered consistently.
+    pub center: Option<Vec<f64>>,
 }
 
 impl GramFactors {
@@ -96,17 +104,17 @@ impl GramFactors {
         };
         let lam_xt = metric.apply_mat(&xt);
 
-        // pairwise r
+        // cross-Gram panel H = X̃ᵀΛX̃ (retained) and the pairwise r
+        let h = xt.t_matmul(&lam_xt);
         let r = match class {
             KernelClass::DotProduct => {
-                // r_ab = x̃_aᵀ Λ x̃_b — one Gram product
-                xt.t_matmul(&lam_xt)
+                // r_ab = x̃_aᵀ Λ x̃_b = H_ab
+                h.clone()
             }
             KernelClass::Stationary => {
                 // r_ab = (x_a − x_b)ᵀΛ(x_a − x_b) = q_a + q_b − 2 x_aᵀΛx_b
-                let cross = xt.t_matmul(&lam_xt);
-                let q: Vec<f64> = (0..n).map(|a| cross[(a, a)]).collect();
-                Mat::from_fn(n, n, |a, b| (q[a] + q[b] - 2.0 * cross[(a, b)]).max(0.0))
+                let q: Vec<f64> = (0..n).map(|a| h[(a, a)]).collect();
+                Mat::from_fn(n, n, |a, b| (q[a] + q[b] - 2.0 * h[(a, b)]).max(0.0))
             }
         };
 
@@ -141,7 +149,112 @@ impl GramFactors {
         }
 
         let lam_xt_t = lam_xt.t();
-        GramFactors { class, xt, lam_xt, r, kp_eff, kpp_eff, lam_xt_t, metric, noise }
+        let center = match class {
+            KernelClass::DotProduct => center.map(|c| c.to_vec()),
+            KernelClass::Stationary => None,
+        };
+        GramFactors { class, xt, lam_xt, r, kp_eff, kpp_eff, lam_xt_t, h, metric, noise, center }
+    }
+
+    /// Append one observation at `x_new` in place — the online conditioning
+    /// path. Only the *new* row/column of every panel is computed: `O(N)`
+    /// kernel evaluations and `O(ND + N²)` flops, versus the constructor's
+    /// `O(N²)` evaluations and `O(N²D)` flops. The resulting factors are
+    /// arithmetically identical to a cold rebuild on the extended data.
+    pub fn append(&mut self, kernel: &dyn ScalarKernel, x_new: &[f64]) {
+        let (d, n) = (self.d(), self.n());
+        assert_eq!(kernel.class(), self.class, "kernel class mismatch");
+        assert_eq!(x_new.len(), d, "x_new length != D");
+
+        // centered column x̃_new and Λx̃_new
+        let mut xt_new = x_new.to_vec();
+        if let Some(c) = &self.center {
+            for i in 0..d {
+                xt_new[i] -= c[i];
+            }
+        }
+        let mut lam_new = vec![0.0; d];
+        self.metric.apply_slice(&xt_new, &mut lam_new);
+
+        // new cross-Gram border: h_col[b] = x̃_bᵀΛx̃_new, corner h_col[n]
+        let mut h_col = vec![0.0; n + 1];
+        for (b, hb) in h_col.iter_mut().enumerate().take(n) {
+            let xb = self.xt.col(b);
+            let mut s = 0.0;
+            for i in 0..d {
+                s += xb[i] * lam_new[i];
+            }
+            *hb = s;
+        }
+        let mut h_nn = 0.0;
+        for i in 0..d {
+            h_nn += xt_new[i] * lam_new[i];
+        }
+        h_col[n] = h_nn;
+
+        // new scalar arguments (same formulas as the constructor)
+        let mut r_col = vec![0.0; n + 1];
+        match self.class {
+            KernelClass::DotProduct => r_col.copy_from_slice(&h_col),
+            KernelClass::Stationary => {
+                for b in 0..n {
+                    r_col[b] = (self.h[(b, b)] + h_nn - 2.0 * h_col[b]).max(0.0);
+                }
+                r_col[n] = 0.0;
+            }
+        }
+
+        // effective derivative borders (±2/±4 folded as in the constructor)
+        let (s1, s2) = match self.class {
+            KernelClass::DotProduct => (1.0, 1.0),
+            KernelClass::Stationary => (-2.0, -4.0),
+        };
+        let mut kp_col = vec![0.0; n + 1];
+        let mut kpp_col = vec![0.0; n + 1];
+        for b in 0..=n {
+            kp_col[b] = s1 * kernel.dk(r_col[b]);
+            kpp_col[b] = s2 * kernel.d2k(r_col[b]);
+        }
+        if self.class == KernelClass::Stationary {
+            // Matérn guard on the new diagonal entry (multiplies δ = 0)
+            if !kpp_col[n].is_finite() {
+                kpp_col[n] = 0.0;
+            }
+            debug_assert!(
+                kp_col[n].is_finite(),
+                "kernel {} has non-differentiable samples: k'(0) not finite",
+                kernel.name()
+            );
+        }
+        if self.noise > 0.0 {
+            let lam = match self.metric {
+                Metric::Iso(l) => l,
+                Metric::Diag(_) => unreachable!("noise folding requires an isotropic metric"),
+            };
+            kp_col[n] += self.noise / lam;
+        }
+
+        // grow the panels — O(N²) copies, no further kernel work
+        self.h = grow_symmetric(&self.h, &h_col);
+        self.r = grow_symmetric(&self.r, &r_col);
+        self.kp_eff = grow_symmetric(&self.kp_eff, &kp_col);
+        self.kpp_eff = grow_symmetric(&self.kpp_eff, &kpp_col);
+        self.xt.push_col(&xt_new);
+        self.lam_xt.push_col(&lam_new);
+        self.lam_xt_t = self.lam_xt.t();
+    }
+
+    /// Drop the oldest observation in place (sliding-window companion of
+    /// [`GramFactors::append`]): `O(ND + N²)` copies, zero kernel work.
+    pub fn drop_first(&mut self) {
+        assert!(self.n() > 1, "cannot drop the last observation");
+        self.h = shrink_first(&self.h);
+        self.r = shrink_first(&self.r);
+        self.kp_eff = shrink_first(&self.kp_eff);
+        self.kpp_eff = shrink_first(&self.kpp_eff);
+        self.xt.remove_first_col();
+        self.lam_xt.remove_first_col();
+        self.lam_xt_t = self.lam_xt.t();
     }
 
     /// Number of observations `N`.
@@ -155,9 +268,10 @@ impl GramFactors {
     }
 
     /// Memory held by the factors, in f64 counts (for the Sec. 5.2 memory
-    /// table: `O(N² + ND)` vs the dense `(ND)²`).
+    /// table: `O(N² + ND)` vs the dense `(ND)²`). Four `N×N` panels
+    /// (`r`, `K̂′`, `K̂″`, `H`) plus the two `D×N` input panels.
     pub fn memory_f64(&self) -> usize {
-        3 * self.n() * self.n() + 2 * self.n() * self.d()
+        4 * self.n() * self.n() + 2 * self.n() * self.d()
     }
 
     /// Diagonal of the full Gram matrix (Jacobi preconditioner for the
@@ -231,10 +345,34 @@ impl GramFactors {
     }
 }
 
+/// Extend a symmetric `N×N` matrix to `(N+1)×(N+1)` with the given border
+/// (`border[..n]` = new row/column, `border[n]` = corner).
+fn grow_symmetric(m: &Mat, border: &[f64]) -> Mat {
+    let n = m.rows();
+    debug_assert_eq!(border.len(), n + 1);
+    Mat::from_fn(n + 1, n + 1, |a, b| {
+        if a < n && b < n {
+            m[(a, b)]
+        } else if a == n && b == n {
+            border[n]
+        } else if a == n {
+            border[b]
+        } else {
+            border[a]
+        }
+    })
+}
+
+/// Trailing `(N−1)×(N−1)` principal submatrix (first row+column removed).
+fn shrink_first(m: &Mat) -> Mat {
+    let n = m.rows();
+    Mat::from_fn(n - 1, n - 1, |a, b| m[(a + 1, b + 1)])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{Poly2Kernel, SquaredExponential};
+    use crate::kernels::{Matern52, Poly2Kernel, SquaredExponential};
     use crate::rng::Rng;
 
     fn sample_x(d: usize, n: usize, seed: u64) -> Mat {
@@ -388,6 +526,75 @@ mod tests {
         // paper Sec. 2.3: O(N² + ND) vs (ND)²
         assert!(f.memory_f64() < 10_000);
         assert_eq!(1_000_000, (10 * 100) * (10 * 100)); // dense would be 1e6
+    }
+
+    fn assert_factors_match(a: &GramFactors, b: &GramFactors, tol: f64, what: &str) {
+        assert_eq!(a.n(), b.n(), "{what}: N mismatch");
+        assert!((&a.xt - &b.xt).max_abs() <= tol, "{what}: xt");
+        assert!((&a.lam_xt - &b.lam_xt).max_abs() <= tol, "{what}: lam_xt");
+        assert!((&a.lam_xt_t - &b.lam_xt_t).max_abs() <= tol, "{what}: lam_xt_t");
+        assert!((&a.r - &b.r).max_abs() <= tol, "{what}: r");
+        assert!((&a.h - &b.h).max_abs() <= tol, "{what}: h");
+        assert!((&a.kp_eff - &b.kp_eff).max_abs() <= tol, "{what}: kp_eff");
+        assert!((&a.kpp_eff - &b.kpp_eff).max_abs() <= tol, "{what}: kpp_eff");
+    }
+
+    #[test]
+    fn append_matches_cold_rebuild() {
+        // appends must be arithmetically identical to rebuilding from scratch
+        let d = 7;
+        let x = sample_x(d, 5, 40);
+        let c = vec![0.1, -0.2, 0.3, 0.0, 0.2, -0.1, 0.4];
+        let cases: Vec<(Box<dyn ScalarKernel>, Metric, Option<Vec<f64>>, f64)> = vec![
+            (Box::new(SquaredExponential), Metric::Iso(0.6), None, 0.0),
+            (Box::new(SquaredExponential), Metric::Iso(0.8), None, 1e-3),
+            (
+                Box::new(Matern52),
+                Metric::Diag(vec![1.0, 0.5, 2.0, 1.2, 0.8, 0.9, 1.1]),
+                None,
+                0.0,
+            ),
+            (Box::new(Poly2Kernel), Metric::Iso(0.9), Some(c), 0.0),
+        ];
+        for (kern, metric, center, noise) in cases {
+            let seed = x.block(0, 0, d, 3);
+            let mut f =
+                GramFactors::with_noise(kern.as_ref(), &seed, metric.clone(), center.as_deref(), noise);
+            f.append(kern.as_ref(), x.col(3));
+            f.append(kern.as_ref(), x.col(4));
+            let cold =
+                GramFactors::with_noise(kern.as_ref(), &x, metric, center.as_deref(), noise);
+            assert_factors_match(&f, &cold, 1e-13, kern.name());
+        }
+    }
+
+    #[test]
+    fn drop_first_matches_cold_rebuild() {
+        let d = 6;
+        let x = sample_x(d, 5, 41);
+        let mut f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.7), None);
+        f.drop_first();
+        f.drop_first();
+        let window = x.block(0, 2, d, 3);
+        let cold = GramFactors::new(&SquaredExponential, &window, Metric::Iso(0.7), None);
+        assert_factors_match(&f, &cold, 1e-13, "drop_first");
+    }
+
+    #[test]
+    fn sliding_window_append_drop_matches_cold() {
+        // interleaved appends + drops (the serving window pattern)
+        let d = 5;
+        let x = sample_x(d, 8, 42);
+        let mut f = GramFactors::new(&Matern52, &x.block(0, 0, d, 4), Metric::Iso(0.5), None);
+        for j in 4..8 {
+            f.append(&Matern52, x.col(j));
+            f.drop_first();
+        }
+        let window = x.block(0, 4, d, 4);
+        let cold = GramFactors::new(&Matern52, &window, Metric::Iso(0.5), None);
+        assert_factors_match(&f, &cold, 1e-12, "sliding window");
+        // and the dense Gram built from the evolved factors is consistent
+        assert!((&f.to_dense() - &cold.to_dense()).max_abs() < 1e-12);
     }
 
     #[test]

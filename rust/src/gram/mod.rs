@@ -7,6 +7,14 @@
 //! * [`poly2_solve`] — the `O(N²D + N³)` probabilistic-linear-algebra special
 //!   case (Sec. 4.2),
 //! * [`Metric`] — the scaling matrix `Λ`.
+//!
+//! The factors are *online-updatable*: [`GramFactors::append`] /
+//! [`GramFactors::drop_first`] extend or slide the panels in `O(ND + N²)`
+//! (only the new row/column is computed — `O(N)` kernel evaluations), and
+//! [`WoodburySolver::from_panels`] rebuilds the exact solver from the
+//! retained panels plus a border-updated `K̂′⁻¹`
+//! ([`crate::linalg::bordered_inverse_append`]), never from raw data. This
+//! is the substrate of [`crate::gp::OnlineGradientGp`].
 
 mod factors;
 mod matvec;

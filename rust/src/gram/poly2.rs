@@ -45,13 +45,14 @@ pub fn poly2_solve(f: &GramFactors, g_tilde: &Mat) -> anyhow::Result<Poly2Solve>
     let n = f.n();
     assert_eq!((g_tilde.rows(), g_tilde.cols()), (f.d(), n));
     anyhow::ensure!(n <= f.d(), "poly2 analytic solve needs N ≤ D (H = X̃ᵀΛX̃ must be invertible)");
-    // H = X̃ᵀΛX̃; for poly(2), K′ = H — verify to catch misuse with other kernels.
-    let h = f.xt.t_matmul(&f.lam_xt);
+    // H = X̃ᵀΛX̃ (the retained cross-Gram panel — no O(N²D) recompute);
+    // for poly(2), K′ = H — verify to catch misuse with other kernels.
+    let h = &f.h;
     anyhow::ensure!(
-        (&h - &f.kp_eff).max_abs() <= 1e-10 * (1.0 + h.max_abs()),
+        (h - &f.kp_eff).max_abs() <= 1e-10 * (1.0 + h.max_abs()),
         "K′ ≠ X̃ᵀΛX̃: the analytic path only applies to the poly(2) kernel"
     );
-    let chol = Cholesky::factor(&h).map_err(|e| {
+    let chol = Cholesky::factor(h).map_err(|e| {
         anyhow::anyhow!("H = X̃ᵀΛX̃ not invertible ({e}): need linearly independent points")
     })?;
 

@@ -33,10 +33,24 @@ use super::GramFactors;
 /// Reusable exact solver: factorizations are computed once per
 /// [`GramFactors`] and amortized over many right-hand sides (prediction
 /// covariances, the coordinator's batched queries, …).
+///
+/// Two construction paths:
+/// * [`WoodburySolver::new`] — cold start: factor `K̂′` and invert it.
+/// * [`WoodburySolver::from_panels`] — online rebuild: the caller supplies
+///   `K̂′⁻¹` (maintained in `O(N²)` by bordered updates, see
+///   [`crate::linalg::bordered_inverse_append`]) and the core is assembled
+///   purely from the *retained* factor panels (`f.h`, `f.kpp_eff`) — no
+///   `O(N²D)` raw-data product and no `O(N³)` inversion are repeated.
 pub struct WoodburySolver {
     class: KernelClass,
-    /// LU of `K̂′` (N×N).
-    kp_lu: Lu,
+    /// Explicit `K̂′⁻¹` (N×N) — needed entrywise for the core, retained so
+    /// the online engine can border-update it across appends/drops.
+    kinv: Mat,
+    /// LU of `K̂′` when constructed cold ([`WoodburySolver::new`]): the
+    /// backward-stable route for `M·K̂′⁻¹` applications. Online-built
+    /// solvers ([`WoodburySolver::from_panels`]) have no factorization and
+    /// multiply by the explicit inverse instead.
+    kp_lu: Option<Lu>,
     /// LU of the `N²×N²` core.
     core_lu: Lu,
     /// Coordinates pinned to zero (flat `(o,p) ↦ p·N + o`).
@@ -47,11 +61,22 @@ pub struct WoodburySolver {
 impl WoodburySolver {
     /// Precompute the factorizations for the given Gram factors.
     pub fn new(f: &GramFactors) -> anyhow::Result<Self> {
-        let n = f.n();
         let kp_lu = Lu::factor(&f.kp_eff)
             .map_err(|e| anyhow::anyhow!("K̂′ is singular ({e}); observations may be duplicated"))?;
-        let kinv = kp_lu.inverse(); // N×N, needed entrywise for the core
-        let h = f.xt.t_matmul(&f.lam_xt); // H = X̃ᵀΛX̃
+        let kinv = kp_lu.inverse();
+        let mut solver = Self::from_panels(f, kinv)?;
+        solver.kp_lu = Some(kp_lu);
+        Ok(solver)
+    }
+
+    /// Rebuild the solver from the retained panels and a caller-maintained
+    /// `K̂′⁻¹` — the online conditioning path. The cross-Gram panel `H` is
+    /// read from `f.h`; together with `kinv` and `K̂″` that is everything
+    /// the `N²×N²` core needs, so no raw-data (`O(N²D)`) work happens here.
+    pub fn from_panels(f: &GramFactors, kinv: Mat) -> anyhow::Result<Self> {
+        let n = f.n();
+        assert_eq!((kinv.rows(), kinv.cols()), (n, n), "K̂′⁻¹ must be N×N");
+        let h = &f.h; // H = X̃ᵀΛX̃ (retained panel)
 
         // assemble the N²×N² core; flat index (row o, col p) ↦ p*n + o.
         let idx = |o: usize, p: usize| p * n + o;
@@ -128,12 +153,21 @@ impl WoodburySolver {
         let core_lu = Lu::factor(&core).map_err(|e| {
             anyhow::anyhow!("Woodbury core singular ({e}); the decomposition inverse does not exist")
         })?;
-        Ok(WoodburySolver { class: f.class, kp_lu, core_lu, pinned, n })
+        Ok(WoodburySolver { class: f.class, kinv, kp_lu: None, core_lu, pinned, n })
     }
 
-    /// `M K̂′⁻¹` via the cached LU (uses `K̂′ᵀ = K̂′`).
+    /// The retained `K̂′⁻¹` panel (seed for bordered online updates).
+    pub fn kinv(&self) -> &Mat {
+        &self.kinv
+    }
+
+    /// `M K̂′⁻¹`: via the cached LU when available (cold path, uses
+    /// `K̂′ᵀ = K̂′`), otherwise via the explicit inverse (online path).
     fn right_kinv(&self, m: &Mat) -> Mat {
-        self.kp_lu.solve_mat(&m.t()).t()
+        match &self.kp_lu {
+            Some(lu) => lu.solve_mat(&m.t()).t(),
+            None => m.matmul(&self.kinv),
+        }
     }
 
     /// Solve `(∇K∇′) vec(Z) = vec(RHS)` for a `D×N` right-hand side.
@@ -300,6 +334,25 @@ mod tests {
         let z2 = solver.solve(&f, &g2);
         assert!((&f.matvec(&z1) - &g1).max_abs() < 1e-9);
         assert!((&f.matvec(&z2) - &g2).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_panels_matches_cold_solver_after_append() {
+        // the online construction path: border-update K̂′⁻¹, rebuild the core
+        // from the retained panels, and get the same solution as a cold start
+        let (x, g) = sample(6, 4, 20);
+        let mut f =
+            GramFactors::new(&SquaredExponential, &x.block(0, 0, 6, 3), Metric::Iso(0.5), None);
+        let cold3 = WoodburySolver::new(&f).unwrap();
+        f.append(&SquaredExponential, x.col(3));
+        let bcol: Vec<f64> = (0..3).map(|a| f.kp_eff[(a, 3)]).collect();
+        let kinv =
+            crate::linalg::bordered_inverse_append(cold3.kinv(), &bcol, f.kp_eff[(3, 3)]).unwrap();
+        let online = WoodburySolver::from_panels(&f, kinv).unwrap();
+        let z = online.solve(&f, &g);
+        let z_cold = WoodburySolver::new(&f).unwrap().solve(&f, &g);
+        assert!((&z - &z_cold).max_abs() < 1e-9 * (1.0 + z_cold.max_abs()));
+        assert!((&f.matvec(&z) - &g).max_abs() < 1e-8);
     }
 
     #[test]

@@ -8,10 +8,17 @@
 //! exhausted. The surrogate is a [`GradientGp`] with an isotropic RBF
 //! kernel; the acceptance step always uses the true energy, so the samples
 //! remain exact.
+//!
+//! Training-phase conditioning is *streamed*: each newly collected gradient
+//! observation extends the surrogate through the online engine
+//! ([`SurrogateGradient::observe`] → [`OnlineGradientGp::observe`]) instead
+//! of refitting from scratch — the steady-state loop performs no
+//! `GradientGp::fit` (pin: `cold_refits() == 1`). `GpgConfig::online = false`
+//! restores the per-observation refit for A/B validation.
 
 use std::sync::Arc;
 
-use crate::gp::{FitOptions, GradientGp};
+use crate::gp::{FitOptions, GradientGp, OnlineGradientGp};
 use crate::gram::Metric;
 use crate::kernels::SquaredExponential;
 use crate::linalg::Mat;
@@ -31,6 +38,9 @@ pub struct GpgConfig {
     pub hmc: HmcConfig,
     /// Cap on phase-1 iterations while hunting for diverse points.
     pub max_training_iters: usize,
+    /// Stream observations into the surrogate incrementally (`false` =
+    /// cold refit per training point, the A/B-validation path).
+    pub online: bool,
 }
 
 impl GpgConfig {
@@ -40,6 +50,7 @@ impl GpgConfig {
             lengthscale2: 0.4 * d as f64,
             hmc: HmcConfig::paper_scaled(d, eps0),
             max_training_iters: 50 * d,
+            online: true,
         }
     }
 }
@@ -56,35 +67,61 @@ pub struct GpgRun {
     pub train_x: Mat,
     /// The training gradients (`D×N`).
     pub train_g: Mat,
+    /// Cold refits performed by the surrogate's conditioning engine
+    /// (1 = the initial fit only — the online steady-state invariant).
+    pub surrogate_cold_refits: usize,
 }
 
-/// GP surrogate gradient source.
+/// GP surrogate gradient source, backed by the online conditioning engine
+/// so training observations stream in without cold refits.
 pub struct SurrogateGradient {
-    gp: GradientGp,
+    gp: OnlineGradientGp,
     true_evals: usize,
 }
 
 impl SurrogateGradient {
     /// Fit the surrogate on gradient observations (isotropic RBF, `ℓ²`).
     pub fn fit(train_x: &Mat, train_g: &Mat, lengthscale2: f64) -> anyhow::Result<Self> {
-        let gp = GradientGp::fit(
+        Self::fit_with(train_x, train_g, lengthscale2, true)
+    }
+
+    /// Like [`SurrogateGradient::fit`] with the online/refit knob exposed.
+    pub fn fit_with(
+        train_x: &Mat,
+        train_g: &Mat,
+        lengthscale2: f64,
+        online: bool,
+    ) -> anyhow::Result<Self> {
+        let gp = OnlineGradientGp::fit(
             Arc::new(SquaredExponential),
             Metric::Iso(1.0 / lengthscale2),
             train_x,
             train_g,
-            &FitOptions::default(),
+            &FitOptions { online, ..Default::default() },
         )?;
         Ok(SurrogateGradient { gp, true_evals: 0 })
     }
 
+    /// Stream one more gradient observation into the surrogate (incremental
+    /// in the steady state; a cold refit only as numerical fallback or when
+    /// the online knob is off).
+    pub fn observe(&mut self, x: &[f64], g: &[f64]) -> anyhow::Result<()> {
+        self.gp.observe(x, g)
+    }
+
     pub fn gp(&self) -> &GradientGp {
-        &self.gp
+        self.gp.gp()
+    }
+
+    /// Cold refits performed by the conditioning engine (1 = initial fit).
+    pub fn cold_refits(&self) -> usize {
+        self.gp.cold_refits()
     }
 }
 
 impl GradientSource for SurrogateGradient {
     fn grad(&mut self, x: &[f64]) -> Vec<f64> {
-        self.gp.predict_gradient(x)
+        self.gp.gp().predict_gradient(x)
     }
     fn true_grad_evals(&self) -> usize {
         self.true_evals
@@ -157,8 +194,12 @@ pub fn run_gpg_hmc(
         }
         m
     };
-    let mut surrogate =
-        SurrogateGradient::fit(&to_mat(&train_x), &to_mat(&train_g), cfg.lengthscale2)?;
+    let mut surrogate = SurrogateGradient::fit_with(
+        &to_mat(&train_x),
+        &to_mat(&train_g),
+        cfg.lengthscale2,
+        cfg.online,
+    )?;
     while train_x.len() < budget && training_iters < cfg.max_training_iters {
         let p: Vec<f64> = (0..d).map(|_| rng.gauss() * cfg.hmc.mass.sqrt()).collect();
         let h0 = e_x + 0.5 * p.iter().map(|v| v * v).sum::<f64>() / cfg.hmc.mass;
@@ -172,17 +213,20 @@ pub fn run_gpg_hmc(
         }
         training_iters += 1;
         if min_dist(&train_x, &x) > ell {
-            train_x.push(x.clone());
-            train_g.push(target.grad_energy(&x));
+            // steady state: stream the new observation into the surrogate
+            // (no GradientGp::fit — the panels extend incrementally)
+            let gx = target.grad_energy(&x);
             true_evals_training += 1;
-            surrogate =
-                SurrogateGradient::fit(&to_mat(&train_x), &to_mat(&train_g), cfg.lengthscale2)?;
+            surrogate.observe(&x, &gx)?;
+            train_x.push(x.clone());
+            train_g.push(gx);
         }
     }
 
     // ---- sampling phase: fixed surrogate ----
     let tx = to_mat(&train_x);
     let tg_m = to_mat(&train_g);
+    let surrogate_cold_refits = surrogate.cold_refits();
     let mut run = super::run_hmc(target, &mut surrogate, &x, n_samples, &cfg.hmc, rng);
     run.true_grad_evals = true_evals_training;
     Ok(GpgRun {
@@ -191,6 +235,7 @@ pub fn run_gpg_hmc(
         training_accept_rate: training_accepts as f64 / training_iters.max(1) as f64,
         train_x: tx,
         train_g: tg_m,
+        surrogate_cold_refits,
     })
 }
 
@@ -208,6 +253,7 @@ mod tests {
             lengthscale2: 0.4 * d as f64,
             hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 16, mass: 1.0 },
             max_training_iters: 4000,
+            online: true,
         };
         let mut rng = Rng::new(1);
         let x0 = rng.gauss_vec(d);
@@ -230,6 +276,55 @@ mod tests {
     }
 
     #[test]
+    fn steady_state_streams_without_cold_refits() {
+        // acceptance pin: the phase-2 loop must condition by streaming
+        // observations (OnlineGradientGp::observe), never by re-fitting —
+        // cold_refits stays at the single initial fit.
+        let d = 16;
+        let t = Banana::new(d);
+        let cfg = GpgConfig {
+            budget: 4,
+            lengthscale2: 0.4 * d as f64,
+            hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 16, mass: 1.0 },
+            max_training_iters: 4000,
+            online: true,
+        };
+        let mut rng = Rng::new(5);
+        let x0 = rng.gauss_vec(d);
+        let out = run_gpg_hmc(&t, &x0, 20, &cfg, &mut rng).unwrap();
+        assert_eq!(
+            out.surrogate_cold_refits, 1,
+            "steady state refit: {} cold refits for {} training points",
+            out.surrogate_cold_refits,
+            out.train_x.cols()
+        );
+        // A/B (window equivalence): streaming the collected observations one
+        // by one must give the same surrogate as one cold fit on all of them.
+        let (tx, tg) = (&out.train_x, &out.train_g);
+        let n = tx.cols();
+        let mut streamed = SurrogateGradient::fit(
+            &tx.block(0, 0, d, 1),
+            &tg.block(0, 0, d, 1),
+            cfg.lengthscale2,
+        )
+        .unwrap();
+        for j in 1..n {
+            streamed.observe(tx.col(j), tg.col(j)).unwrap();
+        }
+        assert_eq!(streamed.cold_refits(), 1);
+        let cold = SurrogateGradient::fit(tx, tg, cfg.lengthscale2).unwrap();
+        let mut qrng = Rng::new(99);
+        for _ in 0..5 {
+            let q = qrng.gauss_vec(d);
+            let a = streamed.gp().predict_gradient(&q);
+            let b = cold.gp().predict_gradient(&q);
+            for i in 0..d {
+                assert!((a[i] - b[i]).abs() < 1e-8 * (1.0 + b[i].abs()), "dim {i}");
+            }
+        }
+    }
+
+    #[test]
     fn training_points_are_spatially_diverse() {
         let d = 16;
         let t = Banana::new(d);
@@ -238,6 +333,7 @@ mod tests {
             lengthscale2: 0.4 * d as f64,
             hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 16, mass: 1.0 },
             max_training_iters: 4000,
+            online: true,
         };
         let mut rng = Rng::new(2);
         let x0 = rng.gauss_vec(d);
@@ -264,6 +360,7 @@ mod tests {
             lengthscale2: 0.4 * d as f64,
             hmc: HmcConfig { step_size: 0.1, leapfrog_steps: 12, mass: 1.0 },
             max_training_iters: 3000,
+            online: true,
         };
         let mut rng = Rng::new(3);
         let x0 = rng.gauss_vec(d);

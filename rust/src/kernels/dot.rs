@@ -1,6 +1,6 @@
 //! Dot-product kernels (Table 1): `r = (x_a − c)ᵀ Λ (x_b − c)`.
 
-use super::{KernelClass, ScalarKernel};
+use super::{AnalyticPath, KernelClass, ScalarKernel};
 
 /// Polynomial kernel of degree `p ≥ 2`, normalized as in the paper's Table 1:
 /// `k(r) = rᵖ / (p(p−1))` so that `k″(r) = r^{p−2}`.
@@ -59,6 +59,14 @@ impl ScalarKernel for PolynomialKernel {
     fn name(&self) -> &'static str {
         "polynomial"
     }
+    fn analytic_path(&self) -> AnalyticPath {
+        // degree 2 is exactly the poly(2) kernel, whatever it is called
+        if self.p == 2 {
+            AnalyticPath::Poly2
+        } else {
+            AnalyticPath::None
+        }
+    }
 }
 
 /// Second-order polynomial kernel `k(r) = r²/2` — the probabilistic
@@ -84,6 +92,9 @@ impl ScalarKernel for Poly2Kernel {
     }
     fn name(&self) -> &'static str {
         "poly2"
+    }
+    fn analytic_path(&self) -> AnalyticPath {
+        AnalyticPath::Poly2
     }
 }
 

@@ -29,6 +29,23 @@ pub enum KernelClass {
     Stationary,
 }
 
+/// Closed-form solve specializations a kernel can opt into.
+///
+/// Solver dispatch is *structural* — a kernel declares which analytic route
+/// applies to it via [`ScalarKernel::analytic_path`], never by matching on
+/// its display [`ScalarKernel::name`]. Wrapper or renamed kernels therefore
+/// route correctly as long as they forward this method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnalyticPath {
+    /// No special-cased solve: exact Woodbury or iterative CG.
+    None,
+    /// The poly(2) analytic path (Sec. 4.2): `K′ = X̃ᵀΛX̃`, so the
+    /// `N²×N²` Woodbury core collapses to an `N×N` solve
+    /// (`O(N²D + N³)`, [`crate::gram::poly2_solve`]). Declaring this for a
+    /// kernel whose `K′ ≠ X̃ᵀΛX̃` is caught at solve time.
+    Poly2,
+}
+
 /// A kernel as a scalar function of `r` with derivatives up to third order.
 pub trait ScalarKernel: Send + Sync {
     /// Kernel class (decides how `r` is formed and how blocks decompose).
@@ -41,8 +58,14 @@ pub trait ScalarKernel: Send + Sync {
     fn d2k(&self, r: f64) -> f64;
     /// `∂³k/∂r³` (needed only for Hessian inference, Eq. 11/12).
     fn d3k(&self, r: f64) -> f64;
-    /// Stable display name (used by configs and logs).
+    /// Stable display name (used by configs and logs — **never** for solver
+    /// dispatch; see [`AnalyticPath`]).
     fn name(&self) -> &'static str;
+    /// Which analytic solve specialization (if any) applies to this kernel.
+    /// Default: none. Wrappers must forward to their inner kernel.
+    fn analytic_path(&self) -> AnalyticPath {
+        AnalyticPath::None
+    }
 }
 
 /// Finite-difference check utilities shared by the per-kernel tests.

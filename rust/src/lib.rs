@@ -21,6 +21,26 @@
 //! ([`opt::plinalg`]) and gradient-surrogate Hamiltonian Monte Carlo
 //! ([`hmc`]).
 //!
+//! ## Online conditioning
+//!
+//! The core object is **long-lived, mutable serving state**, not a batch
+//! artifact: [`gp::OnlineGradientGp`] keeps a GP conditioned under streaming
+//! observations. `observe` extends the Gram factor panels by one row/column
+//! in `O(ND + N²)` ([`gram::GramFactors::append`] — `O(N)` kernel
+//! evaluations instead of the constructor's `O(N²)`), border-updates the
+//! retained `K̂′⁻¹` and rebuilds the exact Woodbury core from panels
+//! ([`gram::WoodburySolver::from_panels`]), or warm-starts CG from the
+//! previous representer weights; `drop_first` slides the window;
+//! `set_targets` re-solves a new right-hand side through the retained
+//! factorization. Every sequential consumer rides on it — the GP-H/GP-X
+//! optimizers ([`opt`]), GPG-HMC training ([`hmc::SurrogateGradient`]) and
+//! the serving coordinator (`SurrogateClient::observe`) perform **no
+//! `GradientGp::fit` in their steady-state loops** (cold start and numerical
+//! fallback only; `gp.online = false` forces the refit path for A/B
+//! validation). Both engines share one prediction surface,
+//! [`gp::GradientModel`]. Pinned by `tests/online_gp.rs` and
+//! `benches/online_update.rs` (`cargo bench --bench online_update`).
+//!
 //! ## Parallel batched execution
 //!
 //! Throughput under multi-user traffic comes from two batched layers:

@@ -131,6 +131,23 @@ impl Mat {
         self.col_mut(j).copy_from_slice(v);
     }
 
+    /// Append a column in place. Column-major layout makes this a plain
+    /// `O(rows)` extend — the online conditioning engine leans on it to grow
+    /// `D×N` panels without reallocating the retained columns.
+    pub fn push_col(&mut self, v: &[f64]) {
+        assert_eq!(v.len(), self.rows, "push_col length != rows");
+        self.data.extend_from_slice(v);
+        self.cols += 1;
+    }
+
+    /// Remove the first column in place (`O(rows·cols)` shift) — the
+    /// sliding-window drop of the online conditioning engine.
+    pub fn remove_first_col(&mut self) {
+        assert!(self.cols > 0, "remove_first_col on an empty matrix");
+        self.data.drain(..self.rows);
+        self.cols -= 1;
+    }
+
     /// Transpose (allocates).
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
@@ -528,6 +545,19 @@ impl fmt::Debug for Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn push_and_remove_cols() {
+        let mut m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        m.push_col(&[5.0, 6.0]);
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m.col(2), &[5.0, 6.0]);
+        assert_eq!(m[(0, 0)], 1.0);
+        m.remove_first_col();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.col(0), &[2.0, 4.0]);
+        assert_eq!(m.col(1), &[5.0, 6.0]);
+    }
 
     #[test]
     fn matmul_matches_hand_computed() {

@@ -19,12 +19,14 @@ mod lu;
 mod mat;
 pub mod par;
 mod qr;
+mod update;
 
 pub use chol::Cholesky;
 pub use eig::sym_eig;
 pub use lu::Lu;
 pub use mat::Mat;
 pub use qr::{householder_qr, random_orthogonal};
+pub use update::{bordered_inverse_append, bordered_inverse_drop_first};
 
 /// Machine-epsilon-scaled tolerance used by the factorizations.
 pub(crate) const EPS: f64 = 1e-12;

@@ -1,0 +1,137 @@
+//! Bordered inverse updates for the online conditioning engine.
+//!
+//! The exact Woodbury engine keeps the explicit inverse of the `N×N`
+//! effective derivative matrix `K̂′` around (it is needed *entrywise* to
+//! assemble the `N²×N²` core, see [`crate::gram::WoodburySolver`]). When one
+//! observation is appended or the oldest is dropped, `K̂′` changes by one
+//! bordering row+column, and its inverse follows in `O(N²)` from the block
+//! (Schur-complement) inversion formulas instead of an `O(N³)`
+//! refactorization:
+//!
+//! ```text
+//! append:  [[A, b],[bᵀ, c]]⁻¹ = [[A⁻¹ + uuᵀ/s, −u/s],[−uᵀ/s, 1/s]],
+//!          u = A⁻¹b,  s = c − bᵀA⁻¹b
+//! drop:    K⁻¹ = [[e, fᵀ],[f, G]]  ⇒  (K₂₂)⁻¹ = G − ffᵀ/e
+//! ```
+//!
+//! Both return `None` when the pivot (`s` resp. `e`) is numerically
+//! degenerate — callers fall back to a cold factorization, which either
+//! recovers (pure round-off) or reports the genuine singularity with a
+//! proper error.
+
+use super::Mat;
+
+/// Given `A⁻¹` for symmetric `A` (`N×N`), return the inverse of the bordered
+/// symmetric matrix `[[A, b],[bᵀ, c]]` in `O(N²)`.
+///
+/// `None` when the Schur complement `s = c − bᵀA⁻¹b` is non-finite or too
+/// small relative to its summands (the bordered matrix is numerically
+/// singular, e.g. a duplicated observation).
+pub fn bordered_inverse_append(ainv: &Mat, b: &[f64], c: f64) -> Option<Mat> {
+    let n = ainv.rows();
+    assert!(ainv.is_square(), "A⁻¹ must be square");
+    assert_eq!(b.len(), n, "border length != N");
+    let u = ainv.matvec(b);
+    let btu: f64 = b.iter().zip(&u).map(|(x, y)| x * y).sum();
+    let s = c - btu;
+    let scale = c.abs() + btu.abs() + 1.0;
+    if !s.is_finite() || s.abs() <= 1e-13 * scale {
+        return None;
+    }
+    let sinv = 1.0 / s;
+    Some(Mat::from_fn(n + 1, n + 1, |i, j| {
+        if i < n && j < n {
+            ainv[(i, j)] + sinv * u[i] * u[j]
+        } else if i == n && j == n {
+            sinv
+        } else if i == n {
+            -sinv * u[j]
+        } else {
+            -sinv * u[i]
+        }
+    }))
+}
+
+/// Given `K⁻¹` for symmetric `K` (`(N+1)×(N+1)`), return the inverse of the
+/// trailing `N×N` principal submatrix (first row+column dropped) in `O(N²)`.
+///
+/// `None` when the leading entry `e = (K⁻¹)₀₀` is non-finite or ~0 — by the
+/// block-inverse identity `e = 1/(K₀₀ − K₀₁K₂₂⁻¹K₁₀)` it is the reciprocal
+/// Schur complement of the dropped pivot, so `e → 0` means the downdate is
+/// numerically meaningless.
+pub fn bordered_inverse_drop_first(kinv: &Mat) -> Option<Mat> {
+    let m = kinv.rows();
+    assert!(kinv.is_square() && m > 1, "K⁻¹ must be square with N ≥ 2");
+    let e = kinv[(0, 0)];
+    if !e.is_finite() || e.abs() < 1e-300 {
+        return None;
+    }
+    let einv = 1.0 / e;
+    Some(Mat::from_fn(m - 1, m - 1, |i, j| {
+        kinv[(i + 1, j + 1)] - einv * kinv[(i + 1, 0)] * kinv[(j + 1, 0)]
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{random_orthogonal, Lu};
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let q = random_orthogonal(n, &mut rng);
+        let spec: Vec<f64> = (0..n).map(|i| 0.5 + i as f64).collect();
+        q.matmul(&Mat::diag(&spec)).matmul_t(&q)
+    }
+
+    #[test]
+    fn append_matches_direct_inverse() {
+        let n = 6;
+        let k = spd(n + 1, 1);
+        let a = k.block(0, 0, n, n);
+        let b: Vec<f64> = (0..n).map(|i| k[(i, n)]).collect();
+        let c = k[(n, n)];
+        let ainv = Lu::factor(&a).unwrap().inverse();
+        let got = bordered_inverse_append(&ainv, &b, c).unwrap();
+        let want = Lu::factor(&k).unwrap().inverse();
+        assert!((&got - &want).max_abs() < 1e-10 * (1.0 + want.max_abs()));
+    }
+
+    #[test]
+    fn drop_first_matches_direct_inverse() {
+        let n = 6;
+        let k = spd(n + 1, 2);
+        let kinv = Lu::factor(&k).unwrap().inverse();
+        let got = bordered_inverse_drop_first(&kinv).unwrap();
+        let sub = k.block(1, 1, n, n);
+        let want = Lu::factor(&sub).unwrap().inverse();
+        assert!((&got - &want).max_abs() < 1e-10 * (1.0 + want.max_abs()));
+    }
+
+    #[test]
+    fn append_then_drop_roundtrips() {
+        let n = 5;
+        let k = spd(n + 1, 3);
+        let kinv = Lu::factor(&k).unwrap().inverse();
+        // drop the first row/col, then re-append it at the end: the result
+        // must be the inverse of the cyclically permuted matrix.
+        let dropped = bordered_inverse_drop_first(&kinv).unwrap();
+        let b: Vec<f64> = (1..=n).map(|i| k[(i, 0)]).collect();
+        let re = bordered_inverse_append(&dropped, &b, k[(0, 0)]).unwrap();
+        let perm = Mat::from_fn(n + 1, n + 1, |i, j| {
+            k[((i + 1) % (n + 1), (j + 1) % (n + 1))]
+        });
+        let want = Lu::factor(&perm).unwrap().inverse();
+        assert!((&re - &want).max_abs() < 1e-9 * (1.0 + want.max_abs()));
+    }
+
+    #[test]
+    fn degenerate_border_is_rejected() {
+        // duplicated row/col ⇒ the bordered matrix is singular
+        let a = spd(4, 4);
+        let ainv = Lu::factor(&a).unwrap().inverse();
+        let b: Vec<f64> = (0..4).map(|i| a[(i, 0)]).collect();
+        assert!(bordered_inverse_append(&ainv, &b, a[(0, 0)]).is_none());
+    }
+}

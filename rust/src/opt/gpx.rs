@@ -1,19 +1,26 @@
 //! "GP-X": Alg. 1 with inferred-optimum steps (Sec. 4.1.2).
 //!
-//! Each iteration fits the *flipped* GP `g ↦ x(g)` on the history window and
-//! queries it at `g⋆ = 0`; the step direction is toward the model's belief
-//! about the minimizer, `d = x̄⋆ − x_t`, sign-flipped if it is not a descent
-//! direction (the `dᵀg > 0` guard of Alg. 1).
+//! Each iteration conditions the *flipped* GP `g ↦ x(g)` on the history
+//! window and queries it at `g⋆ = 0`; the step direction is toward the
+//! model's belief about the minimizer, `d = x̄⋆ − x_t`, sign-flipped if it
+//! is not a descent direction (the `dᵀg > 0` guard of Alg. 1).
+//!
+//! The flipped GP's *inputs* (the gradients) only gain a column per step,
+//! while its *outputs* `x − x_t` shift wholesale with the anchor — so the
+//! steady state runs on the online engine: one `observe` extends the Gram
+//! panels, and [`OnlineGradientGp::set_targets`] re-anchors the right-hand
+//! side through the retained factorization. The exception is the App. E.2
+//! variant (dot-product kernel centered at the current gradient): its factor
+//! panels change wholesale every step, so it keeps the per-iteration refit.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::gp::{infer_optimum_with, FitOptions};
+use crate::gp::{infer_optimum_with, FitOptions, OnlineGradientGp};
 use crate::gram::Metric;
 use crate::kernels::{KernelClass, ScalarKernel};
-use crate::linalg::Mat;
 
-use super::{dot, norm2, search, Counted, Objective, OptOptions, OptTrace};
+use super::{dot, norm2, search, window_mats, Counted, Objective, OptOptions, OptTrace};
 
 /// GP-X optimizer configuration.
 pub struct GpMinOptimizer {
@@ -25,6 +32,9 @@ pub struct GpMinOptimizer {
     /// For dot-product kernels: center the flipped GP at the current
     /// gradient (`c = g_t`, App. E.2) instead of at 0.
     pub center_at_current_gradient: bool,
+    /// Incremental conditioning in the steady state (`false` = refit per
+    /// iteration, the pre-online behaviour — kept for A/B validation).
+    pub online: bool,
     pub opts: OptOptions,
 }
 
@@ -39,6 +49,8 @@ impl GpMinOptimizer {
         let g0 = norm2(&g).max(1.0);
 
         let mut hist: VecDeque<(Vec<f64>, Vec<f64>)> = VecDeque::new();
+        // long-lived flipped-GP state (stationary / fixed-center kernels)
+        let mut model: Option<OnlineGradientGp> = None;
 
         let mut trace = OptTrace::default();
         trace.f.push(f);
@@ -79,7 +91,7 @@ impl GpMinOptimizer {
             }
 
             dir = self
-                .optimum_direction(&hist, &x, &g)
+                .optimum_direction(&mut model, &hist, &x, &g)
                 .unwrap_or_else(|| g.iter().map(|v| -v).collect());
             // Alg. 1: ensure descent
             if dot(&dir, &g) > 0.0 {
@@ -101,6 +113,7 @@ impl GpMinOptimizer {
     /// `d = x̄⋆ − x_t` via flipped inference on the window.
     fn optimum_direction(
         &self,
+        model: &mut Option<OnlineGradientGp>,
         hist: &VecDeque<(Vec<f64>, Vec<f64>)>,
         x: &[f64],
         g: &[f64],
@@ -110,24 +123,100 @@ impl GpMinOptimizer {
         if n == 0 {
             return None;
         }
-        let mut xm = Mat::zeros(d, n);
-        let mut gm = Mat::zeros(d, n);
-        for (j, (xj, gj)) in hist.iter().enumerate() {
-            xm.set_col(j, xj);
-            gm.set_col(j, gj);
+        // The App. E.2 variant re-centers the kernel at g_t every step, so
+        // the flipped factors change wholesale: keep the refit path there.
+        let use_online = self.online
+            && !(self.center_at_current_gradient
+                && self.kernel.class() == KernelClass::DotProduct);
+        if !use_online {
+            let (xm, gm) = window_mats(hist);
+            let opts = FitOptions {
+                center: self.center_at_current_gradient.then(|| g.to_vec()),
+                ..Default::default()
+            };
+            let xhat = infer_optimum_with(
+                self.kernel.clone(),
+                self.metric.clone(),
+                &xm,
+                &gm,
+                x,
+                &opts,
+                None,
+            )
+            .ok()?;
+            let dir: Vec<f64> = xhat.iter().zip(x).map(|(a, b)| a - b).collect();
+            if dir.iter().any(|v| !v.is_finite()) || norm2(&dir) < 1e-300 {
+                return None;
+            }
+            return Some(dir);
         }
-        let opts = FitOptions {
-            center: self.center_at_current_gradient.then(|| g.to_vec()),
-            ..Default::default()
-        };
-        let xhat =
-            infer_optimum_with(self.kernel.clone(), self.metric.clone(), &xm, &gm, x, &opts, None)
-                .ok()?;
-        let dir: Vec<f64> = xhat.iter().zip(x).map(|(a, b)| a - b).collect();
-        if dir.iter().any(|v| !v.is_finite()) || norm2(&dir) < 1e-300 {
+        // online steady state: extend the gradient-input panels by one
+        // column (deferred — no throwaway solve), then re-anchor the
+        // outputs Y = X − x_t through the retained factorization. One solve
+        // per step, in `set_targets`.
+        self.sync_flipped(model, hist)?;
+        let m = model.as_mut()?;
+        let (xm, _) = window_mats(hist);
+        let mut y = xm;
+        for j in 0..y.cols() {
+            let col = y.col_mut(j);
+            for i in 0..d {
+                col[i] -= x[i];
+            }
+        }
+        if m.set_targets(&y).is_err() {
+            // panels may be ahead of the weights after a deferred update —
+            // discard the model so the next step cold-starts consistently
+            *model = None;
             return None;
         }
-        Some(dir)
+        let delta = m.gp().predict_gradient(&vec![0.0; d]);
+        if delta.iter().any(|v| !v.is_finite()) || norm2(&delta) < 1e-300 {
+            return None;
+        }
+        Some(delta)
+    }
+
+    /// Bring the flipped conditioning state in sync with the window: one
+    /// *deferred* panel append per new pair plus window drops (the single
+    /// solve happens in the caller's `set_targets`); cold fit only on start
+    /// or after a failure.
+    fn sync_flipped(
+        &self,
+        model: &mut Option<OnlineGradientGp>,
+        hist: &VecDeque<(Vec<f64>, Vec<f64>)>,
+    ) -> Option<()> {
+        if let Some(m) = model.as_mut() {
+            if let Some((_, g_new)) = hist.back() {
+                // placeholder targets: set_targets installs the anchored Y
+                let mut ok =
+                    m.append_panels_deferred(g_new, &vec![0.0; g_new.len()]).is_ok();
+                while ok && self.window > 0 && m.n() > self.window {
+                    ok = m.drop_first_panels_deferred().is_ok();
+                }
+                if ok && m.n() == hist.len() {
+                    return Some(());
+                }
+            }
+            *model = None;
+        }
+        let (xm, gm) = window_mats(hist);
+        match OnlineGradientGp::fit(
+            self.kernel.clone(),
+            self.metric.clone(),
+            &gm, // flipped: gradients are the inputs …
+            &xm, // … and the locations the (to-be-re-anchored) outputs
+            &FitOptions::default(),
+        ) {
+            Ok(m) => {
+                *model = Some(m);
+                Some(())
+            }
+            Err(_) => {
+                *model = None;
+                None
+            }
+        }
     }
 }
 
@@ -148,6 +237,7 @@ mod tests {
             metric: Metric::Iso(1.0),
             window: 0,
             center_at_current_gradient: true,
+            online: true,
             opts: OptOptions { gtol: 1e-5, max_iters: 80, line_search: LineSearch::Exact },
         };
         let trace = opt.minimize(&q, &x0);
@@ -164,6 +254,7 @@ mod tests {
             metric: Metric::Iso(0.05),
             window: 2,
             center_at_current_gradient: false,
+            online: true,
             opts: OptOptions {
                 gtol: 1e-5,
                 max_iters: 150,
@@ -176,6 +267,30 @@ mod tests {
     }
 
     #[test]
+    fn online_matches_refit_path_on_quadratic() {
+        // A/B: for a stationary kernel the online steady state (observe +
+        // set_targets through the retained factorization) must agree with
+        // the per-iteration refit path.
+        let mut rng = Rng::new(11);
+        let (q, x0) = Quadratic::paper_f1(10, 0.5, 10.0, 0.6, &mut rng);
+        let make = |online: bool| GpMinOptimizer {
+            kernel: Arc::new(SquaredExponential),
+            metric: Metric::Iso(0.05),
+            window: 3,
+            center_at_current_gradient: false,
+            online,
+            opts: OptOptions { gtol: 1e-6, max_iters: 12, ..Default::default() },
+        };
+        let t_on = make(true).minimize(&q, &x0);
+        let t_off = make(false).minimize(&q, &x0);
+        assert_eq!(t_on.f.len(), t_off.f.len());
+        for (a, b) in t_on.f.iter().zip(&t_off.f) {
+            let scale = 1.0 + a.abs().max(b.abs());
+            assert!((a - b).abs() < 1e-6 * scale, "trace diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
     fn descent_guard_prevents_ascent_steps() {
         // every accepted step must not increase f (backtracking + guard)
         let r = RelaxedRosenbrock::new(10);
@@ -185,6 +300,7 @@ mod tests {
             metric: Metric::Iso(0.05),
             window: 3,
             center_at_current_gradient: false,
+            online: true,
             opts: OptOptions { gtol: 1e-6, max_iters: 60, ..Default::default() },
         };
         let trace = opt.minimize(&r, &x0);

@@ -67,6 +67,21 @@ pub(crate) fn norm2(v: &[f64]) -> f64 {
     v.iter().map(|x| x * x).sum::<f64>().sqrt()
 }
 
+/// Pack a history window of `(x, g)` pairs into `D×N` column matrices.
+pub(crate) fn window_mats(
+    hist: &std::collections::VecDeque<(Vec<f64>, Vec<f64>)>,
+) -> (crate::linalg::Mat, crate::linalg::Mat) {
+    let d = hist.front().map(|(x, _)| x.len()).unwrap_or(0);
+    let n = hist.len();
+    let mut xm = crate::linalg::Mat::zeros(d, n);
+    let mut gm = crate::linalg::Mat::zeros(d, n);
+    for (j, (xj, gj)) in hist.iter().enumerate() {
+        xm.set_col(j, xj);
+        gm.set_col(j, gj);
+    }
+    (xm, gm)
+}
+
 pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }

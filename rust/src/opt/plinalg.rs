@@ -30,6 +30,7 @@ pub fn hessian_solver(q: &Quadratic, x0: &[f64], gtol: f64, max_iters: usize) ->
         window: 0, // keep all observations, like other probabilistic solvers
         center: Some(vec![0.0; d]),
         prior_grad_mean: Some(gc),
+        online: true,
         opts: OptOptions { gtol, max_iters, line_search: LineSearch::Exact },
     };
     opt.minimize(q, x0)
@@ -42,6 +43,7 @@ pub fn solution_solver(q: &Quadratic, x0: &[f64], gtol: f64, max_iters: usize) -
         metric: Metric::Iso(1.0),
         window: 0,
         center_at_current_gradient: true,
+        online: true,
         opts: OptOptions { gtol, max_iters, line_search: LineSearch::Exact },
     };
     opt.minimize(q, x0)

@@ -1,0 +1,317 @@
+//! Integration suite for the online conditioning engine.
+//!
+//! Pins the PR-level acceptance criteria:
+//! * sliding-window equivalence: after W appends + drops,
+//!   `OnlineGradientGp` predictions match a cold `GradientGp::fit` on the
+//!   same window to ≤ 1e-8 — SE, Matérn-5/2 and poly(2) kernels, exact and
+//!   iterative engines;
+//! * `observe` performs `O(ND + N²)` *new-entry* work only: a counting
+//!   kernel wrapper shows `O(N)` kernel evaluations per append at
+//!   N=16 / D=256, far below the `O(N²)` of a cold factor rebuild;
+//! * the counting wrapper doubles as the structural-dispatch check — a
+//!   wrapper with a different display name still routes to the analytic
+//!   poly(2) path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use gdkron::gp::{FitMethod, FitOptions, FitReport, GradientGp, GradientModel, OnlineGradientGp};
+use gdkron::gram::Metric;
+use gdkron::kernels::{AnalyticPath, KernelClass, Matern52, Poly2Kernel, ScalarKernel, SquaredExponential};
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::CgOptions;
+
+/// Wrapper kernel that counts every scalar-derivative evaluation. Forwards
+/// `analytic_path` (structural dispatch) but *not* the display name.
+struct CountingKernel<K: ScalarKernel> {
+    inner: K,
+    calls: Arc<AtomicUsize>,
+}
+
+impl<K: ScalarKernel> CountingKernel<K> {
+    fn new(inner: K) -> Self {
+        CountingKernel { inner, calls: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+impl<K: ScalarKernel> ScalarKernel for CountingKernel<K> {
+    fn class(&self) -> KernelClass {
+        self.inner.class()
+    }
+    fn k(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.k(r)
+    }
+    fn dk(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.dk(r)
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.d2k(r)
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.d3k(r)
+    }
+    fn name(&self) -> &'static str {
+        "counting-wrapper"
+    }
+    fn analytic_path(&self) -> AnalyticPath {
+        self.inner.analytic_path()
+    }
+}
+
+fn sample(d: usize, n: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (Mat::from_fn(d, n, |_, _| rng.gauss()), Mat::from_fn(d, n, |_, _| rng.gauss()))
+}
+
+/// Drive a W-point sliding window through T appends+drops and check the
+/// evolved engine against a cold fit on the final window.
+fn check_window_equivalence(
+    kern: Arc<dyn ScalarKernel>,
+    metric: Metric,
+    x: &Mat,
+    g: &Mat,
+    w: usize,
+    opts: &FitOptions,
+    label: &str,
+) {
+    let (d, total) = (x.rows(), x.cols());
+    let mut online = OnlineGradientGp::fit(
+        kern.clone(),
+        metric.clone(),
+        &x.block(0, 0, d, w),
+        &g.block(0, 0, d, w),
+        opts,
+    )
+    .unwrap_or_else(|e| panic!("{label}: initial fit failed: {e}"));
+    for j in w..total {
+        online
+            .observe(x.col(j), g.col(j))
+            .unwrap_or_else(|e| panic!("{label}: observe {j} failed: {e}"));
+        online.drop_first().unwrap_or_else(|e| panic!("{label}: drop {j} failed: {e}"));
+    }
+    assert_eq!(online.n(), w, "{label}: window size drifted");
+    assert_eq!(online.cold_refits(), 1, "{label}: steady state must not cold-refit");
+
+    let cold = GradientGp::fit(
+        kern,
+        metric,
+        &x.block(0, total - w, d, w),
+        &g.block(0, total - w, d, w),
+        opts,
+    )
+    .unwrap_or_else(|e| panic!("{label}: cold fit failed: {e}"));
+
+    let mut qrng = Rng::new(1234);
+    for _ in 0..4 {
+        let xq = qrng.gauss_vec(d);
+        let po = online.predict_gradient(&xq); // via the GradientModel trait
+        let pc = cold.predict_gradient(&xq);
+        for i in 0..d {
+            assert!(
+                (po[i] - pc[i]).abs() <= 1e-8 * (1.0 + pc[i].abs()),
+                "{label}: gradient dim {i}: {} vs {}",
+                po[i],
+                pc[i]
+            );
+        }
+        let vo = online.predict_value(&xq);
+        let vc = cold.predict_value(&xq);
+        assert!(
+            (vo - vc).abs() <= 1e-8 * (1.0 + vc.abs()),
+            "{label}: value {vo} vs {vc}"
+        );
+        let ho = online.predict_hessian(&xq);
+        let hc = cold.predict_hessian(&xq);
+        assert!(
+            (&ho - &hc).max_abs() <= 1e-8 * (1.0 + hc.max_abs()),
+            "{label}: hessian mismatch {}",
+            (&ho - &hc).max_abs()
+        );
+    }
+}
+
+#[test]
+fn sliding_window_matches_cold_fit_exact_engine() {
+    let (x, g) = sample(12, 10, 1);
+    for (metric, seed_label) in
+        [(Metric::Iso(0.3), "se-iso"), (Metric::Iso(0.15), "se-iso-wide")]
+    {
+        check_window_equivalence(
+            Arc::new(SquaredExponential),
+            metric,
+            &x,
+            &g,
+            5,
+            &FitOptions { method: FitMethod::Exact, ..Default::default() },
+            &format!("exact/{seed_label}"),
+        );
+    }
+    check_window_equivalence(
+        Arc::new(Matern52),
+        Metric::Iso(0.2),
+        &x,
+        &g,
+        5,
+        &FitOptions { method: FitMethod::Exact, ..Default::default() },
+        "exact/matern52",
+    );
+}
+
+#[test]
+fn sliding_window_matches_cold_fit_iterative_engine() {
+    let (x, g) = sample(12, 10, 2);
+    let cg = CgOptions { rtol: 1e-12, max_iters: 50_000, ..Default::default() };
+    check_window_equivalence(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.3),
+        &x,
+        &g,
+        5,
+        &FitOptions { method: FitMethod::Iterative(cg.clone()), ..Default::default() },
+        "iterative/se",
+    );
+    check_window_equivalence(
+        Arc::new(Matern52),
+        Metric::Iso(0.2),
+        &x,
+        &g,
+        5,
+        &FitOptions { method: FitMethod::Iterative(cg), ..Default::default() },
+        "iterative/matern52",
+    );
+}
+
+#[test]
+fn sliding_window_matches_cold_fit_poly2_engine() {
+    // poly(2) needs gradients of an actual quadratic for a consistent system
+    let d = 12;
+    let mut rng = Rng::new(3);
+    let a = {
+        let b = Mat::from_fn(d, d, |_, _| rng.gauss());
+        let mut a = b.t_matmul(&b);
+        for i in 0..d {
+            a[(i, i)] += d as f64;
+        }
+        a
+    };
+    let x = Mat::from_fn(d, 10, |_, _| rng.gauss());
+    let g = a.matmul(&x); // ∇(½xᵀAx)
+    check_window_equivalence(
+        Arc::new(Poly2Kernel),
+        Metric::Iso(1.0),
+        &x,
+        &g,
+        5,
+        &FitOptions::default(), // Auto resolves to the analytic path
+        "poly2",
+    );
+}
+
+#[test]
+fn append_does_linear_kernel_work_not_quadratic() {
+    // acceptance pin: at N=16 / D=256, one `observe` costs O(N) kernel
+    // evaluations (only the new row/column of the panels) — a cold rebuild
+    // costs O(N²). Counted through a wrapper kernel.
+    let (d, n) = (256usize, 16usize);
+    let (x, g) = sample(d, n + 1, 4);
+    let counting = CountingKernel::new(SquaredExponential);
+    let calls = counting.calls.clone();
+    let metric = Metric::Iso(1.0 / (0.4 * d as f64));
+    let opts = FitOptions { method: FitMethod::Exact, ..Default::default() };
+    let mut online = OnlineGradientGp::fit(
+        Arc::new(counting),
+        metric.clone(),
+        &x.block(0, 0, d, n),
+        &g.block(0, 0, d, n),
+        &opts,
+    )
+    .unwrap();
+    let fit_calls = calls.swap(0, Ordering::Relaxed);
+    assert!(fit_calls >= 2 * n * n, "cold fit should do O(N²) evals, did {fit_calls}");
+
+    online.observe(x.col(n), g.col(n)).unwrap();
+    let observe_calls = calls.swap(0, Ordering::Relaxed);
+    assert!(
+        observe_calls <= 8 * (n + 1),
+        "append must do O(N) kernel evals, did {observe_calls}"
+    );
+    assert!(
+        4 * observe_calls < fit_calls,
+        "append ({observe_calls} evals) should be far below a cold rebuild ({fit_calls})"
+    );
+    assert_eq!(online.n(), n + 1);
+    assert_eq!(online.cold_refits(), 1);
+
+    // and the evolved state still answers exactly like a cold fit
+    let counting2 = CountingKernel::new(SquaredExponential);
+    let cold = GradientGp::fit(
+        Arc::new(counting2),
+        metric,
+        &x,
+        &g,
+        &opts,
+    )
+    .unwrap();
+    let xq = Rng::new(5).gauss_vec(d);
+    let po = online.predict_gradient(&xq);
+    let pc = cold.predict_gradient(&xq);
+    for i in 0..d {
+        assert!((po[i] - pc[i]).abs() <= 1e-8 * (1.0 + pc[i].abs()), "dim {i}");
+    }
+}
+
+#[test]
+fn counting_wrapper_still_routes_to_analytic_path() {
+    // structural dispatch: the wrapper's name is "counting-wrapper", not
+    // "poly2" — the analytic path must be chosen anyway.
+    let d = 8;
+    let mut rng = Rng::new(6);
+    let a = {
+        let b = Mat::from_fn(d, d, |_, _| rng.gauss());
+        let mut a = b.t_matmul(&b);
+        for i in 0..d {
+            a[(i, i)] += d as f64;
+        }
+        a
+    };
+    let x = Mat::from_fn(d, 3, |_, _| rng.gauss());
+    let g = a.matmul(&x);
+    let gp = GradientGp::fit(
+        Arc::new(CountingKernel::new(Poly2Kernel)),
+        Metric::Iso(1.0),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    assert!(
+        matches!(gp.report(), FitReport::Poly2 { .. }),
+        "wrapper kernel must route structurally, got {:?}",
+        gp.report()
+    );
+}
+
+#[test]
+fn gradient_model_trait_unifies_both_engines() {
+    // consumers can be generic over the conditioning engine
+    fn query<M: GradientModel>(m: &M, xq: &[f64]) -> Vec<f64> {
+        m.predict_gradient(xq)
+    }
+    let (x, g) = sample(6, 4, 7);
+    let kern = Arc::new(SquaredExponential);
+    let batch =
+        GradientGp::fit(kern.clone(), Metric::Iso(0.5), &x, &g, &FitOptions::default()).unwrap();
+    let online =
+        OnlineGradientGp::fit(kern, Metric::Iso(0.5), &x, &g, &FitOptions::default()).unwrap();
+    let xq = vec![0.3; 6];
+    let a = query(&batch, &xq);
+    let b = query(&online, &xq);
+    for i in 0..6 {
+        assert!((a[i] - b[i]).abs() < 1e-12);
+    }
+}
