@@ -18,7 +18,10 @@ fn main() {
     let d = 100;
     let obj = RelaxedRosenbrock::new(d);
     let x0 = vec![0.8; d];
-    println!("minimizing the relaxed Rosenbrock (Eq. 17), D = {d}, f(x₀) = {:.1}\n", obj.value(&x0));
+    println!(
+        "minimizing the relaxed Rosenbrock (Eq. 17), D = {d}, f(x₀) = {:.1}\n",
+        obj.value(&x0)
+    );
     let shared = OptOptions { gtol: 1e-5, max_iters: 200, line_search: LineSearch::Backtracking };
 
     let bfgs = Bfgs::new(shared.clone()).minimize(&obj, &x0);

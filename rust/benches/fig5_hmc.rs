@@ -9,7 +9,9 @@ use gdkron::bench_util::{bench_with, black_box};
 use gdkron::coordinator::{BatchPolicy, SurrogateServer};
 use gdkron::gp::{FitOptions, GradientGp};
 use gdkron::gram::Metric;
-use gdkron::hmc::{leapfrog, Banana, GradientSource, HmcConfig, SurrogateGradient, Target, TrueGradient};
+use gdkron::hmc::{
+    leapfrog, Banana, GradientSource, HmcConfig, SurrogateGradient, Target, TrueGradient,
+};
 use gdkron::kernels::SquaredExponential;
 use gdkron::linalg::Mat;
 use gdkron::rng::Rng;

@@ -1,0 +1,143 @@
+//! Bench: sharded `apply_block` vs the single-shard Gram operator.
+//!
+//! The pin behind the sharded engine: on the serving batch (D=256, N=8,
+//! K=8 stacked right-hand sides — the same shape as the block-CG serving
+//! path), fanning the block application out over ≥2 persistent shard
+//! workers must beat the single-shard path. Per-column work is identical
+//! (bit-identical, in fact — asserted on every run), so the win is pure
+//! row-block parallelism minus the dispatch overhead the persistent
+//! workers are there to keep small.
+//!
+//! ```bash
+//! cargo bench --bench shard_scaling            # full pin (asserts sharded < single)
+//! cargo bench --bench shard_scaling -- --test  # CI smoke mode (small sizes,
+//!                                              # bit-identity checks only)
+//! ```
+
+use std::time::{Duration, Instant};
+
+use gdkron::gram::{GramFactors, GramOperator, Metric, ShardedGramFactors};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::LinearOp;
+
+struct Scenario {
+    label: &'static str,
+    d: usize,
+    n: usize,
+    /// stacked right-hand sides per block application
+    k: usize,
+    reps: usize,
+    /// Hard-assert `best sharded < single-shard` (the acceptance pin).
+    assert_speedup: bool,
+}
+
+fn fmt(d: Duration) -> String {
+    format!("{:8.3} ms", d.as_secs_f64() * 1e3)
+}
+
+fn time_block(op: &dyn LinearOp, x: &Mat, y: &mut Mat, reps: usize) -> Duration {
+    // warm-up: page in panels, spin up worker caches
+    op.apply_block(x, y);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        op.apply_block(x, y);
+    }
+    t0.elapsed()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let scenarios: Vec<Scenario> = if smoke {
+        vec![Scenario { label: "smoke", d: 32, n: 6, k: 3, reps: 5, assert_speedup: false }]
+    } else {
+        vec![
+            // the acceptance pin: the D=256/N=8 serving batch
+            Scenario {
+                label: "serving batch",
+                d: 256,
+                n: 8,
+                k: 8,
+                reps: 500,
+                assert_speedup: true,
+            },
+            Scenario {
+                label: "wide window",
+                d: 512,
+                n: 16,
+                k: 8,
+                reps: 100,
+                assert_speedup: false,
+            },
+        ]
+    };
+
+    println!("# shard_scaling — sharded apply_block vs the single-shard Gram operator");
+    for sc in &scenarios {
+        let mut rng = Rng::new(7);
+        let x = Mat::from_fn(sc.d, sc.n, |_, _| rng.uniform_in(-2.0, 2.0));
+        let f = GramFactors::with_noise(
+            &SquaredExponential,
+            &x,
+            Metric::Iso(1.0 / (0.4 * sc.d as f64)),
+            None,
+            1e-6,
+        );
+        let nd = sc.d * sc.n;
+        let stacked = Mat::from_fn(nd, sc.k, |_, _| rng.gauss());
+        let mut want = Mat::zeros(nd, sc.k);
+
+        let single = GramOperator::new(&f);
+        let dt_single = time_block(&single, &stacked, &mut want, sc.reps);
+        println!(
+            "{:<14} D={:<4} N={:<3} K={:<2} | single-shard {}",
+            sc.label,
+            sc.d,
+            sc.n,
+            sc.k,
+            fmt(dt_single)
+        );
+
+        let mut best: Option<(usize, Duration)> = None;
+        for s in [2usize, 4] {
+            let engine = ShardedGramFactors::new(&f, s);
+            let op = engine.operator();
+            let mut got = Mat::zeros(nd, sc.k);
+            let dt = time_block(&op, &stacked, &mut got, sc.reps);
+            // bit-identity is asserted on every run, smoke or full
+            assert!(
+                (&got - &want).max_abs() == 0.0,
+                "{} S={s}: sharded apply_block is not bit-identical",
+                sc.label
+            );
+            let speedup = dt_single.as_secs_f64() / dt.as_secs_f64().max(1e-12);
+            println!(
+                "{:<14} D={:<4} N={:<3} K={:<2} | {s} shards      {} | speedup {speedup:5.2}x",
+                sc.label,
+                sc.d,
+                sc.n,
+                sc.k,
+                fmt(dt)
+            );
+            let better = match best {
+                None => true,
+                Some((_, b)) => dt < b,
+            };
+            if better {
+                best = Some((s, dt));
+            }
+        }
+
+        if !smoke && sc.assert_speedup {
+            let (s, dt) = best.expect("at least one shard count timed");
+            assert!(
+                dt < dt_single,
+                "{}: sharded apply_block ({dt:?} at {s} shards) did not beat the \
+                 single-shard path ({dt_single:?})",
+                sc.label
+            );
+        }
+    }
+    println!("ok");
+}

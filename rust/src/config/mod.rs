@@ -175,6 +175,38 @@ pub fn resolve_threads(config: &Config) -> usize {
     resolve_threads_from(config, std::env::var("GDKRON_THREADS").ok().as_deref())
 }
 
+/// Resolve the Gram shard count for the sharded operator
+/// ([`crate::gram::sharded`]).
+///
+/// Priority: the launcher's `--shards` flag (installed process-wide via
+/// [`crate::gram::sharded::set_global_shards`]), then the `GDKRON_SHARDS`
+/// environment variable, then the `gram.shards` config key; absent
+/// everywhere, `1` — the single-shard path, no worker threads. All three
+/// spellings share [`crate::gram::sharded::parse_shards`], so every one of
+/// them lands in the same `1..=MAX_SHARDS` range.
+pub fn resolve_shards(config: &Config) -> usize {
+    resolve_shards_from(
+        config,
+        std::env::var("GDKRON_SHARDS").ok().as_deref(),
+        crate::gram::sharded::global_shards(),
+    )
+}
+
+/// Pure core of [`resolve_shards`] (env/CLI values injected for
+/// testability).
+fn resolve_shards_from(config: &Config, env_val: Option<&str>, cli: Option<usize>) -> usize {
+    if let Some(n) = cli {
+        return n.clamp(1, crate::gram::sharded::MAX_SHARDS);
+    }
+    if let Some(n) = env_val.and_then(crate::gram::sharded::parse_shards) {
+        return n;
+    }
+    match config.int("gram.shards") {
+        Some(n) if n >= 0 => crate::gram::sharded::parse_shards(&n.to_string()).unwrap_or(1),
+        _ => 1,
+    }
+}
+
 /// Pure core of [`resolve_threads`] (env value injected for testability).
 /// Parsing/clamping is delegated to the pool's own
 /// [`crate::linalg::par::parse_threads`] so every spelling of the knob
@@ -265,6 +297,27 @@ jitter = 1e-10
         let mut c = Config::from_str("x = 1").unwrap();
         c.set("x", Value::Int(5));
         assert_eq!(c.int("x"), Some(5));
+    }
+
+    #[test]
+    fn shards_resolution_order() {
+        let cfg = Config::from_str("[gram]\nshards = 6\n").unwrap();
+        // CLI beats env beats config
+        assert_eq!(resolve_shards_from(&cfg, Some("3"), Some(2)), 2);
+        assert_eq!(resolve_shards_from(&cfg, Some("3"), None), 3);
+        assert_eq!(resolve_shards_from(&cfg, Some(" 4 "), None), 4);
+        // bad env falls through to config
+        assert_eq!(resolve_shards_from(&cfg, Some("zonk"), None), 6);
+        assert_eq!(resolve_shards_from(&cfg, None, None), 6);
+        // 0 clamps to the single-shard path everywhere
+        assert_eq!(resolve_shards_from(&cfg, Some("0"), None), 1);
+        let zero = Config::from_str("[gram]\nshards = 0\n").unwrap();
+        assert_eq!(resolve_shards_from(&zero, None, None), 1);
+        // no knob anywhere → single shard
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(resolve_shards_from(&empty, None, None), 1);
+        let invalid = Config::from_str("[gram]\nshards = -2\n").unwrap();
+        assert_eq!(resolve_shards_from(&invalid, None, None), 1);
     }
 
     #[test]

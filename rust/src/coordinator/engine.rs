@@ -52,15 +52,27 @@ impl NativeEngine {
         NativeEngine { gp: OnlineGradientGp::from_fitted(gp), window }
     }
 
-    /// Configure from `[gp]` config keys: `gp.online` (bool, default `true`;
-    /// `false` forces the cold-refit A/B path) and `gp.window` (int ≥ 0,
-    /// default 0 = unbounded).
+    /// Configure from config keys: `gp.online` (bool, default `true`;
+    /// `false` forces the cold-refit A/B path), `gp.window` (int ≥ 0,
+    /// default 0 = unbounded) and `gram.shards` (via
+    /// [`crate::config::resolve_shards`]: `--shards` CLI override beats
+    /// `GDKRON_SHARDS` beats the config key; default 1 = single-shard).
+    /// The shard boundaries follow the serving window: every streamed
+    /// `observe` slides them with the panels, and `gp.window` bounds the
+    /// per-shard memory.
     pub fn from_config(gp: GradientGp, config: &Config) -> Self {
         let online = config.bool_or("gp.online", true);
         let window = config.int_or("gp.window", 0).max(0) as usize;
+        let shards = crate::config::resolve_shards(config);
         let mut engine = Self::with_window(gp, window);
         engine.gp.set_online(online);
+        engine.gp.set_shards(shards);
         engine
+    }
+
+    /// Current Gram shard count (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.gp.shards()
     }
 
     pub fn gp(&self) -> &GradientGp {

@@ -43,10 +43,12 @@
 
 use std::sync::Arc;
 
-use crate::gram::{poly2_solve, GramFactors, GramOperator, Metric, WoodburySolver};
+use crate::gram::{
+    poly2_solve, GramFactors, GramOperator, Metric, ShardedGramFactors, WoodburySolver,
+};
 use crate::kernels::ScalarKernel;
 use crate::linalg::{bordered_inverse_append, bordered_inverse_drop_first, Lu, Mat};
-use crate::solvers::{cg_solve, JacobiPrecond};
+use crate::solvers::{cg_solve, CgResult, JacobiPrecond};
 
 use super::{FitMethod, FitOptions, FitReport, GradientGp, GradientModel};
 
@@ -91,6 +93,11 @@ pub struct OnlineGradientGp {
     kinv_age: usize,
     /// Cold refits performed (1 = the initial fit; steady state stays there).
     cold_refits: usize,
+    /// Row-block sharded matvec engine ([`OnlineGradientGp::set_shards`],
+    /// `gram.shards` config key). `None` = the single-shard path. Kept in
+    /// lockstep with `gp.factors` through every append/drop/refit/rollback;
+    /// the iterative re-solves route their operator applications through it.
+    shard_engine: Option<ShardedGramFactors>,
 }
 
 impl OnlineGradientGp {
@@ -104,7 +111,13 @@ impl OnlineGradientGp {
         opts: &FitOptions,
     ) -> anyhow::Result<Self> {
         let gp = GradientGp::fit(kernel, metric, x, g, opts)?;
-        Ok(OnlineGradientGp { gp, opts: opts.clone(), kinv_age: 0, cold_refits: 1 })
+        Ok(OnlineGradientGp {
+            gp,
+            opts: opts.clone(),
+            kinv_age: 0,
+            cold_refits: 1,
+            shard_engine: None,
+        })
     }
 
     /// Wrap an already-fitted batch GP as online state (the serving
@@ -121,7 +134,7 @@ impl OnlineGradientGp {
             method: gp.method.clone(),
             online: true,
         };
-        OnlineGradientGp { gp, opts, kinv_age: 0, cold_refits: 1 }
+        OnlineGradientGp { gp, opts, kinv_age: 0, cold_refits: 1, shard_engine: None }
     }
 
     /// The underlying conditioned GP (the full prediction surface).
@@ -155,6 +168,69 @@ impl OnlineGradientGp {
         self.opts.online = online;
     }
 
+    /// Shard the Gram operator across `shards` persistent workers
+    /// (`gram.shards` config knob; `<= 1` = the single-shard path, no
+    /// worker threads). The shard boundaries follow every subsequent
+    /// `observe`/`drop_first` delta, and the iterative engine's operator
+    /// applications fan out over the shards — bit-identically to the
+    /// unsharded path (`tests/sharded_gram.rs`).
+    pub fn set_shards(&mut self, shards: usize) {
+        if shards <= 1 {
+            self.shard_engine = None;
+        } else {
+            self.shard_engine = Some(ShardedGramFactors::new(&self.gp.factors, shards));
+        }
+    }
+
+    /// Current shard count (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.shard_engine.as_ref().map_or(1, ShardedGramFactors::shards)
+    }
+
+    /// Append one observation to the factor panels, through the shard
+    /// engine when present (which keeps the shard row blocks in lockstep
+    /// and fans the cross-Gram border out per shard).
+    fn panels_append(&mut self, x_new: &[f64]) {
+        match self.shard_engine.as_mut() {
+            Some(se) => se.append(&mut self.gp.factors, self.gp.kernel.as_ref(), x_new),
+            None => self.gp.factors.append(self.gp.kernel.as_ref(), x_new),
+        }
+    }
+
+    /// Drop the oldest observation from the factor panels, sliding the
+    /// shard boundaries when the shard engine is present.
+    fn panels_drop_first(&mut self) {
+        match self.shard_engine.as_mut() {
+            Some(se) => se.drop_first(&mut self.gp.factors),
+            None => self.gp.factors.drop_first(),
+        }
+    }
+
+    /// Re-sync the shard row blocks after a wholesale factor replacement
+    /// (cold refit or rollback).
+    fn resync_shards(&mut self) {
+        if let Some(se) = self.shard_engine.as_mut() {
+            se.resync(&self.gp.factors);
+        }
+    }
+
+    /// CG re-solve through the sharded operator when present, else the
+    /// plain Gram operator — the only difference is *where* the
+    /// `O(N²D)`-per-iteration applications run; the iterates (and therefore
+    /// the weights) are bit-identical.
+    fn cg_resolve(&self, gt: &Mat, z0: &Mat, cg_opts: &crate::solvers::CgOptions) -> CgResult {
+        match self.shard_engine.as_ref() {
+            Some(se) => {
+                let op = se.operator();
+                cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), cg_opts)
+            }
+            None => {
+                let op = GramOperator::new(&self.gp.factors);
+                cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), cg_opts)
+            }
+        }
+    }
+
     /// Condition on one more observation `(x_new, g_new)`.
     ///
     /// Steady state performs `O(N)` kernel evaluations and `O(ND + N²)`
@@ -175,7 +251,7 @@ impl OnlineGradientGp {
             return self.cold_refit(&x, &g);
         }
         let snapshot = self.snapshot();
-        self.gp.factors.append(self.gp.kernel.as_ref(), x_new);
+        self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
         self.resolve_or_rollback(Delta::Appended, snapshot)
@@ -215,7 +291,7 @@ impl OnlineGradientGp {
         // append first, then trim — both deferred (no solves), so the step
         // pays a single solve at the end; append-before-trim keeps even a
         // window of 1 exact (the new point is what survives).
-        self.gp.factors.append(self.gp.kernel.as_ref(), x_new);
+        self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
         while self.gp.n() > 1 && self.gp.n() > window {
@@ -239,7 +315,7 @@ impl OnlineGradientGp {
             return self.cold_refit(&x, &g);
         }
         let snapshot = self.snapshot();
-        self.gp.factors.drop_first();
+        self.panels_drop_first();
         self.gp.x.remove_first_col();
         self.gp.g.remove_first_col();
         self.resolve_or_rollback(Delta::Dropped, snapshot)
@@ -258,7 +334,7 @@ impl OnlineGradientGp {
         let d = self.gp.d();
         anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
         anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
-        self.gp.factors.append(self.gp.kernel.as_ref(), x_new);
+        self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
         self.gp.solver = None;
@@ -269,7 +345,7 @@ impl OnlineGradientGp {
     /// [`OnlineGradientGp::append_panels_deferred`]).
     pub(crate) fn drop_first_panels_deferred(&mut self) -> anyhow::Result<()> {
         anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
-        self.gp.factors.drop_first();
+        self.panels_drop_first();
         self.gp.x.remove_first_col();
         self.gp.g.remove_first_col();
         self.gp.solver = None;
@@ -349,6 +425,7 @@ impl OnlineGradientGp {
         self.kinv_age = 0;
         self.gp = gp;
         self.cold_refits += 1;
+        self.resync_shards();
         Ok(())
     }
 
@@ -371,6 +448,7 @@ impl OnlineGradientGp {
         self.gp.g = g;
         self.gp.z = z;
         self.kinv_age = kinv_age;
+        self.resync_shards();
     }
 
     /// Incremental re-solve; on failure, one cold refit from the (already
@@ -477,10 +555,7 @@ impl OnlineGradientGp {
                 if cg_opts.precond.is_none() {
                     cg_opts.precond = Some(JacobiPrecond::new(&self.gp.factors.gram_diag()));
                 }
-                let res = {
-                    let op = GramOperator::new(&self.gp.factors);
-                    cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), &cg_opts)
-                };
+                let res = self.cg_resolve(&gt, &z0, &cg_opts);
                 anyhow::ensure!(
                     res.converged,
                     "online CG re-solve did not converge in {} iterations",

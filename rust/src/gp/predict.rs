@@ -591,7 +591,8 @@ mod tests {
     #[test]
     fn value_gradient_consistency() {
         // ∇ predict_value = predict_gradient (finite differences)
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.7), 4, 3, 20, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(0.7), 4, 3, 20, FitOptions::default());
         let xq = vec![0.2, 0.5, -0.3, 0.9];
         let grad = gp.predict_gradient(&xq);
         let h = 1e-6;
@@ -607,7 +608,8 @@ mod tests {
 
     #[test]
     fn value_variance_zero_at_observations_positive_far_away() {
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(1.0), 4, 3, 30, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(1.0), 4, 3, 30, FitOptions::default());
         let far = vec![25.0, -25.0, 25.0, -25.0];
         let var_far = gp.predict_value_var(&far).unwrap();
         // far away the posterior reverts to the prior variance k(0) = 1
@@ -621,7 +623,8 @@ mod tests {
 
     #[test]
     fn hessian_parts_match_dense() {
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.5), 5, 4, 40, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(0.5), 5, 4, 40, FitOptions::default());
         let xq = vec![0.1, 0.2, -0.4, 0.7, -0.9];
         let parts = gp.predict_hessian_parts(&xq);
         let dense = parts.to_dense(&gp);
@@ -633,7 +636,8 @@ mod tests {
 
     #[test]
     fn hessian_woodbury_solve_matches_dense() {
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.6), 6, 4, 60, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(0.6), 6, 4, 60, FitOptions::default());
         let xq = vec![0.3, -0.2, 0.5, 0.1, -0.7, 0.4];
         let parts = gp.predict_hessian_parts(&xq);
         let dense = parts.to_dense(&gp);
@@ -653,7 +657,8 @@ mod tests {
 
     #[test]
     fn gradient_cov_vanishes_at_observations_and_reverts_far_away() {
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.8), 4, 3, 61, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(0.8), 4, 3, 61, FitOptions::default());
         // at an observed point the (noise-free) gradient is pinned: cov ≈ 0
         let at = gp.x().col(1).to_vec();
         let cov_at = gp.predict_gradient_cov(&at).unwrap();
@@ -671,7 +676,8 @@ mod tests {
     #[test]
     fn gradient_cov_matches_brute_force_small_case() {
         use crate::linalg::Lu;
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.5), 3, 2, 62, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(0.5), 3, 2, 62, FitOptions::default());
         let xq = vec![0.4, -0.3, 0.8];
         let got = gp.predict_gradient_cov(&xq).unwrap();
         // brute force: extend the dense Gram with the query point and read
@@ -704,7 +710,8 @@ mod tests {
 
     #[test]
     fn batch_prediction_matches_single() {
-        let gp = fit(Arc::new(SquaredExponential), Metric::Iso(0.8), 4, 3, 50, FitOptions::default());
+        let gp =
+            fit(Arc::new(SquaredExponential), Metric::Iso(0.8), 4, 3, 50, FitOptions::default());
         let mut rng = Rng::new(51);
         let xqs = Mat::from_fn(4, 6, |_, _| rng.gauss());
         let batch = gp.predict_gradients(&xqs);

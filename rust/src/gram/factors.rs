@@ -17,7 +17,7 @@
 //! construction keeps every downstream formula identical for both classes.
 
 use crate::kernels::{KernelClass, ScalarKernel};
-use crate::linalg::Mat;
+use crate::linalg::{slice_dot, Mat};
 
 use super::Metric;
 
@@ -162,10 +162,28 @@ impl GramFactors {
     /// `O(N²)` evaluations and `O(N²D)` flops. The resulting factors are
     /// arithmetically identical to a cold rebuild on the extended data.
     pub fn append(&mut self, kernel: &dyn ScalarKernel, x_new: &[f64]) {
-        let (d, n) = (self.d(), self.n());
+        let n = self.n();
+        let (xt_new, lam_new) = self.append_prelude(kernel, x_new);
+        // new cross-Gram border: h_col[b] = x̃_bᵀΛx̃_new, corner h_col[n]
+        let mut h_col = vec![0.0; n + 1];
+        h_border_range(&self.xt, &lam_new, 0, n, &mut h_col[..n]);
+        h_col[n] = h_border_corner(&xt_new, &lam_new);
+        self.apply_append_border(kernel, xt_new, lam_new, h_col);
+    }
+
+    /// Shared head of the append path: validate, center the new column and
+    /// apply the metric. Split out so the sharded engine
+    /// ([`crate::gram::ShardedGramFactors`]) can fan the cross-Gram border
+    /// out over shard workers between this and
+    /// [`GramFactors::apply_append_border`].
+    pub(crate) fn append_prelude(
+        &self,
+        kernel: &dyn ScalarKernel,
+        x_new: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let d = self.d();
         assert_eq!(kernel.class(), self.class, "kernel class mismatch");
         assert_eq!(x_new.len(), d, "x_new length != D");
-
         // centered column x̃_new and Λx̃_new
         let mut xt_new = x_new.to_vec();
         if let Some(c) = &self.center {
@@ -175,22 +193,25 @@ impl GramFactors {
         }
         let mut lam_new = vec![0.0; d];
         self.metric.apply_slice(&xt_new, &mut lam_new);
+        (xt_new, lam_new)
+    }
 
-        // new cross-Gram border: h_col[b] = x̃_bᵀΛx̃_new, corner h_col[n]
-        let mut h_col = vec![0.0; n + 1];
-        for (b, hb) in h_col.iter_mut().enumerate().take(n) {
-            let xb = self.xt.col(b);
-            let mut s = 0.0;
-            for i in 0..d {
-                s += xb[i] * lam_new[i];
-            }
-            *hb = s;
-        }
-        let mut h_nn = 0.0;
-        for i in 0..d {
-            h_nn += xt_new[i] * lam_new[i];
-        }
-        h_col[n] = h_nn;
+    /// Tail of the append path: given the centered new column and the
+    /// complete cross-Gram border (`h_col[..n]` plus corner `h_col[n]`),
+    /// evaluate the kernel borders and grow every panel. `O(N)` kernel
+    /// evaluations, `O(ND + N²)` copies, no dot products — all `O(ND)`
+    /// border flops happened upstream (serially in [`GramFactors::append`],
+    /// or fanned out per shard in the sharded engine).
+    pub(crate) fn apply_append_border(
+        &mut self,
+        kernel: &dyn ScalarKernel,
+        xt_new: Vec<f64>,
+        lam_new: Vec<f64>,
+        h_col: Vec<f64>,
+    ) {
+        let n = self.n();
+        debug_assert_eq!(h_col.len(), n + 1);
+        let h_nn = h_col[n];
 
         // new scalar arguments (same formulas as the constructor)
         let mut r_col = vec![0.0; n + 1];
@@ -268,10 +289,17 @@ impl GramFactors {
     }
 
     /// Memory held by the factors, in f64 counts (for the Sec. 5.2 memory
-    /// table: `O(N² + ND)` vs the dense `(ND)²`). Four `N×N` panels
-    /// (`r`, `K̂′`, `K̂″`, `H`) plus the two `D×N` input panels.
+    /// table: `O(N² + ND)` vs the dense `(ND)²`). Counts every retained
+    /// panel: the four `N×N` panels (`r`, `K̂′`, `K̂″`, `H`), the *three*
+    /// input panels (`X̃`, `ΛX̃` and the cached transpose `(ΛX̃)ᵀ` — the
+    /// online state keeps all three alive), and the dot-product center.
+    /// `gp.window` sizing and the sharded engine's per-shard memory bounds
+    /// read this, so it must match the actual buffers
+    /// (`memory_f64_counts_every_retained_panel` pins it).
     pub fn memory_f64(&self) -> usize {
-        4 * self.n() * self.n() + 2 * self.n() * self.d()
+        4 * self.n() * self.n()
+            + 3 * self.n() * self.d()
+            + self.center.as_ref().map_or(0, Vec::len)
     }
 
     /// Diagonal of the full Gram matrix (Jacobi preconditioner for the
@@ -343,6 +371,24 @@ impl GramFactors {
         }
         out
     }
+}
+
+/// Cross-Gram border slice: `out[b − lo] = x̃_bᵀ Λ x̃_new` for `b ∈ [lo, hi)`,
+/// with `Λx̃_new` precomputed. The serial [`GramFactors::append`] and the
+/// sharded engine's per-shard fan-out both call this, and both entries are
+/// the crate's one shared left-fold dot kernel — the sharded border is
+/// bit-identical to the serial one by construction.
+pub(crate) fn h_border_range(xt: &Mat, lam_new: &[f64], lo: usize, hi: usize, out: &mut [f64]) {
+    debug_assert_eq!(lam_new.len(), xt.rows());
+    debug_assert_eq!(out.len(), hi - lo);
+    for (bi, hb) in out.iter_mut().enumerate() {
+        *hb = slice_dot(xt.col(lo + bi), lam_new);
+    }
+}
+
+/// Corner of the cross-Gram border: `x̃_newᵀ Λ x̃_new`.
+pub(crate) fn h_border_corner(xt_new: &[f64], lam_new: &[f64]) -> f64 {
+    slice_dot(xt_new, lam_new)
 }
 
 /// Extend a symmetric `N×N` matrix to `(N+1)×(N+1)` with the given border
@@ -528,6 +574,35 @@ mod tests {
         assert_eq!(1_000_000, (10 * 100) * (10 * 100)); // dense would be 1e6
     }
 
+    #[test]
+    fn memory_f64_counts_every_retained_panel() {
+        // the accountant must match the actual buffers — window sizing and
+        // the sharded engine's per-shard memory bounds read this number.
+        let x = sample_x(7, 4, 50);
+        let c = vec![0.1, -0.2, 0.3, 0.0, 0.2, -0.1, 0.4];
+        let mut cases = vec![
+            GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.8), None),
+            GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.8), Some(&c)),
+        ];
+        // online growth must stay consistent too
+        cases[0].append(&SquaredExponential, &[0.3; 7]);
+        for f in &cases {
+            let actual = f.r.rows() * f.r.cols()
+                + f.kp_eff.rows() * f.kp_eff.cols()
+                + f.kpp_eff.rows() * f.kpp_eff.cols()
+                + f.h.rows() * f.h.cols()
+                + f.xt.rows() * f.xt.cols()
+                + f.lam_xt.rows() * f.lam_xt.cols()
+                + f.lam_xt_t.rows() * f.lam_xt_t.cols()
+                + f.center.as_ref().map_or(0, Vec::len);
+            assert_eq!(
+                f.memory_f64(),
+                actual,
+                "memory_f64 must count r, K̂′, K̂″, H, X̃, ΛX̃, (ΛX̃)ᵀ and the center"
+            );
+        }
+    }
+
     fn assert_factors_match(a: &GramFactors, b: &GramFactors, tol: f64, what: &str) {
         assert_eq!(a.n(), b.n(), "{what}: N mismatch");
         assert!((&a.xt - &b.xt).max_abs() <= tol, "{what}: xt");
@@ -558,8 +633,13 @@ mod tests {
         ];
         for (kern, metric, center, noise) in cases {
             let seed = x.block(0, 0, d, 3);
-            let mut f =
-                GramFactors::with_noise(kern.as_ref(), &seed, metric.clone(), center.as_deref(), noise);
+            let mut f = GramFactors::with_noise(
+                kern.as_ref(),
+                &seed,
+                metric.clone(),
+                center.as_deref(),
+                noise,
+            );
             f.append(kern.as_ref(), x.col(3));
             f.append(kern.as_ref(), x.col(4));
             let cold =
@@ -615,7 +695,12 @@ mod tests {
     fn gram_diag_matches_dense_diagonal() {
         let x = sample_x(5, 4, 7);
         for f in [
-            GramFactors::new(&SquaredExponential, &x, Metric::Diag(vec![1.0, 0.5, 2.0, 1.2, 0.8]), None),
+            GramFactors::new(
+                &SquaredExponential,
+                &x,
+                Metric::Diag(vec![1.0, 0.5, 2.0, 1.2, 0.8]),
+                None,
+            ),
             GramFactors::new(&Poly2Kernel, &x, Metric::Iso(1.3), None),
         ] {
             let dense = f.to_dense();

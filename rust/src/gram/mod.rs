@@ -15,15 +15,23 @@
 //! retained panels plus a border-updated `K̂′⁻¹`
 //! ([`crate::linalg::bordered_inverse_append`]), never from raw data. This
 //! is the substrate of [`crate::gp::OnlineGradientGp`].
+//!
+//! At serving scale the matvec itself is sharded: [`ShardedGramFactors`]
+//! ([`sharded`]) partitions the panels into row blocks owned by persistent
+//! per-shard workers, follows the online deltas, and serves
+//! `LinearOp::apply_block` bit-identically to the single-shard path
+//! (`gram.shards` knob; see the [`sharded`] module docs).
 
 mod factors;
 mod matvec;
 mod metric;
 mod poly2;
+pub mod sharded;
 mod woodbury;
 
 pub use factors::GramFactors;
 pub use matvec::{GramOperator, MatvecWorkspace};
 pub use metric::Metric;
 pub use poly2::{poly2_solve, Poly2Solve};
+pub use sharded::{ShardedGramFactors, ShardedGramOperator};
 pub use woodbury::{woodbury_solve, WoodburySolver};

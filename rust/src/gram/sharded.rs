@@ -1,0 +1,708 @@
+//! Row-block sharded Gram operator: the `O(N²D)` matvec fanned out over
+//! persistent per-shard workers.
+//!
+//! The paper's cost model (Sec. 2.3) makes the cross-Gram products and the
+//! structured matvec the dominant serving cost, and both are embarrassingly
+//! parallel over *observations*: output column `a` of `(∇K∇′)vec(V)` only
+//! reads column `a` of the `N×N` derivative panels (plus the shared input
+//! panels). [`ShardedGramFactors`] exploits exactly that:
+//!
+//! * The factor panels are partitioned into **contiguous row blocks** of
+//!   observations ([`shard_plan`]). Each shard owns its slice of `K̂′`,
+//!   `K̂″` and the cross-Gram `H`, plus its rows of `(ΛX̃)ᵀ` — per-shard
+//!   state is `O((N² + ND)/S)` and therefore bounded by the serving window
+//!   (`gp.window`) like the global panels.
+//! * Shards are **persistent worker threads** (spawned once, fed over
+//!   channels), so a serving-sized `apply_block` pays no thread-spawn
+//!   latency — the block is dispatched, each worker computes the output
+//!   rows of its observations shard-locally, and the coordinator reduces
+//!   the disjoint row blocks (plus, for stationary kernels, the gathered
+//!   `P` diagonal of the two-phase matvec) into the final buffer.
+//! * **Bit-identity.** The partition is over *output* columns, so the
+//!   reduction concatenates disjoint contributions instead of summing
+//!   overlapping partials — combined with every worker running the exact
+//!   per-column kernels of the serial path
+//!   ([`crate::linalg::Mat`]'s column kernels, shared at the slice level),
+//!   results are bit-identical for every shard count, including the
+//!   single-shard path. A summed tree reduction would trade that guarantee
+//!   away for nothing: the per-shard work is identical either way.
+//!
+//! Online deltas follow the conditioning engine (PR 2): `append` computes
+//! the new cross-Gram border *in parallel* — each shard contributes the
+//! `O(ND/S)` dot products for its own observations — while the `O(N)`
+//! kernel evaluations happen exactly once (pinned by a counting-kernel
+//! test: sharded appends cost the same kernel calls as serial ones).
+//! `drop_first` slides the shard boundaries over the retained panels
+//! without recomputing anything. After every delta the balanced plan is
+//! recomputed and each worker receives its refreshed row block — `O(N²/S +
+//! ND/S)` copies per shard, the same order as the panel growth itself.
+//!
+//! Knob: `--shards N` on the CLI beats `GDKRON_SHARDS` beats the
+//! `gram.shards` config key ([`crate::config::resolve_shards`]); `1` (the
+//! default) is the current single-shard path — no worker threads at all.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::kernels::{KernelClass, ScalarKernel};
+use crate::linalg::{matmul_acc_col_slice, slice_dot, Mat};
+use crate::solvers::LinearOp;
+
+use super::factors::{h_border_corner, h_border_range};
+use super::{GramFactors, Metric};
+
+/// Upper bound on the shard count (sanity clamp for bad knob values).
+pub const MAX_SHARDS: usize = 64;
+
+/// Parse a shard-count string (CLI flag, env var or config value): trimmed
+/// integer, clamped to `1..=MAX_SHARDS` (`0` and `1` both mean the
+/// single-shard path). Single source of truth for every spelling of the
+/// knob — [`crate::config::resolve_shards`] and the launcher's `--shards`
+/// flag both route through it.
+pub fn parse_shards(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().map(|n| n.clamp(1, MAX_SHARDS))
+}
+
+/// `0` = no CLI override; the launcher's `--shards` flag sets it.
+static CLI_SHARDS: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-wide `--shards` override (clamped to
+/// `1..=MAX_SHARDS`); it beats `GDKRON_SHARDS` and the config key in
+/// [`crate::config::resolve_shards`].
+pub fn set_global_shards(n: usize) {
+    CLI_SHARDS.store(n.clamp(1, MAX_SHARDS), Ordering::Relaxed);
+}
+
+/// The `--shards` override, if one was installed.
+pub fn global_shards() -> Option<usize> {
+    match CLI_SHARDS.load(Ordering::Relaxed) {
+        0 => None,
+        n => Some(n),
+    }
+}
+
+/// Balanced contiguous row-block partition of `n` observations into `s`
+/// shards: the first `n % s` shards own one extra observation, later shards
+/// may be empty when `s > n`. Deterministic, so the coordinator and every
+/// worker agree on the boundaries without negotiation.
+pub fn shard_plan(n: usize, s: usize) -> Vec<(usize, usize)> {
+    let s = s.max(1);
+    let base = n / s;
+    let rem = n % s;
+    let mut plan = Vec::with_capacity(s);
+    let mut lo = 0;
+    for i in 0..s {
+        let b = base + usize::from(i < rem);
+        plan.push((lo, lo + b));
+        lo += b;
+    }
+    debug_assert_eq!(lo, n);
+    plan
+}
+
+/// Read-only panels every shard needs whole (single-node: shared by `Arc`,
+/// never duplicated per shard; a multi-node deployment would broadcast
+/// them). Snapshotted from the authoritative [`GramFactors`] after every
+/// delta.
+struct SharedPanels {
+    class: KernelClass,
+    metric: Metric,
+    /// `X̃` (`D×N`): the stationary correction and the append border read
+    /// all columns.
+    xt: Mat,
+    /// `ΛX̃` (`D×N`): the dot-product correction reads all columns.
+    lam_xt: Mat,
+    d: usize,
+    n: usize,
+}
+
+impl SharedPanels {
+    fn snapshot(f: &GramFactors) -> Arc<Self> {
+        Arc::new(SharedPanels {
+            class: f.class,
+            metric: f.metric.clone(),
+            xt: f.xt.clone(),
+            lam_xt: f.lam_xt.clone(),
+            d: f.d(),
+            n: f.n(),
+        })
+    }
+}
+
+/// The row-block panel slices one shard owns: observations `lo..hi` of the
+/// evolving factors. `O(N·B + D·B)` memory for a block of `B = hi − lo`
+/// observations — the serving window bounds it exactly like the global
+/// panels.
+struct ShardState {
+    lo: usize,
+    hi: usize,
+    /// Columns `lo..hi` of `K̂′` (`N×B`; row block ≡ column block only up to
+    /// rounding, so the actual columns are stored).
+    kp_cols: Mat,
+    /// Columns `lo..hi` of `K̂″` (`N×B`) — the dot-product correction.
+    kpp_cols: Mat,
+    /// Rows `lo..hi` of `K̂″`, stored column-per-row (`N×B`; column `j` is
+    /// row `lo + j` made contiguous) — the stationary `W` sweep.
+    kpp_rows: Mat,
+    /// Columns `lo..hi` of the cross-Gram `H` (`N×B`) — the shard's slice of
+    /// the panel [`crate::gram::WoodburySolver::from_panels`] rebuilds from.
+    h_cols: Mat,
+    /// Rows `lo..hi` of `(ΛX̃)ᵀ` (`B×D`) — the shard's block of `P = XᵀΛV`.
+    lam_xt_t: Mat,
+}
+
+impl ShardState {
+    /// f64s held by this shard's owned panels (the four `N×B` slices plus
+    /// the `B×D` input rows).
+    fn memory_f64(&self) -> usize {
+        self.kp_cols.rows() * self.kp_cols.cols()
+            + self.kpp_cols.rows() * self.kpp_cols.cols()
+            + self.kpp_rows.rows() * self.kpp_rows.cols()
+            + self.h_cols.rows() * self.h_cols.cols()
+            + self.lam_xt_t.rows() * self.lam_xt_t.cols()
+    }
+}
+
+fn build_state(f: &GramFactors, lo: usize, hi: usize) -> ShardState {
+    let (n, d) = (f.n(), f.d());
+    let b = hi - lo;
+    ShardState {
+        lo,
+        hi,
+        kp_cols: f.kp_eff.block(0, lo, n, b),
+        kpp_cols: f.kpp_eff.block(0, lo, n, b),
+        kpp_rows: Mat::from_fn(n, b, |bb, j| f.kpp_eff[(lo + j, bb)]),
+        h_cols: f.h.block(0, lo, n, b),
+        lam_xt_t: f.lam_xt_t.block(lo, 0, b, d),
+    }
+}
+
+/// Work items for the persistent shard workers.
+enum Job {
+    /// Replace the shard's panels + shared snapshot (after any delta).
+    Sync { shared: Arc<SharedPanels>, state: ShardState },
+    /// Compute this shard's slice of the append cross-Gram border.
+    HBorder { lam_new: Vec<f64>, reply: Sender<(usize, Vec<f64>)> },
+    /// Apply the Gram operator to a block of stacked right-hand sides.
+    Apply { xin: Arc<Mat>, reply: Sender<ApplyMsg>, pdiag_rx: Option<Receiver<Arc<Mat>>> },
+    Shutdown,
+}
+
+enum ApplyMsg {
+    /// Stationary phase 1: this shard's `B×K` slice of the `P` diagonal.
+    Diag { id: usize, diag: Mat },
+    /// Finished output rows (`(B·D)×K`) for this shard's observations.
+    Out { id: usize, block: Mat },
+}
+
+/// Dot-product shard apply: output columns `lo..hi` for every stacked RHS,
+/// replicating the serial per-column arithmetic of
+/// [`GramFactors::matvec_into`] exactly.
+fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
+    let (d, n) = (sh.d, sh.n);
+    let b = st.hi - st.lo;
+    let k_count = xin.cols();
+    let mut block = Mat::zeros(b * d, k_count);
+    let mut t1 = vec![0.0; d];
+    let mut t2 = vec![0.0; d];
+    let mut pbuf = vec![0.0; n];
+    let mut mbuf = vec![0.0; n];
+    for k in 0..k_count {
+        let v = xin.col(k); // a vec'd D×N right-hand side, column-major
+        for j in 0..b {
+            let a = st.lo + j;
+            // term1 column: V K̂′[:,a] (then Λ at the end)
+            t1.fill(0.0);
+            matmul_acc_col_slice(v, d, n, st.kp_cols.col(j), &mut t1);
+            // P[:,a] = Vᵀ(Λx̃_a), then M[:,a] = K̂″[:,a] ⊙ P[:,a]
+            let lam_a = sh.lam_xt.col(a);
+            for (bb, p) in pbuf.iter_mut().enumerate() {
+                *p = slice_dot(&v[bb * d..(bb + 1) * d], lam_a);
+            }
+            let kppc = st.kpp_cols.col(j);
+            for bb in 0..n {
+                mbuf[bb] = kppc[bb] * pbuf[bb];
+            }
+            // term2 column: ΛX̃ · M[:,a]
+            t2.fill(0.0);
+            matmul_acc_col_slice(sh.lam_xt.as_slice(), d, n, &mbuf, &mut t2);
+            let ocol = &mut block.col_mut(k)[j * d..(j + 1) * d];
+            for i in 0..d {
+                ocol[i] = sh.metric.diag_entry(i) * t1[i] + t2[i];
+            }
+        }
+    }
+    block
+}
+
+/// Stationary phase 1: this shard's `B×N` block of `P = (ΛX)ᵀV` per RHS,
+/// plus the `B×K` slice of the `P` diagonal (the only cross-shard
+/// dependency of the stationary matvec).
+fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
+    let d = sh.d;
+    let b = st.hi - st.lo;
+    let n = sh.n;
+    let k_count = xin.cols();
+    let mut pblocks = Vec::with_capacity(k_count);
+    let mut diag = Mat::zeros(b, k_count);
+    for k in 0..k_count {
+        let v = xin.col(k);
+        let mut p = Mat::zeros(b, n);
+        for bb in 0..n {
+            matmul_acc_col_slice(
+                st.lam_xt_t.as_slice(),
+                b,
+                d,
+                &v[bb * d..(bb + 1) * d],
+                p.col_mut(bb),
+            );
+        }
+        for j in 0..b {
+            diag[(j, k)] = p[(j, st.lo + j)];
+        }
+        pblocks.push(p);
+    }
+    (pblocks, diag)
+}
+
+/// Stationary phase 2: with the gathered full `P` diagonal (`N×K`), finish
+/// the shard's output rows — again replicating the serial per-column
+/// arithmetic (term1 accumulation, `W` sweep in increasing `b`, `M3`
+/// column, `Λ` last).
+fn apply_finish_stationary(
+    sh: &SharedPanels,
+    st: &ShardState,
+    xin: &Mat,
+    pblocks: &[Mat],
+    pdiag: &Mat,
+) -> Mat {
+    let (d, n) = (sh.d, sh.n);
+    let b = st.hi - st.lo;
+    let k_count = xin.cols();
+    let mut block = Mat::zeros(b * d, k_count);
+    let mut t1 = vec![0.0; d];
+    let mut m3 = vec![0.0; n];
+    for k in 0..k_count {
+        let v = xin.col(k);
+        let p = &pblocks[k];
+        for j in 0..b {
+            let a = st.lo + j;
+            t1.fill(0.0);
+            matmul_acc_col_slice(v, d, n, st.kp_cols.col(j), &mut t1);
+            // W_ab = K̂″_ab (P_ab − P_bb); M3[:,a] = −W_{a,:}ᵀ + w_a e_a
+            let kpr = st.kpp_rows.col(j); // row a of K̂″, contiguous
+            let mut wsum = 0.0;
+            for bb in 0..n {
+                let w = kpr[bb] * (p[(j, bb)] - pdiag[(bb, k)]);
+                m3[bb] = -w;
+                wsum += w;
+            }
+            m3[a] += wsum;
+            matmul_acc_col_slice(sh.xt.as_slice(), d, n, &m3, &mut t1);
+            let ocol = &mut block.col_mut(k)[j * d..(j + 1) * d];
+            for i in 0..d {
+                ocol[i] = sh.metric.diag_entry(i) * t1[i];
+            }
+        }
+    }
+    block
+}
+
+fn worker_loop(id: usize, rx: Receiver<Job>) {
+    let mut shared: Option<Arc<SharedPanels>> = None;
+    let mut state: Option<ShardState> = None;
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Sync { shared: sh, state: st } => {
+                shared = Some(sh);
+                state = Some(st);
+            }
+            Job::HBorder { lam_new, reply } => {
+                let sh = shared.as_ref().expect("shard worker not synced");
+                let st = state.as_ref().expect("shard worker not synced");
+                let mut out = vec![0.0; st.hi - st.lo];
+                h_border_range(&sh.xt, &lam_new, st.lo, st.hi, &mut out);
+                let _ = reply.send((id, out));
+            }
+            Job::Apply { xin, reply, pdiag_rx } => {
+                let sh = shared.as_ref().expect("shard worker not synced");
+                let st = state.as_ref().expect("shard worker not synced");
+                let block = match sh.class {
+                    KernelClass::DotProduct => apply_dot(sh, st, &xin),
+                    KernelClass::Stationary => {
+                        let (pblocks, diag) = apply_phase_p(sh, st, &xin);
+                        let _ = reply.send(ApplyMsg::Diag { id, diag });
+                        let pdiag = pdiag_rx
+                            .expect("stationary apply needs a P-diagonal channel")
+                            .recv()
+                            .expect("coordinator dropped mid-apply");
+                        apply_finish_stationary(sh, st, &xin, &pblocks, &pdiag)
+                    }
+                };
+                let _ = reply.send(ApplyMsg::Out { id, block });
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+/// The persistent worker threads, one per shard. Dropped = drained: a
+/// shutdown message per worker, then joined.
+struct ShardPool {
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    fn spawn(s: usize) -> Self {
+        let mut txs = Vec::with_capacity(s);
+        let mut handles = Vec::with_capacity(s);
+        for id in 0..s {
+            let (tx, rx) = channel();
+            let handle = std::thread::Builder::new()
+                .name(format!("gdkron-shard-{id}"))
+                .spawn(move || worker_loop(id, rx))
+                .expect("failed to spawn shard worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ShardPool { txs, handles }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Row-block sharded mirror of a [`GramFactors`]: persistent per-shard
+/// workers own the partitioned panels and serve
+/// [`ShardedGramFactors::apply_block_into`]; online deltas keep the shard
+/// state in lockstep with the authoritative factors (see the module docs).
+///
+/// With `shards == 1` the engine is a plain inline evaluator (no threads),
+/// and for every shard count the results are bit-identical to the
+/// single-shard [`super::GramOperator`] path — pinned by
+/// `tests/sharded_gram.rs`.
+pub struct ShardedGramFactors {
+    nshards: usize,
+    n: usize,
+    d: usize,
+    plan: Vec<(usize, usize)>,
+    shared: Arc<SharedPanels>,
+    /// Inline state when `nshards == 1` (no worker threads at all).
+    local: Option<ShardState>,
+    pool: Option<ShardPool>,
+}
+
+impl ShardedGramFactors {
+    /// Build the shard engine for `f`, spawning `nshards` persistent
+    /// workers (`nshards <= 1` runs inline on the caller's thread).
+    pub fn new(f: &GramFactors, nshards: usize) -> Self {
+        let nshards = nshards.clamp(1, MAX_SHARDS);
+        let pool = if nshards > 1 { Some(ShardPool::spawn(nshards)) } else { None };
+        let mut engine = ShardedGramFactors {
+            nshards,
+            n: 0,
+            d: 0,
+            plan: Vec::new(),
+            shared: SharedPanels::snapshot(f),
+            local: None,
+            pool,
+        };
+        engine.resync(f);
+        engine
+    }
+
+    /// Number of shards (1 = inline single-shard path).
+    pub fn shards(&self) -> usize {
+        self.nshards
+    }
+
+    /// Observations currently sharded.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Input dimension `D`.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The current row-block boundaries, one `(lo, hi)` per shard.
+    pub fn plan(&self) -> &[(usize, usize)] {
+        &self.plan
+    }
+
+    /// Owned panel memory per shard, in f64 counts: four `N×B` panel slices
+    /// plus the `B×D` input rows. Bounded by the serving window exactly
+    /// like [`GramFactors::memory_f64`], divided by the shard count. The
+    /// inline (single-shard) engine reports its actual buffers; pooled
+    /// shards report the identical closed form (their states live inside
+    /// the worker threads).
+    pub fn per_shard_memory_f64(&self) -> Vec<usize> {
+        if let Some(st) = &self.local {
+            return vec![st.memory_f64()];
+        }
+        self.plan
+            .iter()
+            .map(|&(lo, hi)| {
+                let b = hi - lo;
+                4 * self.n * b + b * self.d
+            })
+            .collect()
+    }
+
+    /// Rebuild every shard's row block (and the shared snapshot) from the
+    /// authoritative factors. Called after every delta, engine switch or
+    /// rollback; `O(N²/S + ND/S)` copies per shard, zero recomputation.
+    pub fn resync(&mut self, f: &GramFactors) {
+        self.n = f.n();
+        self.d = f.d();
+        self.plan = shard_plan(self.n, self.nshards);
+        self.shared = SharedPanels::snapshot(f);
+        match &self.pool {
+            Some(pool) => {
+                for (id, tx) in pool.txs.iter().enumerate() {
+                    let (lo, hi) = self.plan[id];
+                    tx.send(Job::Sync {
+                        shared: Arc::clone(&self.shared),
+                        state: build_state(f, lo, hi),
+                    })
+                    .expect("shard worker hung up");
+                }
+            }
+            None => {
+                let (lo, hi) = self.plan[0];
+                self.local = Some(build_state(f, lo, hi));
+            }
+        }
+    }
+
+    /// Append one observation to `f` *and* the shard state — the online
+    /// conditioning delta. The `O(ND)` cross-Gram border is computed by the
+    /// shard workers (`O(ND/S)` each, over their own observations); the
+    /// `O(N)` kernel evaluations happen exactly once on the coordinator —
+    /// the same count as a serial [`GramFactors::append`], pinned by the
+    /// counting-kernel test. Results are bit-identical to the serial path.
+    pub fn append(&mut self, f: &mut GramFactors, kernel: &dyn ScalarKernel, x_new: &[f64]) {
+        assert_eq!(f.n(), self.n, "shard engine out of sync with factors");
+        match &self.pool {
+            Some(pool) => {
+                let n = f.n();
+                let (xt_new, lam_new) = f.append_prelude(kernel, x_new);
+                let mut h_col = vec![0.0; n + 1];
+                let (tx, rx) = channel();
+                for wtx in &pool.txs {
+                    wtx.send(Job::HBorder { lam_new: lam_new.clone(), reply: tx.clone() })
+                        .expect("shard worker hung up");
+                }
+                drop(tx);
+                for _ in 0..pool.txs.len() {
+                    let (id, slice) = rx.recv().expect("shard worker died");
+                    let (lo, hi) = self.plan[id];
+                    h_col[lo..hi].copy_from_slice(&slice);
+                }
+                h_col[n] = h_border_corner(&xt_new, &lam_new);
+                f.apply_append_border(kernel, xt_new, lam_new, h_col);
+            }
+            None => f.append(kernel, x_new),
+        }
+        self.resync(f);
+    }
+
+    /// Drop the oldest observation from `f` and slide the shard boundaries
+    /// over the retained panels — zero kernel work, zero recomputation.
+    pub fn drop_first(&mut self, f: &mut GramFactors) {
+        assert_eq!(f.n(), self.n, "shard engine out of sync with factors");
+        f.drop_first();
+        self.resync(f);
+    }
+
+    /// `Y ← (∇K∇′) X` for stacked right-hand sides (`X`, `Y` both
+    /// `(N·D)×K`, each column one vec'd `D×N` RHS, flat index
+    /// `(a, i) ↦ a·D + i`). Shard-parallel; bit-identical to the serial
+    /// [`GramFactors::matvec_into`] per column.
+    pub fn apply_block_into(&self, x: &Mat, y: &mut Mat) {
+        let nd = self.n * self.d;
+        assert_eq!(x.rows(), nd, "block input dimension mismatch");
+        assert_eq!((y.rows(), y.cols()), (x.rows(), x.cols()));
+        if let Some(st) = &self.local {
+            let sh = &self.shared;
+            let block = match sh.class {
+                KernelClass::DotProduct => apply_dot(sh, st, x),
+                KernelClass::Stationary => {
+                    // single shard: the diag slice already is the full diag
+                    let (pblocks, diag) = apply_phase_p(sh, st, x);
+                    apply_finish_stationary(sh, st, x, &pblocks, &diag)
+                }
+            };
+            y.as_mut_slice().copy_from_slice(block.as_slice());
+            return;
+        }
+        let pool = self.pool.as_ref().expect("sharded pool");
+        let s = pool.txs.len();
+        let xin = Arc::new(x.clone());
+        let (reply_tx, reply_rx) = channel();
+        let stationary = self.shared.class == KernelClass::Stationary;
+        let mut diag_txs = Vec::with_capacity(if stationary { s } else { 0 });
+        for tx in &pool.txs {
+            let pdiag_rx = if stationary {
+                let (dtx, drx) = channel();
+                diag_txs.push(dtx);
+                Some(drx)
+            } else {
+                None
+            };
+            tx.send(Job::Apply { xin: Arc::clone(&xin), reply: reply_tx.clone(), pdiag_rx })
+                .expect("shard worker hung up");
+        }
+        drop(reply_tx);
+        if stationary {
+            // reduce the per-shard P-diagonal slices, then broadcast
+            let mut pdiag = Mat::zeros(self.n, x.cols());
+            for _ in 0..s {
+                match reply_rx.recv().expect("shard worker died") {
+                    ApplyMsg::Diag { id, diag } => {
+                        let (lo, hi) = self.plan[id];
+                        for k in 0..diag.cols() {
+                            pdiag.col_mut(k)[lo..hi].copy_from_slice(diag.col(k));
+                        }
+                    }
+                    ApplyMsg::Out { .. } => {
+                        unreachable!("shard sent output before the P-diagonal barrier")
+                    }
+                }
+            }
+            let pdiag = Arc::new(pdiag);
+            for dtx in &diag_txs {
+                dtx.send(Arc::clone(&pdiag)).expect("shard worker hung up");
+            }
+        }
+        // reduce the disjoint output row blocks
+        for _ in 0..s {
+            match reply_rx.recv().expect("shard worker died") {
+                ApplyMsg::Out { id, block } => {
+                    let (lo, hi) = self.plan[id];
+                    for k in 0..block.cols() {
+                        y.col_mut(k)[lo * self.d..hi * self.d].copy_from_slice(block.col(k));
+                    }
+                }
+                ApplyMsg::Diag { .. } => unreachable!("stray P-diagonal after the barrier"),
+            }
+        }
+    }
+
+    /// The sharded Gram matrix as an implicit [`LinearOp`] (same vec
+    /// ordering as [`super::GramOperator`]).
+    pub fn operator(&self) -> ShardedGramOperator<'_> {
+        ShardedGramOperator::new(self)
+    }
+}
+
+/// [`LinearOp`] adapter over [`ShardedGramFactors`] — the drop-in
+/// replacement for [`super::GramOperator`] on the block-CG serving path.
+pub struct ShardedGramOperator<'a> {
+    engine: &'a ShardedGramFactors,
+    ws: std::cell::RefCell<(Mat, Mat)>,
+}
+
+impl<'a> ShardedGramOperator<'a> {
+    pub fn new(engine: &'a ShardedGramFactors) -> Self {
+        let nd = engine.n * engine.d;
+        ShardedGramOperator {
+            engine,
+            ws: std::cell::RefCell::new((Mat::zeros(nd, 1), Mat::zeros(nd, 1))),
+        }
+    }
+}
+
+impl LinearOp for ShardedGramOperator<'_> {
+    fn dim(&self) -> usize {
+        self.engine.n * self.engine.d
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let mut guard = self.ws.borrow_mut();
+        let (vin, vout) = &mut *guard;
+        vin.as_mut_slice().copy_from_slice(x);
+        self.engine.apply_block_into(vin, vout);
+        y.copy_from_slice(vout.as_slice());
+    }
+
+    fn apply_block(&self, x: &Mat, y: &mut Mat) {
+        self.engine.apply_block_into(x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::SquaredExponential;
+    use crate::rng::Rng;
+
+    #[test]
+    fn plan_is_balanced_disjoint_and_covering() {
+        for n in [0, 1, 3, 8, 17] {
+            for s in [1, 2, 3, 7] {
+                let plan = shard_plan(n, s);
+                assert_eq!(plan.len(), s);
+                let mut expect_lo = 0;
+                for &(lo, hi) in &plan {
+                    assert_eq!(lo, expect_lo, "contiguous blocks");
+                    assert!(hi >= lo);
+                    expect_lo = hi;
+                }
+                assert_eq!(expect_lo, n, "plan must cover 0..n");
+                let sizes: Vec<usize> = plan.iter().map(|&(lo, hi)| hi - lo).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "balanced within one row: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn knob_parses_and_clamps() {
+        assert_eq!(parse_shards("4"), Some(4));
+        assert_eq!(parse_shards(" 2 "), Some(2));
+        assert_eq!(parse_shards("0"), Some(1));
+        assert_eq!(parse_shards("100000"), Some(MAX_SHARDS));
+        assert_eq!(parse_shards("zonk"), None);
+    }
+
+    #[test]
+    fn per_shard_memory_formula_matches_actual_panels() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(4, 5, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.6), None);
+        let inline = ShardedGramFactors::new(&f, 1);
+        // closed form (pooled shards) == actual buffers (inline shard)
+        assert_eq!(inline.per_shard_memory_f64(), vec![4 * 5 * 5 + 5 * 4]);
+    }
+
+    #[test]
+    fn empty_shards_are_harmless() {
+        // more shards than observations: trailing shards own nothing
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(5, 2, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.7), None);
+        let engine = ShardedGramFactors::new(&f, 7);
+        assert_eq!(engine.plan().len(), 7);
+        let xin = Mat::from_fn(10, 2, |_, _| rng.gauss());
+        let mut y = Mat::zeros(10, 2);
+        engine.apply_block_into(&xin, &mut y);
+        let mut want = Mat::zeros(10, 2);
+        let op = super::super::GramOperator::new(&f);
+        op.apply_block(&xin, &mut want);
+        assert!((&y - &want).max_abs() == 0.0, "empty shards must not disturb bit-identity");
+    }
+}

@@ -151,7 +151,7 @@ impl WoodburySolver {
             }
         }
         let core_lu = Lu::factor(&core).map_err(|e| {
-            anyhow::anyhow!("Woodbury core singular ({e}); the decomposition inverse does not exist")
+            anyhow::anyhow!("Woodbury core singular ({e}): the inverse does not exist")
         })?;
         Ok(WoodburySolver { class: f.class, kinv, kp_lu: None, core_lu, pinned, n })
     }
@@ -302,7 +302,15 @@ mod tests {
         let c = vec![0.3, -0.2, 0.5, 0.1, -0.4, 0.2];
         check_solve(&ExponentialKernel, Metric::Iso(0.15), Some(&c), 6, 3, 6, 1e-7);
         check_solve(&ExponentialKernel, Metric::Iso(0.2), None, 7, 4, 61, 1e-7);
-        check_solve(&crate::kernels::PolynomialKernel::new(3), Metric::Iso(0.3), Some(&c), 6, 3, 62, 1e-6);
+        check_solve(
+            &crate::kernels::PolynomialKernel::new(3),
+            Metric::Iso(0.3),
+            Some(&c),
+            6,
+            3,
+            62,
+            1e-6,
+        );
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //!
 //! ## Parallel batched execution
 //!
-//! Throughput under multi-user traffic comes from two batched layers:
+//! Throughput under multi-user traffic comes from three batched layers:
 //!
 //! * **[`linalg::par`]** — a dependency-free scoped-thread worker pool with
 //!   column-blocked parallel products (`matmul_into`, `matmul_acc`,
@@ -59,6 +59,20 @@
 //!   independent CG runs. Batched prediction ([`gp`]) and the coordinator's
 //!   micro-batched serving path ride on it via
 //!   `GradientGp::solve_rhs_block`.
+//! * **[`gram::ShardedGramFactors`]** — the Gram operator itself sharded
+//!   into row blocks owned by *persistent* per-shard workers
+//!   ([`gram::sharded`]): `apply_block` fans the serving batch out
+//!   shard-locally and reduces the disjoint output blocks — bit-identical
+//!   to the single-shard path for every shard count. Knob precedence:
+//!   `--shards N` on the CLI beats `GDKRON_SHARDS` beats `gram.shards` in
+//!   a config file ([`config::resolve_shards`]); `1` (default) is the
+//!   single-shard path with no worker threads. The shard boundaries
+//!   *follow the serving window*: every online `append`/`drop_first` delta
+//!   re-plans them over the retained panels (no recomputation, `O(N)`
+//!   kernel evaluations per append — same as the serial path), so
+//!   `gp.window` bounds per-shard memory exactly as it bounds the global
+//!   panels. Pinned by `tests/sharded_gram.rs` and
+//!   `benches/shard_scaling.rs` (`cargo bench --bench shard_scaling`).
 //!
 //! ## Architecture
 //!

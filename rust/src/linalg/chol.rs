@@ -69,7 +69,10 @@ impl Cholesky {
     /// Factor with a diagonal jitter fallback: tries `A`, then
     /// `A + jitter·scale·I` with geometrically growing jitter. Used by the GP
     /// layer where round-off can push tiny eigenvalues slightly negative.
-    pub fn factor_with_jitter(a: &Mat, max_tries: usize) -> Result<(Self, f64), NotPositiveDefinite> {
+    pub fn factor_with_jitter(
+        a: &Mat,
+        max_tries: usize,
+    ) -> Result<(Self, f64), NotPositiveDefinite> {
         match Self::factor(a) {
             Ok(c) => return Ok((c, 0.0)),
             Err(e) if max_tries == 0 => return Err(e),

@@ -403,11 +403,25 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// independent FMA chains to keep the vector units busy (§Perf: this alone
 /// is ~1.6× on the Fig. 4 matvec).
 pub(crate) fn matmul_acc_col(a: &Mat, bcol: &[f64], ocol: &mut [f64]) {
-    let m = a.rows;
-    debug_assert_eq!(bcol.len(), a.cols);
+    matmul_acc_col_slice(&a.data, a.rows, a.cols, bcol, ocol);
+}
+
+/// Slice-level core of [`matmul_acc_col`]: `a` is a column-major `m×kcols`
+/// buffer. Exposed (crate-wide) so the sharded Gram engine can run the
+/// *identical* accumulation on borrowed panel slices — bit-identical results
+/// across shard counts depend on every path using this one kernel.
+pub(crate) fn matmul_acc_col_slice(
+    a: &[f64],
+    m: usize,
+    kcols: usize,
+    bcol: &[f64],
+    ocol: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), m * kcols);
+    debug_assert_eq!(bcol.len(), kcols);
     debug_assert_eq!(ocol.len(), m);
     let mut k = 0;
-    while k + 4 <= a.cols {
+    while k + 4 <= kcols {
         let b0 = bcol[k];
         let b1 = bcol[k + 1];
         let b2 = bcol[k + 2];
@@ -416,7 +430,7 @@ pub(crate) fn matmul_acc_col(a: &Mat, bcol: &[f64], ocol: &mut [f64]) {
             k += 4;
             continue;
         }
-        let (a0, rest) = a.data[k * m..].split_at(m);
+        let (a0, rest) = a[k * m..].split_at(m);
         let (a1, rest) = rest.split_at(m);
         let (a2, rest) = rest.split_at(m);
         let a3 = &rest[..m];
@@ -425,10 +439,10 @@ pub(crate) fn matmul_acc_col(a: &Mat, bcol: &[f64], ocol: &mut [f64]) {
         }
         k += 4;
     }
-    while k < a.cols {
+    while k < kcols {
         let bkj = bcol[k];
         if bkj != 0.0 {
-            let acol = &a.data[k * m..(k + 1) * m];
+            let acol = &a[k * m..(k + 1) * m];
             for i in 0..m {
                 ocol[i] += acol[i] * bkj;
             }
@@ -614,7 +628,8 @@ mod tests {
         let x = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
         let lhs = a.kron(&b).matvec(x.as_slice());
         let rhs = b.matmul(&x).matmul_t(&a);
-        let diff: f64 = lhs.iter().zip(rhs.as_slice()).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        let diff: f64 =
+            lhs.iter().zip(rhs.as_slice()).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
         assert!(diff < 1e-12);
     }
 

@@ -25,6 +25,10 @@ pub use chol::Cholesky;
 pub use eig::sym_eig;
 pub use lu::Lu;
 pub use mat::Mat;
+// Per-column product kernels, shared (crate-wide) with the sharded Gram
+// engine: bit-identity across shard counts requires every path to run the
+// exact same per-column arithmetic.
+pub(crate) use mat::{dot as slice_dot, matmul_acc_col_slice};
 pub use qr::{householder_qr, random_orthogonal};
 pub use update::{bordered_inverse_append, bordered_inverse_drop_first};
 

@@ -103,6 +103,19 @@ fn apply_threads(opts: &Opts) {
     }
 }
 
+/// Apply the Gram shard knob: `--shards` flag beats `GDKRON_SHARDS` beats
+/// `gram.shards` in the config; absent everywhere, `1` = the single-shard
+/// path (no worker threads). The flag installs a process-wide override
+/// ([`gdkron::gram::sharded::set_global_shards`]) that
+/// [`gdkron::config::resolve_shards`] — and through it every
+/// `NativeEngine::from_config` — respects.
+fn apply_shards(opts: &Opts) {
+    let flag = opts.flags.get("shards").and_then(|v| gdkron::gram::sharded::parse_shards(v));
+    if let Some(n) = flag {
+        gdkron::gram::sharded::set_global_shards(n);
+    }
+}
+
 fn dispatch(args: &[String]) -> anyhow::Result<()> {
     match args.first().map(String::as_str) {
         Some("exp") => {
@@ -111,6 +124,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             })?;
             let opts = Opts { flags: parse_flags(&args[2..])?, config: Config::default() };
             apply_threads(&opts);
+            apply_shards(&opts);
             run_experiment(id, &opts)
         }
         Some("run") => {
@@ -124,6 +138,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                 .to_string();
             let opts = Opts { flags: parse_flags(&args[2..])?, config };
             apply_threads(&opts);
+            apply_shards(&opts);
             run_experiment(&id, &opts)
         }
         Some("artifacts") => {
@@ -159,7 +174,9 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  gdkron run <config.toml> [--key value …]\n  gdkron artifacts [--dir DIR]\n  \
                  gdkron validate [--dir DIR]\n\
                  linalg worker pool: --threads N > GDKRON_THREADS > runtime.threads \
-                 (1 = serial)"
+                 (1 = serial)\n\
+                 gram shard workers: --shards N > GDKRON_SHARDS > gram.shards \
+                 (1 = single shard)"
             );
             Ok(())
         }

@@ -35,7 +35,13 @@ impl Quadratic {
     /// The App. F.1 synthetic problem: eigenvalues
     /// `λ_i = λmin + (λmax−λmin)/(D−1) · ρ^{D−i} · (D−i)`, random orthogonal
     /// eigenbasis, `x₀ ∼ N(0, 5²I)`, `x⋆ ∼ N(−2·1, I)`.
-    pub fn paper_f1(d: usize, lambda_min: f64, lambda_max: f64, rho: f64, rng: &mut Rng) -> (Self, Vec<f64>) {
+    pub fn paper_f1(
+        d: usize,
+        lambda_min: f64,
+        lambda_max: f64,
+        rho: f64,
+        rng: &mut Rng,
+    ) -> (Self, Vec<f64>) {
         let spec = Self::paper_f1_spectrum(d, lambda_min, lambda_max, rho);
         let q = random_orthogonal(d, rng);
         let a = q.matmul(&Mat::diag(&spec)).matmul_t(&q);

@@ -17,7 +17,9 @@ use std::sync::Arc;
 
 use gdkron::gp::{FitMethod, FitOptions, FitReport, GradientGp, GradientModel, OnlineGradientGp};
 use gdkron::gram::Metric;
-use gdkron::kernels::{AnalyticPath, KernelClass, Matern52, Poly2Kernel, ScalarKernel, SquaredExponential};
+use gdkron::kernels::{
+    AnalyticPath, KernelClass, Matern52, Poly2Kernel, ScalarKernel, SquaredExponential,
+};
 use gdkron::linalg::Mat;
 use gdkron::rng::Rng;
 use gdkron::solvers::CgOptions;

@@ -108,7 +108,8 @@ fn property_gp_interpolates_observations() {
         let metric = random_metric(&mut rng, d);
         let x = Mat::from_fn(d, n, |_, _| rng.gauss());
         let g = Mat::from_fn(d, n, |_, _| rng.gauss());
-        let Ok(gp) = GradientGp::fit(kern.clone(), metric, &x.scale(0.6), &g, &FitOptions::default())
+        let Ok(gp) =
+            GradientGp::fit(kern.clone(), metric, &x.scale(0.6), &g, &FitOptions::default())
         else {
             continue;
         };

@@ -1,0 +1,382 @@
+//! Integration suite for the sharded Gram operator.
+//!
+//! Pins the PR-level acceptance criteria:
+//! * **bit-identity**: sharded `apply_block` (and single-vector `apply`)
+//!   equals the single-shard [`GramOperator`] path *exactly* — zero ulps —
+//!   across shard counts {1, 2, 3, 7}, for SE / Matérn-5/2 / poly(2)
+//!   kernels, including after online `append`/`drop_first` sequences;
+//! * **delta cost**: a sharded `append` performs exactly the same `O(N)`
+//!   kernel evaluations as a serial [`GramFactors::append`] (counting
+//!   kernel) — shards never re-evaluate retained entries — and `drop_first`
+//!   performs none;
+//! * **window invariant**: shard boundaries follow the sliding window, and
+//!   per-shard panel memory stays bounded by the window size;
+//! * the online engine with `set_shards(S)` streams bit-identically to the
+//!   unsharded engine and keeps the rollback guarantee.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use gdkron::gp::{FitMethod, FitOptions, OnlineGradientGp};
+use gdkron::gram::{GramFactors, GramOperator, Metric, ShardedGramFactors};
+use gdkron::kernels::{
+    AnalyticPath, KernelClass, Matern52, Poly2Kernel, ScalarKernel, SquaredExponential,
+};
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::{CgOptions, LinearOp};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// Wrapper kernel that counts every scalar-derivative evaluation.
+struct CountingKernel<K: ScalarKernel> {
+    inner: K,
+    calls: Arc<AtomicUsize>,
+}
+
+impl<K: ScalarKernel> CountingKernel<K> {
+    fn new(inner: K) -> Self {
+        CountingKernel { inner, calls: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+impl<K: ScalarKernel> ScalarKernel for CountingKernel<K> {
+    fn class(&self) -> KernelClass {
+        self.inner.class()
+    }
+    fn k(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.k(r)
+    }
+    fn dk(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.dk(r)
+    }
+    fn d2k(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.d2k(r)
+    }
+    fn d3k(&self, r: f64) -> f64 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.d3k(r)
+    }
+    fn name(&self) -> &'static str {
+        "counting-wrapper"
+    }
+    fn analytic_path(&self) -> AnalyticPath {
+        self.inner.analytic_path()
+    }
+}
+
+fn sample(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gauss())
+}
+
+/// The kernel/metric/center matrix the whole suite sweeps.
+fn cases() -> Vec<(Box<dyn ScalarKernel>, Metric, Option<Vec<f64>>, &'static str)> {
+    let d = 6;
+    let c: Vec<f64> = (0..d).map(|i| 0.1 * (i as f64) - 0.2).collect();
+    vec![
+        (Box::new(SquaredExponential), Metric::Iso(0.6), None, "se-iso"),
+        (
+            Box::new(SquaredExponential),
+            Metric::Diag(vec![0.5, 1.0, 2.0, 0.3, 1.5, 0.9]),
+            None,
+            "se-diag",
+        ),
+        (Box::new(Matern52), Metric::Iso(0.8), None, "matern52"),
+        (Box::new(Poly2Kernel), Metric::Iso(0.9), Some(c), "poly2"),
+    ]
+}
+
+fn assert_bitwise_eq(got: &Mat, want: &Mat, what: &str) {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{what}: shape");
+    assert!(
+        (got - want).max_abs() == 0.0,
+        "{what}: sharded result differs from the single-shard path"
+    );
+}
+
+#[test]
+fn apply_block_bit_identical_across_shard_counts() {
+    for (kern, metric, center, label) in cases() {
+        let x = sample(6, 5, 11);
+        let f = GramFactors::new(kern.as_ref(), &x, metric, center.as_deref());
+        let nd = f.n() * f.d();
+        let stacked = sample(nd, 3, 12);
+        let mut want = Mat::zeros(nd, 3);
+        GramOperator::new(&f).apply_block(&stacked, &mut want);
+        for s in SHARD_COUNTS {
+            let engine = ShardedGramFactors::new(&f, s);
+            assert_eq!(engine.shards(), s);
+            let mut got = Mat::zeros(nd, 3);
+            engine.apply_block_into(&stacked, &mut got);
+            assert_bitwise_eq(&got, &want, &format!("{label} S={s} apply_block"));
+
+            // single-vector apply through the LinearOp surface
+            let op = engine.operator();
+            let mut y = vec![0.0; nd];
+            op.apply(stacked.col(0), &mut y);
+            let mut yref = vec![0.0; nd];
+            GramOperator::new(&f).apply(stacked.col(0), &mut yref);
+            assert_eq!(y, yref, "{label} S={s}: apply must be bit-identical");
+        }
+    }
+}
+
+fn assert_factors_bitwise(a: &GramFactors, b: &GramFactors, what: &str) {
+    assert_eq!(a.n(), b.n(), "{what}: N");
+    for (pa, pb, name) in [
+        (&a.xt, &b.xt, "xt"),
+        (&a.lam_xt, &b.lam_xt, "lam_xt"),
+        (&a.lam_xt_t, &b.lam_xt_t, "lam_xt_t"),
+        (&a.r, &b.r, "r"),
+        (&a.h, &b.h, "h"),
+        (&a.kp_eff, &b.kp_eff, "kp_eff"),
+        (&a.kpp_eff, &b.kpp_eff, "kpp_eff"),
+    ] {
+        assert!((pa - pb).max_abs() == 0.0, "{what}: panel {name} diverged");
+    }
+}
+
+#[test]
+fn bit_identity_survives_online_append_drop_sequences() {
+    // sharded append/drop must evolve the panels exactly like the serial
+    // path, and the sharded apply must stay exactly equal throughout
+    for (kern, metric, center, label) in cases() {
+        let x = sample(6, 8, 21);
+        let seed_x = x.block(0, 0, 6, 3);
+        let serial = {
+            let mut f = GramFactors::new(kern.as_ref(), &seed_x, metric.clone(), center.as_deref());
+            // append ×3, drop ×2, append ×2 — mixed growth and window slides
+            for j in 3..6 {
+                f.append(kern.as_ref(), x.col(j));
+            }
+            f.drop_first();
+            f.drop_first();
+            for j in 6..8 {
+                f.append(kern.as_ref(), x.col(j));
+            }
+            f
+        };
+        for s in SHARD_COUNTS {
+            let mut f = GramFactors::new(kern.as_ref(), &seed_x, metric.clone(), center.as_deref());
+            let mut engine = ShardedGramFactors::new(&f, s);
+            for j in 3..6 {
+                engine.append(&mut f, kern.as_ref(), x.col(j));
+            }
+            engine.drop_first(&mut f);
+            engine.drop_first(&mut f);
+            for j in 6..8 {
+                engine.append(&mut f, kern.as_ref(), x.col(j));
+            }
+            assert_factors_bitwise(&f, &serial, &format!("{label} S={s}"));
+
+            let nd = f.n() * f.d();
+            let stacked = sample(nd, 2, 22);
+            let mut want = Mat::zeros(nd, 2);
+            GramOperator::new(&serial).apply_block(&stacked, &mut want);
+            let mut got = Mat::zeros(nd, 2);
+            engine.apply_block_into(&stacked, &mut got);
+            assert_bitwise_eq(&got, &want, &format!("{label} S={s} post-delta apply_block"));
+        }
+    }
+}
+
+#[test]
+fn sharded_append_kernel_evals_match_serial_and_stay_linear() {
+    // O(ND/S + N) per shard means above all: NO kernel re-evaluation in the
+    // shards. A sharded append must cost exactly the serial border — 2(N+1)
+    // scalar-derivative evaluations (dk + d2k per border entry) — and a
+    // drop_first must cost zero, independent of the shard count.
+    let (d, n) = (16, 9);
+    let x = sample(d, n + 4, 31);
+    let seed_x = x.block(0, 0, d, n);
+
+    let serial_cost = {
+        let counting = CountingKernel::new(SquaredExponential);
+        let calls = counting.calls.clone();
+        let mut f = GramFactors::new(&counting, &seed_x, Metric::Iso(0.4), None);
+        calls.store(0, Ordering::Relaxed);
+        f.append(&counting, x.col(n));
+        calls.load(Ordering::Relaxed)
+    };
+    assert_eq!(serial_cost, 2 * (n + 1), "serial append border must be O(N) evaluations");
+
+    for s in [2, 3, 7] {
+        let counting = CountingKernel::new(SquaredExponential);
+        let calls = counting.calls.clone();
+        let mut f = GramFactors::new(&counting, &seed_x, Metric::Iso(0.4), None);
+        let mut engine = ShardedGramFactors::new(&f, s);
+        calls.store(0, Ordering::Relaxed);
+        engine.append(&mut f, &counting, x.col(n));
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            serial_cost,
+            "S={s}: sharded append must not re-evaluate the kernel anywhere"
+        );
+        calls.store(0, Ordering::Relaxed);
+        engine.drop_first(&mut f);
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            0,
+            "S={s}: drop_first slides boundaries without any kernel work"
+        );
+    }
+}
+
+#[test]
+fn window_bounds_per_shard_memory_and_boundaries_slide() {
+    let (d, w, s) = (12, 6, 3);
+    let x = sample(d, w + 8, 41);
+    let mut f =
+        GramFactors::new(&SquaredExponential, &x.block(0, 0, d, w), Metric::Iso(0.5), None);
+    let mut engine = ShardedGramFactors::new(&f, s);
+    // the per-shard bound implied by the window: ceil(W+1 / S) rows of the
+    // four N×B panel slices plus the B×D input rows (the +1 is the
+    // append-before-drop transient)
+    let bmax = (w + 1).div_ceil(s);
+    let bound = 4 * (w + 1) * bmax + bmax * d;
+    for j in w..w + 8 {
+        engine.append(&mut f, &SquaredExponential, x.col(j));
+        engine.drop_first(&mut f);
+        assert_eq!(engine.n(), w, "window size drifted");
+        let per_shard = engine.per_shard_memory_f64();
+        assert_eq!(per_shard.len(), s);
+        for (i, &m) in per_shard.iter().enumerate() {
+            assert!(m <= bound, "shard {i}: {m} f64s exceeds the window bound {bound}");
+        }
+        // boundaries cover the window exactly, contiguously
+        let plan = engine.plan();
+        assert_eq!(plan.first().unwrap().0, 0);
+        assert_eq!(plan.last().unwrap().1, w);
+        for pair in plan.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0, "shard boundaries must tile the window");
+        }
+    }
+}
+
+#[test]
+fn online_iterative_sharded_streams_bit_identical() {
+    // the full serving stack: streamed observes + window slides through the
+    // iterative engine, sharded vs unsharded — identical to the last bit
+    let (d, w) = (10, 6);
+    let x = sample(d, w + 5, 51);
+    let g = sample(d, w + 5, 52);
+    let opts = FitOptions {
+        method: FitMethod::Iterative(CgOptions {
+            rtol: 1e-10,
+            max_iters: 20_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let fit = |shards: usize| {
+        let mut online = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x.block(0, 0, d, w),
+            &g.block(0, 0, d, w),
+            &opts,
+        )
+        .expect("initial fit");
+        online.set_shards(shards);
+        for j in w..w + 5 {
+            online.observe(x.col(j), g.col(j)).expect("observe");
+            online.drop_first().expect("drop");
+        }
+        assert_eq!(online.cold_refits(), 1, "steady state must not cold-refit");
+        online
+    };
+    let plain = fit(1);
+    for s in [2, 3] {
+        let sharded = fit(s);
+        assert_eq!(sharded.shards(), s);
+        assert_bitwise_eq(
+            sharded.gp().z(),
+            plain.gp().z(),
+            &format!("S={s} representer weights"),
+        );
+        let xq = sample(d, 1, 53);
+        let ps = sharded.gp().predict_gradient(xq.col(0));
+        let pp = plain.gp().predict_gradient(xq.col(0));
+        assert_eq!(ps, pp, "S={s}: sharded predictions must be bit-identical");
+    }
+}
+
+#[test]
+fn sharded_engine_keeps_rollback_guarantee() {
+    // a degenerate streamed observation must roll back without desyncing
+    // the shard state — the engine keeps serving and accepting updates
+    let (d, n) = (8, 4);
+    let x = sample(d, n, 61);
+    let g = sample(d, n, 62);
+    let mut online = OnlineGradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.5),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .expect("fit");
+    online.set_shards(3);
+    let xq: Vec<f64> = (0..d).map(|i| 0.1 * i as f64).collect();
+    let before = online.gp().predict_gradient(&xq);
+    let dup = x.col(0).to_vec();
+    let gd = g.col(0).to_vec();
+    assert!(online.observe(&dup, &gd).is_err(), "duplicate must be rejected");
+    assert_eq!(online.n(), n, "failed observe must not change N");
+    let after = online.gp().predict_gradient(&xq);
+    assert_eq!(before, after, "rollback must restore the posterior exactly");
+    // shard state still serves and follows further deltas
+    let mut rng = Rng::new(63);
+    let xn = rng.gauss_vec(d);
+    let gn = rng.gauss_vec(d);
+    online.observe(&xn, &gn).expect("valid observe after rollback");
+    assert_eq!(online.n(), n + 1);
+    let probe = online.gp().predict_gradient(&xq);
+    assert!(probe.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn exact_engine_from_panels_consistent_under_sharded_deltas() {
+    // the exact (Woodbury) serving path reads the retained H panel; sharded
+    // appends must leave it exactly what from_panels expects
+    let (d, w) = (7, 5);
+    let x = sample(d, w + 3, 71);
+    let g = sample(d, w + 3, 72);
+    let mut online = OnlineGradientGp::fit(
+        Arc::new(Matern52),
+        Metric::Iso(0.6),
+        &x.block(0, 0, d, w),
+        &g.block(0, 0, d, w),
+        &FitOptions { method: FitMethod::Exact, ..Default::default() },
+    )
+    .expect("fit");
+    online.set_shards(2);
+    for j in w..w + 3 {
+        online.observe(x.col(j), g.col(j)).expect("observe");
+        online.drop_first().expect("drop");
+    }
+    assert_eq!(online.cold_refits(), 1);
+    let cold = gdkron::gp::GradientGp::fit(
+        Arc::new(Matern52),
+        Metric::Iso(0.6),
+        &x.block(0, 3, d, w),
+        &g.block(0, 3, d, w),
+        &FitOptions { method: FitMethod::Exact, ..Default::default() },
+    )
+    .expect("cold fit");
+    let xq: Vec<f64> = (0..d).map(|i| 0.3 - 0.1 * i as f64).collect();
+    let po = online.gp().predict_gradient(&xq);
+    let pc = cold.predict_gradient(&xq);
+    for i in 0..d {
+        assert!(
+            (po[i] - pc[i]).abs() < 1e-8 * (1.0 + pc[i].abs()),
+            "dim {i}: {} vs {}",
+            po[i],
+            pc[i]
+        );
+    }
+}
