@@ -1,0 +1,110 @@
+//! Bench: loopback-TCP remote shards vs the in-process transports.
+//!
+//! Quantifies the wire cost of taking the shard protocol cross-node: the
+//! same serving-batch `apply_block` (D=256, N=8, K=8 — the block-CG
+//! serving shape) through (a) the single-shard operator, (b) in-process
+//! channel shards and (c) loopback `gdkron shard-worker` TCP shards. On
+//! loopback the TCP path pays serialization + two socket round trips per
+//! apply; the bench prints the absolute cost per application so the
+//! break-even compute-per-byte for a real network can be read off.
+//!
+//! Bit-identity across all three transports is asserted on every run —
+//! that is the acceptance invariant, timing is informational (loopback
+//! latency is not a speedup claim).
+//!
+//! ```bash
+//! cargo bench --bench remote_transport            # timing table
+//! cargo bench --bench remote_transport -- --test  # CI smoke (small sizes,
+//!                                                 # bit-identity only)
+//! ```
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use gdkron::gram::{remote, GramFactors, GramOperator, Metric, ShardedGramFactors};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::LinearOp;
+
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = remote::serve(listener);
+    });
+    addr
+}
+
+fn fmt(d: Duration) -> String {
+    format!("{:8.3} ms", d.as_secs_f64() * 1e3)
+}
+
+fn time_block(op: &dyn LinearOp, x: &Mat, y: &mut Mat, reps: usize) -> Duration {
+    op.apply_block(x, y); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        op.apply_block(x, y);
+    }
+    t0.elapsed()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let (d, n, k, reps) = if smoke { (32, 6, 3, 5) } else { (256, 8, 8, 200) };
+
+    let mut rng = Rng::new(7);
+    let x = Mat::from_fn(d, n, |_, _| rng.uniform_in(-2.0, 2.0));
+    let f = GramFactors::with_noise(
+        &SquaredExponential,
+        &x,
+        Metric::Iso(1.0 / (0.4 * d as f64)),
+        None,
+        1e-6,
+    );
+    let nd = d * n;
+    let stacked = Mat::from_fn(nd, k, |_, _| rng.gauss());
+    let mut want = Mat::zeros(nd, k);
+
+    println!("# remote_transport — loopback TCP shards vs in-process (D={d} N={n} K={k})");
+    let single = GramOperator::new(&f);
+    let dt_single = time_block(&single, &stacked, &mut want, reps);
+    println!("single-shard            {}", fmt(dt_single));
+
+    for s in [2usize] {
+        let engine = ShardedGramFactors::new(&f, s);
+        let op = engine.operator();
+        let mut got = Mat::zeros(nd, k);
+        let dt = time_block(&op, &stacked, &mut got, reps);
+        assert!(
+            (&got - &want).max_abs() == 0.0,
+            "in-process S={s}: apply_block is not bit-identical"
+        );
+        println!("in-process {s} shards     {}", fmt(dt));
+    }
+
+    for s in [2usize] {
+        let addrs: Vec<String> = (0..s).map(|_| spawn_worker()).collect();
+        let engine = ShardedGramFactors::connect_remote(&f, &addrs, Duration::from_secs(10))
+            .expect("connect loopback workers");
+        let op = engine.operator();
+        let mut got = Mat::zeros(nd, k);
+        let dt = time_block(&op, &stacked, &mut got, reps);
+        assert!(
+            engine.degraded_reason().is_none(),
+            "loopback transport degraded: {:?}",
+            engine.degraded_reason()
+        );
+        assert!(
+            (&got - &want).max_abs() == 0.0,
+            "loopback S={s}: remote apply_block is not bit-identical"
+        );
+        let per_apply = dt.as_secs_f64() / reps as f64;
+        println!(
+            "loopback-TCP {s} shards   {} | {:7.1} µs/apply (wire cost incl.)",
+            fmt(dt),
+            per_apply * 1e6
+        );
+    }
+    println!("remote_transport OK — all transports bit-identical");
+}

@@ -192,6 +192,52 @@ pub fn resolve_shards(config: &Config) -> usize {
     )
 }
 
+/// Resolve the **remote** shard worker addresses for the cross-node Gram
+/// transport ([`crate::gram::remote`]).
+///
+/// Priority: the `GDKRON_REMOTE_SHARDS` environment variable (comma-
+/// separated `host:port` list), then the `gram.remote_shards` config key (a
+/// string array); absent or empty everywhere, an empty list — the
+/// in-process transport, resolved separately by [`resolve_shards`]. A
+/// non-empty remote list *wins over* the in-process shard count in
+/// `NativeEngine::from_config`; if connecting fails there, the engine
+/// falls back to in-process sharding with a logged warning.
+pub fn resolve_remote_shards(config: &Config) -> Vec<String> {
+    resolve_remote_shards_from(config, std::env::var("GDKRON_REMOTE_SHARDS").ok().as_deref())
+}
+
+/// Pure core of [`resolve_remote_shards`] (env value injected for
+/// testability).
+fn resolve_remote_shards_from(config: &Config, env_val: Option<&str>) -> Vec<String> {
+    if let Some(v) = env_val {
+        let addrs = crate::gram::remote::parse_remote_shards(v);
+        if !addrs.is_empty() {
+            return addrs;
+        }
+    }
+    match config.str_array("gram.remote_shards") {
+        Some(list) => list
+            .iter()
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .take(crate::gram::sharded::MAX_SHARDS)
+            .map(str::to_string)
+            .collect(),
+        None => Vec::new(),
+    }
+}
+
+/// The socket timeout bounding every remote-shard connect/read/write
+/// (`gram.remote_timeout_ms`, default 5000 ms). This is the "frame
+/// timeout": a dead or wedged worker surfaces as an error within it.
+pub fn remote_shard_timeout(config: &Config) -> std::time::Duration {
+    let ms = match config.int("gram.remote_timeout_ms") {
+        Some(n) if n > 0 => n as u64,
+        _ => 5_000,
+    };
+    std::time::Duration::from_millis(ms)
+}
+
 /// Pure core of [`resolve_shards`] (env/CLI values injected for
 /// testability).
 fn resolve_shards_from(config: &Config, env_val: Option<&str>, cli: Option<usize>) -> usize {
@@ -318,6 +364,41 @@ jitter = 1e-10
         assert_eq!(resolve_shards_from(&empty, None, None), 1);
         let invalid = Config::from_str("[gram]\nshards = -2\n").unwrap();
         assert_eq!(resolve_shards_from(&invalid, None, None), 1);
+    }
+
+    #[test]
+    fn remote_shards_resolution_order() {
+        let cfg = Config::from_str("[gram]\nremote_shards = [\"a:1\", \" b:2 \", \"\"]").unwrap();
+        // env beats config; both spellings trim and drop empties
+        assert_eq!(
+            resolve_remote_shards_from(&cfg, Some("x:9 , y:8")),
+            vec!["x:9".to_string(), "y:8".to_string()]
+        );
+        assert_eq!(
+            resolve_remote_shards_from(&cfg, None),
+            vec!["a:1".to_string(), "b:2".to_string()]
+        );
+        // an empty env value falls through to the config key
+        assert_eq!(
+            resolve_remote_shards_from(&cfg, Some("  ")),
+            vec!["a:1".to_string(), "b:2".to_string()]
+        );
+        // no knob anywhere → in-process transport
+        let empty = Config::from_str("").unwrap();
+        assert!(resolve_remote_shards_from(&empty, None).is_empty());
+        let explicit_empty = Config::from_str("[gram]\nremote_shards = []\n").unwrap();
+        assert!(resolve_remote_shards_from(&explicit_empty, None).is_empty());
+    }
+
+    #[test]
+    fn remote_timeout_defaults_and_reads() {
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(remote_shard_timeout(&empty).as_millis(), 5_000);
+        let cfg = Config::from_str("[gram]\nremote_timeout_ms = 250\n").unwrap();
+        assert_eq!(remote_shard_timeout(&cfg).as_millis(), 250);
+        // non-positive values fall back to the default
+        let bad = Config::from_str("[gram]\nremote_timeout_ms = 0\n").unwrap();
+        assert_eq!(remote_shard_timeout(&bad).as_millis(), 5_000);
     }
 
     #[test]

@@ -52,6 +52,19 @@ pub fn parse_str(s: &str) -> Result<BTreeMap<String, Value>, ParseError> {
             return Err(err(lineno, "empty key"));
         }
         validate_key(key, lineno)?;
+        // a dotted key inside a section silently flattened to
+        // `section.a.b`, shadowing what a `[section.a]` sub-section header
+        // expresses — reject it instead of guessing the intent
+        if !section.is_empty() && key.contains('.') {
+            return Err(err(
+                lineno,
+                format!(
+                    "dotted key {key:?} inside section [{section}]: \
+                     use a [{section}.{}] sub-section header instead",
+                    &key[..key.rfind('.').unwrap()]
+                ),
+            ));
+        }
         let value = parse_value(line[eq + 1..].trim(), lineno)?;
         let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
         if out.insert(full.clone(), value).is_some() {
@@ -61,14 +74,26 @@ pub fn parse_str(s: &str) -> Result<BTreeMap<String, Value>, ParseError> {
     Ok(out)
 }
 
-/// Strip a `#` comment, respecting string literals.
+/// Strip a `#` comment, respecting string literals — including `\"`
+/// escapes, which must not toggle the in-string state (a backslash-escaped
+/// quote previously flipped it, so a `#` *inside* the string was taken for
+/// a comment and the value was truncated).
 fn strip_comment(line: &str) -> &str {
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
-            _ => {}
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == '#' {
+            return &line[..i];
         }
     }
     line
@@ -208,6 +233,35 @@ mod tests {
     #[test]
     fn unterminated_section_rejected() {
         assert!(parse_str("[oops").is_err());
+    }
+
+    #[test]
+    fn dotted_key_inside_section_rejected_with_line_number() {
+        // `[gp]` + `a.b = 1` used to silently flatten to `gp.a.b`,
+        // shadowing what a `[gp.a]` sub-section header expresses
+        let e = parse_str("[gp]\na.b = 1\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.message.contains("dotted key"), "got: {}", e.message);
+        assert!(e.message.contains("[gp.a]"), "should name the sub-section: {}", e.message);
+        // the supported spellings keep working: sub-section headers …
+        let m = parse_str("[gp.a]\nb = 1\n").unwrap();
+        assert_eq!(m["gp.a.b"], Value::Int(1));
+        // … and top-level dotted keys (no enclosing section to shadow)
+        let m = parse_str("a.b = 1").unwrap();
+        assert_eq!(m["a.b"], Value::Int(1));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_untrack_strings() {
+        // `\"` must not toggle the in-string state: the `#` after it is
+        // still inside the literal, not a comment
+        let line = r#"s = "a\" # not-a-comment""#;
+        assert_eq!(strip_comment(line), line);
+        // … while a real comment after the closing quote still strips
+        let line2 = r#"s = "a\"b" # comment"#;
+        assert_eq!(strip_comment(line2).trim_end(), r#"s = "a\"b""#);
+        // and a lone backslash outside a string changes nothing
+        assert_eq!(strip_comment("x = 1 # c"), "x = 1 ");
     }
 
     #[test]

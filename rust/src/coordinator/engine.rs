@@ -54,19 +54,36 @@ impl NativeEngine {
 
     /// Configure from config keys: `gp.online` (bool, default `true`;
     /// `false` forces the cold-refit A/B path), `gp.window` (int ≥ 0,
-    /// default 0 = unbounded) and `gram.shards` (via
+    /// default 0 = unbounded), `gram.shards` (via
     /// [`crate::config::resolve_shards`]: `--shards` CLI override beats
-    /// `GDKRON_SHARDS` beats the config key; default 1 = single-shard).
-    /// The shard boundaries follow the serving window: every streamed
-    /// `observe` slides them with the panels, and `gp.window` bounds the
-    /// per-shard memory.
+    /// `GDKRON_SHARDS` beats the config key; default 1 = single-shard) and
+    /// `gram.remote_shards` (via
+    /// [`crate::config::resolve_remote_shards`]: `GDKRON_REMOTE_SHARDS`
+    /// beats the config key). A non-empty remote list takes the shard
+    /// transport cross-node — one `gdkron shard-worker` per address, socket
+    /// operations bounded by `gram.remote_timeout_ms` — and **wins over**
+    /// the in-process shard count; if connecting fails, the engine logs the
+    /// reason and falls back to in-process sharding (serving never blocks
+    /// on an unreachable worker). The shard boundaries follow the serving
+    /// window either way: every streamed `observe` slides them with the
+    /// panels, and `gp.window` bounds the per-shard memory.
     pub fn from_config(gp: GradientGp, config: &Config) -> Self {
         let online = config.bool_or("gp.online", true);
         let window = config.int_or("gp.window", 0).max(0) as usize;
-        let shards = crate::config::resolve_shards(config);
         let mut engine = Self::with_window(gp, window);
         engine.gp.set_online(online);
-        engine.gp.set_shards(shards);
+        let remote = crate::config::resolve_remote_shards(config);
+        if !remote.is_empty() {
+            let timeout = crate::config::remote_shard_timeout(config);
+            match engine.gp.set_remote_shards(&remote, timeout) {
+                Ok(()) => return engine,
+                Err(e) => eprintln!(
+                    "gdkron: remote shards {remote:?} unavailable ({e}); \
+                     falling back to in-process sharding"
+                ),
+            }
+        }
+        engine.gp.set_shards(crate::config::resolve_shards(config));
         engine
     }
 

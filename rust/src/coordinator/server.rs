@@ -42,6 +42,12 @@ pub struct ServerMetrics {
     pub errors: usize,
     /// Observations streamed into the engine ([`SurrogateClient::observe`]).
     pub observes: usize,
+    /// Gradient queries that **silently degraded to a zero gradient** on
+    /// the [`GradientSource`] path (a failed prediction inside an HMC
+    /// trajectory is answered with `0` so the chain survives — the
+    /// Metropolis test still guards correctness — but a degraded
+    /// trajectory must be *visible*, not a diagnostic dead end).
+    pub degraded_queries: usize,
 }
 
 impl ServerMetrics {
@@ -68,7 +74,13 @@ pub struct SurrogateServer {
 pub struct SurrogateClient {
     tx: Sender<Msg>,
     dim: usize,
-    true_evals: usize,
+    /// Shared serving metrics (degraded queries are counted globally there
+    /// and per handle below).
+    metrics: Arc<Mutex<ServerMetrics>>,
+    /// Queries this handle answered with a degraded zero gradient.
+    degraded_queries: usize,
+    /// Log-once latch for the first degradation on this handle.
+    warned_degraded: bool,
 }
 
 impl SurrogateServer {
@@ -97,12 +109,18 @@ impl SurrogateServer {
             let dim = engine.dim();
             let batcher = Batcher::new(rx, policy);
             'serve: while let Some(msgs) = batcher.next_batch() {
-                let mut stop = false;
                 let mut pending: Vec<Request> = Vec::new();
                 // preserve arrival order: an observation acts as a barrier —
                 // requests queued before it are answered by the old state,
-                // requests after it see the updated surrogate.
-                for msg in msgs {
+                // requests after it see the updated surrogate. The shutdown
+                // sentinel is a barrier too: in-flight messages AHEAD of it
+                // are served, anything coalesced AFTER it in the same batch
+                // is failed — answering post-sentinel requests (or applying
+                // post-sentinel observations) would violate the documented
+                // shutdown contract.
+                let mut msgs = msgs.into_iter();
+                let mut stopped = false;
+                for msg in msgs.by_ref() {
                     match msg {
                         Msg::Req(r) => pending.push(r),
                         Msg::Observe(o) => {
@@ -117,11 +135,27 @@ impl SurrogateServer {
                             }
                             let _ = o.resp.send(res);
                         }
-                        Msg::Stop => stop = true,
+                        Msg::Stop => {
+                            stopped = true;
+                            break;
+                        }
                     }
                 }
                 serve_pending(engine.as_ref(), &mut pending, &metrics_w, dim);
-                if stop {
+                if stopped {
+                    for msg in msgs {
+                        match msg {
+                            Msg::Req(r) => {
+                                let _ =
+                                    r.resp.send(Err(anyhow::anyhow!("surrogate server stopped")));
+                            }
+                            Msg::Observe(o) => {
+                                let _ =
+                                    o.resp.send(Err(anyhow::anyhow!("surrogate server stopped")));
+                            }
+                            Msg::Stop => {}
+                        }
+                    }
                     break 'serve;
                 }
             }
@@ -142,7 +176,13 @@ impl SurrogateServer {
 
     /// New client handle.
     pub fn client(&self) -> SurrogateClient {
-        SurrogateClient { tx: self.tx.as_ref().unwrap().clone(), dim: self.dim, true_evals: 0 }
+        SurrogateClient {
+            tx: self.tx.as_ref().unwrap().clone(),
+            dim: self.dim,
+            metrics: self.metrics.clone(),
+            degraded_queries: 0,
+            warned_degraded: false,
+        }
     }
 
     /// Snapshot of the serving metrics.
@@ -249,15 +289,33 @@ impl GradientSource for SurrogateClient {
         match self.predict(x) {
             Ok(g) => g,
             // a failed query degrades to a zero gradient; the Metropolis
-            // test still guards correctness (acceptance uses true E).
-            Err(_) => {
-                self.true_evals = usize::MAX; // poison marker for diagnostics
+            // test still guards correctness (acceptance uses true E). The
+            // degradation is COUNTED — per handle, in the shared
+            // [`ServerMetrics`], and through the [`GradientSource`]
+            // diagnostics — and logged once per handle, so a
+            // zero-gradient trajectory is never silent.
+            Err(e) => {
+                self.degraded_queries += 1;
+                if let Ok(mut m) = self.metrics.lock() {
+                    m.degraded_queries += 1;
+                }
+                if !self.warned_degraded {
+                    self.warned_degraded = true;
+                    eprintln!(
+                        "gdkron: surrogate gradient query degraded to zero ({e}); further \
+                         degradations on this handle are counted in \
+                         ServerMetrics::degraded_queries"
+                    );
+                }
                 vec![0.0; self.dim]
             }
         }
     }
     fn true_grad_evals(&self) -> usize {
         0 // the client never queries the true target
+    }
+    fn degraded_queries(&self) -> usize {
+        self.degraded_queries
     }
 }
 
@@ -449,5 +507,83 @@ mod tests {
             BatchPolicy::default(),
         );
         assert!(res.is_err());
+    }
+
+    /// Engine whose predictions always fail — the forced-degradation probe.
+    struct FailingEngine {
+        dim: usize,
+    }
+
+    impl crate::coordinator::Engine for FailingEngine {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn predict_batch(&self, _xq: &Mat) -> anyhow::Result<Mat> {
+            Err(anyhow::anyhow!("engine exploded"))
+        }
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    #[test]
+    fn degraded_queries_are_counted_and_surfaced() {
+        // a forced engine error on the GradientSource path must degrade to
+        // a zero gradient AND be visible: per handle, in the shared
+        // ServerMetrics, and through the GradientSource diagnostics (the
+        // old `true_evals = usize::MAX` poison marker was never read).
+        let server = SurrogateServer::spawn(
+            || Ok(Box::new(FailingEngine { dim: 3 }) as _),
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let mut client = server.client();
+        assert_eq!(client.degraded_queries(), 0);
+        assert_eq!(client.grad(&[0.0, 0.5, 1.0]), vec![0.0; 3]);
+        assert_eq!(client.grad(&[1.0, 0.5, 0.0]), vec![0.0; 3]);
+        assert_eq!(client.degraded_queries(), 2, "per-handle degradation count");
+        assert_eq!(client.true_grad_evals(), 0);
+        let m = server.metrics();
+        assert_eq!(m.degraded_queries, 2, "shared-metrics degradation count");
+        assert_eq!(m.errors, 2);
+        // a second handle starts clean but the shared count persists
+        let fresh = server.client();
+        assert_eq!(fresh.degraded_queries(), 0);
+        let m = server.shutdown();
+        assert_eq!(m.degraded_queries, 2);
+    }
+
+    #[test]
+    fn post_sentinel_messages_fail_instead_of_being_served() {
+        use std::time::Duration;
+        // the shutdown contract: in-flight messages AHEAD of the sentinel
+        // are served; messages coalesced AFTER it in the same batch must
+        // fail, not be answered / applied. A long coalescing deadline
+        // guarantees all four messages land in one batch, in order.
+        let (engine, _, _) = make_engine(4, 2, 11);
+        let server = SurrogateServer::spawn(
+            move || Ok(Box::new(engine) as _),
+            BatchPolicy { max_batch: 64, deadline: Duration::from_millis(1500) },
+        )
+        .unwrap();
+        let pre = server.client();
+        let post = server.client();
+        let post_obs = server.client();
+        // 1) a request enqueued ahead of the sentinel
+        let h_pre = std::thread::spawn(move || pre.predict(&[0.0; 4]));
+        std::thread::sleep(Duration::from_millis(200));
+        // 2) the sentinel (shutdown joins the worker, so it runs on its
+        //    own thread while this one keeps enqueueing)
+        let h_stop = std::thread::spawn(move || server.shutdown());
+        std::thread::sleep(Duration::from_millis(200));
+        // 3) a request and an observation coalesced after the sentinel
+        let h_post = std::thread::spawn(move || post.predict(&[0.1; 4]));
+        let r_obs = post_obs.observe(&[0.2, 0.2, 0.2, 0.2], &[0.3, 0.3, 0.3, 0.3]);
+        assert!(h_pre.join().unwrap().is_ok(), "pre-sentinel request must be served");
+        assert!(h_post.join().unwrap().is_err(), "post-sentinel request must fail cleanly");
+        assert!(r_obs.is_err(), "post-sentinel observation must not reach the engine");
+        let m = h_stop.join().unwrap();
+        assert_eq!(m.requests, 1, "exactly the pre-sentinel request is served");
+        assert_eq!(m.observes, 0, "the post-sentinel observation must not be applied");
     }
 }

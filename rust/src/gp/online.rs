@@ -168,9 +168,9 @@ impl OnlineGradientGp {
         self.opts.online = online;
     }
 
-    /// Shard the Gram operator across `shards` persistent workers
-    /// (`gram.shards` config knob; `<= 1` = the single-shard path, no
-    /// worker threads). The shard boundaries follow every subsequent
+    /// Shard the Gram operator across `shards` persistent in-process
+    /// workers (`gram.shards` config knob; `<= 1` = the single-shard path,
+    /// no worker threads). The shard boundaries follow every subsequent
     /// `observe`/`drop_first` delta, and the iterative engine's operator
     /// applications fan out over the shards — bit-identically to the
     /// unsharded path (`tests/sharded_gram.rs`).
@@ -182,9 +182,34 @@ impl OnlineGradientGp {
         }
     }
 
+    /// Shard the Gram operator across **remote TCP workers** — one
+    /// `gdkron shard-worker` per address (`gram.remote_shards` config knob,
+    /// `GDKRON_REMOTE_SHARDS` override). Same serving surface as
+    /// [`OnlineGradientGp::set_shards`], same bit-identity guarantee
+    /// (`tests/remote_gram.rs`); a connection or handshake failure is
+    /// returned here (the caller decides whether to fall back to
+    /// in-process sharding), while any *later* transport failure surfaces
+    /// as a clean error on the solve that observed it and degrades the
+    /// engine to the in-process single-shard fallback.
+    pub fn set_remote_shards(
+        &mut self,
+        addrs: &[String],
+        timeout: std::time::Duration,
+    ) -> anyhow::Result<()> {
+        self.shard_engine =
+            Some(ShardedGramFactors::connect_remote(&self.gp.factors, addrs, timeout)?);
+        Ok(())
+    }
+
     /// Current shard count (1 = unsharded).
     pub fn shards(&self) -> usize {
         self.shard_engine.as_ref().map_or(1, ShardedGramFactors::shards)
+    }
+
+    /// The shard engine's transport health: `None` when unsharded or
+    /// healthy, the first failure when degraded to the in-process fallback.
+    pub fn shard_degradation(&self) -> Option<String> {
+        self.shard_engine.as_ref().and_then(ShardedGramFactors::degraded_reason)
     }
 
     /// Append one observation to the factor panels, through the shard
@@ -217,16 +242,29 @@ impl OnlineGradientGp {
     /// CG re-solve through the sharded operator when present, else the
     /// plain Gram operator — the only difference is *where* the
     /// `O(N²D)`-per-iteration applications run; the iterates (and therefore
-    /// the weights) are bit-identical.
-    fn cg_resolve(&self, gt: &Mat, z0: &Mat, cg_opts: &crate::solvers::CgOptions) -> CgResult {
+    /// the weights) are bit-identical. A shard-transport failure (e.g. a
+    /// remote worker dying mid-apply) poisons the sharded operator and is
+    /// surfaced here as a clean error — the caller's fallback/rollback
+    /// machinery takes over, and the engine serves from the in-process
+    /// fallback thereafter.
+    fn cg_resolve(
+        &self,
+        gt: &Mat,
+        z0: &Mat,
+        cg_opts: &crate::solvers::CgOptions,
+    ) -> anyhow::Result<CgResult> {
         match self.shard_engine.as_ref() {
             Some(se) => {
                 let op = se.operator();
-                cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), cg_opts)
+                let res = cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), cg_opts);
+                if let Some(e) = op.take_error() {
+                    anyhow::bail!("sharded Gram apply failed during the CG re-solve: {e}");
+                }
+                Ok(res)
             }
             None => {
                 let op = GramOperator::new(&self.gp.factors);
-                cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), cg_opts)
+                Ok(cg_solve(&op, gt.as_slice(), Some(z0.as_slice()), cg_opts))
             }
         }
     }
@@ -555,7 +593,7 @@ impl OnlineGradientGp {
                 if cg_opts.precond.is_none() {
                     cg_opts.precond = Some(JacobiPrecond::new(&self.gp.factors.gram_diag()));
                 }
-                let res = self.cg_resolve(&gt, &z0, &cg_opts);
+                let res = self.cg_resolve(&gt, &z0, &cg_opts)?;
                 anyhow::ensure!(
                     res.converged,
                     "online CG re-solve did not converge in {} iterations",

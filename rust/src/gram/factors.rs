@@ -168,7 +168,7 @@ impl GramFactors {
         let mut h_col = vec![0.0; n + 1];
         h_border_range(&self.xt, &lam_new, 0, n, &mut h_col[..n]);
         h_col[n] = h_border_corner(&xt_new, &lam_new);
-        self.apply_append_border(kernel, xt_new, lam_new, h_col);
+        let _ = self.apply_append_border(kernel, xt_new, lam_new, h_col);
     }
 
     /// Shared head of the append path: validate, center the new column and
@@ -202,13 +202,18 @@ impl GramFactors {
     /// evaluations, `O(ND + N²)` copies, no dot products — all `O(ND)`
     /// border flops happened upstream (serially in [`GramFactors::append`],
     /// or fanned out per shard in the sharded engine).
+    ///
+    /// Returns the *installed* `(K̂′, K̂″)` border columns (post Matérn
+    /// guard, post noise folding) so the remote shard transport
+    /// ([`crate::gram::remote`]) can ship the exact bits it grew the
+    /// panels with — the kernel is evaluated exactly once, here.
     pub(crate) fn apply_append_border(
         &mut self,
         kernel: &dyn ScalarKernel,
         xt_new: Vec<f64>,
         lam_new: Vec<f64>,
         h_col: Vec<f64>,
-    ) {
+    ) -> (Vec<f64>, Vec<f64>) {
         let n = self.n();
         debug_assert_eq!(h_col.len(), n + 1);
         let h_nn = h_col[n];
@@ -263,6 +268,7 @@ impl GramFactors {
         self.xt.push_col(&xt_new);
         self.lam_xt.push_col(&lam_new);
         self.lam_xt_t = self.lam_xt.t();
+        (kp_col, kpp_col)
     }
 
     /// Drop the oldest observation in place (sliding-window companion of
@@ -392,8 +398,10 @@ pub(crate) fn h_border_corner(xt_new: &[f64], lam_new: &[f64]) -> f64 {
 }
 
 /// Extend a symmetric `N×N` matrix to `(N+1)×(N+1)` with the given border
-/// (`border[..n]` = new row/column, `border[n]` = corner).
-fn grow_symmetric(m: &Mat, border: &[f64]) -> Mat {
+/// (`border[..n]` = new row/column, `border[n]` = corner). Shared with the
+/// remote shard worker ([`crate::gram::remote`]), whose mirrored panels must
+/// grow with the exact same copies as the coordinator's.
+pub(crate) fn grow_symmetric(m: &Mat, border: &[f64]) -> Mat {
     let n = m.rows();
     debug_assert_eq!(border.len(), n + 1);
     Mat::from_fn(n + 1, n + 1, |a, b| {
@@ -410,7 +418,8 @@ fn grow_symmetric(m: &Mat, border: &[f64]) -> Mat {
 }
 
 /// Trailing `(N−1)×(N−1)` principal submatrix (first row+column removed).
-fn shrink_first(m: &Mat) -> Mat {
+/// Shared with the remote shard worker's `drop_first` mirror delta.
+pub(crate) fn shrink_first(m: &Mat) -> Mat {
     let n = m.rows();
     Mat::from_fn(n - 1, n - 1, |a, b| m[(a + 1, b + 1)])
 }

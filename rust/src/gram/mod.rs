@@ -20,13 +20,22 @@
 //! ([`sharded`]) partitions the panels into row blocks owned by persistent
 //! per-shard workers, follows the online deltas, and serves
 //! `LinearOp::apply_block` bit-identically to the single-shard path
-//! (`gram.shards` knob; see the [`sharded`] module docs).
+//! (`gram.shards` knob; see the [`sharded`] module docs). The worker
+//! protocol also runs **cross-node**: [`remote`] is a std-only TCP
+//! transport (length-prefixed, versioned frames — [`wire`]) whose workers
+//! (`gdkron shard-worker --listen host:port`) mirror the panels, follow
+//! `O(N + D)` online deltas, and stay bit-identical to the in-process path
+//! (`gram.remote_shards` / `GDKRON_REMOTE_SHARDS` knob; every transport
+//! failure surfaces as a clean error and the coordinator falls back to the
+//! in-process single-shard operator).
 
 mod factors;
 mod matvec;
 mod metric;
 mod poly2;
+pub mod remote;
 pub mod sharded;
+pub mod wire;
 mod woodbury;
 
 pub use factors::GramFactors;

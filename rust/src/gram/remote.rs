@@ -1,0 +1,568 @@
+//! Cross-node shard transport: TCP workers speaking the
+//! [`crate::gram::wire`] frame protocol.
+//!
+//! [`serve`] is the worker side — what `gdkron shard-worker --listen
+//! host:port` runs. A worker hosts **mirrored factor panels** (`X̃`, `ΛX̃`,
+//! `K̂′`, `K̂″`, `H`) and re-derives its row block from the deterministic
+//! [`super::sharded::shard_plan`], so the coordinator and every worker
+//! agree on the partition without negotiation. The cost model:
+//!
+//! * **Sync** (attach, rollback, cold refit — "once per plan refresh"):
+//!   the full panel broadcast, `O(N² + ND)` wire bytes per worker.
+//! * **Append**: `O(N + D)` wire bytes — the new centered column and the
+//!   panel borders the coordinator evaluated *exactly once* (the
+//!   one-kernel-eval-per-border-entry invariant of the online conditioning
+//!   engine carries over unchanged); the mirror grows by pure copies.
+//! * **DropFirst**: a zero-payload frame; the mirror shrinks in place.
+//! * **HBorder / Apply**: the shard computes its `O(ND/S)` border slice /
+//!   its disjoint output row block with the *exact serial per-column
+//!   kernels* of the in-process path, so remote results are bit-identical
+//!   to the single-shard operator (`tests/remote_gram.rs` pins this).
+//!
+//! The trade against the in-process transport: a remote worker holds the
+//! whole `O(N² + ND)` panel mirror on its own node (memory there is the
+//! point of scaling out) in exchange for `O(N + D)` deltas instead of
+//! `O((N² + ND)/S)` per-delta re-broadcasts.
+//!
+//! [`RemoteEndpoint`] is the coordinator side — a
+//! [`super::sharded::ShardEndpoint`] over one `TcpStream` with every
+//! read/write bounded by the configured frame timeout
+//! (`gram.remote_timeout_ms`; result-gather reads that wait on the
+//! worker's apply compute get [`RESULT_TIMEOUT_FACTOR`]× that, since
+//! compute time is legitimate latency while a dead peer fails instantly on
+//! EOF), so a dead or wedged worker yields a clean `anyhow` error on the
+//! solve path, never a hang. Protocol errors the worker can detect (bad
+//! dimensions, deltas before a sync) come back as explicit `Err` frames;
+//! everything else (disconnects, short frames, version mismatches) is
+//! caught by the framing layer.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::kernels::KernelClass;
+use crate::linalg::Mat;
+
+use super::factors::{grow_symmetric, h_border_range, shrink_first};
+use super::sharded::{
+    apply_dot, apply_finish_stationary, apply_phase_p, build_state_from_panels, shard_plan,
+    AppendDelta, SharedPanels, ShardEndpoint, ShardState, MAX_SHARDS,
+};
+use super::wire::{AppendFrame, CoordFrame, SyncFrame, WorkerFrame, WIRE_MAGIC, WIRE_VERSION};
+use super::GramFactors;
+
+/// Parse a remote-shard address list (the `GDKRON_REMOTE_SHARDS` spelling):
+/// comma-separated `host:port` entries, trimmed, empties dropped, capped at
+/// [`MAX_SHARDS`]. The config spelling (`gram.remote_shards`, a string
+/// array) routes through [`crate::config::resolve_remote_shards`].
+pub fn parse_remote_shards(v: &str) -> Vec<String> {
+    v.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .take(MAX_SHARDS)
+        .map(str::to_string)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// worker (server) side
+
+/// The worker's mirrored panels plus its place in the plan. Rebuilt into a
+/// compute-ready `(SharedPanels, ShardState)` pair after every state
+/// mutation — the same `O((N² + ND)/S)` slice copies the in-process resync
+/// pays, but local to the worker's node.
+struct Mirror {
+    shard_id: usize,
+    nshards: usize,
+    class: KernelClass,
+    metric: super::Metric,
+    xt: Mat,
+    lam_xt: Mat,
+    kp_eff: Mat,
+    kpp_eff: Mat,
+    h: Mat,
+    shared: Arc<SharedPanels>,
+    state: ShardState,
+    lo: usize,
+    hi: usize,
+}
+
+impl Mirror {
+    fn from_sync(sf: SyncFrame) -> anyhow::Result<Self> {
+        let SyncFrame { shard_id, nshards, class, metric, xt, lam_xt, kp_eff, kpp_eff, h } = sf;
+        let nshards = nshards as usize;
+        let shard_id = shard_id as usize;
+        anyhow::ensure!(nshards >= 1 && nshards <= MAX_SHARDS, "bad shard count {nshards}");
+        anyhow::ensure!(shard_id < nshards, "shard id {shard_id} out of range (S={nshards})");
+        let (d, n) = (xt.rows(), xt.cols());
+        anyhow::ensure!(
+            lam_xt.rows() == d && lam_xt.cols() == n,
+            "ΛX̃ is {}x{}, X̃ is {d}x{n}",
+            lam_xt.rows(),
+            lam_xt.cols()
+        );
+        for (m, name) in [(&kp_eff, "K̂′"), (&kpp_eff, "K̂″"), (&h, "H")] {
+            anyhow::ensure!(
+                m.rows() == n && m.cols() == n,
+                "{name} is {}x{}, expected {n}x{n}",
+                m.rows(),
+                m.cols()
+            );
+        }
+        if let super::Metric::Diag(ls) = &metric {
+            anyhow::ensure!(ls.len() == d, "metric diagonal length {} != D={d}", ls.len());
+        }
+        let shared = SharedPanels::from_parts(class, metric.clone(), xt.clone(), lam_xt.clone());
+        let (lo, hi) = shard_plan(n, nshards)[shard_id];
+        let state = build_state_from_panels(&kp_eff, &kpp_eff, &h, &lam_xt, lo, hi);
+        Ok(Mirror {
+            shard_id,
+            nshards,
+            class,
+            metric,
+            xt,
+            lam_xt,
+            kp_eff,
+            kpp_eff,
+            h,
+            shared,
+            state,
+            lo,
+            hi,
+        })
+    }
+
+    /// Re-derive the row block from the deterministic plan and rebuild the
+    /// compute state from the mirrored panels.
+    fn refresh(&mut self) {
+        let n = self.xt.cols();
+        let (lo, hi) = shard_plan(n, self.nshards)[self.shard_id];
+        self.lo = lo;
+        self.hi = hi;
+        self.shared = SharedPanels::from_parts(
+            self.class,
+            self.metric.clone(),
+            self.xt.clone(),
+            self.lam_xt.clone(),
+        );
+        self.state =
+            build_state_from_panels(&self.kp_eff, &self.kpp_eff, &self.h, &self.lam_xt, lo, hi);
+    }
+
+    /// Grow the mirror by the shipped borders — pure copies, zero kernel
+    /// work, arithmetic identical to the coordinator's
+    /// [`GramFactors::apply_append_border`] panel growth.
+    fn append(&mut self, af: AppendFrame) -> anyhow::Result<()> {
+        let (d, n) = (self.xt.rows(), self.xt.cols());
+        anyhow::ensure!(af.xt_new.len() == d, "append x̃ length {} != D={d}", af.xt_new.len());
+        anyhow::ensure!(af.lam_new.len() == d, "append Λx̃ length {} != D={d}", af.lam_new.len());
+        for (col, name) in [(&af.h_col, "H"), (&af.kp_col, "K̂′"), (&af.kpp_col, "K̂″")] {
+            anyhow::ensure!(
+                col.len() == n + 1,
+                "append {name} border length {} != N+1={}",
+                col.len(),
+                n + 1
+            );
+        }
+        self.h = grow_symmetric(&self.h, &af.h_col);
+        self.kp_eff = grow_symmetric(&self.kp_eff, &af.kp_col);
+        self.kpp_eff = grow_symmetric(&self.kpp_eff, &af.kpp_col);
+        self.xt.push_col(&af.xt_new);
+        self.lam_xt.push_col(&af.lam_new);
+        self.refresh();
+        Ok(())
+    }
+
+    fn drop_first(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.xt.cols() > 1, "cannot drop the last mirrored observation");
+        self.h = shrink_first(&self.h);
+        self.kp_eff = shrink_first(&self.kp_eff);
+        self.kpp_eff = shrink_first(&self.kpp_eff);
+        self.xt.remove_first_col();
+        self.lam_xt.remove_first_col();
+        self.refresh();
+        Ok(())
+    }
+}
+
+/// Send a worker-side failure as an `Err` frame (best effort) and return
+/// it as this connection's error.
+fn fail(stream: &mut TcpStream, message: String) -> anyhow::Error {
+    let _ = WorkerFrame::Err { message: message.clone() }.write_to(stream);
+    anyhow::anyhow!(message)
+}
+
+/// Serve shard-worker connections forever: accept a coordinator, host its
+/// shard state until it disconnects (or sends `Shutdown`), then accept the
+/// next. One coordinator at a time — a worker's panels belong to exactly
+/// one serving engine.
+pub fn serve(listener: TcpListener) -> anyhow::Result<()> {
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let peer =
+                    stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+                match serve_conn(stream) {
+                    Ok(()) => eprintln!("gdkron shard-worker: coordinator {peer} detached"),
+                    Err(e) => eprintln!("gdkron shard-worker: connection from {peer} failed: {e}"),
+                }
+            }
+            Err(e) => eprintln!("gdkron shard-worker: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Serve one coordinator connection to completion.
+fn serve_conn(mut stream: TcpStream) -> anyhow::Result<()> {
+    let _ = stream.set_nodelay(true);
+    // a coordinator that stops draining mid-reply must not wedge the
+    // worker forever: bound writes, then drop the connection on timeout
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    // handshake: versioned Hello → HelloAck
+    match CoordFrame::read_from(&mut stream)? {
+        CoordFrame::Hello { magic, version } => {
+            if magic != WIRE_MAGIC {
+                return Err(fail(&mut stream, format!("bad wire magic {magic:#010x}")));
+            }
+            if version != WIRE_VERSION {
+                return Err(fail(
+                    &mut stream,
+                    format!(
+                        "wire version mismatch: worker speaks v{WIRE_VERSION}, \
+                         coordinator sent v{version}"
+                    ),
+                ));
+            }
+            WorkerFrame::HelloAck { version: WIRE_VERSION }.write_to(&mut stream)?;
+        }
+        _ => anyhow::bail!("expected Hello as the first frame"),
+    }
+
+    let mut mirror: Option<Mirror> = None;
+    // a frame observed while waiting for the P-diagonal barrier: the apply
+    // was abandoned by the coordinator; process the frame normally
+    let mut pending: Option<CoordFrame> = None;
+    loop {
+        let frame = match pending.take() {
+            Some(f) => f,
+            None => match CoordFrame::read_opt(&mut stream)? {
+                Some(f) => f,
+                None => return Ok(()), // coordinator hung up cleanly
+            },
+        };
+        match frame {
+            CoordFrame::Hello { .. } => {
+                return Err(fail(&mut stream, "unexpected mid-session Hello".into()))
+            }
+            CoordFrame::Sync(sf) => match Mirror::from_sync(*sf) {
+                Ok(m) => mirror = Some(m),
+                Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
+            },
+            CoordFrame::Append(af) => {
+                let Some(m) = mirror.as_mut() else {
+                    return Err(fail(&mut stream, "append before sync".into()));
+                };
+                if let Err(e) = m.append(*af) {
+                    return Err(fail(&mut stream, format!("bad append delta: {e}")));
+                }
+            }
+            CoordFrame::DropFirst => {
+                let Some(m) = mirror.as_mut() else {
+                    return Err(fail(&mut stream, "drop_first before sync".into()));
+                };
+                if let Err(e) = m.drop_first() {
+                    return Err(fail(&mut stream, format!("bad drop_first delta: {e}")));
+                }
+            }
+            CoordFrame::HBorder { lam_new } => {
+                let Some(m) = mirror.as_ref() else {
+                    return Err(fail(&mut stream, "h-border before sync".into()));
+                };
+                if lam_new.len() != m.xt.rows() {
+                    return Err(fail(
+                        &mut stream,
+                        format!("h-border Λx̃ length {} != D={}", lam_new.len(), m.xt.rows()),
+                    ));
+                }
+                let mut out = vec![0.0; m.hi - m.lo];
+                h_border_range(&m.xt, &lam_new, m.lo, m.hi, &mut out);
+                WorkerFrame::HBorderSlice { slice: out }.write_to(&mut stream)?;
+            }
+            CoordFrame::Apply { xin } => {
+                let Some(m) = mirror.as_ref() else {
+                    return Err(fail(&mut stream, "apply before sync".into()));
+                };
+                let nd = m.shared.n * m.shared.d;
+                if xin.rows() != nd {
+                    return Err(fail(
+                        &mut stream,
+                        format!("apply input has {} rows, expected N·D={nd}", xin.rows()),
+                    ));
+                }
+                match m.shared.class {
+                    KernelClass::DotProduct => {
+                        let block = apply_dot(&m.shared, &m.state, &xin);
+                        WorkerFrame::Out { block }.write_to(&mut stream)?;
+                    }
+                    KernelClass::Stationary => {
+                        let (pblocks, diag) = apply_phase_p(&m.shared, &m.state, &xin);
+                        WorkerFrame::Diag { diag }.write_to(&mut stream)?;
+                        match CoordFrame::read_opt(&mut stream)? {
+                            Some(CoordFrame::PDiag { pdiag }) => {
+                                if pdiag.rows() != m.shared.n || pdiag.cols() != xin.cols() {
+                                    return Err(fail(
+                                        &mut stream,
+                                        format!(
+                                            "P-diagonal is {}x{}, expected {}x{}",
+                                            pdiag.rows(),
+                                            pdiag.cols(),
+                                            m.shared.n,
+                                            xin.cols()
+                                        ),
+                                    ));
+                                }
+                                let block = apply_finish_stationary(
+                                    &m.shared, &m.state, &xin, &pblocks, &pdiag,
+                                );
+                                WorkerFrame::Out { block }.write_to(&mut stream)?;
+                            }
+                            Some(CoordFrame::Shutdown) => return Ok(()),
+                            Some(other) => pending = Some(other), // apply abandoned
+                            None => return Ok(()),
+                        }
+                    }
+                }
+            }
+            // a P-diagonal with no apply in flight: the coordinator
+            // abandoned an apply this worker never saw — ignore
+            CoordFrame::PDiag { .. } => {}
+            CoordFrame::Shutdown => return Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator (client) side
+
+/// A [`ShardEndpoint`] over one TCP connection to a `gdkron shard-worker`.
+/// Every socket read and write is bounded by the connect timeout, so the
+/// failure modes the transport must survive — worker death mid-apply, a
+/// wedged peer, a short frame — all surface as prompt `anyhow` errors.
+pub struct RemoteEndpoint {
+    addr: String,
+    shard_id: usize,
+    stream: TcpStream,
+    /// The frame timeout: bounds connects, writes and control-plane reads.
+    timeout: Duration,
+}
+
+/// Result-gather reads (the shard's apply compute) get this multiple of the
+/// frame timeout: compute time on a large window is *legitimate* latency
+/// and must not trip spurious, irreversible degradation, while a dead peer
+/// still fails instantly (EOF/RST does not wait for the timeout) and a
+/// silently wedged one is still bounded.
+const RESULT_TIMEOUT_FACTOR: u32 = 12;
+
+impl RemoteEndpoint {
+    /// Connect (trying every resolved address), bound every subsequent
+    /// socket operation by `timeout`, and run the versioned handshake.
+    pub fn connect(addr: &str, shard_id: usize, timeout: Duration) -> anyhow::Result<Self> {
+        let sockaddrs: Vec<_> = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow::anyhow!("resolving shard address {addr:?}: {e}"))?
+            .collect();
+        anyhow::ensure!(!sockaddrs.is_empty(), "shard address {addr:?} resolves to nothing");
+        let mut stream = None;
+        let mut last_err = None;
+        for sa in &sockaddrs {
+            match TcpStream::connect_timeout(sa, timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = stream.ok_or_else(|| {
+            anyhow::anyhow!(
+                "connecting to shard worker {addr} ({} addresses tried): {}",
+                sockaddrs.len(),
+                last_err.map(|e| e.to_string()).unwrap_or_default()
+            )
+        })?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let mut ep = RemoteEndpoint { addr: addr.to_string(), shard_id, stream, timeout };
+        ep.send(&CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION })?;
+        match ep.recv()? {
+            WorkerFrame::HelloAck { version } => {
+                anyhow::ensure!(
+                    version == WIRE_VERSION,
+                    "wire version mismatch with {addr}: coordinator speaks v{WIRE_VERSION}, \
+                     worker answered v{version}"
+                );
+            }
+            _ => anyhow::bail!("worker {addr} did not answer the handshake with HelloAck"),
+        }
+        Ok(ep)
+    }
+
+    fn send(&mut self, frame: &CoordFrame) -> anyhow::Result<()> {
+        frame
+            .write_to(&mut self.stream)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", self.describe()))
+    }
+
+    /// Receive one worker frame; an `Err` frame becomes this side's error.
+    fn recv(&mut self) -> anyhow::Result<WorkerFrame> {
+        match WorkerFrame::read_from(&mut self.stream) {
+            Ok(WorkerFrame::Err { message }) => {
+                Err(anyhow::anyhow!("{} reported: {message}", self.describe()))
+            }
+            Ok(frame) => Ok(frame),
+            Err(e) => Err(anyhow::anyhow!("{}: {e}", self.describe())),
+        }
+    }
+
+    /// [`RemoteEndpoint::recv`] with the extended result-gather timeout
+    /// ([`RESULT_TIMEOUT_FACTOR`] × the frame timeout) — used for the reads
+    /// that wait on the worker's apply compute.
+    fn recv_result(&mut self) -> anyhow::Result<WorkerFrame> {
+        let _ = self.stream.set_read_timeout(Some(self.timeout * RESULT_TIMEOUT_FACTOR));
+        let res = self.recv();
+        let _ = self.stream.set_read_timeout(Some(self.timeout));
+        res
+    }
+}
+
+impl ShardEndpoint for RemoteEndpoint {
+    fn sync(
+        &mut self,
+        f: &GramFactors,
+        _shared: &Arc<SharedPanels>,
+        nshards: usize,
+        _lo: usize,
+        _hi: usize,
+    ) -> anyhow::Result<()> {
+        self.send(&CoordFrame::Sync(Box::new(SyncFrame {
+            shard_id: self.shard_id as u32,
+            nshards: nshards as u32,
+            class: f.class,
+            metric: f.metric.clone(),
+            xt: f.xt.clone(),
+            lam_xt: f.lam_xt.clone(),
+            kp_eff: f.kp_eff.clone(),
+            kpp_eff: f.kpp_eff.clone(),
+            h: f.h.clone(),
+        })))
+    }
+
+    fn append(
+        &mut self,
+        _f: &GramFactors,
+        _shared: &Arc<SharedPanels>,
+        delta: &AppendDelta,
+        _nshards: usize,
+        _lo: usize,
+        _hi: usize,
+    ) -> anyhow::Result<()> {
+        self.send(&CoordFrame::Append(Box::new(AppendFrame {
+            xt_new: delta.xt_new.clone(),
+            lam_new: delta.lam_new.clone(),
+            h_col: delta.h_col.clone(),
+            kp_col: delta.kp_col.clone(),
+            kpp_col: delta.kpp_col.clone(),
+        })))
+    }
+
+    fn drop_first(
+        &mut self,
+        _f: &GramFactors,
+        _shared: &Arc<SharedPanels>,
+        _nshards: usize,
+        _lo: usize,
+        _hi: usize,
+    ) -> anyhow::Result<()> {
+        self.send(&CoordFrame::DropFirst)
+    }
+
+    fn start_hborder(&mut self, lam_new: &[f64]) -> anyhow::Result<()> {
+        self.send(&CoordFrame::HBorder { lam_new: lam_new.to_vec() })
+    }
+
+    fn finish_hborder(&mut self) -> anyhow::Result<Vec<f64>> {
+        match self.recv()? {
+            WorkerFrame::HBorderSlice { slice } => Ok(slice),
+            _ => Err(anyhow::anyhow!(
+                "{} answered the h-border with the wrong frame",
+                self.describe()
+            )),
+        }
+    }
+
+    fn start_apply(&mut self, xin: &Arc<Mat>, _stationary: bool) -> anyhow::Result<()> {
+        self.send(&CoordFrame::Apply { xin: (**xin).clone() })
+    }
+
+    fn recv_diag(&mut self) -> anyhow::Result<Mat> {
+        match self.recv_result()? {
+            WorkerFrame::Diag { diag } => Ok(diag),
+            WorkerFrame::Out { .. } => Err(anyhow::anyhow!(
+                "{} sent output before the P-diagonal barrier",
+                self.describe()
+            )),
+            _ => Err(anyhow::anyhow!(
+                "{} answered the apply with the wrong frame",
+                self.describe()
+            )),
+        }
+    }
+
+    fn send_pdiag(&mut self, pdiag: &Arc<Mat>) -> anyhow::Result<()> {
+        self.send(&CoordFrame::PDiag { pdiag: (**pdiag).clone() })
+    }
+
+    fn recv_out(&mut self) -> anyhow::Result<Mat> {
+        match self.recv_result()? {
+            WorkerFrame::Out { block } => Ok(block),
+            WorkerFrame::Diag { .. } => Err(anyhow::anyhow!(
+                "stray P-diagonal from {} after the barrier",
+                self.describe()
+            )),
+            _ => Err(anyhow::anyhow!(
+                "{} answered the apply with the wrong frame",
+                self.describe()
+            )),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("remote shard {}@{}", self.shard_id, self.addr)
+    }
+}
+
+impl Drop for RemoteEndpoint {
+    fn drop(&mut self) {
+        // best effort: tell the worker this session is over so it abandons
+        // any half-finished apply and accepts the next coordinator
+        let _ = CoordFrame::Shutdown.write_to(&mut self.stream);
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remote_shard_list_parses() {
+        assert_eq!(
+            parse_remote_shards(" a:1 , b:2 ,,c:3 "),
+            vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()]
+        );
+        assert!(parse_remote_shards("  ").is_empty());
+        assert!(parse_remote_shards("").is_empty());
+    }
+}

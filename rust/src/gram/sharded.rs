@@ -12,20 +12,24 @@
 //!   `K̂″` and the cross-Gram `H`, plus its rows of `(ΛX̃)ᵀ` — per-shard
 //!   state is `O((N² + ND)/S)` and therefore bounded by the serving window
 //!   (`gp.window`) like the global panels.
-//! * Shards are **persistent worker threads** (spawned once, fed over
-//!   channels), so a serving-sized `apply_block` pays no thread-spawn
-//!   latency — the block is dispatched, each worker computes the output
-//!   rows of its observations shard-locally, and the coordinator reduces
-//!   the disjoint row blocks (plus, for stationary kernels, the gathered
-//!   `P` diagonal of the two-phase matvec) into the final buffer.
+//! * Shards are **persistent workers** driven through the [`ShardEndpoint`]
+//!   protocol: `sync` / `append` / `drop_first` keep the shard state in
+//!   lockstep with the factors, `h-border` fans the online append's
+//!   cross-Gram border out, and the two-phase `apply` (dispatch → gather
+//!   `P`-diagonal → finish) serves the block matvec. Two transports
+//!   implement the protocol: in-process channel threads (this module) and
+//!   cross-node TCP workers ([`crate::gram::remote`], spoken in the
+//!   [`crate::gram::wire`] frame format). The coordinator reduces the
+//!   disjoint output row blocks either way.
 //! * **Bit-identity.** The partition is over *output* columns, so the
 //!   reduction concatenates disjoint contributions instead of summing
 //!   overlapping partials — combined with every worker running the exact
 //!   per-column kernels of the serial path
 //!   ([`crate::linalg::Mat`]'s column kernels, shared at the slice level),
-//!   results are bit-identical for every shard count, including the
-//!   single-shard path. A summed tree reduction would trade that guarantee
-//!   away for nothing: the per-shard work is identical either way.
+//!   results are bit-identical for every shard count and every transport,
+//!   including the single-shard path. A summed tree reduction would trade
+//!   that guarantee away for nothing: the per-shard work is identical
+//!   either way.
 //!
 //! Online deltas follow the conditioning engine (PR 2): `append` computes
 //! the new cross-Gram border *in parallel* — each shard contributes the
@@ -35,16 +39,31 @@
 //! `drop_first` slides the shard boundaries over the retained panels
 //! without recomputing anything. After every delta the balanced plan is
 //! recomputed and each worker receives its refreshed row block — `O(N²/S +
-//! ND/S)` copies per shard, the same order as the panel growth itself.
+//! ND/S)` copies per in-process shard, `O(N + D)` wire bytes per remote
+//! shard (remote workers mirror the panels and re-derive the plan
+//! themselves).
+//!
+//! **Degradation.** The engine always retains a full-range fallback state
+//! (the in-process single-shard operator). The first transport failure —
+//! a worker death, a disconnect mid-apply, a short frame — surfaces as a
+//! clean `anyhow` error on the solve path that observed it, the pool is
+//! torn down, and every subsequent application runs on the fallback:
+//! serving survives the loss of every remote worker.
 //!
 //! Knob: `--shards N` on the CLI beats `GDKRON_SHARDS` beats the
 //! `gram.shards` config key ([`crate::config::resolve_shards`]); `1` (the
 //! default) is the current single-shard path — no worker threads at all.
+//! Remote shards are a separate knob: `GDKRON_REMOTE_SHARDS` beats
+//! `gram.remote_shards` ([`crate::config::resolve_remote_shards`]), and a
+//! non-empty remote list takes the transport cross-node instead of
+//! spawning in-process workers.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::kernels::{KernelClass, ScalarKernel};
 use crate::linalg::{matmul_acc_col_slice, slice_dot, Mat};
@@ -86,7 +105,8 @@ pub fn global_shards() -> Option<usize> {
 /// Balanced contiguous row-block partition of `n` observations into `s`
 /// shards: the first `n % s` shards own one extra observation, later shards
 /// may be empty when `s > n`. Deterministic, so the coordinator and every
-/// worker agree on the boundaries without negotiation.
+/// worker — including remote ones that re-derive their block from their
+/// mirrored panels — agree on the boundaries without negotiation.
 pub fn shard_plan(n: usize, s: usize) -> Vec<(usize, usize)> {
     let s = s.max(1);
     let base = n / s;
@@ -102,20 +122,20 @@ pub fn shard_plan(n: usize, s: usize) -> Vec<(usize, usize)> {
     plan
 }
 
-/// Read-only panels every shard needs whole (single-node: shared by `Arc`,
-/// never duplicated per shard; a multi-node deployment would broadcast
-/// them). Snapshotted from the authoritative [`GramFactors`] after every
-/// delta.
-struct SharedPanels {
-    class: KernelClass,
-    metric: Metric,
+/// Read-only panels every shard needs whole (in-process: shared by `Arc`,
+/// never duplicated per shard; remote workers hold their own mirror,
+/// broadcast once per plan refresh and updated by `O(N + D)` deltas).
+/// Snapshotted from the authoritative [`GramFactors`] after every delta.
+pub(crate) struct SharedPanels {
+    pub(crate) class: KernelClass,
+    pub(crate) metric: Metric,
     /// `X̃` (`D×N`): the stationary correction and the append border read
     /// all columns.
-    xt: Mat,
+    pub(crate) xt: Mat,
     /// `ΛX̃` (`D×N`): the dot-product correction reads all columns.
-    lam_xt: Mat,
-    d: usize,
-    n: usize,
+    pub(crate) lam_xt: Mat,
+    pub(crate) d: usize,
+    pub(crate) n: usize,
 }
 
 impl SharedPanels {
@@ -129,15 +149,26 @@ impl SharedPanels {
             n: f.n(),
         })
     }
+
+    /// Assemble from mirrored panels (the remote worker's side).
+    pub(crate) fn from_parts(
+        class: KernelClass,
+        metric: Metric,
+        xt: Mat,
+        lam_xt: Mat,
+    ) -> Arc<Self> {
+        let (d, n) = (xt.rows(), xt.cols());
+        Arc::new(SharedPanels { class, metric, xt, lam_xt, d, n })
+    }
 }
 
 /// The row-block panel slices one shard owns: observations `lo..hi` of the
 /// evolving factors. `O(N·B + D·B)` memory for a block of `B = hi − lo`
 /// observations — the serving window bounds it exactly like the global
 /// panels.
-struct ShardState {
-    lo: usize,
-    hi: usize,
+pub(crate) struct ShardState {
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
     /// Columns `lo..hi` of `K̂′` (`N×B`; row block ≡ column block only up to
     /// rounding, so the actual columns are stored).
     kp_cols: Mat,
@@ -165,26 +196,109 @@ impl ShardState {
     }
 }
 
-fn build_state(f: &GramFactors, lo: usize, hi: usize) -> ShardState {
-    let (n, d) = (f.n(), f.d());
+/// Build a shard's row-block state from the raw panels. The coordinator
+/// calls it on the authoritative factors; the remote worker calls it on its
+/// mirrored panels — the slices are pure copies, so both sides hold the
+/// exact same bits.
+pub(crate) fn build_state_from_panels(
+    kp_eff: &Mat,
+    kpp_eff: &Mat,
+    h: &Mat,
+    lam_xt: &Mat,
+    lo: usize,
+    hi: usize,
+) -> ShardState {
+    let n = kp_eff.rows();
+    let d = lam_xt.rows();
     let b = hi - lo;
     ShardState {
         lo,
         hi,
-        kp_cols: f.kp_eff.block(0, lo, n, b),
-        kpp_cols: f.kpp_eff.block(0, lo, n, b),
-        kpp_rows: Mat::from_fn(n, b, |bb, j| f.kpp_eff[(lo + j, bb)]),
-        h_cols: f.h.block(0, lo, n, b),
-        lam_xt_t: f.lam_xt_t.block(lo, 0, b, d),
+        kp_cols: kp_eff.block(0, lo, n, b),
+        kpp_cols: kpp_eff.block(0, lo, n, b),
+        kpp_rows: Mat::from_fn(n, b, |bb, j| kpp_eff[(lo + j, bb)]),
+        h_cols: h.block(0, lo, n, b),
+        lam_xt_t: Mat::from_fn(b, d, |j, i| lam_xt[(i, lo + j)]),
     }
 }
 
-/// Work items for the persistent shard workers.
+fn build_state(f: &GramFactors, lo: usize, hi: usize) -> ShardState {
+    build_state_from_panels(&f.kp_eff, &f.kpp_eff, &f.h, &f.lam_xt, lo, hi)
+}
+
+/// The `O(N + D)` payload an online append ships to remote workers: the
+/// centered new column, its metric image, and the *installed* panel borders
+/// (cross-Gram, `K̂′`, `K̂″` — post Matérn guard, post noise folding), so the
+/// mirrors grow by pure copies with zero kernel re-evaluation.
+pub(crate) struct AppendDelta {
+    pub(crate) xt_new: Vec<f64>,
+    pub(crate) lam_new: Vec<f64>,
+    pub(crate) h_col: Vec<f64>,
+    pub(crate) kp_col: Vec<f64>,
+    pub(crate) kpp_col: Vec<f64>,
+}
+
+/// One persistent shard worker, behind any transport.
+///
+/// The protocol is strictly coordinator-driven: state mutations (`sync`,
+/// `append`, `drop_first`) are one-way, the h-border and the two-phase
+/// apply are start/finish pairs so every shard computes concurrently while
+/// the coordinator gathers in plan order. Implementations must **never
+/// block forever**: a lost in-process worker or a dead/wedged TCP peer must
+/// surface as an `Err` (the transports bound every receive — channel
+/// disconnection on one side, socket timeouts on the other).
+pub(crate) trait ShardEndpoint: Send {
+    /// Replace the shard's state wholesale (attach, rollback, cold refit).
+    fn sync(
+        &mut self,
+        f: &GramFactors,
+        shared: &Arc<SharedPanels>,
+        nshards: usize,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<()>;
+    /// Apply an online append delta (borders already evaluated, exactly
+    /// once, by the coordinator).
+    fn append(
+        &mut self,
+        f: &GramFactors,
+        shared: &Arc<SharedPanels>,
+        delta: &AppendDelta,
+        nshards: usize,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<()>;
+    /// Slide the window: drop the oldest observation.
+    fn drop_first(
+        &mut self,
+        f: &GramFactors,
+        shared: &Arc<SharedPanels>,
+        nshards: usize,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<()>;
+    /// Dispatch this shard's slice of the append cross-Gram border.
+    fn start_hborder(&mut self, lam_new: &[f64]) -> anyhow::Result<()>;
+    /// Collect the border slice started by `start_hborder`.
+    fn finish_hborder(&mut self) -> anyhow::Result<Vec<f64>>;
+    /// Dispatch a block application to this shard.
+    fn start_apply(&mut self, xin: &Arc<Mat>, stationary: bool) -> anyhow::Result<()>;
+    /// Stationary phase 1: collect this shard's `P`-diagonal slice.
+    fn recv_diag(&mut self) -> anyhow::Result<Mat>;
+    /// Stationary barrier: broadcast the gathered full `P` diagonal.
+    fn send_pdiag(&mut self, pdiag: &Arc<Mat>) -> anyhow::Result<()>;
+    /// Collect this shard's finished output row block.
+    fn recv_out(&mut self) -> anyhow::Result<Mat>;
+    /// Human-readable label for degradation messages.
+    fn describe(&self) -> String;
+}
+
+/// Work items for the in-process channel workers.
 enum Job {
     /// Replace the shard's panels + shared snapshot (after any delta).
     Sync { shared: Arc<SharedPanels>, state: ShardState },
     /// Compute this shard's slice of the append cross-Gram border.
-    HBorder { lam_new: Vec<f64>, reply: Sender<(usize, Vec<f64>)> },
+    HBorder { lam_new: Vec<f64>, reply: Sender<Vec<f64>> },
     /// Apply the Gram operator to a block of stacked right-hand sides.
     Apply { xin: Arc<Mat>, reply: Sender<ApplyMsg>, pdiag_rx: Option<Receiver<Arc<Mat>>> },
     Shutdown,
@@ -192,15 +306,15 @@ enum Job {
 
 enum ApplyMsg {
     /// Stationary phase 1: this shard's `B×K` slice of the `P` diagonal.
-    Diag { id: usize, diag: Mat },
+    Diag(Mat),
     /// Finished output rows (`(B·D)×K`) for this shard's observations.
-    Out { id: usize, block: Mat },
+    Out(Mat),
 }
 
 /// Dot-product shard apply: output columns `lo..hi` for every stacked RHS,
 /// replicating the serial per-column arithmetic of
 /// [`GramFactors::matvec_into`] exactly.
-fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
+pub(crate) fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
     let (d, n) = (sh.d, sh.n);
     let b = st.hi - st.lo;
     let k_count = xin.cols();
@@ -240,7 +354,7 @@ fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
 /// Stationary phase 1: this shard's `B×N` block of `P = (ΛX)ᵀV` per RHS,
 /// plus the `B×K` slice of the `P` diagonal (the only cross-shard
 /// dependency of the stationary matvec).
-fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
+pub(crate) fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
     let d = sh.d;
     let b = st.hi - st.lo;
     let n = sh.n;
@@ -271,7 +385,7 @@ fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Ma
 /// the shard's output rows — again replicating the serial per-column
 /// arithmetic (term1 accumulation, `W` sweep in increasing `b`, `M3`
 /// column, `Λ` last).
-fn apply_finish_stationary(
+pub(crate) fn apply_finish_stationary(
     sh: &SharedPanels,
     st: &ShardState,
     xin: &Mat,
@@ -310,7 +424,7 @@ fn apply_finish_stationary(
     block
 }
 
-fn worker_loop(id: usize, rx: Receiver<Job>) {
+fn worker_loop(rx: Receiver<Job>) {
     let mut shared: Option<Arc<SharedPanels>> = None;
     let mut state: Option<ShardState> = None;
     while let Ok(job) = rx.recv() {
@@ -324,7 +438,7 @@ fn worker_loop(id: usize, rx: Receiver<Job>) {
                 let st = state.as_ref().expect("shard worker not synced");
                 let mut out = vec![0.0; st.hi - st.lo];
                 h_border_range(&sh.xt, &lam_new, st.lo, st.hi, &mut out);
-                let _ = reply.send((id, out));
+                let _ = reply.send(out);
             }
             Job::Apply { xin, reply, pdiag_rx } => {
                 let sh = shared.as_ref().expect("shard worker not synced");
@@ -333,98 +447,320 @@ fn worker_loop(id: usize, rx: Receiver<Job>) {
                     KernelClass::DotProduct => apply_dot(sh, st, &xin),
                     KernelClass::Stationary => {
                         let (pblocks, diag) = apply_phase_p(sh, st, &xin);
-                        let _ = reply.send(ApplyMsg::Diag { id, diag });
-                        let pdiag = pdiag_rx
-                            .expect("stationary apply needs a P-diagonal channel")
-                            .recv()
-                            .expect("coordinator dropped mid-apply");
+                        let _ = reply.send(ApplyMsg::Diag(diag));
+                        let pdiag = match pdiag_rx.and_then(|rx| rx.recv().ok()) {
+                            Some(p) => p,
+                            // the coordinator abandoned this apply (degraded
+                            // or dropped): wait for the next job instead of
+                            // taking the worker down.
+                            None => continue,
+                        };
                         apply_finish_stationary(sh, st, &xin, &pblocks, &pdiag)
                     }
                 };
-                let _ = reply.send(ApplyMsg::Out { id, block });
+                let _ = reply.send(ApplyMsg::Out(block));
             }
             Job::Shutdown => break,
         }
     }
 }
 
-/// The persistent worker threads, one per shard. Dropped = drained: a
-/// shutdown message per worker, then joined.
-struct ShardPool {
-    txs: Vec<Sender<Job>>,
-    handles: Vec<JoinHandle<()>>,
+/// In-process transport: one persistent worker thread fed over channels.
+struct ChannelEndpoint {
+    id: usize,
+    tx: Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+    hborder_rx: Option<Receiver<Vec<f64>>>,
+    apply_rx: Option<Receiver<ApplyMsg>>,
+    pdiag_tx: Option<Sender<Arc<Mat>>>,
 }
 
-impl ShardPool {
-    fn spawn(s: usize) -> Self {
-        let mut txs = Vec::with_capacity(s);
-        let mut handles = Vec::with_capacity(s);
-        for id in 0..s {
-            let (tx, rx) = channel();
-            let handle = std::thread::Builder::new()
-                .name(format!("gdkron-shard-{id}"))
-                .spawn(move || worker_loop(id, rx))
-                .expect("failed to spawn shard worker");
-            txs.push(tx);
-            handles.push(handle);
+impl ChannelEndpoint {
+    fn spawn(id: usize) -> Self {
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("gdkron-shard-{id}"))
+            .spawn(move || worker_loop(rx))
+            .expect("failed to spawn shard worker");
+        ChannelEndpoint {
+            id,
+            tx,
+            handle: Some(handle),
+            hborder_rx: None,
+            apply_rx: None,
+            pdiag_tx: None,
         }
-        ShardPool { txs, handles }
+    }
+
+    fn gone(&self) -> anyhow::Error {
+        anyhow::anyhow!("in-process shard worker {} hung up", self.id)
     }
 }
 
-impl Drop for ShardPool {
-    fn drop(&mut self) {
-        for tx in &self.txs {
-            let _ = tx.send(Job::Shutdown);
+impl ShardEndpoint for ChannelEndpoint {
+    fn sync(
+        &mut self,
+        f: &GramFactors,
+        shared: &Arc<SharedPanels>,
+        _nshards: usize,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<()> {
+        self.tx
+            .send(Job::Sync { shared: Arc::clone(shared), state: build_state(f, lo, hi) })
+            .map_err(|_| self.gone())
+    }
+
+    fn append(
+        &mut self,
+        f: &GramFactors,
+        shared: &Arc<SharedPanels>,
+        _delta: &AppendDelta,
+        nshards: usize,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<()> {
+        // a full row-block rebuild IS the cheap in-process delta: the shared
+        // panels travel by Arc and the state is O((N² + ND)/S) copies
+        self.sync(f, shared, nshards, lo, hi)
+    }
+
+    fn drop_first(
+        &mut self,
+        f: &GramFactors,
+        shared: &Arc<SharedPanels>,
+        nshards: usize,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<()> {
+        self.sync(f, shared, nshards, lo, hi)
+    }
+
+    fn start_hborder(&mut self, lam_new: &[f64]) -> anyhow::Result<()> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Job::HBorder { lam_new: lam_new.to_vec(), reply: rtx })
+            .map_err(|_| self.gone())?;
+        self.hborder_rx = Some(rrx);
+        Ok(())
+    }
+
+    fn finish_hborder(&mut self) -> anyhow::Result<Vec<f64>> {
+        let rx = self
+            .hborder_rx
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no h-border in flight on shard {}", self.id))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("in-process shard worker {} died mid-h-border", self.id))
+    }
+
+    fn start_apply(&mut self, xin: &Arc<Mat>, stationary: bool) -> anyhow::Result<()> {
+        let (rtx, rrx) = channel();
+        let pdiag_rx = if stationary {
+            let (ptx, prx) = channel();
+            self.pdiag_tx = Some(ptx);
+            Some(prx)
+        } else {
+            None
+        };
+        self.tx
+            .send(Job::Apply { xin: Arc::clone(xin), reply: rtx, pdiag_rx })
+            .map_err(|_| self.gone())?;
+        self.apply_rx = Some(rrx);
+        Ok(())
+    }
+
+    fn recv_diag(&mut self) -> anyhow::Result<Mat> {
+        let rx = self
+            .apply_rx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no apply in flight on shard {}", self.id))?;
+        match rx.recv() {
+            Ok(ApplyMsg::Diag(d)) => Ok(d),
+            Ok(ApplyMsg::Out(_)) => Err(anyhow::anyhow!(
+                "shard {} sent output before the P-diagonal barrier",
+                self.id
+            )),
+            Err(_) => Err(anyhow::anyhow!("in-process shard worker {} died mid-apply", self.id)),
         }
-        for handle in self.handles.drain(..) {
+    }
+
+    fn send_pdiag(&mut self, pdiag: &Arc<Mat>) -> anyhow::Result<()> {
+        let tx = self
+            .pdiag_tx
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no P-diagonal barrier open on shard {}", self.id))?;
+        tx.send(Arc::clone(pdiag))
+            .map_err(|_| anyhow::anyhow!("in-process shard worker {} died at the barrier", self.id))
+    }
+
+    fn recv_out(&mut self) -> anyhow::Result<Mat> {
+        let rx = self
+            .apply_rx
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no apply in flight on shard {}", self.id))?;
+        match rx.recv() {
+            Ok(ApplyMsg::Out(b)) => Ok(b),
+            Ok(ApplyMsg::Diag(_)) => Err(anyhow::anyhow!(
+                "stray P-diagonal from shard {} after the barrier",
+                self.id
+            )),
+            Err(_) => Err(anyhow::anyhow!("in-process shard worker {} died mid-apply", self.id)),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("in-process worker {}", self.id)
+    }
+}
+
+impl Drop for ChannelEndpoint {
+    fn drop(&mut self) {
+        // release a worker parked at the P-diagonal barrier *before* the
+        // join: dropping the sender fails its recv, it abandons the apply
+        // and picks up the shutdown sentinel.
+        self.pdiag_tx = None;
+        self.apply_rx = None;
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(handle) = self.handle.take() {
             let _ = handle.join();
         }
     }
 }
 
 /// Row-block sharded mirror of a [`GramFactors`]: persistent per-shard
-/// workers own the partitioned panels and serve
+/// workers (in-process threads or remote TCP workers, see the module docs)
+/// own the partitioned panels and serve
 /// [`ShardedGramFactors::apply_block_into`]; online deltas keep the shard
-/// state in lockstep with the authoritative factors (see the module docs).
+/// state in lockstep with the authoritative factors.
 ///
-/// With `shards == 1` the engine is a plain inline evaluator (no threads),
-/// and for every shard count the results are bit-identical to the
-/// single-shard [`super::GramOperator`] path — pinned by
-/// `tests/sharded_gram.rs`.
+/// With `shards == 1` the engine is a plain inline evaluator (no workers),
+/// and for every shard count and transport the results are bit-identical to
+/// the single-shard [`super::GramOperator`] path — pinned by
+/// `tests/sharded_gram.rs` and `tests/remote_gram.rs`.
 pub struct ShardedGramFactors {
     nshards: usize,
     n: usize,
     d: usize,
     plan: Vec<(usize, usize)>,
     shared: Arc<SharedPanels>,
-    /// Inline state when `nshards == 1` (no worker threads at all).
-    local: Option<ShardState>,
-    pool: Option<ShardPool>,
+    /// Always-present full-range state: the inline single-shard path *and*
+    /// the degradation fallback after a transport failure.
+    fallback: ShardState,
+    /// The worker endpoints (`None` = inline single-shard, or degraded).
+    pool: Option<RefCell<Vec<Box<dyn ShardEndpoint>>>>,
+    /// Remote (TCP) transport, for labels and diagnostics.
+    remote: bool,
+    degraded: AtomicBool,
+    degraded_reason: Mutex<Option<String>>,
 }
 
 impl ShardedGramFactors {
-    /// Build the shard engine for `f`, spawning `nshards` persistent
-    /// workers (`nshards <= 1` runs inline on the caller's thread).
+    /// Build the in-process shard engine for `f`, spawning `nshards`
+    /// persistent worker threads (`nshards <= 1` runs inline on the
+    /// caller's thread).
     pub fn new(f: &GramFactors, nshards: usize) -> Self {
         let nshards = nshards.clamp(1, MAX_SHARDS);
-        let pool = if nshards > 1 { Some(ShardPool::spawn(nshards)) } else { None };
+        let pool = if nshards > 1 {
+            let endpoints: Vec<Box<dyn ShardEndpoint>> = (0..nshards)
+                .map(|id| Box::new(ChannelEndpoint::spawn(id)) as Box<dyn ShardEndpoint>)
+                .collect();
+            Some(RefCell::new(endpoints))
+        } else {
+            None
+        };
         let mut engine = ShardedGramFactors {
             nshards,
-            n: 0,
-            d: 0,
+            n: f.n(),
+            d: f.d(),
             plan: Vec::new(),
             shared: SharedPanels::snapshot(f),
-            local: None,
+            fallback: build_state(f, 0, f.n()),
             pool,
+            remote: false,
+            degraded: AtomicBool::new(false),
+            degraded_reason: Mutex::new(None),
         };
         engine.resync(f);
         engine
     }
 
+    /// Build the cross-node shard engine: one TCP worker per address in
+    /// `addrs` (`gdkron shard-worker --listen host:port` on the other end),
+    /// with every socket read/write bounded by `timeout`. Connects,
+    /// version-handshakes and broadcasts the initial panel sync; any
+    /// failure — unreachable host, version mismatch, mid-sync disconnect —
+    /// is a hard error here (startup is the one place a remote problem
+    /// should stop the caller instead of degrading silently).
+    pub fn connect_remote(
+        f: &GramFactors,
+        addrs: &[String],
+        timeout: Duration,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!addrs.is_empty(), "remote shard address list is empty");
+        anyhow::ensure!(
+            addrs.len() <= MAX_SHARDS,
+            "too many remote shards: {} > {MAX_SHARDS}",
+            addrs.len()
+        );
+        let mut endpoints: Vec<Box<dyn ShardEndpoint>> = Vec::with_capacity(addrs.len());
+        for (id, addr) in addrs.iter().enumerate() {
+            endpoints.push(Box::new(super::remote::RemoteEndpoint::connect(addr, id, timeout)?));
+        }
+        let nshards = addrs.len();
+        let mut engine = ShardedGramFactors {
+            nshards,
+            n: f.n(),
+            d: f.d(),
+            plan: Vec::new(),
+            shared: SharedPanels::snapshot(f),
+            fallback: build_state(f, 0, f.n()),
+            pool: Some(RefCell::new(endpoints)),
+            remote: true,
+            degraded: AtomicBool::new(false),
+            degraded_reason: Mutex::new(None),
+        };
+        engine.resync(f);
+        if engine.is_degraded() {
+            anyhow::bail!(
+                "initial remote shard sync failed: {}",
+                engine.degraded_reason().unwrap_or_else(|| "unknown".into())
+            );
+        }
+        Ok(engine)
+    }
+
     /// Number of shards (1 = inline single-shard path).
     pub fn shards(&self) -> usize {
         self.nshards
+    }
+
+    /// `true` when the shard transport is cross-node TCP.
+    pub fn is_remote(&self) -> bool {
+        self.remote
+    }
+
+    /// `true` once a transport failure has dropped the engine back to the
+    /// in-process single-shard fallback.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    /// The first transport failure, if any.
+    pub fn degraded_reason(&self) -> Option<String> {
+        self.degraded_reason.lock().unwrap().clone()
+    }
+
+    fn note_degraded(&self, msg: String) {
+        if !self.degraded.swap(true, Ordering::SeqCst) {
+            eprintln!(
+                "gdkron: shard transport degraded, serving from the in-process fallback: {msg}"
+            );
+        }
+        let mut guard = self.degraded_reason.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(msg);
+        }
     }
 
     /// Observations currently sharded.
@@ -442,15 +778,17 @@ impl ShardedGramFactors {
         &self.plan
     }
 
-    /// Owned panel memory per shard, in f64 counts: four `N×B` panel slices
-    /// plus the `B×D` input rows. Bounded by the serving window exactly
-    /// like [`GramFactors::memory_f64`], divided by the shard count. The
-    /// inline (single-shard) engine reports its actual buffers; pooled
-    /// shards report the identical closed form (their states live inside
-    /// the worker threads).
+    /// Owned *compute* panel memory per shard, in f64 counts: four `N×B`
+    /// panel slices plus the `B×D` input rows. Bounded by the serving
+    /// window exactly like [`GramFactors::memory_f64`], divided by the
+    /// shard count. The inline (single-shard or degraded) engine reports
+    /// its actual fallback buffers; pooled shards report the identical
+    /// closed form. Remote workers additionally hold an `O(N² + ND)` panel
+    /// mirror on their *own* node — that is the trade that shrinks every
+    /// online delta to `O(N + D)` wire bytes.
     pub fn per_shard_memory_f64(&self) -> Vec<usize> {
-        if let Some(st) = &self.local {
-            return vec![st.memory_f64()];
+        if self.pool.is_none() || self.is_degraded() {
+            return vec![self.fallback.memory_f64()];
         }
         self.plan
             .iter()
@@ -461,30 +799,90 @@ impl ShardedGramFactors {
             .collect()
     }
 
-    /// Rebuild every shard's row block (and the shared snapshot) from the
-    /// authoritative factors. Called after every delta, engine switch or
-    /// rollback; `O(N²/S + ND/S)` copies per shard, zero recomputation.
-    pub fn resync(&mut self, f: &GramFactors) {
+    /// Recompute the plan, the shared snapshot and the fallback state from
+    /// the authoritative factors — the coordinator-side half of every
+    /// delta; endpoints are updated separately.
+    fn refresh_local(&mut self, f: &GramFactors) {
         self.n = f.n();
         self.d = f.d();
         self.plan = shard_plan(self.n, self.nshards);
         self.shared = SharedPanels::snapshot(f);
-        match &self.pool {
-            Some(pool) => {
-                for (id, tx) in pool.txs.iter().enumerate() {
-                    let (lo, hi) = self.plan[id];
-                    tx.send(Job::Sync {
-                        shared: Arc::clone(&self.shared),
-                        state: build_state(f, lo, hi),
-                    })
-                    .expect("shard worker hung up");
+        self.fallback = build_state(f, 0, self.n);
+    }
+
+    /// Rebuild every shard's row block (and the shared snapshot) from the
+    /// authoritative factors. Called after every engine switch, rollback or
+    /// cold refit; `O(N²/S + ND/S)` copies per in-process shard, a full
+    /// panel broadcast per remote shard (the "once per plan refresh" cost).
+    pub fn resync(&mut self, f: &GramFactors) {
+        if self.is_degraded() {
+            self.pool = None;
+        }
+        self.refresh_local(f);
+        let mut failure: Option<String> = None;
+        if let Some(pool) = self.pool.as_ref() {
+            let mut endpoints = pool.borrow_mut();
+            for (id, ep) in endpoints.iter_mut().enumerate() {
+                let (lo, hi) = self.plan[id];
+                if let Err(e) = ep.sync(f, &self.shared, self.nshards, lo, hi) {
+                    failure = Some(format!("{}: {e}", ep.describe()));
+                    break;
                 }
             }
-            None => {
-                let (lo, hi) = self.plan[0];
-                self.local = Some(build_state(f, lo, hi));
+        }
+        if let Some(msg) = failure {
+            self.note_degraded(format!("shard sync failed ({msg})"));
+            self.pool = None;
+        }
+    }
+
+    /// Ship an online delta to every endpoint (`Some` = append, `None` =
+    /// drop_first). The first transport failure degrades the engine to the
+    /// in-process fallback — the authoritative factors are already updated,
+    /// so nothing is lost but the fan-out.
+    fn push_delta(&mut self, f: &GramFactors, delta: Option<&AppendDelta>) {
+        let mut failure: Option<String> = None;
+        if let Some(pool) = self.pool.as_ref() {
+            let mut endpoints = pool.borrow_mut();
+            for (id, ep) in endpoints.iter_mut().enumerate() {
+                let (lo, hi) = self.plan[id];
+                let res = match delta {
+                    Some(dl) => ep.append(f, &self.shared, dl, self.nshards, lo, hi),
+                    None => ep.drop_first(f, &self.shared, self.nshards, lo, hi),
+                };
+                if let Err(e) = res {
+                    failure = Some(format!("{}: {e}", ep.describe()));
+                    break;
+                }
             }
         }
+        if let Some(msg) = failure {
+            self.note_degraded(format!("shard delta failed ({msg})"));
+            self.pool = None;
+        }
+    }
+
+    /// Fan the append cross-Gram border out over the endpoints and gather
+    /// the slices in plan order.
+    fn gather_hborder(&self, lam_new: &[f64], out: &mut [f64]) -> anyhow::Result<()> {
+        let pool = self.pool.as_ref().expect("h-border fan-out without a pool");
+        let mut endpoints = pool.borrow_mut();
+        for ep in endpoints.iter_mut() {
+            ep.start_hborder(lam_new)?;
+        }
+        for (id, ep) in endpoints.iter_mut().enumerate() {
+            let slice = ep.finish_hborder()?;
+            let (lo, hi) = self.plan[id];
+            anyhow::ensure!(
+                slice.len() == hi - lo,
+                "h-border slice from {} has length {} (expected {})",
+                ep.describe(),
+                slice.len(),
+                hi - lo
+            );
+            out[lo..hi].copy_from_slice(&slice);
+        }
+        Ok(())
     }
 
     /// Append one observation to `f` *and* the shard state — the online
@@ -493,110 +891,163 @@ impl ShardedGramFactors {
     /// `O(N)` kernel evaluations happen exactly once on the coordinator —
     /// the same count as a serial [`GramFactors::append`], pinned by the
     /// counting-kernel test. Results are bit-identical to the serial path.
+    /// A transport failure mid-append degrades the engine (the border is
+    /// recomputed serially — identical dot products — and the authoritative
+    /// factors never miss the observation).
     pub fn append(&mut self, f: &mut GramFactors, kernel: &dyn ScalarKernel, x_new: &[f64]) {
         assert_eq!(f.n(), self.n, "shard engine out of sync with factors");
-        match &self.pool {
-            Some(pool) => {
-                let n = f.n();
-                let (xt_new, lam_new) = f.append_prelude(kernel, x_new);
-                let mut h_col = vec![0.0; n + 1];
-                let (tx, rx) = channel();
-                for wtx in &pool.txs {
-                    wtx.send(Job::HBorder { lam_new: lam_new.clone(), reply: tx.clone() })
-                        .expect("shard worker hung up");
-                }
-                drop(tx);
-                for _ in 0..pool.txs.len() {
-                    let (id, slice) = rx.recv().expect("shard worker died");
-                    let (lo, hi) = self.plan[id];
-                    h_col[lo..hi].copy_from_slice(&slice);
-                }
-                h_col[n] = h_border_corner(&xt_new, &lam_new);
-                f.apply_append_border(kernel, xt_new, lam_new, h_col);
-            }
-            None => f.append(kernel, x_new),
+        if self.is_degraded() {
+            self.pool = None;
         }
-        self.resync(f);
+        if self.pool.is_none() {
+            f.append(kernel, x_new);
+            self.refresh_local(f);
+            return;
+        }
+        let n = f.n();
+        let (xt_new, lam_new) = f.append_prelude(kernel, x_new);
+        let mut h_col = vec![0.0; n + 1];
+        if let Err(e) = self.gather_hborder(&lam_new, &mut h_col[..n]) {
+            self.note_degraded(format!("h-border fan-out failed ({e})"));
+            self.pool = None;
+            h_border_range(&f.xt, &lam_new, 0, n, &mut h_col[..n]);
+        }
+        h_col[n] = h_border_corner(&xt_new, &lam_new);
+        let delta_xt = xt_new.clone();
+        let delta_lam = lam_new.clone();
+        let delta_h = h_col.clone();
+        let (kp_col, kpp_col) = f.apply_append_border(kernel, xt_new, lam_new, h_col);
+        let delta = AppendDelta {
+            xt_new: delta_xt,
+            lam_new: delta_lam,
+            h_col: delta_h,
+            kp_col,
+            kpp_col,
+        };
+        self.refresh_local(f);
+        self.push_delta(f, Some(&delta));
     }
 
     /// Drop the oldest observation from `f` and slide the shard boundaries
-    /// over the retained panels — zero kernel work, zero recomputation.
+    /// over the retained panels — zero kernel work, zero recomputation
+    /// (and, for remote shards, a zero-payload wire frame).
     pub fn drop_first(&mut self, f: &mut GramFactors) {
         assert_eq!(f.n(), self.n, "shard engine out of sync with factors");
         f.drop_first();
-        self.resync(f);
+        if self.is_degraded() {
+            self.pool = None;
+        }
+        self.refresh_local(f);
+        self.push_delta(f, None);
+    }
+
+    /// Inline full-range application on the retained fallback state — the
+    /// single-shard path and the post-degradation serving path (identical
+    /// arithmetic, hence bit-identical results).
+    fn apply_fallback(&self, x: &Mat, y: &mut Mat) {
+        let sh = &self.shared;
+        let st = &self.fallback;
+        let block = match sh.class {
+            KernelClass::DotProduct => apply_dot(sh, st, x),
+            KernelClass::Stationary => {
+                // single range: the diag slice already is the full diag
+                let (pblocks, diag) = apply_phase_p(sh, st, x);
+                apply_finish_stationary(sh, st, x, &pblocks, &diag)
+            }
+        };
+        y.as_mut_slice().copy_from_slice(block.as_slice());
+    }
+
+    /// The pooled (multi-worker) block application: dispatch, gather the
+    /// stationary `P` diagonal, broadcast it, reduce the disjoint output
+    /// row blocks. Every receive is bounded by the transport (channel
+    /// disconnection / socket timeout), so a lost worker yields `Err`, not
+    /// a hang.
+    fn apply_pooled(&self, x: &Mat, y: &mut Mat) -> anyhow::Result<()> {
+        let pool = self.pool.as_ref().expect("pooled apply without a pool");
+        let mut endpoints = pool.borrow_mut();
+        let xin = Arc::new(x.clone());
+        let stationary = self.shared.class == KernelClass::Stationary;
+        for ep in endpoints.iter_mut() {
+            ep.start_apply(&xin, stationary)?;
+        }
+        if stationary {
+            // reduce the per-shard P-diagonal slices, then broadcast
+            let mut pdiag = Mat::zeros(self.n, x.cols());
+            for (id, ep) in endpoints.iter_mut().enumerate() {
+                let diag = ep.recv_diag()?;
+                let (lo, hi) = self.plan[id];
+                anyhow::ensure!(
+                    diag.rows() == hi - lo && diag.cols() == x.cols(),
+                    "P-diagonal slice from {} is {}x{} (expected {}x{})",
+                    ep.describe(),
+                    diag.rows(),
+                    diag.cols(),
+                    hi - lo,
+                    x.cols()
+                );
+                for k in 0..diag.cols() {
+                    pdiag.col_mut(k)[lo..hi].copy_from_slice(diag.col(k));
+                }
+            }
+            let pdiag = Arc::new(pdiag);
+            for ep in endpoints.iter_mut() {
+                ep.send_pdiag(&pdiag)?;
+            }
+        }
+        // reduce the disjoint output row blocks
+        for (id, ep) in endpoints.iter_mut().enumerate() {
+            let block = ep.recv_out()?;
+            let (lo, hi) = self.plan[id];
+            anyhow::ensure!(
+                block.rows() == (hi - lo) * self.d && block.cols() == x.cols(),
+                "output block from {} is {}x{} (expected {}x{})",
+                ep.describe(),
+                block.rows(),
+                block.cols(),
+                (hi - lo) * self.d,
+                x.cols()
+            );
+            for k in 0..block.cols() {
+                y.col_mut(k)[lo * self.d..hi * self.d].copy_from_slice(block.col(k));
+            }
+        }
+        Ok(())
     }
 
     /// `Y ← (∇K∇′) X` for stacked right-hand sides (`X`, `Y` both
     /// `(N·D)×K`, each column one vec'd `D×N` RHS, flat index
     /// `(a, i) ↦ a·D + i`). Shard-parallel; bit-identical to the serial
     /// [`GramFactors::matvec_into`] per column.
-    pub fn apply_block_into(&self, x: &Mat, y: &mut Mat) {
+    ///
+    /// A transport failure returns a clean `Err` *once* — the engine
+    /// degrades and every later call serves from the in-process fallback
+    /// (still bit-identical). Callers on the solve path surface the error
+    /// through [`ShardedGramOperator::take_error`].
+    pub fn apply_block_into(&self, x: &Mat, y: &mut Mat) -> anyhow::Result<()> {
         let nd = self.n * self.d;
         assert_eq!(x.rows(), nd, "block input dimension mismatch");
         assert_eq!((y.rows(), y.cols()), (x.rows(), x.cols()));
-        if let Some(st) = &self.local {
-            let sh = &self.shared;
-            let block = match sh.class {
-                KernelClass::DotProduct => apply_dot(sh, st, x),
-                KernelClass::Stationary => {
-                    // single shard: the diag slice already is the full diag
-                    let (pblocks, diag) = apply_phase_p(sh, st, x);
-                    apply_finish_stationary(sh, st, x, &pblocks, &diag)
-                }
-            };
-            y.as_mut_slice().copy_from_slice(block.as_slice());
-            return;
+        if self.pool.is_none() || self.is_degraded() {
+            self.apply_fallback(x, y);
+            return Ok(());
         }
-        let pool = self.pool.as_ref().expect("sharded pool");
-        let s = pool.txs.len();
-        let xin = Arc::new(x.clone());
-        let (reply_tx, reply_rx) = channel();
-        let stationary = self.shared.class == KernelClass::Stationary;
-        let mut diag_txs = Vec::with_capacity(if stationary { s } else { 0 });
-        for tx in &pool.txs {
-            let pdiag_rx = if stationary {
-                let (dtx, drx) = channel();
-                diag_txs.push(dtx);
-                Some(drx)
-            } else {
-                None
-            };
-            tx.send(Job::Apply { xin: Arc::clone(&xin), reply: reply_tx.clone(), pdiag_rx })
-                .expect("shard worker hung up");
-        }
-        drop(reply_tx);
-        if stationary {
-            // reduce the per-shard P-diagonal slices, then broadcast
-            let mut pdiag = Mat::zeros(self.n, x.cols());
-            for _ in 0..s {
-                match reply_rx.recv().expect("shard worker died") {
-                    ApplyMsg::Diag { id, diag } => {
-                        let (lo, hi) = self.plan[id];
-                        for k in 0..diag.cols() {
-                            pdiag.col_mut(k)[lo..hi].copy_from_slice(diag.col(k));
-                        }
-                    }
-                    ApplyMsg::Out { .. } => {
-                        unreachable!("shard sent output before the P-diagonal barrier")
-                    }
+        match self.apply_pooled(x, y) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let msg = format!("shard apply failed ({e})");
+                self.note_degraded(msg.clone());
+                // release the surviving endpoints NOW (their Drop impls
+                // send the shutdown sentinel / frame, freeing workers
+                // parked at the P-diagonal barrier) — a serve-only
+                // workload may never hit the next &mut delta that would
+                // clear `pool` itself
+                if let Some(pool) = self.pool.as_ref() {
+                    pool.borrow_mut().clear();
                 }
-            }
-            let pdiag = Arc::new(pdiag);
-            for dtx in &diag_txs {
-                dtx.send(Arc::clone(&pdiag)).expect("shard worker hung up");
-            }
-        }
-        // reduce the disjoint output row blocks
-        for _ in 0..s {
-            match reply_rx.recv().expect("shard worker died") {
-                ApplyMsg::Out { id, block } => {
-                    let (lo, hi) = self.plan[id];
-                    for k in 0..block.cols() {
-                        y.col_mut(k)[lo * self.d..hi * self.d].copy_from_slice(block.col(k));
-                    }
-                }
-                ApplyMsg::Diag { .. } => unreachable!("stray P-diagonal after the barrier"),
+                Err(anyhow::anyhow!(
+                    "{msg}; the engine now serves from the in-process single-shard fallback"
+                ))
             }
         }
     }
@@ -610,9 +1061,17 @@ impl ShardedGramFactors {
 
 /// [`LinearOp`] adapter over [`ShardedGramFactors`] — the drop-in
 /// replacement for [`super::GramOperator`] on the block-CG serving path.
+///
+/// [`LinearOp::apply`] cannot return errors, so a transport failure
+/// *poisons* the operator instead: the failing and every subsequent
+/// application writes zeros, and the driving solve must check
+/// [`ShardedGramOperator::take_error`] after the Krylov loop — that is how
+/// a mid-apply worker disconnect surfaces as a clean `anyhow` error on the
+/// solve path instead of a hang or a silently wrong result.
 pub struct ShardedGramOperator<'a> {
     engine: &'a ShardedGramFactors,
-    ws: std::cell::RefCell<(Mat, Mat)>,
+    ws: RefCell<(Mat, Mat)>,
+    error: RefCell<Option<anyhow::Error>>,
 }
 
 impl<'a> ShardedGramOperator<'a> {
@@ -620,7 +1079,26 @@ impl<'a> ShardedGramOperator<'a> {
         let nd = engine.n * engine.d;
         ShardedGramOperator {
             engine,
-            ws: std::cell::RefCell::new((Mat::zeros(nd, 1), Mat::zeros(nd, 1))),
+            ws: RefCell::new((Mat::zeros(nd, 1), Mat::zeros(nd, 1))),
+            error: RefCell::new(None),
+        }
+    }
+
+    /// The transport failure observed by this operator, if any. Must be
+    /// checked after every solve that drove it; a `Some` means the solve's
+    /// result is garbage (the poisoned applications returned zeros).
+    pub fn take_error(&self) -> Option<anyhow::Error> {
+        self.error.borrow_mut().take()
+    }
+
+    fn run_apply(&self, x: &Mat, y: &mut Mat) {
+        if self.error.borrow().is_some() {
+            y.as_mut_slice().fill(0.0);
+            return;
+        }
+        if let Err(e) = self.engine.apply_block_into(x, y) {
+            *self.error.borrow_mut() = Some(e);
+            y.as_mut_slice().fill(0.0);
         }
     }
 }
@@ -634,12 +1112,12 @@ impl LinearOp for ShardedGramOperator<'_> {
         let mut guard = self.ws.borrow_mut();
         let (vin, vout) = &mut *guard;
         vin.as_mut_slice().copy_from_slice(x);
-        self.engine.apply_block_into(vin, vout);
+        self.run_apply(vin, vout);
         y.copy_from_slice(vout.as_slice());
     }
 
     fn apply_block(&self, x: &Mat, y: &mut Mat) {
-        self.engine.apply_block_into(x, y);
+        self.run_apply(x, y);
     }
 }
 
@@ -699,10 +1177,26 @@ mod tests {
         assert_eq!(engine.plan().len(), 7);
         let xin = Mat::from_fn(10, 2, |_, _| rng.gauss());
         let mut y = Mat::zeros(10, 2);
-        engine.apply_block_into(&xin, &mut y);
+        engine.apply_block_into(&xin, &mut y).unwrap();
         let mut want = Mat::zeros(10, 2);
         let op = super::super::GramOperator::new(&f);
         op.apply_block(&xin, &mut want);
         assert!((&y - &want).max_abs() == 0.0, "empty shards must not disturb bit-identity");
+    }
+
+    #[test]
+    fn fallback_state_matches_pooled_apply() {
+        // the degradation fallback must be the bit-identical single-shard
+        // path; exercise it directly through the private entry point
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(4, 6, |_, _| rng.gauss());
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+        let engine = ShardedGramFactors::new(&f, 3);
+        let xin = Mat::from_fn(24, 2, |_, _| rng.gauss());
+        let mut pooled = Mat::zeros(24, 2);
+        engine.apply_block_into(&xin, &mut pooled).unwrap();
+        let mut inline = Mat::zeros(24, 2);
+        engine.apply_fallback(&xin, &mut inline);
+        assert!((&pooled - &inline).max_abs() == 0.0);
     }
 }

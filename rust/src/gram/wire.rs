@@ -1,0 +1,663 @@
+//! Length-prefixed wire format for the cross-node shard transport.
+//!
+//! Every message is one **frame**: a 4-byte little-endian payload length, a
+//! 1-byte message tag, then the payload. Payload primitives are all
+//! little-endian — `u8`/`u32`/`u64`, `f64` as IEEE-754 bit patterns
+//! (`to_bits`/`from_bits`, so a round trip is *exact* and the remote
+//! mirrors hold the same bits as the coordinator's panels), length-prefixed
+//! `f64` vectors, column-major matrices (`rows`, `cols`, data) and UTF-8
+//! strings. No external dependencies: this module and [`super::remote`] are
+//! plain `std::net` + `std::io`.
+//!
+//! The protocol is versioned: a connection opens with
+//! [`CoordFrame::Hello`] (magic + version) answered by
+//! [`WorkerFrame::HelloAck`]; a mismatch on either side is a clean error,
+//! never a misparse. Decoding is defensive — frames larger than
+//! [`MAX_FRAME_BYTES`], truncated payloads, unknown tags, non-UTF-8
+//! strings and dimension/length overflows all return descriptive
+//! `anyhow` errors (and the reader never allocates more than the declared,
+//! bounded frame size).
+//!
+//! Coordinator → worker ([`CoordFrame`]): `Hello`, `Sync` (full panel
+//! broadcast — once per plan refresh), `Append` / `DropFirst` (the
+//! `O(N + D)` / zero-payload online deltas), `HBorder` (append border
+//! fan-out), `Apply` (stacked right-hand sides), `PDiag` (the stationary
+//! two-phase barrier broadcast) and `Shutdown`. Worker → coordinator
+//! ([`WorkerFrame`]): `HelloAck`, `HBorderSlice`, `Diag`, `Out` and `Err`
+//! (a worker-side failure surfaced as a message instead of a dropped
+//! connection).
+
+use std::io::{Read, Write};
+
+use crate::gram::Metric;
+use crate::kernels::KernelClass;
+use crate::linalg::Mat;
+
+/// `b"GDKW"` as a little-endian u32 — the handshake magic.
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"GDKW");
+
+/// Protocol version; bumped on any frame-layout change.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
+/// length prefix fails fast instead of triggering a huge allocation.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+// Coordinator → worker tags.
+const TAG_HELLO: u8 = 0x01;
+const TAG_SYNC: u8 = 0x02;
+const TAG_HBORDER: u8 = 0x03;
+const TAG_APPLY: u8 = 0x04;
+const TAG_PDIAG: u8 = 0x05;
+const TAG_APPEND: u8 = 0x06;
+const TAG_DROP_FIRST: u8 = 0x07;
+const TAG_SHUTDOWN: u8 = 0x08;
+// Worker → coordinator tags.
+const TAG_HELLO_ACK: u8 = 0x81;
+const TAG_HBORDER_SLICE: u8 = 0x82;
+const TAG_DIAG: u8 = 0x83;
+const TAG_OUT: u8 = 0x84;
+const TAG_ERR: u8 = 0x85;
+
+/// Full shard-state broadcast: the shared panels plus the square
+/// derivative panels the worker mirrors, and the worker's place in the
+/// deterministic plan ([`super::sharded::shard_plan`]).
+pub struct SyncFrame {
+    pub shard_id: u32,
+    pub nshards: u32,
+    pub class: KernelClass,
+    pub metric: Metric,
+    /// `X̃` (`D×N`).
+    pub xt: Mat,
+    /// `ΛX̃` (`D×N`).
+    pub lam_xt: Mat,
+    /// `K̂′` (`N×N`).
+    pub kp_eff: Mat,
+    /// `K̂″` (`N×N`).
+    pub kpp_eff: Mat,
+    /// Cross-Gram `H` (`N×N`).
+    pub h: Mat,
+}
+
+/// The `O(N + D)` online append delta (see
+/// [`super::sharded::AppendDelta`]): borders are evaluated exactly once on
+/// the coordinator and shipped bit-exact.
+pub struct AppendFrame {
+    pub xt_new: Vec<f64>,
+    pub lam_new: Vec<f64>,
+    pub h_col: Vec<f64>,
+    pub kp_col: Vec<f64>,
+    pub kpp_col: Vec<f64>,
+}
+
+/// Coordinator → worker messages.
+pub enum CoordFrame {
+    Hello { magic: u32, version: u16 },
+    Sync(Box<SyncFrame>),
+    HBorder { lam_new: Vec<f64> },
+    Apply { xin: Mat },
+    PDiag { pdiag: Mat },
+    Append(Box<AppendFrame>),
+    DropFirst,
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+pub enum WorkerFrame {
+    HelloAck { version: u16 },
+    HBorderSlice { slice: Vec<f64> },
+    Diag { diag: Mat },
+    Out { block: Mat },
+    Err { message: String },
+}
+
+// ---------------------------------------------------------------------------
+// encoding
+
+/// Payload builder.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn mat(&mut self, m: &Mat) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &x in m.as_slice() {
+            self.f64(x);
+        }
+    }
+
+    fn string(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn metric(&mut self, m: &Metric) {
+        match m {
+            Metric::Iso(l) => {
+                self.u8(0);
+                self.f64(*l);
+            }
+            Metric::Diag(ls) => {
+                self.u8(1);
+                self.vec_f64(ls);
+            }
+        }
+    }
+
+    fn class(&mut self, c: KernelClass) {
+        self.u8(match c {
+            KernelClass::DotProduct => 0,
+            KernelClass::Stationary => 1,
+        });
+    }
+}
+
+/// Payload cursor with bounds-checked reads (a truncated payload is a
+/// "short frame" error, never a panic).
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "short frame: needed {n} more bytes, have {}",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length that must be payable in remaining `elem_bytes`-sized units.
+    fn len(&mut self, elem_bytes: usize) -> anyhow::Result<usize> {
+        let n = self.u64()?;
+        let n: usize = n
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("length {n} overflows this platform"))?;
+        let bytes = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| anyhow::anyhow!("length {n} overflows the frame"))?;
+        anyhow::ensure!(
+            bytes <= self.remaining(),
+            "short frame: {n} elements declared, {} bytes left",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    fn vec_f64(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn mat(&mut self) -> anyhow::Result<Mat> {
+        let rows = self.len(0)?;
+        let cols = self.len(0)?;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
+        let bytes = count
+            .checked_mul(8)
+            .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
+        anyhow::ensure!(
+            bytes <= self.remaining(),
+            "short frame: {rows}x{cols} matrix declared, {} bytes left",
+            self.remaining()
+        );
+        let mut data = Vec::with_capacity(count);
+        for _ in 0..count {
+            data.push(self.f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow::anyhow!("non-UTF-8 string in frame"))
+    }
+
+    fn metric(&mut self) -> anyhow::Result<Metric> {
+        match self.u8()? {
+            0 => Ok(Metric::Iso(self.f64()?)),
+            1 => Ok(Metric::Diag(self.vec_f64()?)),
+            t => Err(anyhow::anyhow!("unknown metric tag {t}")),
+        }
+    }
+
+    fn class(&mut self) -> anyhow::Result<KernelClass> {
+        match self.u8()? {
+            0 => Ok(KernelClass::DotProduct),
+            1 => Ok(KernelClass::Stationary),
+            t => Err(anyhow::anyhow!("unknown kernel-class tag {t}")),
+        }
+    }
+
+    fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.remaining() == 0, "{} trailing bytes in frame", self.remaining());
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// framing
+
+/// Write one `[len:u32][tag:u8][payload]` frame in a single `write_all`.
+fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        payload.len() <= MAX_FRAME_BYTES as usize,
+        "frame too large to send: {} bytes (tag {tag:#04x})",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.push(tag);
+    out.extend_from_slice(payload);
+    w.write_all(&out).map_err(|e| anyhow::anyhow!("writing frame (tag {tag:#04x}): {e}"))?;
+    w.flush().map_err(|e| anyhow::anyhow!("flushing frame (tag {tag:#04x}): {e}"))?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes, retrying on `Interrupted`. `Ok(0)` from
+/// the underlying reader (peer closed) and timeouts both become errors
+/// naming `what`.
+fn read_exact_ctx(r: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Ok(got),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow::anyhow!("reading {what}: {e}")),
+        }
+    }
+    Ok(got)
+}
+
+/// Read one frame; `Ok(None)` on a clean end-of-stream *between* frames
+/// (the peer hung up idle). A connection cut mid-frame is an error.
+pub fn read_frame_opt(r: &mut impl Read) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
+    let mut hdr = [0u8; 5];
+    let got = read_exact_ctx(r, &mut hdr, "frame header")?;
+    if got == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(got == 5, "connection closed mid-frame-header ({got}/5 bytes)");
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    let tag = hdr[4];
+    anyhow::ensure!(
+        len <= MAX_FRAME_BYTES,
+        "frame too large: {len} bytes declared (tag {tag:#04x})"
+    );
+    let mut payload = vec![0u8; len as usize];
+    let got = read_exact_ctx(r, &mut payload, "frame payload")?;
+    anyhow::ensure!(
+        got == payload.len(),
+        "connection closed mid-frame: {got}/{len} payload bytes (tag {tag:#04x})"
+    );
+    Ok(Some((tag, payload)))
+}
+
+/// Read one frame; end-of-stream is an error ("expected a frame").
+pub fn read_frame(r: &mut impl Read) -> anyhow::Result<(u8, Vec<u8>)> {
+    read_frame_opt(r)?.ok_or_else(|| anyhow::anyhow!("connection closed: expected a frame"))
+}
+
+// ---------------------------------------------------------------------------
+// message codecs
+
+impl CoordFrame {
+    pub fn write_to(&self, w: &mut impl Write) -> anyhow::Result<()> {
+        let mut e = Enc::new();
+        let tag = match self {
+            CoordFrame::Hello { magic, version } => {
+                e.u32(*magic);
+                e.u16(*version);
+                TAG_HELLO
+            }
+            CoordFrame::Sync(sf) => {
+                e.u32(sf.shard_id);
+                e.u32(sf.nshards);
+                e.class(sf.class);
+                e.metric(&sf.metric);
+                e.mat(&sf.xt);
+                e.mat(&sf.lam_xt);
+                e.mat(&sf.kp_eff);
+                e.mat(&sf.kpp_eff);
+                e.mat(&sf.h);
+                TAG_SYNC
+            }
+            CoordFrame::HBorder { lam_new } => {
+                e.vec_f64(lam_new);
+                TAG_HBORDER
+            }
+            CoordFrame::Apply { xin } => {
+                e.mat(xin);
+                TAG_APPLY
+            }
+            CoordFrame::PDiag { pdiag } => {
+                e.mat(pdiag);
+                TAG_PDIAG
+            }
+            CoordFrame::Append(af) => {
+                e.vec_f64(&af.xt_new);
+                e.vec_f64(&af.lam_new);
+                e.vec_f64(&af.h_col);
+                e.vec_f64(&af.kp_col);
+                e.vec_f64(&af.kpp_col);
+                TAG_APPEND
+            }
+            CoordFrame::DropFirst => TAG_DROP_FIRST,
+            CoordFrame::Shutdown => TAG_SHUTDOWN,
+        };
+        write_frame(w, tag, &e.buf)
+    }
+
+    pub fn decode(tag: u8, payload: &[u8]) -> anyhow::Result<Self> {
+        let mut d = Dec::new(payload);
+        let frame = match tag {
+            TAG_HELLO => CoordFrame::Hello { magic: d.u32()?, version: d.u16()? },
+            TAG_SYNC => CoordFrame::Sync(Box::new(SyncFrame {
+                shard_id: d.u32()?,
+                nshards: d.u32()?,
+                class: d.class()?,
+                metric: d.metric()?,
+                xt: d.mat()?,
+                lam_xt: d.mat()?,
+                kp_eff: d.mat()?,
+                kpp_eff: d.mat()?,
+                h: d.mat()?,
+            })),
+            TAG_HBORDER => CoordFrame::HBorder { lam_new: d.vec_f64()? },
+            TAG_APPLY => CoordFrame::Apply { xin: d.mat()? },
+            TAG_PDIAG => CoordFrame::PDiag { pdiag: d.mat()? },
+            TAG_APPEND => CoordFrame::Append(Box::new(AppendFrame {
+                xt_new: d.vec_f64()?,
+                lam_new: d.vec_f64()?,
+                h_col: d.vec_f64()?,
+                kp_col: d.vec_f64()?,
+                kpp_col: d.vec_f64()?,
+            })),
+            TAG_DROP_FIRST => CoordFrame::DropFirst,
+            TAG_SHUTDOWN => CoordFrame::Shutdown,
+            t => anyhow::bail!("unknown coordinator frame tag {t:#04x}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+
+    pub fn read_from(r: &mut impl Read) -> anyhow::Result<Self> {
+        let (tag, payload) = read_frame(r)?;
+        Self::decode(tag, &payload)
+    }
+
+    /// Like [`CoordFrame::read_from`] but `Ok(None)` on a clean
+    /// end-of-stream between frames.
+    pub fn read_opt(r: &mut impl Read) -> anyhow::Result<Option<Self>> {
+        match read_frame_opt(r)? {
+            Some((tag, payload)) => Ok(Some(Self::decode(tag, &payload)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+impl WorkerFrame {
+    pub fn write_to(&self, w: &mut impl Write) -> anyhow::Result<()> {
+        let mut e = Enc::new();
+        let tag = match self {
+            WorkerFrame::HelloAck { version } => {
+                e.u16(*version);
+                TAG_HELLO_ACK
+            }
+            WorkerFrame::HBorderSlice { slice } => {
+                e.vec_f64(slice);
+                TAG_HBORDER_SLICE
+            }
+            WorkerFrame::Diag { diag } => {
+                e.mat(diag);
+                TAG_DIAG
+            }
+            WorkerFrame::Out { block } => {
+                e.mat(block);
+                TAG_OUT
+            }
+            WorkerFrame::Err { message } => {
+                e.string(message);
+                TAG_ERR
+            }
+        };
+        write_frame(w, tag, &e.buf)
+    }
+
+    pub fn decode(tag: u8, payload: &[u8]) -> anyhow::Result<Self> {
+        let mut d = Dec::new(payload);
+        let frame = match tag {
+            TAG_HELLO_ACK => WorkerFrame::HelloAck { version: d.u16()? },
+            TAG_HBORDER_SLICE => WorkerFrame::HBorderSlice { slice: d.vec_f64()? },
+            TAG_DIAG => WorkerFrame::Diag { diag: d.mat()? },
+            TAG_OUT => WorkerFrame::Out { block: d.mat()? },
+            TAG_ERR => WorkerFrame::Err { message: d.string()? },
+            t => anyhow::bail!("unknown worker frame tag {t:#04x}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+
+    pub fn read_from(r: &mut impl Read) -> anyhow::Result<Self> {
+        let (tag, payload) = read_frame(r)?;
+        Self::decode(tag, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_coord(frame: &CoordFrame) -> CoordFrame {
+        let mut buf = Vec::new();
+        frame.write_to(&mut buf).unwrap();
+        let mut cur = &buf[..];
+        let got = CoordFrame::read_from(&mut cur).unwrap();
+        assert!(cur.is_empty(), "frame must consume exactly its bytes");
+        got
+    }
+
+    #[test]
+    fn hello_roundtrip_is_exact() {
+        match roundtrip_coord(&CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION }) {
+            CoordFrame::Hello { magic, version } => {
+                assert_eq!(magic, WIRE_MAGIC);
+                assert_eq!(version, WIRE_VERSION);
+            }
+            _ => panic!("wrong frame"),
+        }
+    }
+
+    #[test]
+    fn sync_roundtrip_is_bit_exact() {
+        // exotic bit patterns must survive: negative zero, subnormals, NaN
+        let vals = [0.0, -0.0, f64::MIN_POSITIVE / 2.0, 1.5e300, -3.25, f64::NAN];
+        let m = Mat::from_fn(2, 3, |i, j| vals[(i * 3 + j) % vals.len()]);
+        let sf = SyncFrame {
+            shard_id: 2,
+            nshards: 5,
+            class: KernelClass::Stationary,
+            metric: Metric::Diag(vec![0.5, 2.0]),
+            xt: m.clone(),
+            lam_xt: m.clone(),
+            kp_eff: Mat::from_fn(3, 3, |i, j| (i + 7 * j) as f64 * 0.1),
+            kpp_eff: Mat::from_fn(3, 3, |i, j| (3 * i + j) as f64 * -0.2),
+            h: Mat::from_fn(3, 3, |i, j| (i * j) as f64),
+        };
+        match roundtrip_coord(&CoordFrame::Sync(Box::new(sf))) {
+            CoordFrame::Sync(got) => {
+                assert_eq!(got.shard_id, 2);
+                assert_eq!(got.nshards, 5);
+                assert_eq!(got.class, KernelClass::Stationary);
+                assert_eq!(got.metric, Metric::Diag(vec![0.5, 2.0]));
+                for (a, b) in got.xt.as_slice().iter().zip(m.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "f64 round trip must be bit-exact");
+                }
+            }
+            _ => panic!("wrong frame"),
+        }
+    }
+
+    #[test]
+    fn append_and_control_frames_roundtrip() {
+        let af = AppendFrame {
+            xt_new: vec![1.0, 2.0],
+            lam_new: vec![0.5, 1.0],
+            h_col: vec![0.1, 0.2, 0.3],
+            kp_col: vec![-1.0, -2.0, -3.0],
+            kpp_col: vec![4.0, 5.0, 6.0],
+        };
+        match roundtrip_coord(&CoordFrame::Append(Box::new(af))) {
+            CoordFrame::Append(got) => {
+                assert_eq!(got.h_col, vec![0.1, 0.2, 0.3]);
+                assert_eq!(got.kpp_col, vec![4.0, 5.0, 6.0]);
+            }
+            _ => panic!("wrong frame"),
+        }
+        assert!(matches!(roundtrip_coord(&CoordFrame::DropFirst), CoordFrame::DropFirst));
+        assert!(matches!(roundtrip_coord(&CoordFrame::Shutdown), CoordFrame::Shutdown));
+    }
+
+    #[test]
+    fn worker_frames_roundtrip() {
+        let mut buf = Vec::new();
+        WorkerFrame::Err { message: "boom × unicode".into() }.write_to(&mut buf).unwrap();
+        WorkerFrame::HBorderSlice { slice: vec![1.0, -2.0] }.write_to(&mut buf).unwrap();
+        let mut cur = &buf[..];
+        match WorkerFrame::read_from(&mut cur).unwrap() {
+            WorkerFrame::Err { message } => assert_eq!(message, "boom × unicode"),
+            _ => panic!("wrong frame"),
+        }
+        match WorkerFrame::read_from(&mut cur).unwrap() {
+            WorkerFrame::HBorderSlice { slice } => assert_eq!(slice, vec![1.0, -2.0]),
+            _ => panic!("wrong frame"),
+        }
+        assert!(cur.is_empty());
+    }
+
+    #[test]
+    fn short_frame_is_a_clean_error() {
+        let mut buf = Vec::new();
+        CoordFrame::Apply { xin: Mat::from_fn(4, 2, |i, j| (i + j) as f64) }
+            .write_to(&mut buf)
+            .unwrap();
+        // truncate the payload: the reader must error, not hang or panic
+        buf.truncate(buf.len() - 3);
+        let mut cur = &buf[..];
+        let err = CoordFrame::read_from(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("mid-frame"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn truncated_payload_inside_frame_is_short_frame_error() {
+        // a frame whose length lies about its contents: decode must catch it
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&8u64.to_le_bytes()); // vector claims 8 entries
+        payload.extend_from_slice(&1.0f64.to_bits().to_le_bytes()); // but ships 1
+        let err = CoordFrame::decode(0x03, &payload).unwrap_err().to_string();
+        assert!(err.contains("short frame"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.push(TAG_APPLY);
+        let mut cur = &buf[..];
+        let err = read_frame(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("too large"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn unknown_tags_and_trailing_bytes_rejected() {
+        assert!(CoordFrame::decode(0x7f, &[]).is_err());
+        assert!(WorkerFrame::decode(0x7f, &[]).is_err());
+        // DropFirst takes no payload: trailing bytes are a protocol error
+        assert!(CoordFrame::decode(TAG_DROP_FIRST, &[0]).is_err());
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        let empty: &[u8] = &[];
+        let mut cur = empty;
+        assert!(read_frame_opt(&mut cur).unwrap().is_none());
+    }
+}

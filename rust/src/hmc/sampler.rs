@@ -15,6 +15,14 @@ pub trait GradientSource {
     fn grad(&mut self, x: &[f64]) -> Vec<f64>;
     /// Number of *true* target-gradient evaluations consumed so far.
     fn true_grad_evals(&self) -> usize;
+    /// Number of queries this source answered with a **degraded** gradient
+    /// (e.g. the serving coordinator substituting zero after an engine
+    /// error). Sources that cannot degrade keep the default `0`; the chain
+    /// diagnostics surface a non-zero count through
+    /// [`HmcRun::degraded_grad_queries`].
+    fn degraded_queries(&self) -> usize {
+        0
+    }
 }
 
 /// The exact gradient of the target.
@@ -70,6 +78,12 @@ pub struct HmcRun {
     pub energy_evals: usize,
     /// True-gradient evaluations consumed by the gradient source.
     pub true_grad_evals: usize,
+    /// Gradient queries the source answered with a degraded (substituted)
+    /// gradient — see [`GradientSource::degraded_queries`]. A non-zero
+    /// count means some leapfrog trajectories ran on zero gradients:
+    /// still a valid sampler (the Metropolis test uses the true energy),
+    /// but the acceptance rate is not what the surrogate should deliver.
+    pub degraded_grad_queries: usize,
     /// Final state of the chain.
     pub x_final: Vec<f64>,
 }
@@ -144,6 +158,7 @@ pub fn run_hmc(
         accept_rate: accepted as f64 / n_samples.max(1) as f64,
         energy_evals,
         true_grad_evals: grad.true_grad_evals(),
+        degraded_grad_queries: grad.degraded_queries(),
         x_final: x,
     }
 }

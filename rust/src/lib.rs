@@ -73,6 +73,25 @@
 //!   `gp.window` bounds per-shard memory exactly as it bounds the global
 //!   panels. Pinned by `tests/sharded_gram.rs` and
 //!   `benches/shard_scaling.rs` (`cargo bench --bench shard_scaling`).
+//! * **[`gram::remote`]** — the same shard worker protocol **cross-node**:
+//!   a std-only TCP transport speaking length-prefixed, versioned frames
+//!   ([`gram::wire`]), hosted by `gdkron shard-worker --listen host:port`.
+//!   Workers mirror the factor panels, so the broadcast cost model is:
+//!   one `O(N² + ND)` panel sync per plan refresh (attach, rollback, cold
+//!   refit), then `O(N + D)` bytes per online `append` (borders evaluated
+//!   exactly once, on the coordinator) and a zero-payload frame per
+//!   `drop_first` — while every apply runs the exact serial per-column
+//!   kernels, keeping remote results **bit-identical** to the in-process
+//!   and single-shard paths (`tests/remote_gram.rs`). Knob:
+//!   `GDKRON_REMOTE_SHARDS` (comma-separated `host:port`) beats
+//!   `gram.remote_shards` (string array) —
+//!   [`config::resolve_remote_shards`] — and a non-empty list wins over
+//!   the in-process `gram.shards`; socket operations are bounded by
+//!   `gram.remote_timeout_ms` (default 5000). Every transport failure
+//!   (disconnect mid-apply, short frame, version mismatch) surfaces as a
+//!   clean `anyhow` error on the solve path that observed it — never a
+//!   hang — after which the coordinator serves from the retained
+//!   in-process single-shard fallback.
 //!
 //! ## Architecture
 //!

@@ -5,6 +5,7 @@
 //! gdkron run <config.toml> [--key value …]   # config-driven launcher
 //! gdkron artifacts [--dir artifacts]          # list AOT artifacts
 //! gdkron validate  [--dir artifacts]          # PJRT vs native cross-check
+//! gdkron shard-worker --listen host:port      # remote Gram shard worker
 //! ```
 //!
 //! (Arg parsing is in-tree — the build environment has no clap in its
@@ -167,16 +168,23 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let opts = Opts { flags: parse_flags(&args[1..])?, config: Config::default() };
             validate(&opts.str_or("dir", "artifacts"))
         }
+        Some("shard-worker") => {
+            let opts = Opts { flags: parse_flags(&args[1..])?, config: Config::default() };
+            shard_worker(&opts.str_or("listen", "127.0.0.1:0"))
+        }
         _ => {
             eprintln!(
                 "gdkron — High-Dimensional GP Inference with Derivatives (ICML 2021)\n\
                  usage:\n  gdkron exp <fig1|fig2|fig3|fig4|fig5|scaling> [--key value …]\n  \
                  gdkron run <config.toml> [--key value …]\n  gdkron artifacts [--dir DIR]\n  \
-                 gdkron validate [--dir DIR]\n\
+                 gdkron validate [--dir DIR]\n  \
+                 gdkron shard-worker [--listen HOST:PORT]\n\
                  linalg worker pool: --threads N > GDKRON_THREADS > runtime.threads \
                  (1 = serial)\n\
                  gram shard workers: --shards N > GDKRON_SHARDS > gram.shards \
-                 (1 = single shard)"
+                 (1 = single shard)\n\
+                 remote gram shards: GDKRON_REMOTE_SHARDS > gram.remote_shards \
+                 (empty = in-process)"
             );
             Ok(())
         }
@@ -286,6 +294,21 @@ fn run_experiment(id: &str, opts: &Opts) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown experiment {other:?}"),
     }
     Ok(())
+}
+
+/// Host Gram shard state for a remote coordinator (`gdkron shard-worker`):
+/// bind, print the bound address (with `--listen host:0` the OS picks the
+/// port), and serve [`gdkron::gram::remote::serve`] connections until
+/// killed. One coordinator is served at a time; when it detaches the
+/// worker waits for the next — see the `gram::remote` module docs for the
+/// wire protocol, the panel-mirror cost model and the bit-identity
+/// guarantee.
+fn shard_worker(listen: &str) -> anyhow::Result<()> {
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| anyhow::anyhow!("binding shard worker to {listen}: {e}"))?;
+    let local = listener.local_addr()?;
+    println!("gdkron shard-worker listening on {local}");
+    gdkron::gram::remote::serve(listener)
 }
 
 /// Cross-check the PJRT artifacts against the native implementation

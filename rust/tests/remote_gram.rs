@@ -1,0 +1,481 @@
+//! Integration suite for the cross-node shard transport (`gram::remote`).
+//!
+//! Pins the PR-level acceptance criteria:
+//! * **bit-identity**: loopback-TCP remote shards equal the in-process
+//!   sharded path — and hence the single-shard [`GramOperator`] — *exactly*
+//!   (zero ulps), across shard counts {1, 2, 3}, for SE / Matérn-5/2 /
+//!   poly(2) kernels, including after online `append`/`drop_first`
+//!   sequences (the `O(N + D)` wire deltas must grow the worker mirrors to
+//!   the same bits as the coordinator panels);
+//! * **failure is an error, never a hang**: a worker killed mid-
+//!   `apply_block` surfaces as a clean `anyhow` error within the frame
+//!   timeout, a version mismatch / short frame / dead address is a clean
+//!   error, and after any failure the coordinator keeps serving from the
+//!   in-process single-shard fallback (still bit-identical);
+//! * the serving path survives remote loss: a streamed observe whose CG
+//!   re-solve hits a dead worker falls back to one cold refit and keeps
+//!   the posterior exact.
+//!
+//! Every socket operation in this suite is bounded by a short timeout, so
+//! a transport regression fails the test quickly instead of wedging CI.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use gdkron::config::Config;
+use gdkron::coordinator::NativeEngine;
+use gdkron::gp::{FitMethod, FitOptions, GradientGp, OnlineGradientGp};
+use gdkron::gram::remote::serve;
+use gdkron::gram::wire::{CoordFrame, WorkerFrame, WIRE_MAGIC, WIRE_VERSION};
+use gdkron::gram::{GramFactors, GramOperator, Metric, ShardedGramFactors};
+use gdkron::kernels::{Matern52, Poly2Kernel, ScalarKernel, SquaredExponential};
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::{CgOptions, LinearOp};
+
+/// Frame timeout for every endpoint in this suite: long enough for a slow
+/// CI box, short enough that a wedged transport fails the test fast.
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+/// An upper bound on "fails fast": generous against CI jitter, far below
+/// anything a human would call a hang.
+const FAIL_FAST: Duration = Duration::from_secs(60);
+
+fn sample(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gauss())
+}
+
+/// Spawn a real `gdkron shard-worker` on an ephemeral loopback port.
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = serve(listener);
+    });
+    addr
+}
+
+fn spawn_workers(s: usize) -> Vec<String> {
+    (0..s).map(|_| spawn_worker()).collect()
+}
+
+/// Fault-injection worker behaviors.
+enum Fault {
+    /// Handshake and state frames are fine; the connection is dropped the
+    /// moment an `Apply` frame arrives — the mid-apply kill.
+    DieOnApply,
+    /// Answers the handshake with the wrong protocol version.
+    WrongVersion,
+    /// Answers the first `Apply` with a frame whose header lies about its
+    /// payload length, then closes — the short-frame corruption.
+    ShortFrameOnApply,
+}
+
+/// A wire-speaking fake worker exercising one failure mode.
+fn spawn_faulty_worker(fault: Fault) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let (mut stream, _) = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        match CoordFrame::read_from(&mut stream) {
+            Ok(CoordFrame::Hello { .. }) => {}
+            _ => return,
+        }
+        let version = match fault {
+            Fault::WrongVersion => WIRE_VERSION + 1,
+            _ => WIRE_VERSION,
+        };
+        if (WorkerFrame::HelloAck { version }).write_to(&mut stream).is_err() {
+            return;
+        }
+        if matches!(fault, Fault::WrongVersion) {
+            return;
+        }
+        loop {
+            match CoordFrame::read_opt(&mut stream) {
+                Ok(Some(CoordFrame::Apply { .. })) => match fault {
+                    Fault::DieOnApply => return, // connection dropped mid-apply
+                    Fault::ShortFrameOnApply => {
+                        use std::io::Write;
+                        // header claims 64 payload bytes, ships 3, closes
+                        let mut bad = Vec::new();
+                        bad.extend_from_slice(&64u32.to_le_bytes());
+                        bad.push(0x83); // Diag tag
+                        bad.extend_from_slice(&[1, 2, 3]);
+                        let _ = stream.write_all(&bad);
+                        return;
+                    }
+                    Fault::WrongVersion => unreachable!(),
+                },
+                // consume Sync / Append / DropFirst silently
+                Ok(Some(_)) => continue,
+                Ok(None) | Err(_) => return,
+            }
+        }
+    });
+    addr
+}
+
+/// The kernel/metric/center matrix the bit-identity sweep covers.
+fn cases() -> Vec<(Box<dyn ScalarKernel>, Metric, Option<Vec<f64>>, &'static str)> {
+    let d = 6;
+    let c: Vec<f64> = (0..d).map(|i| 0.1 * (i as f64) - 0.2).collect();
+    vec![
+        (Box::new(SquaredExponential), Metric::Iso(0.6), None, "se-iso"),
+        (Box::new(Matern52), Metric::Iso(0.8), None, "matern52"),
+        (Box::new(Poly2Kernel), Metric::Iso(0.9), Some(c), "poly2"),
+    ]
+}
+
+fn assert_factors_bitwise(a: &GramFactors, b: &GramFactors, what: &str) {
+    assert_eq!(a.n(), b.n(), "{what}: N");
+    for (pa, pb, name) in [
+        (&a.xt, &b.xt, "xt"),
+        (&a.lam_xt, &b.lam_xt, "lam_xt"),
+        (&a.lam_xt_t, &b.lam_xt_t, "lam_xt_t"),
+        (&a.r, &b.r, "r"),
+        (&a.h, &b.h, "h"),
+        (&a.kp_eff, &b.kp_eff, "kp_eff"),
+        (&a.kpp_eff, &b.kpp_eff, "kpp_eff"),
+    ] {
+        assert!((pa - pb).max_abs() == 0.0, "{what}: panel {name} diverged");
+    }
+}
+
+#[test]
+fn loopback_remote_bit_identical_across_shard_counts_kernels_and_deltas() {
+    for (kern, metric, center, label) in cases() {
+        let x = sample(6, 8, 21);
+        let seed_x = x.block(0, 0, 6, 3);
+        // serial reference: the same append ×3 / drop ×2 / append ×2 deltas
+        let serial = {
+            let mut f =
+                GramFactors::new(kern.as_ref(), &seed_x, metric.clone(), center.as_deref());
+            for j in 3..6 {
+                f.append(kern.as_ref(), x.col(j));
+            }
+            f.drop_first();
+            f.drop_first();
+            for j in 6..8 {
+                f.append(kern.as_ref(), x.col(j));
+            }
+            f
+        };
+        for s in [1usize, 2, 3] {
+            let addrs = spawn_workers(s);
+            let mut f =
+                GramFactors::new(kern.as_ref(), &seed_x, metric.clone(), center.as_deref());
+            let mut engine =
+                ShardedGramFactors::connect_remote(&f, &addrs, TIMEOUT).expect("connect");
+            assert!(engine.is_remote());
+            assert_eq!(engine.shards(), s);
+            for j in 3..6 {
+                engine.append(&mut f, kern.as_ref(), x.col(j));
+            }
+            engine.drop_first(&mut f);
+            engine.drop_first(&mut f);
+            for j in 6..8 {
+                engine.append(&mut f, kern.as_ref(), x.col(j));
+            }
+            assert!(
+                engine.degraded_reason().is_none(),
+                "{label} S={s}: transport degraded: {:?}",
+                engine.degraded_reason()
+            );
+            assert_factors_bitwise(&f, &serial, &format!("{label} S={s}"));
+
+            let nd = f.n() * f.d();
+            let stacked = sample(nd, 3, 22);
+            let mut want = Mat::zeros(nd, 3);
+            GramOperator::new(&serial).apply_block(&stacked, &mut want);
+            let mut got = Mat::zeros(nd, 3);
+            engine.apply_block_into(&stacked, &mut got).expect("remote apply");
+            assert!(
+                (&got - &want).max_abs() == 0.0,
+                "{label} S={s}: remote apply_block is not bit-identical"
+            );
+
+            // the single-vector LinearOp surface too
+            let op = engine.operator();
+            let mut y = vec![0.0; nd];
+            op.apply(stacked.col(0), &mut y);
+            let mut yref = vec![0.0; nd];
+            GramOperator::new(&serial).apply(stacked.col(0), &mut yref);
+            assert_eq!(y, yref, "{label} S={s}: apply must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn online_streaming_remote_matches_in_process_bitwise() {
+    // the full serving stack: streamed observes + window slides through
+    // the iterative engine, remote-TCP shards vs in-process shards —
+    // identical to the last bit
+    let (d, w) = (6, 5);
+    let x = sample(d, w + 4, 51);
+    let g = sample(d, w + 4, 52);
+    let opts = FitOptions {
+        method: FitMethod::Iterative(CgOptions {
+            rtol: 1e-10,
+            max_iters: 20_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let run = |remote: Option<Vec<String>>| {
+        let mut online = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x.block(0, 0, d, w),
+            &g.block(0, 0, d, w),
+            &opts,
+        )
+        .expect("fit");
+        match remote {
+            Some(addrs) => online.set_remote_shards(&addrs, TIMEOUT).expect("connect"),
+            None => online.set_shards(2),
+        }
+        for j in w..w + 4 {
+            online.observe(x.col(j), g.col(j)).expect("observe");
+            online.drop_first().expect("drop");
+        }
+        assert_eq!(online.cold_refits(), 1, "steady state must not cold-refit");
+        online
+    };
+    let local = run(None);
+    let remote = run(Some(spawn_workers(2)));
+    assert!(remote.shard_degradation().is_none());
+    assert!(
+        (local.gp().z() - remote.gp().z()).max_abs() == 0.0,
+        "remote representer weights must be bit-identical to in-process sharding"
+    );
+    let xq = sample(d, 1, 53);
+    assert_eq!(
+        local.gp().predict_gradient(xq.col(0)),
+        remote.gp().predict_gradient(xq.col(0)),
+        "remote predictions must be bit-identical"
+    );
+}
+
+#[test]
+fn mid_apply_disconnect_is_a_clean_error_then_falls_back() {
+    let x = sample(5, 4, 31);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let addr = spawn_faulty_worker(Fault::DieOnApply);
+    let engine =
+        ShardedGramFactors::connect_remote(&f, &[addr], Duration::from_secs(2)).expect("connect");
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 2, 32);
+    let mut y = Mat::zeros(nd, 2);
+    let t0 = Instant::now();
+    let err = engine.apply_block_into(&xin, &mut y).unwrap_err().to_string();
+    assert!(
+        t0.elapsed() < FAIL_FAST,
+        "mid-apply disconnect must error within the frame timeout, not hang"
+    );
+    assert!(err.contains("fallback"), "error should announce the degradation: {err}");
+    assert!(engine.is_degraded());
+    // … and the engine keeps serving from the in-process single-shard
+    // fallback, still bit-identically
+    let mut got = Mat::zeros(nd, 2);
+    engine.apply_block_into(&xin, &mut got).expect("fallback apply");
+    let mut want = Mat::zeros(nd, 2);
+    GramOperator::new(&f).apply_block(&xin, &mut want);
+    assert!((&got - &want).max_abs() == 0.0, "fallback must stay bit-identical");
+}
+
+#[test]
+fn solve_path_surfaces_remote_loss_and_recovers_via_cold_refit() {
+    // the serving contract end-to-end: a worker dying mid-apply during the
+    // CG re-solve is a clean error inside the update machinery, the update
+    // falls back to one cold refit, and the posterior stays exact
+    let (d, n) = (5, 4);
+    let x = sample(d, n + 1, 61);
+    let g = sample(d, n + 1, 62);
+    let opts = FitOptions {
+        method: FitMethod::Iterative(CgOptions {
+            rtol: 1e-10,
+            max_iters: 20_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let mut online = OnlineGradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.5),
+        &x.block(0, 0, d, n),
+        &g.block(0, 0, d, n),
+        &opts,
+    )
+    .expect("fit");
+    online
+        .set_remote_shards(&[spawn_faulty_worker(Fault::DieOnApply)], Duration::from_secs(2))
+        .expect("connect");
+    // a pure re-target re-solves through the (dying) remote operator
+    let g2 = sample(d, n, 63);
+    let t0 = Instant::now();
+    online.set_targets(&g2).expect("set_targets must recover via cold refit");
+    assert!(t0.elapsed() < FAIL_FAST, "remote loss must not stall the update");
+    assert_eq!(online.cold_refits(), 2, "exactly one recovery cold refit");
+    assert!(online.shard_degradation().is_some(), "degradation must be visible");
+    // further streamed updates ride the in-process fallback
+    online.observe(x.col(n), g.col(n)).expect("observe after degradation");
+    assert_eq!(online.cold_refits(), 2, "fallback serving needs no further refits");
+    // the posterior equals a cold model on the same final window
+    let mut xx = x.block(0, 0, d, n);
+    xx.push_col(x.col(n));
+    let mut gx = g2.clone();
+    gx.push_col(g.col(n));
+    let cold = GradientGp::fit(Arc::new(SquaredExponential), Metric::Iso(0.5), &xx, &gx, &opts)
+        .expect("cold fit");
+    let xq: Vec<f64> = (0..d).map(|i| 0.3 - 0.1 * i as f64).collect();
+    let po = online.gp().predict_gradient(&xq);
+    let pc = cold.predict_gradient(&xq);
+    for i in 0..d {
+        assert!(
+            (po[i] - pc[i]).abs() < 1e-8 * (1.0 + pc[i].abs()),
+            "dim {i}: {} vs {}",
+            po[i],
+            pc[i]
+        );
+    }
+}
+
+#[test]
+fn version_mismatch_is_a_clean_connect_error() {
+    let x = sample(4, 3, 41);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let addr = spawn_faulty_worker(Fault::WrongVersion);
+    let err = ShardedGramFactors::connect_remote(&f, &[addr], Duration::from_secs(2))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("version"), "error should name the version mismatch: {err}");
+}
+
+#[test]
+fn short_frame_mid_apply_is_a_clean_error() {
+    let x = sample(5, 4, 42);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let addr = spawn_faulty_worker(Fault::ShortFrameOnApply);
+    let engine =
+        ShardedGramFactors::connect_remote(&f, &[addr], Duration::from_secs(2)).expect("connect");
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 1, 43);
+    let mut y = Mat::zeros(nd, 1);
+    let t0 = Instant::now();
+    let err = engine.apply_block_into(&xin, &mut y).unwrap_err().to_string();
+    assert!(t0.elapsed() < FAIL_FAST, "a short frame must not hang the reader");
+    assert!(
+        err.contains("mid-frame") || err.contains("short frame"),
+        "error should name the framing problem: {err}"
+    );
+    assert!(engine.is_degraded());
+}
+
+#[test]
+fn connect_to_dead_address_fails_fast() {
+    // bind-then-drop: the port is closed, the connect must be refused (or
+    // time out) promptly — startup never hangs on a dead worker
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let x = sample(4, 3, 44);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let t0 = Instant::now();
+    let res = ShardedGramFactors::connect_remote(&f, &[dead], Duration::from_secs(2));
+    assert!(res.is_err(), "a dead address must be a connect error");
+    assert!(t0.elapsed() < FAIL_FAST, "the connect error must arrive promptly");
+}
+
+#[test]
+fn from_config_falls_back_cleanly_when_remote_unavailable() {
+    // NativeEngine::from_config with an unreachable remote list must log,
+    // fall back to the in-process shard knob, and keep serving
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut rng = Rng::new(71);
+    let x = Mat::from_fn(4, 3, |_, _| rng.gauss());
+    let g = Mat::from_fn(4, 3, |_, _| rng.gauss());
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.5),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .expect("fit");
+    let expected = gp.predict_gradient(x.col(0));
+    let cfg = Config::from_str(&format!(
+        "[gram]\nremote_shards = [\"{dead}\"]\nremote_timeout_ms = 500\nshards = 2\n"
+    ))
+    .unwrap();
+    let engine = NativeEngine::from_config(gp, &cfg);
+    assert_eq!(engine.shards(), 2, "must fall back to the in-process shard knob");
+    assert_eq!(engine.gp().predict_gradient(x.col(0)), expected, "and keep serving");
+}
+
+#[test]
+fn worker_serves_successive_coordinators() {
+    // one long-lived worker, two serving sessions: detaching the first
+    // coordinator (drop → Shutdown frame) must leave the worker ready to
+    // host the next
+    let addr = spawn_worker();
+    let x = sample(4, 5, 81);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.6), None);
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 1, 82);
+    let mut want = Mat::zeros(nd, 1);
+    GramOperator::new(&f).apply_block(&xin, &mut want);
+    for round in 0..2 {
+        let engine = ShardedGramFactors::connect_remote(&f, &[addr.clone()], TIMEOUT)
+            .unwrap_or_else(|e| panic!("round {round}: connect failed: {e}"));
+        let mut got = Mat::zeros(nd, 1);
+        engine.apply_block_into(&xin, &mut got).expect("apply");
+        assert!((&got - &want).max_abs() == 0.0, "round {round}: not bit-identical");
+        drop(engine);
+    }
+}
+
+#[test]
+fn real_worker_rejects_version_mismatch_with_err_frame() {
+    let addr = spawn_worker();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(TIMEOUT)).unwrap();
+    CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION + 1 }
+        .write_to(&mut stream)
+        .unwrap();
+    match WorkerFrame::read_from(&mut stream).unwrap() {
+        WorkerFrame::Err { message } => {
+            assert!(message.contains("version"), "unexpected error: {message}")
+        }
+        _ => panic!("expected an Err frame for the version mismatch"),
+    }
+}
+
+#[test]
+fn real_worker_rejects_apply_before_sync_with_err_frame() {
+    let addr = spawn_worker();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(TIMEOUT)).unwrap();
+    CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION }.write_to(&mut stream).unwrap();
+    match WorkerFrame::read_from(&mut stream).unwrap() {
+        WorkerFrame::HelloAck { version } => assert_eq!(version, WIRE_VERSION),
+        _ => panic!("expected HelloAck"),
+    }
+    CoordFrame::Apply { xin: Mat::zeros(4, 1) }.write_to(&mut stream).unwrap();
+    match WorkerFrame::read_from(&mut stream).unwrap() {
+        WorkerFrame::Err { message } => {
+            assert!(message.contains("before sync"), "unexpected error: {message}")
+        }
+        _ => panic!("expected an Err frame for the unsynced apply"),
+    }
+}

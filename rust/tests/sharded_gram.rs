@@ -111,7 +111,7 @@ fn apply_block_bit_identical_across_shard_counts() {
             let engine = ShardedGramFactors::new(&f, s);
             assert_eq!(engine.shards(), s);
             let mut got = Mat::zeros(nd, 3);
-            engine.apply_block_into(&stacked, &mut got);
+            engine.apply_block_into(&stacked, &mut got).unwrap();
             assert_bitwise_eq(&got, &want, &format!("{label} S={s} apply_block"));
 
             // single-vector apply through the LinearOp surface
@@ -178,7 +178,7 @@ fn bit_identity_survives_online_append_drop_sequences() {
             let mut want = Mat::zeros(nd, 2);
             GramOperator::new(&serial).apply_block(&stacked, &mut want);
             let mut got = Mat::zeros(nd, 2);
-            engine.apply_block_into(&stacked, &mut got);
+            engine.apply_block_into(&stacked, &mut got).unwrap();
             assert_bitwise_eq(&got, &want, &format!("{label} S={s} post-delta apply_block"));
         }
     }
