@@ -238,6 +238,76 @@ pub fn remote_shard_timeout(config: &Config) -> std::time::Duration {
     std::time::Duration::from_millis(ms)
 }
 
+/// The result-gather multiplier (`gram.remote_gather_factor`, default
+/// [`crate::gram::remote::RESULT_TIMEOUT_FACTOR`] = 12): reads that wait
+/// on a shard's apply *compute* get `factor × remote_timeout_ms`, so slow
+/// legitimate compute is not spurious, irreversible degradation while a
+/// dead peer still fails instantly on EOF. Out-of-range values — zero,
+/// negative, or beyond `u32` — are rejected (zero would make every apply a
+/// timeout) and fall back to the default, mirroring `remote_timeout_ms`.
+pub fn remote_gather_factor(config: &Config) -> u32 {
+    match config.int("gram.remote_gather_factor") {
+        Some(n) if n > 0 => {
+            u32::try_from(n).unwrap_or(crate::gram::remote::RESULT_TIMEOUT_FACTOR)
+        }
+        _ => crate::gram::remote::RESULT_TIMEOUT_FACTOR,
+    }
+}
+
+/// How often the shard registry re-verifies a healthy-looking worker while
+/// the engine is degraded (`gram.health_interval_ms`, default 1000 ms).
+/// Non-positive values fall back to the default.
+pub fn health_interval(config: &Config) -> std::time::Duration {
+    let ms = match config.int("gram.health_interval_ms") {
+        Some(n) if n > 0 => n as u64,
+        _ => 1_000,
+    };
+    std::time::Duration::from_millis(ms)
+}
+
+/// The shard registry's initial reconnect backoff for a dead worker
+/// address (`gram.reconnect_backoff_ms`, default 500 ms; doubles per
+/// consecutive failure up to [`crate::gram::registry::MAX_BACKOFF`]).
+/// Non-positive values fall back to the default.
+pub fn reconnect_backoff(config: &Config) -> std::time::Duration {
+    let ms = match config.int("gram.reconnect_backoff_ms") {
+        Some(n) if n > 0 => n as u64,
+        _ => 500,
+    };
+    std::time::Duration::from_millis(ms)
+}
+
+/// Resolve the file-based shard registry path
+/// ([`crate::gram::registry::read_registry_file`] format: one `host:port`
+/// per line, `#` comments).
+///
+/// Priority: the `GDKRON_REGISTRY_FILE` environment variable, then the
+/// `gram.registry_file` config key; blank values fall through. When set,
+/// the registry file **beats the static address list** as the membership
+/// source and is re-read on every probe sweep.
+pub fn resolve_registry_file(config: &Config) -> Option<std::path::PathBuf> {
+    resolve_registry_file_from(config, std::env::var("GDKRON_REGISTRY_FILE").ok().as_deref())
+}
+
+/// Pure core of [`resolve_registry_file`] (env value injected for
+/// testability).
+fn resolve_registry_file_from(
+    config: &Config,
+    env_val: Option<&str>,
+) -> Option<std::path::PathBuf> {
+    if let Some(v) = env_val {
+        let t = v.trim();
+        if !t.is_empty() {
+            return Some(std::path::PathBuf::from(t));
+        }
+    }
+    config
+        .str("gram.registry_file")
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(std::path::PathBuf::from)
+}
+
 /// Pure core of [`resolve_shards`] (env/CLI values injected for
 /// testability).
 fn resolve_shards_from(config: &Config, env_val: Option<&str>, cli: Option<usize>) -> usize {
@@ -399,6 +469,65 @@ jitter = 1e-10
         // non-positive values fall back to the default
         let bad = Config::from_str("[gram]\nremote_timeout_ms = 0\n").unwrap();
         assert_eq!(remote_shard_timeout(&bad).as_millis(), 5_000);
+    }
+
+    #[test]
+    fn gather_factor_defaults_and_rejects_zero() {
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(
+            remote_gather_factor(&empty),
+            crate::gram::remote::RESULT_TIMEOUT_FACTOR,
+            "default must be the documented constant"
+        );
+        let cfg = Config::from_str("[gram]\nremote_gather_factor = 3\n").unwrap();
+        assert_eq!(remote_gather_factor(&cfg), 3);
+        // zero/negative would turn every apply into a timeout, beyond-u32
+        // could overflow the gather timeout: all rejected, mirroring the
+        // remote_timeout_ms validation
+        let zero = Config::from_str("[gram]\nremote_gather_factor = 0\n").unwrap();
+        assert_eq!(remote_gather_factor(&zero), crate::gram::remote::RESULT_TIMEOUT_FACTOR);
+        let neg = Config::from_str("[gram]\nremote_gather_factor = -4\n").unwrap();
+        assert_eq!(remote_gather_factor(&neg), crate::gram::remote::RESULT_TIMEOUT_FACTOR);
+        let huge = Config::from_str("[gram]\nremote_gather_factor = 99999999999\n").unwrap();
+        assert_eq!(remote_gather_factor(&huge), crate::gram::remote::RESULT_TIMEOUT_FACTOR);
+    }
+
+    #[test]
+    fn registry_timing_knobs_default_and_reject_nonpositive() {
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(health_interval(&empty).as_millis(), 1_000);
+        assert_eq!(reconnect_backoff(&empty).as_millis(), 500);
+        let cfg = Config::from_str("[gram]\nhealth_interval_ms = 50\nreconnect_backoff_ms = 25\n")
+            .unwrap();
+        assert_eq!(health_interval(&cfg).as_millis(), 50);
+        assert_eq!(reconnect_backoff(&cfg).as_millis(), 25);
+        let bad = Config::from_str("[gram]\nhealth_interval_ms = 0\nreconnect_backoff_ms = -1\n")
+            .unwrap();
+        assert_eq!(health_interval(&bad).as_millis(), 1_000);
+        assert_eq!(reconnect_backoff(&bad).as_millis(), 500);
+    }
+
+    #[test]
+    fn registry_file_resolution_order() {
+        let cfg = Config::from_str("[gram]\nregistry_file = \"/etc/gdkron/shards\"\n").unwrap();
+        // env beats config; blank env falls through
+        assert_eq!(
+            resolve_registry_file_from(&cfg, Some("/run/reg ")),
+            Some(std::path::PathBuf::from("/run/reg"))
+        );
+        assert_eq!(
+            resolve_registry_file_from(&cfg, Some("  ")),
+            Some(std::path::PathBuf::from("/etc/gdkron/shards"))
+        );
+        assert_eq!(
+            resolve_registry_file_from(&cfg, None),
+            Some(std::path::PathBuf::from("/etc/gdkron/shards"))
+        );
+        // blank config value means "unset"
+        let blank = Config::from_str("[gram]\nregistry_file = \"  \"\n").unwrap();
+        assert_eq!(resolve_registry_file_from(&blank, None), None);
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(resolve_registry_file_from(&empty, None), None);
     }
 
     #[test]

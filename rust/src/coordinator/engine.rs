@@ -5,6 +5,19 @@ use crate::gp::{GradientGp, OnlineGradientGp};
 use crate::linalg::Mat;
 use crate::runtime::{ArgValue, ArtifactRegistry};
 
+/// Shard-transport health counters surfaced into [`super::ServerMetrics`]
+/// (cumulative; the server copies the latest values after every observe).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardHealth {
+    /// Health probes sent by the shard registry prober.
+    pub probes: u64,
+    /// Successful degraded → pooled re-attaches.
+    pub reattaches: u64,
+    /// Whether the shard transport is currently degraded to the
+    /// in-process fallback.
+    pub degraded: bool,
+}
+
 /// A batched gradient-prediction backend.
 ///
 /// Deliberately **not** `Send`: the PJRT client wraps thread-affine handles,
@@ -20,6 +33,11 @@ pub trait Engine {
     /// to the observing client; prediction service is unaffected).
     fn observe(&mut self, _x: &[f64], _g: &[f64]) -> anyhow::Result<()> {
         anyhow::bail!("{} engine does not support observation streaming", self.name())
+    }
+    /// Shard-transport health, for backends that shard their Gram operator
+    /// (`None` for backends without one).
+    fn shard_health(&self) -> Option<ShardHealth> {
+        None
     }
     /// Backend label for metrics/logs.
     fn name(&self) -> &'static str;
@@ -57,28 +75,47 @@ impl NativeEngine {
     /// default 0 = unbounded), `gram.shards` (via
     /// [`crate::config::resolve_shards`]: `--shards` CLI override beats
     /// `GDKRON_SHARDS` beats the config key; default 1 = single-shard) and
-    /// `gram.remote_shards` (via
+    /// the remote-shard knobs: `gram.remote_shards` (via
     /// [`crate::config::resolve_remote_shards`]: `GDKRON_REMOTE_SHARDS`
-    /// beats the config key). A non-empty remote list takes the shard
-    /// transport cross-node — one `gdkron shard-worker` per address, socket
-    /// operations bounded by `gram.remote_timeout_ms` — and **wins over**
-    /// the in-process shard count; if connecting fails, the engine logs the
-    /// reason and falls back to in-process sharding (serving never blocks
-    /// on an unreachable worker). The shard boundaries follow the serving
-    /// window either way: every streamed `observe` slides them with the
-    /// panels, and `gp.window` bounds the per-shard memory.
+    /// beats the config key) or `gram.registry_file`
+    /// ([`crate::config::resolve_registry_file`]: `GDKRON_REGISTRY_FILE`
+    /// beats the config key, and the file beats the static list). A
+    /// non-empty remote membership takes the shard transport cross-node —
+    /// one `gdkron shard-worker` per address, socket operations bounded by
+    /// `gram.remote_timeout_ms` (result gathers get
+    /// `gram.remote_gather_factor ×` that) — under the health-checked
+    /// registry ([`crate::gram::registry`]): while degraded, workers are
+    /// probed every `gram.health_interval_ms` with
+    /// `gram.reconnect_backoff_ms` exponential backoff, and the engine
+    /// re-attaches automatically at the next streamed observe. The remote
+    /// membership **wins over** the in-process shard count; if the initial
+    /// connect fails, the engine logs the reason and falls back to
+    /// in-process sharding (serving never blocks on an unreachable
+    /// worker). The shard boundaries follow the serving window either way:
+    /// every streamed `observe` slides them with the panels, and
+    /// `gp.window` bounds the per-shard memory.
     pub fn from_config(gp: GradientGp, config: &Config) -> Self {
         let online = config.bool_or("gp.online", true);
         let window = config.int_or("gp.window", 0).max(0) as usize;
         let mut engine = Self::with_window(gp, window);
         engine.gp.set_online(online);
         let remote = crate::config::resolve_remote_shards(config);
-        if !remote.is_empty() {
-            let timeout = crate::config::remote_shard_timeout(config);
-            match engine.gp.set_remote_shards(&remote, timeout) {
+        let registry_file = crate::config::resolve_registry_file(config);
+        if !remote.is_empty() || registry_file.is_some() {
+            let cfg = crate::gram::RegistryConfig {
+                static_addrs: remote,
+                registry_file,
+                health_interval: crate::config::health_interval(config),
+                reconnect_backoff: crate::config::reconnect_backoff(config),
+                remote: crate::gram::RemoteOptions {
+                    timeout: crate::config::remote_shard_timeout(config),
+                    gather_factor: crate::config::remote_gather_factor(config),
+                },
+            };
+            match engine.gp.set_remote_registry(cfg) {
                 Ok(()) => return engine,
                 Err(e) => eprintln!(
-                    "gdkron: remote shards {remote:?} unavailable ({e}); \
+                    "gdkron: remote shard registry unavailable ({e}); \
                      falling back to in-process sharding"
                 ),
             }
@@ -112,8 +149,17 @@ impl Engine for NativeEngine {
     fn observe(&mut self, x: &[f64], g: &[f64]) -> anyhow::Result<()> {
         // atomic window-slide + append: a single solve per streamed
         // observation, and any failure rolls the whole step back so the
-        // serving state never ends up half-applied.
+        // serving state never ends up half-applied. (This is also the
+        // re-attach barrier: a degraded registry-managed shard engine
+        // swaps back onto healthy workers here, between solves.)
         self.gp.observe_windowed(x, g, self.window)
+    }
+    fn shard_health(&self) -> Option<ShardHealth> {
+        Some(ShardHealth {
+            probes: self.gp.shard_probes(),
+            reattaches: self.gp.shard_reattaches(),
+            degraded: self.gp.shard_degradation().is_some(),
+        })
     }
     fn name(&self) -> &'static str {
         "native"

@@ -31,5 +31,5 @@ mod engine;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use engine::{Engine, NativeEngine, PjrtEngine, ShardHealth};
 pub use server::{ServerMetrics, SurrogateClient, SurrogateServer};

@@ -48,6 +48,16 @@ pub struct ServerMetrics {
     /// Metropolis test still guards correctness — but a degraded
     /// trajectory must be *visible*, not a diagnostic dead end).
     pub degraded_queries: usize,
+    /// Health probes sent by the engine's shard registry prober
+    /// (cumulative; refreshed from [`super::Engine::shard_health`] after
+    /// every streamed observation).
+    pub shard_probes: u64,
+    /// Successful shard re-attaches (degraded → pooled transport) by the
+    /// engine's shard registry.
+    pub shard_reattaches: u64,
+    /// Whether the engine's shard transport is *currently* degraded to the
+    /// in-process fallback (as of the last streamed observation).
+    pub shard_degraded: bool,
 }
 
 impl ServerMetrics {
@@ -131,6 +141,14 @@ impl SurrogateServer {
                                 m.observes += 1;
                                 if res.is_err() {
                                     m.errors += 1;
+                                }
+                                // the observe barrier is where a degraded
+                                // shard transport re-attaches: refresh the
+                                // health counters while they can change
+                                if let Some(h) = engine.shard_health() {
+                                    m.shard_probes = h.probes;
+                                    m.shard_reattaches = h.reattaches;
+                                    m.shard_degraded = h.degraded;
                                 }
                             }
                             let _ = o.resp.send(res);

@@ -44,7 +44,8 @@
 use std::sync::Arc;
 
 use crate::gram::{
-    poly2_solve, GramFactors, GramOperator, Metric, ShardedGramFactors, WoodburySolver,
+    poly2_solve, GramFactors, GramOperator, Metric, RegistryConfig, ShardedGramFactors,
+    WoodburySolver,
 };
 use crate::kernels::ScalarKernel;
 use crate::linalg::{bordered_inverse_append, bordered_inverse_drop_first, Lu, Mat};
@@ -201,6 +202,19 @@ impl OnlineGradientGp {
         Ok(())
     }
 
+    /// Shard the Gram operator across remote TCP workers under a
+    /// **health-checked registry** ([`crate::gram::registry`]): membership
+    /// from the registry file (when configured) or the static list, health
+    /// probes with exponential-backoff reconnection while degraded, and
+    /// automatic re-attach at the next streamed update — the full panel
+    /// broadcast at the current revision swaps the engine off the fallback
+    /// bit-identically, without dropping in-flight solves (updates are
+    /// barriers in the request stream, and the swap happens only there).
+    pub fn set_remote_registry(&mut self, cfg: RegistryConfig) -> anyhow::Result<()> {
+        self.shard_engine = Some(ShardedGramFactors::connect_registry(&self.gp.factors, cfg)?);
+        Ok(())
+    }
+
     /// Current shard count (1 = unsharded).
     pub fn shards(&self) -> usize {
         self.shard_engine.as_ref().map_or(1, ShardedGramFactors::shards)
@@ -210,6 +224,27 @@ impl OnlineGradientGp {
     /// healthy, the first failure when degraded to the in-process fallback.
     pub fn shard_degradation(&self) -> Option<String> {
         self.shard_engine.as_ref().and_then(ShardedGramFactors::degraded_reason)
+    }
+
+    /// Successful shard re-attaches (degraded → pooled) performed so far.
+    pub fn shard_reattaches(&self) -> u64 {
+        self.shard_engine.as_ref().map_or(0, ShardedGramFactors::reattach_count)
+    }
+
+    /// Health probes sent by the shard registry prober so far.
+    pub fn shard_probes(&self) -> u64 {
+        self.shard_engine.as_ref().map_or(0, ShardedGramFactors::probe_count)
+    }
+
+    /// The observe-barrier re-attach hook: every mutating entry point runs
+    /// it first, so a degraded registry-managed shard engine swaps back
+    /// onto healthy workers *between* solves — never mid-solve, preserving
+    /// the observe-as-barrier ordering. No-op unless the engine is
+    /// degraded, supervised, and the full membership probes healthy.
+    fn reattach_shards(&mut self) {
+        if let Some(se) = self.shard_engine.as_mut() {
+            se.maybe_reattach(&self.gp.factors);
+        }
     }
 
     /// Append one observation to the factor panels, through the shard
@@ -278,6 +313,7 @@ impl OnlineGradientGp {
     /// the observation is **not applied**: the engine rolls back to its
     /// previous consistent state and keeps serving.
     pub fn observe(&mut self, x_new: &[f64], g_new: &[f64]) -> anyhow::Result<()> {
+        self.reattach_shards();
         let d = self.gp.d();
         anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
         anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
@@ -310,6 +346,7 @@ impl OnlineGradientGp {
         if window == 0 {
             return self.observe(x_new, g_new);
         }
+        self.reattach_shards();
         let d = self.gp.d();
         anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
         anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
@@ -344,6 +381,7 @@ impl OnlineGradientGp {
     /// Slide the window: drop the oldest observation and re-solve. On error
     /// the drop is rolled back (see [`OnlineGradientGp::observe`]).
     pub fn drop_first(&mut self) -> anyhow::Result<()> {
+        self.reattach_shards();
         anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
         if !self.opts.online {
             let mut x = self.gp.x.clone();
@@ -395,6 +433,7 @@ impl OnlineGradientGp {
     /// This is the GP-X steady-state path: the flipped GP's outputs shift
     /// with the anchor `x_t` each step while its inputs only gain a column.
     pub fn set_targets(&mut self, g: &Mat) -> anyhow::Result<()> {
+        self.reattach_shards();
         anyhow::ensure!(
             (g.rows(), g.cols()) == (self.gp.d(), self.gp.n()),
             "targets must be D×N = {}×{}",

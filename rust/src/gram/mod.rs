@@ -27,12 +27,17 @@
 //! `O(N + D)` online deltas, and stay bit-identical to the in-process path
 //! (`gram.remote_shards` / `GDKRON_REMOTE_SHARDS` knob; every transport
 //! failure surfaces as a clean error and the coordinator falls back to the
-//! in-process single-shard operator).
+//! in-process single-shard operator). Degradation is no longer permanent:
+//! [`registry`] supervises the worker fleet with health probes
+//! (Ping/Pong wire frames), exponential-backoff reconnection and
+//! automatic re-attach at the next observe barrier — see
+//! [`ShardedGramFactors::maybe_reattach`].
 
 mod factors;
 mod matvec;
 mod metric;
 mod poly2;
+pub mod registry;
 pub mod remote;
 pub mod sharded;
 pub mod wire;
@@ -42,5 +47,7 @@ pub use factors::GramFactors;
 pub use matvec::{GramOperator, MatvecWorkspace};
 pub use metric::Metric;
 pub use poly2::{poly2_solve, Poly2Solve};
+pub use registry::{RegistryConfig, ShardRegistry};
+pub use remote::RemoteOptions;
 pub use sharded::{ShardedGramFactors, ShardedGramOperator};
 pub use woodbury::{woodbury_solve, WoodburySolver};

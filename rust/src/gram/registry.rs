@@ -1,0 +1,526 @@
+//! Health-checked shard registry: the supervisor that turns the static
+//! `gram.remote_shards` address list into a **live membership view**.
+//!
+//! PR 4's cross-node transport degrades cleanly — any failure drops the
+//! coordinator onto its in-process fallback — but the degradation was
+//! *permanent*: the engine stayed on the fallback until a manual resync,
+//! losing the D-scaling the sharding bought for the rest of the process
+//! lifetime. This module closes that loop:
+//!
+//! * **Membership** comes from the registry file (`gram.registry_file`,
+//!   one `host:port` per line, `#` comments — re-read on every probe
+//!   sweep, so editing the file re-targets a degraded engine without a
+//!   restart) or, absent a file, the static list
+//!   (`GDKRON_REMOTE_SHARDS` / `gram.remote_shards`).
+//! * **Probing**: while the engine is degraded, a background prober sends
+//!   the v2 `Ping` frame to every member ([`crate::gram::remote::probe`]),
+//!   each probe bounded by the remote frame timeout. A healthy answer
+//!   records the worker's epoch + panel revision and schedules the next
+//!   verification one `gram.health_interval_ms` later; a failure backs the
+//!   address off exponentially from `gram.reconnect_backoff_ms` up to
+//!   [`MAX_BACKOFF`].
+//! * **Re-attach**: once *every* member is healthy (the shard plan spans
+//!   the full membership), [`ShardRegistry::healthy_membership`] goes
+//!   `Some` and the next observe barrier calls
+//!   [`crate::gram::ShardedGramFactors::maybe_reattach`], which dials
+//!   fresh connections, broadcasts the panels at the current revision,
+//!   recomputes the shard plan and swaps the engine off the fallback —
+//!   bit-identically, without dropping in-flight solves. While the engine
+//!   is attached the prober idles: the data plane itself is the health
+//!   check (any failure degrades, which wakes the prober again).
+//!
+//! The whole module is `std`-only (threads + `Condvar`), like the rest of
+//! the transport. Pinned end-to-end by `tests/chaos_remote.rs`, which
+//! drives the degrade → probe → reconnect → resync → re-attach cycle
+//! through a fault-injecting TCP proxy.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::remote::{probe, RemoteOptions};
+use super::sharded::MAX_SHARDS;
+
+/// Exponential backoff ceiling for dead addresses: doubling stops here so
+/// a worker that comes back after a long outage is still noticed within
+/// half a minute.
+pub const MAX_BACKOFF: Duration = Duration::from_secs(30);
+
+/// The supervisor's knobs. Defaults mirror the config keys
+/// (`gram.health_interval_ms` = 1000, `gram.reconnect_backoff_ms` = 500,
+/// transport options from `gram.remote_timeout_ms` /
+/// `gram.remote_gather_factor`).
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// The static address list (`GDKRON_REMOTE_SHARDS` /
+    /// `gram.remote_shards`) — the membership source when no registry file
+    /// is configured.
+    pub static_addrs: Vec<String>,
+    /// File-based registry (`gram.registry_file` /
+    /// `GDKRON_REGISTRY_FILE`): one `host:port` per line, `#` comments.
+    /// When set it **beats the static list** and is re-read on every probe
+    /// sweep.
+    pub registry_file: Option<PathBuf>,
+    /// How often a healthy-looking member is re-verified while the engine
+    /// is degraded (`gram.health_interval_ms`).
+    pub health_interval: Duration,
+    /// Initial reconnect backoff for a failed member
+    /// (`gram.reconnect_backoff_ms`); doubles per consecutive failure up
+    /// to [`MAX_BACKOFF`].
+    pub reconnect_backoff: Duration,
+    /// Transport options for probes and re-attach dials.
+    pub remote: RemoteOptions,
+}
+
+impl RegistryConfig {
+    /// Registry over a static address list with default timing knobs.
+    pub fn new(static_addrs: Vec<String>) -> Self {
+        RegistryConfig {
+            static_addrs,
+            registry_file: None,
+            health_interval: Duration::from_millis(1_000),
+            reconnect_backoff: Duration::from_millis(500),
+            remote: RemoteOptions::default(),
+        }
+    }
+
+    /// The membership to connect at startup: the registry file when
+    /// configured (unreadable or empty is an error — a configured registry
+    /// that lists nothing is a misconfiguration, not an empty fleet),
+    /// otherwise the static list. Both sources are deduplicated: one
+    /// worker serves one coordinator, so a duplicated address could never
+    /// attach (or probe healthy) twice.
+    pub fn initial_membership(&self) -> anyhow::Result<Vec<String>> {
+        if let Some(path) = &self.registry_file {
+            let addrs = read_registry_file(path)?;
+            anyhow::ensure!(!addrs.is_empty(), "shard registry file {path:?} lists no workers");
+            return Ok(addrs);
+        }
+        anyhow::ensure!(!self.static_addrs.is_empty(), "no remote shard addresses configured");
+        Ok(dedupe_addrs(self.static_addrs.iter().map(String::as_str)))
+    }
+}
+
+/// Parse registry-file text: one `host:port` per line, `#` starts a
+/// comment, blank lines ignored, **duplicates dropped** (first occurrence
+/// wins — a duplicated member could never probe healthy twice, which would
+/// silently block re-attach forever), capped at [`MAX_SHARDS`].
+pub fn parse_registry(text: &str) -> Vec<String> {
+    dedupe_addrs(
+        text.lines().map(|l| l.split('#').next().unwrap_or("").trim()).filter(|l| !l.is_empty()),
+    )
+}
+
+/// Order-preserving dedupe + [`MAX_SHARDS`] cap shared by every membership
+/// source (registry file and static list).
+fn dedupe_addrs<'a>(addrs: impl Iterator<Item = &'a str>) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for a in addrs {
+        if !out.iter().any(|seen| seen == a) {
+            out.push(a.to_string());
+        }
+        if out.len() == MAX_SHARDS {
+            break;
+        }
+    }
+    out
+}
+
+/// Read and parse a registry file (see [`parse_registry`] for the format).
+pub fn read_registry_file(path: &Path) -> anyhow::Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading shard registry file {path:?}: {e}"))?;
+    Ok(parse_registry(&text))
+}
+
+/// The next reconnect backoff after a failure: double, capped at
+/// [`MAX_BACKOFF`] (and never below the configured base).
+fn next_backoff(current: Duration, base: Duration) -> Duration {
+    let doubled = current.checked_mul(2).unwrap_or(MAX_BACKOFF);
+    doubled.max(base).min(MAX_BACKOFF)
+}
+
+/// One member's probe state.
+struct MemberState {
+    addr: String,
+    healthy: bool,
+    /// Hosting-session epoch from the last successful probe.
+    epoch: Option<u64>,
+    /// Panel revision from the last successful probe (probe connections
+    /// always see an unsynced mirror, so this is 0 for detached workers;
+    /// it is kept for diagnostics).
+    revision: Option<u64>,
+    consecutive_failures: u32,
+    backoff: Duration,
+    next_probe: Instant,
+    last_error: Option<String>,
+}
+
+impl MemberState {
+    fn fresh(addr: String, base_backoff: Duration) -> Self {
+        MemberState {
+            addr,
+            healthy: false,
+            epoch: None,
+            revision: None,
+            consecutive_failures: 0,
+            backoff: base_backoff,
+            next_probe: Instant::now(),
+            last_error: None,
+        }
+    }
+}
+
+/// Public diagnostic snapshot of one member (`gdkron` logs, tests).
+#[derive(Clone, Debug)]
+pub struct MemberHealth {
+    pub addr: String,
+    pub healthy: bool,
+    pub epoch: Option<u64>,
+    /// Panel revision the last successful probe reported (probe
+    /// connections see detached workers, so this is normally 0).
+    pub revision: Option<u64>,
+    pub consecutive_failures: u32,
+    pub last_error: Option<String>,
+}
+
+struct Shared {
+    cfg: RegistryConfig,
+    members: Mutex<Vec<MemberState>>,
+    /// Wakes the prober (detach, stop, membership edits).
+    wake: Condvar,
+    /// While attached the prober idles — the data plane is the health
+    /// check.
+    attached: AtomicBool,
+    stop: AtomicBool,
+    /// Health probes sent (cumulative).
+    probes: AtomicU64,
+}
+
+/// Handle owning the background prober; dropping it stops the thread.
+/// Created by [`ShardRegistry::start`] (usually via
+/// [`crate::gram::ShardedGramFactors::connect_registry`]).
+pub struct ShardRegistry {
+    shared: Arc<Shared>,
+    prober: Option<JoinHandle<()>>,
+}
+
+impl ShardRegistry {
+    /// Start the supervisor over `initial` members (the engine is assumed
+    /// attached to exactly these addresses right now, so the prober starts
+    /// idle).
+    pub fn start(cfg: RegistryConfig, initial: &[String]) -> Self {
+        let base = cfg.reconnect_backoff;
+        let members =
+            initial.iter().map(|a| MemberState::fresh(a.clone(), base)).collect::<Vec<_>>();
+        let shared = Arc::new(Shared {
+            cfg,
+            members: Mutex::new(members),
+            wake: Condvar::new(),
+            attached: AtomicBool::new(true),
+            stop: AtomicBool::new(false),
+            probes: AtomicU64::new(0),
+        });
+        let for_thread = Arc::clone(&shared);
+        let prober = std::thread::Builder::new()
+            .name("gdkron-shard-registry".into())
+            .spawn(move || prober_loop(for_thread))
+            .expect("failed to spawn shard registry prober");
+        ShardRegistry { shared, prober: Some(prober) }
+    }
+
+    /// The engine degraded: start watching the membership. Every member is
+    /// scheduled for an immediate probe (a transient blip re-attaches
+    /// within one health interval).
+    pub fn notify_detached(&self) {
+        self.shared.attached.store(false, Ordering::SeqCst);
+        let mut members = self.shared.members.lock().unwrap();
+        let now = Instant::now();
+        for m in members.iter_mut() {
+            m.healthy = false;
+            m.next_probe = now;
+        }
+        drop(members);
+        self.shared.wake.notify_all();
+    }
+
+    /// The engine re-attached: probing pauses until the next degradation.
+    pub fn notify_attached(&self) {
+        self.shared.attached.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+    }
+
+    /// `Some(addrs)` when **every** current member is healthy — the only
+    /// state a re-attach may start from, because the shard plan spans the
+    /// whole membership.
+    pub fn healthy_membership(&self) -> Option<Vec<String>> {
+        let members = self.shared.members.lock().unwrap();
+        if members.is_empty() || !members.iter().all(|m| m.healthy) {
+            return None;
+        }
+        Some(members.iter().map(|m| m.addr.clone()).collect())
+    }
+
+    /// Push an address back into the probe/backoff cycle (a re-attach dial
+    /// failed after a healthy probe).
+    pub fn mark_unhealthy(&self, addr: &str, reason: &str) {
+        let mut members = self.shared.members.lock().unwrap();
+        if let Some(m) = members.iter_mut().find(|m| m.addr == addr) {
+            m.healthy = false;
+            m.consecutive_failures = m.consecutive_failures.saturating_add(1);
+            m.backoff = next_backoff(m.backoff, self.shared.cfg.reconnect_backoff);
+            m.next_probe = Instant::now() + m.backoff;
+            m.last_error = Some(reason.to_string());
+        }
+    }
+
+    /// Health probes sent so far.
+    pub fn probe_count(&self) -> u64 {
+        self.shared.probes.load(Ordering::Relaxed)
+    }
+
+    /// Transport options for probes and re-attach dials.
+    pub fn remote_options(&self) -> RemoteOptions {
+        self.shared.cfg.remote.clone()
+    }
+
+    /// Diagnostic snapshot of every member.
+    pub fn health_snapshot(&self) -> Vec<MemberHealth> {
+        let members = self.shared.members.lock().unwrap();
+        members
+            .iter()
+            .map(|m| MemberHealth {
+                addr: m.addr.clone(),
+                healthy: m.healthy,
+                epoch: m.epoch,
+                revision: m.revision,
+                consecutive_failures: m.consecutive_failures,
+                last_error: m.last_error.clone(),
+            })
+            .collect()
+    }
+}
+
+impl Drop for ShardRegistry {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+        if let Some(handle) = self.prober.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Reconcile the member list with a freshly read registry file: keep the
+/// probe state of addresses still present, add new ones due immediately,
+/// drop removed ones.
+fn sync_members(members: &mut Vec<MemberState>, addrs: &[String], base_backoff: Duration) {
+    let mut next: Vec<MemberState> = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        match members.iter().position(|m| &m.addr == addr) {
+            Some(i) => next.push(members.remove(i)),
+            None => next.push(MemberState::fresh(addr.clone(), base_backoff)),
+        }
+    }
+    *members = next;
+}
+
+fn prober_loop(sh: Arc<Shared>) {
+    loop {
+        if sh.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if sh.attached.load(Ordering::SeqCst) {
+            // idle until a degradation (or stop) wakes us
+            let guard = sh.members.lock().unwrap();
+            let _idle = sh.wake.wait_timeout(guard, sh.cfg.health_interval).unwrap();
+            continue;
+        }
+        // the registry file beats the static list — and is re-read every
+        // sweep, so membership edits land without a restart (an unreadable
+        // file keeps the last known membership rather than dropping it)
+        if let Some(path) = &sh.cfg.registry_file {
+            if let Ok(addrs) = read_registry_file(path) {
+                if !addrs.is_empty() {
+                    let mut members = sh.members.lock().unwrap();
+                    sync_members(&mut members, &addrs, sh.cfg.reconnect_backoff);
+                }
+            }
+        }
+        // probe every member whose schedule is due
+        let due: Vec<String> = {
+            let members = sh.members.lock().unwrap();
+            let now = Instant::now();
+            members.iter().filter(|m| m.next_probe <= now).map(|m| m.addr.clone()).collect()
+        };
+        for addr in due {
+            if sh.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            sh.probes.fetch_add(1, Ordering::Relaxed);
+            let result = probe(&addr, sh.cfg.remote.timeout);
+            let mut members = sh.members.lock().unwrap();
+            let Some(m) = members.iter_mut().find(|m| m.addr == addr) else {
+                continue; // membership changed under the probe
+            };
+            match result {
+                Ok(report) => {
+                    m.healthy = true;
+                    m.epoch = Some(report.epoch);
+                    m.revision = Some(report.revision);
+                    m.consecutive_failures = 0;
+                    m.backoff = sh.cfg.reconnect_backoff;
+                    m.next_probe = Instant::now() + sh.cfg.health_interval;
+                    m.last_error = None;
+                }
+                Err(e) => {
+                    m.healthy = false;
+                    m.consecutive_failures = m.consecutive_failures.saturating_add(1);
+                    m.backoff = next_backoff(m.backoff, sh.cfg.reconnect_backoff);
+                    m.next_probe = Instant::now() + m.backoff;
+                    m.last_error = Some(e.to_string());
+                }
+            }
+        }
+        // sleep until the earliest next probe (never longer than one
+        // health interval, so file edits are picked up promptly)
+        let guard = sh.members.lock().unwrap();
+        let now = Instant::now();
+        let wait = guard
+            .iter()
+            .map(|m| m.next_probe.saturating_duration_since(now))
+            .min()
+            .unwrap_or(sh.cfg.health_interval)
+            .min(sh.cfg.health_interval)
+            .max(Duration::from_millis(5));
+        let _sleep = sh.wake.wait_timeout(guard, wait).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_text_parses_comments_blanks_and_whitespace() {
+        let text = "# fleet A\n 10.0.0.1:7000 \n\n10.0.0.2:7000 # rack 2\n#10.0.0.3:7000\n";
+        assert_eq!(parse_registry(text), vec!["10.0.0.1:7000", "10.0.0.2:7000"]);
+        assert!(parse_registry("").is_empty());
+        assert!(parse_registry("# only comments\n\n").is_empty());
+    }
+
+    #[test]
+    fn duplicate_addresses_are_dropped_everywhere() {
+        // a duplicated member could never probe healthy twice (one worker
+        // serves one coordinator), which would silently block re-attach
+        // forever — so every membership source dedupes, first wins
+        assert_eq!(parse_registry("a:1\nb:2\na:1\nb:2 # again\n"), vec!["a:1", "b:2"]);
+        let cfg = RegistryConfig::new(vec!["s:1".into(), "s:2".into(), "s:1".into()]);
+        assert_eq!(cfg.initial_membership().unwrap(), vec!["s:1", "s:2"]);
+    }
+
+    #[test]
+    fn registry_caps_at_max_shards() {
+        let text: String =
+            (0..2 * MAX_SHARDS).map(|i| format!("h{i}:1\n")).collect::<Vec<_>>().join("");
+        assert_eq!(parse_registry(&text).len(), MAX_SHARDS);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let base = Duration::from_millis(100);
+        let mut b = base;
+        b = next_backoff(b, base);
+        assert_eq!(b, Duration::from_millis(200));
+        b = next_backoff(b, base);
+        assert_eq!(b, Duration::from_millis(400));
+        for _ in 0..20 {
+            b = next_backoff(b, base);
+        }
+        assert_eq!(b, MAX_BACKOFF, "backoff must cap");
+        // a degenerate current below base snaps back up to base×2 ≥ base
+        assert!(next_backoff(Duration::from_millis(0), base) >= base);
+    }
+
+    #[test]
+    fn sync_members_keeps_state_adds_and_drops() {
+        let base = Duration::from_millis(50);
+        let mut members = vec![
+            MemberState::fresh("a:1".into(), base),
+            MemberState::fresh("b:2".into(), base),
+        ];
+        members[0].healthy = true;
+        members[0].consecutive_failures = 0;
+        members[1].consecutive_failures = 3;
+        sync_members(&mut members, &["b:2".to_string(), "c:3".to_string()], base);
+        assert_eq!(members.len(), 2);
+        assert_eq!(members[0].addr, "b:2");
+        assert_eq!(members[0].consecutive_failures, 3, "kept state for surviving member");
+        assert_eq!(members[1].addr, "c:3");
+        assert!(!members[1].healthy, "new members start unverified");
+    }
+
+    #[test]
+    fn initial_membership_prefers_file_and_validates() {
+        // no file: static list
+        let cfg = RegistryConfig::new(vec!["s:1".into()]);
+        assert_eq!(cfg.initial_membership().unwrap(), vec!["s:1"]);
+        // empty static list is an error
+        let empty = RegistryConfig::new(vec![]);
+        assert!(empty.initial_membership().is_err());
+        // file present: beats the static list
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gdkron-registry-{}.txt", std::process::id()));
+        std::fs::write(&path, "f:1\nf:2 # two\n").unwrap();
+        let mut cfg = RegistryConfig::new(vec!["s:1".into()]);
+        cfg.registry_file = Some(path.clone());
+        assert_eq!(cfg.initial_membership().unwrap(), vec!["f:1", "f:2"]);
+        // an empty file is a misconfiguration, not an empty fleet
+        std::fs::write(&path, "# nothing\n").unwrap();
+        assert!(cfg.initial_membership().is_err());
+        // an unreadable file is an error too
+        std::fs::remove_file(&path).unwrap();
+        assert!(cfg.initial_membership().is_err());
+    }
+
+    #[test]
+    fn registry_starts_idle_and_stops_cleanly() {
+        // attached ⇒ no probes against the (nonexistent) address
+        let cfg = RegistryConfig {
+            health_interval: Duration::from_millis(10),
+            ..RegistryConfig::new(vec!["127.0.0.1:1".into()])
+        };
+        let reg = ShardRegistry::start(cfg, &["127.0.0.1:1".to_string()]);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(reg.probe_count(), 0, "attached registries must not probe");
+        assert!(reg.healthy_membership().is_none(), "members start unverified");
+        drop(reg); // must join the prober promptly, not hang
+    }
+
+    #[test]
+    fn detached_registry_probes_and_backs_off_dead_addresses() {
+        // 127.0.0.1:1 refuses connections: probes must run, fail, and back
+        // off — and healthy_membership must stay None
+        let cfg = RegistryConfig {
+            health_interval: Duration::from_millis(10),
+            reconnect_backoff: Duration::from_millis(10),
+            remote: RemoteOptions::with_timeout(Duration::from_millis(200)),
+            ..RegistryConfig::new(vec!["127.0.0.1:1".into()])
+        };
+        let reg = ShardRegistry::start(cfg, &["127.0.0.1:1".to_string()]);
+        reg.notify_detached();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while reg.probe_count() < 2 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(reg.probe_count() >= 2, "prober must retry dead addresses");
+        assert!(reg.healthy_membership().is_none());
+        let snap = reg.health_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert!(!snap[0].healthy);
+        assert!(snap[0].consecutive_failures >= 2);
+        assert!(snap[0].last_error.is_some(), "failures must carry a reason");
+    }
+}

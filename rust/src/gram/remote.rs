@@ -37,6 +37,7 @@
 //! caught by the framing layer.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -48,7 +49,9 @@ use super::sharded::{
     apply_dot, apply_finish_stationary, apply_phase_p, build_state_from_panels, shard_plan,
     AppendDelta, SharedPanels, ShardEndpoint, ShardState, MAX_SHARDS,
 };
-use super::wire::{AppendFrame, CoordFrame, SyncFrame, WorkerFrame, WIRE_MAGIC, WIRE_VERSION};
+use super::wire::{
+    AppendFrame, CoordFrame, SyncFrame, WorkerFrame, MIN_WIRE_VERSION, WIRE_MAGIC, WIRE_VERSION,
+};
 use super::GramFactors;
 
 /// Parse a remote-shard address list (the `GDKRON_REMOTE_SHARDS` spelling):
@@ -63,6 +66,64 @@ pub fn parse_remote_shards(v: &str) -> Vec<String> {
         .map(str::to_string)
         .collect()
 }
+
+/// Coordinator-side transport tuning for one remote shard connection.
+#[derive(Clone, Debug)]
+pub struct RemoteOptions {
+    /// The frame timeout: bounds connects, writes and control-plane reads
+    /// (`gram.remote_timeout_ms`, default 5000 ms).
+    pub timeout: Duration,
+    /// Result-gather reads wait `gather_factor ×` the frame timeout
+    /// (`gram.remote_gather_factor`, default [`RESULT_TIMEOUT_FACTOR`]) —
+    /// shard apply compute is legitimate latency, a dead peer still fails
+    /// instantly on EOF.
+    pub gather_factor: u32,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            timeout: Duration::from_millis(5_000),
+            gather_factor: RESULT_TIMEOUT_FACTOR,
+        }
+    }
+}
+
+impl RemoteOptions {
+    /// Default options with an explicit frame timeout.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        RemoteOptions { timeout, ..Default::default() }
+    }
+}
+
+/// Per-process base folded into every worker epoch so two *processes* that
+/// both count hosting sessions from zero still report distinct epochs
+/// (seeded once from the wall clock; `0` is reserved as "unset").
+static EPOCH_BASE: AtomicU64 = AtomicU64::new(0);
+/// Hosting sessions started by this process ([`serve`] calls).
+static EPOCH_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh worker epoch: identifies one hosting session (one [`serve`]
+/// loop), so a registry probe can tell a restarted worker from the one it
+/// probed before.
+fn next_epoch() -> u64 {
+    let mut base = EPOCH_BASE.load(Ordering::Relaxed);
+    if base == 0 {
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x9E37_79B9_7F4A_7C15)
+            | 1; // never the "unset" sentinel
+        let _ = EPOCH_BASE.compare_exchange(0, seed, Ordering::Relaxed, Ordering::Relaxed);
+        base = EPOCH_BASE.load(Ordering::Relaxed);
+    }
+    // shift the counter so consecutive sessions differ in high bits too
+    let seq = EPOCH_COUNTER.fetch_add(1, Ordering::Relaxed);
+    base.wrapping_add(seq.wrapping_mul(0x2545_F491_4F6C_DD1D))
+}
+
+/// Probe nonces (monotonic per process; the Pong must echo them).
+static PROBE_NONCE: AtomicU64 = AtomicU64::new(1);
 
 // ---------------------------------------------------------------------------
 // worker (server) side
@@ -85,10 +146,14 @@ struct Mirror {
     state: ShardState,
     lo: usize,
     hi: usize,
+    /// Panel revision: installed by the sync that built this mirror
+    /// (v2 `SyncAt`; plain v1 `Sync` means 0), bumped on every delta —
+    /// in lockstep with the coordinator, reported by `Pong`.
+    revision: u64,
 }
 
 impl Mirror {
-    fn from_sync(sf: SyncFrame) -> anyhow::Result<Self> {
+    fn from_sync(sf: SyncFrame, revision: u64) -> anyhow::Result<Self> {
         let SyncFrame { shard_id, nshards, class, metric, xt, lam_xt, kp_eff, kpp_eff, h } = sf;
         let nshards = nshards as usize;
         let shard_id = shard_id as usize;
@@ -129,6 +194,7 @@ impl Mirror {
             state,
             lo,
             hi,
+            revision,
         })
     }
 
@@ -169,6 +235,7 @@ impl Mirror {
         self.kpp_eff = grow_symmetric(&self.kpp_eff, &af.kpp_col);
         self.xt.push_col(&af.xt_new);
         self.lam_xt.push_col(&af.lam_new);
+        self.revision = self.revision.wrapping_add(1);
         self.refresh();
         Ok(())
     }
@@ -180,6 +247,7 @@ impl Mirror {
         self.kpp_eff = shrink_first(&self.kpp_eff);
         self.xt.remove_first_col();
         self.lam_xt.remove_first_col();
+        self.revision = self.revision.wrapping_add(1);
         self.refresh();
         Ok(())
     }
@@ -192,20 +260,28 @@ fn fail(stream: &mut TcpStream, message: String) -> anyhow::Error {
     anyhow::anyhow!(message)
 }
 
-/// Serve shard-worker connections forever: accept a coordinator, host its
-/// shard state until it disconnects (or sends `Shutdown`), then accept the
-/// next. One coordinator at a time — a worker's panels belong to exactly
-/// one serving engine.
+/// Serve shard-worker connections forever. Connections are **accepted
+/// concurrently** so health probes (Hello → Ping → Pong) are answered even
+/// while a coordinator is attached — but the worker's panels still belong
+/// to exactly one serving engine at a time: the first *state* frame
+/// (sync/delta/apply) takes a process-wide hosting lock, so a second
+/// coordinator blocks there until the current session ends. Every
+/// connection of this hosting session reports the same **epoch** in its
+/// `Pong` answers, so a registry probe can tell a restarted worker from
+/// the one it saw before.
 pub fn serve(listener: TcpListener) -> anyhow::Result<()> {
+    let epoch = next_epoch();
+    let hosting = Arc::new(std::sync::Mutex::new(()));
     for conn in listener.incoming() {
         match conn {
             Ok(stream) => {
                 let peer =
                     stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
-                match serve_conn(stream) {
+                let lock = Arc::clone(&hosting);
+                std::thread::spawn(move || match serve_conn(stream, epoch, &lock) {
                     Ok(()) => eprintln!("gdkron shard-worker: coordinator {peer} detached"),
                     Err(e) => eprintln!("gdkron shard-worker: connection from {peer} failed: {e}"),
-                }
+                });
             }
             Err(e) => eprintln!("gdkron shard-worker: accept failed: {e}"),
         }
@@ -213,33 +289,46 @@ pub fn serve(listener: TcpListener) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Serve one coordinator connection to completion.
-fn serve_conn(mut stream: TcpStream) -> anyhow::Result<()> {
+/// Serve one coordinator connection to completion. Probe-only connections
+/// (handshake + pings) never touch the hosting lock; the first state frame
+/// acquires it for the rest of the connection.
+fn serve_conn(
+    mut stream: TcpStream,
+    epoch: u64,
+    hosting: &std::sync::Mutex<()>,
+) -> anyhow::Result<()> {
     let _ = stream.set_nodelay(true);
     // a coordinator that stops draining mid-reply must not wedge the
     // worker forever: bound writes, then drop the connection on timeout
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
-    // handshake: versioned Hello → HelloAck
+    // handshake: versioned Hello → HelloAck with the *negotiated* version
+    // (min of both sides) — an old coordinator still gets served, a
+    // too-old one gets a descriptive error, never a misparse
     match CoordFrame::read_from(&mut stream)? {
         CoordFrame::Hello { magic, version } => {
             if magic != WIRE_MAGIC {
                 return Err(fail(&mut stream, format!("bad wire magic {magic:#010x}")));
             }
-            if version != WIRE_VERSION {
+            if version < MIN_WIRE_VERSION {
                 return Err(fail(
                     &mut stream,
                     format!(
-                        "wire version mismatch: worker speaks v{WIRE_VERSION}, \
-                         coordinator sent v{version}"
+                        "wire version mismatch: worker speaks \
+                         v{MIN_WIRE_VERSION}..=v{WIRE_VERSION}, coordinator sent v{version}"
                     ),
                 ));
             }
-            WorkerFrame::HelloAck { version: WIRE_VERSION }.write_to(&mut stream)?;
+            let negotiated = version.min(WIRE_VERSION);
+            WorkerFrame::HelloAck { version: negotiated }.write_to(&mut stream)?;
         }
         _ => anyhow::bail!("expected Hello as the first frame"),
     }
 
     let mut mirror: Option<Mirror> = None;
+    // the hosting session: taken at the first state frame, held until the
+    // connection ends (probe-only connections never take it, so a worker
+    // hosting a coordinator still answers pings on fresh connections)
+    let mut session: Option<std::sync::MutexGuard<'_, ()>> = None;
     // a frame observed while waiting for the P-diagonal barrier: the apply
     // was abandoned by the coordinator; process the frame normally
     let mut pending: Option<CoordFrame> = None;
@@ -251,11 +340,31 @@ fn serve_conn(mut stream: TcpStream) -> anyhow::Result<()> {
                 None => return Ok(()), // coordinator hung up cleanly
             },
         };
+        // state frames belong to the (single) hosting session; control
+        // frames (Ping/Shutdown) are served lock-free
+        let needs_session = !matches!(
+            frame,
+            CoordFrame::Ping { .. } | CoordFrame::Shutdown | CoordFrame::Hello { .. }
+        );
+        if needs_session && session.is_none() {
+            // a poisoned lock only means another connection's thread
+            // panicked; the panels are per-connection, so serving on is safe
+            session = Some(hosting.lock().unwrap_or_else(|e| e.into_inner()));
+        }
         match frame {
             CoordFrame::Hello { .. } => {
                 return Err(fail(&mut stream, "unexpected mid-session Hello".into()))
             }
-            CoordFrame::Sync(sf) => match Mirror::from_sync(*sf) {
+            CoordFrame::Ping { nonce } => {
+                let (revision, synced) =
+                    mirror.as_ref().map_or((0, false), |m| (m.revision, true));
+                WorkerFrame::Pong { nonce, epoch, revision, synced }.write_to(&mut stream)?;
+            }
+            CoordFrame::Sync(sf) => match Mirror::from_sync(*sf, 0) {
+                Ok(m) => mirror = Some(m),
+                Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
+            },
+            CoordFrame::SyncAt { revision, sync } => match Mirror::from_sync(*sync, revision) {
                 Ok(m) => mirror = Some(m),
                 Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
             },
@@ -308,28 +417,50 @@ fn serve_conn(mut stream: TcpStream) -> anyhow::Result<()> {
                     KernelClass::Stationary => {
                         let (pblocks, diag) = apply_phase_p(&m.shared, &m.state, &xin);
                         WorkerFrame::Diag { diag }.write_to(&mut stream)?;
-                        match CoordFrame::read_opt(&mut stream)? {
-                            Some(CoordFrame::PDiag { pdiag }) => {
-                                if pdiag.rows() != m.shared.n || pdiag.cols() != xin.cols() {
-                                    return Err(fail(
-                                        &mut stream,
-                                        format!(
-                                            "P-diagonal is {}x{}, expected {}x{}",
-                                            pdiag.rows(),
-                                            pdiag.cols(),
-                                            m.shared.n,
-                                            xin.cols()
-                                        ),
-                                    ));
+                        // wait at the P-diagonal barrier; health probes on
+                        // this connection are answered in place (a Ping
+                        // must never abandon an apply in flight)
+                        let mut barrier_pdiag: Option<Mat> = None;
+                        loop {
+                            match CoordFrame::read_opt(&mut stream)? {
+                                Some(CoordFrame::PDiag { pdiag }) => {
+                                    barrier_pdiag = Some(pdiag);
+                                    break;
                                 }
-                                let block = apply_finish_stationary(
-                                    &m.shared, &m.state, &xin, &pblocks, &pdiag,
-                                );
-                                WorkerFrame::Out { block }.write_to(&mut stream)?;
+                                Some(CoordFrame::Ping { nonce }) => {
+                                    WorkerFrame::Pong {
+                                        nonce,
+                                        epoch,
+                                        revision: m.revision,
+                                        synced: true,
+                                    }
+                                    .write_to(&mut stream)?;
+                                }
+                                Some(CoordFrame::Shutdown) => return Ok(()),
+                                Some(other) => {
+                                    pending = Some(other); // apply abandoned
+                                    break;
+                                }
+                                None => return Ok(()),
                             }
-                            Some(CoordFrame::Shutdown) => return Ok(()),
-                            Some(other) => pending = Some(other), // apply abandoned
-                            None => return Ok(()),
+                        }
+                        if let Some(pdiag) = barrier_pdiag {
+                            if pdiag.rows() != m.shared.n || pdiag.cols() != xin.cols() {
+                                return Err(fail(
+                                    &mut stream,
+                                    format!(
+                                        "P-diagonal is {}x{}, expected {}x{}",
+                                        pdiag.rows(),
+                                        pdiag.cols(),
+                                        m.shared.n,
+                                        xin.cols()
+                                    ),
+                                ));
+                            }
+                            let block = apply_finish_stationary(
+                                &m.shared, &m.state, &xin, &pblocks, &pdiag,
+                            );
+                            WorkerFrame::Out { block }.write_to(&mut stream)?;
                         }
                     }
                 }
@@ -355,58 +486,147 @@ pub struct RemoteEndpoint {
     stream: TcpStream,
     /// The frame timeout: bounds connects, writes and control-plane reads.
     timeout: Duration,
+    /// Result-gather reads wait `gather_factor × timeout`.
+    gather_factor: u32,
+    /// The version the Hello handshake negotiated (`min` of both sides);
+    /// v2 frames (`SyncAt`, `Ping`) are only sent when it is ≥ 2.
+    negotiated: u16,
 }
 
-/// Result-gather reads (the shard's apply compute) get this multiple of the
-/// frame timeout: compute time on a large window is *legitimate* latency
-/// and must not trip spurious, irreversible degradation, while a dead peer
-/// still fails instantly (EOF/RST does not wait for the timeout) and a
-/// silently wedged one is still bounded.
-const RESULT_TIMEOUT_FACTOR: u32 = 12;
+/// Default multiple of the frame timeout granted to result-gather reads
+/// (the shard's apply compute): compute time on a large window is
+/// *legitimate* latency and must not trip spurious, irreversible
+/// degradation, while a dead peer still fails instantly (EOF/RST does not
+/// wait for the timeout) and a silently wedged one is still bounded.
+/// Overridable via the `gram.remote_gather_factor` config knob
+/// ([`crate::config::remote_gather_factor`] / [`RemoteOptions`]).
+pub const RESULT_TIMEOUT_FACTOR: u32 = 12;
+
+/// Dial a shard worker (trying every resolved address), bound every
+/// subsequent socket operation by `timeout`, and run the versioned
+/// handshake. Returns the stream plus the negotiated protocol version.
+fn open_stream(addr: &str, timeout: Duration) -> anyhow::Result<(TcpStream, u16)> {
+    let sockaddrs: Vec<_> = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("resolving shard address {addr:?}: {e}"))?
+        .collect();
+    anyhow::ensure!(!sockaddrs.is_empty(), "shard address {addr:?} resolves to nothing");
+    let mut stream = None;
+    let mut last_err = None;
+    for sa in &sockaddrs {
+        match TcpStream::connect_timeout(sa, timeout) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let mut stream = stream.ok_or_else(|| {
+        anyhow::anyhow!(
+            "connecting to shard worker {addr} ({} addresses tried): {}",
+            sockaddrs.len(),
+            last_err.map(|e| e.to_string()).unwrap_or_default()
+        )
+    })?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION }
+        .write_to(&mut stream)
+        .map_err(|e| anyhow::anyhow!("handshake with {addr}: {e}"))?;
+    match WorkerFrame::read_from(&mut stream) {
+        Ok(WorkerFrame::HelloAck { version }) => {
+            anyhow::ensure!(
+                (MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version),
+                "wire version mismatch with {addr}: coordinator speaks \
+                 v{MIN_WIRE_VERSION}..=v{WIRE_VERSION}, worker answered v{version}"
+            );
+            Ok((stream, version))
+        }
+        Ok(WorkerFrame::Err { message }) => {
+            Err(anyhow::anyhow!("worker {addr} rejected the handshake: {message}"))
+        }
+        Ok(_) => Err(anyhow::anyhow!("worker {addr} did not answer the handshake with HelloAck")),
+        Err(e) => Err(anyhow::anyhow!("handshake with {addr}: {e}")),
+    }
+}
+
+/// What a health probe learned about a worker (see [`probe`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeReport {
+    /// Negotiated wire version.
+    pub version: u16,
+    /// The worker's hosting-session epoch (changes when the worker
+    /// restarts).
+    pub epoch: u64,
+    /// The worker's panel revision (0 when it holds no mirror).
+    pub revision: u64,
+    /// Whether the worker holds a synced panel mirror on the *probe*
+    /// connection (always `false` for a detached worker: mirrors are
+    /// per-connection state).
+    pub synced: bool,
+}
+
+/// The registry's lightweight health probe: dial `addr`, handshake, send
+/// one `Ping` and read the `Pong`. Every socket operation is bounded by
+/// `timeout`, so a dead or wedged worker fails the probe promptly. A
+/// worker that negotiates below v2 cannot answer pings and is reported as
+/// a descriptive error (upgrade workers before coordinators).
+pub fn probe(addr: &str, timeout: Duration) -> anyhow::Result<ProbeReport> {
+    let (mut stream, version) = open_stream(addr, timeout)?;
+    anyhow::ensure!(
+        version >= 2,
+        "worker {addr} speaks wire v{version}, which has no health probes (upgrade it)"
+    );
+    let nonce = PROBE_NONCE.fetch_add(1, Ordering::Relaxed);
+    CoordFrame::Ping { nonce }
+        .write_to(&mut stream)
+        .map_err(|e| anyhow::anyhow!("probing {addr}: {e}"))?;
+    match WorkerFrame::read_from(&mut stream) {
+        Ok(WorkerFrame::Pong { nonce: echoed, epoch, revision, synced }) => {
+            anyhow::ensure!(
+                echoed == nonce,
+                "worker {addr} answered the probe with a stale nonce ({echoed} != {nonce})"
+            );
+            Ok(ProbeReport { version, epoch, revision, synced })
+        }
+        Ok(WorkerFrame::Err { message }) => {
+            Err(anyhow::anyhow!("worker {addr} rejected the probe: {message}"))
+        }
+        Ok(_) => Err(anyhow::anyhow!("worker {addr} answered the probe with the wrong frame")),
+        Err(e) => Err(anyhow::anyhow!("probing {addr}: {e}")),
+    }
+}
 
 impl RemoteEndpoint {
-    /// Connect (trying every resolved address), bound every subsequent
-    /// socket operation by `timeout`, and run the versioned handshake.
+    /// Connect with default transport options except the frame timeout —
+    /// see [`RemoteEndpoint::connect_opts`].
     pub fn connect(addr: &str, shard_id: usize, timeout: Duration) -> anyhow::Result<Self> {
-        let sockaddrs: Vec<_> = addr
-            .to_socket_addrs()
-            .map_err(|e| anyhow::anyhow!("resolving shard address {addr:?}: {e}"))?
-            .collect();
-        anyhow::ensure!(!sockaddrs.is_empty(), "shard address {addr:?} resolves to nothing");
-        let mut stream = None;
-        let mut last_err = None;
-        for sa in &sockaddrs {
-            match TcpStream::connect_timeout(sa, timeout) {
-                Ok(s) => {
-                    stream = Some(s);
-                    break;
-                }
-                Err(e) => last_err = Some(e),
-            }
-        }
-        let stream = stream.ok_or_else(|| {
-            anyhow::anyhow!(
-                "connecting to shard worker {addr} ({} addresses tried): {}",
-                sockaddrs.len(),
-                last_err.map(|e| e.to_string()).unwrap_or_default()
-            )
-        })?;
-        let _ = stream.set_nodelay(true);
-        stream.set_read_timeout(Some(timeout))?;
-        stream.set_write_timeout(Some(timeout))?;
-        let mut ep = RemoteEndpoint { addr: addr.to_string(), shard_id, stream, timeout };
-        ep.send(&CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION })?;
-        match ep.recv()? {
-            WorkerFrame::HelloAck { version } => {
-                anyhow::ensure!(
-                    version == WIRE_VERSION,
-                    "wire version mismatch with {addr}: coordinator speaks v{WIRE_VERSION}, \
-                     worker answered v{version}"
-                );
-            }
-            _ => anyhow::bail!("worker {addr} did not answer the handshake with HelloAck"),
-        }
-        Ok(ep)
+        Self::connect_opts(addr, shard_id, &RemoteOptions::with_timeout(timeout))
+    }
+
+    /// Connect (trying every resolved address), bound every subsequent
+    /// socket operation by `opts.timeout`, and run the versioned
+    /// handshake. Negotiation is **worker-side** (a newer worker serves an
+    /// older coordinator; upgrade workers before coordinators — a v1
+    /// worker rejects this coordinator's v2 Hello with a clean error); the
+    /// endpoint still honors a below-v2 HelloAck defensively by withholding
+    /// the v2 frames.
+    pub fn connect_opts(
+        addr: &str,
+        shard_id: usize,
+        opts: &RemoteOptions,
+    ) -> anyhow::Result<Self> {
+        let (stream, negotiated) = open_stream(addr, opts.timeout)?;
+        Ok(RemoteEndpoint {
+            addr: addr.to_string(),
+            shard_id,
+            stream,
+            timeout: opts.timeout,
+            gather_factor: opts.gather_factor.max(1),
+            negotiated,
+        })
     }
 
     fn send(&mut self, frame: &CoordFrame) -> anyhow::Result<()> {
@@ -427,10 +647,14 @@ impl RemoteEndpoint {
     }
 
     /// [`RemoteEndpoint::recv`] with the extended result-gather timeout
-    /// ([`RESULT_TIMEOUT_FACTOR`] × the frame timeout) — used for the reads
-    /// that wait on the worker's apply compute.
+    /// (`gather_factor` × the frame timeout, default
+    /// [`RESULT_TIMEOUT_FACTOR`]) — used for the reads that wait on the
+    /// worker's apply compute.
     fn recv_result(&mut self) -> anyhow::Result<WorkerFrame> {
-        let _ = self.stream.set_read_timeout(Some(self.timeout * RESULT_TIMEOUT_FACTOR));
+        // checked: a pathological timeout × factor combination saturates
+        // instead of panicking on the serving path
+        let gather = self.timeout.checked_mul(self.gather_factor).unwrap_or(Duration::MAX);
+        let _ = self.stream.set_read_timeout(Some(gather));
         let res = self.recv();
         let _ = self.stream.set_read_timeout(Some(self.timeout));
         res
@@ -445,8 +669,9 @@ impl ShardEndpoint for RemoteEndpoint {
         nshards: usize,
         _lo: usize,
         _hi: usize,
+        revision: u64,
     ) -> anyhow::Result<()> {
-        self.send(&CoordFrame::Sync(Box::new(SyncFrame {
+        let sync = Box::new(SyncFrame {
             shard_id: self.shard_id as u32,
             nshards: nshards as u32,
             class: f.class,
@@ -456,7 +681,16 @@ impl ShardEndpoint for RemoteEndpoint {
             kp_eff: f.kp_eff.clone(),
             kpp_eff: f.kpp_eff.clone(),
             h: f.h.clone(),
-        })))
+        });
+        if self.negotiated >= 2 {
+            self.send(&CoordFrame::SyncAt { revision, sync })
+        } else {
+            // defensive: a peer that acked below v2 gets the v1 frame
+            // (same panels, no revision tracking). Today's workers always
+            // ack v2 to a v2 coordinator — a real v1 worker rejects the
+            // handshake instead (upgrade workers before coordinators).
+            self.send(&CoordFrame::Sync(sync))
+        }
     }
 
     fn append(

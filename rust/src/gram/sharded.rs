@@ -43,12 +43,20 @@
 //! shard (remote workers mirror the panels and re-derive the plan
 //! themselves).
 //!
-//! **Degradation.** The engine always retains a full-range fallback state
-//! (the in-process single-shard operator). The first transport failure —
-//! a worker death, a disconnect mid-apply, a short frame — surfaces as a
-//! clean `anyhow` error on the solve path that observed it, the pool is
-//! torn down, and every subsequent application runs on the fallback:
-//! serving survives the loss of every remote worker.
+//! **Degradation and re-attach.** The engine always retains a full-range
+//! fallback state (the in-process single-shard operator). The first
+//! transport failure — a worker death, a disconnect mid-apply, a short
+//! frame — surfaces as a clean `anyhow` error on the solve path that
+//! observed it, the pool is torn down, and every subsequent application
+//! runs on the fallback: serving survives the loss of every remote worker.
+//! Under a health-checked registry
+//! ([`ShardedGramFactors::connect_registry`], [`crate::gram::registry`])
+//! the degradation is no longer permanent: a background prober watches the
+//! membership with exponential-backoff probes, and once every member
+//! answers its Ping the next observe barrier re-attaches the engine —
+//! fresh connections, the full panel broadcast at the current revision, a
+//! recomputed shard plan — and swaps it off the fallback bit-identically
+//! ([`ShardedGramFactors::maybe_reattach`]).
 //!
 //! Knob: `--shards N` on the CLI beats `GDKRON_SHARDS` beats the
 //! `gram.shards` config key ([`crate::config::resolve_shards`]); `1` (the
@@ -92,6 +100,13 @@ static CLI_SHARDS: AtomicUsize = AtomicUsize::new(0);
 /// [`crate::config::resolve_shards`].
 pub fn set_global_shards(n: usize) {
     CLI_SHARDS.store(n.clamp(1, MAX_SHARDS), Ordering::Relaxed);
+}
+
+/// Remove the process-wide `--shards` override again (the launcher never
+/// does this; it exists so knob-precedence tests can restore the
+/// no-override state).
+pub fn clear_global_shards() {
+    CLI_SHARDS.store(0, Ordering::Relaxed);
 }
 
 /// The `--shards` override, if one was installed.
@@ -248,7 +263,10 @@ pub(crate) struct AppendDelta {
 /// surface as an `Err` (the transports bound every receive — channel
 /// disconnection on one side, socket timeouts on the other).
 pub(crate) trait ShardEndpoint: Send {
-    /// Replace the shard's state wholesale (attach, rollback, cold refit).
+    /// Replace the shard's state wholesale (attach, rollback, cold refit,
+    /// re-attach resync). `revision` is the coordinator's panel revision at
+    /// this broadcast; remote v2 workers install and track it (in-process
+    /// workers ignore it — their state is replaced by value).
     fn sync(
         &mut self,
         f: &GramFactors,
@@ -256,6 +274,7 @@ pub(crate) trait ShardEndpoint: Send {
         nshards: usize,
         lo: usize,
         hi: usize,
+        revision: u64,
     ) -> anyhow::Result<()>;
     /// Apply an online append delta (borders already evaluated, exactly
     /// once, by the coordinator).
@@ -505,6 +524,7 @@ impl ShardEndpoint for ChannelEndpoint {
         _nshards: usize,
         lo: usize,
         hi: usize,
+        _revision: u64,
     ) -> anyhow::Result<()> {
         self.tx
             .send(Job::Sync { shared: Arc::clone(shared), state: build_state(f, lo, hi) })
@@ -522,7 +542,7 @@ impl ShardEndpoint for ChannelEndpoint {
     ) -> anyhow::Result<()> {
         // a full row-block rebuild IS the cheap in-process delta: the shared
         // panels travel by Arc and the state is O((N² + ND)/S) copies
-        self.sync(f, shared, nshards, lo, hi)
+        self.sync(f, shared, nshards, lo, hi, 0)
     }
 
     fn drop_first(
@@ -533,7 +553,7 @@ impl ShardEndpoint for ChannelEndpoint {
         lo: usize,
         hi: usize,
     ) -> anyhow::Result<()> {
-        self.sync(f, shared, nshards, lo, hi)
+        self.sync(f, shared, nshards, lo, hi, 0)
     }
 
     fn start_hborder(&mut self, lam_new: &[f64]) -> anyhow::Result<()> {
@@ -653,6 +673,14 @@ pub struct ShardedGramFactors {
     remote: bool,
     degraded: AtomicBool,
     degraded_reason: Mutex<Option<String>>,
+    /// Panel revision: bumped on every state mutation (sync, append,
+    /// drop), mirrored by v2 remote workers and reported by their pongs.
+    revision: u64,
+    /// Health-checked membership supervisor; present only for
+    /// registry-managed remote engines ([`ShardedGramFactors::connect_registry`]).
+    registry: Option<super::registry::ShardRegistry>,
+    /// Successful degraded → pooled re-attaches.
+    reattaches: u64,
 }
 
 impl ShardedGramFactors {
@@ -680,6 +708,9 @@ impl ShardedGramFactors {
             remote: false,
             degraded: AtomicBool::new(false),
             degraded_reason: Mutex::new(None),
+            revision: 0,
+            registry: None,
+            reattaches: 0,
         };
         engine.resync(f);
         engine
@@ -697,6 +728,16 @@ impl ShardedGramFactors {
         addrs: &[String],
         timeout: Duration,
     ) -> anyhow::Result<Self> {
+        Self::connect_remote_opts(f, addrs, &super::remote::RemoteOptions::with_timeout(timeout))
+    }
+
+    /// [`ShardedGramFactors::connect_remote`] with full transport options
+    /// (frame timeout + result-gather factor).
+    pub fn connect_remote_opts(
+        f: &GramFactors,
+        addrs: &[String],
+        opts: &super::remote::RemoteOptions,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(!addrs.is_empty(), "remote shard address list is empty");
         anyhow::ensure!(
             addrs.len() <= MAX_SHARDS,
@@ -705,7 +746,7 @@ impl ShardedGramFactors {
         );
         let mut endpoints: Vec<Box<dyn ShardEndpoint>> = Vec::with_capacity(addrs.len());
         for (id, addr) in addrs.iter().enumerate() {
-            endpoints.push(Box::new(super::remote::RemoteEndpoint::connect(addr, id, timeout)?));
+            endpoints.push(Box::new(super::remote::RemoteEndpoint::connect_opts(addr, id, opts)?));
         }
         let nshards = addrs.len();
         let mut engine = ShardedGramFactors {
@@ -719,6 +760,9 @@ impl ShardedGramFactors {
             remote: true,
             degraded: AtomicBool::new(false),
             degraded_reason: Mutex::new(None),
+            revision: 0,
+            registry: None,
+            reattaches: 0,
         };
         engine.resync(f);
         if engine.is_degraded() {
@@ -727,6 +771,28 @@ impl ShardedGramFactors {
                 engine.degraded_reason().unwrap_or_else(|| "unknown".into())
             );
         }
+        Ok(engine)
+    }
+
+    /// Build the cross-node shard engine under a **health-checked
+    /// registry** ([`super::registry`]): the initial membership comes from
+    /// the registry file when configured (re-read on every probe sweep, so
+    /// it beats the static list) or the static address list otherwise, and
+    /// a background prober watches the membership whenever the engine is
+    /// degraded. Serving-path callers drive the recovery by calling
+    /// [`ShardedGramFactors::maybe_reattach`] at their observe barriers.
+    ///
+    /// Initial-connect semantics match [`ShardedGramFactors::connect_remote`]:
+    /// a totally unreachable fleet is a hard error here (callers fall back
+    /// to in-process sharding), the registry takes over only once the
+    /// engine is up.
+    pub fn connect_registry(
+        f: &GramFactors,
+        cfg: super::registry::RegistryConfig,
+    ) -> anyhow::Result<Self> {
+        let addrs = cfg.initial_membership()?;
+        let mut engine = Self::connect_remote_opts(f, &addrs, &cfg.remote)?;
+        engine.registry = Some(super::registry::ShardRegistry::start(cfg, &addrs));
         Ok(engine)
     }
 
@@ -751,6 +817,100 @@ impl ShardedGramFactors {
         self.degraded_reason.lock().unwrap().clone()
     }
 
+    /// The coordinator's panel revision (bumped on every sync/append/drop;
+    /// v2 remote mirrors track it and report it in their pongs).
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Successful degraded → pooled re-attaches performed so far.
+    pub fn reattach_count(&self) -> u64 {
+        self.reattaches
+    }
+
+    /// Health probes sent by the registry prober (0 without a registry).
+    pub fn probe_count(&self) -> u64 {
+        self.registry.as_ref().map_or(0, super::registry::ShardRegistry::probe_count)
+    }
+
+    /// `true` when this engine's membership is supervised by a
+    /// health-checked registry.
+    pub fn has_registry(&self) -> bool {
+        self.registry.is_some()
+    }
+
+    /// Attempt the automatic re-attach: if the engine is degraded, its
+    /// registry reports **every** member of the current membership healthy
+    /// (the shard plan spans all of them), and fresh connections + the full
+    /// panel broadcast at the current revision all succeed, the engine
+    /// swaps off the in-process fallback and back onto the pooled
+    /// transport — bit-identically, because the resync re-broadcasts the
+    /// authoritative panels and every worker runs the exact serial
+    /// per-column kernels.
+    ///
+    /// Call sites are the serving engine's **observe barriers** (see
+    /// [`crate::gp::OnlineGradientGp`]), so the swap never lands mid-solve
+    /// and in-flight applications are never dropped. Returns `true` when a
+    /// re-attach happened. Cheap when there is nothing to do (not
+    /// degraded, no registry, membership not yet healthy).
+    pub fn maybe_reattach(&mut self, f: &GramFactors) -> bool {
+        if !self.is_degraded() {
+            return false;
+        }
+        let Some(addrs) = self.registry.as_ref().and_then(|r| r.healthy_membership()) else {
+            return false;
+        };
+        if addrs.is_empty() || addrs.len() > MAX_SHARDS {
+            return false;
+        }
+        let opts = self.registry.as_ref().map(|r| r.remote_options()).unwrap_or_default();
+        let mut endpoints: Vec<Box<dyn ShardEndpoint>> = Vec::with_capacity(addrs.len());
+        for (id, addr) in addrs.iter().enumerate() {
+            match super::remote::RemoteEndpoint::connect_opts(addr, id, &opts) {
+                Ok(ep) => endpoints.push(Box::new(ep)),
+                Err(e) => {
+                    // a probe said healthy but the attach dial failed: push
+                    // the address back into the probe/backoff cycle instead
+                    // of retrying hot at every barrier
+                    if let Some(reg) = &self.registry {
+                        reg.mark_unhealthy(addr, &e.to_string());
+                    }
+                    return false;
+                }
+            }
+        }
+        // unpoison, then resync: the full panel broadcast at the current
+        // revision installs the authoritative state on every fresh worker;
+        // the plan is recomputed for the (possibly changed) membership size
+        let prev_nshards = self.nshards;
+        self.nshards = addrs.len();
+        self.pool = Some(RefCell::new(endpoints));
+        self.degraded.store(false, Ordering::SeqCst);
+        *self.degraded_reason.lock().unwrap() = None;
+        self.resync(f);
+        if self.is_degraded() {
+            // the re-attach sync itself failed: resync already re-poisoned
+            // the engine (and notified the registry). Roll the shard count
+            // (and the plan derived from it) back so diagnostics keep
+            // reporting the attached-era topology while the fallback serves
+            self.pool = None;
+            self.nshards = prev_nshards;
+            self.refresh_local(f);
+            return false;
+        }
+        self.reattaches += 1;
+        if let Some(reg) = &self.registry {
+            reg.notify_attached();
+        }
+        eprintln!(
+            "gdkron: shard transport re-attached ({} worker{}), serving from the pooled \
+             transport again",
+            self.nshards,
+            if self.nshards == 1 { "" } else { "s" }
+        );
+        true
+    }
+
     fn note_degraded(&self, msg: String) {
         if !self.degraded.swap(true, Ordering::SeqCst) {
             eprintln!(
@@ -760,6 +920,12 @@ impl ShardedGramFactors {
         let mut guard = self.degraded_reason.lock().unwrap();
         if guard.is_none() {
             *guard = Some(msg);
+        }
+        drop(guard);
+        // wake the registry prober: from here on the membership is watched
+        // until maybe_reattach swaps the engine back onto a healthy pool
+        if let Some(reg) = &self.registry {
+            reg.notify_detached();
         }
     }
 
@@ -813,18 +979,20 @@ impl ShardedGramFactors {
     /// Rebuild every shard's row block (and the shared snapshot) from the
     /// authoritative factors. Called after every engine switch, rollback or
     /// cold refit; `O(N²/S + ND/S)` copies per in-process shard, a full
-    /// panel broadcast per remote shard (the "once per plan refresh" cost).
+    /// panel broadcast per remote shard (the "once per plan refresh" cost)
+    /// at a freshly bumped panel revision.
     pub fn resync(&mut self, f: &GramFactors) {
         if self.is_degraded() {
             self.pool = None;
         }
         self.refresh_local(f);
+        self.revision = self.revision.wrapping_add(1);
         let mut failure: Option<String> = None;
         if let Some(pool) = self.pool.as_ref() {
             let mut endpoints = pool.borrow_mut();
             for (id, ep) in endpoints.iter_mut().enumerate() {
                 let (lo, hi) = self.plan[id];
-                if let Err(e) = ep.sync(f, &self.shared, self.nshards, lo, hi) {
+                if let Err(e) = ep.sync(f, &self.shared, self.nshards, lo, hi, self.revision) {
                     failure = Some(format!("{}: {e}", ep.describe()));
                     break;
                 }
@@ -841,6 +1009,9 @@ impl ShardedGramFactors {
     /// in-process fallback — the authoritative factors are already updated,
     /// so nothing is lost but the fan-out.
     fn push_delta(&mut self, f: &GramFactors, delta: Option<&AppendDelta>) {
+        // one bump per delta — v2 remote mirrors bump themselves by one per
+        // Append/DropFirst frame, keeping both sides in lockstep
+        self.revision = self.revision.wrapping_add(1);
         let mut failure: Option<String> = None;
         if let Some(pool) = self.pool.as_ref() {
             let mut endpoints = pool.borrow_mut();
@@ -902,6 +1073,7 @@ impl ShardedGramFactors {
         if self.pool.is_none() {
             f.append(kernel, x_new);
             self.refresh_local(f);
+            self.revision = self.revision.wrapping_add(1);
             return;
         }
         let n = f.n();

@@ -9,14 +9,17 @@
 //! strings. No external dependencies: this module and [`super::remote`] are
 //! plain `std::net` + `std::io`.
 //!
-//! The protocol is versioned: a connection opens with
-//! [`CoordFrame::Hello`] (magic + version) answered by
-//! [`WorkerFrame::HelloAck`]; a mismatch on either side is a clean error,
-//! never a misparse. Decoding is defensive — frames larger than
-//! [`MAX_FRAME_BYTES`], truncated payloads, unknown tags, non-UTF-8
-//! strings and dimension/length overflows all return descriptive
-//! `anyhow` errors (and the reader never allocates more than the declared,
-//! bounded frame size).
+//! The protocol is versioned **with backward-compatible negotiation**: a
+//! connection opens with [`CoordFrame::Hello`] (magic + the coordinator's
+//! version) answered by [`WorkerFrame::HelloAck`] carrying the *negotiated*
+//! version — `min(coordinator, worker)`, as long as the coordinator speaks
+//! at least [`MIN_WIRE_VERSION`]. A v1 coordinator therefore still drives a
+//! v2 worker (the worker simply never sees the v2 frames); anything outside
+//! the supported range is a clean, descriptive error, never a misparse.
+//! Decoding is defensive — frames larger than [`MAX_FRAME_BYTES`],
+//! truncated payloads, unknown tags, non-UTF-8 strings and
+//! dimension/length overflows all return descriptive `anyhow` errors (and
+//! the reader never allocates more than the declared, bounded frame size).
 //!
 //! Coordinator → worker ([`CoordFrame`]): `Hello`, `Sync` (full panel
 //! broadcast — once per plan refresh), `Append` / `DropFirst` (the
@@ -26,6 +29,19 @@
 //! ([`WorkerFrame`]): `HelloAck`, `HBorderSlice`, `Diag`, `Out` and `Err`
 //! (a worker-side failure surfaced as a message instead of a dropped
 //! connection).
+//!
+//! **v2 (the health/registry protocol)** adds three frames:
+//! * [`CoordFrame::SyncAt`] — a `Sync` that also pins the coordinator's
+//!   **panel revision**, the monotonic counter the coordinator bumps on
+//!   every state mutation (sync, append, drop). Workers install it on sync
+//!   and bump it themselves on every delta, so both sides agree on the
+//!   revision without extra traffic.
+//! * [`CoordFrame::Ping`] / [`WorkerFrame::Pong`] — the lightweight health
+//!   probe: `Pong` echoes the probe nonce and reports the worker's
+//!   **epoch** (a per-hosting-session id, so a restarted worker is
+//!   distinguishable), its current panel revision, and whether it holds a
+//!   synced mirror at all. This is what the shard registry
+//!   ([`crate::gram::registry`]) speaks on its probe connections.
 
 use std::io::{Read, Write};
 
@@ -36,8 +52,13 @@ use crate::linalg::Mat;
 /// `b"GDKW"` as a little-endian u32 — the handshake magic.
 pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"GDKW");
 
-/// Protocol version; bumped on any frame-layout change.
-pub const WIRE_VERSION: u16 = 1;
+/// Protocol version; bumped on any frame-layout change. v2 added the
+/// health/registry frames (`Ping`/`Pong`/`SyncAt`).
+pub const WIRE_VERSION: u16 = 2;
+
+/// Oldest coordinator version a worker still serves (the Hello handshake
+/// negotiates down to it): v1 peers simply never see the v2 frames.
+pub const MIN_WIRE_VERSION: u16 = 1;
 
 /// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
 /// length prefix fails fast instead of triggering a huge allocation.
@@ -52,12 +73,17 @@ const TAG_PDIAG: u8 = 0x05;
 const TAG_APPEND: u8 = 0x06;
 const TAG_DROP_FIRST: u8 = 0x07;
 const TAG_SHUTDOWN: u8 = 0x08;
+// v2 coordinator tags (never sent on a v1-negotiated connection).
+const TAG_PING: u8 = 0x09;
+const TAG_SYNC_AT: u8 = 0x0A;
 // Worker → coordinator tags.
 const TAG_HELLO_ACK: u8 = 0x81;
 const TAG_HBORDER_SLICE: u8 = 0x82;
 const TAG_DIAG: u8 = 0x83;
 const TAG_OUT: u8 = 0x84;
 const TAG_ERR: u8 = 0x85;
+// v2 worker tags.
+const TAG_PONG: u8 = 0x86;
 
 /// Full shard-state broadcast: the shared panels plus the square
 /// derivative panels the worker mirrors, and the worker's place in the
@@ -94,12 +120,19 @@ pub struct AppendFrame {
 pub enum CoordFrame {
     Hello { magic: u32, version: u16 },
     Sync(Box<SyncFrame>),
+    /// v2 `Sync` that also installs the coordinator's panel revision on the
+    /// worker — the re-attach resync path ("full panel broadcast at the
+    /// current revision").
+    SyncAt { revision: u64, sync: Box<SyncFrame> },
     HBorder { lam_new: Vec<f64> },
     Apply { xin: Mat },
     PDiag { pdiag: Mat },
     Append(Box<AppendFrame>),
     DropFirst,
     Shutdown,
+    /// v2 health probe; the nonce ties the answering [`WorkerFrame::Pong`]
+    /// to this probe.
+    Ping { nonce: u64 },
 }
 
 /// Worker → coordinator messages.
@@ -109,6 +142,10 @@ pub enum WorkerFrame {
     Diag { diag: Mat },
     Out { block: Mat },
     Err { message: String },
+    /// v2 health answer: the probe nonce echoed, the worker's
+    /// hosting-session epoch, its panel revision, and whether it holds a
+    /// synced mirror.
+    Pong { nonce: u64, epoch: u64, revision: u64, synced: bool },
 }
 
 // ---------------------------------------------------------------------------
@@ -182,6 +219,22 @@ impl Enc {
             KernelClass::DotProduct => 0,
             KernelClass::Stationary => 1,
         });
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    fn sync(&mut self, sf: &SyncFrame) {
+        self.u32(sf.shard_id);
+        self.u32(sf.nshards);
+        self.class(sf.class);
+        self.metric(&sf.metric);
+        self.mat(&sf.xt);
+        self.mat(&sf.lam_xt);
+        self.mat(&sf.kp_eff);
+        self.mat(&sf.kpp_eff);
+        self.mat(&sf.h);
     }
 }
 
@@ -306,6 +359,28 @@ impl<'a> Dec<'a> {
         }
     }
 
+    fn bool(&mut self) -> anyhow::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(anyhow::anyhow!("bad boolean byte {t} in frame")),
+        }
+    }
+
+    fn sync(&mut self) -> anyhow::Result<SyncFrame> {
+        Ok(SyncFrame {
+            shard_id: self.u32()?,
+            nshards: self.u32()?,
+            class: self.class()?,
+            metric: self.metric()?,
+            xt: self.mat()?,
+            lam_xt: self.mat()?,
+            kp_eff: self.mat()?,
+            kpp_eff: self.mat()?,
+            h: self.mat()?,
+        })
+    }
+
     fn finish(self) -> anyhow::Result<()> {
         anyhow::ensure!(self.remaining() == 0, "{} trailing bytes in frame", self.remaining());
         Ok(())
@@ -389,16 +464,13 @@ impl CoordFrame {
                 TAG_HELLO
             }
             CoordFrame::Sync(sf) => {
-                e.u32(sf.shard_id);
-                e.u32(sf.nshards);
-                e.class(sf.class);
-                e.metric(&sf.metric);
-                e.mat(&sf.xt);
-                e.mat(&sf.lam_xt);
-                e.mat(&sf.kp_eff);
-                e.mat(&sf.kpp_eff);
-                e.mat(&sf.h);
+                e.sync(sf);
                 TAG_SYNC
+            }
+            CoordFrame::SyncAt { revision, sync } => {
+                e.u64(*revision);
+                e.sync(sync);
+                TAG_SYNC_AT
             }
             CoordFrame::HBorder { lam_new } => {
                 e.vec_f64(lam_new);
@@ -422,6 +494,10 @@ impl CoordFrame {
             }
             CoordFrame::DropFirst => TAG_DROP_FIRST,
             CoordFrame::Shutdown => TAG_SHUTDOWN,
+            CoordFrame::Ping { nonce } => {
+                e.u64(*nonce);
+                TAG_PING
+            }
         };
         write_frame(w, tag, &e.buf)
     }
@@ -430,17 +506,11 @@ impl CoordFrame {
         let mut d = Dec::new(payload);
         let frame = match tag {
             TAG_HELLO => CoordFrame::Hello { magic: d.u32()?, version: d.u16()? },
-            TAG_SYNC => CoordFrame::Sync(Box::new(SyncFrame {
-                shard_id: d.u32()?,
-                nshards: d.u32()?,
-                class: d.class()?,
-                metric: d.metric()?,
-                xt: d.mat()?,
-                lam_xt: d.mat()?,
-                kp_eff: d.mat()?,
-                kpp_eff: d.mat()?,
-                h: d.mat()?,
-            })),
+            TAG_SYNC => CoordFrame::Sync(Box::new(d.sync()?)),
+            TAG_SYNC_AT => {
+                let revision = d.u64()?;
+                CoordFrame::SyncAt { revision, sync: Box::new(d.sync()?) }
+            }
             TAG_HBORDER => CoordFrame::HBorder { lam_new: d.vec_f64()? },
             TAG_APPLY => CoordFrame::Apply { xin: d.mat()? },
             TAG_PDIAG => CoordFrame::PDiag { pdiag: d.mat()? },
@@ -453,6 +523,7 @@ impl CoordFrame {
             })),
             TAG_DROP_FIRST => CoordFrame::DropFirst,
             TAG_SHUTDOWN => CoordFrame::Shutdown,
+            TAG_PING => CoordFrame::Ping { nonce: d.u64()? },
             t => anyhow::bail!("unknown coordinator frame tag {t:#04x}"),
         };
         d.finish()?;
@@ -498,6 +569,13 @@ impl WorkerFrame {
                 e.string(message);
                 TAG_ERR
             }
+            WorkerFrame::Pong { nonce, epoch, revision, synced } => {
+                e.u64(*nonce);
+                e.u64(*epoch);
+                e.u64(*revision);
+                e.bool(*synced);
+                TAG_PONG
+            }
         };
         write_frame(w, tag, &e.buf)
     }
@@ -510,6 +588,12 @@ impl WorkerFrame {
             TAG_DIAG => WorkerFrame::Diag { diag: d.mat()? },
             TAG_OUT => WorkerFrame::Out { block: d.mat()? },
             TAG_ERR => WorkerFrame::Err { message: d.string()? },
+            TAG_PONG => WorkerFrame::Pong {
+                nonce: d.u64()?,
+                epoch: d.u64()?,
+                revision: d.u64()?,
+                synced: d.bool()?,
+            },
             t => anyhow::bail!("unknown worker frame tag {t:#04x}"),
         };
         d.finish()?;
@@ -611,6 +695,65 @@ mod tests {
             _ => panic!("wrong frame"),
         }
         assert!(cur.is_empty());
+    }
+
+    #[test]
+    fn ping_pong_roundtrip_is_exact() {
+        match roundtrip_coord(&CoordFrame::Ping { nonce: 0xDEAD_BEEF_0042 }) {
+            CoordFrame::Ping { nonce } => assert_eq!(nonce, 0xDEAD_BEEF_0042),
+            _ => panic!("wrong frame"),
+        }
+        let mut buf = Vec::new();
+        WorkerFrame::Pong { nonce: 7, epoch: u64::MAX, revision: 41, synced: true }
+            .write_to(&mut buf)
+            .unwrap();
+        let mut cur = &buf[..];
+        match WorkerFrame::read_from(&mut cur).unwrap() {
+            WorkerFrame::Pong { nonce, epoch, revision, synced } => {
+                assert_eq!(nonce, 7);
+                assert_eq!(epoch, u64::MAX);
+                assert_eq!(revision, 41);
+                assert!(synced);
+            }
+            _ => panic!("wrong frame"),
+        }
+        assert!(cur.is_empty());
+    }
+
+    #[test]
+    fn sync_at_roundtrip_carries_the_revision() {
+        let sf = SyncFrame {
+            shard_id: 1,
+            nshards: 3,
+            class: KernelClass::DotProduct,
+            metric: Metric::Iso(0.75),
+            xt: Mat::from_fn(2, 2, |i, j| (i + j) as f64),
+            lam_xt: Mat::from_fn(2, 2, |i, j| (i * j) as f64),
+            kp_eff: Mat::from_fn(2, 2, |i, j| (i + 2 * j) as f64),
+            kpp_eff: Mat::from_fn(2, 2, |i, j| (2 * i + j) as f64),
+            h: Mat::from_fn(2, 2, |_, _| 0.5),
+        };
+        match roundtrip_coord(&CoordFrame::SyncAt { revision: 99, sync: Box::new(sf) }) {
+            CoordFrame::SyncAt { revision, sync } => {
+                assert_eq!(revision, 99);
+                assert_eq!(sync.shard_id, 1);
+                assert_eq!(sync.nshards, 3);
+                assert_eq!(sync.metric, Metric::Iso(0.75));
+            }
+            _ => panic!("wrong frame"),
+        }
+    }
+
+    #[test]
+    fn bad_pong_boolean_is_a_clean_error() {
+        // Pong's `synced` byte must be exactly 0 or 1
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.extend_from_slice(&2u64.to_le_bytes());
+        payload.extend_from_slice(&3u64.to_le_bytes());
+        payload.push(7);
+        let err = WorkerFrame::decode(TAG_PONG, &payload).unwrap_err().to_string();
+        assert!(err.contains("boolean"), "unexpected error: {err}");
     }
 
     #[test]

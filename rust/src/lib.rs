@@ -91,7 +91,51 @@
 //!   (disconnect mid-apply, short frame, version mismatch) surfaces as a
 //!   clean `anyhow` error on the solve path that observed it — never a
 //!   hang — after which the coordinator serves from the retained
-//!   in-process single-shard fallback.
+//!   in-process single-shard fallback. The **shard registry**
+//!   ([`gram::registry`]) makes that degradation self-healing: health
+//!   probes, exponential-backoff reconnection, automatic re-attach
+//!   (pinned by `tests/chaos_remote.rs` under scripted fault injection).
+//!
+//! ## Operating a shard-worker fleet (runbook)
+//!
+//! **Start workers.** One process per node:
+//! `gdkron shard-worker --listen 0.0.0.0:7000`. A worker hosts one
+//! coordinator at a time, holds an `O(N² + ND)` panel mirror for it, and
+//! prints the bound address on startup (`--listen host:0` picks a free
+//! port). Workers are stateless across connections — restarting one is
+//! always safe; the coordinator re-broadcasts the panels on re-attach.
+//!
+//! **Point the coordinator at the fleet.** Either a static list —
+//! `GDKRON_REMOTE_SHARDS="nodeA:7000,nodeB:7000"` or
+//! `gram.remote_shards = ["nodeA:7000", "nodeB:7000"]` — or, preferably, a
+//! **registry file** (`GDKRON_REGISTRY_FILE` env var beats the
+//! `gram.registry_file` config key): one `host:port` per line, `#`
+//! comments. The file beats the static list and is re-read on every probe
+//! sweep, so editing it re-targets a degraded engine — grow, shrink or
+//! replace the fleet — without restarting the coordinator.
+//!
+//! **Health and reconnection knobs** (all under `[gram]`):
+//! `remote_timeout_ms` (default 5000) bounds every socket operation;
+//! `remote_gather_factor` (default 12, must be > 0) multiplies it for
+//! result-gather reads so slow shard *compute* is not spurious
+//! degradation; `health_interval_ms` (default 1000) paces the registry's
+//! Ping/Pong probes while degraded; `reconnect_backoff_ms` (default 500)
+//! seeds the per-address exponential backoff (doubling, capped at 30 s).
+//! Probe a worker by hand with `gdkron shard-probe host:port` — it prints
+//! the worker's wire version, hosting-session epoch and panel revision.
+//!
+//! **What re-attach guarantees.** A transport failure degrades the engine
+//! to the in-process fallback with a clean error on the solve that
+//! observed it — predictions and streamed observations keep flowing, and
+//! fallback results are **bit-identical** to the sharded ones. While
+//! degraded, the registry probes the membership; once every member
+//! answers, the next streamed update (updates are barriers in the request
+//! stream) re-attaches: fresh connections, the full panel broadcast at
+//! the current revision, a recomputed shard plan. The swap never lands
+//! mid-solve, no in-flight solve is dropped, and post-re-attach output is
+//! bit-identical to the single-shard path — pinned across shard counts
+//! and scripted kill/restart/corruption faults by `tests/chaos_remote.rs`
+//! (fault injection lives in `tests/common/chaos_proxy.rs`).
 //!
 //! ## Architecture
 //!

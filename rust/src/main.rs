@@ -6,6 +6,7 @@
 //! gdkron artifacts [--dir artifacts]          # list AOT artifacts
 //! gdkron validate  [--dir artifacts]          # PJRT vs native cross-check
 //! gdkron shard-worker --listen host:port      # remote Gram shard worker
+//! gdkron shard-probe host:port [--timeout-ms N]  # health-probe a worker
 //! ```
 //!
 //! (Arg parsing is in-tree — the build environment has no clap in its
@@ -172,19 +173,29 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let opts = Opts { flags: parse_flags(&args[1..])?, config: Config::default() };
             shard_worker(&opts.str_or("listen", "127.0.0.1:0"))
         }
+        Some("shard-probe") => {
+            let addr = args.get(1).filter(|a| !a.starts_with("--")).ok_or_else(|| {
+                anyhow::anyhow!("usage: gdkron shard-probe HOST:PORT [--timeout-ms N]")
+            })?;
+            let opts = Opts { flags: parse_flags(&args[2..])?, config: Config::default() };
+            shard_probe(addr, opts.u64_or("timeout-ms", 2_000))
+        }
         _ => {
             eprintln!(
                 "gdkron — High-Dimensional GP Inference with Derivatives (ICML 2021)\n\
                  usage:\n  gdkron exp <fig1|fig2|fig3|fig4|fig5|scaling> [--key value …]\n  \
                  gdkron run <config.toml> [--key value …]\n  gdkron artifacts [--dir DIR]\n  \
                  gdkron validate [--dir DIR]\n  \
-                 gdkron shard-worker [--listen HOST:PORT]\n\
+                 gdkron shard-worker [--listen HOST:PORT]\n  \
+                 gdkron shard-probe HOST:PORT [--timeout-ms N]\n\
                  linalg worker pool: --threads N > GDKRON_THREADS > runtime.threads \
                  (1 = serial)\n\
                  gram shard workers: --shards N > GDKRON_SHARDS > gram.shards \
                  (1 = single shard)\n\
-                 remote gram shards: GDKRON_REMOTE_SHARDS > gram.remote_shards \
-                 (empty = in-process)"
+                 remote gram shards: GDKRON_REGISTRY_FILE > gram.registry_file > \
+                 GDKRON_REMOTE_SHARDS > gram.remote_shards (empty = in-process); \
+                 health knobs: gram.health_interval_ms, gram.reconnect_backoff_ms, \
+                 gram.remote_timeout_ms, gram.remote_gather_factor"
             );
             Ok(())
         }
@@ -309,6 +320,20 @@ fn shard_worker(listen: &str) -> anyhow::Result<()> {
     let local = listener.local_addr()?;
     println!("gdkron shard-worker listening on {local}");
     gdkron::gram::remote::serve(listener)
+}
+
+/// Health-probe a shard worker (`gdkron shard-probe host:port`): one
+/// Ping/Pong over a fresh connection, every socket operation bounded by
+/// the timeout. Prints the worker's hosting-session epoch and panel
+/// revision — what the registry's prober records ([`gdkron::gram::registry`]).
+fn shard_probe(addr: &str, timeout_ms: u64) -> anyhow::Result<()> {
+    let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let r = gdkron::gram::remote::probe(addr, timeout)?;
+    println!(
+        "worker {addr}: wire v{}, epoch {:#018x}, panel revision {}, synced mirror: {}",
+        r.version, r.epoch, r.revision, r.synced
+    );
+    Ok(())
 }
 
 /// Cross-check the PJRT artifacts against the native implementation

@@ -1,0 +1,524 @@
+//! Fault-injection chaos suite for the health-checked shard registry.
+//!
+//! Drives the full **degrade → probe → reconnect → resync → re-attach →
+//! bit-identical-again** cycle through a deterministic TCP chaos proxy
+//! (`tests/common/chaos_proxy.rs`) that can sever, delay, truncate and
+//! corrupt wire frames at scripted protocol points. Pins the PR acceptance
+//! criteria:
+//!
+//! * a scripted worker kill degrades the engine cleanly — no hang, a clean
+//!   `anyhow` error on the observing solve, fallback output bit-identical;
+//! * while degraded, streamed `append`/`drop_first` keep flowing (the
+//!   serial fallback path), and the registry probes the dead address with
+//!   exponential backoff;
+//! * when the worker comes back (same registered address, fresh process —
+//!   modeled by swapping the proxy upstream), the supervisor re-attaches
+//!   within the configured probe/backoff budget at the next observe
+//!   barrier: fresh connections, full panel broadcast at the current
+//!   revision, recomputed shard plan;
+//! * post-re-attach `apply_block` output is **bit-identical** to the
+//!   single-shard reference, across shard counts {1, 2, 3};
+//! * the v2 frames behave: workers track the panel revision through
+//!   `SyncAt`/`Append`/`DropFirst` and report it (plus a stable
+//!   hosting-session epoch) in their pongs.
+//!
+//! Every socket operation is bounded by a short timeout so a regression
+//! fails fast instead of wedging CI.
+
+#[path = "common/chaos_proxy.rs"]
+mod chaos_proxy;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use chaos_proxy::{ChaosProxy, Direction, FaultKind, FaultPlan};
+use gdkron::gp::{FitMethod, FitOptions, OnlineGradientGp};
+use gdkron::gram::remote::{probe, serve};
+use gdkron::gram::wire::{CoordFrame, SyncFrame, WorkerFrame, WIRE_MAGIC, WIRE_VERSION};
+use gdkron::gram::{
+    GramFactors, GramOperator, Metric, RegistryConfig, RemoteOptions, ShardedGramFactors,
+};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::CgOptions;
+
+/// Frame timeout for healthy-path endpoints: generous against CI jitter.
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Upper bound on "fails fast" / "re-attaches promptly": far below a hang,
+/// far above CI noise.
+const FAIL_FAST: Duration = Duration::from_secs(60);
+
+fn sample(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gauss())
+}
+
+/// A real `gdkron shard-worker` on an ephemeral loopback port.
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = serve(listener);
+    });
+    addr
+}
+
+/// Registry tuned for chaos tests: fast probes, fast backoff.
+fn chaos_registry(addrs: Vec<String>) -> RegistryConfig {
+    RegistryConfig {
+        health_interval: Duration::from_millis(50),
+        reconnect_backoff: Duration::from_millis(50),
+        remote: RemoteOptions::with_timeout(Duration::from_secs(2)),
+        ..RegistryConfig::new(addrs)
+    }
+}
+
+fn assert_factors_bitwise(a: &GramFactors, b: &GramFactors, what: &str) {
+    assert_eq!(a.n(), b.n(), "{what}: N");
+    for (pa, pb, name) in [
+        (&a.xt, &b.xt, "xt"),
+        (&a.lam_xt, &b.lam_xt, "lam_xt"),
+        (&a.lam_xt_t, &b.lam_xt_t, "lam_xt_t"),
+        (&a.r, &b.r, "r"),
+        (&a.h, &b.h, "h"),
+        (&a.kp_eff, &b.kp_eff, "kp_eff"),
+        (&a.kpp_eff, &b.kpp_eff, "kpp_eff"),
+    ] {
+        assert!((pa - pb).max_abs() == 0.0, "{what}: panel {name} diverged");
+    }
+}
+
+fn assert_apply_bit_identical(
+    engine: &ShardedGramFactors,
+    reference: &GramFactors,
+    seed: u64,
+    what: &str,
+) {
+    let nd = reference.n() * reference.d();
+    let xin = sample(nd, 2, seed);
+    let mut got = Mat::zeros(nd, 2);
+    engine.apply_block_into(&xin, &mut got).unwrap_or_else(|e| panic!("{what}: apply: {e}"));
+    let mut want = Mat::zeros(nd, 2);
+    GramOperator::new(reference).apply_block(&xin, &mut want);
+    assert!((&got - &want).max_abs() == 0.0, "{what}: apply_block is not bit-identical");
+}
+
+/// The acceptance pin: scripted worker kill + restart across shard counts.
+#[test]
+fn kill_restart_reattach_cycle_is_bit_identical_across_shard_counts() {
+    let kern = SquaredExponential;
+    for s in [1usize, 2, 3] {
+        let what = format!("S={s}");
+        let x = sample(5, 24, 100 + s as u64);
+        let seed_x = x.block(0, 0, 5, 4);
+        let mut serial = GramFactors::new(&kern, &seed_x, Metric::Iso(0.6), None);
+        let mut f = GramFactors::new(&kern, &seed_x, Metric::Iso(0.6), None);
+
+        let proxies: Vec<ChaosProxy> = (0..s).map(|_| ChaosProxy::spawn(spawn_worker())).collect();
+        let addrs: Vec<String> = proxies.iter().map(|p| p.addr().to_string()).collect();
+        let mut engine =
+            ShardedGramFactors::connect_registry(&f, chaos_registry(addrs)).expect("connect");
+        assert!(engine.has_registry());
+        assert!(engine.is_remote());
+        assert_eq!(engine.shards(), s);
+
+        // healthy streaming, bit-identical to the serial reference
+        engine.append(&mut f, &kern, x.col(4));
+        serial.append(&kern, x.col(4));
+        assert_apply_bit_identical(&engine, &serial, 7, &format!("{what} pre-fault"));
+
+        // kill worker 0 and restart it elsewhere behind the same
+        // registered address (the proxy's)
+        let fresh = spawn_worker();
+        proxies[0].sever();
+        proxies[0].set_upstream(&fresh);
+        // let the proxy pumps notice the partition (they poll every 25 ms)
+        // so the next apply deterministically observes dead sockets
+        thread::sleep(Duration::from_millis(120));
+
+        // the observing solve degrades cleanly: a prompt error, not a hang
+        let nd = f.n() * f.d();
+        let xin = sample(nd, 2, 8);
+        let mut y = Mat::zeros(nd, 2);
+        let t0 = Instant::now();
+        let err = engine.apply_block_into(&xin, &mut y).unwrap_err().to_string();
+        assert!(t0.elapsed() < FAIL_FAST, "{what}: degrade must not hang");
+        assert!(err.contains("fallback"), "{what}: error should announce the fallback: {err}");
+        assert!(engine.is_degraded());
+        assert_apply_bit_identical(&engine, &serial, 9, &format!("{what} degraded fallback"));
+
+        // heal the partition; streamed deltas continue THROUGH the
+        // transition while the supervisor probes, reconnects and
+        // re-attaches at a barrier
+        proxies[0].restore();
+        let deadline = Instant::now() + FAIL_FAST;
+        let mut j = 5;
+        let mut streamed = 0usize;
+        while engine.is_degraded() && Instant::now() < deadline {
+            if j < 20 {
+                engine.append(&mut f, &kern, x.col(j));
+                serial.append(&kern, x.col(j));
+                engine.drop_first(&mut f);
+                serial.drop_first();
+                j += 1;
+                streamed += 1;
+            }
+            engine.maybe_reattach(&f);
+            thread::sleep(Duration::from_millis(30));
+        }
+        assert!(
+            !engine.is_degraded(),
+            "{what}: supervisor must re-attach within the probe/backoff budget \
+             (reason: {:?})",
+            engine.degraded_reason()
+        );
+        assert_eq!(engine.reattach_count(), 1, "{what}: exactly one re-attach");
+        assert!(engine.probe_count() >= 1, "{what}: the registry must have probed");
+        assert!(streamed > 0, "{what}: the stream must have continued while degraded");
+
+        // post-re-attach: panels in lockstep, applies bit-identical, and
+        // further streaming stays bit-identical on the pooled transport
+        assert_factors_bitwise(&f, &serial, &format!("{what} post-reattach"));
+        assert_apply_bit_identical(&engine, &serial, 10, &format!("{what} post-reattach"));
+        for j in 20..22 {
+            engine.append(&mut f, &kern, x.col(j));
+            serial.append(&kern, x.col(j));
+        }
+        assert!(engine.degraded_reason().is_none(), "{what}: pooled streaming must stay clean");
+        assert_factors_bitwise(&f, &serial, &format!("{what} post-reattach stream"));
+        assert_apply_bit_identical(&engine, &serial, 11, &format!("{what} post-reattach stream"));
+    }
+}
+
+#[test]
+fn truncated_result_frame_degrades_cleanly() {
+    let x = sample(5, 4, 31);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let proxy = ChaosProxy::spawn(spawn_worker());
+    // frame 0 toward the coordinator is the HelloAck; the fault fires on
+    // the next one — the apply's Diag — whose header then lies about its
+    // payload
+    proxy.script_fault(FaultPlan {
+        dir: Direction::ToCoordinator,
+        after_frames: 1,
+        kind: FaultKind::Truncate { keep: 3 },
+    });
+    let engine =
+        ShardedGramFactors::connect_remote(&f, &[proxy.addr().to_string()], Duration::from_secs(2))
+            .expect("connect");
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 1, 32);
+    let mut y = Mat::zeros(nd, 1);
+    let t0 = Instant::now();
+    let err = engine.apply_block_into(&xin, &mut y).unwrap_err().to_string();
+    assert!(t0.elapsed() < FAIL_FAST, "a truncated frame must not hang the reader");
+    assert!(
+        err.contains("mid-frame") || err.contains("short frame"),
+        "error should name the framing problem: {err}"
+    );
+    assert!(engine.is_degraded());
+    assert_apply_bit_identical(&engine, &f, 33, "truncate fallback");
+}
+
+#[test]
+fn corrupted_frame_tag_degrades_cleanly() {
+    let x = sample(5, 4, 41);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let proxy = ChaosProxy::spawn(spawn_worker());
+    // byte 4 of the frame is the tag: the Diag answering the apply arrives
+    // as an unknown frame type
+    proxy.script_fault(FaultPlan {
+        dir: Direction::ToCoordinator,
+        after_frames: 1,
+        kind: FaultKind::Corrupt { byte: 4 },
+    });
+    let engine =
+        ShardedGramFactors::connect_remote(&f, &[proxy.addr().to_string()], Duration::from_secs(2))
+            .expect("connect");
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 1, 42);
+    let mut y = Mat::zeros(nd, 1);
+    let t0 = Instant::now();
+    let err = engine.apply_block_into(&xin, &mut y).unwrap_err().to_string();
+    assert!(t0.elapsed() < FAIL_FAST, "a corrupt frame must not hang the reader");
+    assert!(err.contains("unknown"), "error should name the unknown tag: {err}");
+    assert!(engine.is_degraded());
+    assert_apply_bit_identical(&engine, &f, 43, "corrupt fallback");
+}
+
+#[test]
+fn delayed_result_frame_times_out_within_the_gather_budget() {
+    let x = sample(5, 4, 51);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let proxy = ChaosProxy::spawn(spawn_worker());
+    // stall the Diag far past timeout × gather_factor: the configured
+    // factor (not the default 12×, which would outlast this delay) must
+    // bound the result read
+    proxy.script_fault(FaultPlan {
+        dir: Direction::ToCoordinator,
+        after_frames: 1,
+        kind: FaultKind::Delay(Duration::from_millis(2_500)),
+    });
+    let opts = RemoteOptions { timeout: Duration::from_millis(300), gather_factor: 2 };
+    let engine = ShardedGramFactors::connect_remote_opts(&f, &[proxy.addr().to_string()], &opts)
+        .expect("connect");
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 1, 52);
+    let mut y = Mat::zeros(nd, 1);
+    let t0 = Instant::now();
+    let err = engine.apply_block_into(&xin, &mut y);
+    let elapsed = t0.elapsed();
+    assert!(err.is_err(), "a stalled result read must time out, not succeed");
+    assert!(
+        elapsed < Duration::from_millis(2_400),
+        "the configured 2× gather factor must bound the wait (took {elapsed:?})"
+    );
+    assert!(engine.is_degraded());
+    assert_apply_bit_identical(&engine, &f, 53, "delay fallback");
+}
+
+/// What one streamed update did — replayed onto a mirror engine to pin
+/// bit-identity through degrade + re-attach.
+enum Op {
+    Observe(Vec<f64>, Vec<f64>),
+    ObserveWindowed(Vec<f64>, Vec<f64>, usize),
+}
+
+#[test]
+fn online_engine_reattaches_at_the_observe_barrier_bit_identically() {
+    let (d, w) = (5usize, 4usize);
+    let x = sample(d, w + 3, 61);
+    let g = sample(d, w + 3, 62);
+    let opts = FitOptions {
+        method: FitMethod::Iterative(CgOptions {
+            rtol: 1e-10,
+            max_iters: 20_000,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let fit = |x0: &Mat, g0: &Mat| {
+        OnlineGradientGp::fit(Arc::new(SquaredExponential), Metric::Iso(0.5), x0, g0, &opts)
+            .expect("fit")
+    };
+
+    let proxies: Vec<ChaosProxy> = (0..2).map(|_| ChaosProxy::spawn(spawn_worker())).collect();
+    let addrs: Vec<String> = proxies.iter().map(|p| p.addr().to_string()).collect();
+    let mut online = fit(&x.block(0, 0, d, w), &g.block(0, 0, d, w));
+    online.set_remote_registry(chaos_registry(addrs)).expect("connect");
+    assert_eq!(online.shards(), 2);
+
+    let mut ops: Vec<Op> = Vec::new();
+    fn push_observe(online: &mut OnlineGradientGp, ops: &mut Vec<Op>, xc: &[f64], gc: &[f64]) {
+        online.observe(xc, gc).expect("observe");
+        ops.push(Op::Observe(xc.to_vec(), gc.to_vec()));
+    }
+
+    // healthy streaming
+    push_observe(&mut online, &mut ops, x.col(w), g.col(w));
+
+    // partition one worker: streamed updates must CONTINUE (the engine
+    // degrades internally to the fallback, no client-visible outage)
+    proxies[0].sever();
+    thread::sleep(Duration::from_millis(120)); // pumps poll every 25 ms
+    push_observe(&mut online, &mut ops, x.col(w + 1), g.col(w + 1));
+    push_observe(&mut online, &mut ops, x.col(w + 2), g.col(w + 2));
+    assert!(online.shard_degradation().is_some(), "degradation must be visible");
+
+    // heal the partition; every subsequent update is a re-attach barrier
+    proxies[0].restore();
+    let mut rng = Rng::new(63);
+    let deadline = Instant::now() + FAIL_FAST;
+    while online.shard_degradation().is_some() && Instant::now() < deadline {
+        let xn = rng.gauss_vec(d);
+        let gn = rng.gauss_vec(d);
+        online.observe_windowed(&xn, &gn, w + 2).expect("observe through the transition");
+        ops.push(Op::ObserveWindowed(xn, gn, w + 2));
+        thread::sleep(Duration::from_millis(30));
+    }
+    assert!(
+        online.shard_degradation().is_none(),
+        "the registry must re-attach within the probe/backoff budget"
+    );
+    assert_eq!(online.shard_reattaches(), 1, "exactly one re-attach");
+    assert!(online.shard_probes() >= 1, "probes must be counted");
+    assert_eq!(online.cold_refits(), 1, "the whole cycle must stream without cold refits");
+
+    // a post-re-attach update runs on the pooled transport again
+    let xn = rng.gauss_vec(d);
+    let gn = rng.gauss_vec(d);
+    online.observe_windowed(&xn, &gn, w + 2).expect("post-reattach observe");
+    ops.push(Op::ObserveWindowed(xn, gn, w + 2));
+    assert!(online.shard_degradation().is_none());
+
+    // bit-identity through the whole degrade → re-attach cycle: an
+    // unsharded mirror replaying the exact update sequence must land on
+    // the same bits (the fallback and every transport are bit-identical,
+    // and warm starts see identical iterates)
+    let mut mirror = fit(&x.block(0, 0, d, w), &g.block(0, 0, d, w));
+    for op in &ops {
+        match op {
+            Op::Observe(xc, gc) => mirror.observe(xc, gc).expect("mirror observe"),
+            Op::ObserveWindowed(xc, gc, win) => {
+                mirror.observe_windowed(xc, gc, *win).expect("mirror observe_windowed")
+            }
+        }
+    }
+    assert_eq!(online.n(), mirror.n());
+    assert!(
+        (online.gp().z() - mirror.gp().z()).max_abs() == 0.0,
+        "representer weights must be bit-identical through the degrade/re-attach cycle"
+    );
+    let xq = sample(d, 1, 64);
+    assert_eq!(
+        online.gp().predict_gradient(xq.col(0)),
+        mirror.gp().predict_gradient(xq.col(0)),
+        "predictions must be bit-identical through the degrade/re-attach cycle"
+    );
+}
+
+#[test]
+fn registry_file_edit_retargets_the_reattach() {
+    let x = sample(4, 5, 71);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.7), None);
+    let proxies: Vec<ChaosProxy> = (0..2).map(|_| ChaosProxy::spawn(spawn_worker())).collect();
+    let path = std::env::temp_dir()
+        .join(format!("gdkron-chaos-registry-{}.txt", std::process::id()));
+    std::fs::write(&path, format!("{}\n{}\n", proxies[0].addr(), proxies[1].addr())).unwrap();
+
+    let cfg = RegistryConfig {
+        registry_file: Some(path.clone()),
+        // the file must beat this dead static list
+        ..chaos_registry(vec!["127.0.0.1:1".to_string()])
+    };
+    let mut engine = ShardedGramFactors::connect_registry(&f, cfg).expect("connect");
+    assert_eq!(engine.shards(), 2, "the registry file must beat the static list");
+
+    // worker 0 dies for good; the operator shrinks the fleet by editing
+    // the registry file — no restart anywhere
+    proxies[0].sever();
+    thread::sleep(Duration::from_millis(120)); // pumps poll every 25 ms
+    let nd = f.n() * f.d();
+    let xin = sample(nd, 1, 72);
+    let mut y = Mat::zeros(nd, 1);
+    assert!(engine.apply_block_into(&xin, &mut y).is_err());
+    assert!(engine.is_degraded());
+    std::fs::write(&path, format!("{}\n", proxies[1].addr())).unwrap();
+
+    let deadline = Instant::now() + FAIL_FAST;
+    while engine.is_degraded() && Instant::now() < deadline {
+        engine.maybe_reattach(&f);
+        thread::sleep(Duration::from_millis(30));
+    }
+    assert!(!engine.is_degraded(), "re-attach must follow the edited membership");
+    assert_eq!(engine.shards(), 1, "the shard plan must be recomputed for the new membership");
+    assert_apply_bit_identical(&engine, &f, 73, "re-targeted membership");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn worker_tracks_panel_revision_and_epoch() {
+    let addr = spawn_worker();
+
+    // detached probes: same worker ⇒ same epoch, no synced mirror
+    let p1 = probe(&addr, TIMEOUT).expect("probe");
+    let p2 = probe(&addr, TIMEOUT).expect("probe");
+    assert_eq!(p1.version, WIRE_VERSION);
+    assert_eq!(p1.epoch, p2.epoch, "one hosting session ⇒ one epoch");
+    assert!(!p1.synced, "a probe connection never sees a synced mirror");
+    assert_eq!(p1.revision, 0);
+    // a different worker is a different hosting session
+    let other = probe(&spawn_worker(), TIMEOUT).expect("probe");
+    assert_ne!(other.epoch, p1.epoch, "restarted/other workers must change epoch");
+
+    // data-plane revision tracking: SyncAt installs, deltas bump
+    let x = sample(3, 3, 81);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(TIMEOUT)).unwrap();
+    CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION }.write_to(&mut stream).unwrap();
+    match WorkerFrame::read_from(&mut stream).unwrap() {
+        WorkerFrame::HelloAck { version } => assert_eq!(version, WIRE_VERSION),
+        _ => panic!("expected HelloAck"),
+    }
+    let sync = Box::new(SyncFrame {
+        shard_id: 0,
+        nshards: 1,
+        class: f.class,
+        metric: f.metric.clone(),
+        xt: f.xt.clone(),
+        lam_xt: f.lam_xt.clone(),
+        kp_eff: f.kp_eff.clone(),
+        kpp_eff: f.kpp_eff.clone(),
+        h: f.h.clone(),
+    });
+    CoordFrame::SyncAt { revision: 7, sync }.write_to(&mut stream).unwrap();
+
+    let ping = |stream: &mut TcpStream, nonce: u64| -> (u64, u64, bool) {
+        CoordFrame::Ping { nonce }.write_to(stream).unwrap();
+        match WorkerFrame::read_from(stream).unwrap() {
+            WorkerFrame::Pong { nonce: echoed, epoch, revision, synced } => {
+                assert_eq!(echoed, nonce, "pongs must echo the probe nonce");
+                (epoch, revision, synced)
+            }
+            _ => panic!("expected Pong"),
+        }
+    };
+    let (epoch, rev, synced) = ping(&mut stream, 11);
+    assert_eq!(epoch, p1.epoch, "data-plane pongs report the same session epoch");
+    assert_eq!(rev, 7, "SyncAt must install the coordinator's revision");
+    assert!(synced);
+
+    // an O(N + D) append bumps the mirror's revision in lockstep
+    let n = f.n();
+    let d = f.d();
+    let af = gdkron::gram::wire::AppendFrame {
+        xt_new: vec![0.25; d],
+        lam_new: vec![0.5; d],
+        h_col: vec![0.1; n + 1],
+        kp_col: vec![0.2; n + 1],
+        kpp_col: vec![0.3; n + 1],
+    };
+    CoordFrame::Append(Box::new(af)).write_to(&mut stream).unwrap();
+    let (_, rev, _) = ping(&mut stream, 12);
+    assert_eq!(rev, 8, "append must bump the revision");
+    CoordFrame::DropFirst.write_to(&mut stream).unwrap();
+    let (_, rev, _) = ping(&mut stream, 13);
+    assert_eq!(rev, 9, "drop_first must bump the revision");
+    CoordFrame::Shutdown.write_to(&mut stream).unwrap();
+}
+
+#[test]
+fn probe_answers_while_a_coordinator_is_attached() {
+    // a worker hosting a session must still answer fresh probe
+    // connections (state frames serialize on the hosting lock, pings
+    // don't) — otherwise `gdkron shard-probe` would misreport healthy,
+    // attached workers as dead
+    let addr = spawn_worker();
+    let x = sample(4, 3, 91);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+    let engine =
+        ShardedGramFactors::connect_remote(&f, &[addr.clone()], TIMEOUT).expect("connect");
+    let t0 = Instant::now();
+    let report = probe(&addr, Duration::from_secs(2)).expect("probe while attached");
+    assert!(t0.elapsed() < FAIL_FAST, "the probe answer must be prompt");
+    assert!(!report.synced, "probe connections never see the session mirror");
+    // and the attached session still serves, bit-identically
+    assert_apply_bit_identical(&engine, &f, 92, "apply after concurrent probe");
+}
+
+#[test]
+fn severed_probe_connection_fails_fast() {
+    // the registry's probe against a partitioned address must fail within
+    // the frame timeout — the backoff scheduler depends on prompt verdicts
+    let proxy = ChaosProxy::spawn(spawn_worker());
+    proxy.sever();
+    let t0 = Instant::now();
+    let err = probe(proxy.addr(), Duration::from_secs(2));
+    assert!(err.is_err(), "a severed probe must fail");
+    assert!(t0.elapsed() < FAIL_FAST, "the probe verdict must be prompt");
+}

@@ -1,0 +1,255 @@
+//! A deterministic, frame-aware TCP chaos proxy for fault-injection tests.
+//!
+//! Sits between a coordinator and a `gdkron shard-worker`, forwarding the
+//! length-prefixed wire frames (`[len:u32][tag:u8][payload]`) while a
+//! scripted fault plan injects failures at exact points:
+//!
+//! * **sever** — close both directions (also kills live connections and
+//!   refuses new ones until [`ChaosProxy::restore`]): the network
+//!   partition / worker-kill fault;
+//! * **truncate** — forward a frame header that promises more payload than
+//!   is sent, then close: the mid-frame corruption;
+//! * **corrupt** — flip a bit at a chosen byte of a forwarded frame
+//!   (byte 4 is the tag, so `Corrupt { byte: 4 }` turns a valid frame into
+//!   an unknown-tag protocol error);
+//! * **delay** — stall a frame longer than the coordinator's read timeout.
+//!
+//! Faults are scripted as "after N frames in direction D" and consumed
+//! exactly once, so every test run injects at the same protocol point —
+//! no timing races. The upstream address is swappable
+//! ([`ChaosProxy::set_upstream`]), which is how tests model a worker that
+//! dies and is *restarted elsewhere* while keeping the registered address
+//! (the proxy's) stable — exactly the shard-registry model.
+//!
+//! Reusable support code: include with
+//! `#[path = "common/chaos_proxy.rs"] mod chaos_proxy;` from any
+//! integration test.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Which pump a fault applies to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Direction {
+    /// Coordinator → worker frames.
+    ToWorker,
+    /// Worker → coordinator frames.
+    ToCoordinator,
+}
+
+/// What happens when the scripted point is reached.
+#[derive(Clone, Debug)]
+pub enum FaultKind {
+    /// Close both directions of the current connection.
+    Sever,
+    /// Forward the frame header plus only `keep` payload bytes, then close.
+    Truncate { keep: usize },
+    /// Flip bit 6 of the frame byte at `byte` (0..4 = length prefix, 4 =
+    /// tag, 5.. = payload), forward the damaged frame, keep pumping.
+    Corrupt { byte: usize },
+    /// Sleep before forwarding the frame (stalls everything behind it).
+    Delay(Duration),
+}
+
+/// One scripted fault: fires on the first frame in `dir` whose index
+/// (0-based count of frames already forwarded in that direction on the
+/// current connection) is ≥ `after_frames`. Consumed exactly once.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub dir: Direction,
+    pub after_frames: usize,
+    pub kind: FaultKind,
+}
+
+struct Ctl {
+    upstream: Mutex<String>,
+    severed: AtomicBool,
+    /// Bumped by sever(): live pumps compare and shut down.
+    conn_epoch: AtomicU64,
+    plan: Mutex<Option<FaultPlan>>,
+}
+
+/// Handle to one running proxy (the accept loop runs until the test
+/// process exits).
+pub struct ChaosProxy {
+    addr: String,
+    ctl: Arc<Ctl>,
+}
+
+enum PumpRead {
+    Ok,
+    Closed,
+}
+
+/// Read exactly `buf.len()` bytes with a short poll timeout so the pump
+/// notices sever/epoch changes promptly.
+fn read_full(src: &mut TcpStream, buf: &mut [u8], ctl: &Ctl, epoch: u64) -> PumpRead {
+    let mut got = 0;
+    while got < buf.len() {
+        if ctl.severed.load(Ordering::SeqCst) || ctl.conn_epoch.load(Ordering::SeqCst) != epoch {
+            return PumpRead::Closed;
+        }
+        match src.read(&mut buf[got..]) {
+            Ok(0) => return PumpRead::Closed,
+            Ok(k) => got += k,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(_) => return PumpRead::Closed,
+        }
+    }
+    PumpRead::Ok
+}
+
+fn close_both(a: &TcpStream, b: &TcpStream) {
+    let _ = a.shutdown(Shutdown::Both);
+    let _ = b.shutdown(Shutdown::Both);
+}
+
+/// One direction of a proxied connection, frame by frame.
+fn pump(mut src: TcpStream, mut dst: TcpStream, dir: Direction, ctl: Arc<Ctl>, epoch: u64) {
+    let _ = src.set_read_timeout(Some(Duration::from_millis(25)));
+    let mut forwarded = 0usize;
+    loop {
+        let mut hdr = [0u8; 5];
+        match read_full(&mut src, &mut hdr, &ctl, epoch) {
+            PumpRead::Ok => {}
+            PumpRead::Closed => {
+                close_both(&src, &dst);
+                return;
+            }
+        }
+        let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+        let mut payload = vec![0u8; len];
+        match read_full(&mut src, &mut payload, &ctl, epoch) {
+            PumpRead::Ok => {}
+            PumpRead::Closed => {
+                close_both(&src, &dst);
+                return;
+            }
+        }
+        // consume the scripted fault if this frame is its trigger point
+        let fault = {
+            let mut guard = ctl.plan.lock().unwrap();
+            let due = matches!(&*guard, Some(p) if p.dir == dir && forwarded >= p.after_frames);
+            if due {
+                guard.take()
+            } else {
+                None
+            }
+        };
+        let mut frame = Vec::with_capacity(5 + len);
+        frame.extend_from_slice(&hdr);
+        frame.extend_from_slice(&payload);
+        match fault.map(|p| p.kind) {
+            Some(FaultKind::Sever) => {
+                close_both(&src, &dst);
+                return;
+            }
+            Some(FaultKind::Truncate { keep }) => {
+                frame.truncate(5 + keep.min(len));
+                let _ = dst.write_all(&frame);
+                let _ = dst.flush();
+                close_both(&src, &dst);
+                return;
+            }
+            Some(FaultKind::Corrupt { byte }) => {
+                if !frame.is_empty() {
+                    let i = byte.min(frame.len() - 1);
+                    frame[i] ^= 0x40;
+                }
+            }
+            Some(FaultKind::Delay(d)) => {
+                thread::sleep(d);
+            }
+            None => {}
+        }
+        if dst.write_all(&frame).and_then(|_| dst.flush()).is_err() {
+            close_both(&src, &dst);
+            return;
+        }
+        forwarded += 1;
+    }
+}
+
+impl ChaosProxy {
+    /// Bind a loopback port and start proxying to `upstream`.
+    pub fn spawn(upstream: String) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind chaos proxy");
+        let addr = listener.local_addr().unwrap().to_string();
+        let ctl = Arc::new(Ctl {
+            upstream: Mutex::new(upstream),
+            severed: AtomicBool::new(false),
+            conn_epoch: AtomicU64::new(0),
+            plan: Mutex::new(None),
+        });
+        let accept_ctl = Arc::clone(&ctl);
+        thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(client) = conn else { return };
+                if accept_ctl.severed.load(Ordering::SeqCst) {
+                    // partitioned: the client sees an immediate EOF
+                    let _ = client.shutdown(Shutdown::Both);
+                    continue;
+                }
+                let upstream_addr = accept_ctl.upstream.lock().unwrap().clone();
+                let Ok(server) = TcpStream::connect(&upstream_addr) else {
+                    let _ = client.shutdown(Shutdown::Both);
+                    continue;
+                };
+                let _ = client.set_nodelay(true);
+                let _ = server.set_nodelay(true);
+                let epoch = accept_ctl.conn_epoch.load(Ordering::SeqCst);
+                let (c2, s2) = match (client.try_clone(), server.try_clone()) {
+                    (Ok(c), Ok(s)) => (c, s),
+                    _ => {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                let up_ctl = Arc::clone(&accept_ctl);
+                let down_ctl = Arc::clone(&accept_ctl);
+                thread::spawn(move || pump(client, server, Direction::ToWorker, up_ctl, epoch));
+                thread::spawn(move || pump(s2, c2, Direction::ToCoordinator, down_ctl, epoch));
+            }
+        });
+        ChaosProxy { addr, ctl }
+    }
+
+    /// The address coordinators (and the registry) should dial.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Partition: kill live connections and refuse new ones until
+    /// [`ChaosProxy::restore`].
+    pub fn sever(&self) {
+        self.ctl.conn_epoch.fetch_add(1, Ordering::SeqCst);
+        self.ctl.severed.store(true, Ordering::SeqCst);
+    }
+
+    /// Heal the partition: new connections flow again (to the current
+    /// upstream).
+    pub fn restore(&self) {
+        self.ctl.severed.store(false, Ordering::SeqCst);
+    }
+
+    /// Re-point the proxy at a different upstream worker — the
+    /// "worker restarted elsewhere, registered address unchanged" model.
+    pub fn set_upstream(&self, addr: &str) {
+        *self.ctl.upstream.lock().unwrap() = addr.to_string();
+    }
+
+    /// Install the next scripted fault (consumed once when it fires).
+    pub fn script_fault(&self, plan: FaultPlan) {
+        *self.ctl.plan.lock().unwrap() = Some(plan);
+    }
+}

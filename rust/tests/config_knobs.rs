@@ -1,0 +1,198 @@
+//! Knob-precedence matrix for the shard/transport/registry configuration.
+//!
+//! Pins the documented resolution order — CLI > env > config > default —
+//! for every remote-shard knob, **through the real environment** (not just
+//! the injected pure cores the unit tests use):
+//!
+//! * `--shards` (process-global override) > `GDKRON_SHARDS` >
+//!   `gram.shards` > 1;
+//! * `GDKRON_REMOTE_SHARDS` > `gram.remote_shards` > empty;
+//! * `GDKRON_REGISTRY_FILE` > `gram.registry_file` > unset;
+//! * `gram.remote_timeout_ms` / `gram.remote_gather_factor` /
+//!   `gram.health_interval_ms` / `gram.reconnect_backoff_ms` > defaults,
+//!   with non-positive values rejected.
+//!
+//! Environment-mutating cases are serialized behind a shared mutex (and
+//! restore the prior value on drop), so `cargo test -q` stays race-free no
+//! matter how the harness schedules this binary's threads.
+
+use std::sync::{Mutex, MutexGuard};
+
+use gdkron::config::{
+    health_interval, reconnect_backoff, remote_gather_factor, remote_shard_timeout,
+    resolve_registry_file, resolve_remote_shards, resolve_shards, Config,
+};
+use gdkron::gram::remote::RESULT_TIMEOUT_FACTOR;
+use gdkron::gram::sharded::{clear_global_shards, set_global_shards, MAX_SHARDS};
+
+/// Serializes every test that touches the process environment or the
+/// process-global `--shards` override.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_lock() -> MutexGuard<'static, ()> {
+    // a poisoned lock only means another test failed; the env guards below
+    // still restored their variables on unwind
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Sets an env var for the test body, restoring the previous state on drop
+/// (including on panic).
+struct EnvGuard {
+    key: &'static str,
+    prev: Option<String>,
+}
+
+impl EnvGuard {
+    fn set(key: &'static str, value: &str) -> Self {
+        let prev = std::env::var(key).ok();
+        std::env::set_var(key, value);
+        EnvGuard { key, prev }
+    }
+
+    fn unset(key: &'static str) -> Self {
+        let prev = std::env::var(key).ok();
+        std::env::remove_var(key);
+        EnvGuard { key, prev }
+    }
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        match &self.prev {
+            Some(v) => std::env::set_var(self.key, v),
+            None => std::env::remove_var(self.key),
+        }
+    }
+}
+
+#[test]
+fn shards_cli_beats_env_beats_config_beats_default() {
+    let _lock = env_lock();
+    let cfg = Config::from_str("[gram]\nshards = 6\n").unwrap();
+
+    // default: no knob anywhere → 1 (single shard)
+    let _e = EnvGuard::unset("GDKRON_SHARDS");
+    clear_global_shards();
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(resolve_shards(&empty), 1);
+
+    // config beats default
+    assert_eq!(resolve_shards(&cfg), 6);
+
+    // env beats config
+    let _e2 = EnvGuard::set("GDKRON_SHARDS", "3");
+    assert_eq!(resolve_shards(&cfg), 3);
+
+    // CLI (process-global override) beats env
+    set_global_shards(2);
+    assert_eq!(resolve_shards(&cfg), 2);
+    // CLI values clamp like every other spelling
+    set_global_shards(10_000);
+    assert_eq!(resolve_shards(&cfg), MAX_SHARDS);
+
+    // clearing the override falls back to the env level again
+    clear_global_shards();
+    assert_eq!(resolve_shards(&cfg), 3);
+
+    // a malformed env value falls through to the config level
+    let _e3 = EnvGuard::set("GDKRON_SHARDS", "zonk");
+    assert_eq!(resolve_shards(&cfg), 6);
+}
+
+#[test]
+fn remote_shards_env_beats_config_beats_default() {
+    let _lock = env_lock();
+    let cfg = Config::from_str("[gram]\nremote_shards = [\"a:1\", \" b:2 \", \"\"]\n").unwrap();
+
+    let _e = EnvGuard::unset("GDKRON_REMOTE_SHARDS");
+    assert_eq!(resolve_remote_shards(&cfg), vec!["a:1".to_string(), "b:2".to_string()]);
+
+    let _e2 = EnvGuard::set("GDKRON_REMOTE_SHARDS", "x:9 , y:8");
+    assert_eq!(resolve_remote_shards(&cfg), vec!["x:9".to_string(), "y:8".to_string()]);
+
+    // a blank env value falls through to the config key
+    let _e3 = EnvGuard::set("GDKRON_REMOTE_SHARDS", "   ");
+    assert_eq!(resolve_remote_shards(&cfg), vec!["a:1".to_string(), "b:2".to_string()]);
+
+    let empty = Config::from_str("").unwrap();
+    let _e4 = EnvGuard::unset("GDKRON_REMOTE_SHARDS");
+    assert!(resolve_remote_shards(&empty).is_empty(), "default is the in-process transport");
+}
+
+#[test]
+fn registry_file_env_beats_config_beats_default() {
+    let _lock = env_lock();
+    let cfg = Config::from_str("[gram]\nregistry_file = \"/etc/gdkron/shards\"\n").unwrap();
+
+    let _e = EnvGuard::unset("GDKRON_REGISTRY_FILE");
+    assert_eq!(
+        resolve_registry_file(&cfg),
+        Some(std::path::PathBuf::from("/etc/gdkron/shards"))
+    );
+
+    let _e2 = EnvGuard::set("GDKRON_REGISTRY_FILE", " /run/gdkron/reg ");
+    assert_eq!(resolve_registry_file(&cfg), Some(std::path::PathBuf::from("/run/gdkron/reg")));
+
+    // blank env falls through, blank config means unset
+    let _e3 = EnvGuard::set("GDKRON_REGISTRY_FILE", "  ");
+    assert_eq!(
+        resolve_registry_file(&cfg),
+        Some(std::path::PathBuf::from("/etc/gdkron/shards"))
+    );
+    let blank = Config::from_str("[gram]\nregistry_file = \"\"\n").unwrap();
+    assert_eq!(resolve_registry_file(&blank), None);
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(resolve_registry_file(&empty), None);
+}
+
+#[test]
+fn remote_timeout_config_beats_default_and_rejects_nonpositive() {
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(remote_shard_timeout(&empty).as_millis(), 5_000);
+    let cfg = Config::from_str("[gram]\nremote_timeout_ms = 250\n").unwrap();
+    assert_eq!(remote_shard_timeout(&cfg).as_millis(), 250);
+    for bad in ["remote_timeout_ms = 0", "remote_timeout_ms = -10"] {
+        let c = Config::from_str(&format!("[gram]\n{bad}\n")).unwrap();
+        assert_eq!(remote_shard_timeout(&c).as_millis(), 5_000, "{bad} must fall back");
+    }
+}
+
+#[test]
+fn gather_factor_config_beats_default_and_rejects_nonpositive() {
+    // the promoted RESULT_TIMEOUT_FACTOR knob: default pinned to the
+    // constant, zero rejected (it would turn every apply into a timeout)
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(remote_gather_factor(&empty), RESULT_TIMEOUT_FACTOR);
+    assert_eq!(RESULT_TIMEOUT_FACTOR, 12, "default gather factor is part of the contract");
+    let cfg = Config::from_str("[gram]\nremote_gather_factor = 2\n").unwrap();
+    assert_eq!(remote_gather_factor(&cfg), 2);
+    // zero, negative, and beyond-u32 values all fall back to the default
+    // (saturating a beyond-u32 factor could overflow the gather timeout)
+    for bad in [
+        "remote_gather_factor = 0",
+        "remote_gather_factor = -3",
+        "remote_gather_factor = 99999999999",
+    ] {
+        let c = Config::from_str(&format!("[gram]\n{bad}\n")).unwrap();
+        assert_eq!(remote_gather_factor(&c), RESULT_TIMEOUT_FACTOR, "{bad} must fall back");
+    }
+}
+
+#[test]
+fn registry_timing_knobs_config_beats_default_and_reject_nonpositive() {
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(health_interval(&empty).as_millis(), 1_000);
+    assert_eq!(reconnect_backoff(&empty).as_millis(), 500);
+    let cfg = Config::from_str("[gram]\nhealth_interval_ms = 75\nreconnect_backoff_ms = 40\n")
+        .unwrap();
+    assert_eq!(health_interval(&cfg).as_millis(), 75);
+    assert_eq!(reconnect_backoff(&cfg).as_millis(), 40);
+    for bad in ["health_interval_ms = 0", "health_interval_ms = -5"] {
+        let c = Config::from_str(&format!("[gram]\n{bad}\n")).unwrap();
+        assert_eq!(health_interval(&c).as_millis(), 1_000, "{bad} must fall back");
+    }
+    for bad in ["reconnect_backoff_ms = 0", "reconnect_backoff_ms = -7"] {
+        let c = Config::from_str(&format!("[gram]\n{bad}\n")).unwrap();
+        assert_eq!(reconnect_backoff(&c).as_millis(), 500, "{bad} must fall back");
+    }
+}

@@ -446,18 +446,41 @@ fn worker_serves_successive_coordinators() {
 }
 
 #[test]
-fn real_worker_rejects_version_mismatch_with_err_frame() {
+fn real_worker_rejects_too_old_coordinator_with_err_frame() {
+    // below MIN_WIRE_VERSION there is nothing to negotiate down to: the
+    // worker must answer with a descriptive Err frame, never a misparse
     let addr = spawn_worker();
     let mut stream = TcpStream::connect(&addr).unwrap();
     stream.set_read_timeout(Some(TIMEOUT)).unwrap();
-    CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION + 1 }
-        .write_to(&mut stream)
-        .unwrap();
+    CoordFrame::Hello { magic: WIRE_MAGIC, version: 0 }.write_to(&mut stream).unwrap();
     match WorkerFrame::read_from(&mut stream).unwrap() {
         WorkerFrame::Err { message } => {
             assert!(message.contains("version"), "unexpected error: {message}")
         }
         _ => panic!("expected an Err frame for the version mismatch"),
+    }
+}
+
+#[test]
+fn real_worker_negotiates_down_for_old_and_new_coordinators() {
+    // a v1 coordinator is still served (HelloAck v1), and a coordinator
+    // NEWER than the worker negotiates down to the worker's version — the
+    // backward-compatible Hello of the v2 protocol
+    let addr = spawn_worker();
+    for hello in [1u16, WIRE_VERSION + 1] {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(TIMEOUT)).unwrap();
+        CoordFrame::Hello { magic: WIRE_MAGIC, version: hello }.write_to(&mut stream).unwrap();
+        match WorkerFrame::read_from(&mut stream).unwrap() {
+            WorkerFrame::HelloAck { version } => {
+                assert_eq!(
+                    version,
+                    hello.min(WIRE_VERSION),
+                    "HelloAck must carry the negotiated (min) version"
+                );
+            }
+            _ => panic!("expected HelloAck for Hello v{hello}"),
+        }
     }
 }
 

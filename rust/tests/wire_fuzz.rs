@@ -1,0 +1,280 @@
+//! Deterministic property/fuzz corpus over the `gram::wire` codec.
+//!
+//! The wire layer is the trust boundary of the cross-node shard transport:
+//! whatever arrives on the socket — truncated, inflated, tag-mutated,
+//! bit-flipped — decode must **never panic, never over-allocate, and
+//! always return a descriptive error** for malformed input. This suite
+//! pins that with the in-tree deterministic [`Rng`] (fixed seeds, so every
+//! CI run fuzzes the same corpus):
+//!
+//! * round-trip property for **every** frame type, including the v2
+//!   health/registry frames (`Ping`/`Pong`/`SyncAt`): encode → frame-read
+//!   → decode → re-encode is byte-identical;
+//! * every truncation of every valid encoding is a clean error;
+//! * length-field inflation (header promising more payload than sent, up
+//!   to `u32::MAX`) is a clean error — the `MAX_FRAME_BYTES` cap rejects
+//!   hostile lengths *before* allocating;
+//! * all 256 tag values over every corpus payload: no panic, unknown tags
+//!   named in the error;
+//! * random bit flips over tag + payload bytes: no panic (decode may
+//!   succeed — a flipped f64 bit is still a valid frame — or fail with a
+//!   descriptive error);
+//! * inner (payload-level) length inflation is caught as a short frame.
+
+use gdkron::gram::wire::{
+    read_frame, read_frame_opt, AppendFrame, CoordFrame, SyncFrame, WorkerFrame, WIRE_MAGIC,
+    WIRE_VERSION,
+};
+use gdkron::gram::Metric;
+use gdkron::kernels::KernelClass;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+
+fn sync_frame() -> Box<SyncFrame> {
+    Box::new(SyncFrame {
+        shard_id: 1,
+        nshards: 3,
+        class: KernelClass::Stationary,
+        metric: Metric::Diag(vec![0.5, 2.0, -0.0]),
+        xt: Mat::from_fn(3, 2, |i, j| (i as f64) - 0.5 * (j as f64)),
+        lam_xt: Mat::from_fn(3, 2, |i, j| (i * j) as f64 + 0.25),
+        kp_eff: Mat::from_fn(2, 2, |i, j| (i + 2 * j) as f64 * 0.1),
+        kpp_eff: Mat::from_fn(2, 2, |i, j| (2 * i + j) as f64 * -0.2),
+        h: Mat::from_fn(2, 2, |_, _| f64::MIN_POSITIVE / 2.0),
+    })
+}
+
+fn append_frame() -> Box<AppendFrame> {
+    Box::new(AppendFrame {
+        xt_new: vec![1.5, -2.5, f64::NAN],
+        lam_new: vec![0.5, 1.0, 2.0],
+        h_col: vec![0.1, 0.2, 0.3],
+        kp_col: vec![-1.0, -2.0, -3.0],
+        kpp_col: vec![4.0, 5.0, 6.0],
+    })
+}
+
+/// Every coordinator frame type, one exemplar each.
+fn coord_corpus() -> Vec<(&'static str, CoordFrame)> {
+    vec![
+        ("hello", CoordFrame::Hello { magic: WIRE_MAGIC, version: WIRE_VERSION }),
+        ("sync", CoordFrame::Sync(sync_frame())),
+        ("sync_at", CoordFrame::SyncAt { revision: u64::MAX - 1, sync: sync_frame() }),
+        ("hborder", CoordFrame::HBorder { lam_new: vec![0.25, -0.75, 1e300] }),
+        ("apply", CoordFrame::Apply { xin: Mat::from_fn(4, 2, |i, j| (i + j) as f64) }),
+        ("pdiag", CoordFrame::PDiag { pdiag: Mat::from_fn(2, 3, |i, j| (i * j) as f64 - 0.5) }),
+        ("append", CoordFrame::Append(append_frame())),
+        ("drop_first", CoordFrame::DropFirst),
+        ("shutdown", CoordFrame::Shutdown),
+        ("ping", CoordFrame::Ping { nonce: 0x0123_4567_89AB_CDEF }),
+    ]
+}
+
+/// Every worker frame type, one exemplar each.
+fn worker_corpus() -> Vec<(&'static str, WorkerFrame)> {
+    vec![
+        ("hello_ack", WorkerFrame::HelloAck { version: WIRE_VERSION }),
+        ("hborder_slice", WorkerFrame::HBorderSlice { slice: vec![1.0, -0.0, 2.5] }),
+        ("diag", WorkerFrame::Diag { diag: Mat::from_fn(2, 2, |i, j| (i + j) as f64) }),
+        ("out", WorkerFrame::Out { block: Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64) }),
+        ("err", WorkerFrame::Err { message: "boom × unicode ∇K∇′".into() }),
+        ("pong", WorkerFrame::Pong { nonce: 42, epoch: u64::MAX, revision: 7, synced: true }),
+    ]
+}
+
+fn encode_coord(f: &CoordFrame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    f.write_to(&mut buf).expect("encode");
+    buf
+}
+
+fn encode_worker(f: &WorkerFrame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    f.write_to(&mut buf).expect("encode");
+    buf
+}
+
+/// Every valid encoding in the corpus, both directions.
+fn all_encodings() -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    for (name, f) in coord_corpus() {
+        out.push((format!("coord:{name}"), encode_coord(&f)));
+    }
+    for (name, f) in worker_corpus() {
+        out.push((format!("worker:{name}"), encode_worker(&f)));
+    }
+    out
+}
+
+#[test]
+fn corpus_covers_every_frame_type() {
+    // if a frame variant is added without a corpus entry, this pin fails
+    // (update BOTH when the protocol grows)
+    assert_eq!(coord_corpus().len(), 10, "coordinator corpus out of date");
+    assert_eq!(worker_corpus().len(), 6, "worker corpus out of date");
+    assert!(
+        coord_corpus().iter().any(|(n, _)| *n == "ping")
+            && coord_corpus().iter().any(|(n, _)| *n == "sync_at")
+            && worker_corpus().iter().any(|(n, _)| *n == "pong"),
+        "the v2 health frames must be fuzzed"
+    );
+}
+
+#[test]
+fn every_frame_type_roundtrips_byte_identically() {
+    for (name, f) in coord_corpus() {
+        let buf = encode_coord(&f);
+        let mut cur = &buf[..];
+        let (tag, payload) = read_frame(&mut cur).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(cur.is_empty(), "{name}: frame must consume exactly its bytes");
+        let decoded = CoordFrame::decode(tag, &payload).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(encode_coord(&decoded), buf, "{name}: re-encode must be byte-identical");
+    }
+    for (name, f) in worker_corpus() {
+        let buf = encode_worker(&f);
+        let mut cur = &buf[..];
+        let (tag, payload) = read_frame(&mut cur).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(cur.is_empty(), "{name}: frame must consume exactly its bytes");
+        let decoded = WorkerFrame::decode(tag, &payload).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(encode_worker(&decoded), buf, "{name}: re-encode must be byte-identical");
+    }
+}
+
+#[test]
+fn every_truncation_is_a_clean_error() {
+    for (name, buf) in all_encodings() {
+        for cut in 0..buf.len() {
+            let mut cur = &buf[..cut];
+            let res = read_frame(&mut cur);
+            assert!(
+                res.is_err(),
+                "{name}: truncation to {cut}/{} bytes must be an error",
+                buf.len()
+            );
+            let msg = res.unwrap_err().to_string();
+            assert!(!msg.is_empty(), "{name}: truncation error must be descriptive");
+        }
+    }
+}
+
+#[test]
+fn length_field_inflation_is_a_clean_error() {
+    for (name, buf) in all_encodings() {
+        let true_len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        for inflated in [
+            true_len.saturating_add(1),
+            true_len.saturating_add(100),
+            u32::MAX / 2,
+            u32::MAX,
+        ] {
+            // u32::MAX/2 and u32::MAX exceed MAX_FRAME_BYTES and must be
+            // rejected BEFORE any allocation; smaller inflations read past
+            // the payload and die as mid-frame errors
+            let mut bad = buf.clone();
+            bad[0..4].copy_from_slice(&inflated.to_le_bytes());
+            let mut cur = &bad[..];
+            let res = read_frame(&mut cur);
+            assert!(res.is_err(), "{name}: inflated length {inflated} must be an error");
+        }
+    }
+}
+
+#[test]
+fn inner_length_inflation_is_a_short_frame_error() {
+    // the header is honest but a payload-level vector length lies: the
+    // bounds-checked Dec must catch it as a short frame, not over-read
+    let buf = encode_coord(&CoordFrame::HBorder { lam_new: vec![1.0, 2.0, 3.0] });
+    let tag = buf[4];
+    let mut payload = buf[5..].to_vec();
+    payload[0..8].copy_from_slice(&(u64::MAX / 16).to_le_bytes());
+    let err = CoordFrame::decode(tag, &payload).unwrap_err().to_string();
+    assert!(
+        err.contains("short frame") || err.contains("overflows"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn every_tag_value_decodes_without_panicking() {
+    let empty: Vec<u8> = Vec::new();
+    let mut payloads: Vec<Vec<u8>> =
+        all_encodings().into_iter().map(|(_, buf)| buf[5..].to_vec()).collect();
+    payloads.push(empty);
+    // the current tag space (update when the protocol grows — the corpus
+    // coverage pin above will remind you)
+    let coord_known = 0x01u8..=0x0A;
+    let worker_known = 0x81u8..=0x86;
+    for tag in 0u8..=255 {
+        for payload in &payloads {
+            // must never panic; Ok (tag happens to fit the payload) and
+            // Err are both acceptable outcomes
+            let _ = CoordFrame::decode(tag, payload);
+            let _ = WorkerFrame::decode(tag, payload);
+        }
+        // a tag outside the known range must be NAMED unknown, not
+        // misparsed into some other error
+        if !coord_known.contains(&tag) {
+            let err = CoordFrame::decode(tag, &[]).unwrap_err().to_string();
+            assert!(err.contains("unknown"), "coord tag {tag:#04x}: {err}");
+        }
+        if !worker_known.contains(&tag) {
+            let err = WorkerFrame::decode(tag, &[]).unwrap_err().to_string();
+            assert!(err.contains("unknown"), "worker tag {tag:#04x}: {err}");
+        }
+    }
+}
+
+#[test]
+fn random_bit_flips_never_panic() {
+    // deterministic: same seed, same 4000 mutations on every run. Flips
+    // target the tag byte and payload (the length prefix has its own
+    // dedicated inflation test — flipping high length bits would only
+    // exercise the allocator).
+    let corpus = all_encodings();
+    let mut rng = Rng::new(20260731);
+    for _ in 0..4000 {
+        let (_, buf) = &corpus[rng.below(corpus.len())];
+        let mut bad = buf.clone();
+        if bad.len() <= 5 {
+            continue; // payload-less frame: only the tag byte can flip
+        }
+        let idx = 4 + rng.below(bad.len() - 4);
+        let bit = rng.below(8) as u8;
+        bad[idx] ^= 1 << bit;
+        let mut cur = &bad[..];
+        match read_frame(&mut cur) {
+            Ok((tag, payload)) => {
+                // both decoders must survive whatever came out
+                let _ = CoordFrame::decode(tag, &payload);
+                let _ = WorkerFrame::decode(tag, &payload);
+            }
+            Err(e) => assert!(!e.to_string().is_empty()),
+        }
+    }
+}
+
+#[test]
+fn random_garbage_streams_never_panic() {
+    // short random byte strings with a bounded length prefix: the reader
+    // must error or parse, never panic or over-allocate
+    let mut rng = Rng::new(7_654_321);
+    for _ in 0..2000 {
+        let len = rng.below(48);
+        let mut garbage: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        if garbage.len() >= 4 {
+            // keep the declared payload length small so a "successful"
+            // header read allocates at most 64 KiB
+            garbage[2] = 0;
+            garbage[3] = 0;
+        }
+        let mut cur = &garbage[..];
+        match read_frame_opt(&mut cur) {
+            Ok(Some((tag, payload))) => {
+                let _ = CoordFrame::decode(tag, &payload);
+                let _ = WorkerFrame::decode(tag, &payload);
+            }
+            Ok(None) => {}
+            Err(e) => assert!(!e.to_string().is_empty()),
+        }
+    }
+}
