@@ -4,15 +4,17 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_gradients
-//! # optional server config: [server] max_batch / deadline_us,
-//! #                         [runtime] threads
+//! # optional server config: [server] max_batch / deadline_us /
+//! #                         executors / max_queue, [runtime] threads
 //! cargo run --release --example serve_gradients -- server.toml
 //! ```
 
 use std::sync::Arc;
 
 use gdkron::config::Config;
-use gdkron::coordinator::{BatchPolicy, Engine, NativeEngine, PjrtEngine, SurrogateServer};
+use gdkron::coordinator::{
+    BatchPolicy, Engine, NativeEngine, PjrtEngine, SchedulerOptions, SurrogateServer,
+};
 use gdkron::gp::{FitOptions, GradientGp};
 use gdkron::gram::Metric;
 use gdkron::hmc::{run_hmc, Banana, HmcConfig, Target};
@@ -67,6 +69,10 @@ fn main() -> anyhow::Result<()> {
     } else {
         BatchPolicy { max_batch: 8, deadline: std::time::Duration::from_micros(500) }
     };
+    // serving-core knobs: [server] executors (shared-engine pool width,
+    // native path only — PJRT engines are thread-affine) and max_queue
+    // (admission bound; overload is a fast error, not unbounded memory)
+    let sched = SchedulerOptions::from_config(&config);
     let use_pjrt = cfg!(feature = "pjrt")
         && ArtifactRegistry::open("artifacts")
             .map(|r| r.spec("predict_d100_n10_b8").is_some())
@@ -74,23 +80,29 @@ fn main() -> anyhow::Result<()> {
     let server = if use_pjrt {
         println!("serving through the AOT PJRT artifact `predict_d100_n10_b8`");
         let xc = x.clone();
-        SurrogateServer::spawn(
+        SurrogateServer::spawn_opts(
             move || {
                 let reg = ArtifactRegistry::open("artifacts")?;
                 let e = PjrtEngine::new(reg, "predict_d100_n10_b8", xc, z, inv_l2)?;
                 Ok(Box::new(e) as Box<dyn Engine>)
             },
             policy,
+            sched,
         )?
     } else {
         println!("(PJRT artifacts unavailable — serving with the native engine)");
         // [gp] online / window keys control the engine's streaming behaviour
         let engine_cfg = config.clone();
-        SurrogateServer::spawn(
+        if sched.executors > 1 {
+            println!("executor pool: {} threads over the shared native engine", sched.executors);
+        }
+        SurrogateServer::spawn_shared(
             move || {
-                Ok(Box::new(NativeEngine::from_config(gp, &engine_cfg)) as Box<dyn Engine>)
+                Ok(Box::new(NativeEngine::from_config(gp, &engine_cfg))
+                    as Box<dyn Engine + Send + Sync>)
             },
             policy,
+            sched,
         )?
     };
 
@@ -139,6 +151,16 @@ fn main() -> anyhow::Result<()> {
         m.max_batch,
         m.requests as f64 / wall.as_secs_f64(),
         m.errors
+    );
+    println!(
+        "predict latency p50/p99/p999 ≤ {}/{}/{} µs (max {} µs); queue depth max {}; \
+         rejected {}",
+        m.predict_latency.p50_us(),
+        m.predict_latency.p99_us(),
+        m.predict_latency.p999_us(),
+        m.predict_latency.max_us(),
+        m.queue_depth_max,
+        m.rejected
     );
     Ok(())
 }

@@ -1,0 +1,285 @@
+//! Bench: traffic-replay load generator for the work-bag serving core.
+//!
+//! The pin behind the scheduler: at saturation (closed-loop clients that
+//! fire their next request the moment the previous one is answered), a
+//! multi-executor pool over the shared native engine must serve at least
+//! the throughput of the single-executor path — the direct successor of
+//! the PR 1 mpsc micro-batcher loop (one batch in flight at a time), which
+//! is the baseline here. The linalg pool is pinned to one thread so the
+//! measured win is executor-level parallelism, not per-batch gemm fan-out.
+//!
+//! Two generator modes:
+//! * **closed loop** — `C` clients, zero think time: measures
+//!   throughput-at-saturation (the acceptance pin).
+//! * **open loop** — paced senders with a fixed period, independent of
+//!   completions (falls back to send-immediately when a response overruns
+//!   the period, i.e. partially open): reads the p50/p99/p999
+//!   enqueue→response histograms under a controlled offered load.
+//!
+//! ```bash
+//! cargo bench --bench serve_load            # full pin (asserts E=4 ≥ E=1)
+//! cargo bench --bench serve_load -- --test  # CI smoke mode: asserts
+//!                                           # scheduler predictions are
+//!                                           # bit-identical to the direct
+//!                                           # engine path (E ∈ {1, 4}),
+//!                                           # plus tiny loops of each mode
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gdkron::coordinator::{
+    BatchPolicy, Engine, NativeEngine, SchedulerOptions, SurrogateServer,
+};
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::Metric;
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+
+fn build(d: usize, n: usize, seed: u64) -> NativeEngine {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let gp = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.5),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap();
+    NativeEngine::new(gp)
+}
+
+/// One query through the engine directly (no scheduler) — the reference
+/// for the bit-identity smoke.
+fn predict_one(engine: &NativeEngine, q: &[f64]) -> Vec<f64> {
+    let mut m = Mat::zeros(q.len(), 1);
+    m.set_col(0, q);
+    engine.predict_batch(&m).unwrap().col(0).to_vec()
+}
+
+/// Closed loop: `clients` threads, zero think time, for `dur`. Returns the
+/// number of successfully answered requests.
+fn closed_loop(server: &SurrogateServer, clients: usize, d: usize, dur: Duration) -> usize {
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let client = server.client();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + t as u64);
+            let mut ok = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let q = rng.gauss_vec(d);
+                if client.predict(&q).is_ok() {
+                    ok += 1;
+                } else {
+                    // admission-control rejection: back off briefly
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+            ok
+        }));
+    }
+    std::thread::sleep(dur);
+    stop.store(true, Ordering::Relaxed);
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}
+
+/// Open loop: `senders` threads each pacing one request per `period` for
+/// `dur`, independent of completions (send-immediately when overrun).
+/// Returns the number of successfully answered requests.
+fn open_loop(
+    server: &SurrogateServer,
+    senders: usize,
+    d: usize,
+    dur: Duration,
+    period: Duration,
+) -> usize {
+    let mut handles = Vec::new();
+    for t in 0..senders {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(7_000 + t as u64);
+            let mut ok = 0usize;
+            let t_end = Instant::now() + dur;
+            let mut next = Instant::now();
+            while Instant::now() < t_end {
+                let q = rng.gauss_vec(d);
+                if client.predict(&q).is_ok() {
+                    ok += 1;
+                }
+                next += period;
+                let now = Instant::now();
+                if next > now {
+                    std::thread::sleep(next - now);
+                } else {
+                    next = now;
+                }
+            }
+            ok
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}
+
+/// CI smoke: predictions through the scheduler — single-executor affine
+/// path AND the 4-executor shared pool — must be **bit-identical** to the
+/// direct-engine path, before and after streamed observations.
+fn smoke() {
+    let policy = BatchPolicy::default();
+    let d = 16;
+    let mut qrng = Rng::new(5);
+    let queries: Vec<Vec<f64>> = (0..10).map(|_| qrng.gauss_vec(d)).collect();
+    let obs: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..2).map(|_| (qrng.gauss_vec(d), qrng.gauss_vec(d))).collect();
+    let post: Vec<Vec<f64>> = (0..5).map(|_| qrng.gauss_vec(d)).collect();
+
+    for execs in [1usize, 4] {
+        let engine = build(d, 6, 42);
+        let server = if execs == 1 {
+            SurrogateServer::spawn(move || Ok(Box::new(engine) as Box<dyn Engine>), policy)
+                .unwrap()
+        } else {
+            SurrogateServer::spawn_shared(
+                move || Ok(Box::new(engine) as Box<dyn Engine + Send + Sync>),
+                policy,
+                SchedulerOptions { executors: execs, max_queue: 256 },
+            )
+            .unwrap()
+        };
+        // identical twin engine, driven directly (same seed → same GP)
+        let mut reference = build(d, 6, 42);
+        let client = server.client();
+        for q in &queries {
+            let got = client.predict(q).unwrap();
+            assert_eq!(
+                got,
+                predict_one(&reference, q),
+                "scheduler (E={execs}) diverged from the direct engine"
+            );
+        }
+        for (xn, gn) in &obs {
+            client.observe(xn, gn).unwrap();
+            reference.observe(xn, gn).unwrap();
+        }
+        for q in &post {
+            let got = client.predict(q).unwrap();
+            assert_eq!(
+                got,
+                predict_one(&reference, q),
+                "post-observe prediction (E={execs}) diverged from the direct engine"
+            );
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, queries.len() + post.len());
+        assert_eq!(m.observes, obs.len());
+        assert_eq!(m.errors, 0);
+        println!(
+            "smoke E={execs}: {} predictions bit-identical to the direct engine",
+            m.requests
+        );
+    }
+
+    // tiny runs of both traffic modes — end-to-end exercise, no timing pins
+    let engine = build(d, 6, 42);
+    let server = SurrogateServer::spawn_shared(
+        move || Ok(Box::new(engine) as Box<dyn Engine + Send + Sync>),
+        policy,
+        SchedulerOptions { executors: 2, max_queue: 64 },
+    )
+    .unwrap();
+    let served = closed_loop(&server, 4, d, Duration::from_millis(150));
+    let answered = open_loop(&server, 4, d, Duration::from_millis(150), Duration::from_millis(2));
+    let m = server.shutdown();
+    assert!(served > 0 && answered > 0, "traffic loops must serve requests");
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.predict_latency.count() as usize, m.requests);
+    println!(
+        "smoke loops: closed {served} + open {answered} served, p99 ≤ {} µs, depth max {}",
+        m.predict_latency.p99_us(),
+        m.queue_depth_max
+    );
+}
+
+fn full() {
+    // one linalg thread: the measured speedup is executor-level
+    // parallelism, not per-batch gemm fan-out
+    gdkron::linalg::par::set_threads(1);
+    let policy = BatchPolicy { max_batch: 8, deadline: Duration::from_micros(200) };
+    let (d, n, clients) = (192, 12, 12);
+    let window = Duration::from_millis(1200);
+
+    println!("# serve_load — closed-loop saturation throughput (linalg threads = 1)");
+    let mut rates = Vec::new();
+    for execs in [1usize, 4] {
+        let engine = build(d, n, 42);
+        let server = if execs == 1 {
+            // single executor = the mpsc micro-batcher baseline: one
+            // coalesced batch in flight at a time
+            SurrogateServer::spawn(move || Ok(Box::new(engine) as Box<dyn Engine>), policy)
+                .unwrap()
+        } else {
+            SurrogateServer::spawn_shared(
+                move || Ok(Box::new(engine) as Box<dyn Engine + Send + Sync>),
+                policy,
+                SchedulerOptions { executors: execs, max_queue: 1024 },
+            )
+            .unwrap()
+        };
+        let t0 = Instant::now();
+        let served = closed_loop(&server, clients, d, window);
+        let dt = t0.elapsed();
+        let m = server.shutdown();
+        let rate = served as f64 / dt.as_secs_f64();
+        println!(
+            "closed loop E={execs}: {served:6} req in {dt:7.2?} → {rate:8.0} req/s \
+             (mean batch {:.1}, p99 ≤ {} µs, depth max {})",
+            m.mean_batch(),
+            m.predict_latency.p99_us(),
+            m.queue_depth_max
+        );
+        rates.push(rate);
+    }
+    println!("multi-executor speedup: {:.2}x", rates[1] / rates[0].max(1e-9));
+    assert!(
+        rates[1] >= rates[0],
+        "E=4 closed-loop throughput ({:.0} req/s) fell below the single-executor \
+         (mpsc-equivalent) baseline ({:.0} req/s)",
+        rates[1],
+        rates[0]
+    );
+
+    // open loop: moderate offered load, read the latency histograms
+    let engine = build(64, 10, 43);
+    let server = SurrogateServer::spawn_shared(
+        move || Ok(Box::new(engine) as Box<dyn Engine + Send + Sync>),
+        policy,
+        SchedulerOptions { executors: 4, max_queue: 1024 },
+    )
+    .unwrap();
+    let answered = open_loop(&server, 8, 64, Duration::from_millis(1000), Duration::from_millis(2));
+    let m = server.shutdown();
+    println!(
+        "open loop  E=4: {answered:6} answered; latency p50/p99/p999 ≤ {}/{}/{} µs \
+         (max {} µs); rejected {}",
+        m.predict_latency.p50_us(),
+        m.predict_latency.p99_us(),
+        m.predict_latency.p999_us(),
+        m.predict_latency.max_us(),
+        m.rejected
+    );
+}
+
+fn main() {
+    let smoke_mode = std::env::args().any(|a| a == "--test");
+    if smoke_mode {
+        smoke();
+    } else {
+        full();
+    }
+    println!("ok");
+}

@@ -63,6 +63,17 @@ impl<T> Batcher<T> {
         // block for the first item
         let first = self.rx.recv().ok()?;
         let mut batch = vec![first];
+        // drain whatever is ALREADY queued before consulting the deadline:
+        // the deadline caps how long a request waits for coalescing — it
+        // must never degrade batches that are sitting in the channel right
+        // now (deadline_us = 0, or any expired deadline under load, used to
+        // shrink every batch to size 1 here).
+        while batch.len() < self.policy.max_batch {
+            match self.rx.try_recv() {
+                Ok(item) => batch.push(item),
+                Err(_) => break,
+            }
+        }
         let start = Instant::now();
         while batch.len() < self.policy.max_batch {
             let left = self.policy.deadline.saturating_sub(start.elapsed());
@@ -133,6 +144,26 @@ mod tests {
         let p = BatchPolicy::from_config(&bad);
         assert_eq!(p.max_batch, BatchPolicy::default().max_batch);
         assert_eq!(p.deadline, BatchPolicy::default().deadline);
+    }
+
+    #[test]
+    fn zero_deadline_still_drains_queued_items() {
+        // regression: the deadline check used to run before the drain, so
+        // an already-expired deadline (deadline_us = 0 is the extreme case)
+        // returned size-1 batches even with max_batch items waiting in the
+        // channel — every queued item must coalesce regardless of deadline.
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 8, deadline: Duration::ZERO });
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3, 4]);
+        // and the max_batch cap still applies while draining
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b2 = Batcher::new(b.rx, BatchPolicy { max_batch: 4, deadline: Duration::ZERO });
+        assert_eq!(b2.next_batch().unwrap(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -248,3 +248,19 @@ impl Engine for PjrtEngine {
         "pjrt"
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::NativeEngine;
+
+    #[test]
+    fn native_engine_is_send_and_sync() {
+        // the multi-executor serving pool (SurrogateServer::spawn_shared)
+        // shares one NativeEngine behind an RwLock across executor threads;
+        // this compile-time pin is what licenses that sharing — it breaks
+        // the moment a !Sync cell (e.g. the old RefCell shard pool) sneaks
+        // back into the engine state.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeEngine>();
+    }
+}

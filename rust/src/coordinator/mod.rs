@@ -3,7 +3,7 @@
 //! The paper's algorithmic contribution lives in [`crate::gram`]/[`crate::gp`];
 //! the coordinator turns it into a *service*: many concurrent consumers
 //! (HMC chains, optimizers, external probes) query one shared GP gradient
-//! surrogate, and a micro-batcher coalesces their requests so the backend —
+//! surrogate, and the serving core coalesces their requests so the backend —
 //! native rust or an AOT-compiled PJRT executable — sees MXU-shaped batches
 //! instead of single vectors.
 //!
@@ -16,20 +16,33 @@
 //! `gp.online = false` forces the refit path for A/B validation.
 //!
 //! ```text
-//!  chain 0 ─┐                                   ┌─ NativeEngine (GradientGp)
-//!  chain 1 ─┼─▶ SurrogateClient ─▶ micro-batcher ┼─ PjrtEngine (artifacts/*.hlo.txt)
-//!  chain k ─┘      (mpsc)        (size/deadline) └─ …
+//!  chain 0 ─┐                    ┌ executor 0 ─┐   ┌─ NativeEngine (RwLock-shared)
+//!  chain 1 ─┼─▶ SurrogateClient ─▶│  work bag  ├───┼─ PjrtEngine (one affine executor)
+//!  chain k ─┘   (bounded queue,  └ executor E ─┘   └─ …
+//!               server.max_queue)  (batches ∥, observes barrier)
 //! ```
 //!
+//! The serving core is a shared **work bag** ([`scheduler`]): a bounded
+//! FIFO that `server.executors` threads pull coalesced prediction batches
+//! from, with observations (and shutdown) dispatched as strict barriers.
+//! Admission control answers overload with a fast descriptive error
+//! (`server.max_queue`), and [`ServerMetrics`] carries p50/p99/p999
+//! enqueue→response latency histograms plus queue-depth gauges — see the
+//! serving-core runbook section in the crate docs.
+//!
 //! Substitution note (DESIGN.md §6): the environment has no async runtime
-//! crate, so the coordinator uses `std::thread` + `mpsc` channels — the
+//! crate, so the coordinator uses `std::thread` + `Mutex`/`Condvar` — the
 //! batching semantics (collect up to `max_batch` requests or `deadline`,
-//! whichever first) match a tokio implementation.
+//! whichever first) match a tokio implementation. The original
+//! single-thread mpsc micro-batcher ([`Batcher`]) remains for embedders
+//! that want the loop inline.
 
 mod batcher;
 mod engine;
+mod scheduler;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, NativeEngine, PjrtEngine, ShardHealth};
+pub use scheduler::{LatencyHistogram, SchedulerOptions, MAX_EXECUTORS};
 pub use server::{ServerMetrics, SurrogateClient, SurrogateServer};

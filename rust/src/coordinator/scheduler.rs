@@ -1,0 +1,416 @@
+//! The work-stealing serving core: a bounded, ordered work bag shared by a
+//! pool of executor threads.
+//!
+//! The PR 1 serving loop was one thread pulling one coalesced batch at a
+//! time off an mpsc channel — at saturation the engine sat idle while the
+//! batcher slept and vice versa. Here the channel is replaced by a
+//! [`WorkBag`]: a `Mutex<VecDeque>` + `Condvar` pool that any number of
+//! executor threads pull from. Executors *steal* work from the shared front
+//! of the queue (there is no per-executor ownership to rebalance, which is
+//! the degenerate-and-correct form of work stealing for a single ingress
+//! queue): contiguous runs of prediction requests leave as coalesced
+//! batches, and several batches can be in flight at once.
+//!
+//! **Ordering contract** (identical to the mpsc loop, pinned by the
+//! `server.rs` tests): the queue is strictly FIFO and an observation is a
+//! *barrier* — it is dispatched only once every earlier prediction batch
+//! has retired (`inflight == 0`), and nothing behind it is dispatched until
+//! it completes (`barrier_active`). Requests enqueued before an observe are
+//! answered by the old posterior, requests enqueued after it see the
+//! updated one. The shutdown sentinel is a barrier the same way: work ahead
+//! of it is served, everything drained behind it is failed.
+//!
+//! **Admission control**: the bag is bounded by `server.max_queue`
+//! ([`SchedulerOptions::max_queue`]). A push against a full queue is
+//! answered immediately with a descriptive error instead of growing the
+//! queue without bound — the overload/backpressure contract documented in
+//! the crate-level runbook. The stop sentinel is always admitted (shutdown
+//! must never be refused).
+//!
+//! [`LatencyHistogram`] provides the p50/p99/p999 view of enqueue→response
+//! time surfaced through `ServerMetrics`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+
+use super::batcher::BatchPolicy;
+use super::server::{Msg, Observation, Request};
+
+/// Sanity clamp on the executor count (a typo'd config key must not spawn
+/// thousands of threads).
+pub const MAX_EXECUTORS: usize = 64;
+
+/// Executor-pool options for the serving core, next to the batching knobs
+/// in [`BatchPolicy`].
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerOptions {
+    /// Executor threads pulling from the shared work bag (`server.executors`,
+    /// default 1). More executors overlap prediction batches; observes stay
+    /// strict barriers regardless. Engines served through
+    /// `SurrogateServer::spawn` (thread-affine factories) always run on one
+    /// executor — use `spawn_shared`/`spawn_native_opts` to scale out.
+    pub executors: usize,
+    /// Admission-queue bound (`server.max_queue`, default 1024). Pushes
+    /// against a full queue fail fast with a descriptive error.
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { executors: 1, max_queue: 1024 }
+    }
+}
+
+impl SchedulerOptions {
+    /// Read the options from a launcher config: `server.executors` (threads,
+    /// clamped to [`MAX_EXECUTORS`]) and `server.max_queue` (messages),
+    /// defaulting to [`SchedulerOptions::default`] for missing or invalid
+    /// keys — same convention as [`BatchPolicy::from_config`].
+    pub fn from_config(config: &Config) -> Self {
+        let dft = SchedulerOptions::default();
+        let executors = match config.int("server.executors") {
+            Some(n) if n >= 1 => (n as usize).min(MAX_EXECUTORS),
+            _ => dft.executors,
+        };
+        let max_queue = match config.int("server.max_queue") {
+            Some(n) if n >= 1 => n as usize,
+            _ => dft.max_queue,
+        };
+        SchedulerOptions { executors, max_queue }
+    }
+}
+
+/// Log₂-bucketed latency histogram (microsecond resolution, ~40 buckets up
+/// to ≈ 6 days). Records are O(1) and allocation-free after construction;
+/// quantiles are read back as conservative upper bounds — bucket `b` holds
+/// values in `[2^(b−1), 2^b)` µs, and [`LatencyHistogram::quantile_us`]
+/// reports the bucket's upper edge capped by the true maximum. Good to
+/// read as "p99 ≤ this"; the max is exact.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    max_us: u64,
+}
+
+/// Bucket count: `2^(39)` µs ≈ 6.4 days caps the top bucket.
+const HIST_BUCKETS: usize = 40;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: vec![0; HIST_BUCKETS], count: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = if us == 0 {
+            0
+        } else {
+            ((64 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        };
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact maximum recorded latency, in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Conservative upper bound (µs) on the `q`-quantile (`0.0 ..= 1.0`);
+    /// 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let ub = if idx == 0 { 0 } else { 1u64 << idx };
+                return ub.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Median upper bound, in microseconds.
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    /// 99th-percentile upper bound, in microseconds.
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
+    /// 99.9th-percentile upper bound, in microseconds.
+    pub fn p999_us(&self) -> u64 {
+        self.quantile_us(0.999)
+    }
+}
+
+/// One unit of executor work pulled from the bag.
+pub(super) enum Work {
+    /// A coalesced run of prediction requests (never empty).
+    Batch(Vec<Request>),
+    /// An observation, dispatched exclusively (the barrier).
+    Barrier(Observation),
+    /// The stop sentinel reached the queue front: the caller fails every
+    /// drained message, then exits.
+    Stop(Vec<Msg>),
+    /// Another executor already processed the sentinel; exit quietly.
+    Exit,
+}
+
+struct BagState {
+    queue: VecDeque<Msg>,
+    /// Prediction batches popped but not yet retired (includes batches
+    /// still coalescing — counting them from the moment their first
+    /// request is popped is what keeps the observe barrier airtight).
+    inflight: usize,
+    /// An observation (exclusive) is being applied.
+    barrier_active: bool,
+    stopped: bool,
+    /// High-water queue depth since startup.
+    depth_max: usize,
+    /// Messages refused by admission control.
+    rejected: u64,
+}
+
+/// The shared work bag (see the module docs for the full contract).
+pub(super) struct WorkBag {
+    state: Mutex<BagState>,
+    /// Signalled on every push, retire and stop.
+    work: Condvar,
+    max_queue: usize,
+}
+
+/// Pop the longest prefix run of requests, up to `max` items total.
+fn pop_reqs(st: &mut BagState, batch: &mut Vec<Request>, max: usize) {
+    while batch.len() < max {
+        if !matches!(st.queue.front(), Some(Msg::Req(_))) {
+            break;
+        }
+        if let Some(Msg::Req(r)) = st.queue.pop_front() {
+            batch.push(r);
+        }
+    }
+}
+
+/// Queue-front classification with the borrow released (dispatch decisions
+/// mutate the queue).
+enum Front {
+    Req,
+    Observe,
+    Stop,
+    Empty,
+}
+
+impl WorkBag {
+    pub(super) fn new(max_queue: usize) -> Self {
+        WorkBag {
+            state: Mutex::new(BagState {
+                queue: VecDeque::new(),
+                inflight: 0,
+                barrier_active: false,
+                stopped: false,
+                depth_max: 0,
+                rejected: 0,
+            }),
+            work: Condvar::new(),
+            max_queue: max_queue.max(1),
+        }
+    }
+
+    /// Admit a message. Fails fast — without enqueueing — when the server
+    /// has stopped or the queue is at `max_queue` (the stop sentinel is
+    /// always admitted).
+    pub(super) fn push(&self, msg: Msg) -> anyhow::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.stopped {
+            anyhow::bail!("surrogate server stopped");
+        }
+        if !matches!(msg, Msg::Stop) && st.queue.len() >= self.max_queue {
+            st.rejected += 1;
+            anyhow::bail!(
+                "surrogate server overloaded: admission queue full ({} messages queued, \
+                 server.max_queue = {}); the request was rejected without being enqueued — \
+                 retry later, raise server.max_queue or add server.executors",
+                st.queue.len(),
+                self.max_queue
+            );
+        }
+        st.queue.push_back(msg);
+        let depth = st.queue.len();
+        st.depth_max = st.depth_max.max(depth);
+        drop(st);
+        self.work.notify_all();
+        Ok(())
+    }
+
+    /// Block for the next unit of work (executor side). Respects the
+    /// ordering contract in the module docs; batches close at
+    /// `policy.max_batch` items or `policy.deadline` after their first item,
+    /// whichever first — already-queued requests are always drained first,
+    /// so a zero deadline still produces full batches.
+    pub(super) fn next_work(&self, policy: &BatchPolicy) -> Work {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.stopped {
+                return Work::Exit;
+            }
+            if !st.barrier_active {
+                let front = match st.queue.front() {
+                    Some(Msg::Req(_)) => Front::Req,
+                    Some(Msg::Observe(_)) => Front::Observe,
+                    Some(Msg::Stop) => Front::Stop,
+                    None => Front::Empty,
+                };
+                match front {
+                    Front::Req => {
+                        let mut batch = Vec::new();
+                        pop_reqs(&mut st, &mut batch, policy.max_batch);
+                        // count the batch in flight from this moment: an
+                        // observe arriving while we coalesce below must
+                        // wait for these requests (they were enqueued
+                        // before it).
+                        st.inflight += 1;
+                        if batch.len() < policy.max_batch
+                            && st.queue.is_empty()
+                            && !policy.deadline.is_zero()
+                        {
+                            let start = Instant::now();
+                            loop {
+                                let left = policy.deadline.saturating_sub(start.elapsed());
+                                if left.is_zero() {
+                                    break;
+                                }
+                                let (guard, _) = self.work.wait_timeout(st, left).unwrap();
+                                st = guard;
+                                pop_reqs(&mut st, &mut batch, policy.max_batch);
+                                // full, or a barrier/sentinel arrived: close
+                                if batch.len() >= policy.max_batch || !st.queue.is_empty() {
+                                    break;
+                                }
+                            }
+                        }
+                        return Work::Batch(batch);
+                    }
+                    Front::Observe if st.inflight == 0 => {
+                        if let Some(Msg::Observe(o)) = st.queue.pop_front() {
+                            st.barrier_active = true;
+                            return Work::Barrier(o);
+                        }
+                    }
+                    Front::Stop if st.inflight == 0 => {
+                        st.queue.pop_front();
+                        st.stopped = true;
+                        let drained: Vec<Msg> = st.queue.drain(..).collect();
+                        drop(st);
+                        self.work.notify_all();
+                        return Work::Stop(drained);
+                    }
+                    _ => {}
+                }
+            }
+            st = self.work.wait(st).unwrap();
+        }
+    }
+
+    /// Retire a dispatched prediction batch (unblocks a waiting barrier).
+    pub(super) fn retire_batch(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight = st.inflight.saturating_sub(1);
+        drop(st);
+        self.work.notify_all();
+    }
+
+    /// Retire the active observation barrier.
+    pub(super) fn retire_barrier(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.barrier_active = false;
+        drop(st);
+        self.work.notify_all();
+    }
+
+    /// `(current depth, high-water depth, rejected count)` — the queue
+    /// gauges snapshotted into `ServerMetrics`.
+    pub(super) fn gauges(&self) -> (usize, usize, u64) {
+        let st = self.state.lock().unwrap();
+        (st.queue.len(), st.depth_max, st.rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_from_config_defaults_and_clamp() {
+        let cfg = Config::from_str("[server]\nexecutors = 4\nmax_queue = 64\n").unwrap();
+        let o = SchedulerOptions::from_config(&cfg);
+        assert_eq!(o.executors, 4);
+        assert_eq!(o.max_queue, 64);
+        // missing/invalid keys fall back to the defaults
+        let o = SchedulerOptions::from_config(&Config::from_str("").unwrap());
+        assert_eq!(o.executors, SchedulerOptions::default().executors);
+        assert_eq!(o.max_queue, SchedulerOptions::default().max_queue);
+        let bad = Config::from_str("[server]\nexecutors = 0\nmax_queue = -5\n").unwrap();
+        let o = SchedulerOptions::from_config(&bad);
+        assert_eq!(o.executors, 1);
+        assert_eq!(o.max_queue, 1024);
+        // the thread-count clamp
+        let big = Config::from_str("[server]\nexecutors = 100000\n").unwrap();
+        assert_eq!(SchedulerOptions::from_config(&big).executors, MAX_EXECUTORS);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_conservative_upper_bounds() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50_us(), 0);
+        for _ in 0..99 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_millis(10));
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max_us(), 10_000);
+        // 100µs lands in (64, 128]: the p50 upper bound is 128
+        assert!(h.p50_us() >= 100 && h.p50_us() <= 128, "p50 = {}", h.p50_us());
+        // the single 10ms outlier owns the tail
+        assert!(h.p999_us() >= 10_000, "p999 = {}", h.p999_us());
+        // quantiles never exceed the observed max
+        assert!(h.p999_us() <= h.max_us());
+        // zero-duration samples stay in bucket 0
+        let mut z = LatencyHistogram::default();
+        z.record(Duration::ZERO);
+        assert_eq!(z.p99_us(), 0);
+    }
+
+    #[test]
+    fn histogram_p99_tracks_the_tail() {
+        let mut h = LatencyHistogram::default();
+        for i in 0..1000u64 {
+            // 980 fast samples, 20 slow ones: the p99 rank (990) must land
+            // in the slow bucket
+            let us = if i < 980 { 50 } else { 5_000 };
+            h.record(Duration::from_micros(us));
+        }
+        assert!(h.p50_us() <= 64, "p50 = {}", h.p50_us());
+        assert!(h.p99_us() >= 5_000, "p99 = {}", h.p99_us());
+    }
+}

@@ -1,33 +1,56 @@
-//! The surrogate server: worker thread + micro-batcher + engine.
+//! The surrogate server: executor pool + shared work bag + engine.
+//!
+//! Serving core (see [`super::scheduler`] for the bag itself): client
+//! handles push messages into a bounded [`WorkBag`]; one or more executor
+//! threads pull coalesced prediction batches off the shared front and run
+//! them against the engine. Observations and the shutdown sentinel are
+//! strict barriers — the ordering contract of the original single-thread
+//! loop, pinned unmodified by the tests below.
+//!
+//! Two engine-sharing shapes:
+//! - [`SurrogateServer::spawn`] / [`SurrogateServer::spawn_opts`]: the
+//!   engine is built *inside* one executor thread (PJRT handles are
+//!   thread-affine, so `dyn Engine` is not `Send`) and stays there — one
+//!   executor, the bag still provides admission control and telemetry.
+//! - [`SurrogateServer::spawn_shared`] / [`SurrogateServer::spawn_native_opts`]:
+//!   a `Send + Sync` engine behind an `RwLock`, `server.executors` threads —
+//!   prediction batches run concurrently under read locks, observes take
+//!   the write lock (the lock enforces exclusivity; the bag enforces
+//!   ordering).
 
-use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::hmc::GradientSource;
 use crate::linalg::Mat;
 
-use super::{BatchPolicy, Batcher, Engine};
+use super::scheduler::{Work, WorkBag, MAX_EXECUTORS};
+use super::{BatchPolicy, Engine, LatencyHistogram, SchedulerOptions};
 
-struct Request {
-    x: Vec<f64>,
-    resp: SyncSender<anyhow::Result<Vec<f64>>>,
+pub(super) struct Request {
+    pub(super) x: Vec<f64>,
+    pub(super) resp: SyncSender<anyhow::Result<Vec<f64>>>,
+    /// Admission time, for the enqueue→response latency histograms.
+    pub(super) t_enqueue: Instant,
 }
 
-struct Observation {
-    x: Vec<f64>,
-    g: Vec<f64>,
-    resp: SyncSender<anyhow::Result<()>>,
+pub(super) struct Observation {
+    pub(super) x: Vec<f64>,
+    pub(super) g: Vec<f64>,
+    pub(super) resp: SyncSender<anyhow::Result<()>>,
+    pub(super) t_enqueue: Instant,
 }
 
-/// Channel message: a prediction request, a streamed observation, or the
+/// Work-bag message: a prediction request, a streamed observation, or the
 /// shutdown sentinel.
 ///
-/// The sentinel (rather than channel closure) ends the worker because client
-/// handles hold `Sender` clones — the channel only closes once *every*
-/// client is dropped, which would make [`SurrogateServer::shutdown`] hang on
-/// the join while any chain is still alive.
-enum Msg {
+/// The sentinel (rather than queue closure) ends the executors because
+/// client handles hold `Arc<WorkBag>` clones — a liveness-based design
+/// would make [`SurrogateServer::shutdown`] hang on the join while any
+/// chain is still alive.
+pub(super) enum Msg {
     Req(Request),
     Observe(Observation),
     Stop,
@@ -39,7 +62,13 @@ pub struct ServerMetrics {
     pub requests: usize,
     pub batches: usize,
     pub max_batch: usize,
+    /// Total serving errors. Invariant: always exactly
+    /// `request_errors + observe_errors`.
     pub errors: usize,
+    /// Failed prediction requests (every request of a failed batch counts).
+    pub request_errors: usize,
+    /// Failed observation applications (one per failed observe).
+    pub observe_errors: usize,
     /// Observations streamed into the engine ([`SurrogateClient::observe`]).
     pub observes: usize,
     /// Gradient queries that **silently degraded to a zero gradient** on
@@ -58,6 +87,19 @@ pub struct ServerMetrics {
     /// Whether the engine's shard transport is *currently* degraded to the
     /// in-process fallback (as of the last streamed observation).
     pub shard_degraded: bool,
+    /// Enqueue→response latency of every answered prediction request
+    /// (served and failed; read `p50_us`/`p99_us`/`p999_us`).
+    pub predict_latency: LatencyHistogram,
+    /// Enqueue→applied latency of every streamed observation.
+    pub observe_latency: LatencyHistogram,
+    /// Admission-queue depth at snapshot time.
+    pub queue_depth: usize,
+    /// High-water admission-queue depth since startup.
+    pub queue_depth_max: usize,
+    /// Messages refused by admission control (the `server.max_queue`
+    /// backpressure contract; rejected messages appear in no other
+    /// counter).
+    pub rejected: u64,
 }
 
 impl ServerMetrics {
@@ -71,10 +113,10 @@ impl ServerMetrics {
     }
 }
 
-/// Owns the worker thread; dropping it shuts the service down cleanly.
+/// Owns the executor pool; dropping it shuts the service down cleanly.
 pub struct SurrogateServer {
-    tx: Option<Sender<Msg>>,
-    worker: Option<JoinHandle<()>>,
+    bag: Arc<WorkBag>,
+    workers: Vec<JoinHandle<()>>,
     metrics: Arc<Mutex<ServerMetrics>>,
     dim: usize,
 }
@@ -82,7 +124,7 @@ pub struct SurrogateServer {
 /// Cheap cloneable handle used by the chains.
 #[derive(Clone)]
 pub struct SurrogateClient {
-    tx: Sender<Msg>,
+    bag: Arc<WorkBag>,
     dim: usize,
     /// Shared serving metrics (degraded queries are counted globally there
     /// and per handle below).
@@ -94,19 +136,37 @@ pub struct SurrogateClient {
 }
 
 impl SurrogateServer {
-    /// Spawn the worker; the engine is built *inside* the worker thread by
-    /// `factory` (PJRT handles are thread-affine, so engines are not `Send`).
-    /// Blocks until the engine is up; factory errors surface here.
+    /// Spawn a single executor; the engine is built *inside* the executor
+    /// thread by `factory` (PJRT handles are thread-affine, so engines are
+    /// not `Send`). Blocks until the engine is up; factory errors surface
+    /// here. Scheduler defaults apply ([`SchedulerOptions::default`]); use
+    /// [`SurrogateServer::spawn_opts`] to tune the admission queue or
+    /// [`SurrogateServer::spawn_shared`] for a multi-executor pool.
     pub fn spawn<F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Self>
     where
         F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
     {
-        let (tx, rx) = channel::<Msg>();
+        Self::spawn_opts(factory, policy, SchedulerOptions::default())
+    }
+
+    /// [`SurrogateServer::spawn`] with explicit [`SchedulerOptions`]. The
+    /// engine stays thread-affine, so `opts.executors` is ignored (always
+    /// one executor); `opts.max_queue` bounds the admission queue.
+    pub fn spawn_opts<F>(
+        factory: F,
+        policy: BatchPolicy,
+        opts: SchedulerOptions,
+    ) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
+    {
+        let bag = Arc::new(WorkBag::new(opts.max_queue));
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let bag_w = bag.clone();
         let metrics_w = metrics.clone();
         let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
         let worker = std::thread::spawn(move || {
-            let mut engine = match factory() {
+            let engine = match factory() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(e.dim()));
                     e
@@ -116,86 +176,81 @@ impl SurrogateServer {
                     return;
                 }
             };
-            let dim = engine.dim();
-            let batcher = Batcher::new(rx, policy);
-            'serve: while let Some(msgs) = batcher.next_batch() {
-                let mut pending: Vec<Request> = Vec::new();
-                // preserve arrival order: an observation acts as a barrier —
-                // requests queued before it are answered by the old state,
-                // requests after it see the updated surrogate. The shutdown
-                // sentinel is a barrier too: in-flight messages AHEAD of it
-                // are served, anything coalesced AFTER it in the same batch
-                // is failed — answering post-sentinel requests (or applying
-                // post-sentinel observations) would violate the documented
-                // shutdown contract.
-                let mut msgs = msgs.into_iter();
-                let mut stopped = false;
-                for msg in msgs.by_ref() {
-                    match msg {
-                        Msg::Req(r) => pending.push(r),
-                        Msg::Observe(o) => {
-                            serve_pending(engine.as_ref(), &mut pending, &metrics_w, dim);
-                            let res = engine.observe(&o.x, &o.g);
-                            {
-                                let mut m = metrics_w.lock().unwrap();
-                                m.observes += 1;
-                                if res.is_err() {
-                                    m.errors += 1;
-                                }
-                                // the observe barrier is where a degraded
-                                // shard transport re-attaches: refresh the
-                                // health counters while they can change
-                                if let Some(h) = engine.shard_health() {
-                                    m.shard_probes = h.probes;
-                                    m.shard_reattaches = h.reattaches;
-                                    m.shard_degraded = h.degraded;
-                                }
-                            }
-                            let _ = o.resp.send(res);
-                        }
-                        Msg::Stop => {
-                            stopped = true;
-                            break;
-                        }
-                    }
-                }
-                serve_pending(engine.as_ref(), &mut pending, &metrics_w, dim);
-                if stopped {
-                    for msg in msgs {
-                        match msg {
-                            Msg::Req(r) => {
-                                let _ =
-                                    r.resp.send(Err(anyhow::anyhow!("surrogate server stopped")));
-                            }
-                            Msg::Observe(o) => {
-                                let _ =
-                                    o.resp.send(Err(anyhow::anyhow!("surrogate server stopped")));
-                            }
-                            Msg::Stop => {}
-                        }
-                    }
-                    break 'serve;
-                }
-            }
-            // after the sentinel, rx drops here: pending/future client sends
-            // fail fast instead of hanging.
+            run_affine(engine, &bag_w, &policy, &metrics_w);
         });
-        let dim = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("surrogate worker died during startup"))??;
-        Ok(SurrogateServer { tx: Some(tx), worker: Some(worker), metrics, dim })
+        let dim = match ready_rx.recv() {
+            Ok(Ok(d)) => d,
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = worker.join();
+                return Err(anyhow::anyhow!("surrogate worker died during startup"));
+            }
+        };
+        Ok(SurrogateServer { bag, workers: vec![worker], metrics, dim })
     }
 
-    /// Convenience: serve an in-process [`GradientGp`]
-    /// (wraps it in a [`super::NativeEngine`]).
+    /// Spawn `opts.executors` executor threads over a **shared** engine.
+    /// Prediction batches run concurrently under read locks; observations
+    /// take the write lock, and the work bag keeps them strict barriers
+    /// (requests enqueued before an observe are answered by the old
+    /// posterior — same contract as the single-executor path). The factory
+    /// runs on the calling thread, so errors surface directly.
+    pub fn spawn_shared<F>(
+        factory: F,
+        policy: BatchPolicy,
+        opts: SchedulerOptions,
+    ) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn Engine + Send + Sync>>,
+    {
+        let engine = factory()?;
+        let dim = engine.dim();
+        let engine = Arc::new(RwLock::new(engine));
+        let bag = Arc::new(WorkBag::new(opts.max_queue));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let executors = opts.executors.clamp(1, MAX_EXECUTORS);
+        let mut workers = Vec::with_capacity(executors);
+        for _ in 0..executors {
+            let engine = engine.clone();
+            let bag = bag.clone();
+            let metrics = metrics.clone();
+            workers.push(std::thread::spawn(move || {
+                run_shared(&engine, &bag, &policy, &metrics, dim);
+            }));
+        }
+        Ok(SurrogateServer { bag, workers, metrics, dim })
+    }
+
+    /// Convenience: serve an in-process [`crate::gp::GradientGp`] (wraps it
+    /// in a [`super::NativeEngine`]) on the default single executor.
     pub fn spawn_native(gp: crate::gp::GradientGp, policy: BatchPolicy) -> anyhow::Result<Self> {
-        Self::spawn(move || Ok(Box::new(super::NativeEngine::new(gp)) as Box<dyn Engine>), policy)
+        Self::spawn_native_opts(gp, policy, SchedulerOptions::default())
+    }
+
+    /// [`SurrogateServer::spawn_native`] with explicit [`SchedulerOptions`]:
+    /// the native engine is `Send + Sync`, so `opts.executors` really scales
+    /// the pool out (via [`SurrogateServer::spawn_shared`]).
+    pub fn spawn_native_opts(
+        gp: crate::gp::GradientGp,
+        policy: BatchPolicy,
+        opts: SchedulerOptions,
+    ) -> anyhow::Result<Self> {
+        Self::spawn_shared(
+            move || {
+                Ok(Box::new(super::NativeEngine::new(gp)) as Box<dyn Engine + Send + Sync>)
+            },
+            policy,
+            opts,
+        )
     }
 
     /// New client handle.
     pub fn client(&self) -> SurrogateClient {
         SurrogateClient {
-            tx: self.tx.as_ref().unwrap().clone(),
+            bag: self.bag.clone(),
             dim: self.dim,
             metrics: self.metrics.clone(),
             degraded_queries: 0,
@@ -203,48 +258,118 @@ impl SurrogateServer {
         }
     }
 
-    /// Snapshot of the serving metrics.
-    pub fn metrics(&self) -> ServerMetrics {
-        self.metrics.lock().unwrap().clone()
+    fn snapshot(&self) -> ServerMetrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        let (depth, depth_max, rejected) = self.bag.gauges();
+        m.queue_depth = depth;
+        m.queue_depth_max = depth_max;
+        m.rejected = rejected;
+        m
     }
 
-    /// Shut down: send the stop sentinel and join the worker. In-flight
-    /// requests already queued ahead of the sentinel are still served.
-    pub fn shutdown(mut self) -> ServerMetrics {
-        if let Some(tx) = self.tx.take() {
-            let _ = tx.send(Msg::Stop);
-        }
-        if let Some(w) = self.worker.take() {
+    /// Snapshot of the serving metrics (counters plus the live queue
+    /// gauges).
+    pub fn metrics(&self) -> ServerMetrics {
+        self.snapshot()
+    }
+
+    fn stop_and_join(&mut self) {
+        // the push fails once stopped — idempotent by construction
+        let _ = self.bag.push(Msg::Stop);
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Shut down: enqueue the stop sentinel and join the executors.
+    /// In-flight messages already queued ahead of the sentinel are still
+    /// served.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self.stop_and_join();
+        self.snapshot()
     }
 }
 
 impl Drop for SurrogateServer {
     fn drop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            let _ = tx.send(Msg::Stop);
-        }
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.stop_and_join();
+    }
+}
+
+/// Single-executor loop over a thread-affine engine.
+fn run_affine(
+    mut engine: Box<dyn Engine>,
+    bag: &WorkBag,
+    policy: &BatchPolicy,
+    metrics: &Mutex<ServerMetrics>,
+) {
+    let dim = engine.dim();
+    loop {
+        match bag.next_work(policy) {
+            Work::Batch(batch) => {
+                serve_batch(engine.as_ref(), &batch, metrics, dim);
+                bag.retire_batch();
+            }
+            Work::Barrier(o) => {
+                apply_observe(engine.as_mut(), o, metrics);
+                bag.retire_barrier();
+            }
+            Work::Stop(drained) => {
+                fail_drained(drained);
+                return;
+            }
+            Work::Exit => return,
         }
     }
 }
 
-/// Coalesce-and-answer the pending prediction batch (one engine call).
-fn serve_pending(
-    engine: &dyn Engine,
-    pending: &mut Vec<Request>,
+/// Executor loop over the shared (`Send + Sync`) engine: batches under the
+/// read lock, observes under the write lock.
+fn run_shared(
+    engine: &RwLock<Box<dyn Engine + Send + Sync>>,
+    bag: &WorkBag,
+    policy: &BatchPolicy,
     metrics: &Mutex<ServerMetrics>,
     dim: usize,
 ) {
-    if pending.is_empty() {
+    loop {
+        match bag.next_work(policy) {
+            Work::Batch(batch) => {
+                {
+                    let guard = engine.read().unwrap();
+                    serve_batch(guard.as_ref(), &batch, metrics, dim);
+                }
+                bag.retire_batch();
+            }
+            Work::Barrier(o) => {
+                {
+                    let mut guard = engine.write().unwrap();
+                    apply_observe(guard.as_mut(), o, metrics);
+                }
+                bag.retire_barrier();
+            }
+            Work::Stop(drained) => {
+                fail_drained(drained);
+                return;
+            }
+            Work::Exit => return,
+        }
+    }
+}
+
+/// Answer one coalesced prediction batch (one engine call).
+fn serve_batch<E: Engine + ?Sized>(
+    engine: &E,
+    batch: &[Request],
+    metrics: &Mutex<ServerMetrics>,
+    dim: usize,
+) {
+    if batch.is_empty() {
         return;
     }
-    let b = pending.len();
+    let b = batch.len();
     let mut xq = Mat::zeros(dim, b);
-    for (j, req) in pending.iter().enumerate() {
+    for (j, req) in batch.iter().enumerate() {
         xq.set_col(j, &req.x);
     }
     let result = engine.predict_batch(&xq);
@@ -254,48 +379,105 @@ fn serve_pending(
         m.batches += 1;
         m.max_batch = m.max_batch.max(b);
         if result.is_err() {
+            m.request_errors += b;
             m.errors += b;
+        }
+        for req in batch {
+            m.predict_latency.record(req.t_enqueue.elapsed());
         }
     }
     match result {
         Ok(out) => {
-            for (j, req) in pending.iter().enumerate() {
+            for (j, req) in batch.iter().enumerate() {
                 let _ = req.resp.send(Ok(out.col(j).to_vec()));
             }
         }
         Err(e) => {
-            for req in pending.iter() {
-                let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
+            // forward the FULL context chain (`{e:#}`), not just the
+            // outermost message — the wire error / shard address /
+            // degradation reason a `gram::remote` failure carries live in
+            // the inner links, and clients debug from this string alone
+            for req in batch {
+                let _ = req.resp.send(Err(anyhow::anyhow!("{e:#}")));
             }
         }
     }
-    pending.clear();
+}
+
+/// Apply one observation (the barrier body).
+fn apply_observe<E: Engine + ?Sized>(
+    engine: &mut E,
+    o: Observation,
+    metrics: &Mutex<ServerMetrics>,
+) {
+    let res = engine.observe(&o.x, &o.g);
+    {
+        let mut m = metrics.lock().unwrap();
+        m.observes += 1;
+        m.observe_latency.record(o.t_enqueue.elapsed());
+        if res.is_err() {
+            m.observe_errors += 1;
+            m.errors += 1;
+        }
+        // the observe barrier is where a degraded shard transport
+        // re-attaches: refresh the health counters while they can change
+        if let Some(h) = engine.shard_health() {
+            m.shard_probes = h.probes;
+            m.shard_reattaches = h.reattaches;
+            m.shard_degraded = h.degraded;
+        }
+    }
+    let _ = o.resp.send(res);
+}
+
+/// Fail every message drained from behind the stop sentinel — answering
+/// post-sentinel requests (or applying post-sentinel observations) would
+/// violate the documented shutdown contract.
+fn fail_drained(drained: Vec<Msg>) {
+    for msg in drained {
+        match msg {
+            Msg::Req(r) => {
+                let _ = r.resp.send(Err(anyhow::anyhow!("surrogate server stopped")));
+            }
+            Msg::Observe(o) => {
+                let _ = o.resp.send(Err(anyhow::anyhow!("surrogate server stopped")));
+            }
+            Msg::Stop => {}
+        }
+    }
 }
 
 impl SurrogateClient {
-    /// Blocking gradient query.
+    /// Blocking gradient query. Fails fast — without blocking — when the
+    /// admission queue is full (backpressure) or the server has stopped.
     pub fn predict(&self, x: &[f64]) -> anyhow::Result<Vec<f64>> {
         anyhow::ensure!(x.len() == self.dim, "query dimension mismatch");
         let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Msg::Req(Request { x: x.to_vec(), resp: rtx }))
-            .map_err(|_| anyhow::anyhow!("surrogate server is down"))?;
+        self.bag.push(Msg::Req(Request {
+            x: x.to_vec(),
+            resp: rtx,
+            t_enqueue: Instant::now(),
+        }))?;
         rrx.recv().map_err(|_| anyhow::anyhow!("surrogate server dropped the request"))?
     }
 
     /// Stream a new observation into the shared surrogate. Blocks until the
     /// engine has applied it (incrementally — see
     /// [`crate::gp::OnlineGradientGp`]); predictions enqueued afterwards see
-    /// the updated state.
+    /// the updated state. Subject to the same admission control as
+    /// [`SurrogateClient::predict`].
     pub fn observe(&self, x: &[f64], g: &[f64]) -> anyhow::Result<()> {
         anyhow::ensure!(
             x.len() == self.dim && g.len() == self.dim,
             "observation dimension mismatch"
         );
         let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Msg::Observe(Observation { x: x.to_vec(), g: g.to_vec(), resp: rtx }))
-            .map_err(|_| anyhow::anyhow!("surrogate server is down"))?;
+        self.bag.push(Msg::Observe(Observation {
+            x: x.to_vec(),
+            g: g.to_vec(),
+            resp: rtx,
+            t_enqueue: Instant::now(),
+        }))?;
         rrx.recv().map_err(|_| anyhow::anyhow!("surrogate server dropped the observation"))?
     }
 }
@@ -320,7 +502,7 @@ impl GradientSource for SurrogateClient {
                 if !self.warned_degraded {
                     self.warned_degraded = true;
                     eprintln!(
-                        "gdkron: surrogate gradient query degraded to zero ({e}); further \
+                        "gdkron: surrogate gradient query degraded to zero ({e:#}); further \
                          degradations on this handle are counted in \
                          ServerMetrics::degraded_queries"
                     );
@@ -603,5 +785,105 @@ mod tests {
         let m = h_stop.join().unwrap();
         assert_eq!(m.requests, 1, "exactly the pre-sentinel request is served");
         assert_eq!(m.observes, 0, "the post-sentinel observation must not be applied");
+    }
+
+    /// Engine whose predictions fail with a three-link anyhow context chain
+    /// — the shape a `gram::remote` transport failure arrives in.
+    struct ChainFailingEngine {
+        dim: usize,
+    }
+
+    impl crate::coordinator::Engine for ChainFailingEngine {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn predict_batch(&self, _xq: &Mat) -> anyhow::Result<Mat> {
+            use anyhow::Context;
+            let root: anyhow::Result<Mat> = Err(anyhow::anyhow!("connection reset by peer"));
+            root.context("shard 2 (10.0.0.7:9000) apply failed")
+                .context("sharded gram apply aborted")
+        }
+        fn name(&self) -> &'static str {
+            "chain-failing"
+        }
+    }
+
+    #[test]
+    fn error_context_chain_survives_the_request_channel() {
+        // regression: serve_batch used to forward engine failures as
+        // `anyhow!("{e}")`, which flattens the chain to its outermost
+        // message — the root cause (wire error, shard address) vanished
+        // before the client ever saw it.
+        let server = SurrogateServer::spawn(
+            || Ok(Box::new(ChainFailingEngine { dim: 2 }) as _),
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let client = server.client();
+        let err = client.predict(&[0.0, 1.0]).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("sharded gram apply aborted"), "outer context lost: {text}");
+        assert!(
+            text.contains("shard 2 (10.0.0.7:9000) apply failed"),
+            "middle context lost: {text}"
+        );
+        assert!(text.contains("connection reset by peer"), "root cause lost: {text}");
+    }
+
+    #[test]
+    fn error_counters_split_by_path_and_sum() {
+        // regression: `errors` used to mix units (a failed batch counted
+        // once per request, a failed observe once per observe) with no way
+        // to tell the paths apart. The split counters pin the invariant
+        // errors == request_errors + observe_errors.
+        let server = SurrogateServer::spawn(
+            || Ok(Box::new(FailingEngine { dim: 3 }) as _),
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let client = server.client();
+        assert!(client.predict(&[0.0; 3]).is_err());
+        assert!(client.predict(&[1.0; 3]).is_err());
+        // FailingEngine keeps the default Engine::observe, which bails
+        assert!(client.observe(&[0.0; 3], &[0.0; 3]).is_err());
+        let m = server.shutdown();
+        assert_eq!(m.request_errors, 2, "failed predictions counted per request");
+        assert_eq!(m.observe_errors, 1, "failed observes counted once");
+        assert_eq!(m.errors, m.request_errors + m.observe_errors, "documented sum");
+        assert_eq!(m.observes, 1);
+        assert_eq!(m.predict_latency.count(), 2, "every answered request is timed");
+        assert_eq!(m.observe_latency.count(), 1);
+    }
+
+    #[test]
+    fn multi_executor_pool_serves_and_observes_correctly() {
+        // the spawn_shared path: four executors over one shared native
+        // engine must give bit-identical answers to the direct engine and
+        // keep the observe barrier intact.
+        let (engine, _, _) = make_engine(5, 3, 21);
+        let (engine_ref, _, _) = make_engine(5, 3, 21);
+        let server = SurrogateServer::spawn_shared(
+            move || Ok(Box::new(engine) as Box<dyn Engine + Send + Sync>),
+            BatchPolicy::default(),
+            SchedulerOptions { executors: 4, max_queue: 256 },
+        )
+        .unwrap();
+        let client = server.client();
+        let q = vec![0.3; 5];
+        assert_eq!(client.predict(&q).unwrap(), engine_ref.gp().predict_gradient(&q));
+        // observe then predict at the observed point: the barrier makes the
+        // update visible to the follow-up query
+        let mut rng = Rng::new(210);
+        let xn = rng.gauss_vec(5);
+        let gn = rng.gauss_vec(5);
+        client.observe(&xn, &gn).unwrap();
+        let at_new = client.predict(&xn).unwrap();
+        for i in 0..5 {
+            assert!((at_new[i] - gn[i]).abs() < 1e-6);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.observes, 1);
+        assert_eq!(m.errors, 0);
     }
 }

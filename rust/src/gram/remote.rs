@@ -35,6 +35,15 @@
 //! dimensions, deltas before a sync) come back as explicit `Err` frames;
 //! everything else (disconnects, short frames, version mismatches) is
 //! caught by the framing layer.
+//!
+//! **Pipelining note**: each endpoint's apply conversation (panel
+//! broadcast → diag gather → pdiag broadcast → result gather) runs on its
+//! own socket with no cross-endpoint protocol state, which is what lets
+//! the coordinator drive all endpoints concurrently — one thread per
+//! endpoint, meeting only at the `P`-diagonal reduction
+//! ([`super::sharded::ShardedGramFactors`]'s pipelined gather). Nothing in
+//! this module assumes the serial calling order beyond the per-endpoint
+//! frame sequence.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -69,7 +69,7 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -668,7 +668,12 @@ pub struct ShardedGramFactors {
     /// the degradation fallback after a transport failure.
     fallback: ShardState,
     /// The worker endpoints (`None` = inline single-shard, or degraded).
-    pool: Option<RefCell<Vec<Box<dyn ShardEndpoint>>>>,
+    /// Mutex rather than RefCell so the engine is `Sync`: the serving core
+    /// shares it across executor threads behind an `RwLock`
+    /// ([`crate::coordinator::SurrogateServer::spawn_shared`]), and the
+    /// read-lock prediction path never touches the pool (applies happen
+    /// only inside observe-barrier CG re-solves, under the write lock).
+    pool: Option<Mutex<Vec<Box<dyn ShardEndpoint>>>>,
     /// Remote (TCP) transport, for labels and diagnostics.
     remote: bool,
     degraded: AtomicBool,
@@ -693,7 +698,7 @@ impl ShardedGramFactors {
             let endpoints: Vec<Box<dyn ShardEndpoint>> = (0..nshards)
                 .map(|id| Box::new(ChannelEndpoint::spawn(id)) as Box<dyn ShardEndpoint>)
                 .collect();
-            Some(RefCell::new(endpoints))
+            Some(Mutex::new(endpoints))
         } else {
             None
         };
@@ -756,7 +761,7 @@ impl ShardedGramFactors {
             plan: Vec::new(),
             shared: SharedPanels::snapshot(f),
             fallback: build_state(f, 0, f.n()),
-            pool: Some(RefCell::new(endpoints)),
+            pool: Some(Mutex::new(endpoints)),
             remote: true,
             degraded: AtomicBool::new(false),
             degraded_reason: Mutex::new(None),
@@ -884,7 +889,7 @@ impl ShardedGramFactors {
         // the plan is recomputed for the (possibly changed) membership size
         let prev_nshards = self.nshards;
         self.nshards = addrs.len();
-        self.pool = Some(RefCell::new(endpoints));
+        self.pool = Some(Mutex::new(endpoints));
         self.degraded.store(false, Ordering::SeqCst);
         *self.degraded_reason.lock().unwrap() = None;
         self.resync(f);
@@ -989,7 +994,7 @@ impl ShardedGramFactors {
         self.revision = self.revision.wrapping_add(1);
         let mut failure: Option<String> = None;
         if let Some(pool) = self.pool.as_ref() {
-            let mut endpoints = pool.borrow_mut();
+            let mut endpoints = pool.lock().unwrap();
             for (id, ep) in endpoints.iter_mut().enumerate() {
                 let (lo, hi) = self.plan[id];
                 if let Err(e) = ep.sync(f, &self.shared, self.nshards, lo, hi, self.revision) {
@@ -1014,7 +1019,7 @@ impl ShardedGramFactors {
         self.revision = self.revision.wrapping_add(1);
         let mut failure: Option<String> = None;
         if let Some(pool) = self.pool.as_ref() {
-            let mut endpoints = pool.borrow_mut();
+            let mut endpoints = pool.lock().unwrap();
             for (id, ep) in endpoints.iter_mut().enumerate() {
                 let (lo, hi) = self.plan[id];
                 let res = match delta {
@@ -1037,7 +1042,7 @@ impl ShardedGramFactors {
     /// the slices in plan order.
     fn gather_hborder(&self, lam_new: &[f64], out: &mut [f64]) -> anyhow::Result<()> {
         let pool = self.pool.as_ref().expect("h-border fan-out without a pool");
-        let mut endpoints = pool.borrow_mut();
+        let mut endpoints = pool.lock().unwrap();
         for ep in endpoints.iter_mut() {
             ep.start_hborder(lam_new)?;
         }
@@ -1135,9 +1140,23 @@ impl ShardedGramFactors {
     /// row blocks. Every receive is bounded by the transport (channel
     /// disconnection / socket timeout), so a lost worker yields `Err`, not
     /// a hang.
+    ///
+    /// Remote (TCP) transports with more than one shard run the
+    /// **pipelined** gather ([`ShardedGramFactors::apply_pooled_pipelined`]):
+    /// one coordinator thread per endpoint drives the whole
+    /// send→diag→pdiag→gather conversation, so the panel broadcast to one
+    /// shard overlaps the result-gather from another instead of
+    /// serializing behind it. In-process channel endpoints keep the serial
+    /// loop — their sends are cheap enough that per-apply thread spawns
+    /// would cost more than they overlap (pinned by the shard-scaling
+    /// bench). Both paths assemble the identical per-shard blocks, so
+    /// results stay bit-identical.
     fn apply_pooled(&self, x: &Mat, y: &mut Mat) -> anyhow::Result<()> {
         let pool = self.pool.as_ref().expect("pooled apply without a pool");
-        let mut endpoints = pool.borrow_mut();
+        let mut endpoints = pool.lock().unwrap();
+        if self.remote && endpoints.len() > 1 {
+            return self.apply_pooled_pipelined(&mut endpoints, x, y);
+        }
         let xin = Arc::new(x.clone());
         let stationary = self.shared.class == KernelClass::Stationary;
         for ep in endpoints.iter_mut() {
@@ -1187,6 +1206,94 @@ impl ShardedGramFactors {
         Ok(())
     }
 
+    /// The pipelined remote gather: one scoped coordinator thread per
+    /// endpoint drives its full apply conversation concurrently, meeting
+    /// the other shards only at the `P`-diagonal reduction barrier
+    /// (stationary kernels need the *global* diagonal before the finish
+    /// sweep). Per-shard shape checks and block assembly are identical to
+    /// the serial loop, so results are bit-identical; a failure on any
+    /// endpoint poisons the barrier, which unblocks every waiting shard
+    /// with an error instead of a hang, and the first failure (in shard
+    /// order) is reported.
+    fn apply_pooled_pipelined(
+        &self,
+        endpoints: &mut [Box<dyn ShardEndpoint>],
+        x: &Mat,
+        y: &mut Mat,
+    ) -> anyhow::Result<()> {
+        let xin = Arc::new(x.clone());
+        let stationary = self.shared.class == KernelClass::Stationary;
+        let barrier = PdiagBarrier::new(self.n, x.cols(), endpoints.len());
+        let ncols = x.cols();
+        let d = self.d;
+        let results: Vec<anyhow::Result<Mat>> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(endpoints.len());
+            for (id, ep) in endpoints.iter_mut().enumerate() {
+                let (lo, hi) = self.plan[id];
+                let xin = xin.clone();
+                let barrier = &barrier;
+                handles.push(s.spawn(move || -> anyhow::Result<Mat> {
+                    let who = ep.describe();
+                    // poison the barrier on ANY exit that is not a clean
+                    // success — error or panic — so sibling shards parked
+                    // at the reduction never hang
+                    let mut guard = PoisonOnDrop { barrier, armed: true };
+                    let res = (|| -> anyhow::Result<Mat> {
+                        ep.start_apply(&xin, stationary)?;
+                        if stationary {
+                            let diag = ep.recv_diag()?;
+                            anyhow::ensure!(
+                                diag.rows() == hi - lo && diag.cols() == ncols,
+                                "P-diagonal slice from {who} is {}x{} (expected {}x{})",
+                                diag.rows(),
+                                diag.cols(),
+                                hi - lo,
+                                ncols
+                            );
+                            let pdiag = barrier.contribute(lo, hi, &diag)?;
+                            ep.send_pdiag(&pdiag)?;
+                        }
+                        let block = ep.recv_out()?;
+                        anyhow::ensure!(
+                            block.rows() == (hi - lo) * d && block.cols() == ncols,
+                            "output block from {who} is {}x{} (expected {}x{})",
+                            block.rows(),
+                            block.cols(),
+                            (hi - lo) * d,
+                            ncols
+                        );
+                        Ok(block)
+                    })();
+                    if res.is_ok() {
+                        guard.armed = false;
+                    }
+                    res
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!("shard apply coordinator thread panicked"))
+                    })
+                })
+                .collect()
+        });
+        // surface the first failure in shard order (deterministic blame),
+        // then assemble the disjoint row blocks exactly like the serial path
+        let mut blocks = Vec::with_capacity(results.len());
+        for res in results {
+            blocks.push(res?);
+        }
+        for (id, block) in blocks.iter().enumerate() {
+            let (lo, hi) = self.plan[id];
+            for k in 0..block.cols() {
+                y.col_mut(k)[lo * self.d..hi * self.d].copy_from_slice(block.col(k));
+            }
+        }
+        Ok(())
+    }
+
     /// `Y ← (∇K∇′) X` for stacked right-hand sides (`X`, `Y` both
     /// `(N·D)×K`, each column one vec'd `D×N` RHS, flat index
     /// `(a, i) ↦ a·D + i`). Shard-parallel; bit-identical to the serial
@@ -1215,7 +1322,7 @@ impl ShardedGramFactors {
                 // workload may never hit the next &mut delta that would
                 // clear `pool` itself
                 if let Some(pool) = self.pool.as_ref() {
-                    pool.borrow_mut().clear();
+                    pool.lock().unwrap().clear();
                 }
                 Err(anyhow::anyhow!(
                     "{msg}; the engine now serves from the in-process single-shard fallback"
@@ -1228,6 +1335,93 @@ impl ShardedGramFactors {
     /// ordering as [`super::GramOperator`]).
     pub fn operator(&self) -> ShardedGramOperator<'_> {
         ShardedGramOperator::new(self)
+    }
+}
+
+/// The `P`-diagonal reduction rendezvous of the pipelined gather: every
+/// shard's coordinator thread contributes its `[lo, hi)` slice, blocks
+/// until the full diagonal is assembled, and receives the shared result.
+/// A failing shard poisons the barrier so waiters error out instead of
+/// hanging (the transport timeouts bound the pre-barrier receives, the
+/// poison bounds the barrier itself).
+struct PdiagBarrier {
+    state: Mutex<PdiagBarrierState>,
+    done: Condvar,
+    expected: usize,
+}
+
+struct PdiagBarrierState {
+    /// The diagonal being assembled (taken when published).
+    building: Option<Mat>,
+    contributed: usize,
+    /// The published full diagonal.
+    shared: Option<Arc<Mat>>,
+    poisoned: bool,
+}
+
+impl PdiagBarrier {
+    fn new(n: usize, cols: usize, expected: usize) -> Self {
+        PdiagBarrier {
+            state: Mutex::new(PdiagBarrierState {
+                building: Some(Mat::zeros(n, cols)),
+                contributed: 0,
+                shared: None,
+                poisoned: false,
+            }),
+            done: Condvar::new(),
+            expected,
+        }
+    }
+
+    /// Add one shard's slice (`diag` is `(hi-lo)×K`, pre-checked by the
+    /// caller) and block until the reduced full diagonal is published.
+    fn contribute(&self, lo: usize, hi: usize, diag: &Mat) -> anyhow::Result<Arc<Mat>> {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned {
+            anyhow::bail!("P-diagonal reduction aborted: another shard failed");
+        }
+        {
+            let building = st.building.as_mut().expect("contribute after publish");
+            for k in 0..diag.cols() {
+                building.col_mut(k)[lo..hi].copy_from_slice(diag.col(k));
+            }
+        }
+        st.contributed += 1;
+        if st.contributed == self.expected {
+            let full = Arc::new(st.building.take().expect("double publish"));
+            st.shared = Some(full.clone());
+            self.done.notify_all();
+            return Ok(full);
+        }
+        while st.shared.is_none() && !st.poisoned {
+            st = self.done.wait(st).unwrap();
+        }
+        match st.shared.clone() {
+            Some(full) => Ok(full),
+            None => anyhow::bail!("P-diagonal reduction aborted: another shard failed"),
+        }
+    }
+
+    fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        drop(st);
+        self.done.notify_all();
+    }
+}
+
+/// Poisons the barrier on drop unless disarmed — covers both the error
+/// return and a panic unwinding through a coordinator thread.
+struct PoisonOnDrop<'a> {
+    barrier: &'a PdiagBarrier,
+    armed: bool,
+}
+
+impl Drop for PoisonOnDrop<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.barrier.poison();
+        }
     }
 }
 

@@ -137,6 +137,49 @@
 //! and scripted kill/restart/corruption faults by `tests/chaos_remote.rs`
 //! (fault injection lives in `tests/common/chaos_proxy.rs`).
 //!
+//! ## Operating the serving core (runbook)
+//!
+//! The front door is the work-bag scheduler in [`coordinator`]: clients
+//! push into one bounded FIFO, `server.executors` threads pull coalesced
+//! prediction batches off it, and observations (and shutdown) dispatch as
+//! strict barriers — requests enqueued before an observe are answered by
+//! the old posterior, requests after it see the updated one, at every pool
+//! width.
+//!
+//! **Thread knobs.** `server.executors` (default 1) sets the executor-pool
+//! width for shared engines (`SurrogateServer::spawn_shared` /
+//! `spawn_native_opts`; the native engine is `Send + Sync`, so prediction
+//! batches run concurrently under a read lock while observes take the
+//! write lock). PJRT engines are thread-affine and always serve on one
+//! executor. Executor parallelism multiplies with — and is independent of
+//! — `runtime.threads`, the *per-batch* linalg pool: saturate with wide
+//! executors × narrow linalg pools for many small queries, or the reverse
+//! for few huge ones. `server.max_batch` / `server.deadline_us` shape the
+//! coalescing exactly as before; already-queued requests always drain into
+//! a batch regardless of deadline.
+//!
+//! **Backpressure contract.** `server.max_queue` (default 1024) bounds the
+//! admission queue. When it is full, `predict`/`observe` fail *fast* with
+//! a descriptive "surrogate server overloaded" error — the message was
+//! never enqueued, memory never grows unboundedly, and the caller decides
+//! (retry with backoff, shed, or raise the knob). Rejections are counted
+//! in `ServerMetrics::rejected` and appear in no other counter; the stop
+//! sentinel is always admitted, so shutdown cannot be refused.
+//!
+//! **Reading the latency histograms.** `ServerMetrics::predict_latency` /
+//! `observe_latency` time enqueue→response per message in log₂ µs buckets:
+//! `p50_us`/`p99_us`/`p999_us` are conservative *upper bounds* (bucket
+//! edges, ≤ 2× the true quantile; read "p99 ≤ this"), `max_us` is exact.
+//! Queue pressure shows up first in `queue_depth_max` (high-water mark)
+//! and a p999 drifting toward `deadline_us` + solve time; sustained
+//! `rejected > 0` means the pool is undersized for the offered load —
+//! raise `server.executors` (native engines) before `server.max_queue`
+//! (a deeper queue adds latency, not throughput). Error accounting splits
+//! by path: `request_errors` (per failed request) + `observe_errors` (per
+//! failed observe) = `errors`, always. Load-test the whole core with
+//! `cargo bench --bench serve_load` (closed- and open-loop modes; `--test`
+//! for the CI smoke that pins scheduler-vs-direct-engine bit-identity).
+//!
 //! ## Architecture
 //!
 //! Three layers (see `DESIGN.md`):

@@ -195,7 +195,10 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  remote gram shards: GDKRON_REGISTRY_FILE > gram.registry_file > \
                  GDKRON_REMOTE_SHARDS > gram.remote_shards (empty = in-process); \
                  health knobs: gram.health_interval_ms, gram.reconnect_backoff_ms, \
-                 gram.remote_timeout_ms, gram.remote_gather_factor"
+                 gram.remote_timeout_ms, gram.remote_gather_factor\n\
+                 serving core: server.max_batch, server.deadline_us (batch coalescing), \
+                 server.executors (engine-pool threads, native engine only), \
+                 server.max_queue (admission bound; overload = fast error)"
             );
             Ok(())
         }

@@ -1,0 +1,336 @@
+//! Concurrent-load correctness for the work-bag serving core.
+//!
+//! The properties under test are the scheduler's contract, not timing:
+//! * observes are strict barriers — a predict enqueued after an observe
+//!   completed must see the updated posterior, even with many executors
+//!   and many interleaved clients;
+//! * admission control rejects overload with a clean, descriptive error
+//!   (never a hang, never a truncated queue);
+//! * shutdown under load drains cleanly — every outstanding client gets
+//!   an answer or an error, and join never wedges.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use gdkron::coordinator::{
+    BatchPolicy, Engine, SchedulerOptions, SurrogateServer,
+};
+use gdkron::gp::{FitOptions, GradientGp};
+use gdkron::gram::Metric;
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+
+/// Deterministic engine whose predictions are stamped with the number of
+/// observations applied so far: `out[i][j] = version + xq[i][j]`. Lets the
+/// tests read "which posterior did this predict see" straight off the
+/// response. The sleeps widen the race windows the scheduler must close.
+struct VersionEngine {
+    dim: usize,
+    version: AtomicU64,
+    predict_delay: Duration,
+    observe_delay: Duration,
+}
+
+impl VersionEngine {
+    fn new(dim: usize, predict_delay: Duration, observe_delay: Duration) -> Self {
+        Self { dim, version: AtomicU64::new(0), predict_delay, observe_delay }
+    }
+}
+
+impl Engine for VersionEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn predict_batch(&self, xq: &Mat) -> anyhow::Result<Mat> {
+        std::thread::sleep(self.predict_delay);
+        let v = self.version.load(Ordering::SeqCst) as f64;
+        Ok(Mat::from_fn(self.dim, xq.cols(), |i, j| v + xq.col(j)[i]))
+    }
+    fn observe(&mut self, _x: &[f64], _g: &[f64]) -> anyhow::Result<()> {
+        std::thread::sleep(self.observe_delay);
+        self.version.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+    fn name(&self) -> &'static str {
+        "version-test"
+    }
+}
+
+fn fit_small_gp(d: usize, n: usize, seed: u64) -> GradientGp {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+    GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.5),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap()
+}
+
+/// Barrier ordering under contention: 6 client threads interleave observes
+/// and predicts against a 4-executor pool. Every predict issued after an
+/// observe returned must see a posterior version at least as new as the
+/// number of observes globally completed at that moment.
+#[test]
+fn post_observe_predicts_see_the_updated_posterior() {
+    const THREADS: usize = 6;
+    const ROUNDS: usize = 20;
+    let d = 4;
+    let server = SurrogateServer::spawn_shared(
+        move || {
+            let e = VersionEngine::new(
+                d,
+                Duration::from_micros(100),
+                Duration::from_micros(300),
+            );
+            Ok(Box::new(e) as Box<dyn Engine + Send + Sync>)
+        },
+        BatchPolicy { max_batch: 4, deadline: Duration::from_micros(50) },
+        SchedulerOptions { executors: 4, max_queue: 1024 },
+    )
+    .unwrap();
+
+    // count of observes whose barrier has fully completed (client got Ok)
+    let applied = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = server.client();
+        let applied = applied.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(300 + t as u64);
+            for _ in 0..ROUNDS {
+                let xn = rng.gauss_vec(d);
+                let gn = rng.gauss_vec(d);
+                client.observe(&xn, &gn).unwrap();
+                applied.fetch_add(1, Ordering::SeqCst);
+                // any observes counted here finished BEFORE this predict
+                // was enqueued — the barrier must make them visible
+                let floor = applied.load(Ordering::SeqCst);
+                let q = vec![0.0; d];
+                let out = client.predict(&q).unwrap();
+                assert_eq!(out.len(), d);
+                let seen = out[0];
+                for v in &out {
+                    assert_eq!(*v, seen, "version stamp must be batch-consistent");
+                }
+                assert!(
+                    seen >= floor as f64,
+                    "stale read: predict saw version {seen} but {floor} observes \
+                     had already completed"
+                );
+                assert!(seen <= (THREADS * ROUNDS) as f64);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // with all clients quiesced, the posterior reflects every observe
+    let out = server.client().predict(&vec![0.0; d]).unwrap();
+    assert_eq!(out[0], (THREADS * ROUNDS) as f64);
+
+    let m = server.shutdown();
+    assert_eq!(m.observes, THREADS * ROUNDS);
+    assert_eq!(m.requests, THREADS * ROUNDS + 1);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.observe_latency.count(), (THREADS * ROUNDS) as u64);
+}
+
+/// Admission control: a tiny queue in front of a slow engine rejects the
+/// overflow fast, with a descriptive error — and every message is either
+/// served or rejected, never lost or hung.
+#[test]
+fn overload_is_rejected_with_a_clean_error() {
+    const THREADS: usize = 8;
+    const ATTEMPTS: usize = 5;
+    let d = 4;
+    let server = SurrogateServer::spawn_shared(
+        move || {
+            let e = VersionEngine::new(
+                d,
+                Duration::from_millis(20),
+                Duration::ZERO,
+            );
+            Ok(Box::new(e) as Box<dyn Engine + Send + Sync>)
+        },
+        BatchPolicy { max_batch: 1, deadline: Duration::ZERO },
+        SchedulerOptions { executors: 1, max_queue: 2 },
+    )
+    .unwrap();
+
+    let gate = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = server.client();
+        let gate = gate.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(500 + t as u64);
+            gate.wait(); // all threads fire into the tiny queue at once
+            let (mut ok, mut rejected) = (0usize, 0usize);
+            for _ in 0..ATTEMPTS {
+                match client.predict(&rng.gauss_vec(d)) {
+                    Ok(out) => {
+                        assert_eq!(out.len(), d);
+                        ok += 1;
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("overloaded") && msg.contains("max_queue"),
+                            "rejection must be descriptive, got: {msg}"
+                        );
+                        rejected += 1;
+                    }
+                }
+            }
+            (ok, rejected)
+        }));
+    }
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    for h in handles {
+        let (o, r) = h.join().unwrap();
+        ok += o;
+        rejected += r;
+    }
+
+    assert_eq!(ok + rejected, THREADS * ATTEMPTS, "no message may be lost");
+    assert!(
+        rejected > 0,
+        "8 simultaneous clients against max_queue = 2 must trip admission control"
+    );
+    let m = server.shutdown();
+    assert_eq!(m.requests, ok, "only admitted requests reach the engine");
+    assert_eq!(m.rejected, rejected as u64);
+    assert_eq!(m.errors, 0, "rejections are not engine errors");
+    // queue never exceeds the bound (+1 for the stop sentinel, which
+    // bypasses admission so shutdown always works)
+    assert!(
+        m.queue_depth_max <= 3,
+        "queue depth {} exceeded max_queue + stop sentinel",
+        m.queue_depth_max
+    );
+}
+
+/// The real engine under concurrent load: predictor threads hammer a
+/// 4-executor native pool while an observer streams new gradients in.
+/// Post-observe predicts at the observed point must interpolate the
+/// observed gradient (the posterior-update correctness check), and no
+/// request may error or be dropped.
+#[test]
+fn native_engine_serves_correctly_under_concurrent_load() {
+    const PREDICTORS: usize = 4;
+    const PREDICTS: usize = 25;
+    const OBSERVES: usize = 8;
+    let d = 12;
+    let gp = fit_small_gp(d, 4, 42);
+    let server = SurrogateServer::spawn_native_opts(
+        gp,
+        BatchPolicy { max_batch: 8, deadline: Duration::from_micros(100) },
+        SchedulerOptions { executors: 4, max_queue: 1024 },
+    )
+    .unwrap();
+
+    let mut handles = Vec::new();
+    for t in 0..PREDICTORS {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(800 + t as u64);
+            for _ in 0..PREDICTS {
+                let out = client.predict(&rng.gauss_vec(d)).unwrap();
+                assert_eq!(out.len(), d);
+                for v in &out {
+                    assert!(v.is_finite(), "prediction must stay finite under load");
+                }
+            }
+        }));
+    }
+    // observer: stream a gradient in, then check the posterior actually
+    // moved — the served prediction at the observed point must reproduce
+    // the observed gradient (gradient observations interpolate).
+    let observer = server.client();
+    handles.push(std::thread::spawn(move || {
+        let mut rng = Rng::new(77);
+        for _ in 0..OBSERVES {
+            let xn = rng.gauss_vec(d);
+            let gn = rng.gauss_vec(d);
+            observer.observe(&xn, &gn).unwrap();
+            let out = observer.predict(&xn).unwrap();
+            for i in 0..d {
+                assert!(
+                    (out[i] - gn[i]).abs() < 1e-4,
+                    "post-observe predict must interpolate the streamed gradient \
+                     (component {i}: got {}, observed {})",
+                    out[i],
+                    gn[i]
+                );
+            }
+        }
+    }));
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let m = server.shutdown();
+    assert_eq!(m.requests, PREDICTORS * PREDICTS + OBSERVES);
+    assert_eq!(m.observes, OBSERVES);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.request_errors + m.observe_errors, m.errors);
+    assert_eq!(m.predict_latency.count() as usize, m.requests);
+}
+
+/// Shutdown with clients still in flight: every blocked client unblocks
+/// with an answer or a "stopped" error, and join returns (no hang).
+#[test]
+fn shutdown_under_load_never_hangs() {
+    const THREADS: usize = 6;
+    let d = 4;
+    let server = SurrogateServer::spawn_shared(
+        move || {
+            let e = VersionEngine::new(
+                d,
+                Duration::from_millis(2),
+                Duration::ZERO,
+            );
+            Ok(Box::new(e) as Box<dyn Engine + Send + Sync>)
+        },
+        BatchPolicy { max_batch: 2, deadline: Duration::from_micros(100) },
+        SchedulerOptions { executors: 2, max_queue: 64 },
+    )
+    .unwrap();
+
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(600 + t as u64);
+            loop {
+                match client.predict(&rng.gauss_vec(d)) {
+                    Ok(out) => assert_eq!(out.len(), d),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("stopped"),
+                            "mid-shutdown failures must say the server stopped, got: {msg}"
+                        );
+                        return;
+                    }
+                }
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let m = server.shutdown(); // clients still hammering: must not wedge
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(m.requests > 0, "the server must have served before shutdown");
+    assert_eq!(m.errors, 0);
+}

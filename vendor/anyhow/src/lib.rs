@@ -3,38 +3,85 @@
 //! Substitution note (DESIGN.md §6): the build environment has no network
 //! registry, so this workspace member stands in for the real crate under the
 //! same name. It implements exactly the subset the `gdkron` sources use —
-//! [`Error`], [`Result`], [`anyhow!`], [`ensure!`] and [`bail!`] — with the
-//! same semantics (a type-erased, `Send + Sync` error carrying a message, a
-//! blanket `From` for standard errors so `?` works on io/parse errors).
+//! [`Error`], [`Result`], [`anyhow!`], [`ensure!`], [`bail!`] and the
+//! [`Context`] extension trait — with the same semantics (a type-erased,
+//! `Send + Sync` error carrying a message chain, a blanket `From` for
+//! standard errors so `?` works on io/parse errors).
 //!
-//! Deliberately *not* implemented: `Context`/`with_context`, backtraces and
-//! downcasting. Code that needs those should extend this shim rather than
-//! work around it.
+//! Context chains follow the real crate's display convention: `{}` shows
+//! only the **outermost** message, `{:#}` joins the whole chain outermost →
+//! root cause with `": "`. Anything that forwards an error across a process
+//! or channel boundary as text must therefore format it with `{:#}` (or
+//! [`Error::root_cause`] stays unreachable on the far side).
+//!
+//! Deliberately *not* implemented: backtraces and downcasting. Code that
+//! needs those should extend this shim rather than work around it.
 
 use std::fmt;
 
-/// Type-erased error: a display message (the only thing the workspace ever
-/// reads back out of an `anyhow::Error`).
+/// Type-erased error: a display message plus an optional source chain (the
+/// only things the workspace ever reads back out of an `anyhow::Error`).
 pub struct Error {
     msg: String,
+    source: Option<Box<Error>>,
 }
 
 impl Error {
     /// Build from anything displayable — the workhorse behind [`anyhow!`].
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Error { msg: message.to_string() }
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` in an outer context message. `{}` then displays only
+    /// `message`; `{:#}` displays `message: …: root cause`.
+    pub fn context<M: fmt::Display>(self, message: M) -> Self {
+        Error { msg: message.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The innermost message of the chain (the original failure).
+    pub fn root_cause(&self) -> &str {
+        let mut e = self;
+        while let Some(src) = e.source.as_deref() {
+            e = src;
+        }
+        &e.msg
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let e = next?;
+            next = e.source.as_deref();
+            Some(e.msg.as_str())
+        })
+    }
+
+    fn fmt_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut src = self.source.as_deref();
+        while let Some(e) = src {
+            write!(f, ": {}", e.msg)?;
+            src = e.source.as_deref();
+        }
+        Ok(())
     }
 }
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.msg)
+        if f.alternate() {
+            self.fmt_chain(f)
+        } else {
+            f.write_str(&self.msg)
+        }
     }
 }
 
 impl fmt::Debug for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.msg)
+        // `unwrap()` panics and `{:?}` logs must show the whole story
+        self.fmt_chain(f)
     }
 }
 
@@ -43,13 +90,41 @@ impl fmt::Debug for Error {
 /// blanket impl coherent.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Self {
-        Error { msg: e.to_string() }
+        Error::msg(e)
     }
 }
 
 /// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as the default
 /// error type.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(…)` / `.with_context(…)` to
+/// `Result<T, anyhow::Error>` and `Option<T>` (the two shapes the workspace
+/// chains on; convert std errors with `?` first).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) in an outer context message.
+    fn context<M: fmt::Display>(self, message: M) -> Result<T>;
+    /// Lazily-built variant: `f` runs only on the error path.
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.map_err(|e| e.context(message))
+    }
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
 
 /// Construct an [`Error`] from a format string (or any displayable value).
 #[macro_export]
@@ -131,5 +206,29 @@ mod tests {
     fn error_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn context_chain_display_and_alternate() {
+        let root: Result<()> = Err(anyhow!("connection reset"));
+        let e = root.context("apply failed").context("solve aborted").unwrap_err();
+        // `{}` = outermost only (real-anyhow convention) …
+        assert_eq!(e.to_string(), "solve aborted");
+        // … `{:#}` = the full chain, outermost → root cause
+        assert_eq!(format!("{e:#}"), "solve aborted: apply failed: connection reset");
+        assert_eq!(format!("{e:?}"), "solve aborted: apply failed: connection reset");
+        assert_eq!(e.root_cause(), "connection reset");
+        let parts: Vec<&str> = e.chain().collect();
+        assert_eq!(parts, vec!["solve aborted", "apply failed", "connection reset"]);
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_option_context_works() {
+        let ok: Result<i32> = Ok(7);
+        let ok = ok.with_context(|| -> String { unreachable!("must not run on Ok") });
+        assert_eq!(ok.unwrap(), 7);
+        let none: Option<i32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
     }
 }
