@@ -23,10 +23,13 @@ fn main() {
 
     let mut out = Mat::zeros(d, n);
     let mut ws = MatvecWorkspace::new(d, n);
-    bench_with("matvec native d=100 n=1000", Duration::from_millis(800), 9, &mut || {
+    // the structured matvec is three D×N·N×N-shaped panel products
+    let matvec_flops = 6 * (d as u64) * (n as u64) * (n as u64);
+    let s = bench_with("matvec native d=100 n=1000", Duration::from_millis(800), 9, &mut || {
         f.matvec_into(&v, &mut out, &mut ws);
         black_box(&out);
     });
+    s.report_gflops(matvec_flops);
 
     match ArtifactRegistry::open("artifacts") {
         Ok(reg) if reg.spec("gram_matvec_d100_n1000").is_some() => {

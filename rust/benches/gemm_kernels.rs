@@ -1,0 +1,215 @@
+//! Bench: the cache-blocked gemm fast path vs the exact serial kernels,
+//! flop-rate instrumented.
+//!
+//! Three modes:
+//!
+//! ```bash
+//! cargo bench --bench gemm_kernels              # full sweep + the acceptance
+//!                                               # pin (fast ≥ 2× exact GFLOP/s
+//!                                               # on the D=1024 N=8 K=8 panel
+//!                                               # product, single thread)
+//! cargo bench --bench gemm_kernels -- --test    # CI smoke: tiny shapes,
+//!                                               # correctness + partition
+//!                                               # invariance, no timing asserts
+//! cargo bench --bench gemm_kernels -- --crossover
+//!                                               # serial vs forced-parallel
+//!                                               # break-even sweep — the tool
+//!                                               # for re-measuring
+//!                                               # linalg::par::MIN_PAR_FLOPS
+//! ```
+//!
+//! Every timed shape also cross-checks fast against exact under the pinned
+//! entrywise bound `8·k·ε·(|A|·|B|)` from the `linalg::gemm` contract, so a
+//! flop-rate regression hunt can't silently time a wrong kernel.
+
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box, gemm_flops};
+use gdkron::linalg::{gemm, par, Mat};
+use gdkron::rng::Rng;
+
+fn sample(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.gauss())
+}
+
+/// Assert the fast result sits within the pinned entrywise error budget of
+/// the exact one: `|fast − exact| ≤ 8·k·ε·(|A|·|B|)`.
+fn assert_within_bound(fast: &Mat, exact: &Mat, abs_prod: &Mat, k: usize, what: &str) {
+    for j in 0..fast.cols() {
+        for i in 0..fast.rows() {
+            let bound =
+                8.0 * (k.max(1) as f64) * f64::EPSILON * abs_prod[(i, j)].abs().max(1e-300);
+            let err = (fast[(i, j)] - exact[(i, j)]).abs();
+            assert!(
+                err <= bound,
+                "{what}: entry ({i},{j}) error {err:e} exceeds pinned bound {bound:e}"
+            );
+        }
+    }
+}
+
+fn check_shape(m: usize, k: usize, n: usize) {
+    let a = sample(m, k, 11 + (m * 31 + k * 7 + n) as u64);
+    let b = sample(k, n, 13 + (m + k * 3 + n * 17) as u64);
+    let exact = a.matmul(&b);
+    let mut fast = Mat::zeros(m, n);
+    gemm::matmul_into(&a, &b, &mut fast);
+    let abs_prod = a.map(f64::abs).matmul(&b.map(f64::abs));
+    assert_within_bound(&fast, &exact, &abs_prod, k, &format!("m={m} k={k} n={n}"));
+}
+
+/// Bit-level partition invariance: the property every fast-mode bit-identity
+/// pin (shard counts, thread counts, transports) rests on.
+fn check_partition_invariance() {
+    let (m, k, n) = (37, 300, 23); // spans a KC boundary (KC = 256)
+    let a = sample(m, k, 5);
+    let b = sample(k, n, 6);
+    let mut whole = Mat::zeros(m, n);
+    gemm::matmul_into(&a, &b, &mut whole);
+    for split in [1, 7, n / 2, n - 1] {
+        let bl = b.block(0, 0, k, split);
+        let br = b.block(0, split, k, n - split);
+        let mut cl = Mat::zeros(m, split);
+        let mut cr = Mat::zeros(m, n - split);
+        gemm::matmul_into(&a, &bl, &mut cl);
+        gemm::matmul_into(&a, &br, &mut cr);
+        assert!(
+            cl.hcat(&cr) == whole,
+            "column split at {split} is not bit-identical (fast mode determinism broken)"
+        );
+    }
+}
+
+/// The acceptance pin: the P-shaped panel product `Vᵀ(ΛX̃)` at serving scale
+/// — V, ΛX̃ ∈ R^{1024×8}, K = 8 stacked right-hand sides, single thread.
+fn acceptance_pin(assert_speedup: bool) {
+    let (d, n, kk) = (1024usize, 8usize, 8usize);
+    let lam = sample(d, n, 21);
+    let vs: Vec<Mat> = (0..kk).map(|k| sample(d, n, 100 + k as u64)).collect();
+    let mut out = Mat::zeros(n, n);
+    let flops = kk as u64 * gemm_flops(n, d, n);
+
+    let s_exact =
+        bench_with("panel_p exact  D=1024 N=8 K=8", Duration::from_millis(400), 11, &mut || {
+            for v in &vs {
+                v.t_matmul_into(&lam, &mut out);
+            }
+            black_box(&out);
+        });
+    let exact_rate = s_exact.report_gflops(flops);
+    let exact_out = out.clone();
+
+    let s_fast =
+        bench_with("panel_p fast   D=1024 N=8 K=8", Duration::from_millis(400), 11, &mut || {
+            for v in &vs {
+                gemm::t_matmul_into(v, &lam, &mut out);
+            }
+            black_box(&out);
+        });
+    let fast_rate = s_fast.report_gflops(flops);
+
+    let abs_prod = vs[kk - 1].map(f64::abs).t_matmul(&lam.map(f64::abs));
+    assert_within_bound(&out, &exact_out, &abs_prod, d, "panel_p acceptance");
+
+    let speedup = fast_rate / exact_rate.max(1e-12);
+    println!(
+        "panel_p speedup: {speedup:.2}x  (exact {exact_rate:.2} GFLOP/s, fast {fast_rate:.2} GFLOP/s)"
+    );
+    if assert_speedup {
+        assert!(
+            speedup >= 2.0,
+            "acceptance pin failed: fast path is {speedup:.2}x exact (< 2x) on the \
+             D=1024 N=8 K=8 panel product"
+        );
+    }
+}
+
+fn sweep() {
+    // serving-relevant shapes: tall-skinny panel products (D×N panels with
+    // small N), the square-ish cross-Gram, and a fat-k reduction.
+    let shapes: [(usize, usize, usize); 6] =
+        [(1024, 8, 8), (256, 16, 16), (512, 512, 8), (128, 128, 128), (64, 1024, 64), (8, 2048, 8)];
+    for (m, k, n) in shapes {
+        check_shape(m, k, n);
+        let a = sample(m, k, 3);
+        let b = sample(k, n, 4);
+        let mut c = Mat::zeros(m, n);
+        let flops = gemm_flops(m, k, n);
+        let label_e = format!("exact m={m} k={k} n={n}");
+        let se = bench_with(&label_e, Duration::from_millis(250), 9, &mut || {
+            a.matmul_into(&b, &mut c);
+            black_box(&c);
+        });
+        se.report_gflops(flops);
+        let label_f = format!("fast  m={m} k={k} n={n}");
+        let sf = bench_with(&label_f, Duration::from_millis(250), 9, &mut || {
+            gemm::matmul_into(&a, &b, &mut c);
+            black_box(&c);
+        });
+        sf.report_gflops(flops);
+    }
+}
+
+/// Serial vs forced-parallel break-even printer: sweep flop counts around
+/// the current `MIN_PAR_FLOPS` (2¹⁷) and print where the pool starts
+/// winning. Re-derive the constant from this table on new hardware.
+fn crossover() {
+    println!("# crossover — serial vs pool dispatch (re-measure MIN_PAR_FLOPS against this)");
+    let t = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    println!("(pool = {t} threads; MIN_PAR_FLOPS = 2^17 = 131072 flops)");
+    let shapes: [(usize, usize, usize); 6] =
+        [(32, 32, 8), (64, 64, 8), (64, 64, 16), (128, 128, 8), (128, 128, 32), (256, 256, 32)];
+    for (m, k, n) in shapes {
+        let flops = gemm_flops(m, k, n);
+        let a = sample(m, k, 8);
+        let b = sample(k, n, 9);
+        let mut c = Mat::zeros(m, n);
+        let dur = Duration::from_millis(150);
+        let ss = bench_with(&format!("serial 2*{m}*{k}*{n}={flops}"), dur, 7, &mut || {
+            a.matmul_into(&b, &mut c);
+            black_box(&c);
+        });
+        let sp = bench_with(&format!("pool   2*{m}*{k}*{n}={flops}"), dur, 7, &mut || {
+            par::matmul_into_with(&a, &b, &mut c, t);
+            black_box(&c);
+        });
+        let win = ss.median_ns / sp.median_ns.max(1.0);
+        println!("  flops {flops:>9}: pool is {win:.2}x serial");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--test");
+    let xover = args.iter().any(|a| a == "--crossover");
+    println!("# gemm_kernels — cache-blocked fast path vs exact serial kernels");
+
+    if xover {
+        crossover();
+        println!("ok");
+        return;
+    }
+
+    // correctness gates run in every mode
+    for (m, k, n) in [(0, 5, 3), (1, 1, 1), (7, 9, 5), (33, 64, 17), (70, 257, 9)] {
+        check_shape(m, k, n);
+    }
+    check_partition_invariance();
+
+    if smoke {
+        // tiny timed sample so the harness itself is exercised, no asserts
+        let a = sample(33, 64, 3);
+        let b = sample(64, 17, 4);
+        let mut c = Mat::zeros(33, 17);
+        let s = bench_with("smoke fast m=33 k=64 n=17", Duration::from_millis(20), 5, &mut || {
+            gemm::matmul_into(&a, &b, &mut c);
+            black_box(&c);
+        });
+        s.report_gflops(gemm_flops(33, 64, 17));
+    } else {
+        sweep();
+        acceptance_pin(true);
+    }
+    println!("ok");
+}

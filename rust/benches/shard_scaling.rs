@@ -88,15 +88,20 @@ fn main() {
         let stacked = Mat::from_fn(nd, sc.k, |_, _| rng.gauss());
         let mut want = Mat::zeros(nd, sc.k);
 
+        // per apply_block: K RHS × three D×N·N×N-shaped panel products
+        let block_flops = 6.0 * (sc.d * sc.n * sc.n * sc.k) as f64;
+        let rate = |dt: Duration| block_flops * sc.reps as f64 / dt.as_nanos().max(1) as f64;
+
         let single = GramOperator::new(&f);
         let dt_single = time_block(&single, &stacked, &mut want, sc.reps);
         println!(
-            "{:<14} D={:<4} N={:<3} K={:<2} | single-shard {}",
+            "{:<14} D={:<4} N={:<3} K={:<2} | single-shard {} | {:6.2} GFLOP/s",
             sc.label,
             sc.d,
             sc.n,
             sc.k,
-            fmt(dt_single)
+            fmt(dt_single),
+            rate(dt_single)
         );
 
         let mut best: Option<(usize, Duration)> = None;
@@ -113,12 +118,13 @@ fn main() {
             );
             let speedup = dt_single.as_secs_f64() / dt.as_secs_f64().max(1e-12);
             println!(
-                "{:<14} D={:<4} N={:<3} K={:<2} | {s} shards      {} | speedup {speedup:5.2}x",
+                "{:<14} D={:<4} N={:<3} K={:<2} | {s} shards      {} | {:6.2} GFLOP/s | speedup {speedup:5.2}x",
                 sc.label,
                 sc.d,
                 sc.n,
                 sc.k,
-                fmt(dt)
+                fmt(dt),
+                rate(dt)
             );
             let better = match best {
                 None => true,

@@ -22,6 +22,26 @@ impl BenchStats {
     pub fn per_iter(&self) -> Duration {
         Duration::from_nanos(self.median_ns as u64)
     }
+
+    /// Sustained flop rate in GFLOP/s, given the flops one iteration
+    /// performs. `flops / median_ns` is flops-per-nanosecond, which is
+    /// numerically GFLOP/s (1 flop/ns = 1e9 flop/s).
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.median_ns.max(1.0)
+    }
+
+    /// Print a flop-rate line aligned under the timing line that
+    /// [`bench_with`] already emitted.
+    pub fn report_gflops(&self, flops: u64) -> f64 {
+        let rate = self.gflops(flops);
+        println!("{:<44} {:>14.2} GFLOP/s ({} flops/iter)", format!("{} [rate]", self.name), rate, flops);
+        rate
+    }
+}
+
+/// Flop count of an `m×k · k×n` gemm (one multiply + one add per MAC).
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> u64 {
+    2 * (m as u64) * (k as u64) * (n as u64)
 }
 
 /// Benchmark `f`, printing a criterion-style line. `f` is called repeatedly;
@@ -111,6 +131,21 @@ mod tests {
         );
         assert!(s.median_ns > 0.0);
         assert!(s.median_ns < 1e7, "a no-op should be far under 10ms: {}", s.median_ns);
+    }
+
+    #[test]
+    fn gflops_is_flops_per_nanosecond() {
+        let s = BenchStats {
+            name: "x".into(),
+            median_ns: 1_000.0,
+            mad_ns: 0.0,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        // 2000 flops in 1000 ns = 2 GFLOP/s.
+        assert_eq!(s.gflops(2_000), 2.0);
+        assert_eq!(gemm_flops(10, 20, 30), 12_000);
+        assert_eq!(gemm_flops(0, 20, 30), 0);
     }
 
     #[test]

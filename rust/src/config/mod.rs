@@ -192,6 +192,43 @@ pub fn resolve_shards(config: &Config) -> usize {
     )
 }
 
+/// Resolve the gemm mode for the panel-product kernels
+/// ([`crate::linalg::gemm`]).
+///
+/// Priority: the launcher's `--gemm` flag (installed process-wide via
+/// [`crate::linalg::gemm::set_global_gemm`]), then the `GDKRON_GEMM`
+/// environment variable, then the `gram.gemm` config key; absent (or
+/// unparseable) everywhere, [`crate::linalg::gemm::GemmMode::Exact`] — the
+/// bit-identity-pinned serial kernels. All three spellings share
+/// [`crate::linalg::gemm::parse_gemm_mode`] (`exact` | `fast`,
+/// case-insensitive). The launcher feeds the result to
+/// [`crate::linalg::gemm::set_mode`].
+pub fn resolve_gemm(config: &Config) -> crate::linalg::gemm::GemmMode {
+    resolve_gemm_from(
+        config,
+        std::env::var("GDKRON_GEMM").ok().as_deref(),
+        crate::linalg::gemm::global_gemm(),
+    )
+}
+
+/// Pure core of [`resolve_gemm`] (env/CLI values injected for testability).
+fn resolve_gemm_from(
+    config: &Config,
+    env_val: Option<&str>,
+    cli: Option<crate::linalg::gemm::GemmMode>,
+) -> crate::linalg::gemm::GemmMode {
+    if let Some(m) = cli {
+        return m;
+    }
+    if let Some(m) = env_val.and_then(crate::linalg::gemm::parse_gemm_mode) {
+        return m;
+    }
+    config
+        .str("gram.gemm")
+        .and_then(crate::linalg::gemm::parse_gemm_mode)
+        .unwrap_or(crate::linalg::gemm::GemmMode::Exact)
+}
+
 /// Resolve the **remote** shard worker addresses for the cross-node Gram
 /// transport ([`crate::gram::remote`]).
 ///
@@ -434,6 +471,27 @@ jitter = 1e-10
         assert_eq!(resolve_shards_from(&empty, None, None), 1);
         let invalid = Config::from_str("[gram]\nshards = -2\n").unwrap();
         assert_eq!(resolve_shards_from(&invalid, None, None), 1);
+    }
+
+    #[test]
+    fn gemm_resolution_order() {
+        use crate::linalg::gemm::GemmMode;
+        let cfg = Config::from_str("[gram]\ngemm = \"fast\"\n").unwrap();
+        // CLI beats env beats config
+        assert_eq!(resolve_gemm_from(&cfg, Some("fast"), Some(GemmMode::Exact)), GemmMode::Exact);
+        assert_eq!(resolve_gemm_from(&cfg, Some("exact"), None), GemmMode::Exact);
+        assert_eq!(resolve_gemm_from(&cfg, Some(" FAST "), None), GemmMode::Fast);
+        // bad env falls through to config
+        assert_eq!(resolve_gemm_from(&cfg, Some("zonk"), None), GemmMode::Fast);
+        assert_eq!(resolve_gemm_from(&cfg, None, None), GemmMode::Fast);
+        // config spelling is case-insensitive too
+        let caps = Config::from_str("[gram]\ngemm = \"Exact\"\n").unwrap();
+        assert_eq!(resolve_gemm_from(&caps, None, None), GemmMode::Exact);
+        // no knob anywhere, or an unparseable one → the exact default
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(resolve_gemm_from(&empty, None, None), GemmMode::Exact);
+        let invalid = Config::from_str("[gram]\ngemm = \"blocked\"\n").unwrap();
+        assert_eq!(resolve_gemm_from(&invalid, None, None), GemmMode::Exact);
     }
 
     #[test]

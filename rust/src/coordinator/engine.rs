@@ -94,6 +94,12 @@ impl NativeEngine {
     /// worker). The shard boundaries follow the serving window either way:
     /// every streamed `observe` slides them with the panels, and
     /// `gp.window` bounds the per-shard memory.
+    ///
+    /// Note: `gram.gemm` is **not** applied here — the panel-gemm mode is
+    /// process-global, like the `threads` pool, and is installed once by
+    /// the launcher ([`crate::config::resolve_gemm`] +
+    /// [`crate::linalg::gemm::set_mode`], or `GDKRON_GEMM` in worker
+    /// processes), not per engine.
     pub fn from_config(gp: GradientGp, config: &Config) -> Self {
         let online = config.bool_or("gp.online", true);
         let window = config.int_or("gp.window", 0).max(0) as usize;

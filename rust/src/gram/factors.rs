@@ -104,8 +104,11 @@ impl GramFactors {
         };
         let lam_xt = metric.apply_mat(&xt);
 
-        // cross-Gram panel H = X̃ᵀΛX̃ (retained) and the pairwise r
-        let h = xt.t_matmul(&lam_xt);
+        // cross-Gram panel H = X̃ᵀΛX̃ (retained) and the pairwise r. The
+        // O(N²D) cold-construction product goes through the par dispatcher
+        // so the `gram.gemm = fast` knob applies; the O(ND) h-border path
+        // used by `append` stays on the serial dots in both modes.
+        let h = crate::linalg::par::t_matmul(&xt, &lam_xt);
         let r = match class {
             KernelClass::DotProduct => {
                 // r_ab = x̃_aᵀ Λ x̃_b = H_ab

@@ -30,7 +30,12 @@ impl GramFactors {
     /// All gemm-shaped products route through [`crate::linalg::par`]: above
     /// the parallel threshold they fan out over the worker pool (see the
     /// `threads` knob), below it — and always when `threads = 1` — they run
-    /// the identical serial kernels.
+    /// the identical serial kernels. The same routing is where the
+    /// `gram.gemm` knob takes effect: under `fast`, [`crate::linalg::par`]
+    /// dispatches these products to the cache-blocked
+    /// [`crate::linalg::gemm`] core instead (the scalar hadamard/`W`-sweep
+    /// glue between products is mode-independent), so this matvec is the
+    /// serial reference the sharded fast kernels are pinned against.
     pub fn matvec_into(&self, v: &Mat, out: &mut Mat, ws: &mut MatvecWorkspace) {
         let (d, n) = (self.d(), self.n());
         assert_eq!((v.rows(), v.cols()), (d, n), "V must be D×N");

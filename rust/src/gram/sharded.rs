@@ -29,7 +29,14 @@
 //!   results are bit-identical for every shard count and every transport,
 //!   including the single-shard path. A summed tree reduction would trade
 //!   that guarantee away for nothing: the per-shard work is identical
-//!   either way.
+//!   either way. The guarantee is *per gemm mode*: under `gram.gemm =
+//!   fast` the per-shard kernels run the blocked [`crate::linalg::gemm`]
+//!   core, whose per-element arithmetic is invariant under the row/column
+//!   partitioning the shard plan induces — so sharded == single-shard ==
+//!   unsharded still holds bit-for-bit within fast mode (and within exact
+//!   mode, as always), just not *across* the two modes. Every node of a
+//!   fleet must run the same mode (remote workers resolve `GDKRON_GEMM`
+//!   in their own process).
 //!
 //! Online deltas follow the conditioning engine (PR 2): `append` computes
 //! the new cross-Gram border *in parallel* — each shard contributes the
@@ -74,6 +81,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::kernels::{KernelClass, ScalarKernel};
+use crate::linalg::gemm::{self, GemmMode, View};
 use crate::linalg::{matmul_acc_col_slice, slice_dot, Mat};
 use crate::solvers::LinearOp;
 
@@ -334,6 +342,9 @@ enum ApplyMsg {
 /// replicating the serial per-column arithmetic of
 /// [`GramFactors::matvec_into`] exactly.
 pub(crate) fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
+    if gemm::mode() == GemmMode::Fast {
+        return apply_dot_fast(sh, st, xin);
+    }
     let (d, n) = (sh.d, sh.n);
     let b = st.hi - st.lo;
     let k_count = xin.cols();
@@ -370,10 +381,61 @@ pub(crate) fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
     block
 }
 
+/// Blocked-gemm variant of [`apply_dot`]: same shapes, same combine
+/// arithmetic, but the three panel products run through
+/// [`gemm::gemm_view`]. Because the blocked core's per-element arithmetic
+/// depends only on k-dimension blocking (a global constant), the
+/// column-sliced products here are bit-identical to the corresponding
+/// columns of the unsharded fast path — the shard-count bit-identity pin
+/// holds within fast mode exactly as it does within exact mode.
+fn apply_dot_fast(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
+    let (d, n) = (sh.d, sh.n);
+    let b = st.hi - st.lo;
+    let k_count = xin.cols();
+    let mut block = Mat::zeros(b * d, k_count);
+    let mut t1 = vec![0.0; d * b];
+    let mut t2 = vec![0.0; d * b];
+    let mut pblk = vec![0.0; n * b];
+    let mut mblk = Mat::zeros(n, b);
+    let lam_v = View::of(&sh.lam_xt);
+    for k in 0..k_count {
+        let v = xin.col(k); // a vec'd D×N right-hand side, column-major
+        let vmat = View::col_major(v, d, n);
+        // term1 block: V · K̂′[:, lo..hi]
+        gemm::gemm_view(vmat, View::of(&st.kp_cols), &mut t1, false);
+        // P[:, lo..hi] = Vᵀ · (ΛX̃)[:, lo..hi]
+        gemm::gemm_view(vmat.transposed(), lam_v.col_range(st.lo, st.hi), &mut pblk, false);
+        // M[:, lo..hi] = K̂″[:, lo..hi] ⊙ P[:, lo..hi]
+        for j in 0..b {
+            let kppc = st.kpp_cols.col(j);
+            let pc = &pblk[j * n..(j + 1) * n];
+            let mc = mblk.col_mut(j);
+            for bb in 0..n {
+                mc[bb] = kppc[bb] * pc[bb];
+            }
+        }
+        // term2 block: ΛX̃ · M[:, lo..hi]
+        gemm::gemm_view(lam_v, View::of(&mblk), &mut t2, false);
+        let ocol = block.col_mut(k);
+        for j in 0..b {
+            let t1c = &t1[j * d..(j + 1) * d];
+            let t2c = &t2[j * d..(j + 1) * d];
+            let o = &mut ocol[j * d..(j + 1) * d];
+            for i in 0..d {
+                o[i] = sh.metric.diag_entry(i) * t1c[i] + t2c[i];
+            }
+        }
+    }
+    block
+}
+
 /// Stationary phase 1: this shard's `B×N` block of `P = (ΛX)ᵀV` per RHS,
 /// plus the `B×K` slice of the `P` diagonal (the only cross-shard
 /// dependency of the stationary matvec).
 pub(crate) fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
+    if gemm::mode() == GemmMode::Fast {
+        return apply_phase_p_fast(sh, st, xin);
+    }
     let d = sh.d;
     let b = st.hi - st.lo;
     let n = sh.n;
@@ -400,6 +462,32 @@ pub(crate) fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (V
     (pblocks, diag)
 }
 
+/// Blocked-gemm variant of [`apply_phase_p`]. The shard's `P` rows come out
+/// of one `B×D · D×N` product; row-partitioning the left operand never
+/// changes per-element arithmetic in the blocked core, so the rows (and the
+/// diagonal slice gathered from them) match the unsharded fast `P`
+/// bit-for-bit.
+fn apply_phase_p_fast(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
+    let d = sh.d;
+    let b = st.hi - st.lo;
+    let n = sh.n;
+    let k_count = xin.cols();
+    let mut pblocks = Vec::with_capacity(k_count);
+    let mut diag = Mat::zeros(b, k_count);
+    let lam_t = View::of(&st.lam_xt_t);
+    for k in 0..k_count {
+        let v = xin.col(k);
+        let mut p = Mat::zeros(b, n);
+        // P[lo..hi, :] = (ΛX̃)ᵀ[lo..hi, :] · V
+        gemm::gemm_view(lam_t, View::col_major(v, d, n), p.as_mut_slice(), false);
+        for j in 0..b {
+            diag[(j, k)] = p[(j, st.lo + j)];
+        }
+        pblocks.push(p);
+    }
+    (pblocks, diag)
+}
+
 /// Stationary phase 2: with the gathered full `P` diagonal (`N×K`), finish
 /// the shard's output rows — again replicating the serial per-column
 /// arithmetic (term1 accumulation, `W` sweep in increasing `b`, `M3`
@@ -411,6 +499,9 @@ pub(crate) fn apply_finish_stationary(
     pblocks: &[Mat],
     pdiag: &Mat,
 ) -> Mat {
+    if gemm::mode() == GemmMode::Fast {
+        return apply_finish_stationary_fast(sh, st, xin, pblocks, pdiag);
+    }
     let (d, n) = (sh.d, sh.n);
     let b = st.hi - st.lo;
     let k_count = xin.cols();
@@ -437,6 +528,57 @@ pub(crate) fn apply_finish_stationary(
             let ocol = &mut block.col_mut(k)[j * d..(j + 1) * d];
             for i in 0..d {
                 ocol[i] = sh.metric.diag_entry(i) * t1[i];
+            }
+        }
+    }
+    block
+}
+
+/// Blocked-gemm variant of [`apply_finish_stationary`]: term1 and the `M3`
+/// product run through [`gemm::gemm_view`] (the latter accumulating onto
+/// term1, exactly like the serial fast path's `matmul_acc`), while the `W`
+/// sweep stays the byte-identical scalar loop — its inputs (`P` rows, the
+/// gathered diagonal) already match the unsharded fast path bit-for-bit.
+fn apply_finish_stationary_fast(
+    sh: &SharedPanels,
+    st: &ShardState,
+    xin: &Mat,
+    pblocks: &[Mat],
+    pdiag: &Mat,
+) -> Mat {
+    let (d, n) = (sh.d, sh.n);
+    let b = st.hi - st.lo;
+    let k_count = xin.cols();
+    let mut block = Mat::zeros(b * d, k_count);
+    let mut t1 = vec![0.0; d * b];
+    let mut m3 = Mat::zeros(n, b);
+    let xt_v = View::of(&sh.xt);
+    for k in 0..k_count {
+        let v = xin.col(k);
+        let p = &pblocks[k];
+        // term1 block: V · K̂′[:, lo..hi]
+        gemm::gemm_view(View::col_major(v, d, n), View::of(&st.kp_cols), &mut t1, false);
+        // W_ab = K̂″_ab (P_ab − P_bb); M3[:,a] = −W_{a,:}ᵀ + w_a e_a
+        for j in 0..b {
+            let a = st.lo + j;
+            let kpr = st.kpp_rows.col(j); // row a of K̂″, contiguous
+            let m3c = m3.col_mut(j);
+            let mut wsum = 0.0;
+            for bb in 0..n {
+                let w = kpr[bb] * (p[(j, bb)] - pdiag[(bb, k)]);
+                m3c[bb] = -w;
+                wsum += w;
+            }
+            m3c[a] += wsum;
+        }
+        // t1 += X̃ · M3[:, lo..hi]
+        gemm::gemm_view(xt_v, View::of(&m3), &mut t1, true);
+        let ocol = block.col_mut(k);
+        for j in 0..b {
+            let t1c = &t1[j * d..(j + 1) * d];
+            let o = &mut ocol[j * d..(j + 1) * d];
+            for i in 0..d {
+                o[i] = sh.metric.diag_entry(i) * t1c[i];
             }
         }
     }

@@ -52,7 +52,10 @@
 //!   worker count is the `threads` knob: `--threads N` on the CLI beats the
 //!   `GDKRON_THREADS` env var beats `runtime.threads` in a config file
 //!   ([`config::resolve_threads`]); `threads = 1` is a strict serial
-//!   fallback, and parallel results are bit-identical to serial ones.
+//!   fallback, and parallel results are bit-identical at every thread
+//!   count (in `gram.gemm = exact` mode, the default, they are moreover
+//!   bit-identical to the serial [`linalg::Mat`] kernels; see the gemm
+//!   runbook below).
 //! * **[`solvers::block_cg_solve`]** — block CG over
 //!   [`solvers::LinearOp::apply_block`]: `K` right-hand sides share one
 //!   Krylov sequence of gemm-shaped block applications instead of `K`
@@ -63,7 +66,8 @@
 //!   into row blocks owned by *persistent* per-shard workers
 //!   ([`gram::sharded`]): `apply_block` fans the serving batch out
 //!   shard-locally and reduces the disjoint output blocks — bit-identical
-//!   to the single-shard path for every shard count. Knob precedence:
+//!   to the single-shard path for every shard count (within either gemm
+//!   mode). Knob precedence:
 //!   `--shards N` on the CLI beats `GDKRON_SHARDS` beats `gram.shards` in
 //!   a config file ([`config::resolve_shards`]); `1` (default) is the
 //!   single-shard path with no worker threads. The shard boundaries
@@ -80,9 +84,11 @@
 //!   one `O(N² + ND)` panel sync per plan refresh (attach, rollback, cold
 //!   refit), then `O(N + D)` bytes per online `append` (borders evaluated
 //!   exactly once, on the coordinator) and a zero-payload frame per
-//!   `drop_first` — while every apply runs the exact serial per-column
-//!   kernels, keeping remote results **bit-identical** to the in-process
-//!   and single-shard paths (`tests/remote_gram.rs`). Knob:
+//!   `drop_first` — while every apply runs the same per-shard kernels as
+//!   the in-process workers, keeping remote results **bit-identical** to
+//!   the in-process and single-shard paths (`tests/remote_gram.rs`; run
+//!   every node of a fleet in the same gemm mode — workers resolve
+//!   `GDKRON_GEMM` in their own process). Knob:
 //!   `GDKRON_REMOTE_SHARDS` (comma-separated `host:port`) beats
 //!   `gram.remote_shards` (string array) —
 //!   [`config::resolve_remote_shards`] — and a non-empty list wins over
@@ -136,6 +142,37 @@
 //! bit-identical to the single-shard path — pinned across shard counts
 //! and scripted kill/restart/corruption faults by `tests/chaos_remote.rs`
 //! (fault injection lives in `tests/common/chaos_proxy.rs`).
+//!
+//! ## Choosing the panel-gemm mode (runbook)
+//!
+//! Every gemm-shaped panel product (the structured matvec's three products,
+//! the sharded per-shard kernels, the cold-construction cross-Gram) runs in
+//! one of two process-global modes ([`linalg::gemm`]):
+//!
+//! * **`exact`** (default) — the serial reference kernels, unchanged. All
+//!   historical bit-identity pins hold verbatim: parallel == serial ==
+//!   sharded == remote, bit for bit. Choose this whenever reproducibility
+//!   against older recorded outputs matters.
+//! * **`fast`** — the cache-blocked, register-tiled gemm core (packed
+//!   `MR×NR` microkernel, FMA where the host supports it). Results differ
+//!   from `exact` only by reassociated floating-point summation, pinned
+//!   entrywise to `8·k·ε·(|A|·|B|)` (`tests/gemm_path.rs`); determinism is
+//!   preserved *within* the mode — thread counts, shard counts and
+//!   transports all reproduce each other bit-for-bit, per machine. The
+//!   full gram/online/sharded suites pass under `GDKRON_GEMM=fast` (a
+//!   dedicated CI leg runs them).
+//!
+//! Knob precedence, mirroring `threads`/`shards`: `--gemm fast` on the CLI
+//! beats the `GDKRON_GEMM` env var beats `gram.gemm` in a config file
+//! ([`config::resolve_gemm`]); unknown spellings fall through to the next
+//! level. The mode is process-global and installed by the launcher —
+//! engines never flip it mid-flight, and remote shard workers resolve it
+//! from their own environment, so set `GDKRON_GEMM` uniformly across a
+//! fleet. Measure the win on your hardware with
+//! `cargo bench --bench gemm_kernels` (flop-rate instrumented; the
+//! acceptance pin asserts ≥ 2× exact-serial GFLOP/s on the D=1024 serving
+//! panel product) and re-derive the parallel-dispatch threshold with
+//! `cargo bench --bench gemm_kernels -- --crossover`.
 //!
 //! ## Operating the serving core (runbook)
 //!

@@ -1,0 +1,567 @@
+//! Cache-blocked f64 gemm — the opt-in *fast* path for the panel products.
+//!
+//! The paper's `O(N²D + (N²)³)` decomposition makes the `O(N²D)` panel
+//! products (`K̂′`/`H`/`(ΛX̃)ᵀ` against RHS blocks) the dominant flop cost,
+//! and every layer above — par pool, shards, remote workers, scheduler —
+//! bottoms out in the serial per-column kernels of [`super::mat`]. Those
+//! kernels are latency-bound (one running sum per output element), which
+//! caps the whole serving stack at a fraction of machine peak. This module
+//! is the raw-speed answer: a BLIS-style blocked gemm (idiom: the faer
+//! blocked-`matmul` surface) with
+//!
+//! * **packed panels** — A is repacked into `MR`-row strips, B into
+//!   `NR`-column strips, sized by [`KC`]/[`MC`]/[`NC`] so the strips the
+//!   microkernel streams stay in L1/L2 instead of striding the full matrix;
+//! * **a register-tiled `MR×NR` microkernel** — 32 independent f64
+//!   accumulators (8 ymm registers on AVX2) written so the autovectorizer
+//!   emits fused multiply-adds; on x86-64 an `avx2+fma` specialization is
+//!   selected by runtime feature detection, elsewhere the portable body
+//!   relies on the target's native `mul_add`;
+//! * **entry points matching the serial surfaces** — [`matmul_into`] /
+//!   [`matmul_acc`] / [`t_matmul_into`] / [`matmul_t_into`] mirror the
+//!   `Mat` methods of the same names.
+//!
+//! # Exact vs fast: the mode knob
+//!
+//! The blocked kernel reassociates the `k`-dimension sum (per `KC` block,
+//! fused multiply-add chain), so its results differ from the serial kernels
+//! in the last bits. The engine therefore carries two modes ([`GemmMode`]):
+//!
+//! * `exact` (**default**) — every product runs the serial per-column
+//!   kernels. All pre-existing bit-identity pins (sharded / remote / chaos /
+//!   scheduler vs the serial reference) hold verbatim.
+//! * `fast` — gemm-shaped products ≥ the dispatch sites in
+//!   [`super::par`] and [`crate::gram`] run this blocked kernel. Accuracy
+//!   contract: entrywise `|fast − exact| ≤ 8·k·ε·(|A|·|B|)` for inner
+//!   dimension `k` (standard summation error, pinned by
+//!   `tests/gemm_path.rs`); in relative terms ≤ ~1e-12 at serving shapes.
+//!
+//! **Fast mode is still deterministic.** The arithmetic for one output
+//! element depends only on the `k`-dimension blocking ([`KC`], a global
+//! constant) — never on how the output was partitioned over threads,
+//! column blocks, or shard row-blocks, because `m`/`n` partitioning only
+//! selects *which* elements a call produces, and zero-padded edge lanes are
+//! never written back. Consequently sharded == single-shard and
+//! N-thread == 1-thread bit-identity hold *within* fast mode too (proven by
+//! the partition-invariance pins in `tests/gemm_path.rs`), and the whole
+//! existing pin suite passes under `GDKRON_GEMM=fast` unmodified. What is
+//! **not** promised: fast bits matching exact bits, or fast bits matching
+//! across machines with different FMA capability. Run every node of a fleet
+//! in the same mode.
+//!
+//! Knob resolution (single source of truth:
+//! [`crate::config::resolve_gemm`]): `--gemm` CLI flag > `GDKRON_GEMM` env
+//! var > `gram.gemm` config key > `exact`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::Mat;
+
+/// Which kernel family the gemm-shaped panel products run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmMode {
+    /// Serial per-column reference kernels ([`super::mat`]). The default;
+    /// the ground truth every bit-identity pin is anchored to.
+    Exact,
+    /// The blocked kernel in this module. Faster, deterministic, and
+    /// partition-invariant, but not bit-identical to `Exact`.
+    Fast,
+}
+
+/// Parse a gemm-mode string (CLI flag, env var or config value): trimmed,
+/// case-insensitive `exact` / `fast`. Single source of truth for every
+/// spelling of the knob — [`crate::config::resolve_gemm`] and the
+/// launcher's `--gemm` flag both route through it.
+pub fn parse_gemm_mode(v: &str) -> Option<GemmMode> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "exact" => Some(GemmMode::Exact),
+        "fast" => Some(GemmMode::Fast),
+        _ => None,
+    }
+}
+
+fn encode(m: GemmMode) -> usize {
+    match m {
+        GemmMode::Exact => 1,
+        GemmMode::Fast => 2,
+    }
+}
+
+fn decode(v: usize) -> Option<GemmMode> {
+    match v {
+        1 => Some(GemmMode::Exact),
+        2 => Some(GemmMode::Fast),
+        _ => None,
+    }
+}
+
+/// 0 = uninitialized; first [`mode`] call resolves `GDKRON_GEMM`.
+static MODE: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide gemm mode consulted by every dispatch site.
+///
+/// Resolution order: last [`set_mode`] call, else `GDKRON_GEMM`, else
+/// [`GemmMode::Exact`]. Remote shard workers resolve this independently in
+/// their own process — set the env var on every node of a fleet.
+pub fn mode() -> GemmMode {
+    if let Some(m) = decode(MODE.load(Ordering::Relaxed)) {
+        return m;
+    }
+    let m = std::env::var("GDKRON_GEMM")
+        .ok()
+        .and_then(|v| parse_gemm_mode(&v))
+        .unwrap_or(GemmMode::Exact);
+    MODE.store(encode(m), Ordering::Relaxed);
+    m
+}
+
+/// Set the process-wide gemm mode (overrides the lazy env default).
+pub fn set_mode(m: GemmMode) {
+    MODE.store(encode(m), Ordering::Relaxed);
+}
+
+/// Process-wide CLI override (0 = unset). Mirrors the `--shards` machinery
+/// in [`crate::gram::sharded`]: the launcher parses `--gemm` once and
+/// installs it here; [`crate::config::resolve_gemm`] gives it top
+/// precedence.
+static CLI_GEMM: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the `--gemm` CLI override.
+pub fn set_global_gemm(m: GemmMode) {
+    CLI_GEMM.store(encode(m), Ordering::Relaxed);
+}
+
+/// Remove the CLI override (tests).
+pub fn clear_global_gemm() {
+    CLI_GEMM.store(0, Ordering::Relaxed);
+}
+
+/// The CLI override, if one was installed.
+pub fn global_gemm() -> Option<GemmMode> {
+    decode(CLI_GEMM.load(Ordering::Relaxed))
+}
+
+// ---------------------------------------------------------------------------
+// Blocking constants.
+// ---------------------------------------------------------------------------
+
+/// Microkernel rows: 8 f64 = two ymm vectors per accumulator column.
+pub(crate) const MR: usize = 8;
+/// Microkernel columns: MR×NR = 32 accumulators = 8 ymm registers, leaving
+/// half the AVX2 register file for the A/B streams.
+pub(crate) const NR: usize = 4;
+/// k-dimension block: one `MR×KC` A-strip (16 KiB) plus one `NR×KC` B-strip
+/// (8 KiB) fit L1 together. **Load-bearing for determinism**: per-element
+/// arithmetic depends on `KC` and nothing else, so it must stay a global
+/// constant — never derived from the shape or the thread count.
+pub(crate) const KC: usize = 256;
+/// m-dimension block: the packed `MC×KC` A panel (128 KiB) stays L2-resident.
+const MC: usize = 64;
+/// n-dimension block: bounds the packed B panel (`NC×KC` = 512 KiB).
+const NC: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Strided views: one packing core serves all four product orientations.
+// ---------------------------------------------------------------------------
+
+/// A read-only strided matrix view: element `(i, j)` is
+/// `data[i*rs + j*cs]`. Column-major `Mat`s are `{rs: 1, cs: rows}`;
+/// [`View::transposed`] swaps the strides, which is how the `aᵀ·b` and
+/// `a·bᵀ` entry points reuse the same packing routines.
+#[derive(Clone, Copy)]
+pub(crate) struct View<'a> {
+    pub data: &'a [f64],
+    pub rows: usize,
+    pub cols: usize,
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl<'a> View<'a> {
+    /// View over a column-major `rows × cols` slice.
+    pub fn col_major(data: &'a [f64], rows: usize, cols: usize) -> Self {
+        debug_assert!(data.len() >= rows * cols);
+        View { data, rows, cols, rs: 1, cs: rows }
+    }
+
+    /// View over a whole `Mat`.
+    pub fn of(m: &'a Mat) -> Self {
+        View::col_major(m.as_slice(), m.rows(), m.cols())
+    }
+
+    /// The transposed view (no data movement).
+    pub fn transposed(self) -> Self {
+        View { data: self.data, rows: self.cols, cols: self.rows, rs: self.cs, cs: self.rs }
+    }
+
+    /// Columns `j0..j1` of this view (no data movement).
+    pub fn col_range(self, j0: usize, j1: usize) -> Self {
+        debug_assert!(j0 <= j1 && j1 <= self.cols);
+        View { data: &self.data[j0 * self.cs..], rows: self.rows, cols: j1 - j0, ..self }
+    }
+
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing.
+// ---------------------------------------------------------------------------
+
+/// Pack the `mc × kc` sub-panel of `a` at `(ic, pc)` into `MR`-row strips:
+/// strip `s` holds rows `ic + s·MR ..`, laid out `[p·MR + i]` so the
+/// microkernel reads `MR` contiguous values per k-step. Rows past `mc` are
+/// zero-padded — the padded lanes accumulate garbage-free zeros and are
+/// never written back.
+fn pack_a(a: View, ic: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f64]) {
+    let strips = (mc + MR - 1) / MR;
+    for s in 0..strips {
+        let i0 = s * MR;
+        let rows = MR.min(mc - i0);
+        let dst = &mut apack[s * MR * kc..(s + 1) * MR * kc];
+        for p in 0..kc {
+            let d = &mut dst[p * MR..(p + 1) * MR];
+            for i in 0..rows {
+                d[i] = a.at(ic + i0 + i, pc + p);
+            }
+            for v in d.iter_mut().skip(rows) {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack the `kc × nc` sub-panel of `b` at `(pc, jc)` into `NR`-column
+/// strips, laid out `[p·NR + j]`; columns past `nc` are zero-padded.
+fn pack_b(b: View, jc: usize, nc: usize, pc: usize, kc: usize, bpack: &mut [f64]) {
+    let strips = (nc + NR - 1) / NR;
+    for t in 0..strips {
+        let j0 = t * NR;
+        let cols = NR.min(nc - j0);
+        let dst = &mut bpack[t * NR * kc..(t + 1) * NR * kc];
+        for p in 0..kc {
+            let d = &mut dst[p * NR..(p + 1) * NR];
+            for j in 0..cols {
+                d[j] = b.at(pc + p, jc + j0 + j);
+            }
+            for v in d.iter_mut().skip(cols) {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel.
+// ---------------------------------------------------------------------------
+
+/// `acc[j·MR + i] = fma(ap[p·MR + i], bp[p·NR + j], acc)` over `p < kc`.
+/// 32 independent accumulator chains — the autovectorizer turns the inner
+/// pair of loops into 8 vfmadd231pd per k-step under `avx2,fma`.
+#[inline(always)]
+fn micro_fma_body(ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
+    for p in 0..kc {
+        let ar = &ap[p * MR..(p + 1) * MR];
+        let br = &bp[p * NR..(p + 1) * NR];
+        for j in 0..NR {
+            let bv = br[j];
+            for i in 0..MR {
+                acc[j * MR + i] = ar[i].mul_add(bv, acc[j * MR + i]);
+            }
+        }
+    }
+}
+
+/// Same loop with `mul + add` instead of `mul_add`: on x86-64 *without*
+/// FMA, `f64::mul_add` lowers to a libm call, which would be slower than
+/// the serial kernels it is meant to beat.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn micro_mul_body(ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
+    for p in 0..kc {
+        let ar = &ap[p * MR..(p + 1) * MR];
+        let br = &bp[p * NR..(p + 1) * NR];
+        for j in 0..NR {
+            let bv = br[j];
+            for i in 0..MR {
+                acc[j * MR + i] += ar[i] * bv;
+            }
+        }
+    }
+}
+
+/// The `avx2+fma` specialization. The target features let LLVM emit packed
+/// vfmadd instead of scalar code or libm fma calls.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_avx2(ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
+    micro_fma_body(ap, bp, kc, acc)
+}
+
+/// Cached runtime CPU-feature probe (0 = unresolved, 1 = yes, 2 = no).
+#[cfg(target_arch = "x86_64")]
+fn fma_available() -> bool {
+    static STATE: AtomicUsize = AtomicUsize::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma");
+            STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Kernel dispatch. The selected body is fixed per machine (runtime
+/// detection caches), so fast-mode results are reproducible run-to-run on
+/// one host; cross-host bit-identity is not promised in fast mode.
+#[inline(always)]
+fn micro(ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fma_available() {
+            // SAFETY: avx2+fma presence verified by `fma_available`.
+            unsafe { micro_avx2(ap, bp, kc, acc) };
+        } else {
+            micro_mul_body(ap, bp, kc, acc);
+        }
+    }
+    // aarch64 baseline NEON has native FMA; other targets fall back to
+    // whatever `mul_add` lowers to (the fast path is opt-in everywhere).
+    #[cfg(not(target_arch = "x86_64"))]
+    micro_fma_body(ap, bp, kc, acc);
+}
+
+// ---------------------------------------------------------------------------
+// The blocked driver.
+// ---------------------------------------------------------------------------
+
+/// `c ⟵ a·b` (or `c += a·b` when `accumulate`), `c` column-major
+/// `a.rows × b.cols`. The canonical BLIS loop nest: NC columns → KC depth
+/// (pack B) → MC rows (pack A) → NR×MR register tiles.
+///
+/// Determinism contract (load-bearing for every bit-identity pin that runs
+/// in fast mode): element `(i, j)` is produced by exactly one microkernel
+/// lane per `KC` block, accumulated in increasing-`k` order, regardless of
+/// `m`/`n` blocking or which column/row sub-range of a larger product this
+/// call covers. See the partition-invariance tests in `tests/gemm_path.rs`.
+pub(crate) fn gemm_view(a: View, b: View, c: &mut [f64], accumulate: bool) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(b.rows, k, "gemm inner-dimension mismatch");
+    assert_eq!(c.len(), m * n, "gemm output size mismatch");
+    if !accumulate {
+        for v in c.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let kc_max = KC.min(k);
+    let mut apack = vec![0.0; ((MC.min(m) + MR - 1) / MR) * MR * kc_max];
+    let mut bpack = vec![0.0; ((NC.min(n) + NR - 1) / NR) * NR * kc_max];
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(b, jc, nc, pc, kc, &mut bpack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack_a(a, ic, mc, pc, kc, &mut apack);
+                let mut jr = 0;
+                while jr < nc {
+                    let nr_eff = NR.min(nc - jr);
+                    let bp = &bpack[(jr / NR) * NR * kc..];
+                    let mut ir = 0;
+                    while ir < mc {
+                        let mr_eff = MR.min(mc - ir);
+                        let ap = &apack[(ir / MR) * MR * kc..];
+                        let mut acc = [0.0f64; MR * NR];
+                        micro(ap, bp, kc, &mut acc);
+                        // masked writeback: zero-padded edge lanes die here
+                        for j in 0..nr_eff {
+                            let col = (jc + jr + j) * m + ic + ir;
+                            let dst = &mut c[col..col + mr_eff];
+                            for i in 0..mr_eff {
+                                dst[i] += acc[j * MR + i];
+                            }
+                        }
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points mirroring the serial `Mat` surfaces.
+// ---------------------------------------------------------------------------
+
+/// Blocked `out = a·b` (shape-checked like [`Mat::matmul_into`]).
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(out.rows(), a.rows());
+    assert_eq!(out.cols(), b.cols());
+    let (av, bv) = (View::of(a), View::of(b));
+    gemm_view(av, bv, out.as_mut_slice(), false);
+}
+
+/// Blocked `out += a·b`.
+pub fn matmul_acc(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(out.rows(), a.rows());
+    assert_eq!(out.cols(), b.cols());
+    let (av, bv) = (View::of(a), View::of(b));
+    gemm_view(av, bv, out.as_mut_slice(), true);
+}
+
+/// Blocked `out = aᵀ·b`.
+pub fn t_matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows(), b.rows(), "t_matmul shape mismatch");
+    assert_eq!(out.rows(), a.cols());
+    assert_eq!(out.cols(), b.cols());
+    let (av, bv) = (View::of(a).transposed(), View::of(b));
+    gemm_view(av, bv, out.as_mut_slice(), false);
+}
+
+/// Blocked `out = a·bᵀ`.
+pub fn matmul_t_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols(), b.cols(), "matmul_t shape mismatch");
+    assert_eq!(out.rows(), a.rows());
+    assert_eq!(out.cols(), b.rows());
+    let (av, bv) = (View::of(a), View::of(b).transposed());
+    gemm_view(av, bv, out.as_mut_slice(), false);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.gauss())
+    }
+
+    /// Entrywise error budget `8·k·ε·(|A|·|B|)` from the module contract.
+    fn err_ok(fast: &Mat, exact: &Mat, abs_prod: &Mat, k: usize) -> bool {
+        let mut ok = true;
+        for j in 0..fast.cols() {
+            for i in 0..fast.rows() {
+                let bound = 8.0 * (k.max(1) as f64) * f64::EPSILON * abs_prod[(i, j)].max(1e-300);
+                ok &= (fast[(i, j)] - exact[(i, j)]).abs() <= bound;
+            }
+        }
+        ok
+    }
+
+    #[test]
+    fn parse_accepts_both_modes_case_insensitively() {
+        assert_eq!(parse_gemm_mode("exact"), Some(GemmMode::Exact));
+        assert_eq!(parse_gemm_mode(" FAST\n"), Some(GemmMode::Fast));
+        assert_eq!(parse_gemm_mode("Fast"), Some(GemmMode::Fast));
+        assert_eq!(parse_gemm_mode("blocked"), None);
+        assert_eq!(parse_gemm_mode(""), None);
+    }
+
+    #[test]
+    fn cli_override_installs_and_clears() {
+        clear_global_gemm();
+        assert_eq!(global_gemm(), None);
+        set_global_gemm(GemmMode::Fast);
+        assert_eq!(global_gemm(), Some(GemmMode::Fast));
+        clear_global_gemm();
+        assert_eq!(global_gemm(), None);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_serial_within_bound() {
+        for &(m, k, n) in &[(1, 1, 1), (7, 9, 5), (13, 300, 17), (65, 64, 3), (70, 257, 9)] {
+            let a = sample(m, k, 11);
+            let b = sample(k, n, 13);
+            let exact = a.matmul(&b);
+            let mut fast = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut fast);
+            let abs = a.map(f64::abs).matmul(&b.map(f64::abs));
+            assert!(err_ok(&fast, &exact, &abs, k), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn transpose_orientations_match_serial_within_bound() {
+        let (m, k, n) = (67, 33, 21);
+        let a = sample(m, k, 17);
+        let b = sample(m, n, 19);
+        let mut fast = Mat::zeros(k, n);
+        t_matmul_into(&a, &b, &mut fast);
+        let abs = a.map(f64::abs).t_matmul(&b.map(f64::abs));
+        assert!(err_ok(&fast, &a.t_matmul(&b), &abs, m));
+
+        let c = sample(n, k, 23);
+        let mut fast = Mat::zeros(m, n);
+        matmul_t_into(&a, &c, &mut fast);
+        let abs = a.map(f64::abs).matmul_t(&c.map(f64::abs));
+        assert!(err_ok(&fast, &a.matmul_t(&c), &abs, k));
+    }
+
+    #[test]
+    fn acc_on_zero_seed_is_bitwise_into() {
+        let a = sample(19, 70, 29);
+        let b = sample(70, 11, 31);
+        let mut into = Mat::zeros(19, 11);
+        matmul_into(&a, &b, &mut into);
+        let mut acc = Mat::zeros(19, 11);
+        matmul_acc(&a, &b, &mut acc);
+        assert!(into == acc, "into must be zero-fill + acc, bitwise");
+    }
+
+    #[test]
+    fn column_partition_is_bit_invariant() {
+        // the property the fast-mode thread/shard bit-identity pins rest on
+        let (m, k, n) = (37, 300, 23);
+        let a = sample(m, k, 37);
+        let b = sample(k, n, 41);
+        let mut full = Mat::zeros(m, n);
+        matmul_into(&a, &b, &mut full);
+        for split in [0, 1, 7, n] {
+            let left = b.block(0, 0, k, split);
+            let right = b.block(0, split, k, n - split);
+            let mut lo = Mat::zeros(m, split);
+            let mut ro = Mat::zeros(m, n - split);
+            matmul_into(&a, &left, &mut lo);
+            matmul_into(&a, &right, &mut ro);
+            let glued = lo.hcat(&ro);
+            assert!(glued == full, "split {split} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn zero_dimension_edges_are_safe() {
+        for &(m, k, n) in &[(0, 5, 3), (5, 0, 3), (5, 3, 0), (0, 0, 0)] {
+            let a = sample(m, k, 43);
+            let b = sample(k, n, 47);
+            let mut out = Mat::full(m, n, f64::NAN);
+            matmul_into(&a, &b, &mut out);
+            assert!(out.as_slice().iter().all(|v| *v == 0.0));
+            if k == 0 {
+                // acc over an empty inner dim must leave the seed untouched
+                let mut seed = sample(m, n, 53);
+                let before = seed.clone();
+                matmul_acc(&a, &b, &mut seed);
+                assert!(seed == before);
+            }
+        }
+    }
+}

@@ -1,4 +1,13 @@
 //! Column-major dense matrix with the operations the paper's algorithms need.
+//!
+//! The product kernels here (`matmul*`, `t_matmul*` and the per-column
+//! `*_col` helpers) are the **exact reference implementations**: every
+//! bit-identity pin in the tree — sharded, remote, chaos, scheduler — is
+//! anchored to their summation order, and the `gram.gemm = exact` default
+//! runs them verbatim. They deliberately do *not* dispatch on the
+//! [`super::gemm`] mode knob; the opt-in blocked fast path lives in
+//! [`super::gemm`] and is routed at the [`super::par`]/[`crate::gram`]
+//! call sites instead, so `Mat` methods stay a stable oracle for tests.
 
 use std::fmt;
 use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub, SubAssign};

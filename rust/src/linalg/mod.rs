@@ -9,12 +9,17 @@
 //! matvec and the serving path fan out on.
 //!
 //! Everything is `f64`, column-major, and allocation-explicit so the hot
-//! loops in [`crate::gram`] can reuse buffers. The [`par`] kernels reuse the
-//! exact serial per-column kernels, so parallel results are bit-identical to
-//! serial ones.
+//! loops in [`crate::gram`] can reuse buffers. The gemm-shaped products run
+//! in one of two process-wide modes (the `gram.gemm` knob, see [`gemm`]):
+//! in the default `exact` mode the [`par`] kernels reuse the exact serial
+//! per-column kernels, so parallel results are bit-identical to serial
+//! ones; the opt-in `fast` mode reroutes them through the cache-blocked
+//! [`gemm`] core, which trades that cross-mode bit-identity (never the
+//! cross-thread/cross-shard one) for several-fold higher flop rates.
 
 mod chol;
 mod eig;
+pub mod gemm;
 mod lu;
 mod mat;
 pub mod par;

@@ -6,16 +6,27 @@
 //! rayon, so this module partitions output columns into contiguous blocks
 //! and fans them out over `std::thread::scope` workers — each worker owns a
 //! disjoint column range of the output buffer (`chunks_mut`), so there is no
-//! sharing, no locking, and bit-identical results to the serial kernels
-//! (same per-column kernel, same summation order).
+//! sharing and no locking.
+//!
+//! Every product dispatches on the process-wide [`gemm::mode`] knob:
+//!
+//! * **exact** (default) — each worker runs the serial per-column kernels of
+//!   [`super::mat`] on its columns, so parallel results are bit-identical to
+//!   the serial reference (same per-column kernel, same summation order).
+//! * **fast** — each worker runs the cache-blocked [`gemm`] kernel on its
+//!   whole column block (the blocked tile, not the single column, is the
+//!   per-thread work unit). Still bit-identical across thread counts —
+//!   the blocked kernel's per-element arithmetic is invariant under output
+//!   partitioning (see [`gemm`]) — but *not* bit-identical to exact mode.
 //!
 //! Knobs:
 //! * [`set_threads`] / [`threads`] — process-wide worker count. The first
 //!   read initializes from the `GDKRON_THREADS` environment variable, else
 //!   from `std::thread::available_parallelism`. `threads = 1` is the serial
 //!   fallback: no threads are spawned at all.
-//! * Small products stay serial regardless ([`MIN_PAR_FLOPS`]): a spawn
-//!   costs ~10µs, so parallelism must clear that bar to pay off.
+//! * Small products stay serial regardless ([`MIN_PAR_FLOPS`] /
+//!   [`MIN_PAR_FLOPS_FAST`]): a spawn costs ~10µs, so parallelism must
+//!   clear that bar to pay off.
 //!
 //! The `*_with` variants take an explicit thread count (used by the property
 //! tests to force the parallel path on tiny shapes, and by benches to sweep
@@ -23,15 +34,31 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::gemm::{self, GemmMode, View};
 use super::mat::{matmul_acc_col, matmul_t_col, t_matmul_col};
 use super::Mat;
 
 /// Upper bound on the worker count (sanity clamp for bad env values).
 pub const MAX_THREADS: usize = 256;
 
-/// Products below this many flops (`2·m·k·n`) run serially: thread spawn
-/// latency would dominate.
+/// Exact-mode products below this many flops (`2·m·k·n`) run serially:
+/// thread spawn latency would dominate.
+///
+/// Derivation (re-measure on target hardware with
+/// `cargo bench --bench gemm_kernels -- --crossover`, which sweeps product
+/// sizes through both serial and forced-parallel dispatch and prints the
+/// observed break-even): a `std::thread::scope` spawn+join round trip costs
+/// ~10 µs, and the exact per-column kernels sustain roughly 3 GFLOP/s on a
+/// single core, so 2¹⁷ flops ≈ 40 µs of serial work ≈ 4 spawn costs —
+/// enough that handing half of it to one extra worker wins even after
+/// paying the spawn. Below that the spawn eats the savings.
 pub const MIN_PAR_FLOPS: usize = 1 << 17;
+
+/// Fast-mode serial/parallel crossover. The blocked kernel sustains ~4× the
+/// exact per-column flop rate (FMA microkernel vs latency-bound column
+/// sums), so the same ~4-spawn-cost break-even sits 4× more flops up.
+/// Re-measure alongside [`MIN_PAR_FLOPS`] with the `--crossover` sweep.
+pub const MIN_PAR_FLOPS_FAST: usize = 1 << 19;
 
 /// 0 = uninitialized; first [`threads`] call resolves the default.
 static THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -73,14 +100,20 @@ pub fn set_threads(n: usize) {
 
 /// Effective worker count for a product of `flops` total work spread over
 /// `cols` independent output columns. Beyond the on/off threshold, the
-/// worker count is bounded so each worker clears ~[`MIN_PAR_FLOPS`] of work
-/// — spawning the whole pool on a product barely above the threshold would
-/// pay more in spawn latency than it wins.
-fn effective_threads(flops: usize, cols: usize) -> usize {
-    if flops < MIN_PAR_FLOPS || cols < 2 {
+/// worker count is bounded so each worker clears ~one crossover quantum of
+/// work — spawning the whole pool on a product barely above the threshold
+/// would pay more in spawn latency than it wins. The quantum is
+/// mode-dependent: the fast kernel burns flops quicker, so it needs more of
+/// them per worker to amortize a spawn.
+fn effective_threads(flops: usize, cols: usize, mode: GemmMode) -> usize {
+    let quantum = match mode {
+        GemmMode::Exact => MIN_PAR_FLOPS,
+        GemmMode::Fast => MIN_PAR_FLOPS_FAST,
+    };
+    if flops < quantum || cols < 2 {
         return 1;
     }
-    threads().min(cols).min((flops / MIN_PAR_FLOPS).max(1))
+    threads().min(cols).min((flops / quantum).max(1))
 }
 
 /// Run `f(j, column_j)` for every column of `out`, fanned out over
@@ -130,37 +163,143 @@ where
     });
 }
 
+/// The three gemm-shaped product orientations the engine uses. One enum +
+/// one driver replaces the four near-identical dispatch loops that used to
+/// live here — the shape checks, the exact-vs-fast split and the column
+/// fan-out now exist exactly once.
+#[derive(Clone, Copy)]
+enum Kind {
+    /// `out ⟵ a·b`
+    Mul,
+    /// `out ⟵ aᵀ·b`
+    TMul,
+    /// `out ⟵ a·bᵀ`
+    MulT,
+}
+
+impl Kind {
+    /// Shape-check `a`/`b`/`out` and return the product's total flops.
+    fn check(self, a: &Mat, b: &Mat, out: &Mat) -> usize {
+        match self {
+            Kind::Mul => {
+                assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+                assert_eq!(out.rows(), a.rows());
+                assert_eq!(out.cols(), b.cols());
+            }
+            Kind::TMul => {
+                assert_eq!(a.rows(), b.rows(), "t_matmul shape mismatch");
+                assert_eq!(out.rows(), a.cols());
+                assert_eq!(out.cols(), b.cols());
+            }
+            Kind::MulT => {
+                assert_eq!(a.cols(), b.cols(), "matmul_t shape mismatch");
+                assert_eq!(out.rows(), a.rows());
+                assert_eq!(out.cols(), b.rows());
+            }
+        }
+        2 * a.rows() * a.cols() * out.cols()
+    }
+}
+
+/// The shared driver behind every public product: shape checks, then the
+/// exact-vs-fast split, then the column fan-out. `accumulate` is only
+/// meaningful for [`Kind::Mul`] (the only orientation with a public `acc`
+/// surface).
+fn product(
+    kind: Kind,
+    accumulate: bool,
+    a: &Mat,
+    b: &Mat,
+    out: &mut Mat,
+    t: usize,
+    mode: GemmMode,
+) {
+    debug_assert!(!accumulate || matches!(kind, Kind::Mul));
+    match mode {
+        GemmMode::Exact => par_columns(out, t, |j, col| match kind {
+            Kind::Mul => {
+                if !accumulate {
+                    col.fill(0.0);
+                }
+                matmul_acc_col(a, b.col(j), col);
+            }
+            Kind::TMul => t_matmul_col(a, b.col(j), col),
+            Kind::MulT => {
+                col.fill(0.0);
+                matmul_t_col(a, b, j, col);
+            }
+        }),
+        GemmMode::Fast => fast_product(kind, accumulate, a, b, out, t),
+    }
+}
+
+/// Fast-mode fan-out: contiguous column blocks of `out` are the per-thread
+/// work units, each computed by one blocked-gemm call over the matching
+/// column (Mul/TMul) or row (MulT) range of `b`. Because the blocked
+/// kernel's per-element arithmetic is invariant under output partitioning
+/// (see [`gemm`]), the result is bit-identical for every thread count.
+fn fast_product(kind: Kind, accumulate: bool, a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
+    let m = out.rows();
+    let cols = out.cols();
+    if cols == 0 {
+        return;
+    }
+    let bview = match kind {
+        Kind::Mul | Kind::TMul => View::of(b),
+        Kind::MulT => View::of(b).transposed(),
+    };
+    let run = |j0: usize, j1: usize, chunk: &mut [f64]| {
+        let av = match kind {
+            Kind::Mul | Kind::MulT => View::of(a),
+            Kind::TMul => View::of(a).transposed(),
+        };
+        gemm::gemm_view(av, bview.col_range(j0, j1), chunk, accumulate);
+    };
+    let t = nthreads.clamp(1, cols);
+    if t == 1 || m == 0 {
+        run(0, cols, out.as_mut_slice());
+        return;
+    }
+    let block = (cols + t - 1) / t;
+    let runref = &run;
+    std::thread::scope(|s| {
+        let mut chunks = out.as_mut_slice().chunks_mut(block * m).enumerate();
+        let first = chunks.next();
+        for (ci, chunk) in chunks {
+            let j0 = ci * block;
+            let j1 = j0 + chunk.len() / m;
+            s.spawn(move || runref(j0, j1, chunk));
+        }
+        if let Some((_, chunk)) = first {
+            runref(0, chunk.len() / m, chunk);
+        }
+    });
+}
+
 /// `out = a * b`, parallel over output columns (auto thread count).
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    let t = effective_threads(2 * a.rows() * a.cols() * b.cols(), b.cols());
-    matmul_into_with(a, b, out, t);
+    let mode = gemm::mode();
+    let flops = Kind::Mul.check(a, b, out);
+    product(Kind::Mul, false, a, b, out, effective_threads(flops, out.cols(), mode), mode);
 }
 
 /// `out = a * b` with an explicit worker count.
 pub fn matmul_into_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
-    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    assert_eq!(out.rows(), a.rows());
-    assert_eq!(out.cols(), b.cols());
-    par_columns(out, nthreads, |j, col| {
-        col.fill(0.0);
-        matmul_acc_col(a, b.col(j), col);
-    });
+    Kind::Mul.check(a, b, out);
+    product(Kind::Mul, false, a, b, out, nthreads, gemm::mode());
 }
 
 /// `out += a * b`, parallel over output columns (auto thread count).
 pub fn matmul_acc(a: &Mat, b: &Mat, out: &mut Mat) {
-    let t = effective_threads(2 * a.rows() * a.cols() * b.cols(), b.cols());
-    matmul_acc_with(a, b, out, t);
+    let mode = gemm::mode();
+    let flops = Kind::Mul.check(a, b, out);
+    product(Kind::Mul, true, a, b, out, effective_threads(flops, out.cols(), mode), mode);
 }
 
 /// `out += a * b` with an explicit worker count.
 pub fn matmul_acc_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
-    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    assert_eq!(out.rows(), a.rows());
-    assert_eq!(out.cols(), b.cols());
-    par_columns(out, nthreads, |j, col| {
-        matmul_acc_col(a, b.col(j), col);
-    });
+    Kind::Mul.check(a, b, out);
+    product(Kind::Mul, true, a, b, out, nthreads, gemm::mode());
 }
 
 /// `a * b` allocating, parallel over output columns.
@@ -172,18 +311,15 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// `out = aᵀ * b`, parallel over output columns (auto thread count).
 pub fn t_matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    let t = effective_threads(2 * a.rows() * a.cols() * b.cols(), b.cols());
-    t_matmul_into_with(a, b, out, t);
+    let mode = gemm::mode();
+    let flops = Kind::TMul.check(a, b, out);
+    product(Kind::TMul, false, a, b, out, effective_threads(flops, out.cols(), mode), mode);
 }
 
 /// `out = aᵀ * b` with an explicit worker count.
 pub fn t_matmul_into_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
-    assert_eq!(a.rows(), b.rows(), "t_matmul shape mismatch");
-    assert_eq!(out.rows(), a.cols());
-    assert_eq!(out.cols(), b.cols());
-    par_columns(out, nthreads, |j, col| {
-        t_matmul_col(a, b.col(j), col);
-    });
+    Kind::TMul.check(a, b, out);
+    product(Kind::TMul, false, a, b, out, nthreads, gemm::mode());
 }
 
 /// `aᵀ * b` allocating, parallel over output columns.
@@ -195,19 +331,15 @@ pub fn t_matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// `out = a * bᵀ`, parallel over output columns (auto thread count).
 pub fn matmul_t_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    let t = effective_threads(2 * a.rows() * a.cols() * b.rows(), b.rows());
-    matmul_t_into_with(a, b, out, t);
+    let mode = gemm::mode();
+    let flops = Kind::MulT.check(a, b, out);
+    product(Kind::MulT, false, a, b, out, effective_threads(flops, out.cols(), mode), mode);
 }
 
 /// `out = a * bᵀ` with an explicit worker count.
 pub fn matmul_t_into_with(a: &Mat, b: &Mat, out: &mut Mat, nthreads: usize) {
-    assert_eq!(a.cols(), b.cols(), "matmul_t shape mismatch");
-    assert_eq!(out.rows(), a.rows());
-    assert_eq!(out.cols(), b.rows());
-    par_columns(out, nthreads, |j, col| {
-        col.fill(0.0);
-        matmul_t_col(a, b, j, col);
-    });
+    Kind::MulT.check(a, b, out);
+    product(Kind::MulT, false, a, b, out, nthreads, gemm::mode());
 }
 
 /// `a * bᵀ` allocating, parallel over output columns.
@@ -239,12 +371,64 @@ mod tests {
 
     #[test]
     fn forced_parallel_matches_serial_small() {
+        // exact mode pinned explicitly through the driver: the public
+        // wrappers dispatch on the global knob, and this pin is about the
+        // exact path specifically (fast has its own partition-invariance
+        // pins below and in tests/gemm_path.rs).
         let a = sample(7, 5, 1);
         let b = sample(5, 9, 2);
         let want = a.matmul(&b);
         let mut got = Mat::zeros(7, 9);
-        matmul_into_with(&a, &b, &mut got, 4);
+        product(Kind::Mul, false, &a, &b, &mut got, 4, GemmMode::Exact);
         assert!((&got - &want).max_abs() == 0.0, "parallel path must be bit-identical");
+    }
+
+    #[test]
+    fn fast_path_is_thread_count_invariant() {
+        // the fast-mode analogue of the pin above: any thread count must
+        // reproduce the single-thread blocked result bit-for-bit.
+        let a = sample(23, 37, 5);
+        let b = sample(37, 29, 6);
+        let bt = sample(29, 37, 7);
+        let mut one = Mat::zeros(23, 29);
+        product(Kind::Mul, false, &a, &b, &mut one, 1, GemmMode::Fast);
+        for t in [2, 3, 5, 8] {
+            let mut got = Mat::zeros(23, 29);
+            product(Kind::Mul, false, &a, &b, &mut got, t, GemmMode::Fast);
+            assert!(got == one, "fast Mul threads={t}");
+        }
+        let at = sample(23, 14, 8);
+        let b2 = sample(23, 29, 9);
+        let mut one = Mat::zeros(14, 29);
+        product(Kind::TMul, false, &at, &b2, &mut one, 1, GemmMode::Fast);
+        for t in [2, 4, 7] {
+            let mut got = Mat::zeros(14, 29);
+            product(Kind::TMul, false, &at, &b2, &mut got, t, GemmMode::Fast);
+            assert!(got == one, "fast TMul threads={t}");
+        }
+        let mut one = Mat::zeros(23, 29);
+        product(Kind::MulT, false, &a, &bt, &mut one, 1, GemmMode::Fast);
+        for t in [2, 4, 7] {
+            let mut got = Mat::zeros(23, 29);
+            product(Kind::MulT, false, &a, &bt, &mut got, t, GemmMode::Fast);
+            assert!(got == one, "fast MulT threads={t}");
+        }
+    }
+
+    #[test]
+    fn fast_acc_accumulates_onto_seed() {
+        let a = sample(9, 65, 10);
+        let b = sample(65, 6, 11);
+        let seed = sample(9, 6, 12);
+        let mut got = seed.clone();
+        product(Kind::Mul, true, &a, &b, &mut got, 3, GemmMode::Fast);
+        let mut prod = Mat::zeros(9, 6);
+        product(Kind::Mul, false, &a, &b, &mut prod, 1, GemmMode::Fast);
+        // k = 65 < KC = 256, so the product is a single depth block and the
+        // accumulate path adds exactly one partial onto the seed: acc must
+        // equal seed + prod bitwise.
+        let want = &seed + &prod;
+        assert!((&got - &want).max_abs() == 0.0);
     }
 
     #[test]
@@ -271,5 +455,12 @@ mod tests {
         let a0 = Mat::zeros(0, 3);
         let mut out0 = Mat::zeros(0, 5);
         matmul_into_with(&a0, &sample(3, 5, 4), &mut out0, 4);
+        // both modes must survive the degenerate shapes
+        for mode in [GemmMode::Exact, GemmMode::Fast] {
+            let mut out = Mat::zeros(4, 0);
+            product(Kind::Mul, false, &a, &b, &mut out, 4, mode);
+            let mut out0 = Mat::zeros(0, 5);
+            product(Kind::Mul, false, &a0, &sample(3, 5, 4), &mut out0, 4, mode);
+        }
     }
 }

@@ -118,6 +118,20 @@ fn apply_shards(opts: &Opts) {
     }
 }
 
+/// Apply the panel-gemm knob: `--gemm` flag beats `GDKRON_GEMM` beats
+/// `gram.gemm` in the config; absent everywhere, `exact` — the
+/// bit-identity-pinned serial kernels. The flag installs a process-wide
+/// override ([`gdkron::linalg::gemm::set_global_gemm`]) so
+/// [`gdkron::config::resolve_gemm`] sees it, then the resolved mode is
+/// applied to the dispatch sites via [`gdkron::linalg::gemm::set_mode`].
+fn apply_gemm(opts: &Opts) {
+    let flag = opts.flags.get("gemm").and_then(|v| gdkron::linalg::gemm::parse_gemm_mode(v));
+    if let Some(m) = flag {
+        gdkron::linalg::gemm::set_global_gemm(m);
+    }
+    gdkron::linalg::gemm::set_mode(gdkron::config::resolve_gemm(&opts.config));
+}
+
 fn dispatch(args: &[String]) -> anyhow::Result<()> {
     match args.first().map(String::as_str) {
         Some("exp") => {
@@ -127,6 +141,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let opts = Opts { flags: parse_flags(&args[2..])?, config: Config::default() };
             apply_threads(&opts);
             apply_shards(&opts);
+            apply_gemm(&opts);
             run_experiment(id, &opts)
         }
         Some("run") => {
@@ -141,6 +156,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let opts = Opts { flags: parse_flags(&args[2..])?, config };
             apply_threads(&opts);
             apply_shards(&opts);
+            apply_gemm(&opts);
             run_experiment(&id, &opts)
         }
         Some("artifacts") => {
@@ -192,6 +208,8 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  (1 = serial)\n\
                  gram shard workers: --shards N > GDKRON_SHARDS > gram.shards \
                  (1 = single shard)\n\
+                 panel gemm: --gemm exact|fast > GDKRON_GEMM > gram.gemm \
+                 (exact = default, bit-identity pinned; fast = cache-blocked kernels)\n\
                  remote gram shards: GDKRON_REGISTRY_FILE > gram.registry_file > \
                  GDKRON_REMOTE_SHARDS > gram.remote_shards (empty = in-process); \
                  health knobs: gram.health_interval_ms, gram.reconnect_backoff_ms, \

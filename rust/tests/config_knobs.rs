@@ -10,7 +10,8 @@
 //! * `GDKRON_REGISTRY_FILE` > `gram.registry_file` > unset;
 //! * `gram.remote_timeout_ms` / `gram.remote_gather_factor` /
 //!   `gram.health_interval_ms` / `gram.reconnect_backoff_ms` > defaults,
-//!   with non-positive values rejected.
+//!   with non-positive values rejected;
+//! * `--gemm` > `GDKRON_GEMM` > `gram.gemm` > `exact`.
 //!
 //! Environment-mutating cases are serialized behind a shared mutex (and
 //! restore the prior value on drop), so `cargo test -q` stays race-free no
@@ -20,10 +21,11 @@ use std::sync::{Mutex, MutexGuard};
 
 use gdkron::config::{
     health_interval, reconnect_backoff, remote_gather_factor, remote_shard_timeout,
-    resolve_registry_file, resolve_remote_shards, resolve_shards, Config,
+    resolve_gemm, resolve_registry_file, resolve_remote_shards, resolve_shards, Config,
 };
 use gdkron::gram::remote::RESULT_TIMEOUT_FACTOR;
 use gdkron::gram::sharded::{clear_global_shards, set_global_shards, MAX_SHARDS};
+use gdkron::linalg::gemm::{clear_global_gemm, set_global_gemm, GemmMode};
 
 /// Serializes every test that touches the process environment or the
 /// process-global `--shards` override.
@@ -97,6 +99,40 @@ fn shards_cli_beats_env_beats_config_beats_default() {
     // a malformed env value falls through to the config level
     let _e3 = EnvGuard::set("GDKRON_SHARDS", "zonk");
     assert_eq!(resolve_shards(&cfg), 6);
+}
+
+#[test]
+fn gemm_cli_beats_env_beats_config_beats_default() {
+    let _lock = env_lock();
+    let cfg = Config::from_str("[gram]\ngemm = \"fast\"\n").unwrap();
+
+    // default: no knob anywhere → exact (every bit-identity pin intact)
+    let _e = EnvGuard::unset("GDKRON_GEMM");
+    clear_global_gemm();
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(resolve_gemm(&empty), GemmMode::Exact);
+
+    // config beats default
+    assert_eq!(resolve_gemm(&cfg), GemmMode::Fast);
+
+    // env beats config (case/whitespace-insensitive)
+    let _e2 = EnvGuard::set("GDKRON_GEMM", " Exact ");
+    assert_eq!(resolve_gemm(&cfg), GemmMode::Exact);
+
+    // CLI (process-global override) beats env
+    set_global_gemm(GemmMode::Fast);
+    assert_eq!(resolve_gemm(&cfg), GemmMode::Fast);
+
+    // clearing the override falls back to the env level again
+    clear_global_gemm();
+    assert_eq!(resolve_gemm(&cfg), GemmMode::Exact);
+
+    // a malformed env value falls through to the config level
+    let _e3 = EnvGuard::set("GDKRON_GEMM", "zonk");
+    assert_eq!(resolve_gemm(&cfg), GemmMode::Fast);
+    // ... and a malformed config value falls through to the default
+    let bad = Config::from_str("[gram]\ngemm = \"turbo\"\n").unwrap();
+    assert_eq!(resolve_gemm(&bad), GemmMode::Exact);
 }
 
 #[test]

@@ -1,0 +1,216 @@
+//! Property pins for the two panel-gemm paths (`gram.gemm = exact | fast`).
+//!
+//! Shape sweep over `m, k, n ∈ {0, 1, 7, 64, 257}` — empty, degenerate,
+//! sub-tile, one-tile, and multi-block (257 crosses the `KC = 256` depth
+//! boundary, 64 crosses `MR`/`NR` register tiles):
+//!
+//! * **Exact-path bit-identity:** the serial `Mat` kernels are re-derived
+//!   here as independent in-test oracles (the 4-wide SAXPY accumulation,
+//!   the per-entry column dots, the k-outer rank-1 sweep — transcribed,
+//!   not called) and `Mat::{matmul, t_matmul, matmul_t}` must match them
+//!   **bitwise**. This pins the exact reference kernels against silent
+//!   drift: every pre-existing bit-identity guarantee in the serving path
+//!   rests on them.
+//! * **Fast-path accuracy:** every `linalg::gemm` entry point must sit
+//!   within the pinned entrywise budget `8·k·ε·(|A|·|B|)` of the exact
+//!   result (the contract documented on `linalg::gemm`).
+//! * **Fast-path determinism:** partitioning a product over columns (or
+//!   over the transposed operand's rows) must reproduce the unpartitioned
+//!   result bit-for-bit — the property the thread-count / shard-count /
+//!   transport bit-identity pins rely on in fast mode.
+//!
+//! These tests use only the mode-free public surfaces (`Mat` methods are
+//! always exact; `gemm::*` entry points are always blocked), so they are
+//! independent of the process-global `gram.gemm` knob and run unchanged in
+//! both CI legs.
+
+use gdkron::linalg::{gemm, Mat};
+use gdkron::rng::Rng;
+
+const SIZES: [usize; 5] = [0, 1, 7, 64, 257];
+
+fn sample(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.gauss())
+}
+
+// ---------------------------------------------------------------------------
+// Independent oracles: the serial kernels as they were before the fast path
+// landed, transcribed rather than called, so `Mat` drifting would fail here.
+// ---------------------------------------------------------------------------
+
+/// Column-major SAXPY `a·b`, 4-wide rank-1 updates with zero-skip. The
+/// 4-term update is summed first and folded into the output with a single
+/// add — the same rounding sequence as the production kernel.
+fn oracle_matmul(a: &Mat, b: &Mat) -> Mat {
+    let (m, kc, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    for j in 0..n {
+        let mut k = 0;
+        while k + 4 <= kc {
+            let (b0, b1, b2, b3) = (b[(k, j)], b[(k + 1, j)], b[(k + 2, j)], b[(k + 3, j)]);
+            if b0 == 0.0 && b1 == 0.0 && b2 == 0.0 && b3 == 0.0 {
+                k += 4;
+                continue;
+            }
+            for i in 0..m {
+                let upd = a[(i, k)] * b0
+                    + a[(i, k + 1)] * b1
+                    + a[(i, k + 2)] * b2
+                    + a[(i, k + 3)] * b3;
+                out[(i, j)] += upd;
+            }
+            k += 4;
+        }
+        while k < kc {
+            let bk = b[(k, j)];
+            if bk != 0.0 {
+                for i in 0..m {
+                    out[(i, j)] += a[(i, k)] * bk;
+                }
+            }
+            k += 1;
+        }
+    }
+    out
+}
+
+/// `aᵀ·b` as per-entry sequential column dots (zero-initialized fold).
+fn oracle_t_matmul(a: &Mat, b: &Mat) -> Mat {
+    let (kc, m, n) = (a.rows(), a.cols(), b.cols());
+    Mat::from_fn(m, n, |i, j| {
+        let mut s = 0.0;
+        for t in 0..kc {
+            s += a[(t, i)] * b[(t, j)];
+        }
+        s
+    })
+}
+
+/// `a·bᵀ` as the k-outer rank-1 sweep with zero-skip.
+fn oracle_matmul_t(a: &Mat, b: &Mat) -> Mat {
+    let (m, kc, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Mat::zeros(m, n);
+    for k in 0..kc {
+        for j in 0..n {
+            let bjk = b[(j, k)];
+            if bjk == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                out[(i, j)] += a[(i, k)] * bjk;
+            }
+        }
+    }
+    out
+}
+
+fn assert_within_bound(fast: &Mat, exact: &Mat, abs_prod: &Mat, k: usize, what: &str) {
+    assert_eq!((fast.rows(), fast.cols()), (exact.rows(), exact.cols()), "{what}: shape");
+    for j in 0..fast.cols() {
+        for i in 0..fast.rows() {
+            let bound =
+                8.0 * (k.max(1) as f64) * f64::EPSILON * abs_prod[(i, j)].abs().max(1e-300);
+            let err = (fast[(i, j)] - exact[(i, j)]).abs();
+            assert!(err <= bound, "{what}: entry ({i},{j}) error {err:e} > bound {bound:e}");
+        }
+    }
+}
+
+#[test]
+fn exact_kernels_are_bit_identical_to_the_prior_serial_forms() {
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &n in &SIZES {
+                let a = sample(m, k, 1 + (m * 131 + k * 17 + n) as u64);
+                let b = sample(k, n, 2 + (m + k * 29 + n * 5) as u64);
+                assert!(a.matmul(&b) == oracle_matmul(&a, &b), "matmul m={m} k={k} n={n}");
+                let at = sample(k, m, 3 + (m * 7 + k + n * 11) as u64);
+                assert!(
+                    at.t_matmul(&b) == oracle_t_matmul(&at, &b),
+                    "t_matmul m={m} k={k} n={n}"
+                );
+                let bt = sample(n, k, 4 + (m * 3 + k * 13 + n) as u64);
+                assert!(
+                    a.matmul_t(&bt) == oracle_matmul_t(&a, &bt),
+                    "matmul_t m={m} k={k} n={n}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_path_meets_the_pinned_error_bound_on_every_entry_point() {
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &n in &SIZES {
+                let a = sample(m, k, 10 + (m * 101 + k * 3 + n) as u64);
+                let b = sample(k, n, 20 + (m + k * 7 + n * 31) as u64);
+                let (aa, ab) = (a.map(f64::abs), b.map(f64::abs));
+
+                let mut fast = Mat::zeros(m, n);
+                gemm::matmul_into(&a, &b, &mut fast);
+                let abs_prod = aa.matmul(&ab);
+                assert_within_bound(&fast, &a.matmul(&b), &abs_prod, k, "matmul_into");
+
+                // acc: seeded accumulate == seed + product contribution,
+                // within the same budget of exact acc on the same seed
+                let seed = sample(m, n, 30 + (m + n) as u64);
+                let mut acc = seed.clone();
+                gemm::matmul_acc(&a, &b, &mut acc);
+                let mut exact_acc = seed.clone();
+                a.matmul_acc(&b, &mut exact_acc);
+                // the accumulator's own roundings scale with |seed| too
+                let acc_abs = &seed.map(f64::abs) + &abs_prod;
+                assert_within_bound(&acc, &exact_acc, &acc_abs, k, "matmul_acc");
+
+                let at = sample(k, m, 40 + (m * 19 + k + n) as u64);
+                let mut tfast = Mat::zeros(m, n);
+                gemm::t_matmul_into(&at, &b, &mut tfast);
+                let t_abs = at.map(f64::abs).t_matmul(&ab);
+                assert_within_bound(&tfast, &at.t_matmul(&b), &t_abs, k, "t_matmul_into");
+
+                let bt = sample(n, k, 50 + (m + k * 23 + n) as u64);
+                let mut ufast = Mat::zeros(m, n);
+                gemm::matmul_t_into(&a, &bt, &mut ufast);
+                let u_abs = aa.matmul_t(&bt.map(f64::abs));
+                assert_within_bound(&ufast, &a.matmul_t(&bt), &u_abs, k, "matmul_t_into");
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_path_is_partition_invariant_bitwise() {
+    // spans the KC = 256 depth boundary and both register-tile edges
+    let (m, k, n) = (70, 300, 23);
+    let a = sample(m, k, 7);
+    let b = sample(k, n, 8);
+    let mut whole = Mat::zeros(m, n);
+    gemm::matmul_into(&a, &b, &mut whole);
+
+    // column partition: any split of B's columns concatenates bitwise
+    for split in [1, 7, n / 2, n - 1] {
+        let (bl, br) = (b.block(0, 0, k, split), b.block(0, split, k, n - split));
+        let mut cl = Mat::zeros(m, split);
+        let mut cr = Mat::zeros(m, n - split);
+        gemm::matmul_into(&a, &bl, &mut cl);
+        gemm::matmul_into(&a, &br, &mut cr);
+        assert!(cl.hcat(&cr) == whole, "column split {split} not bit-identical");
+    }
+
+    // row partition (via the transpose entry point: A's columns are the
+    // output rows — the shard row-block case)
+    let at = sample(k, m, 9);
+    let mut twhole = Mat::zeros(m, n);
+    gemm::t_matmul_into(&at, &b, &mut twhole);
+    let split = 27;
+    let (al, ar) = (at.block(0, 0, k, split), at.block(0, split, k, m - split));
+    let mut tl = Mat::zeros(split, n);
+    let mut tr = Mat::zeros(m - split, n);
+    gemm::t_matmul_into(&al, &b, &mut tl);
+    gemm::t_matmul_into(&ar, &b, &mut tr);
+    let stacked = Mat::from_fn(m, n, |i, j| if i < split { tl[(i, j)] } else { tr[(i - split, j)] });
+    assert!(stacked == twhole, "row split not bit-identical");
+}
