@@ -376,6 +376,340 @@ fn resolve_threads_from(config: &Config, env_val: Option<&str>) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// WAL / failover knobs (`docs/CONFIG.md`, `docs/OPERATIONS.md`)
+
+/// The launcher's `--wal` override, installed process-wide so
+/// [`resolve_wal_path`] — and through it `NativeEngine::from_config` — sees
+/// the flag-beats-env-beats-config precedence every other knob follows.
+static CLI_WAL_PATH: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
+
+/// The launcher's `--lease` override (see [`CLI_WAL_PATH`]).
+static CLI_LEASE_PATH: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
+
+/// Install the launcher's `--wal` flag value.
+pub fn set_cli_wal_path(path: Option<String>) {
+    *CLI_WAL_PATH.lock().unwrap_or_else(|e| e.into_inner()) = path;
+}
+
+/// Install the launcher's `--lease` flag value.
+pub fn set_cli_lease_path(path: Option<String>) {
+    *CLI_LEASE_PATH.lock().unwrap_or_else(|e| e.into_inner()) = path;
+}
+
+/// Resolve the coordinator WAL base path ([`crate::coordinator::wal`]; the
+/// snapshot sidecar derives as `<path>.snap`).
+///
+/// Priority: the launcher's `--wal` flag, then the `GDKRON_WAL_PATH`
+/// environment variable, then the `server.wal_path` config key; blank
+/// values fall through. `None` means no WAL — the engine serves without
+/// durability, exactly as before the WAL existed.
+pub fn resolve_wal_path(config: &Config) -> Option<std::path::PathBuf> {
+    resolve_wal_path_from(
+        config,
+        std::env::var("GDKRON_WAL_PATH").ok().as_deref(),
+        CLI_WAL_PATH.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+    )
+}
+
+/// Pure core of [`resolve_wal_path`] (env/CLI values injected for
+/// testability).
+fn resolve_wal_path_from(
+    config: &Config,
+    env_val: Option<&str>,
+    cli: Option<String>,
+) -> Option<std::path::PathBuf> {
+    if let Some(p) = cli {
+        let t = p.trim();
+        if !t.is_empty() {
+            return Some(std::path::PathBuf::from(t));
+        }
+    }
+    if let Some(v) = env_val {
+        let t = v.trim();
+        if !t.is_empty() {
+            return Some(std::path::PathBuf::from(t));
+        }
+    }
+    config
+        .str("server.wal_path")
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(std::path::PathBuf::from)
+}
+
+/// Resolve the hosting-lease file path
+/// ([`crate::gram::registry::LeaseKeeper`]).
+///
+/// Priority: the launcher's `--lease` flag, then `GDKRON_LEASE_PATH`, then
+/// the `server.lease_path` config key; absent everywhere, the path derives
+/// from the WAL as `<wal_path>.lease` (no WAL → no lease: there is nothing
+/// for a standby to replay, so fencing has nothing to protect).
+pub fn resolve_lease_path(config: &Config) -> Option<std::path::PathBuf> {
+    resolve_lease_path_from(
+        config,
+        std::env::var("GDKRON_LEASE_PATH").ok().as_deref(),
+        CLI_LEASE_PATH.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        resolve_wal_path(config),
+    )
+}
+
+/// Pure core of [`resolve_lease_path`] (env/CLI/WAL values injected for
+/// testability).
+fn resolve_lease_path_from(
+    config: &Config,
+    env_val: Option<&str>,
+    cli: Option<String>,
+    wal: Option<std::path::PathBuf>,
+) -> Option<std::path::PathBuf> {
+    if let Some(p) = cli {
+        let t = p.trim();
+        if !t.is_empty() {
+            return Some(std::path::PathBuf::from(t));
+        }
+    }
+    if let Some(v) = env_val {
+        let t = v.trim();
+        if !t.is_empty() {
+            return Some(std::path::PathBuf::from(t));
+        }
+    }
+    if let Some(p) = config.str("server.lease_path").map(str::trim).filter(|s| !s.is_empty()) {
+        return Some(std::path::PathBuf::from(p));
+    }
+    wal.map(|w| {
+        let mut s = w.into_os_string();
+        s.push(".lease");
+        std::path::PathBuf::from(s)
+    })
+}
+
+/// Snapshot-compaction interval in WAL records
+/// (`server.wal_snapshot_interval`, default 64 — one snapshot per `K̂′⁻¹`
+/// refresh period). Non-positive values fall back to the default.
+pub fn wal_snapshot_interval(config: &Config) -> u64 {
+    match config.int("server.wal_snapshot_interval") {
+        Some(n) if n > 0 => n as u64,
+        _ => 64,
+    }
+}
+
+/// Hosting-lease time-to-live (`server.lease_ttl_ms`, default 3000 ms): a
+/// primary that fails to renew within it is considered dead and its lease
+/// becomes stealable. Non-positive values fall back to the default.
+pub fn lease_ttl(config: &Config) -> std::time::Duration {
+    let ms = match config.int("server.lease_ttl_ms") {
+        Some(n) if n > 0 => n as u64,
+        _ => 3_000,
+    };
+    std::time::Duration::from_millis(ms)
+}
+
+/// Standby tail-poll interval (`server.standby_poll_ms`, default 100 ms):
+/// how often `gdkron standby` re-reads the WAL tail and checks the lease.
+/// Non-positive values fall back to the default.
+pub fn standby_poll(config: &Config) -> std::time::Duration {
+    let ms = match config.int("server.standby_poll_ms") {
+        Some(n) if n > 0 => n as u64,
+        _ => 100,
+    };
+    std::time::Duration::from_millis(ms)
+}
+
+// ---------------------------------------------------------------------------
+// knob registry
+
+/// One configuration knob, machine-readably: the source of truth behind
+/// the reference table in `docs/CONFIG.md` (`tests/config_docs.rs` asserts
+/// the two stay in sync — a knob added here without a doc row, or a doc
+/// row without a knob, fails CI).
+pub struct Knob {
+    /// Config key (`section.name`).
+    pub key: &'static str,
+    /// Launcher flag that overrides it (highest precedence), if any.
+    pub cli: Option<&'static str>,
+    /// Environment variable that overrides the config key, if any.
+    pub env: Option<&'static str>,
+    /// Default when the knob is absent everywhere.
+    pub default: &'static str,
+    /// Validation / clamping rule.
+    pub validation: &'static str,
+    /// A parseable config snippet exercising the knob (pinned by test).
+    pub sample: &'static str,
+}
+
+/// Every knob the `gdkron` fleet reads, in `docs/CONFIG.md` table order.
+pub const KNOBS: &[Knob] = &[
+    Knob {
+        key: "runtime.threads",
+        cli: Some("--threads"),
+        env: Some("GDKRON_THREADS"),
+        default: "machine default",
+        validation: "clamped to 1..=MAX_THREADS; 0 = fully serial",
+        sample: "[runtime]\nthreads = 4",
+    },
+    Knob {
+        key: "gram.shards",
+        cli: Some("--shards"),
+        env: Some("GDKRON_SHARDS"),
+        default: "1 (single shard)",
+        validation: "clamped to 1..=MAX_SHARDS",
+        sample: "[gram]\nshards = 4",
+    },
+    Knob {
+        key: "gram.gemm",
+        cli: Some("--gemm"),
+        env: Some("GDKRON_GEMM"),
+        default: "exact",
+        validation: "exact | fast, case-insensitive; unparseable = exact",
+        sample: "[gram]\ngemm = \"fast\"",
+    },
+    Knob {
+        key: "gram.remote_shards",
+        cli: None,
+        env: Some("GDKRON_REMOTE_SHARDS"),
+        default: "[] (in-process transport)",
+        validation: "host:port list; blanks dropped; capped at MAX_SHARDS",
+        sample: "[gram]\nremote_shards = [\"10.0.0.1:7070\", \"10.0.0.2:7070\"]",
+    },
+    Knob {
+        key: "gram.registry_file",
+        cli: None,
+        env: Some("GDKRON_REGISTRY_FILE"),
+        default: "unset",
+        validation: "path; blank = unset; beats the static address list",
+        sample: "[gram]\nregistry_file = \"/etc/gdkron/shards\"",
+    },
+    Knob {
+        key: "gram.remote_timeout_ms",
+        cli: None,
+        env: None,
+        default: "5000",
+        validation: "integer > 0; else default",
+        sample: "[gram]\nremote_timeout_ms = 5000",
+    },
+    Knob {
+        key: "gram.remote_gather_factor",
+        cli: None,
+        env: None,
+        default: "12",
+        validation: "integer in 1..=u32::MAX; else default",
+        sample: "[gram]\nremote_gather_factor = 12",
+    },
+    Knob {
+        key: "gram.health_interval_ms",
+        cli: None,
+        env: None,
+        default: "1000",
+        validation: "integer > 0; else default",
+        sample: "[gram]\nhealth_interval_ms = 1000",
+    },
+    Knob {
+        key: "gram.reconnect_backoff_ms",
+        cli: None,
+        env: None,
+        default: "500",
+        validation: "integer > 0; else default (doubles up to MAX_BACKOFF)",
+        sample: "[gram]\nreconnect_backoff_ms = 500",
+    },
+    Knob {
+        key: "gp.online",
+        cli: None,
+        env: None,
+        default: "true",
+        validation: "boolean; false forces a cold refit per observation",
+        sample: "[gp]\nonline = true",
+    },
+    Knob {
+        key: "gp.window",
+        cli: None,
+        env: None,
+        default: "0 (unbounded)",
+        validation: "integer >= 0; negatives clamp to 0",
+        sample: "[gp]\nwindow = 256",
+    },
+    Knob {
+        key: "server.max_batch",
+        cli: None,
+        env: None,
+        default: "8",
+        validation: "integer >= 1; else default",
+        sample: "[server]\nmax_batch = 16",
+    },
+    Knob {
+        key: "server.deadline_us",
+        cli: None,
+        env: None,
+        default: "200",
+        validation: "integer >= 0; else default",
+        sample: "[server]\ndeadline_us = 200",
+    },
+    Knob {
+        key: "server.executors",
+        cli: None,
+        env: None,
+        default: "1",
+        validation: "integer >= 1, clamped to MAX_EXECUTORS; else default",
+        sample: "[server]\nexecutors = 4",
+    },
+    Knob {
+        key: "server.max_queue",
+        cli: None,
+        env: None,
+        default: "1024",
+        validation: "integer >= 1; else default",
+        sample: "[server]\nmax_queue = 1024",
+    },
+    Knob {
+        key: "server.wal_path",
+        cli: Some("--wal"),
+        env: Some("GDKRON_WAL_PATH"),
+        default: "unset (no WAL)",
+        validation: "path; blank = unset",
+        sample: "[server]\nwal_path = \"/var/lib/gdkron/coord.wal\"",
+    },
+    Knob {
+        key: "server.wal_fsync",
+        cli: None,
+        env: None,
+        default: "true",
+        validation: "boolean",
+        sample: "[server]\nwal_fsync = true",
+    },
+    Knob {
+        key: "server.wal_snapshot_interval",
+        cli: None,
+        env: None,
+        default: "64",
+        validation: "integer > 0; else default",
+        sample: "[server]\nwal_snapshot_interval = 64",
+    },
+    Knob {
+        key: "server.lease_path",
+        cli: Some("--lease"),
+        env: Some("GDKRON_LEASE_PATH"),
+        default: "<wal_path>.lease",
+        validation: "path; blank = unset; unset without a WAL = no lease",
+        sample: "[server]\nlease_path = \"/var/lib/gdkron/coord.lease\"",
+    },
+    Knob {
+        key: "server.lease_ttl_ms",
+        cli: None,
+        env: None,
+        default: "3000",
+        validation: "integer > 0; else default",
+        sample: "[server]\nlease_ttl_ms = 3000",
+    },
+    Knob {
+        key: "server.standby_poll_ms",
+        cli: None,
+        env: None,
+        default: "100",
+        validation: "integer > 0; else default",
+        sample: "[server]\nstandby_poll_ms = 100",
+    },
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -607,5 +941,104 @@ jitter = 1e-10
         assert_eq!(resolve_threads_from(&empty, None), 0);
         let invalid = Config::from_str("[runtime]\nthreads = -2\n").unwrap();
         assert_eq!(resolve_threads_from(&invalid, None), 0);
+    }
+
+    #[test]
+    fn wal_path_resolution_order() {
+        let cfg = Config::from_str("[server]\nwal_path = \"/var/lib/gdkron/coord.wal\"\n").unwrap();
+        // CLI beats env beats config; all spellings trim
+        assert_eq!(
+            resolve_wal_path_from(&cfg, Some("/env/w"), Some("/cli/w ".into())),
+            Some(std::path::PathBuf::from("/cli/w"))
+        );
+        assert_eq!(
+            resolve_wal_path_from(&cfg, Some(" /env/w"), None),
+            Some(std::path::PathBuf::from("/env/w"))
+        );
+        assert_eq!(
+            resolve_wal_path_from(&cfg, None, None),
+            Some(std::path::PathBuf::from("/var/lib/gdkron/coord.wal"))
+        );
+        // blank CLI/env values fall through rather than meaning "a WAL at ''"
+        assert_eq!(
+            resolve_wal_path_from(&cfg, Some("  "), Some("".into())),
+            Some(std::path::PathBuf::from("/var/lib/gdkron/coord.wal"))
+        );
+        // blank config value means "unset" → no WAL
+        let blank = Config::from_str("[server]\nwal_path = \" \"\n").unwrap();
+        assert_eq!(resolve_wal_path_from(&blank, None, None), None);
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(resolve_wal_path_from(&empty, None, None), None);
+    }
+
+    #[test]
+    fn lease_path_resolution_order_and_wal_derivation() {
+        let cfg = Config::from_str("[server]\nlease_path = \"/etc/gdkron/l\"\n").unwrap();
+        let wal = Some(std::path::PathBuf::from("/var/w.wal"));
+        // CLI beats env beats config beats the derived <wal>.lease
+        assert_eq!(
+            resolve_lease_path_from(&cfg, Some("/env/l"), Some("/cli/l".into()), wal.clone()),
+            Some(std::path::PathBuf::from("/cli/l"))
+        );
+        assert_eq!(
+            resolve_lease_path_from(&cfg, Some("/env/l"), None, wal.clone()),
+            Some(std::path::PathBuf::from("/env/l"))
+        );
+        assert_eq!(
+            resolve_lease_path_from(&cfg, None, None, wal.clone()),
+            Some(std::path::PathBuf::from("/etc/gdkron/l"))
+        );
+        // no explicit knob → derive the sidecar next to the WAL
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(
+            resolve_lease_path_from(&empty, None, None, wal),
+            Some(std::path::PathBuf::from("/var/w.wal.lease"))
+        );
+        // no WAL either → no lease
+        assert_eq!(resolve_lease_path_from(&empty, None, None, None), None);
+    }
+
+    #[test]
+    fn wal_and_lease_timing_knobs_default_and_reject_nonpositive() {
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(wal_snapshot_interval(&empty), 64);
+        assert_eq!(lease_ttl(&empty).as_millis(), 3_000);
+        assert_eq!(standby_poll(&empty).as_millis(), 100);
+        let cfg = Config::from_str(
+            "[server]\nwal_snapshot_interval = 8\nlease_ttl_ms = 250\nstandby_poll_ms = 10\n",
+        )
+        .unwrap();
+        assert_eq!(wal_snapshot_interval(&cfg), 8);
+        assert_eq!(lease_ttl(&cfg).as_millis(), 250);
+        assert_eq!(standby_poll(&cfg).as_millis(), 10);
+        let bad = Config::from_str(
+            "[server]\nwal_snapshot_interval = 0\nlease_ttl_ms = -5\nstandby_poll_ms = 0\n",
+        )
+        .unwrap();
+        assert_eq!(wal_snapshot_interval(&bad), 64);
+        assert_eq!(lease_ttl(&bad).as_millis(), 3_000);
+        assert_eq!(standby_poll(&bad).as_millis(), 100);
+    }
+
+    #[test]
+    fn knob_registry_is_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in KNOBS {
+            assert!(seen.insert(k.key), "duplicate knob key {}", k.key);
+            assert!(k.key.contains('.'), "knob key {} must be section.name", k.key);
+            // every sample must be a parseable config that actually sets the key
+            let c = Config::from_str(k.sample)
+                .unwrap_or_else(|e| panic!("sample for {} does not parse: {e:?}", k.key));
+            assert!(
+                c.str(k.key).is_some()
+                    || c.int(k.key).is_some()
+                    || c.float(k.key).is_some()
+                    || c.bool(k.key).is_some()
+                    || c.str_array(k.key).is_some(),
+                "sample for {} does not set the key it documents",
+                k.key
+            );
+            assert!(!k.default.is_empty() && !k.validation.is_empty());
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! Prediction backends for the surrogate server.
 
+use super::wal::{WalPaths, WalWriter};
 use crate::config::Config;
 use crate::gp::{GradientGp, OnlineGradientGp};
 use crate::linalg::Mat;
@@ -58,6 +59,11 @@ pub struct NativeEngine {
     gp: OnlineGradientGp,
     /// Sliding-window cap (0 = unbounded).
     window: usize,
+    /// Write-ahead log for the observe barrier (`server.wal_path`): when
+    /// attached, every observation is logged durably *before* it is
+    /// applied, and the engine state is snapshot-compacted every
+    /// `server.wal_snapshot_interval` records ([`super::wal`]).
+    wal: Option<WalWriter>,
 }
 
 impl NativeEngine {
@@ -67,7 +73,28 @@ impl NativeEngine {
 
     /// Native engine with a sliding observation window (0 = unbounded).
     pub fn with_window(gp: GradientGp, window: usize) -> Self {
-        NativeEngine { gp: OnlineGradientGp::from_fitted(gp), window }
+        NativeEngine { gp: OnlineGradientGp::from_fitted(gp), window, wal: None }
+    }
+
+    /// Wrap an already-online engine — the promoted-standby path
+    /// ([`super::Standby::promote`]): the replica's replayed state becomes
+    /// the serving state directly, with no cold refit.
+    pub fn from_online(gp: OnlineGradientGp, window: usize) -> Self {
+        NativeEngine { gp, window, wal: None }
+    }
+
+    /// Attach a write-ahead log. The writer should be freshly created from
+    /// *this* engine's state ([`WalWriter::create`]) so the genesis record
+    /// matches what the engine serves.
+    pub fn attach_wal(&mut self, wal: WalWriter) {
+        self.wal = Some(wal);
+    }
+
+    /// Shard the Gram operator across remote registry-managed workers —
+    /// the promoted-standby path claims the fleet at its stolen lease epoch
+    /// through here (`RegistryConfig.remote.claim_epoch`).
+    pub fn set_remote_registry(&mut self, cfg: crate::gram::RegistryConfig) -> anyhow::Result<()> {
+        self.gp.set_remote_registry(cfg)
     }
 
     /// Configure from config keys: `gp.online` (bool, default `true`;
@@ -116,10 +143,11 @@ impl NativeEngine {
                 remote: crate::gram::RemoteOptions {
                     timeout: crate::config::remote_shard_timeout(config),
                     gather_factor: crate::config::remote_gather_factor(config),
+                    claim_epoch: None,
                 },
             };
             match engine.gp.set_remote_registry(cfg) {
-                Ok(()) => return engine,
+                Ok(()) => return engine.with_config_wal(config),
                 Err(e) => eprintln!(
                     "gdkron: remote shard registry unavailable ({e}); \
                      falling back to in-process sharding"
@@ -127,7 +155,27 @@ impl NativeEngine {
             }
         }
         engine.gp.set_shards(crate::config::resolve_shards(config));
-        engine
+        engine.with_config_wal(config)
+    }
+
+    /// Attach the WAL when `server.wal_path` resolves (CLI `--wal` beats
+    /// `GDKRON_WAL_PATH` beats the config key; no path = no WAL). A WAL
+    /// that cannot be created is reported and serving continues without
+    /// durability — an operator decision documented in `docs/OPERATIONS.md`
+    /// (the engine itself is still fully functional).
+    fn with_config_wal(mut self, config: &Config) -> Self {
+        let Some(path) = crate::config::resolve_wal_path(config) else {
+            return self;
+        };
+        let opts = super::wal::WalOptions {
+            fsync: config.bool_or("server.wal_fsync", true),
+            snapshot_interval: crate::config::wal_snapshot_interval(config),
+        };
+        match WalWriter::create(WalPaths::from_base(path), opts, &self.gp, self.window) {
+            Ok(wal) => self.wal = Some(wal),
+            Err(e) => eprintln!("gdkron: WAL unavailable ({e}); serving without durability"),
+        }
+        self
     }
 
     /// Current Gram shard count (1 = unsharded).
@@ -153,12 +201,31 @@ impl Engine for NativeEngine {
         Ok(self.gp.gp().predict_gradients(xq))
     }
     fn observe(&mut self, x: &[f64], g: &[f64]) -> anyhow::Result<()> {
+        // write-ahead: the observation is durable before it is applied, so
+        // a standby replays exactly what this engine attempted — including
+        // updates that deterministically roll back below. A WAL append
+        // failure rejects the observation outright (never apply unlogged
+        // state; prediction service is unaffected).
+        if let Some(wal) = self.wal.as_mut() {
+            wal.log_observe(x, g).map_err(|e| anyhow::anyhow!("WAL append failed: {e}"))?;
+        }
         // atomic window-slide + append: a single solve per streamed
         // observation, and any failure rolls the whole step back so the
         // serving state never ends up half-applied. (This is also the
         // re-attach barrier: a degraded registry-managed shard engine
         // swaps back onto healthy workers here, between solves.)
-        self.gp.observe_windowed(x, g, self.window)
+        self.gp.observe_windowed(x, g, self.window)?;
+        // snapshot compaction rides the barrier too: the engine is
+        // consistent here, and a snapshot failure is non-fatal because the
+        // WAL already covers every record it would have compacted.
+        if let Some(wal) = self.wal.as_mut() {
+            if wal.snapshot_due() {
+                if let Err(e) = wal.write_snapshot(&self.gp) {
+                    eprintln!("gdkron: snapshot failed ({e}); WAL remains authoritative");
+                }
+            }
+        }
+        Ok(())
     }
     fn shard_health(&self) -> Option<ShardHealth> {
         Some(ShardHealth {

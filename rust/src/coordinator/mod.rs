@@ -22,13 +22,22 @@
 //!               server.max_queue)  (batches ∥, observes barrier)
 //! ```
 //!
-//! The serving core is a shared **work bag** ([`scheduler`]): a bounded
+//! The serving core is a shared **work bag** (the `scheduler` module): a bounded
 //! FIFO that `server.executors` threads pull coalesced prediction batches
 //! from, with observations (and shutdown) dispatched as strict barriers.
 //! Admission control answers overload with a fast descriptive error
 //! (`server.max_queue`), and [`ServerMetrics`] carries p50/p99/p999
 //! enqueue→response latency histograms plus queue-depth gauges — see the
 //! serving-core runbook section in the crate docs.
+//!
+//! The coordinator's serving state is durable and replicable: [`wal`]
+//! write-ahead-logs every observe barrier (`server.wal_path`), compacts
+//! into full-state snapshots, and drives a hot standby (`gdkron standby`)
+//! that replays the log through the ordinary engine entry points and takes
+//! over via an epoch-fenced lease steal
+//! ([`crate::gram::registry::LeaseKeeper`] + wire v3 `Claim`) — bitwise
+//! identical state, zero cold refits. See `docs/OPERATIONS.md` for the
+//! failover runbook.
 //!
 //! Substitution note (DESIGN.md §6): the environment has no async runtime
 //! crate, so the coordinator uses `std::thread` + `Mutex`/`Condvar` — the
@@ -41,8 +50,10 @@ mod batcher;
 mod engine;
 mod scheduler;
 mod server;
+pub mod wal;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, NativeEngine, PjrtEngine, ShardHealth};
 pub use scheduler::{LatencyHistogram, SchedulerOptions, MAX_EXECUTORS};
 pub use server::{ServerMetrics, SurrogateClient, SurrogateServer};
+pub use wal::{CatchUpReport, Standby, WalOptions, WalPaths, WalWriter};

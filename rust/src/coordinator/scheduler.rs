@@ -20,6 +20,13 @@
 //! updated one. The shutdown sentinel is a barrier the same way: work ahead
 //! of it is served, everything drained behind it is failed.
 //!
+//! **Durability hook**: because an observation is a barrier, it is also
+//! the WAL commit point — when a WAL is attached
+//! ([`super::engine::NativeEngine::attach_wal`]), the executor appends and
+//! fsyncs the record *before* applying the observe, so the log order equals
+//! the apply order and a standby replaying the WAL (see [`super::wal`])
+//! reconstructs the exact barrier sequence the live engine executed.
+//!
 //! **Admission control**: the bag is bounded by `server.max_queue`
 //! ([`SchedulerOptions::max_queue`]). A push against a full queue is
 //! answered immediately with a descriptive error instead of growing the

@@ -1,0 +1,982 @@
+//! Versioned snapshot + observation WAL, and the hot-standby replica.
+//!
+//! The native engine's conditioning state ([`crate::gp::OnlineGradientGp`])
+//! is long-lived and mutable: losing the coordinator process means losing
+//! the posterior and cold-refitting from whatever the operator can
+//! reconstruct. This module makes the state durable and *replicable*:
+//!
+//! * **WAL** ([`WalWriter`]) — every mutating barrier operation (`observe`,
+//!   `drop_first`, `set_targets`) is appended to an on-disk log *before* it
+//!   is applied (write-ahead ordering), as a length-prefixed record carrying
+//!   a monotonic sequence number. The records reuse the wire codec
+//!   ([`crate::gram::wire`]'s crate-private `Enc`/`Dec`): one framing
+//!   discipline — bit-exact f64s, bounded defensive decode — for sockets
+//!   and files alike.
+//! * **Snapshots** — every `snapshot_interval` records the full
+//!   [`EngineState`] is written to a sidecar file (atomic
+//!   `tmp → fsync → rename`), then the WAL is compacted (truncated back to
+//!   its header). The snapshot pins the sequence number it covers, so a
+//!   crash *between* the rename and the truncation is safe: recovery skips
+//!   WAL records at or below the snapshot's sequence.
+//! * **Standby** ([`Standby`]) — a replica that tails the WAL by byte
+//!   offset and replays records through the *ordinary*
+//!   [`OnlineGradientGp`] entry points: genesis replays the cold fit,
+//!   observes replay [`OnlineGradientGp::observe_windowed`] with the
+//!   recorded window. Replay is the live path by construction, so a
+//!   caught-up standby holds **bitwise identical** engine state — including
+//!   the exact engine's `K̂′⁻¹` bordered-update chain, which the snapshot
+//!   carries through [`EngineState`]. Promotion
+//!   ([`Standby::promote`]) hands the engine over without a cold refit.
+//!
+//! Two invariants make failover exact rather than approximate:
+//!
+//! 1. **Replay ≡ live path.** The standby calls the same entry points the
+//!    primary did, in the same order, with bit-identical inputs (f64s
+//!    travel as bit patterns). Even *failed* updates replay faithfully: the
+//!    primary logs before applying, so a rolled-back observe (duplicate
+//!    point, singular Gram) is in the WAL — and deterministically rolls
+//!    back on the replica too ([`CatchUpReport::apply_errors`] counts
+//!    them).
+//! 2. **The window boundary is recorded.** `gp.window` changes *which*
+//!    observations survive, so the genesis record and every snapshot carry
+//!    it; a standby replays the primary's eviction sequence exactly instead
+//!    of trusting its own configuration (`tests/wal_replica.rs` pins this).
+//!
+//! A partial trailing frame (crash mid-append, or a tail the primary is
+//! still writing) is benign — the standby stops before it and retries on
+//! the next [`Standby::catch_up`]. A *complete* frame that fails to decode
+//! is corruption and surfaces as an error. If the WAL file shrinks below
+//! the consumed offset (snapshot compaction), the standby rescans from the
+//! start; sequence numbers make the rescan idempotent.
+//!
+//! Takeover safety (who *may* serve) is not this module's job: that is the
+//! hosting lease ([`crate::gram::registry::LeaseKeeper`]) plus the wire v3
+//! epoch fence (`Claim`/`ClaimAck`, [`crate::gram::remote`]), which
+//! together guarantee a zombie primary cannot corrupt worker state after
+//! its lease is stolen. `docs/OPERATIONS.md` walks the full failover
+//! procedure; `tests/chaos_failover.rs` rehearses it end to end.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::gp::{EngineState, FitMethod, FitOptions, OnlineGradientGp};
+use crate::gram::wire::{write_frame, Dec, Enc, MAX_FRAME_BYTES};
+use crate::gram::Metric;
+use crate::kernels::ScalarKernel;
+use crate::linalg::Mat;
+
+/// `b"GDKL"` as a little-endian u32 — the WAL header magic.
+pub const WAL_MAGIC: u32 = u32::from_le_bytes(*b"GDKL");
+
+/// `b"GDKS"` as a little-endian u32 — the snapshot magic.
+pub const SNAP_MAGIC: u32 = u32::from_le_bytes(*b"GDKS");
+
+/// On-disk format version; bumped on any record-layout change.
+pub const WAL_FORMAT_VERSION: u16 = 1;
+
+// Record tags. Disjoint from the live wire-protocol tag space on purpose:
+// a WAL accidentally fed to a socket decoder (or vice versa) fails fast on
+// an unknown tag instead of misparsing.
+const TAG_WAL_HEADER: u8 = 0x57; // 'W'
+const TAG_GENESIS: u8 = 0x10;
+const TAG_OBSERVE: u8 = 0x11;
+const TAG_DROP_FIRST: u8 = 0x12;
+const TAG_SET_TARGETS: u8 = 0x13;
+const TAG_SNAPSHOT: u8 = 0x20;
+
+/// One logged barrier operation. Every record carries the monotonic
+/// sequence number assigned at append time (genesis is `seq = 1`).
+pub enum WalRecord {
+    /// The cold-start fit inputs — everything a replica needs to reproduce
+    /// the primary's initial [`OnlineGradientGp::fit`] bit for bit (the
+    /// solver *method* is deliberately absent: CG tolerances and trait
+    /// objects don't serialize, so the standby supplies it and the record
+    /// pins the kernel name to fail loudly on a mismatch).
+    Genesis {
+        seq: u64,
+        /// The primary's sliding-window cap (0 = unbounded) — recorded so
+        /// the replica replays the same eviction sequence.
+        window: u64,
+        kernel_name: String,
+        metric: Metric,
+        noise: f64,
+        center: Option<Vec<f64>>,
+        prior_grad_mean: Option<Vec<f64>>,
+        x: Mat,
+        g: Mat,
+    },
+    /// One streamed observation (replayed through `observe_windowed` with
+    /// the genesis/snapshot window).
+    Observe { seq: u64, x: Vec<f64>, g: Vec<f64> },
+    /// An explicit window slide.
+    DropFirst { seq: u64 },
+    /// A wholesale right-hand-side replacement (the GP-X re-target path).
+    SetTargets { seq: u64, g: Mat },
+}
+
+impl WalRecord {
+    /// The record's sequence number.
+    pub fn seq(&self) -> u64 {
+        match self {
+            WalRecord::Genesis { seq, .. }
+            | WalRecord::Observe { seq, .. }
+            | WalRecord::DropFirst { seq }
+            | WalRecord::SetTargets { seq, .. } => *seq,
+        }
+    }
+
+    fn encode(&self) -> (u8, Vec<u8>) {
+        let mut e = Enc::new();
+        let tag = match self {
+            WalRecord::Genesis {
+                seq,
+                window,
+                kernel_name,
+                metric,
+                noise,
+                center,
+                prior_grad_mean,
+                x,
+                g,
+            } => {
+                e.u64(*seq);
+                e.u64(*window);
+                e.string(kernel_name);
+                e.metric(metric);
+                e.f64(*noise);
+                enc_opt_vec(&mut e, center);
+                enc_opt_vec(&mut e, prior_grad_mean);
+                e.mat(x);
+                e.mat(g);
+                TAG_GENESIS
+            }
+            WalRecord::Observe { seq, x, g } => {
+                e.u64(*seq);
+                e.vec_f64(x);
+                e.vec_f64(g);
+                TAG_OBSERVE
+            }
+            WalRecord::DropFirst { seq } => {
+                e.u64(*seq);
+                TAG_DROP_FIRST
+            }
+            WalRecord::SetTargets { seq, g } => {
+                e.u64(*seq);
+                e.mat(g);
+                TAG_SET_TARGETS
+            }
+        };
+        (tag, e.buf)
+    }
+
+    /// Decode one record payload. Defensive like the wire decoders: short
+    /// payloads, inflated lengths and trailing bytes are clean errors.
+    pub fn decode(tag: u8, payload: &[u8]) -> anyhow::Result<Self> {
+        let mut d = Dec::new(payload);
+        let rec = match tag {
+            TAG_GENESIS => WalRecord::Genesis {
+                seq: d.u64()?,
+                window: d.u64()?,
+                kernel_name: d.string()?,
+                metric: d.metric()?,
+                noise: d.f64()?,
+                center: dec_opt_vec(&mut d)?,
+                prior_grad_mean: dec_opt_vec(&mut d)?,
+                x: d.mat()?,
+                g: d.mat()?,
+            },
+            TAG_OBSERVE => {
+                WalRecord::Observe { seq: d.u64()?, x: d.vec_f64()?, g: d.vec_f64()? }
+            }
+            TAG_DROP_FIRST => WalRecord::DropFirst { seq: d.u64()? },
+            TAG_SET_TARGETS => WalRecord::SetTargets { seq: d.u64()?, g: d.mat()? },
+            t => anyhow::bail!("unknown WAL record tag {t:#04x}"),
+        };
+        d.finish()?;
+        Ok(rec)
+    }
+}
+
+fn enc_opt_vec(e: &mut Enc, v: &Option<Vec<f64>>) {
+    match v {
+        Some(v) => {
+            e.bool(true);
+            e.vec_f64(v);
+        }
+        None => e.bool(false),
+    }
+}
+
+fn dec_opt_vec(d: &mut Dec) -> anyhow::Result<Option<Vec<f64>>> {
+    Ok(if d.bool()? { Some(d.vec_f64()?) } else { None })
+}
+
+fn enc_opt_mat(e: &mut Enc, m: &Option<Mat>) {
+    match m {
+        Some(m) => {
+            e.bool(true);
+            e.mat(m);
+        }
+        None => e.bool(false),
+    }
+}
+
+fn dec_opt_mat(d: &mut Dec) -> anyhow::Result<Option<Mat>> {
+    Ok(if d.bool()? { Some(d.mat()?) } else { None })
+}
+
+// ---------------------------------------------------------------------------
+// snapshot codec
+
+/// A point-in-time engine snapshot: the sequence number it covers, the
+/// window boundary at that point, the kernel-name pin, and the complete
+/// [`EngineState`].
+pub struct SnapshotData {
+    pub seq: u64,
+    pub window: u64,
+    pub kernel_name: String,
+    pub state: EngineState,
+}
+
+/// Encode a snapshot as a single self-contained frame (the entire file).
+pub fn encode_snapshot(s: &SnapshotData) -> anyhow::Result<Vec<u8>> {
+    let mut e = Enc::new();
+    e.u32(SNAP_MAGIC);
+    e.u16(WAL_FORMAT_VERSION);
+    e.u64(s.seq);
+    e.u64(s.window);
+    e.string(&s.kernel_name);
+    let st = &s.state;
+    e.class(st.factors.class);
+    e.metric(&st.factors.metric);
+    e.f64(st.factors.noise);
+    enc_opt_vec(&mut e, &st.factors.center);
+    e.mat(&st.factors.xt);
+    e.mat(&st.factors.lam_xt);
+    e.mat(&st.factors.r);
+    e.mat(&st.factors.kp_eff);
+    e.mat(&st.factors.kpp_eff);
+    e.mat(&st.factors.lam_xt_t);
+    e.mat(&st.factors.h);
+    e.mat(&st.x);
+    e.mat(&st.g);
+    e.mat(&st.z);
+    enc_opt_mat(&mut e, &st.kinv);
+    e.u64(st.kinv_age as u64);
+    enc_opt_vec(&mut e, &st.prior_grad_mean);
+    e.u64(st.cold_refits as u64);
+    let mut out = Vec::new();
+    write_frame(&mut out, TAG_SNAPSHOT, &e.buf)?;
+    Ok(out)
+}
+
+/// Decode a snapshot file. The file must hold exactly one complete
+/// `TAG_SNAPSHOT` frame — anything else (truncation of the atomic
+/// rename target, wrong magic, trailing bytes) is corruption.
+pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<SnapshotData> {
+    let (tag, payload, consumed) = next_frame(bytes, 0)?
+        .ok_or_else(|| anyhow::anyhow!("snapshot file truncated: no complete frame"))?;
+    anyhow::ensure!(tag == TAG_SNAPSHOT, "not a snapshot file (frame tag {tag:#04x})");
+    anyhow::ensure!(consumed == bytes.len(), "trailing bytes after the snapshot frame");
+    let mut d = Dec::new(payload);
+    let magic = d.u32()?;
+    anyhow::ensure!(magic == SNAP_MAGIC, "bad snapshot magic {magic:#010x}");
+    let version = d.u16()?;
+    anyhow::ensure!(
+        version == WAL_FORMAT_VERSION,
+        "snapshot format v{version} is not supported (this build speaks v{WAL_FORMAT_VERSION})"
+    );
+    let seq = d.u64()?;
+    let window = d.u64()?;
+    let kernel_name = d.string()?;
+    let class = d.class()?;
+    let metric = d.metric()?;
+    let noise = d.f64()?;
+    let center = dec_opt_vec(&mut d)?;
+    let xt = d.mat()?;
+    let lam_xt = d.mat()?;
+    let r = d.mat()?;
+    let kp_eff = d.mat()?;
+    let kpp_eff = d.mat()?;
+    let lam_xt_t = d.mat()?;
+    let h = d.mat()?;
+    let factors = crate::gram::GramFactors {
+        class,
+        xt,
+        lam_xt,
+        r,
+        kp_eff,
+        kpp_eff,
+        lam_xt_t,
+        h,
+        metric,
+        noise,
+        center,
+    };
+    let x = d.mat()?;
+    let g = d.mat()?;
+    let z = d.mat()?;
+    let kinv = dec_opt_mat(&mut d)?;
+    let kinv_age = usize::try_from(d.u64()?)
+        .map_err(|_| anyhow::anyhow!("snapshot kinv_age overflows this platform"))?;
+    let prior_grad_mean = dec_opt_vec(&mut d)?;
+    let cold_refits = usize::try_from(d.u64()?)
+        .map_err(|_| anyhow::anyhow!("snapshot cold_refits overflows this platform"))?;
+    d.finish()?;
+    let state =
+        EngineState { factors, x, g, z, kinv, kinv_age, prior_grad_mean, cold_refits };
+    Ok(SnapshotData { seq, window, kernel_name, state })
+}
+
+// ---------------------------------------------------------------------------
+// frame scanning (slice-based, partial-tail tolerant)
+
+/// Parse the frame starting at `pos`. `Ok(None)` when the buffer ends
+/// cleanly at `pos` **or** holds only a partial frame (benign: a crash
+/// mid-append, or a tail the primary is still writing). A declared length
+/// above [`MAX_FRAME_BYTES`] is corruption — rejected *before* any slicing
+/// or allocation.
+fn next_frame(buf: &[u8], pos: usize) -> anyhow::Result<Option<(u8, &[u8], usize)>> {
+    if buf.len() - pos < 5 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]);
+    let tag = buf[pos + 4];
+    anyhow::ensure!(
+        len <= MAX_FRAME_BYTES,
+        "corrupt WAL frame: {len} bytes declared (tag {tag:#04x})"
+    );
+    let body = pos + 5;
+    let end = body + len as usize;
+    if end > buf.len() {
+        return Ok(None); // partial tail
+    }
+    Ok(Some((tag, &buf[body..end], end)))
+}
+
+/// Validate a WAL header frame payload (magic + version).
+fn check_header(payload: &[u8]) -> anyhow::Result<()> {
+    let mut d = Dec::new(payload);
+    let magic = d.u32()?;
+    anyhow::ensure!(magic == WAL_MAGIC, "bad WAL magic {magic:#010x}");
+    let version = d.u16()?;
+    anyhow::ensure!(
+        version == WAL_FORMAT_VERSION,
+        "WAL format v{version} is not supported (this build speaks v{WAL_FORMAT_VERSION})"
+    );
+    d.finish()
+}
+
+/// Scan a WAL byte buffer from the start: validate the header, decode every
+/// complete record, and return them with the number of bytes consumed
+/// (everything before the first partial frame). Decode failures on
+/// *complete* frames are corruption errors; a partial tail is not.
+pub fn read_wal_records(bytes: &[u8]) -> anyhow::Result<(Vec<WalRecord>, usize)> {
+    let mut records = Vec::new();
+    let mut pos = 0;
+    let mut saw_header = false;
+    while let Some((tag, payload, end)) = next_frame(bytes, pos)? {
+        if !saw_header {
+            anyhow::ensure!(
+                tag == TAG_WAL_HEADER,
+                "missing WAL header: first frame has tag {tag:#04x}"
+            );
+            check_header(payload)?;
+            saw_header = true;
+        } else {
+            records.push(WalRecord::decode(tag, payload)?);
+        }
+        pos = end;
+    }
+    anyhow::ensure!(
+        saw_header || bytes.len() < 5,
+        "missing WAL header: file starts with a partial non-header frame"
+    );
+    Ok((records, pos))
+}
+
+// ---------------------------------------------------------------------------
+// writer
+
+/// WAL tuning knobs (config: `server.wal_fsync`, `server.wal_snapshot_interval`).
+#[derive(Clone, Copy, Debug)]
+pub struct WalOptions {
+    /// `fsync` after every appended record (default `true`). Turning it off
+    /// trades the last few records on power loss for append latency; the
+    /// format stays crash-consistent either way (a torn tail is skipped).
+    pub fsync: bool,
+    /// Write a snapshot and compact the WAL every this-many records
+    /// (default 64 — one snapshot per `K̂′⁻¹` refresh period, so snapshot
+    /// cost amortizes like the refresh does).
+    pub snapshot_interval: u64,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        WalOptions { fsync: true, snapshot_interval: 64 }
+    }
+}
+
+/// The WAL file pair: the log itself and its snapshot sidecar.
+#[derive(Clone, Debug)]
+pub struct WalPaths {
+    pub wal: PathBuf,
+    pub snap: PathBuf,
+}
+
+impl WalPaths {
+    /// Derive the sidecar path from the WAL base path (`<base>.snap`).
+    pub fn from_base(base: impl Into<PathBuf>) -> Self {
+        let wal: PathBuf = base.into();
+        let mut snap = wal.clone().into_os_string();
+        snap.push(".snap");
+        WalPaths { wal, snap: snap.into() }
+    }
+}
+
+/// The primary-side appender. Created fresh at engine start (a coordinator
+/// taking over from a snapshot *re-creates* its WAL — genesis or snapshot,
+/// never an append to an inherited log), then fed every barrier operation
+/// **before** it is applied.
+pub struct WalWriter {
+    file: File,
+    paths: WalPaths,
+    opts: WalOptions,
+    /// Last sequence number appended (genesis = 1).
+    seq: u64,
+    /// Records appended since the last snapshot (or genesis).
+    since_snapshot: u64,
+    /// The engine's window cap, recorded in genesis and every snapshot.
+    window: u64,
+    kernel_name: String,
+}
+
+impl WalWriter {
+    /// Create (truncating) the WAL, removing any stale snapshot sidecar,
+    /// and log the genesis record from the engine's current state.
+    pub fn create(
+        paths: WalPaths,
+        opts: WalOptions,
+        engine: &OnlineGradientGp,
+        window: usize,
+    ) -> anyhow::Result<Self> {
+        match fs::remove_file(&paths.snap) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => anyhow::bail!("removing stale snapshot {:?}: {e}", paths.snap),
+        }
+        let mut file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&paths.wal)
+            .map_err(|e| anyhow::anyhow!("creating WAL {:?}: {e}", paths.wal))?;
+        write_header(&mut file)?;
+        let gp = engine.gp();
+        let kernel_name = gp.kernel().name().to_string();
+        let genesis = WalRecord::Genesis {
+            seq: 1,
+            window: window as u64,
+            kernel_name: kernel_name.clone(),
+            metric: gp.factors().metric.clone(),
+            noise: gp.factors().noise,
+            center: gp.factors().center.clone(),
+            prior_grad_mean: gp.prior_grad_mean_opt().map(<[f64]>::to_vec),
+            x: gp.x().clone(),
+            g: gp.g().clone(),
+        };
+        let (tag, payload) = genesis.encode();
+        write_frame(&mut file, tag, &payload)?;
+        file.sync_data().map_err(|e| anyhow::anyhow!("syncing WAL genesis: {e}"))?;
+        Ok(WalWriter {
+            file,
+            paths,
+            opts,
+            seq: 1,
+            since_snapshot: 0,
+            window: window as u64,
+            kernel_name,
+        })
+    }
+
+    /// Last sequence number appended.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Append one record (assigning it the next sequence number) and — when
+    /// `fsync` is on — make it durable before returning. The caller applies
+    /// the operation to the engine only *after* this returns: write-ahead.
+    fn append(&mut self, make: impl FnOnce(u64) -> WalRecord) -> anyhow::Result<u64> {
+        let seq = self.seq + 1;
+        let (tag, payload) = make(seq).encode();
+        write_frame(&mut self.file, tag, &payload)?;
+        if self.opts.fsync {
+            self.file.sync_data().map_err(|e| anyhow::anyhow!("syncing WAL append: {e}"))?;
+        }
+        self.seq = seq;
+        self.since_snapshot += 1;
+        Ok(seq)
+    }
+
+    /// Log one observation (call before `observe_windowed`).
+    pub fn log_observe(&mut self, x: &[f64], g: &[f64]) -> anyhow::Result<u64> {
+        self.append(|seq| WalRecord::Observe { seq, x: x.to_vec(), g: g.to_vec() })
+    }
+
+    /// Log an explicit window slide (call before `drop_first`).
+    pub fn log_drop_first(&mut self) -> anyhow::Result<u64> {
+        self.append(|seq| WalRecord::DropFirst { seq })
+    }
+
+    /// Log a wholesale re-target (call before `set_targets`).
+    pub fn log_set_targets(&mut self, g: &Mat) -> anyhow::Result<u64> {
+        self.append(|seq| WalRecord::SetTargets { seq, g: g.clone() })
+    }
+
+    /// Whether enough records accumulated to warrant a snapshot.
+    pub fn snapshot_due(&self) -> bool {
+        self.since_snapshot >= self.opts.snapshot_interval
+    }
+
+    /// Write a snapshot of the engine's current state and compact the WAL.
+    ///
+    /// Ordering makes every crash point recoverable: the snapshot lands via
+    /// `tmp → fsync → rename` (readers only ever see a complete snapshot),
+    /// and only then is the WAL truncated back to its header. A crash
+    /// between the two leaves overlapping records in the WAL, which
+    /// recovery skips by sequence number.
+    pub fn write_snapshot(&mut self, engine: &OnlineGradientGp) -> anyhow::Result<()> {
+        let snap = SnapshotData {
+            seq: self.seq,
+            window: self.window,
+            kernel_name: self.kernel_name.clone(),
+            state: engine.export_state(),
+        };
+        let bytes = encode_snapshot(&snap)?;
+        let mut tmp_os = self.paths.snap.clone().into_os_string();
+        tmp_os.push(".tmp");
+        let tmp = PathBuf::from(tmp_os);
+        {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)
+                .map_err(|e| anyhow::anyhow!("creating snapshot temp {tmp:?}: {e}"))?;
+            f.write_all(&bytes).map_err(|e| anyhow::anyhow!("writing snapshot: {e}"))?;
+            f.sync_all().map_err(|e| anyhow::anyhow!("syncing snapshot: {e}"))?;
+        }
+        fs::rename(&tmp, &self.paths.snap)
+            .map_err(|e| anyhow::anyhow!("installing snapshot {:?}: {e}", self.paths.snap))?;
+        // compact: truncate the WAL back to a bare header
+        let mut file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&self.paths.wal)
+            .map_err(|e| anyhow::anyhow!("compacting WAL {:?}: {e}", self.paths.wal))?;
+        write_header(&mut file)?;
+        file.sync_data().map_err(|e| anyhow::anyhow!("syncing compacted WAL: {e}"))?;
+        self.file = file;
+        self.since_snapshot = 0;
+        Ok(())
+    }
+}
+
+fn write_header(w: &mut File) -> anyhow::Result<()> {
+    let mut e = Enc::new();
+    e.u32(WAL_MAGIC);
+    e.u16(WAL_FORMAT_VERSION);
+    write_frame(w, TAG_WAL_HEADER, &e.buf)
+}
+
+// ---------------------------------------------------------------------------
+// standby
+
+/// What one [`Standby::catch_up`] pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CatchUpReport {
+    /// Records applied (or deterministically rolled back) this pass.
+    pub applied: u64,
+    /// Records skipped because the snapshot / earlier passes already
+    /// covered their sequence numbers.
+    pub skipped: u64,
+    /// Whether a (newer) snapshot was loaded this pass.
+    pub snapshot_loaded: bool,
+    /// Replayed operations that failed and rolled back — these mirror the
+    /// primary's own rejected updates (the WAL is written *before* the
+    /// apply), so a nonzero count is not divergence.
+    pub apply_errors: u64,
+}
+
+/// A hot-standby replica: tails the WAL, replays through the ordinary
+/// engine entry points, and can be promoted to primary without a cold
+/// refit. Construct with the same kernel and [`FitMethod`] the primary
+/// serves with (the WAL pins the kernel *name* and fails loudly on a
+/// mismatch; the method is the standby operator's responsibility — see
+/// `docs/OPERATIONS.md`).
+pub struct Standby {
+    paths: WalPaths,
+    kernel: Arc<dyn ScalarKernel>,
+    method: FitMethod,
+    engine: Option<OnlineGradientGp>,
+    window: usize,
+    /// Highest sequence number applied (or skipped as snapshot-covered).
+    applied_seq: u64,
+    /// Byte offset of the next unconsumed WAL frame.
+    offset: usize,
+    apply_errors: u64,
+}
+
+impl Standby {
+    pub fn new(paths: WalPaths, kernel: Arc<dyn ScalarKernel>, method: FitMethod) -> Self {
+        Standby {
+            paths,
+            kernel,
+            method,
+            engine: None,
+            window: 0,
+            applied_seq: 0,
+            offset: 0,
+            apply_errors: 0,
+        }
+    }
+
+    /// The replica engine, once genesis (or a snapshot) has been replayed.
+    pub fn engine(&self) -> Option<&OnlineGradientGp> {
+        self.engine.as_ref()
+    }
+
+    /// Highest sequence number this replica has accounted for.
+    pub fn applied_seq(&self) -> u64 {
+        self.applied_seq
+    }
+
+    /// The window boundary recorded by the primary (genesis / snapshot).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Total replayed operations that deterministically rolled back.
+    pub fn apply_errors(&self) -> u64 {
+        self.apply_errors
+    }
+
+    /// One tail-and-replay pass: load a newer snapshot if one appeared,
+    /// then replay every complete record past `applied_seq`. Safe to call
+    /// in a loop — a partial trailing frame just ends the pass early, and
+    /// compaction (file shrinking below the consumed offset) triggers an
+    /// idempotent rescan.
+    pub fn catch_up(&mut self) -> anyhow::Result<CatchUpReport> {
+        let mut report = CatchUpReport::default();
+        // 1. snapshot: adopt it when it covers more than we have applied
+        match fs::read(&self.paths.snap) {
+            Ok(bytes) => {
+                // tolerate an empty/partial sidecar only at size 0 (a
+                // creation race); anything else must decode
+                if !bytes.is_empty() {
+                    let snap = decode_snapshot(&bytes)?;
+                    if snap.seq > self.applied_seq {
+                        anyhow::ensure!(
+                            snap.kernel_name == self.kernel.name(),
+                            "snapshot was written for kernel {:?}, standby is configured \
+                             with {:?}",
+                            snap.kernel_name,
+                            self.kernel.name()
+                        );
+                        self.engine = Some(OnlineGradientGp::from_state(
+                            self.kernel.clone(),
+                            self.method.clone(),
+                            snap.state,
+                        )?);
+                        self.window = usize::try_from(snap.window).unwrap_or(usize::MAX);
+                        self.applied_seq = snap.seq;
+                        self.offset = 0; // rescan the WAL; seq-skip dedups
+                        report.snapshot_loaded = true;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => anyhow::bail!("reading snapshot {:?}: {e}", self.paths.snap),
+        }
+        // 2. WAL tail
+        let bytes = match fs::read(&self.paths.wal) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                anyhow::ensure!(
+                    self.engine.is_some(),
+                    "no WAL at {:?} and no snapshot to stand by on",
+                    self.paths.wal
+                );
+                return Ok(report);
+            }
+            Err(e) => anyhow::bail!("reading WAL {:?}: {e}", self.paths.wal),
+        };
+        if bytes.len() < self.offset {
+            // compacted underneath us: rescan from the header
+            self.offset = 0;
+        }
+        let mut pos = self.offset;
+        while let Some((tag, payload, end)) = next_frame(&bytes, pos)? {
+            if tag == TAG_WAL_HEADER {
+                check_header(payload)?;
+                pos = end;
+                self.offset = end;
+                continue;
+            }
+            anyhow::ensure!(pos > 0, "missing WAL header: first frame has tag {tag:#04x}");
+            let rec = WalRecord::decode(tag, payload)?;
+            if rec.seq() <= self.applied_seq {
+                report.skipped += 1;
+            } else {
+                self.apply(rec, &mut report)?;
+            }
+            pos = end;
+            self.offset = end;
+        }
+        Ok(report)
+    }
+
+    /// Replay one record through the ordinary engine entry points. Errors
+    /// returned here are structural (record before genesis, kernel
+    /// mismatch, failed cold fit); *deterministic* apply rollbacks — the
+    /// mirror of updates the primary itself rejected — are counted, not
+    /// raised.
+    fn apply(&mut self, rec: WalRecord, report: &mut CatchUpReport) -> anyhow::Result<()> {
+        let seq = rec.seq();
+        match rec {
+            WalRecord::Genesis {
+                window,
+                kernel_name,
+                metric,
+                noise,
+                center,
+                prior_grad_mean,
+                x,
+                g,
+                ..
+            } => {
+                anyhow::ensure!(
+                    kernel_name == self.kernel.name(),
+                    "WAL genesis was written for kernel {kernel_name:?}, standby is \
+                     configured with {:?}",
+                    self.kernel.name()
+                );
+                let opts = FitOptions {
+                    center,
+                    prior_grad_mean,
+                    noise,
+                    method: self.method.clone(),
+                    online: true,
+                };
+                let engine =
+                    OnlineGradientGp::fit(self.kernel.clone(), metric, &x, &g, &opts)?;
+                self.engine = Some(engine);
+                self.window = usize::try_from(window).unwrap_or(usize::MAX);
+            }
+            WalRecord::Observe { x, g, .. } => {
+                let window = self.window;
+                if self.replica_mut()?.observe_windowed(&x, &g, window).is_err() {
+                    report.apply_errors += 1;
+                    self.apply_errors += 1;
+                }
+            }
+            WalRecord::DropFirst { .. } => {
+                if self.replica_mut()?.drop_first().is_err() {
+                    report.apply_errors += 1;
+                    self.apply_errors += 1;
+                }
+            }
+            WalRecord::SetTargets { g, .. } => {
+                if self.replica_mut()?.set_targets(&g).is_err() {
+                    report.apply_errors += 1;
+                    self.apply_errors += 1;
+                }
+            }
+        }
+        self.applied_seq = seq;
+        report.applied += 1;
+        Ok(())
+    }
+
+    fn replica_mut(&mut self) -> anyhow::Result<&mut OnlineGradientGp> {
+        self.engine
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("WAL record before any genesis or snapshot"))
+    }
+
+    /// Take over: consume the standby and hand out its engine. The caller
+    /// is responsible for the *right* to serve — steal the hosting lease
+    /// first ([`crate::gram::registry::LeaseKeeper::acquire`]) and claim
+    /// the workers at the stolen epoch, so the fenced-out old primary
+    /// cannot interfere (`docs/OPERATIONS.md`, step 3 of the failover
+    /// procedure).
+    pub fn promote(mut self) -> anyhow::Result<(OnlineGradientGp, usize)> {
+        let engine = self
+            .engine
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("cannot promote: standby never saw a genesis"))?;
+        Ok((engine, self.window))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::SquaredExponential;
+    use crate::rng::Rng;
+
+    fn tmp_base(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gdkron-wal-{tag}-{}.wal", std::process::id()))
+    }
+
+    fn cleanup(paths: &WalPaths) {
+        let _ = fs::remove_file(&paths.wal);
+        let _ = fs::remove_file(&paths.snap);
+    }
+
+    fn sample_engine(d: usize, n: usize, seed: u64) -> OnlineGradientGp {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+        let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+        OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.6),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn record_roundtrip_is_bit_exact() {
+        let exotic = [0.0, -0.0, f64::MIN_POSITIVE / 2.0, 1.5e300, f64::NAN];
+        let rec = WalRecord::Observe { seq: 7, x: exotic.to_vec(), g: vec![-3.25, 4.0] };
+        let (tag, payload) = rec.encode();
+        match WalRecord::decode(tag, &payload).unwrap() {
+            WalRecord::Observe { seq, x, g } => {
+                assert_eq!(seq, 7);
+                for (a, b) in x.iter().zip(exotic.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "f64 must round-trip bit-exact");
+                }
+                assert_eq!(g, vec![-3.25, 4.0]);
+            }
+            _ => panic!("wrong record"),
+        }
+        let (tag, payload) = WalRecord::DropFirst { seq: 9 }.encode();
+        let got = WalRecord::decode(tag, &payload).unwrap();
+        assert!(matches!(got, WalRecord::DropFirst { seq: 9 }));
+    }
+
+    #[test]
+    fn genesis_roundtrip_preserves_every_field() {
+        let rec = WalRecord::Genesis {
+            seq: 1,
+            window: 5,
+            kernel_name: "se".into(),
+            metric: Metric::Diag(vec![0.5, 2.0]),
+            noise: 1e-6,
+            center: Some(vec![0.1, -0.2]),
+            prior_grad_mean: None,
+            x: Mat::from_fn(2, 3, |i, j| (i + 2 * j) as f64),
+            g: Mat::from_fn(2, 3, |i, j| (3 * i + j) as f64 * -0.5),
+        };
+        let (tag, payload) = rec.encode();
+        match WalRecord::decode(tag, &payload).unwrap() {
+            WalRecord::Genesis { seq, window, kernel_name, metric, noise, center, x, .. } => {
+                assert_eq!((seq, window), (1, 5));
+                assert_eq!(kernel_name, "se");
+                assert_eq!(metric, Metric::Diag(vec![0.5, 2.0]));
+                assert_eq!(noise, 1e-6);
+                assert_eq!(center, Some(vec![0.1, -0.2]));
+                assert_eq!(x[(1, 2)], 5.0);
+            }
+            _ => panic!("wrong record"),
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bitwise() {
+        let engine = sample_engine(4, 3, 11);
+        let snap = SnapshotData {
+            seq: 42,
+            window: 8,
+            kernel_name: "squared-exponential".into(),
+            state: engine.export_state(),
+        };
+        let bytes = encode_snapshot(&snap).unwrap();
+        let got = decode_snapshot(&bytes).unwrap();
+        assert_eq!(got.seq, 42);
+        assert_eq!(got.window, 8);
+        assert_eq!(got.kernel_name, "squared-exponential");
+        assert_eq!(got.state.z.as_slice(), engine.gp().z().as_slice());
+        assert_eq!(got.state.kinv.is_some(), engine.export_state().kinv.is_some());
+        let (a, b) = (got.state.kinv.unwrap(), engine.export_state().kinv.unwrap());
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn wal_scan_stops_cleanly_at_a_partial_tail() {
+        let engine = sample_engine(3, 2, 12);
+        let paths = WalPaths::from_base(tmp_base("tail"));
+        cleanup(&paths);
+        let mut wal = WalWriter::create(paths.clone(), WalOptions::default(), &engine, 0)
+            .unwrap();
+        wal.log_observe(&[1.0, 2.0, 3.0], &[0.1, 0.2, 0.3]).unwrap();
+        let full = fs::read(&paths.wal).unwrap();
+        let (recs, consumed) = read_wal_records(&full).unwrap();
+        assert_eq!(recs.len(), 2, "genesis + one observe");
+        assert_eq!(consumed, full.len());
+        // truncate mid-record: the scan must stop before it, not error
+        let cut = full.len() - 3;
+        let (recs, consumed) = read_wal_records(&full[..cut]).unwrap();
+        assert_eq!(recs.len(), 1, "partial trailing record is benign");
+        assert!(consumed < cut);
+        cleanup(&paths);
+    }
+
+    #[test]
+    fn corrupt_length_field_is_rejected() {
+        let engine = sample_engine(3, 2, 13);
+        let paths = WalPaths::from_base(tmp_base("len"));
+        cleanup(&paths);
+        let _ = WalWriter::create(paths.clone(), WalOptions::default(), &engine, 0).unwrap();
+        let mut bytes = fs::read(&paths.wal).unwrap();
+        // inflate the header frame's length field beyond MAX_FRAME_BYTES
+        bytes[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_wal_records(&bytes).unwrap_err().to_string();
+        assert!(err.contains("corrupt WAL frame"), "unexpected error: {err}");
+        cleanup(&paths);
+    }
+
+    #[test]
+    fn snapshot_compaction_truncates_and_recovery_skips_covered_seqs() {
+        let engine = sample_engine(3, 2, 14);
+        let paths = WalPaths::from_base(tmp_base("compact"));
+        cleanup(&paths);
+        let opts = WalOptions { fsync: false, snapshot_interval: 2 };
+        let mut wal = WalWriter::create(paths.clone(), opts, &engine, 0).unwrap();
+        wal.log_observe(&[0.5, 0.5, 0.5], &[0.1, 0.1, 0.1]).unwrap();
+        wal.log_observe(&[1.5, 0.5, -0.5], &[0.2, 0.1, 0.0]).unwrap();
+        assert!(wal.snapshot_due());
+        wal.write_snapshot(&engine).unwrap();
+        assert!(!wal.snapshot_due());
+        // the WAL is now just a header...
+        let bytes = fs::read(&paths.wal).unwrap();
+        let (recs, _) = read_wal_records(&bytes).unwrap();
+        assert!(recs.is_empty(), "compaction must truncate back to the header");
+        // ...and the sidecar pins the last covered sequence number
+        let snap = decode_snapshot(&fs::read(&paths.snap).unwrap()).unwrap();
+        assert_eq!(snap.seq, 3);
+        // appends continue the same sequence
+        let seq = wal.log_observe(&[2.0, 1.0, 0.0], &[0.3, 0.2, 0.1]).unwrap();
+        assert_eq!(seq, 4);
+        cleanup(&paths);
+    }
+}

@@ -20,7 +20,12 @@
 //! the same posterior under streaming `observe` / sliding-window
 //! `drop_first` updates, reusing the retained Gram panels and warm-starting
 //! the solvers. Both engines expose the identical prediction surface through
-//! the [`GradientModel`] trait.
+//! the [`GradientModel`] trait. For replication, the complete online state
+//! round-trips through [`EngineState`]
+//! ([`OnlineGradientGp::export_state`] / [`OnlineGradientGp::from_state`]):
+//! a restored engine continues the primary's bordered-update chain bit for
+//! bit, which is what makes the coordinator's snapshot + WAL failover
+//! ([`crate::coordinator::wal`]) exact rather than approximate.
 //!
 //! Extra right-hand-side solves (variance/covariance queries, online
 //! re-solves) share one tolerance, [`EXTRA_RHS_RTOL`].
@@ -29,7 +34,7 @@ mod online;
 mod optimum;
 mod predict;
 
-pub use online::OnlineGradientGp;
+pub use online::{EngineState, OnlineGradientGp};
 pub use optimum::{infer_optimum, infer_optimum_with};
 pub use predict::HessianParts;
 
@@ -280,6 +285,13 @@ impl GradientGp {
     /// The kernel.
     pub fn kernel(&self) -> &dyn ScalarKernel {
         self.kernel.as_ref()
+    }
+
+    /// The *configured* solver selection (pre-`Auto` resolution) — what a
+    /// replica must pass to [`OnlineGradientGp::from_state`] to re-solve at
+    /// the same accuracy.
+    pub fn method(&self) -> &FitMethod {
+        &self.method
     }
 
     /// Fit diagnostics.

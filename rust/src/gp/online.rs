@@ -80,6 +80,40 @@ type Snapshot = (GramFactors, Mat, Mat, Mat, usize);
 /// `O(N⁶)` core rebuild it accompanies) keeps the panel at working accuracy.
 const KINV_REFRESH_PERIOD: usize = 64;
 
+/// The complete serializable state of an [`OnlineGradientGp`] — everything a
+/// replica needs to resume the *incremental* path exactly where the primary
+/// left off. Produced by [`OnlineGradientGp::export_state`] and consumed by
+/// [`OnlineGradientGp::from_state`]; the coordinator's snapshot + WAL layer
+/// ([`crate::coordinator::wal`]) is its wire format.
+///
+/// `kinv`/`kinv_age` carry the exact engine's live `K̂′⁻¹` panel and its
+/// bordered-update age, so a restored engine continues the same
+/// bordered-update chain (and hits the same periodic refresh boundary) as
+/// the engine it was exported from — restore-then-observe is bit-identical
+/// to never having snapshotted at all. `cold_refits` rides along so the
+/// "steady state never refits" diagnostic survives failover.
+#[derive(Clone)]
+pub struct EngineState {
+    /// The structured Gram factor panels (including the metric, noise and
+    /// center — the factors are self-describing).
+    pub factors: GramFactors,
+    /// Raw observation locations (`D×N`).
+    pub x: Mat,
+    /// Raw observed gradients (`D×N`).
+    pub g: Mat,
+    /// Representer weights (`D×N`).
+    pub z: Mat,
+    /// The exact engine's live `K̂′⁻¹` panel (`None` for the iterative /
+    /// poly(2) engines, or after a deferred update invalidated the solver).
+    pub kinv: Option<Mat>,
+    /// Bordered updates applied to `kinv` since it was last computed cold.
+    pub kinv_age: usize,
+    /// Prior gradient mean (if any).
+    pub prior_grad_mean: Option<Vec<f64>>,
+    /// Cold refits performed so far (1 = the initial fit only).
+    pub cold_refits: usize,
+}
+
 /// A [`GradientGp`] that stays conditioned under streaming observations.
 ///
 /// Construction mirrors the batch fit ([`OnlineGradientGp::fit`]) or wraps
@@ -136,6 +170,90 @@ impl OnlineGradientGp {
             online: true,
         };
         OnlineGradientGp { gp, opts, kinv_age: 0, cold_refits: 1, shard_engine: None }
+    }
+
+    /// Export the complete engine state for snapshotting ([`EngineState`]).
+    /// `O(N² + ND)` clones — same order as one streamed update.
+    pub fn export_state(&self) -> EngineState {
+        EngineState {
+            factors: self.gp.factors.clone(),
+            x: self.gp.x.clone(),
+            g: self.gp.g.clone(),
+            z: self.gp.z.clone(),
+            kinv: self.gp.solver.as_ref().map(|s| s.kinv().clone()),
+            kinv_age: self.kinv_age,
+            prior_grad_mean: self.gp.prior_grad_mean.clone(),
+            cold_refits: self.cold_refits,
+        }
+    }
+
+    /// Rebuild an engine from exported state — the standby's restore path.
+    ///
+    /// The kernel and the *configured* [`FitMethod`] are not part of
+    /// [`EngineState`] (trait objects and CG tolerances don't serialize);
+    /// the caller supplies them, and the snapshot layer pins the kernel
+    /// *name* so a mismatched restore fails loudly rather than silently
+    /// diverging. When `kinv` is present the exact solver is rebuilt from
+    /// the retained panels ([`WoodburySolver::from_panels`]) — no raw-data
+    /// product — so the restored engine continues the primary's
+    /// bordered-update chain bit-for-bit. The restored [`FitReport`] is
+    /// `Exact` as a neutral sentinel; it is overwritten by the first
+    /// re-solve.
+    pub fn from_state(
+        kernel: Arc<dyn ScalarKernel>,
+        method: FitMethod,
+        st: EngineState,
+    ) -> anyhow::Result<Self> {
+        let (d, n) = (st.x.rows(), st.x.cols());
+        anyhow::ensure!(n > 0, "engine state must carry at least one observation");
+        anyhow::ensure!((st.g.rows(), st.g.cols()) == (d, n), "state G must be D×N like X");
+        anyhow::ensure!((st.z.rows(), st.z.cols()) == (d, n), "state Z must be D×N like X");
+        anyhow::ensure!(
+            st.factors.d() == d && st.factors.n() == n,
+            "state factor panels disagree with the raw data: factors are {}×{}, data is {d}×{n}",
+            st.factors.d(),
+            st.factors.n()
+        );
+        if let Some(gc) = &st.prior_grad_mean {
+            anyhow::ensure!(gc.len() == d, "state prior_grad_mean length != D");
+        }
+        let solver = match &st.kinv {
+            Some(k) => {
+                anyhow::ensure!(
+                    (k.rows(), k.cols()) == (n, n),
+                    "state K̂′⁻¹ must be N×N = {n}×{n}"
+                );
+                Some(WoodburySolver::from_panels(&st.factors, k.clone())?)
+            }
+            None => None,
+        };
+        let opts = FitOptions {
+            center: st.factors.center.clone(),
+            prior_grad_mean: st.prior_grad_mean.clone(),
+            noise: st.factors.noise,
+            method: method.clone(),
+            online: true,
+        };
+        let center = st.factors.center.clone().unwrap_or_else(|| vec![0.0; d]);
+        let gp = GradientGp {
+            kernel,
+            factors: st.factors,
+            x: st.x,
+            g: st.g,
+            z: st.z,
+            prior_grad_mean: st.prior_grad_mean,
+            center,
+            solver,
+            report: FitReport::Exact,
+            method,
+        };
+        Ok(OnlineGradientGp {
+            gp,
+            opts,
+            kinv_age: st.kinv_age,
+            cold_refits: st.cold_refits,
+            shard_engine: None,
+        })
     }
 
     /// The underlying conditioned GP (the full prediction surface).
@@ -827,5 +945,75 @@ mod tests {
         .unwrap();
         m.drop_first().unwrap();
         assert!(m.drop_first().is_err());
+    }
+
+    #[test]
+    fn export_restore_is_bitwise_and_continues_the_incremental_chain() {
+        let (x, g) = sample(5, 6, 7);
+        let kern = Arc::new(SquaredExponential);
+        let opts = FitOptions::default();
+        let mut primary = OnlineGradientGp::fit(
+            kern.clone(),
+            Metric::Iso(0.55),
+            &x.block(0, 0, 5, 3),
+            &g.block(0, 0, 5, 3),
+            &opts,
+        )
+        .unwrap();
+        primary.observe(x.col(3), g.col(3)).unwrap();
+
+        let st = st_roundtrip(primary.export_state());
+        let mut replica =
+            OnlineGradientGp::from_state(kern.clone(), primary.gp().method().clone(), st).unwrap();
+
+        // the restored engine IS the primary, bit for bit
+        assert_eq!(replica.gp().z().as_slice(), primary.gp().z().as_slice());
+        assert_eq!(replica.gp().x().as_slice(), primary.gp().x().as_slice());
+        assert_eq!(replica.cold_refits(), primary.cold_refits());
+
+        // ...and continues the same bordered-update chain: further streamed
+        // observations produce bitwise-equal weights on both engines,
+        // without either paying a cold refit.
+        for j in 4..6 {
+            primary.observe(x.col(j), g.col(j)).unwrap();
+            replica.observe(x.col(j), g.col(j)).unwrap();
+            assert_eq!(
+                replica.gp().z().as_slice(),
+                primary.gp().z().as_slice(),
+                "divergence at observation {j}"
+            );
+        }
+        assert_eq!(primary.cold_refits(), 1);
+        assert_eq!(replica.cold_refits(), 1);
+    }
+
+    /// Clone-through helper standing in for the WAL codec: `EngineState` is
+    /// plain data, so a clone models a lossless (de)serialization.
+    fn st_roundtrip(st: EngineState) -> EngineState {
+        st.clone()
+    }
+
+    #[test]
+    fn from_state_rejects_inconsistent_panels() {
+        let (x, g) = sample(4, 3, 8);
+        let m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x,
+            &g,
+            &FitOptions::default(),
+        )
+        .unwrap();
+        let mut st = m.export_state();
+        st.g = Mat::zeros(4, 2); // wrong N
+        let err = match OnlineGradientGp::from_state(
+            Arc::new(SquaredExponential),
+            FitMethod::Exact,
+            st,
+        ) {
+            Ok(_) => panic!("mismatched state must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("D×N"), "unexpected error: {err}");
     }
 }

@@ -32,6 +32,14 @@
 //! (Ping/Pong wire frames), exponential-backoff reconnection and
 //! automatic re-attach at the next observe barrier — see
 //! [`ShardedGramFactors::maybe_reattach`].
+//!
+//! Coordinator failover rides on the same transport: the hosting **lease**
+//! ([`registry::LeaseKeeper`]) names the current primary and its fencing
+//! epoch, and wire v3's `Claim`/`ClaimAck` frames ([`wire`], [`remote`])
+//! make workers reject state frames from a fenced-out (stolen-lease)
+//! coordinator. The replay half — snapshot + observation WAL — lives in
+//! [`crate::coordinator::wal`]; the end-to-end failover runbook is
+//! `docs/OPERATIONS.md`.
 
 mod factors;
 mod matvec;
@@ -47,7 +55,7 @@ pub use factors::GramFactors;
 pub use matvec::{GramOperator, MatvecWorkspace};
 pub use metric::Metric;
 pub use poly2::{poly2_solve, Poly2Solve};
-pub use registry::{RegistryConfig, ShardRegistry};
+pub use registry::{Lease, LeaseKeeper, RegistryConfig, ShardRegistry};
 pub use remote::RemoteOptions;
 pub use sharded::{ShardedGramFactors, ShardedGramOperator};
 pub use woodbury::{woodbury_solve, WoodburySolver};

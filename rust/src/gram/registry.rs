@@ -399,6 +399,197 @@ fn prober_loop(sh: Arc<Shared>) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// hosting lease (the coordinator failover source)
+
+/// The hosting lease on disk: **who is primary, at what epoch, until
+/// when**. One coordinator holds it at a time; a hot standby watches it
+/// and steals — bumping the epoch — once it lapses. The epoch is what the
+/// v3 wire fence speaks ([`crate::gram::remote::RemoteOptions::claim_epoch`]):
+/// workers reject state frames below the highest epoch they have seen, so
+/// a zombie primary whose lease was stolen cannot corrupt worker state.
+///
+/// The file format is three `key value` lines (`epoch`, `expires_unix_ms`,
+/// `holder`), written atomically (tmp + rename) and parsed defensively —
+/// the same discipline as the registry file. Wall-clock based: the TTL
+/// (`server.lease_ttl_ms`, default 3000) must dwarf the clock skew between
+/// coordinator hosts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// Monotonic fencing epoch: bumped by every acquire/steal, never 0.
+    pub epoch: u64,
+    /// Expiry as milliseconds since the Unix epoch.
+    pub expires_unix_ms: u64,
+    /// Human-readable holder id (diagnostics only; ownership is the file
+    /// plus the epoch fence, not the name).
+    pub holder: String,
+}
+
+impl Lease {
+    /// Whether the lease has lapsed at wall-clock time `now_ms`.
+    pub fn expired_at(&self, now_ms: u64) -> bool {
+        now_ms >= self.expires_unix_ms
+    }
+}
+
+/// Milliseconds since the Unix epoch (0 if the clock is before it).
+pub fn now_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Read a lease file. `Ok(None)` when the file does not exist (no lease
+/// was ever written); a malformed file is an error, never a misparse into
+/// a bogus epoch.
+pub fn read_lease(path: &Path) -> anyhow::Result<Option<Lease>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(anyhow::anyhow!("reading lease file {path:?}: {e}")),
+    };
+    let mut epoch = None;
+    let mut expires = None;
+    let mut holder = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once(char::is_whitespace)
+            .ok_or_else(|| anyhow::anyhow!("malformed lease line {line:?} in {path:?}"))?;
+        let value = value.trim();
+        match key {
+            "epoch" => {
+                epoch = Some(value.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("malformed lease epoch {value:?} in {path:?}")
+                })?)
+            }
+            "expires_unix_ms" => {
+                expires = Some(value.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("malformed lease expiry {value:?} in {path:?}")
+                })?)
+            }
+            "holder" => holder = Some(value.to_string()),
+            _ => {} // forward compatibility: unknown keys are ignored
+        }
+    }
+    let epoch = epoch.ok_or_else(|| anyhow::anyhow!("lease file {path:?} has no epoch"))?;
+    anyhow::ensure!(epoch != 0, "lease file {path:?} has the reserved epoch 0");
+    let expires_unix_ms =
+        expires.ok_or_else(|| anyhow::anyhow!("lease file {path:?} has no expiry"))?;
+    Ok(Some(Lease { epoch, expires_unix_ms, holder: holder.unwrap_or_default() }))
+}
+
+/// Write a lease atomically: tmp file in the same directory, fsync, rename
+/// over the target — readers see either the old lease or the new one,
+/// never a torn write.
+pub fn write_lease(path: &Path, lease: &Lease) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    let tmp = path.with_extension("lease.tmp");
+    let text = format!(
+        "epoch {}\nexpires_unix_ms {}\nholder {}\n",
+        lease.epoch, lease.expires_unix_ms, lease.holder
+    );
+    let mut f = std::fs::File::create(&tmp)
+        .map_err(|e| anyhow::anyhow!("creating lease tmp {tmp:?}: {e}"))?;
+    f.write_all(text.as_bytes())
+        .and_then(|()| f.sync_all())
+        .map_err(|e| anyhow::anyhow!("writing lease tmp {tmp:?}: {e}"))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("installing lease file {path:?}: {e}"))
+}
+
+/// A held hosting lease: acquire/steal on construction, [`renew`] on a
+/// heartbeat, and an [`epoch`] to claim on every worker connection.
+///
+/// [`renew`]: LeaseKeeper::renew
+/// [`epoch`]: LeaseKeeper::epoch
+pub struct LeaseKeeper {
+    path: PathBuf,
+    holder: String,
+    ttl: Duration,
+    epoch: u64,
+}
+
+impl LeaseKeeper {
+    /// Acquire the lease at `path`: succeeds when no lease exists, the
+    /// current one has **lapsed** (a steal — this is the standby's
+    /// takeover), or this holder already owns it. The new epoch is always
+    /// `old + 1` (or 1 on a fresh file), so every acquisition fences out
+    /// every earlier one. Fails while a *live* lease is held by someone
+    /// else.
+    pub fn acquire(path: &Path, holder: &str, ttl: Duration) -> anyhow::Result<Self> {
+        anyhow::ensure!(!ttl.is_zero(), "lease ttl must be positive");
+        let now = now_unix_ms();
+        let prev_epoch = match read_lease(path)? {
+            Some(cur) if !cur.expired_at(now) && cur.holder != holder => {
+                anyhow::bail!(
+                    "lease at {path:?} is held by {:?} (epoch {}) for another {} ms",
+                    cur.holder,
+                    cur.epoch,
+                    cur.expires_unix_ms.saturating_sub(now)
+                );
+            }
+            Some(cur) => cur.epoch,
+            None => 0,
+        };
+        let keeper = LeaseKeeper {
+            path: path.to_path_buf(),
+            holder: holder.to_string(),
+            ttl,
+            epoch: prev_epoch
+                .checked_add(1)
+                .ok_or_else(|| anyhow::anyhow!("lease epoch overflow at {path:?}"))?,
+        };
+        keeper.install()?;
+        Ok(keeper)
+    }
+
+    fn install(&self) -> anyhow::Result<()> {
+        write_lease(
+            &self.path,
+            &Lease {
+                epoch: self.epoch,
+                expires_unix_ms: now_unix_ms().saturating_add(self.ttl.as_millis() as u64),
+                holder: self.holder.clone(),
+            },
+        )
+    }
+
+    /// Heartbeat: push the expiry out another TTL. Fails — **without**
+    /// touching the file — if the on-disk epoch has moved past ours: the
+    /// lease was stolen, this coordinator is a zombie and must stop
+    /// serving (its workers are already fenced).
+    pub fn renew(&self) -> anyhow::Result<()> {
+        if let Some(cur) = read_lease(&self.path)? {
+            anyhow::ensure!(
+                cur.epoch <= self.epoch,
+                "lease at {:?} was stolen by {:?} (epoch {} > ours {})",
+                self.path,
+                cur.holder,
+                cur.epoch,
+                self.epoch
+            );
+        }
+        self.install()
+    }
+
+    /// The fencing epoch this keeper holds — what every worker connection
+    /// claims ([`crate::gram::remote::RemoteOptions::claim_epoch`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The configured TTL.
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -522,5 +713,64 @@ mod tests {
         assert!(!snap[0].healthy);
         assert!(snap[0].consecutive_failures >= 2);
         assert!(snap[0].last_error.is_some(), "failures must carry a reason");
+    }
+
+    fn lease_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gdkron-lease-{tag}-{}.lease", std::process::id()))
+    }
+
+    #[test]
+    fn lease_acquire_renew_and_steal() {
+        let path = lease_path("cycle");
+        let _ = std::fs::remove_file(&path);
+        // fresh file: epoch 1
+        let primary = LeaseKeeper::acquire(&path, "primary", Duration::from_millis(50)).unwrap();
+        assert_eq!(primary.epoch(), 1);
+        let on_disk = read_lease(&path).unwrap().unwrap();
+        assert_eq!(on_disk.epoch, 1);
+        assert_eq!(on_disk.holder, "primary");
+        // live lease held by someone else: acquisition fails
+        let err = match LeaseKeeper::acquire(&path, "standby", Duration::from_millis(50)) {
+            Ok(_) => panic!("live lease must not be stealable"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("held by"), "unexpected error: {err}");
+        // renewal works while we own it
+        primary.renew().unwrap();
+        // lapse, then steal: epoch bumps to 2
+        std::thread::sleep(Duration::from_millis(80));
+        let standby = LeaseKeeper::acquire(&path, "standby", Duration::from_millis(50)).unwrap();
+        assert_eq!(standby.epoch(), 2, "a steal must fence out the old holder");
+        // the zombie's renew must now fail without touching the file
+        let err = primary.renew().expect_err("stolen lease must not renew").to_string();
+        assert!(err.contains("stolen"), "unexpected error: {err}");
+        assert_eq!(read_lease(&path).unwrap().unwrap().epoch, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lease_file_parses_defensively() {
+        let path = lease_path("parse");
+        // missing file: None, not an error
+        let _ = std::fs::remove_file(&path);
+        assert!(read_lease(&path).unwrap().is_none());
+        // unknown keys are ignored (forward compatibility), holder optional
+        std::fs::write(&path, "epoch 7\nexpires_unix_ms 123\nfuture_key x\n").unwrap();
+        let l = read_lease(&path).unwrap().unwrap();
+        assert_eq!(l, Lease { epoch: 7, expires_unix_ms: 123, holder: String::new() });
+        assert!(l.expired_at(123) && !l.expired_at(122));
+        // malformed epochs / missing fields / reserved epoch 0 are errors
+        let bad_leases = [
+            "epoch x\nexpires_unix_ms 1\n",
+            "expires_unix_ms 1\n",
+            "epoch 1\n",
+            "epoch 0\nexpires_unix_ms 1\n",
+            "garbage\n",
+        ];
+        for bad in bad_leases {
+            std::fs::write(&path, bad).unwrap();
+            assert!(read_lease(&path).is_err(), "must reject {bad:?}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

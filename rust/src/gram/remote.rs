@@ -25,7 +25,8 @@
 //! `O((N² + ND)/S)` per-delta re-broadcasts.
 //!
 //! [`RemoteEndpoint`] is the coordinator side — a
-//! [`super::sharded::ShardEndpoint`] over one `TcpStream` with every
+//! `ShardEndpoint` (the crate-private shard-transport trait) over one
+//! `TcpStream` with every
 //! read/write bounded by the configured frame timeout
 //! (`gram.remote_timeout_ms`; result-gather reads that wait on the
 //! worker's apply compute get [`RESULT_TIMEOUT_FACTOR`]× that, since
@@ -44,6 +45,19 @@
 //! ([`super::sharded::ShardedGramFactors`]'s pipelined gather). Nothing in
 //! this module assumes the serial calling order beyond the per-endpoint
 //! frame sequence.
+//!
+//! **Epoch fencing (v3)**: a coordinator holding a hosting lease
+//! ([`crate::gram::registry::LeaseKeeper`]) claims its lease epoch on
+//! connect ([`RemoteOptions::claim_epoch`] → [`CoordFrame::Claim`]). The
+//! worker keeps one fence high-water mark per hosting session: claims at
+//! or above it are acknowledged and raise it; claims — and every later
+//! state frame on a connection whose claim is now below the mark — are
+//! rejected with a descriptive `Err` frame. A **claimed connection
+//! bypasses the legacy hosting mutex**: the fence is its mutual exclusion,
+//! so a standby that stole the lease takes over even while a hung zombie
+//! primary still holds its TCP connection (and once any coordinator has
+//! claimed, unclaimed state frames are rejected too, so the zombie cannot
+//! sneak back in by reconnecting without a claim).
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -87,6 +101,12 @@ pub struct RemoteOptions {
     /// shard apply compute is legitimate latency, a dead peer still fails
     /// instantly on EOF.
     pub gather_factor: u32,
+    /// Lease epoch to claim on connect (v3 epoch fencing; see
+    /// [`crate::gram::registry::LeaseKeeper`]). `None` (the default) keeps
+    /// the legacy hosting-mutex session semantics; `Some(epoch)` sends a
+    /// [`CoordFrame::Claim`] right after the handshake and fails the
+    /// connect if the worker is already fenced at a higher epoch.
+    pub claim_epoch: Option<u64>,
 }
 
 impl Default for RemoteOptions {
@@ -94,6 +114,7 @@ impl Default for RemoteOptions {
         RemoteOptions {
             timeout: Duration::from_millis(5_000),
             gather_factor: RESULT_TIMEOUT_FACTOR,
+            claim_epoch: None,
         }
     }
 }
@@ -281,13 +302,18 @@ fn fail(stream: &mut TcpStream, message: String) -> anyhow::Error {
 pub fn serve(listener: TcpListener) -> anyhow::Result<()> {
     let epoch = next_epoch();
     let hosting = Arc::new(std::sync::Mutex::new(()));
+    // the v3 epoch fence: the highest lease epoch any connection of this
+    // hosting session has claimed. 0 = no coordinator has claimed yet
+    // (legacy mutex semantics apply).
+    let fence = Arc::new(AtomicU64::new(0));
     for conn in listener.incoming() {
         match conn {
             Ok(stream) => {
                 let peer =
                     stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
                 let lock = Arc::clone(&hosting);
-                std::thread::spawn(move || match serve_conn(stream, epoch, &lock) {
+                let fence = Arc::clone(&fence);
+                std::thread::spawn(move || match serve_conn(stream, epoch, &lock, &fence) {
                     Ok(()) => eprintln!("gdkron shard-worker: coordinator {peer} detached"),
                     Err(e) => eprintln!("gdkron shard-worker: connection from {peer} failed: {e}"),
                 });
@@ -300,11 +326,14 @@ pub fn serve(listener: TcpListener) -> anyhow::Result<()> {
 
 /// Serve one coordinator connection to completion. Probe-only connections
 /// (handshake + pings) never touch the hosting lock; the first state frame
-/// acquires it for the rest of the connection.
+/// acquires it for the rest of the connection — unless the connection
+/// **claimed** a lease epoch, in which case the process-wide fence replaces
+/// the mutex entirely (see the module docs on epoch fencing).
 fn serve_conn(
     mut stream: TcpStream,
     epoch: u64,
     hosting: &std::sync::Mutex<()>,
+    fence: &AtomicU64,
 ) -> anyhow::Result<()> {
     let _ = stream.set_nodelay(true);
     // a coordinator that stops draining mid-reply must not wedge the
@@ -338,6 +367,11 @@ fn serve_conn(
     // connection ends (probe-only connections never take it, so a worker
     // hosting a coordinator still answers pings on fresh connections)
     let mut session: Option<std::sync::MutexGuard<'_, ()>> = None;
+    // the lease epoch this connection claimed (None = legacy unfenced
+    // session). Claimed connections skip the hosting mutex: the fence is
+    // their mutual exclusion — otherwise a zombie primary holding the
+    // mutex would block the standby's takeover forever.
+    let mut claimed: Option<u64> = None;
     // a frame observed while waiting for the P-diagonal barrier: the apply
     // was abandoned by the coordinator; process the frame normally
     let mut pending: Option<CoordFrame> = None;
@@ -350,12 +384,32 @@ fn serve_conn(
             },
         };
         // state frames belong to the (single) hosting session; control
-        // frames (Ping/Shutdown) are served lock-free
-        let needs_session = !matches!(
+        // frames (Ping/Shutdown/Claim) are served lock-free
+        let state_frame = !matches!(
             frame,
-            CoordFrame::Ping { .. } | CoordFrame::Shutdown | CoordFrame::Hello { .. }
+            CoordFrame::Ping { .. }
+                | CoordFrame::Shutdown
+                | CoordFrame::Hello { .. }
+                | CoordFrame::Claim { .. }
         );
-        if needs_session && session.is_none() {
+        if state_frame {
+            // the epoch fence: once any coordinator has claimed, state
+            // frames below the high-water mark — stale claimed epochs AND
+            // unclaimed legacy connections (epoch 0) — are rejected, so a
+            // fenced-out zombie cannot corrupt worker state
+            let mark = fence.load(Ordering::SeqCst);
+            let mine = claimed.unwrap_or(0);
+            if mark > mine {
+                return Err(fail(
+                    &mut stream,
+                    format!(
+                        "stale coordinator epoch: this connection claims epoch {mine}, \
+                         worker is fenced at epoch {mark}"
+                    ),
+                ));
+            }
+        }
+        if state_frame && claimed.is_none() && session.is_none() {
             // a poisoned lock only means another connection's thread
             // panicked; the panels are per-connection, so serving on is safe
             session = Some(hosting.lock().unwrap_or_else(|e| e.into_inner()));
@@ -363,6 +417,28 @@ fn serve_conn(
         match frame {
             CoordFrame::Hello { .. } => {
                 return Err(fail(&mut stream, "unexpected mid-session Hello".into()))
+            }
+            CoordFrame::Claim { epoch: lease_epoch } => {
+                if lease_epoch == 0 {
+                    return Err(fail(&mut stream, "claim epoch 0 is reserved".into()));
+                }
+                let mark = fence.load(Ordering::SeqCst);
+                if lease_epoch < mark {
+                    return Err(fail(
+                        &mut stream,
+                        format!(
+                            "stale coordinator epoch {lease_epoch}: \
+                             worker is fenced at epoch {mark}"
+                        ),
+                    ));
+                }
+                fence.fetch_max(lease_epoch, Ordering::SeqCst);
+                claimed = Some(lease_epoch);
+                // the fence supersedes the mutex for this connection; let a
+                // previously taken legacy session go so other (claimed)
+                // connections are never blocked behind it
+                session = None;
+                WorkerFrame::ClaimAck { epoch: lease_epoch }.write_to(&mut stream)?;
             }
             CoordFrame::Ping { nonce } => {
                 let (revision, synced) =
@@ -485,7 +561,7 @@ fn serve_conn(
 // ---------------------------------------------------------------------------
 // coordinator (client) side
 
-/// A [`ShardEndpoint`] over one TCP connection to a `gdkron shard-worker`.
+/// A `ShardEndpoint` over one TCP connection to a `gdkron shard-worker`.
 /// Every socket read and write is bounded by the connect timeout, so the
 /// failure modes the transport must survive — worker death mid-apply, a
 /// wedged peer, a short frame — all surface as prompt `anyhow` errors.
@@ -627,7 +703,34 @@ impl RemoteEndpoint {
         shard_id: usize,
         opts: &RemoteOptions,
     ) -> anyhow::Result<Self> {
-        let (stream, negotiated) = open_stream(addr, opts.timeout)?;
+        let (mut stream, negotiated) = open_stream(addr, opts.timeout)?;
+        if let Some(lease_epoch) = opts.claim_epoch {
+            // epoch-fenced session: claim before any state frame, so a
+            // stale (fenced-out) coordinator fails the *connect*, never a
+            // later solve
+            anyhow::ensure!(
+                negotiated >= 3,
+                "worker {addr} speaks wire v{negotiated}, \
+                 which has no epoch fencing (upgrade it)"
+            );
+            CoordFrame::Claim { epoch: lease_epoch }
+                .write_to(&mut stream)
+                .map_err(|e| anyhow::anyhow!("claiming {addr}: {e}"))?;
+            match WorkerFrame::read_from(&mut stream) {
+                Ok(WorkerFrame::ClaimAck { epoch: acked }) => {
+                    anyhow::ensure!(
+                        acked == lease_epoch,
+                        "worker {addr} acked the claim with the wrong epoch \
+                         ({acked} != {lease_epoch})"
+                    );
+                }
+                Ok(WorkerFrame::Err { message }) => {
+                    anyhow::bail!("worker {addr} rejected the claim: {message}")
+                }
+                Ok(_) => anyhow::bail!("worker {addr} answered the claim with the wrong frame"),
+                Err(e) => anyhow::bail!("claiming {addr}: {e}"),
+            }
+        }
         Ok(RemoteEndpoint {
             addr: addr.to_string(),
             shard_id,

@@ -12,7 +12,7 @@
 //!   `K̂″` and the cross-Gram `H`, plus its rows of `(ΛX̃)ᵀ` — per-shard
 //!   state is `O((N² + ND)/S)` and therefore bounded by the serving window
 //!   (`gp.window`) like the global panels.
-//! * Shards are **persistent workers** driven through the [`ShardEndpoint`]
+//! * Shards are **persistent workers** driven through the `ShardEndpoint`
 //!   protocol: `sync` / `append` / `drop_first` keep the shard state in
 //!   lockstep with the factors, `h-border` fans the online append's
 //!   cross-Gram border out, and the two-phase `apply` (dispatch → gather

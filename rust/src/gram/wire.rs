@@ -42,6 +42,23 @@
 //!   distinguishable), its current panel revision, and whether it holds a
 //!   synced mirror at all. This is what the shard registry
 //!   ([`crate::gram::registry`]) speaks on its probe connections.
+//!
+//! **v3 (the failover protocol)** adds the epoch fence:
+//! * [`CoordFrame::Claim`] / [`WorkerFrame::ClaimAck`] — a coordinator that
+//!   holds a hosting **lease** ([`crate::gram::registry::LeaseKeeper`])
+//!   announces its lease epoch before any state frame. The worker keeps a
+//!   process-wide high-water mark: a claim at or above it is acknowledged
+//!   (and raises the mark); a claim *below* it — a zombie primary whose
+//!   lease was stolen — is rejected with a descriptive [`WorkerFrame::Err`],
+//!   and every later state frame on a fenced-out connection is rejected
+//!   too. Claimed connections bypass the legacy hosting mutex: the fence
+//!   *is* their mutual exclusion, so a standby can take over while a hung
+//!   primary still holds its TCP connection. See `docs/OPERATIONS.md` for
+//!   the failover runbook.
+//!
+//! The same `Enc`/`Dec` codec (crate-private) backs the coordinator's
+//! on-disk snapshot + WAL records ([`crate::coordinator::wal`]): one
+//! framing discipline, one defensive decoder, for sockets and files alike.
 
 use std::io::{Read, Write};
 
@@ -53,8 +70,9 @@ use crate::linalg::Mat;
 pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"GDKW");
 
 /// Protocol version; bumped on any frame-layout change. v2 added the
-/// health/registry frames (`Ping`/`Pong`/`SyncAt`).
-pub const WIRE_VERSION: u16 = 2;
+/// health/registry frames (`Ping`/`Pong`/`SyncAt`); v3 added the epoch
+/// fence (`Claim`/`ClaimAck`).
+pub const WIRE_VERSION: u16 = 3;
 
 /// Oldest coordinator version a worker still serves (the Hello handshake
 /// negotiates down to it): v1 peers simply never see the v2 frames.
@@ -76,6 +94,8 @@ const TAG_SHUTDOWN: u8 = 0x08;
 // v2 coordinator tags (never sent on a v1-negotiated connection).
 const TAG_PING: u8 = 0x09;
 const TAG_SYNC_AT: u8 = 0x0A;
+// v3 coordinator tags (never sent below a v3-negotiated connection).
+const TAG_CLAIM: u8 = 0x0B;
 // Worker → coordinator tags.
 const TAG_HELLO_ACK: u8 = 0x81;
 const TAG_HBORDER_SLICE: u8 = 0x82;
@@ -84,6 +104,8 @@ const TAG_OUT: u8 = 0x84;
 const TAG_ERR: u8 = 0x85;
 // v2 worker tags.
 const TAG_PONG: u8 = 0x86;
+// v3 worker tags.
+const TAG_CLAIM_ACK: u8 = 0x87;
 
 /// Full shard-state broadcast: the shared panels plus the square
 /// derivative panels the worker mirrors, and the worker's place in the
@@ -105,8 +127,8 @@ pub struct SyncFrame {
     pub h: Mat,
 }
 
-/// The `O(N + D)` online append delta (see
-/// [`super::sharded::AppendDelta`]): borders are evaluated exactly once on
+/// The `O(N + D)` online append delta (the crate-private
+/// `sharded::AppendDelta`): borders are evaluated exactly once on
 /// the coordinator and shipped bit-exact.
 pub struct AppendFrame {
     pub xt_new: Vec<f64>,
@@ -133,6 +155,10 @@ pub enum CoordFrame {
     /// v2 health probe; the nonce ties the answering [`WorkerFrame::Pong`]
     /// to this probe.
     Ping { nonce: u64 },
+    /// v3 epoch-fenced hosting claim: the coordinator's lease epoch.
+    /// Answered by [`WorkerFrame::ClaimAck`] if the epoch is at or above
+    /// the worker's fence, rejected with [`WorkerFrame::Err`] otherwise.
+    Claim { epoch: u64 },
 }
 
 /// Worker → coordinator messages.
@@ -146,49 +172,54 @@ pub enum WorkerFrame {
     /// hosting-session epoch, its panel revision, and whether it holds a
     /// synced mirror.
     Pong { nonce: u64, epoch: u64, revision: u64, synced: bool },
+    /// v3 claim acknowledgement: echoes the accepted lease epoch, which is
+    /// now the worker's fence high-water mark.
+    ClaimAck { epoch: u64 },
 }
 
 // ---------------------------------------------------------------------------
 // encoding
 
-/// Payload builder.
-struct Enc {
-    buf: Vec<u8>,
+/// Payload builder. Crate-private (not `pub`): the WAL codec
+/// ([`crate::coordinator::wal`]) reuses it so file records share the
+/// socket frames' bit-exact f64 discipline.
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Enc {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Enc { buf: Vec::new() }
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
-    fn u16(&mut self, v: u16) {
+    pub(crate) fn u16(&mut self, v: u16) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
     }
 
-    fn vec_f64(&mut self, v: &[f64]) {
+    pub(crate) fn vec_f64(&mut self, v: &[f64]) {
         self.u64(v.len() as u64);
         for &x in v {
             self.f64(x);
         }
     }
 
-    fn mat(&mut self, m: &Mat) {
+    pub(crate) fn mat(&mut self, m: &Mat) {
         self.u64(m.rows() as u64);
         self.u64(m.cols() as u64);
         for &x in m.as_slice() {
@@ -196,12 +227,12 @@ impl Enc {
         }
     }
 
-    fn string(&mut self, s: &str) {
+    pub(crate) fn string(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
     }
 
-    fn metric(&mut self, m: &Metric) {
+    pub(crate) fn metric(&mut self, m: &Metric) {
         match m {
             Metric::Iso(l) => {
                 self.u8(0);
@@ -214,14 +245,14 @@ impl Enc {
         }
     }
 
-    fn class(&mut self, c: KernelClass) {
+    pub(crate) fn class(&mut self, c: KernelClass) {
         self.u8(match c {
             KernelClass::DotProduct => 0,
             KernelClass::Stationary => 1,
         });
     }
 
-    fn bool(&mut self, v: bool) {
+    pub(crate) fn bool(&mut self, v: bool) {
         self.u8(u8::from(v));
     }
 
@@ -239,18 +270,19 @@ impl Enc {
 }
 
 /// Payload cursor with bounds-checked reads (a truncated payload is a
-/// "short frame" error, never a panic).
-struct Dec<'a> {
+/// "short frame" error, never a panic). Crate-private for the same reason
+/// as [`Enc`]: the WAL decoder shares this defensive cursor.
+pub(crate) struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Dec<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Dec { buf, pos: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
@@ -265,28 +297,28 @@ impl<'a> Dec<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> anyhow::Result<u8> {
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> anyhow::Result<u16> {
+    pub(crate) fn u16(&mut self) -> anyhow::Result<u16> {
         let b = self.take(2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
-    fn u32(&mut self) -> anyhow::Result<u32> {
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> anyhow::Result<u64> {
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
         let b = self.take(8)?;
         let mut a = [0u8; 8];
         a.copy_from_slice(b);
         Ok(u64::from_le_bytes(a))
     }
 
-    fn f64(&mut self) -> anyhow::Result<f64> {
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
         Ok(f64::from_bits(self.u64()?))
     }
 
@@ -307,7 +339,7 @@ impl<'a> Dec<'a> {
         Ok(n)
     }
 
-    fn vec_f64(&mut self) -> anyhow::Result<Vec<f64>> {
+    pub(crate) fn vec_f64(&mut self) -> anyhow::Result<Vec<f64>> {
         let n = self.len(8)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
@@ -316,7 +348,7 @@ impl<'a> Dec<'a> {
         Ok(v)
     }
 
-    fn mat(&mut self) -> anyhow::Result<Mat> {
+    pub(crate) fn mat(&mut self) -> anyhow::Result<Mat> {
         let rows = self.len(0)?;
         let cols = self.len(0)?;
         let count = rows
@@ -337,13 +369,13 @@ impl<'a> Dec<'a> {
         Ok(Mat::from_vec(rows, cols, data))
     }
 
-    fn string(&mut self) -> anyhow::Result<String> {
+    pub(crate) fn string(&mut self) -> anyhow::Result<String> {
         let n = self.len(1)?;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| anyhow::anyhow!("non-UTF-8 string in frame"))
     }
 
-    fn metric(&mut self) -> anyhow::Result<Metric> {
+    pub(crate) fn metric(&mut self) -> anyhow::Result<Metric> {
         match self.u8()? {
             0 => Ok(Metric::Iso(self.f64()?)),
             1 => Ok(Metric::Diag(self.vec_f64()?)),
@@ -351,7 +383,7 @@ impl<'a> Dec<'a> {
         }
     }
 
-    fn class(&mut self) -> anyhow::Result<KernelClass> {
+    pub(crate) fn class(&mut self) -> anyhow::Result<KernelClass> {
         match self.u8()? {
             0 => Ok(KernelClass::DotProduct),
             1 => Ok(KernelClass::Stationary),
@@ -359,7 +391,7 @@ impl<'a> Dec<'a> {
         }
     }
 
-    fn bool(&mut self) -> anyhow::Result<bool> {
+    pub(crate) fn bool(&mut self) -> anyhow::Result<bool> {
         match self.u8()? {
             0 => Ok(false),
             1 => Ok(true),
@@ -381,7 +413,7 @@ impl<'a> Dec<'a> {
         })
     }
 
-    fn finish(self) -> anyhow::Result<()> {
+    pub(crate) fn finish(self) -> anyhow::Result<()> {
         anyhow::ensure!(self.remaining() == 0, "{} trailing bytes in frame", self.remaining());
         Ok(())
     }
@@ -391,7 +423,8 @@ impl<'a> Dec<'a> {
 // framing
 
 /// Write one `[len:u32][tag:u8][payload]` frame in a single `write_all`.
-fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> anyhow::Result<()> {
+/// Crate-private: the WAL appender shares the framing with the transport.
+pub(crate) fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> anyhow::Result<()> {
     anyhow::ensure!(
         payload.len() <= MAX_FRAME_BYTES as usize,
         "frame too large to send: {} bytes (tag {tag:#04x})",
@@ -498,6 +531,10 @@ impl CoordFrame {
                 e.u64(*nonce);
                 TAG_PING
             }
+            CoordFrame::Claim { epoch } => {
+                e.u64(*epoch);
+                TAG_CLAIM
+            }
         };
         write_frame(w, tag, &e.buf)
     }
@@ -524,6 +561,7 @@ impl CoordFrame {
             TAG_DROP_FIRST => CoordFrame::DropFirst,
             TAG_SHUTDOWN => CoordFrame::Shutdown,
             TAG_PING => CoordFrame::Ping { nonce: d.u64()? },
+            TAG_CLAIM => CoordFrame::Claim { epoch: d.u64()? },
             t => anyhow::bail!("unknown coordinator frame tag {t:#04x}"),
         };
         d.finish()?;
@@ -576,6 +614,10 @@ impl WorkerFrame {
                 e.bool(*synced);
                 TAG_PONG
             }
+            WorkerFrame::ClaimAck { epoch } => {
+                e.u64(*epoch);
+                TAG_CLAIM_ACK
+            }
         };
         write_frame(w, tag, &e.buf)
     }
@@ -594,6 +636,7 @@ impl WorkerFrame {
                 revision: d.u64()?,
                 synced: d.bool()?,
             },
+            TAG_CLAIM_ACK => WorkerFrame::ClaimAck { epoch: d.u64()? },
             t => anyhow::bail!("unknown worker frame tag {t:#04x}"),
         };
         d.finish()?;
@@ -742,6 +785,27 @@ mod tests {
             }
             _ => panic!("wrong frame"),
         }
+    }
+
+    #[test]
+    fn claim_roundtrip_is_exact() {
+        match roundtrip_coord(&CoordFrame::Claim { epoch: u64::MAX - 1 }) {
+            CoordFrame::Claim { epoch } => assert_eq!(epoch, u64::MAX - 1),
+            _ => panic!("wrong frame"),
+        }
+        let mut buf = Vec::new();
+        WorkerFrame::ClaimAck { epoch: 42 }.write_to(&mut buf).unwrap();
+        let mut cur = &buf[..];
+        match WorkerFrame::read_from(&mut cur).unwrap() {
+            WorkerFrame::ClaimAck { epoch } => assert_eq!(epoch, 42),
+            _ => panic!("wrong frame"),
+        }
+        assert!(cur.is_empty());
+        // trailing bytes after the epoch are a protocol error
+        let mut payload = 7u64.to_le_bytes().to_vec();
+        payload.push(0);
+        assert!(CoordFrame::decode(TAG_CLAIM, &payload).is_err());
+        assert!(WorkerFrame::decode(TAG_CLAIM_ACK, &payload).is_err());
     }
 
     #[test]

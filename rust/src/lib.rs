@@ -14,7 +14,7 @@
 //! * exact inference in `O(N²D + N⁶)` (linear in `D`) via Woodbury ([`gram`]),
 //! * an `O(N² + ND)`-memory implicit matvec + iterative solver for any `N`
 //!   ([`gram`], [`solvers`]),
-//! * the `O(N²D + N³)` polynomial-kernel special case ([`gram::poly2`]),
+//! * the `O(N²D + N³)` polynomial-kernel special case ([`gram::poly2_solve`]),
 //!
 //! and the paper's applications on top: Hessian / optimum inference for
 //! nonparametric optimization ([`gp`], [`opt`]), probabilistic linear algebra
@@ -102,120 +102,48 @@
 //!   probes, exponential-backoff reconnection, automatic re-attach
 //!   (pinned by `tests/chaos_remote.rs` under scripted fault injection).
 //!
-//! ## Operating a shard-worker fleet (runbook)
+//! ## Durability and failover
 //!
-//! **Start workers.** One process per node:
-//! `gdkron shard-worker --listen 0.0.0.0:7000`. A worker hosts one
-//! coordinator at a time, holds an `O(N² + ND)` panel mirror for it, and
-//! prints the bound address on startup (`--listen host:0` picks a free
-//! port). Workers are stateless across connections — restarting one is
-//! always safe; the coordinator re-broadcasts the panels on re-attach.
+//! The coordinator's serving state survives process death and replicates:
+//! [`coordinator::wal`] write-ahead-logs every observation barrier
+//! (`server.wal_path`; fsync'd **before** the engine applies it), compacts
+//! the log into full-state snapshots every `server.wal_snapshot_interval`
+//! records, and feeds a **hot standby** (`gdkron standby`) that tails the
+//! WAL, replays each record through the ordinary [`gp::OnlineGradientGp`]
+//! entry points — replay *is* the live path, so replica state is bitwise
+//! identical with zero cold refits — and takes over when the primary's
+//! hosting lease (`server.lease_path`, [`gram::registry::LeaseKeeper`])
+//! lapses. Takeover is an epoch-fenced lease *steal*: shard workers reject
+//! frames from earlier epochs ([`gram::wire`] v3 `Claim`), so a zombie
+//! primary degrades instead of corrupting the fleet. Pinned end to end by
+//! `tests/chaos_failover.rs`, `tests/wal_replica.rs` and `tests/wal_fuzz.rs`.
 //!
-//! **Point the coordinator at the fleet.** Either a static list —
-//! `GDKRON_REMOTE_SHARDS="nodeA:7000,nodeB:7000"` or
-//! `gram.remote_shards = ["nodeA:7000", "nodeB:7000"]` — or, preferably, a
-//! **registry file** (`GDKRON_REGISTRY_FILE` env var beats the
-//! `gram.registry_file` config key): one `host:port` per line, `#`
-//! comments. The file beats the static list and is re-read on every probe
-//! sweep, so editing it re-targets a degraded engine — grow, shrink or
-//! replace the fleet — without restarting the coordinator.
+//! ## Runbooks
 //!
-//! **Health and reconnection knobs** (all under `[gram]`):
-//! `remote_timeout_ms` (default 5000) bounds every socket operation;
-//! `remote_gather_factor` (default 12, must be > 0) multiplies it for
-//! result-gather reads so slow shard *compute* is not spurious
-//! degradation; `health_interval_ms` (default 1000) paces the registry's
-//! Ping/Pong probes while degraded; `reconnect_backoff_ms` (default 500)
-//! seeds the per-address exponential backoff (doubling, capped at 30 s).
-//! Probe a worker by hand with `gdkron shard-probe host:port` — it prints
-//! the worker's wire version, hosting-session epoch and panel revision.
+//! The operational prose lives in the repository `docs/` tree — start at
+//! `docs/OPERATIONS.md`:
 //!
-//! **What re-attach guarantees.** A transport failure degrades the engine
-//! to the in-process fallback with a clean error on the solve that
-//! observed it — predictions and streamed observations keep flowing, and
-//! fallback results are **bit-identical** to the sharded ones. While
-//! degraded, the registry probes the membership; once every member
-//! answers, the next streamed update (updates are barriers in the request
-//! stream) re-attaches: fresh connections, the full panel broadcast at
-//! the current revision, a recomputed shard plan. The swap never lands
-//! mid-solve, no in-flight solve is dropped, and post-re-attach output is
-//! bit-identical to the single-shard path — pinned across shard counts
-//! and scripted kill/restart/corruption faults by `tests/chaos_remote.rs`
-//! (fault injection lives in `tests/common/chaos_proxy.rs`).
+//! * **Shard-worker fleet** — starting workers
+//!   (`gdkron shard-worker --listen host:port`), static lists vs the
+//!   re-read-on-probe registry file, the `[gram]` health/reconnect knobs,
+//!   and the degrade → probe → re-attach guarantee (bit-identical fallback,
+//!   swap never lands mid-solve; pinned by `tests/chaos_remote.rs`).
+//! * **Panel-gemm mode** — `exact` (default; every historical bit-identity
+//!   pin holds verbatim) vs `fast` (cache-blocked, `8·k·ε·(|A|·|B|)`
+//!   entrywise envelope, deterministic within the mode;
+//!   `tests/gemm_path.rs`), and why a fleet must run one mode uniformly.
+//! * **Serving core** — the work-bag scheduler's barrier semantics, sizing
+//!   `server.executors` × `runtime.threads`, the fast-fail backpressure
+//!   contract (`server.max_queue`), and reading the [`coordinator`]
+//!   latency histograms (`p99_us` is a bucket-edge upper bound).
+//! * **Durability & failover** — WAL + snapshot management, standby
+//!   deployment, the failover procedure, and recovery from a truncated
+//!   WAL tail.
 //!
-//! ## Choosing the panel-gemm mode (runbook)
-//!
-//! Every gemm-shaped panel product (the structured matvec's three products,
-//! the sharded per-shard kernels, the cold-construction cross-Gram) runs in
-//! one of two process-global modes ([`linalg::gemm`]):
-//!
-//! * **`exact`** (default) — the serial reference kernels, unchanged. All
-//!   historical bit-identity pins hold verbatim: parallel == serial ==
-//!   sharded == remote, bit for bit. Choose this whenever reproducibility
-//!   against older recorded outputs matters.
-//! * **`fast`** — the cache-blocked, register-tiled gemm core (packed
-//!   `MR×NR` microkernel, FMA where the host supports it). Results differ
-//!   from `exact` only by reassociated floating-point summation, pinned
-//!   entrywise to `8·k·ε·(|A|·|B|)` (`tests/gemm_path.rs`); determinism is
-//!   preserved *within* the mode — thread counts, shard counts and
-//!   transports all reproduce each other bit-for-bit, per machine. The
-//!   full gram/online/sharded suites pass under `GDKRON_GEMM=fast` (a
-//!   dedicated CI leg runs them).
-//!
-//! Knob precedence, mirroring `threads`/`shards`: `--gemm fast` on the CLI
-//! beats the `GDKRON_GEMM` env var beats `gram.gemm` in a config file
-//! ([`config::resolve_gemm`]); unknown spellings fall through to the next
-//! level. The mode is process-global and installed by the launcher —
-//! engines never flip it mid-flight, and remote shard workers resolve it
-//! from their own environment, so set `GDKRON_GEMM` uniformly across a
-//! fleet. Measure the win on your hardware with
-//! `cargo bench --bench gemm_kernels` (flop-rate instrumented; the
-//! acceptance pin asserts ≥ 2× exact-serial GFLOP/s on the D=1024 serving
-//! panel product) and re-derive the parallel-dispatch threshold with
-//! `cargo bench --bench gemm_kernels -- --crossover`.
-//!
-//! ## Operating the serving core (runbook)
-//!
-//! The front door is the work-bag scheduler in [`coordinator`]: clients
-//! push into one bounded FIFO, `server.executors` threads pull coalesced
-//! prediction batches off it, and observations (and shutdown) dispatch as
-//! strict barriers — requests enqueued before an observe are answered by
-//! the old posterior, requests after it see the updated one, at every pool
-//! width.
-//!
-//! **Thread knobs.** `server.executors` (default 1) sets the executor-pool
-//! width for shared engines (`SurrogateServer::spawn_shared` /
-//! `spawn_native_opts`; the native engine is `Send + Sync`, so prediction
-//! batches run concurrently under a read lock while observes take the
-//! write lock). PJRT engines are thread-affine and always serve on one
-//! executor. Executor parallelism multiplies with — and is independent of
-//! — `runtime.threads`, the *per-batch* linalg pool: saturate with wide
-//! executors × narrow linalg pools for many small queries, or the reverse
-//! for few huge ones. `server.max_batch` / `server.deadline_us` shape the
-//! coalescing exactly as before; already-queued requests always drain into
-//! a batch regardless of deadline.
-//!
-//! **Backpressure contract.** `server.max_queue` (default 1024) bounds the
-//! admission queue. When it is full, `predict`/`observe` fail *fast* with
-//! a descriptive "surrogate server overloaded" error — the message was
-//! never enqueued, memory never grows unboundedly, and the caller decides
-//! (retry with backoff, shed, or raise the knob). Rejections are counted
-//! in `ServerMetrics::rejected` and appear in no other counter; the stop
-//! sentinel is always admitted, so shutdown cannot be refused.
-//!
-//! **Reading the latency histograms.** `ServerMetrics::predict_latency` /
-//! `observe_latency` time enqueue→response per message in log₂ µs buckets:
-//! `p50_us`/`p99_us`/`p999_us` are conservative *upper bounds* (bucket
-//! edges, ≤ 2× the true quantile; read "p99 ≤ this"), `max_us` is exact.
-//! Queue pressure shows up first in `queue_depth_max` (high-water mark)
-//! and a p999 drifting toward `deadline_us` + solve time; sustained
-//! `rejected > 0` means the pool is undersized for the offered load —
-//! raise `server.executors` (native engines) before `server.max_queue`
-//! (a deeper queue adds latency, not throughput). Error accounting splits
-//! by path: `request_errors` (per failed request) + `observe_errors` (per
-//! failed observe) = `errors`, always. Load-test the whole core with
-//! `cargo bench --bench serve_load` (closed- and open-loop modes; `--test`
-//! for the CI smoke that pins scheduler-vs-direct-engine bit-identity).
+//! Every knob referenced above is tabulated in `docs/CONFIG.md` (CLI flag,
+//! env var, config key, default, validation — the table is pinned against
+//! [`config::KNOBS`] by `tests/config_docs.rs`), and the subsystem map with
+//! its per-layer bit-identity invariants is `docs/ARCHITECTURE.md`.
 //!
 //! ## Architecture
 //!

@@ -3,14 +3,14 @@
 //! The paper's `O(N²D + (N²)³)` decomposition makes the `O(N²D)` panel
 //! products (`K̂′`/`H`/`(ΛX̃)ᵀ` against RHS blocks) the dominant flop cost,
 //! and every layer above — par pool, shards, remote workers, scheduler —
-//! bottoms out in the serial per-column kernels of [`super::mat`]. Those
+//! bottoms out in the serial per-column kernels of the `mat` module. Those
 //! kernels are latency-bound (one running sum per output element), which
 //! caps the whole serving stack at a fraction of machine peak. This module
 //! is the raw-speed answer: a BLIS-style blocked gemm (idiom: the faer
 //! blocked-`matmul` surface) with
 //!
 //! * **packed panels** — A is repacked into `MR`-row strips, B into
-//!   `NR`-column strips, sized by [`KC`]/[`MC`]/[`NC`] so the strips the
+//!   `NR`-column strips, sized by `KC`/`MC`/`NC` so the strips the
 //!   microkernel streams stay in L1/L2 instead of striding the full matrix;
 //! * **a register-tiled `MR×NR` microkernel** — 32 independent f64
 //!   accumulators (8 ymm registers on AVX2) written so the autovectorizer
@@ -37,7 +37,7 @@
 //!   `tests/gemm_path.rs`); in relative terms ≤ ~1e-12 at serving shapes.
 //!
 //! **Fast mode is still deterministic.** The arithmetic for one output
-//! element depends only on the `k`-dimension blocking ([`KC`], a global
+//! element depends only on the `k`-dimension blocking (`KC`, a global
 //! constant) — never on how the output was partitioned over threads,
 //! column blocks, or shard row-blocks, because `m`/`n` partitioning only
 //! selects *which* elements a call produces, and zero-padded edge lanes are
@@ -60,7 +60,7 @@ use super::Mat;
 /// Which kernel family the gemm-shaped panel products run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GemmMode {
-    /// Serial per-column reference kernels ([`super::mat`]). The default;
+    /// Serial per-column reference kernels (the `mat` module). The default;
     /// the ground truth every bit-identity pin is anchored to.
     Exact,
     /// The blocked kernel in this module. Faster, deterministic, and

@@ -26,7 +26,7 @@ pub mod par;
 mod qr;
 mod update;
 
-pub use chol::Cholesky;
+pub use chol::{Cholesky, NotPositiveDefinite};
 pub use eig::sym_eig;
 pub use lu::Lu;
 pub use mat::Mat;

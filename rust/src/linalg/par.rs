@@ -11,7 +11,7 @@
 //! Every product dispatches on the process-wide [`gemm::mode`] knob:
 //!
 //! * **exact** (default) — each worker runs the serial per-column kernels of
-//!   [`super::mat`] on its columns, so parallel results are bit-identical to
+//!   the `mat` module on its columns, so parallel results are bit-identical to
 //!   the serial reference (same per-column kernel, same summation order).
 //! * **fast** — each worker runs the cache-blocked [`gemm`] kernel on its
 //!   whole column block (the blocked tile, not the single column, is the

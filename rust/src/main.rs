@@ -7,6 +7,7 @@
 //! gdkron validate  [--dir artifacts]          # PJRT vs native cross-check
 //! gdkron shard-worker --listen host:port      # remote Gram shard worker
 //! gdkron shard-probe host:port [--timeout-ms N]  # health-probe a worker
+//! gdkron standby --wal PATH [--lease PATH]    # hot-standby WAL replica
 //! ```
 //!
 //! (Arg parsing is in-tree — the build environment has no clap in its
@@ -196,6 +197,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             let opts = Opts { flags: parse_flags(&args[2..])?, config: Config::default() };
             shard_probe(addr, opts.u64_or("timeout-ms", 2_000))
         }
+        Some("standby") => standby(&args[1..]),
         _ => {
             eprintln!(
                 "gdkron — High-Dimensional GP Inference with Derivatives (ICML 2021)\n\
@@ -203,7 +205,9 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  gdkron run <config.toml> [--key value …]\n  gdkron artifacts [--dir DIR]\n  \
                  gdkron validate [--dir DIR]\n  \
                  gdkron shard-worker [--listen HOST:PORT]\n  \
-                 gdkron shard-probe HOST:PORT [--timeout-ms N]\n\
+                 gdkron shard-probe HOST:PORT [--timeout-ms N]\n  \
+                 gdkron standby [--config FILE] [--wal PATH] [--lease PATH] \
+                 [--once true]\n\
                  linalg worker pool: --threads N > GDKRON_THREADS > runtime.threads \
                  (1 = serial)\n\
                  gram shard workers: --shards N > GDKRON_SHARDS > gram.shards \
@@ -216,7 +220,11 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  gram.remote_timeout_ms, gram.remote_gather_factor\n\
                  serving core: server.max_batch, server.deadline_us (batch coalescing), \
                  server.executors (engine-pool threads, native engine only), \
-                 server.max_queue (admission bound; overload = fast error)"
+                 server.max_queue (admission bound; overload = fast error)\n\
+                 durability: --wal > GDKRON_WAL_PATH > server.wal_path (unset = no WAL); \
+                 --lease > GDKRON_LEASE_PATH > server.lease_path > <wal>.lease; \
+                 server.wal_fsync, server.wal_snapshot_interval, server.lease_ttl_ms, \
+                 server.standby_poll_ms — full table in docs/CONFIG.md"
             );
             Ok(())
         }
@@ -355,6 +363,107 @@ fn shard_probe(addr: &str, timeout_ms: u64) -> anyhow::Result<()> {
         r.version, r.epoch, r.revision, r.synced
     );
     Ok(())
+}
+
+/// Hot-standby WAL replica (`gdkron standby`): tail the primary
+/// coordinator's observation WAL ([`gdkron::coordinator::wal`]), replaying
+/// every record through the ordinary [`gdkron::gp::OnlineGradientGp`]
+/// entry points, and take over when the primary's hosting lease lapses.
+///
+/// Takeover is an epoch-fenced **steal**
+/// ([`gdkron::gram::LeaseKeeper::acquire`]): the new epoch fences the old
+/// primary out of every shard worker, so a zombie that wakes up after the
+/// steal degrades instead of corrupting state. The CLI reports the
+/// promoted state and exits — an embedding deployment hands the promoted
+/// engine to `NativeEngine::from_online` and keeps serving; the full
+/// procedure is the failover runbook in `docs/OPERATIONS.md`.
+///
+/// The replica re-solves with the serving default kernel/method (squared
+/// exponential, `FitMethod::Auto`) — the WAL genesis record pins the
+/// kernel *name* and replay fails loudly on a mismatch.
+fn standby(args: &[String]) -> anyhow::Result<()> {
+    let mut flags = parse_flags(args)?;
+    let config = match flags.remove("config") {
+        Some(p) => Config::from_file(&p)?,
+        None => Config::default(),
+    };
+    let opts = Opts { flags, config };
+    apply_threads(&opts);
+    apply_shards(&opts);
+    apply_gemm(&opts);
+
+    // install the CLI overrides so the shared resolvers (and any engine this
+    // process later builds from the same config) see flag > env > config
+    gdkron::config::set_cli_wal_path(opts.flags.get("wal").cloned());
+    gdkron::config::set_cli_lease_path(opts.flags.get("lease").cloned());
+    let wal_path = gdkron::config::resolve_wal_path(&opts.config).ok_or_else(|| {
+        anyhow::anyhow!("standby needs a WAL: --wal PATH, GDKRON_WAL_PATH or server.wal_path")
+    })?;
+    let lease_path = gdkron::config::resolve_lease_path(&opts.config)
+        .expect("lease path derives from the WAL path");
+    let ttl = gdkron::config::lease_ttl(&opts.config);
+    let poll = gdkron::config::standby_poll(&opts.config);
+    let once = opts.bool_or("once", false);
+    let holder = opts.str_or("holder", "standby");
+
+    let mut replica = gdkron::coordinator::Standby::new(
+        gdkron::coordinator::WalPaths::from_base(&wal_path),
+        Arc::new(SquaredExponential),
+        gdkron::gp::FitMethod::Auto,
+    );
+    println!(
+        "gdkron standby: tailing {} (lease {}, ttl {} ms, poll {} ms)",
+        wal_path.display(),
+        lease_path.display(),
+        ttl.as_millis(),
+        poll.as_millis()
+    );
+    loop {
+        match replica.catch_up() {
+            Ok(r) if r.applied > 0 || r.snapshot_loaded => println!(
+                "standby: caught up to seq {} (applied {}, snapshot: {})",
+                replica.applied_seq(),
+                r.applied,
+                r.snapshot_loaded
+            ),
+            Ok(_) => {}
+            // transient (primary mid-rotation, WAL not created yet): keep
+            // tailing — but in --once mode surface it
+            Err(e) if once => return Err(e),
+            Err(e) => eprintln!("standby: catch-up failed (retrying): {e}"),
+        }
+
+        // Take over only once a primary *held* the lease and let it lapse.
+        // No lease file means no primary ever started — nothing to replace.
+        let now = gdkron::gram::registry::now_unix_ms();
+        let lapsed = matches!(
+            gdkron::gram::registry::read_lease(&lease_path)?,
+            Some(l) if l.expired_at(now)
+        );
+        if lapsed && replica.engine().is_some() {
+            let keeper = gdkron::gram::LeaseKeeper::acquire(&lease_path, &holder, ttl)?;
+            let (seq, errs) = (replica.applied_seq(), replica.apply_errors());
+            let (engine, window) = replica.promote()?;
+            println!(
+                "standby: PROMOTED at epoch {} — seq {}, N={} D={} window={} \
+                 cold_refits={} replayed_rollbacks={}",
+                keeper.epoch(),
+                seq,
+                engine.gp().n(),
+                engine.gp().d(),
+                window,
+                engine.cold_refits(),
+                errs
+            );
+            return Ok(());
+        }
+        if once {
+            let seq = replica.applied_seq();
+            println!("standby: caught up to seq {seq} (lease live or absent)");
+            return Ok(());
+        }
+        std::thread::sleep(poll);
+    }
 }
 
 /// Cross-check the PJRT artifacts against the native implementation

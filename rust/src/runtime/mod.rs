@@ -69,7 +69,7 @@ pub struct ArtifactSpec {
     pub inputs: Vec<TensorSpec>,
 }
 
-/// Argument value for [`ArtifactRegistry::execute`].
+/// Argument value for [`ArtifactRegistry::execute_raw`].
 pub enum ArgValue<'a> {
     /// A `D×N` matrix (transposed+cast to the python row-major f32 layout).
     Mat(&'a Mat),

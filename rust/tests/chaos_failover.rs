@@ -1,0 +1,203 @@
+//! Kill-the-primary failover chaos test: the full degrade → lease lapse →
+//! standby replay → epoch-fenced takeover sequence, end to end, against
+//! real loopback shard workers.
+//!
+//! The acceptance pins:
+//! * the hot standby's replayed state is **bitwise** equal to an
+//!   unsharded mirror of the primary — replay goes through the ordinary
+//!   `OnlineGradientGp` entry points, so there is nothing to drift;
+//! * takeover performs **zero cold refits** (the `cold_refits == 1`
+//!   steady-state invariant survives the failover);
+//! * a **zombie primary** — one that wakes up after the lease steal —
+//!   cannot corrupt fleet state: its lease renewal fails with the stolen
+//!   epoch, its streamed write is rejected by the workers' epoch fence
+//!   ("stale coordinator epoch"), and the new primary's sharded solves
+//!   stay bitwise equal to the mirror afterwards.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use gdkron::coordinator::{Standby, WalOptions, WalPaths, WalWriter};
+use gdkron::gp::{FitMethod, FitOptions, OnlineGradientGp};
+use gdkron::gram::registry::{now_unix_ms, read_lease};
+use gdkron::gram::remote::serve;
+use gdkron::gram::{LeaseKeeper, Metric, RegistryConfig};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::CgOptions;
+
+/// Socket-operation bound: generous for CI, far below a hang.
+const TIMEOUT: Duration = Duration::from_secs(5);
+/// Primary heartbeat TTL: long enough that the live-lease assertions are
+/// not racy on a loaded CI box, short enough to keep the lapse wait cheap.
+const TTL: Duration = Duration::from_millis(1_000);
+
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = serve(listener);
+    });
+    addr
+}
+
+/// Iterative solves route every re-solve through the shard engine, so the
+/// bitwise mirror comparison also proves the worker mirrors were never
+/// corrupted — an extra column smuggled in by a zombie would change the
+/// operator applications, and hence the representer weights.
+fn fit_method() -> FitMethod {
+    FitMethod::Iterative(CgOptions { rtol: 1e-10, max_iters: 20_000, ..Default::default() })
+}
+
+fn fit(x: &Mat, g: &Mat) -> OnlineGradientGp {
+    let opts = FitOptions { method: fit_method(), ..Default::default() };
+    OnlineGradientGp::fit(Arc::new(SquaredExponential), Metric::Iso(0.5), x, g, &opts)
+        .expect("fit")
+}
+
+fn registry(addrs: Vec<String>, epoch: u64) -> RegistryConfig {
+    let mut cfg = RegistryConfig::new(addrs);
+    cfg.health_interval = Duration::from_millis(25);
+    cfg.reconnect_backoff = Duration::from_millis(25);
+    cfg.remote.timeout = TIMEOUT;
+    cfg.remote.claim_epoch = Some(epoch);
+    cfg
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape mismatch");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i} differs ({x} vs {y})");
+    }
+}
+
+#[test]
+fn primary_death_standby_steal_and_fenced_zombie() {
+    let base = std::env::temp_dir()
+        .join(format!("gdkron-chaos-failover-{}.wal", std::process::id()));
+    let paths = WalPaths::from_base(&base);
+    let mut lease_os = base.clone().into_os_string();
+    lease_os.push(".lease");
+    let lease = std::path::PathBuf::from(lease_os);
+    for p in [&paths.wal, &paths.snap, &lease] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    let addrs = vec![spawn_worker(), spawn_worker()];
+
+    // identical fits: the (soon-to-be-sharded) primary and its unsharded
+    // mirror — the oracle every later state is compared against
+    let (d, n0) = (4usize, 3usize);
+    let mut rng = Rng::new(71);
+    let x0 = Mat::from_fn(d, n0, |_, _| rng.gauss());
+    let g0 = Mat::from_fn(d, n0, |_, _| rng.gauss());
+    let mut primary = fit(&x0, &g0);
+    let mut mirror = fit(&x0, &g0);
+
+    // the primary takes the lease at epoch 1, claims the workers, and
+    // opens the WAL (fsync on — this is the durability path under test)
+    let keeper = LeaseKeeper::acquire(&lease, "primary", TTL).expect("fresh lease");
+    assert_eq!(keeper.epoch(), 1);
+    primary.set_remote_registry(registry(addrs.clone(), keeper.epoch())).expect("claimed attach");
+    assert_eq!(primary.shards(), 2);
+    let wal_opts = WalOptions { fsync: true, snapshot_interval: 3 };
+    let mut wal = WalWriter::create(paths.clone(), wal_opts, &primary, 0).expect("wal");
+
+    // streamed serving: WAL-first, sharded solve, heartbeat — with a
+    // snapshot compaction landing mid-stream so the failover also
+    // exercises the snapshot + tail recovery path
+    for _ in 0..5 {
+        let xc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        let gc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        wal.log_observe(&xc, &gc).expect("WAL-first append");
+        primary.observe(&xc, &gc).expect("primary observe");
+        mirror.observe(&xc, &gc).expect("mirror observe");
+        if wal.snapshot_due() {
+            wal.write_snapshot(&primary).expect("snapshot compaction");
+        }
+        keeper.renew().expect("primary heartbeat");
+    }
+    assert!(primary.shard_degradation().is_none(), "fleet must be healthy pre-fault");
+    assert_bits_eq(primary.gp().z(), mirror.gp().z(), "sharded primary vs unsharded mirror");
+
+    // a hot standby tails the WAL while the primary lives...
+    let mut sb = Standby::new(paths.clone(), Arc::new(SquaredExponential), fit_method());
+    let r = sb.catch_up().expect("tail while the primary is alive");
+    assert_eq!(r.apply_errors, 0);
+    assert_eq!(sb.applied_seq(), 6, "genesis + five observes");
+    // ...but must NOT be able to steal a live lease
+    keeper.renew().expect("primary heartbeat");
+    let held = LeaseKeeper::acquire(&lease, "standby", TTL).unwrap_err().to_string();
+    assert!(held.contains("held by"), "live lease must not be stealable: {held}");
+
+    // PRIMARY DIES: it simply stops renewing. The lease lapses after TTL.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let l = read_lease(&lease).unwrap().expect("lease file exists");
+        if l.expired_at(now_unix_ms()) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "lease must lapse once renewals stop");
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // STANDBY TAKES OVER: final catch-up, steal at epoch 2, claim workers
+    sb.catch_up().expect("final catch-up");
+    let thief = LeaseKeeper::acquire(&lease, "standby", TTL).expect("steal a lapsed lease");
+    assert_eq!(thief.epoch(), 2, "the steal must fence every epoch-1 session");
+    let (mut promoted, window) = sb.promote().expect("promote");
+    assert_eq!(window, 0);
+    promoted
+        .set_remote_registry(registry(addrs.clone(), thief.epoch()))
+        .expect("claimed re-attach at the stolen epoch");
+    assert_eq!(promoted.shards(), 2);
+
+    // the replayed state is bitwise the mirror's — and it got there with
+    // zero cold refits beyond the initial fit
+    assert_bits_eq(promoted.gp().x(), mirror.gp().x(), "X after failover");
+    assert_bits_eq(promoted.gp().g(), mirror.gp().g(), "G after failover");
+    assert_bits_eq(promoted.gp().z(), mirror.gp().z(), "Z after failover");
+    assert_eq!(promoted.cold_refits(), 1, "failover must not cold-refit");
+
+    // ZOMBIE: the old primary wakes up. Its heartbeat sees the steal...
+    let stolen = keeper.renew().unwrap_err().to_string();
+    assert!(stolen.contains("stolen"), "zombie renewal must report the steal: {stolen}");
+    // ...and its streamed write is fenced at the workers: the zombie keeps
+    // serving itself from the in-process fallback (no panic, no hang), but
+    // the fleet state is untouched
+    let xz: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+    let gz: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+    primary.observe(&xz, &gz).expect("zombie observe degrades, not errors");
+    let reason = primary.shard_degradation().expect("zombie must be degraded");
+    assert!(
+        reason.contains("stale coordinator epoch"),
+        "degradation must cite the epoch fence: {reason}"
+    );
+
+    // the new primary is unaffected by the zombie's attempt: it re-creates
+    // the WAL from its promoted state and keeps streaming, and its sharded
+    // solves — through the very worker mirrors the zombie tried to write —
+    // stay bitwise equal to the unsharded mirror
+    let mut wal2 = WalWriter::create(paths.clone(), wal_opts, &promoted, window).expect("wal2");
+    for _ in 0..3 {
+        let xc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        let gc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        wal2.log_observe(&xc, &gc).expect("WAL-first append");
+        promoted.observe(&xc, &gc).expect("post-failover observe");
+        mirror.observe(&xc, &gc).expect("mirror observe");
+        thief.renew().expect("new primary heartbeat");
+    }
+    assert!(
+        promoted.shard_degradation().is_none(),
+        "the fence must not touch the epoch-2 holder"
+    );
+    assert_bits_eq(promoted.gp().z(), mirror.gp().z(), "Z after the zombie's fenced write");
+    assert_eq!(promoted.cold_refits(), 1, "steady state must stay incremental");
+
+    for p in [&paths.wal, &paths.snap, &lease] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -263,7 +263,8 @@ fn delayed_result_frame_times_out_within_the_gather_budget() {
         after_frames: 1,
         kind: FaultKind::Delay(Duration::from_millis(2_500)),
     });
-    let opts = RemoteOptions { timeout: Duration::from_millis(300), gather_factor: 2 };
+    let opts =
+        RemoteOptions { timeout: Duration::from_millis(300), gather_factor: 2, claim_epoch: None };
     let engine = ShardedGramFactors::connect_remote_opts(&f, &[proxy.addr().to_string()], &opts)
         .expect("connect");
     let nd = f.n() * f.d();

@@ -1,0 +1,103 @@
+//! `docs/CONFIG.md` ↔ [`gdkron::config::KNOBS`] sync pin.
+//!
+//! The configuration reference table is documentation, but it is pinned
+//! like code: every knob in the registry must have exactly one table row
+//! with the same CLI flag, env var and default, in the same order — and
+//! no row may document a knob the registry doesn't know. Adding a knob
+//! means adding it in both places or this test fails.
+
+use gdkron::config::{Config, KNOBS};
+
+fn config_md() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/CONFIG.md");
+    std::fs::read_to_string(path).expect("docs/CONFIG.md must exist")
+}
+
+/// The knob rows of the reference table: each as its raw line plus the
+/// first four cells (key, cli, env, default) — the later cells may
+/// contain escaped pipes, so they are matched by `contains` instead.
+fn table_rows(md: &str) -> Vec<(String, Vec<String>)> {
+    md.lines()
+        .filter(|l| l.starts_with("| `"))
+        .map(|l| {
+            let unescaped = l.replace("\\|", "\u{1}");
+            let cells: Vec<String> = unescaped
+                .trim_matches('|')
+                .split('|')
+                .map(|c| c.trim().replace('\u{1}', "|"))
+                .collect();
+            (l.replace("\\|", "|"), cells)
+        })
+        .collect()
+}
+
+fn strip_ticks(cell: &str) -> &str {
+    cell.trim_matches('`')
+}
+
+#[test]
+fn every_knob_has_a_doc_row_and_every_row_a_knob() {
+    let md = config_md();
+    let rows = table_rows(&md);
+    let doc_keys: Vec<&str> = rows.iter().map(|(_, c)| strip_ticks(&c[0])).collect();
+    let reg_keys: Vec<&str> = KNOBS.iter().map(|k| k.key).collect();
+    assert_eq!(
+        doc_keys, reg_keys,
+        "docs/CONFIG.md table rows must list exactly the KNOBS keys, in registry order"
+    );
+}
+
+#[test]
+fn doc_rows_match_the_registry_fields() {
+    let md = config_md();
+    let rows = table_rows(&md);
+    assert_eq!(rows.len(), KNOBS.len());
+    for (knob, (line, cells)) in KNOBS.iter().zip(&rows) {
+        assert!(cells.len() >= 5, "row for {} has too few cells: {line}", knob.key);
+        let (cli, env, default) = (&cells[1], &cells[2], &cells[3]);
+        match knob.cli {
+            Some(flag) => assert_eq!(
+                strip_ticks(cli),
+                flag,
+                "CLI cell for {} must be `{flag}`",
+                knob.key
+            ),
+            None => assert_eq!(cli, "—", "{} has no CLI flag; cell must be —", knob.key),
+        }
+        match knob.env {
+            Some(var) => assert_eq!(
+                strip_ticks(env),
+                var,
+                "env cell for {} must be `{var}`",
+                knob.key
+            ),
+            None => assert_eq!(env, "—", "{} has no env var; cell must be —", knob.key),
+        }
+        assert_eq!(default, knob.default, "default cell for {} drifted", knob.key);
+        assert!(
+            line.contains(knob.validation),
+            "row for {} must state its validation rule {:?}: {line}",
+            knob.key,
+            knob.validation
+        );
+    }
+}
+
+#[test]
+fn every_registry_sample_parses_and_sets_its_key() {
+    // belt and braces with the in-module registry test: the samples the
+    // docs lean on must stay parseable by the real config parser
+    for k in KNOBS {
+        let c = Config::from_str(k.sample)
+            .unwrap_or_else(|e| panic!("sample for {} does not parse: {e:?}", k.key));
+        assert!(
+            c.str(k.key).is_some()
+                || c.int(k.key).is_some()
+                || c.float(k.key).is_some()
+                || c.bool(k.key).is_some()
+                || c.str_array(k.key).is_some(),
+            "sample for {} does not set the key it documents",
+            k.key
+        );
+    }
+}

@@ -1,0 +1,212 @@
+//! WAL → standby replay pins: the replica replays the primary's
+//! observation stream through the ordinary [`OnlineGradientGp`] entry
+//! points, so its state must be **bitwise** equal to the primary's —
+//! including the windowed eviction sequence, across snapshot
+//! compactions, and resuming over a truncated tail.
+
+use std::sync::Arc;
+
+use gdkron::coordinator::{Standby, WalOptions, WalPaths, WalWriter};
+use gdkron::gp::{FitMethod, FitOptions, OnlineGradientGp};
+use gdkron::gram::Metric;
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+
+fn paths(tag: &str) -> WalPaths {
+    let base =
+        std::env::temp_dir().join(format!("gdkron-replica-{tag}-{}.wal", std::process::id()));
+    let p = WalPaths::from_base(base);
+    cleanup(&p);
+    p
+}
+
+fn cleanup(p: &WalPaths) {
+    let _ = std::fs::remove_file(&p.wal);
+    let _ = std::fs::remove_file(&p.snap);
+}
+
+fn primary(d: usize, n: usize, seed: u64) -> OnlineGradientGp {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(d, n, |_, _| rng.gauss());
+    let g = Mat::from_fn(d, n, |_, _| rng.gauss());
+    OnlineGradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.7),
+        &x,
+        &g,
+        &FitOptions::default(),
+    )
+    .unwrap()
+}
+
+fn standby_for(p: &WalPaths) -> Standby {
+    Standby::new(p.clone(), Arc::new(SquaredExponential), FitMethod::default())
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape mismatch");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i} differs ({x} vs {y})");
+    }
+}
+
+fn assert_replica_matches(replica: &OnlineGradientGp, primary: &OnlineGradientGp) {
+    assert_bits_eq(replica.gp().x(), primary.gp().x(), "X");
+    assert_bits_eq(replica.gp().g(), primary.gp().g(), "G");
+    assert_bits_eq(replica.gp().z(), primary.gp().z(), "Z (representer weights)");
+}
+
+/// WAL-first discipline, as the serving engine drives it: log, then apply.
+fn observe(wal: &mut WalWriter, eng: &mut OnlineGradientGp, x: &[f64], g: &[f64], win: usize) {
+    wal.log_observe(x, g).unwrap();
+    eng.observe_windowed(x, g, win).unwrap();
+}
+
+#[test]
+fn standby_replays_the_live_stream_bitwise_and_resumes_the_tail() {
+    let p = paths("stream");
+    let mut eng = primary(4, 3, 21);
+    let opts = WalOptions { fsync: false, snapshot_interval: 1_000 };
+    let mut wal = WalWriter::create(p.clone(), opts, &eng, 0).unwrap();
+    let mut rng = Rng::new(99);
+    for _ in 0..5 {
+        let x: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        let g: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        observe(&mut wal, &mut eng, &x, &g, 0);
+    }
+
+    let mut sb = standby_for(&p);
+    let r = sb.catch_up().unwrap();
+    assert_eq!(r.applied, 6, "genesis + five observes");
+    assert_eq!(r.apply_errors, 0);
+    assert_eq!(sb.applied_seq(), 6);
+    assert_replica_matches(sb.engine().unwrap(), &eng);
+    assert_eq!(sb.engine().unwrap().cold_refits(), 1, "replay must stay incremental");
+
+    // the primary keeps streaming; the standby tails from its offset
+    for _ in 0..2 {
+        let x: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        let g: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        observe(&mut wal, &mut eng, &x, &g, 0);
+    }
+    let r = sb.catch_up().unwrap();
+    assert_eq!((r.applied, r.skipped, r.snapshot_loaded), (2, 0, false));
+    assert_replica_matches(sb.engine().unwrap(), &eng);
+    cleanup(&p);
+}
+
+#[test]
+fn windowed_replay_reproduces_the_eviction_sequence() {
+    let p = paths("window");
+    let win = 3;
+    let mut eng = primary(3, 2, 22);
+    let opts = WalOptions { fsync: false, snapshot_interval: 1_000 };
+    let mut wal = WalWriter::create(p.clone(), opts, &eng, win).unwrap();
+    let mut rng = Rng::new(7);
+    // grow past the window: every observe beyond n = 3 evicts the oldest
+    for _ in 0..6 {
+        let x: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+        let g: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+        observe(&mut wal, &mut eng, &x, &g, win);
+    }
+    assert_eq!(eng.n(), win, "primary window must be saturated");
+
+    let mut sb = standby_for(&p);
+    sb.catch_up().unwrap();
+    // the genesis record carries the window boundary, so the replica
+    // slides at exactly the same observes the primary did
+    assert_eq!(sb.window(), win);
+    let replica = sb.engine().unwrap();
+    assert_eq!(replica.n(), win);
+    assert_replica_matches(replica, &eng);
+    assert_eq!(replica.cold_refits(), 1);
+    cleanup(&p);
+}
+
+#[test]
+fn truncated_tail_is_benign_and_replay_resumes_over_it() {
+    let p = paths("tail");
+    let mut eng = primary(3, 2, 23);
+    let opts = WalOptions { fsync: false, snapshot_interval: 1_000 };
+    let mut wal = WalWriter::create(p.clone(), opts, &eng, 0).unwrap();
+    let mut rng = Rng::new(8);
+    for _ in 0..3 {
+        let x: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+        let g: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+        observe(&mut wal, &mut eng, &x, &g, 0);
+    }
+    let full = std::fs::read(&p.wal).unwrap();
+
+    // crash mid-append: the last record's tail never hit the disk
+    std::fs::write(&p.wal, &full[..full.len() - 5]).unwrap();
+    let mut sb = standby_for(&p);
+    let r = sb.catch_up().unwrap();
+    assert_eq!(r.applied, 3, "genesis + the two complete observes");
+    assert_eq!(sb.applied_seq(), 3);
+
+    // the append completes (primary recovered / flushed): the standby
+    // picks up exactly the one record it was missing
+    std::fs::write(&p.wal, &full).unwrap();
+    let r = sb.catch_up().unwrap();
+    assert_eq!((r.applied, r.skipped), (1, 0));
+    assert_eq!(sb.applied_seq(), 4);
+    assert_replica_matches(sb.engine().unwrap(), &eng);
+    cleanup(&p);
+}
+
+#[test]
+fn snapshot_catchup_loads_the_sidecar_and_skips_covered_records() {
+    let p = paths("snap");
+    let mut eng = primary(4, 2, 24);
+    let opts = WalOptions { fsync: false, snapshot_interval: 2 };
+    let mut wal = WalWriter::create(p.clone(), opts, &eng, 0).unwrap();
+    let mut rng = Rng::new(9);
+    for _ in 0..2 {
+        let x: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        let g: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+        observe(&mut wal, &mut eng, &x, &g, 0);
+    }
+    assert!(wal.snapshot_due());
+    wal.write_snapshot(&eng).unwrap();
+    let x: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+    let g: Vec<f64> = (0..4).map(|_| rng.gauss()).collect();
+    observe(&mut wal, &mut eng, &x, &g, 0);
+
+    // a fresh standby restores the snapshot, then replays only the tail
+    let mut sb = standby_for(&p);
+    let r = sb.catch_up().unwrap();
+    assert!(r.snapshot_loaded);
+    assert_eq!((r.applied, r.skipped), (1, 0), "only the post-snapshot record replays");
+    assert_eq!(sb.applied_seq(), 4);
+    let replica = sb.engine().unwrap();
+    assert_replica_matches(replica, &eng);
+    assert_eq!(replica.cold_refits(), eng.cold_refits(), "restore is not a refit");
+    cleanup(&p);
+}
+
+#[test]
+fn drop_first_and_set_targets_replay_bitwise() {
+    let p = paths("ops");
+    let mut eng = primary(3, 3, 25);
+    let opts = WalOptions { fsync: false, snapshot_interval: 1_000 };
+    let mut wal = WalWriter::create(p.clone(), opts, &eng, 0).unwrap();
+
+    wal.log_drop_first().unwrap();
+    eng.drop_first().unwrap();
+    let mut rng = Rng::new(10);
+    let g2 = Mat::from_fn(3, eng.n(), |_, _| rng.gauss());
+    wal.log_set_targets(&g2).unwrap();
+    eng.set_targets(&g2).unwrap();
+
+    let mut sb = standby_for(&p);
+    let r = sb.catch_up().unwrap();
+    assert_eq!((r.applied, r.apply_errors), (3, 0));
+    assert_replica_matches(sb.engine().unwrap(), &eng);
+
+    // promotion hands the engine (and the recorded window) to the caller
+    let (promoted, window) = sb.promote().unwrap();
+    assert_eq!(window, 0);
+    assert_replica_matches(&promoted, &eng);
+    cleanup(&p);
+}

@@ -8,8 +8,9 @@
 //! CI run fuzzes the same corpus):
 //!
 //! * round-trip property for **every** frame type, including the v2
-//!   health/registry frames (`Ping`/`Pong`/`SyncAt`): encode → frame-read
-//!   → decode → re-encode is byte-identical;
+//!   health/registry frames (`Ping`/`Pong`/`SyncAt`) and the v3
+//!   epoch-fence frames (`Claim`/`ClaimAck`): encode → frame-read →
+//!   decode → re-encode is byte-identical;
 //! * every truncation of every valid encoding is a clean error;
 //! * length-field inflation (header promising more payload than sent, up
 //!   to `u32::MAX`) is a clean error — the `MAX_FRAME_BYTES` cap rejects
@@ -67,6 +68,7 @@ fn coord_corpus() -> Vec<(&'static str, CoordFrame)> {
         ("drop_first", CoordFrame::DropFirst),
         ("shutdown", CoordFrame::Shutdown),
         ("ping", CoordFrame::Ping { nonce: 0x0123_4567_89AB_CDEF }),
+        ("claim", CoordFrame::Claim { epoch: u64::MAX - 3 }),
     ]
 }
 
@@ -79,6 +81,7 @@ fn worker_corpus() -> Vec<(&'static str, WorkerFrame)> {
         ("out", WorkerFrame::Out { block: Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64) }),
         ("err", WorkerFrame::Err { message: "boom × unicode ∇K∇′".into() }),
         ("pong", WorkerFrame::Pong { nonce: 42, epoch: u64::MAX, revision: 7, synced: true }),
+        ("claim_ack", WorkerFrame::ClaimAck { epoch: u64::MAX - 3 }),
     ]
 }
 
@@ -110,13 +113,18 @@ fn all_encodings() -> Vec<(String, Vec<u8>)> {
 fn corpus_covers_every_frame_type() {
     // if a frame variant is added without a corpus entry, this pin fails
     // (update BOTH when the protocol grows)
-    assert_eq!(coord_corpus().len(), 10, "coordinator corpus out of date");
-    assert_eq!(worker_corpus().len(), 6, "worker corpus out of date");
+    assert_eq!(coord_corpus().len(), 11, "coordinator corpus out of date");
+    assert_eq!(worker_corpus().len(), 7, "worker corpus out of date");
     assert!(
         coord_corpus().iter().any(|(n, _)| *n == "ping")
             && coord_corpus().iter().any(|(n, _)| *n == "sync_at")
             && worker_corpus().iter().any(|(n, _)| *n == "pong"),
         "the v2 health frames must be fuzzed"
+    );
+    assert!(
+        coord_corpus().iter().any(|(n, _)| *n == "claim")
+            && worker_corpus().iter().any(|(n, _)| *n == "claim_ack"),
+        "the v3 epoch-fence frames must be fuzzed"
     );
 }
 
@@ -202,8 +210,8 @@ fn every_tag_value_decodes_without_panicking() {
     payloads.push(empty);
     // the current tag space (update when the protocol grows — the corpus
     // coverage pin above will remind you)
-    let coord_known = 0x01u8..=0x0A;
-    let worker_known = 0x81u8..=0x86;
+    let coord_known = 0x01u8..=0x0B;
+    let worker_known = 0x81u8..=0x87;
     for tag in 0u8..=255 {
         for payload in &payloads {
             // must never panic; Ok (tag happens to fit the payload) and
