@@ -629,6 +629,22 @@ pub const KNOBS: &[Knob] = &[
         sample: "[gp]\nwindow = 256",
     },
     Knob {
+        key: "gp.compaction",
+        cli: None,
+        env: None,
+        default: "forget",
+        validation: "forget | exact, case-insensitive; unparseable = forget",
+        sample: "[gp]\ncompaction = \"exact\"",
+    },
+    Knob {
+        key: "gp.tail_max",
+        cli: None,
+        env: None,
+        default: "0 (unbounded)",
+        validation: "integer >= 0; negatives clamp to 0",
+        sample: "[gp]\ntail_max = 512",
+    },
+    Knob {
         key: "server.max_batch",
         cli: None,
         env: None,

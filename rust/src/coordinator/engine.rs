@@ -2,7 +2,7 @@
 
 use super::wal::{WalPaths, WalWriter};
 use crate::config::Config;
-use crate::gp::{GradientGp, OnlineGradientGp};
+use crate::gp::{Compaction, GradientGp, OnlineGradientGp};
 use crate::linalg::Mat;
 use crate::runtime::{ArgValue, ArtifactRegistry};
 
@@ -17,6 +17,17 @@ pub struct ShardHealth {
     /// Whether the shard transport is currently degraded to the
     /// in-process fallback.
     pub degraded: bool,
+}
+
+/// Tiered-posterior gauges surfaced into [`super::ServerMetrics`]
+/// (the server copies the latest values after every observe).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TailHealth {
+    /// Fold-ops performed: evictions compacted into the tail instead of
+    /// forgotten (`gp.compaction = exact`).
+    pub compactions: u64,
+    /// Observations currently held by the compacted tail.
+    pub tail_len: usize,
 }
 
 /// A batched gradient-prediction backend.
@@ -38,6 +49,11 @@ pub trait Engine {
     /// Shard-transport health, for backends that shard their Gram operator
     /// (`None` for backends without one).
     fn shard_health(&self) -> Option<ShardHealth> {
+        None
+    }
+    /// Tiered-posterior gauges, for backends that compact evictions into a
+    /// tail (`None` for backends without one).
+    fn tail_health(&self) -> Option<TailHealth> {
         None
     }
     /// Backend label for metrics/logs.
@@ -99,7 +115,10 @@ impl NativeEngine {
 
     /// Configure from config keys: `gp.online` (bool, default `true`;
     /// `false` forces the cold-refit A/B path), `gp.window` (int ≥ 0,
-    /// default 0 = unbounded), `gram.shards` (via
+    /// default 0 = unbounded), `gp.compaction` (`forget` | `exact`, default
+    /// `forget`; `exact` folds window evictions into the compacted tail so
+    /// eviction stops meaning forgetting) with `gp.tail_max` bounding the
+    /// tail (int ≥ 0, default 0 = unbounded), `gram.shards` (via
     /// [`crate::config::resolve_shards`]: `--shards` CLI override beats
     /// `GDKRON_SHARDS` beats the config key; default 1 = single-shard) and
     /// the remote-shard knobs: `gram.remote_shards` (via
@@ -130,8 +149,12 @@ impl NativeEngine {
     pub fn from_config(gp: GradientGp, config: &Config) -> Self {
         let online = config.bool_or("gp.online", true);
         let window = config.int_or("gp.window", 0).max(0) as usize;
+        let compaction = Compaction::parse(config.str_or("gp.compaction", "forget"));
+        let tail_max = config.int_or("gp.tail_max", 0).max(0) as usize;
         let mut engine = Self::with_window(gp, window);
         engine.gp.set_online(online);
+        engine.gp.set_compaction(compaction);
+        engine.gp.set_tail_max(tail_max);
         let remote = crate::config::resolve_remote_shards(config);
         let registry_file = crate::config::resolve_registry_file(config);
         if !remote.is_empty() || registry_file.is_some() {
@@ -191,6 +214,16 @@ impl NativeEngine {
     pub fn cold_refits(&self) -> usize {
         self.gp.cold_refits()
     }
+
+    /// Fold-ops performed by the conditioning engine.
+    pub fn compactions(&self) -> u64 {
+        self.gp.compactions()
+    }
+
+    /// Observations currently held by the compacted tail.
+    pub fn tail_len(&self) -> usize {
+        self.gp.tail_len()
+    }
 }
 
 impl Engine for NativeEngine {
@@ -233,6 +266,9 @@ impl Engine for NativeEngine {
             reattaches: self.gp.shard_reattaches(),
             degraded: self.gp.shard_degradation().is_some(),
         })
+    }
+    fn tail_health(&self) -> Option<TailHealth> {
+        Some(TailHealth { compactions: self.gp.compactions(), tail_len: self.gp.tail_len() })
     }
     fn name(&self) -> &'static str {
         "native"

@@ -53,7 +53,7 @@ mod server;
 pub mod wal;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, NativeEngine, PjrtEngine, ShardHealth};
+pub use engine::{Engine, NativeEngine, PjrtEngine, ShardHealth, TailHealth};
 pub use scheduler::{LatencyHistogram, SchedulerOptions, MAX_EXECUTORS};
 pub use server::{ServerMetrics, SurrogateClient, SurrogateServer};
 pub use wal::{CatchUpReport, Standby, WalOptions, WalPaths, WalWriter};

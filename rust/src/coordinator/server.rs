@@ -87,6 +87,13 @@ pub struct ServerMetrics {
     /// Whether the engine's shard transport is *currently* degraded to the
     /// in-process fallback (as of the last streamed observation).
     pub shard_degraded: bool,
+    /// Window evictions folded into the compacted tail instead of forgotten
+    /// (`gp.compaction = exact`; refreshed from
+    /// [`super::Engine::tail_health`] after every streamed observation).
+    pub compactions: u64,
+    /// Observations currently held by the compacted tail (as of the last
+    /// streamed observation).
+    pub tail_len: usize,
     /// Enqueue→response latency of every answered prediction request
     /// (served and failed; read `p50_us`/`p99_us`/`p999_us`).
     pub predict_latency: LatencyHistogram,
@@ -425,6 +432,12 @@ fn apply_observe<E: Engine + ?Sized>(
             m.shard_probes = h.probes;
             m.shard_reattaches = h.reattaches;
             m.shard_degraded = h.degraded;
+        }
+        // the tail only changes at the same barrier (folds ride the
+        // window slide), so its gauges refresh here too
+        if let Some(t) = engine.tail_health() {
+            m.compactions = t.compactions;
+            m.tail_len = t.tail_len;
         }
     }
     let _ = o.resp.send(res);

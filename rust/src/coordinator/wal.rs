@@ -61,7 +61,7 @@ use std::io::Write;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::gp::{EngineState, FitMethod, FitOptions, OnlineGradientGp};
+use crate::gp::{Compaction, EngineState, FitMethod, FitOptions, GradientTail, OnlineGradientGp};
 use crate::gram::wire::{write_frame, Dec, Enc, MAX_FRAME_BYTES};
 use crate::gram::Metric;
 use crate::kernels::ScalarKernel;
@@ -74,7 +74,15 @@ pub const WAL_MAGIC: u32 = u32::from_le_bytes(*b"GDKL");
 pub const SNAP_MAGIC: u32 = u32::from_le_bytes(*b"GDKS");
 
 /// On-disk format version; bumped on any record-layout change.
-pub const WAL_FORMAT_VERSION: u16 = 1;
+/// v2: the genesis record and the snapshot carry the compaction policy
+/// (`gp.compaction` / `gp.tail_max`), and the snapshot carries the tiered
+/// posterior's [`crate::gp::GradientTail`] plus the fold counter. Folds
+/// themselves need **no new record type**: a fold is a deterministic
+/// function of the existing `Observe`/`DropFirst` barriers (frozen barrier
+/// weights, captured panel slices, incrementally-maintained `at_hot`), so a
+/// standby replaying the same records reproduces the tail bitwise —
+/// `tests/wal_replica.rs` and `tests/chaos_failover.rs` pin this.
+pub const WAL_FORMAT_VERSION: u16 = 2;
 
 // Record tags. Disjoint from the live wire-protocol tag space on purpose:
 // a WAL accidentally fed to a socket decoder (or vice versa) fails fast on
@@ -99,6 +107,12 @@ pub enum WalRecord {
         /// The primary's sliding-window cap (0 = unbounded) — recorded so
         /// the replica replays the same eviction sequence.
         window: u64,
+        /// The primary's eviction policy (`gp.compaction`) — recorded so
+        /// the replica folds exactly where the primary folded.
+        compaction: Compaction,
+        /// The primary's tail capacity (`gp.tail_max`, 0 = unbounded) —
+        /// replay-relevant for the same reason.
+        tail_max: u64,
         kernel_name: String,
         metric: Metric,
         noise: f64,
@@ -133,6 +147,8 @@ impl WalRecord {
             WalRecord::Genesis {
                 seq,
                 window,
+                compaction,
+                tail_max,
                 kernel_name,
                 metric,
                 noise,
@@ -143,6 +159,8 @@ impl WalRecord {
             } => {
                 e.u64(*seq);
                 e.u64(*window);
+                enc_compaction(&mut e, *compaction);
+                e.u64(*tail_max);
                 e.string(kernel_name);
                 e.metric(metric);
                 e.f64(*noise);
@@ -179,6 +197,8 @@ impl WalRecord {
             TAG_GENESIS => WalRecord::Genesis {
                 seq: d.u64()?,
                 window: d.u64()?,
+                compaction: dec_compaction(&mut d)?,
+                tail_max: d.u64()?,
                 kernel_name: d.string()?,
                 metric: d.metric()?,
                 noise: d.f64()?,
@@ -211,6 +231,42 @@ fn enc_opt_vec(e: &mut Enc, v: &Option<Vec<f64>>) {
 
 fn dec_opt_vec(d: &mut Dec) -> anyhow::Result<Option<Vec<f64>>> {
     Ok(if d.bool()? { Some(d.vec_f64()?) } else { None })
+}
+
+fn enc_compaction(e: &mut Enc, c: Compaction) {
+    e.u8(match c {
+        Compaction::Forget => 0,
+        Compaction::Exact => 1,
+    });
+}
+
+fn dec_compaction(d: &mut Dec) -> anyhow::Result<Compaction> {
+    match d.u8()? {
+        0 => Ok(Compaction::Forget),
+        1 => Ok(Compaction::Exact),
+        v => anyhow::bail!("unknown compaction policy byte {v:#04x}"),
+    }
+}
+
+fn enc_opt_tail(e: &mut Enc, t: &Option<GradientTail>) {
+    match t {
+        Some(t) => {
+            e.bool(true);
+            e.mat(&t.xt);
+            e.mat(&t.lam_xt);
+            e.mat(&t.w);
+            e.mat(&t.at_hot);
+        }
+        None => e.bool(false),
+    }
+}
+
+fn dec_opt_tail(d: &mut Dec) -> anyhow::Result<Option<GradientTail>> {
+    Ok(if d.bool()? {
+        Some(GradientTail { xt: d.mat()?, lam_xt: d.mat()?, w: d.mat()?, at_hot: d.mat()? })
+    } else {
+        None
+    })
 }
 
 fn enc_opt_mat(e: &mut Enc, m: &Option<Mat>) {
@@ -267,6 +323,13 @@ pub fn encode_snapshot(s: &SnapshotData) -> anyhow::Result<Vec<u8>> {
     e.u64(st.kinv_age as u64);
     enc_opt_vec(&mut e, &st.prior_grad_mean);
     e.u64(st.cold_refits as u64);
+    // v2: tiered-posterior state — policy knobs, fold counter, and the tail
+    // panels verbatim (at_hot especially: recomputing it on restore would
+    // change summation order and break the bitwise replay pins)
+    enc_compaction(&mut e, st.compaction);
+    e.u64(st.tail_max as u64);
+    e.u64(st.compactions);
+    enc_opt_tail(&mut e, &st.tail);
     let mut out = Vec::new();
     write_frame(&mut out, TAG_SNAPSHOT, &e.buf)?;
     Ok(out)
@@ -324,9 +387,26 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<SnapshotData> {
     let prior_grad_mean = dec_opt_vec(&mut d)?;
     let cold_refits = usize::try_from(d.u64()?)
         .map_err(|_| anyhow::anyhow!("snapshot cold_refits overflows this platform"))?;
+    let compaction = dec_compaction(&mut d)?;
+    let tail_max = usize::try_from(d.u64()?)
+        .map_err(|_| anyhow::anyhow!("snapshot tail_max overflows this platform"))?;
+    let compactions = d.u64()?;
+    let tail = dec_opt_tail(&mut d)?;
     d.finish()?;
-    let state =
-        EngineState { factors, x, g, z, kinv, kinv_age, prior_grad_mean, cold_refits };
+    let state = EngineState {
+        factors,
+        x,
+        g,
+        z,
+        kinv,
+        kinv_age,
+        prior_grad_mean,
+        cold_refits,
+        tail,
+        compaction,
+        tail_max,
+        compactions,
+    };
     Ok(SnapshotData { seq, window, kernel_name, state })
 }
 
@@ -479,6 +559,8 @@ impl WalWriter {
         let genesis = WalRecord::Genesis {
             seq: 1,
             window: window as u64,
+            compaction: engine.compaction(),
+            tail_max: engine.tail_max() as u64,
             kernel_name: kernel_name.clone(),
             metric: gp.factors().metric.clone(),
             noise: gp.factors().noise,
@@ -750,6 +832,8 @@ impl Standby {
         match rec {
             WalRecord::Genesis {
                 window,
+                compaction,
+                tail_max,
                 kernel_name,
                 metric,
                 noise,
@@ -772,8 +856,13 @@ impl Standby {
                     method: self.method.clone(),
                     online: true,
                 };
-                let engine =
+                let mut engine =
                     OnlineGradientGp::fit(self.kernel.clone(), metric, &x, &g, &opts)?;
+                // replay with the primary's eviction policy, not the
+                // standby's own configuration — folds must land exactly
+                // where the primary's did
+                engine.set_compaction(compaction);
+                engine.set_tail_max(usize::try_from(tail_max).unwrap_or(usize::MAX));
                 self.engine = Some(engine);
                 self.window = usize::try_from(window).unwrap_or(usize::MAX);
             }
@@ -877,6 +966,8 @@ mod tests {
         let rec = WalRecord::Genesis {
             seq: 1,
             window: 5,
+            compaction: Compaction::Exact,
+            tail_max: 17,
             kernel_name: "se".into(),
             metric: Metric::Diag(vec![0.5, 2.0]),
             noise: 1e-6,
@@ -887,8 +978,21 @@ mod tests {
         };
         let (tag, payload) = rec.encode();
         match WalRecord::decode(tag, &payload).unwrap() {
-            WalRecord::Genesis { seq, window, kernel_name, metric, noise, center, x, .. } => {
+            WalRecord::Genesis {
+                seq,
+                window,
+                compaction,
+                tail_max,
+                kernel_name,
+                metric,
+                noise,
+                center,
+                x,
+                ..
+            } => {
                 assert_eq!((seq, window), (1, 5));
+                assert_eq!(compaction, Compaction::Exact);
+                assert_eq!(tail_max, 17);
                 assert_eq!(kernel_name, "se");
                 assert_eq!(metric, Metric::Diag(vec![0.5, 2.0]));
                 assert_eq!(noise, 1e-6);
@@ -918,6 +1022,40 @@ mod tests {
         let (a, b) = (got.state.kinv.unwrap(), engine.export_state().kinv.unwrap());
         for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_carries_the_compacted_tail_bitwise() {
+        let mut engine = sample_engine(3, 3, 15);
+        engine.set_compaction(Compaction::Exact);
+        engine.set_tail_max(9);
+        let mut rng = Rng::new(16);
+        for _ in 0..2 {
+            let x = rng.gauss_vec(3);
+            let g = rng.gauss_vec(3);
+            engine.observe_windowed(&x, &g, 3).unwrap();
+        }
+        assert_eq!(engine.tail_len(), 2);
+        let snap = SnapshotData {
+            seq: 7,
+            window: 3,
+            kernel_name: "squared-exponential".into(),
+            state: engine.export_state(),
+        };
+        let bytes = encode_snapshot(&snap).unwrap();
+        let got = decode_snapshot(&bytes).unwrap();
+        assert_eq!(got.state.compaction, Compaction::Exact);
+        assert_eq!(got.state.tail_max, 9);
+        assert_eq!(got.state.compactions, engine.compactions());
+        let (a, b) = (got.state.tail.unwrap(), engine.export_state().tail.unwrap());
+        for (m1, m2) in
+            [(&a.xt, &b.xt), (&a.lam_xt, &b.lam_xt), (&a.w, &b.w), (&a.at_hot, &b.at_hot)]
+        {
+            assert_eq!((m1.rows(), m1.cols()), (m2.rows(), m2.cols()));
+            for (x, y) in m1.as_slice().iter().zip(m2.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "tail must round-trip bit-exact");
+            }
         }
     }
 

@@ -134,6 +134,101 @@ pub enum FitReport {
     Iterative { iters: usize, converged: bool, final_rel_residual: f64 },
 }
 
+/// What a window slide does with the evicted observation — the
+/// `gp.compaction` knob of the **tiered posterior**.
+///
+/// With [`Compaction::Exact`], [`OnlineGradientGp::drop_first`] becomes a
+/// *fold-op*: the evicted observation keeps its joint representer weight
+/// (frozen at the barrier) and moves into the [`GradientTail`], and the hot
+/// window re-solves against residualized targets. At the barrier itself the
+/// combined mean field is *exactly* the pre-fold posterior mean (the joint
+/// system `Gram·vec(Z) = vec(G̃)` restricted to the retained block absorbs
+/// the evicted column's contribution on the right-hand side with zero
+/// approximation error); approximation enters only as later appends can no
+/// longer co-update the frozen weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compaction {
+    /// Evicted observations leave the posterior entirely — the historical
+    /// window-forget behaviour. Every pre-tail bit-identity pin (shards,
+    /// transports, scheduler, WAL replay) rides on this default.
+    Forget,
+    /// Evicted observations fold into the compacted tail at the
+    /// `drop_first` barrier.
+    Exact,
+}
+
+impl Default for Compaction {
+    fn default() -> Self {
+        Compaction::Forget
+    }
+}
+
+impl Compaction {
+    /// Parse the `gp.compaction` knob: `forget` | `exact`, case-insensitive;
+    /// anything unparseable falls back to [`Compaction::Forget`] — the same
+    /// be-lenient contract as the `gram.gemm` knob.
+    pub fn parse(s: &str) -> Compaction {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" => Compaction::Exact,
+            _ => Compaction::Forget,
+        }
+    }
+}
+
+/// The compacted tail of the tiered posterior: observations evicted from the
+/// hot window under `gp.compaction = exact`, retained as a **frozen
+/// representer mean field** instead of being forgotten.
+///
+/// Each tail member contributes `block(·, e)·w_e` to the posterior gradient
+/// mean — the same Gram-block arithmetic as a hot point, but with its weight
+/// `w_e` frozen at the value the joint solve assigned at its fold barrier.
+/// The tail is a small dense component that never touches the sharded hot
+/// path: predictions evaluate it with `O(T·D)` fresh kernel work per query,
+/// and the hot tier conditions on *residualized* targets
+/// `G − g_c − tail_field(X_hot)` so the two tiers compose by summation.
+///
+/// Covariance queries ([`GradientGp::predict_gradient_cov`],
+/// [`GradientGp::predict_value_var`]) deliberately stay hot-tier-only: under
+/// this model the tail is a deterministic mean-field (its weights carry no
+/// remaining uncertainty), so the hot-window posterior covariance *is* the
+/// model's covariance — see the predict-module docs.
+#[derive(Clone, Debug)]
+pub struct GradientTail {
+    /// Evicted inputs `X̃_e ∈ R^{D×T}` (centered for dot-product kernels),
+    /// captured from the evicted panel slices.
+    pub xt: Mat,
+    /// `ΛX̃_e ∈ R^{D×T}` (captured, never recomputed).
+    pub lam_xt: Mat,
+    /// Frozen representer weights `W ∈ R^{D×T}`: column `e` is the evicted
+    /// point's joint weight `z_e` at its fold barrier.
+    pub w: Mat,
+    /// Cached tail field at the hot points (`D×N_hot`, post-`Λ`): column `j`
+    /// holds `Σ_e block(x_j, e)·w_e`. Maintained incrementally — extended on
+    /// every append, slid + incremented on every fold — and serialized
+    /// verbatim: recomputing it would change summation order, breaking the
+    /// bitwise standby-replay pins.
+    pub at_hot: Mat,
+}
+
+impl GradientTail {
+    /// Number of folded (tail-resident) observations `T`.
+    pub fn len(&self) -> usize {
+        self.xt.cols()
+    }
+
+    /// `true` when no observation has folded yet.
+    pub fn is_empty(&self) -> bool {
+        self.xt.cols() == 0
+    }
+
+    /// Memory held by the tail, in f64 counts: the three `D×T` panels plus
+    /// the `D×N_hot` cached field (accounting companion of
+    /// [`GramFactors::memory_f64`]).
+    pub fn memory_f64(&self) -> usize {
+        3 * self.xt.rows() * self.xt.cols() + self.at_hot.rows() * self.at_hot.cols()
+    }
+}
+
 /// A GP conditioned on gradient observations.
 pub struct GradientGp {
     kernel: Arc<dyn ScalarKernel>,
@@ -157,6 +252,12 @@ pub struct GradientGp {
     /// so [`OnlineGradientGp::from_fitted`] keeps the caller's engine choice
     /// (in particular custom CG tolerances) across streaming updates.
     method: FitMethod,
+    /// The compacted tail of the tiered posterior (`None` until the online
+    /// engine folds its first eviction under `gp.compaction = exact`; the
+    /// one-shot fit never populates it). When present, `z` solves the hot
+    /// system against *residualized* targets `G − g_c − tail.at_hot` and
+    /// every mean prediction sums both tiers.
+    tail: Option<GradientTail>,
 }
 
 /// Above this `N`, [`FitMethod::Auto`] switches from the exact `O(N⁶)`
@@ -249,6 +350,7 @@ impl GradientGp {
             solver,
             report,
             method: opts.method.clone(),
+            tail: None,
         })
     }
 
@@ -297,6 +399,22 @@ impl GradientGp {
     /// Fit diagnostics.
     pub fn report(&self) -> &FitReport {
         &self.report
+    }
+
+    /// The compacted tail, if any eviction has folded into it yet.
+    pub fn tail(&self) -> Option<&GradientTail> {
+        self.tail.as_ref()
+    }
+
+    /// Number of observations held by the compacted tail (0 without one).
+    pub fn tail_len(&self) -> usize {
+        self.tail.as_ref().map_or(0, GradientTail::len)
+    }
+
+    /// Memory held by the full tiered posterior, in f64 counts: the hot
+    /// window's [`GramFactors::memory_f64`] plus the compacted tail.
+    pub fn memory_f64(&self) -> usize {
+        self.factors.memory_f64() + self.tail.as_ref().map_or(0, GradientTail::memory_f64)
     }
 
     pub(crate) fn prior_grad_mean_opt(&self) -> Option<&[f64]> {

@@ -40,18 +40,38 @@
 //! pin "steady state never refits". Setting [`FitOptions::online`] to
 //! `false` forces the cold path on every update (the A/B-validation knob;
 //! config key `gp.online`).
+//!
+//! ## Tiered posterior: compaction instead of forgetting
+//!
+//! With [`Compaction::Exact`] (`gp.compaction` knob; default
+//! [`Compaction::Forget`] keeps every historical bit-identity pin intact)
+//! a window slide stops deleting the evicted observation: `drop_first`
+//! becomes a **fold-op** that freezes the point's joint representer weight
+//! at the barrier, moves it into the [`GradientTail`], and re-solves the hot
+//! window against residualized targets. At the barrier the combined mean is
+//! *exactly* the pre-fold posterior; see [`Compaction`].
+//!
+//! **Replay-determinism invariant** (pinned by `tests/wal_replica.rs` and
+//! `tests/chaos_failover.rs`): a fold is a deterministic function of the
+//! observation-op stream — frozen weight from the barrier's solve, panel
+//! slices captured (never re-evaluated) from [`GramFactors::drop_first`],
+//! `at_hot` maintained incrementally and serialized verbatim. A standby
+//! replaying the same WAL records through these entry points therefore
+//! reproduces the tail bitwise, and **no new WAL record type is needed** —
+//! the existing `Observe`/`DropFirst` barriers already carry everything the
+//! fold depends on.
 
 use std::sync::Arc;
 
 use crate::gram::{
-    poly2_solve, GramFactors, GramOperator, Metric, RegistryConfig, ShardedGramFactors,
-    WoodburySolver,
+    poly2_solve, EvictedPanels, GramFactors, GramOperator, Metric, RegistryConfig,
+    ShardedGramFactors, WoodburySolver,
 };
-use crate::kernels::ScalarKernel;
+use crate::kernels::{KernelClass, ScalarKernel};
 use crate::linalg::{bordered_inverse_append, bordered_inverse_drop_first, Lu, Mat};
 use crate::solvers::{cg_solve, CgResult, JacobiPrecond};
 
-use super::{FitMethod, FitOptions, FitReport, GradientGp, GradientModel};
+use super::{Compaction, FitMethod, FitOptions, FitReport, GradientGp, GradientModel, GradientTail};
 
 /// How the observation set changed since the last solve (drives cache reuse).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,14 +85,25 @@ enum Delta {
 }
 
 /// Everything an update must restore on total failure: factors + raw data +
-/// weights + the `K̂′⁻¹` age. `gp.solver` is deliberately absent
-/// (`WoodburySolver` holds factorizations, not cheaply clonable state):
-/// `resolve_weights` mutates it only on success, so after a failed plain
-/// `observe`/`drop_first` the pre-update solver is still present and valid;
-/// the windowed/deferred paths may leave it `None` after rollback, in which
-/// case extra-RHS queries take the CG fallback and the next exact re-solve
-/// re-inverts `K̂′` cold (`O(N³)`) — predictions stay exact either way.
-type Snapshot = (GramFactors, Mat, Mat, Mat, usize);
+/// weights + the `K̂′⁻¹` age + **both tiers** (the compacted tail and the
+/// fold counter — a failed fold must leave the previous consistent tiered
+/// posterior, pinned by `failed_fold_rolls_back_both_tiers`). `gp.solver`
+/// is deliberately absent (`WoodburySolver` holds factorizations, not
+/// cheaply clonable state): `resolve_weights` mutates it only on success,
+/// so after a failed plain `observe`/`drop_first` the pre-update solver is
+/// still present and valid; the windowed/deferred paths may leave it `None`
+/// after rollback, in which case extra-RHS queries take the CG fallback and
+/// the next exact re-solve re-inverts `K̂′` cold (`O(N³)`) — predictions
+/// stay exact either way.
+struct Snapshot {
+    factors: GramFactors,
+    x: Mat,
+    g: Mat,
+    z: Mat,
+    kinv_age: usize,
+    tail: Option<GradientTail>,
+    compactions: u64,
+}
 
 /// Re-invert `K̂′` from scratch after this many consecutive bordered
 /// updates: each `O(N²)` update is individually stable but drift compounds
@@ -112,6 +143,18 @@ pub struct EngineState {
     pub prior_grad_mean: Option<Vec<f64>>,
     /// Cold refits performed so far (1 = the initial fit only).
     pub cold_refits: usize,
+    /// The compacted tail (`None` until the first fold). `at_hot` travels
+    /// verbatim — recomputing it on restore would change summation order
+    /// and break the bitwise standby-replay pins.
+    pub tail: Option<GradientTail>,
+    /// The eviction policy (`gp.compaction`): replicas must replay window
+    /// slides with the primary's policy or their states diverge.
+    pub compaction: Compaction,
+    /// The tail capacity (`gp.tail_max`; 0 = unbounded) — replay-relevant
+    /// for the same reason.
+    pub tail_max: usize,
+    /// Fold-ops performed so far (the `compactions` serving gauge).
+    pub compactions: u64,
 }
 
 /// A [`GradientGp`] that stays conditioned under streaming observations.
@@ -133,6 +176,15 @@ pub struct OnlineGradientGp {
     /// lockstep with `gp.factors` through every append/drop/refit/rollback;
     /// the iterative re-solves route their operator applications through it.
     shard_engine: Option<ShardedGramFactors>,
+    /// Eviction policy (`gp.compaction` knob; default [`Compaction::Forget`]
+    /// keeps the engine byte-for-byte on the historical path).
+    compaction: Compaction,
+    /// Tail capacity (`gp.tail_max`; 0 = unbounded). At capacity further
+    /// evictions forget instead of folding — un-folding a tail member
+    /// bitwise-exactly is impossible once later state summed over it.
+    tail_max: usize,
+    /// Fold-ops performed (the `compactions` serving gauge).
+    compactions: u64,
 }
 
 impl OnlineGradientGp {
@@ -152,6 +204,9 @@ impl OnlineGradientGp {
             kinv_age: 0,
             cold_refits: 1,
             shard_engine: None,
+            compaction: Compaction::Forget,
+            tail_max: 0,
+            compactions: 0,
         })
     }
 
@@ -169,7 +224,16 @@ impl OnlineGradientGp {
             method: gp.method.clone(),
             online: true,
         };
-        OnlineGradientGp { gp, opts, kinv_age: 0, cold_refits: 1, shard_engine: None }
+        OnlineGradientGp {
+            gp,
+            opts,
+            kinv_age: 0,
+            cold_refits: 1,
+            shard_engine: None,
+            compaction: Compaction::Forget,
+            tail_max: 0,
+            compactions: 0,
+        }
     }
 
     /// Export the complete engine state for snapshotting ([`EngineState`]).
@@ -184,6 +248,10 @@ impl OnlineGradientGp {
             kinv_age: self.kinv_age,
             prior_grad_mean: self.gp.prior_grad_mean.clone(),
             cold_refits: self.cold_refits,
+            tail: self.gp.tail.clone(),
+            compaction: self.compaction,
+            tail_max: self.tail_max,
+            compactions: self.compactions,
         }
     }
 
@@ -217,6 +285,20 @@ impl OnlineGradientGp {
         if let Some(gc) = &st.prior_grad_mean {
             anyhow::ensure!(gc.len() == d, "state prior_grad_mean length != D");
         }
+        if let Some(t) = &st.tail {
+            anyhow::ensure!(
+                t.xt.rows() == d
+                    && t.lam_xt.rows() == d
+                    && t.w.rows() == d
+                    && t.lam_xt.cols() == t.xt.cols()
+                    && t.w.cols() == t.xt.cols(),
+                "state tail panels must be D×T"
+            );
+            anyhow::ensure!(
+                (t.at_hot.rows(), t.at_hot.cols()) == (d, n),
+                "state tail at_hot must be D×N like X"
+            );
+        }
         let solver = match &st.kinv {
             Some(k) => {
                 anyhow::ensure!(
@@ -246,6 +328,7 @@ impl OnlineGradientGp {
             solver,
             report: FitReport::Exact,
             method,
+            tail: st.tail,
         };
         Ok(OnlineGradientGp {
             gp,
@@ -253,6 +336,9 @@ impl OnlineGradientGp {
             kinv_age: st.kinv_age,
             cold_refits: st.cold_refits,
             shard_engine: None,
+            compaction: st.compaction,
+            tail_max: st.tail_max,
+            compactions: st.compactions,
         })
     }
 
@@ -285,6 +371,39 @@ impl OnlineGradientGp {
     /// Toggle the incremental path at runtime (`gp.online` config knob).
     pub fn set_online(&mut self, online: bool) {
         self.opts.online = online;
+    }
+
+    /// Select the eviction policy (`gp.compaction` config knob). Replicas
+    /// must run the primary's policy — it is part of [`EngineState`] and the
+    /// WAL genesis record for exactly that reason.
+    pub fn set_compaction(&mut self, compaction: Compaction) {
+        self.compaction = compaction;
+    }
+
+    /// The active eviction policy.
+    pub fn compaction(&self) -> Compaction {
+        self.compaction
+    }
+
+    /// Cap the compacted tail (`gp.tail_max` config knob; 0 = unbounded).
+    /// At capacity further evictions are forgotten, never folded.
+    pub fn set_tail_max(&mut self, tail_max: usize) {
+        self.tail_max = tail_max;
+    }
+
+    /// The configured tail capacity (0 = unbounded).
+    pub fn tail_max(&self) -> usize {
+        self.tail_max
+    }
+
+    /// Fold-ops performed so far (the `compactions` serving gauge).
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Observations held by the compacted tail.
+    pub fn tail_len(&self) -> usize {
+        self.gp.tail_len()
     }
 
     /// Shard the Gram operator across `shards` persistent in-process
@@ -376,12 +495,138 @@ impl OnlineGradientGp {
     }
 
     /// Drop the oldest observation from the factor panels, sliding the
-    /// shard boundaries when the shard engine is present.
-    fn panels_drop_first(&mut self) {
+    /// shard boundaries when the shard engine is present. Returns the
+    /// evicted panel slices for the fold-op (forget-mode callers drop them).
+    fn panels_drop_first(&mut self) -> EvictedPanels {
         match self.shard_engine.as_mut() {
             Some(se) => se.drop_first(&mut self.gp.factors),
             None => self.gp.factors.drop_first(),
         }
+    }
+
+    /// Extend `at_hot` with the tail's field at a newly appended point —
+    /// must run for **every** append, in any mode, so the cached field stays
+    /// in lockstep with the hot columns. Fresh `O(T·D)` kernel work; no-op
+    /// without a tail.
+    fn tail_extend_at(&mut self, x_new: &[f64]) {
+        if self.gp.tail.is_some() {
+            let field = {
+                let t = self.gp.tail.as_ref().unwrap();
+                self.gp.tail_field(t, x_new)
+            };
+            self.gp.tail.as_mut().unwrap().at_hot.push_col(&field);
+        }
+    }
+
+    /// Slide `at_hot` for a hot-window drop that does **not** fold (forget
+    /// mode, tail at capacity, or the deferred GP-X drops): the evicted
+    /// point's cached column leaves with it. No-op without a tail.
+    fn tail_slide_at_hot(&mut self) {
+        if let Some(t) = self.gp.tail.as_mut() {
+            t.at_hot.remove_first_col();
+        }
+    }
+
+    /// The fold-op core: push the just-evicted observation into the
+    /// compacted tail with its frozen weight `w_e` (the joint `z.col(0)`
+    /// captured at the barrier) and add its field to `at_hot` for every
+    /// retained hot point — from the captured panel slices alone, **zero
+    /// kernel evaluation**, which is what makes the fold a deterministic
+    /// function of the op stream. Call *after* the panel drop (`self.gp.n()`
+    /// is the post-drop count); pure arithmetic, infallible.
+    fn fold_first_into_tail(&mut self, ev: &EvictedPanels, w_e: &[f64]) {
+        let d = self.gp.d();
+        let n = self.gp.n();
+        let f = &self.gp.factors;
+        let lam_w_mat = f.metric.apply_mat(&Mat::from_vec(d, 1, w_e.to_vec()));
+        let lam_w = lam_w_mat.col(0);
+        // slide the evicted point's own cached column out, keep the rest
+        let mut at_hot = match self.gp.tail.as_ref() {
+            Some(t) => {
+                let mut m = Mat::zeros(d, n);
+                for j in 0..n {
+                    m.set_col(j, t.at_hot.col(j + 1));
+                }
+                m
+            }
+            None => Mat::zeros(d, n),
+        };
+        // inc_j = block(x_j, e)·w_e from the captured slices (ev index j+1:
+        // entry 0 is the evicted diagonal — the only entry carrying noise
+        // and the Matérn guard — and is never used here)
+        match f.class {
+            KernelClass::DotProduct => {
+                for j in 0..n {
+                    let kp = ev.kp[j + 1];
+                    let kpp = ev.kpp[j + 1];
+                    let lxj = f.lam_xt.col(j);
+                    let mut s = 0.0;
+                    for i in 0..d {
+                        s += lxj[i] * w_e[i];
+                    }
+                    let col = at_hot.col_mut(j);
+                    for i in 0..d {
+                        col[i] += kp * lam_w[i] + kpp * ev.lam_xt[i] * s;
+                    }
+                }
+            }
+            KernelClass::Stationary => {
+                for j in 0..n {
+                    let kp = ev.kp[j + 1];
+                    let kpp = ev.kpp[j + 1];
+                    let lxj = f.lam_xt.col(j);
+                    // u = Λx_e − Λx_j; the correction is u(uᵀw_e), sign-free
+                    let mut s = 0.0;
+                    for i in 0..d {
+                        s += (ev.lam_xt[i] - lxj[i]) * w_e[i];
+                    }
+                    let col = at_hot.col_mut(j);
+                    for i in 0..d {
+                        col[i] += kp * lam_w[i] + kpp * (ev.lam_xt[i] - lxj[i]) * s;
+                    }
+                }
+            }
+        }
+        match self.gp.tail.as_mut() {
+            Some(t) => {
+                t.xt.push_col(&ev.xt);
+                t.lam_xt.push_col(&ev.lam_xt);
+                t.w.push_col(w_e);
+                t.at_hot = at_hot;
+            }
+            None => {
+                self.gp.tail = Some(GradientTail {
+                    xt: Mat::from_vec(d, 1, ev.xt.clone()),
+                    lam_xt: Mat::from_vec(d, 1, ev.lam_xt.clone()),
+                    w: Mat::from_vec(d, 1, w_e.to_vec()),
+                    at_hot,
+                });
+            }
+        }
+        self.compactions += 1;
+    }
+
+    /// Drop the oldest observation as a **fold-op** (exact compaction):
+    /// freeze its current joint weight, capture the evicted panels, fold,
+    /// and re-solve the hot window against the residualized targets. At
+    /// tail capacity the eviction degrades to a forget drop. Requires `z`
+    /// to be current (every public entry point re-solves before reaching
+    /// here). No rollback — callers own the snapshot.
+    fn drop_first_fold(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
+        if self.tail_max > 0 && self.gp.tail_len() >= self.tail_max {
+            let _ = self.panels_drop_first();
+            self.tail_slide_at_hot();
+            self.gp.x.remove_first_col();
+            self.gp.g.remove_first_col();
+            return self.resolve_with_fallback(Delta::Dropped);
+        }
+        let w_e = self.gp.z.col(0).to_vec();
+        let ev = self.panels_drop_first();
+        self.gp.x.remove_first_col();
+        self.gp.g.remove_first_col();
+        self.fold_first_into_tail(&ev, &w_e);
+        self.resolve_with_fallback(Delta::Dropped)
     }
 
     /// Re-sync the shard row blocks after a wholesale factor replacement
@@ -443,6 +688,7 @@ impl OnlineGradientGp {
             return self.cold_refit(&x, &g);
         }
         let snapshot = self.snapshot();
+        self.tail_extend_at(x_new);
         self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
@@ -481,12 +727,36 @@ impl OnlineGradientGp {
             return self.cold_refit(&x, &g);
         }
         let snapshot = self.snapshot();
-        // append first, then trim — both deferred (no solves), so the step
-        // pays a single solve at the end; append-before-trim keeps even a
-        // window of 1 exact (the new point is what survives).
+        // append first, then trim — append-before-trim keeps even a window
+        // of 1 exact (the new point is what survives).
+        self.tail_extend_at(x_new);
         self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
+        if self.compaction == Compaction::Exact && self.gp.n() > 1 && self.gp.n() > window {
+            // exact compaction: a fold freezes the evicted point's *joint*
+            // weight, so `z` must be current at every barrier — one solve
+            // for the append, then one per fold (the deferred single-solve
+            // trick would freeze stale weights). ~2 solves per steady-state
+            // slide instead of 1; `benches/compaction.rs` prices it.
+            let mut err: Option<anyhow::Error> = None;
+            if let Err(e) = self.resolve_with_fallback(Delta::Appended) {
+                err = Some(e);
+            }
+            while err.is_none() && self.gp.n() > 1 && self.gp.n() > window {
+                if let Err(e) = self.drop_first_fold() {
+                    err = Some(e);
+                }
+            }
+            return match err {
+                None => Ok(()),
+                Some(e) => {
+                    self.restore(snapshot);
+                    Err(anyhow::anyhow!("{e}; update rolled back"))
+                }
+            };
+        }
+        // forget mode: deferred (no-solve) drops, a single solve at the end
         while self.gp.n() > 1 && self.gp.n() > window {
             if let Err(e) = self.drop_first_panels_deferred() {
                 self.restore(snapshot);
@@ -496,12 +766,18 @@ impl OnlineGradientGp {
         self.resolve_or_rollback(Delta::Appended, snapshot)
     }
 
-    /// Slide the window: drop the oldest observation and re-solve. On error
-    /// the drop is rolled back (see [`OnlineGradientGp::observe`]).
+    /// Slide the window: drop the oldest observation and re-solve. Under
+    /// `gp.compaction = exact` this is a fold-op — the evicted observation
+    /// moves into the compacted tail instead of leaving the posterior. On
+    /// error the whole step (both tiers) is rolled back (see
+    /// [`OnlineGradientGp::observe`]).
     pub fn drop_first(&mut self) -> anyhow::Result<()> {
         self.reattach_shards();
         anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
         if !self.opts.online {
+            // offline A/B mode never grows the tail (a cold refit has no
+            // barrier weight to freeze); an existing tail is preserved and
+            // re-anchored by `cold_refit`.
             let mut x = self.gp.x.clone();
             let mut g = self.gp.g.clone();
             x.remove_first_col();
@@ -509,7 +785,17 @@ impl OnlineGradientGp {
             return self.cold_refit(&x, &g);
         }
         let snapshot = self.snapshot();
-        self.panels_drop_first();
+        if self.compaction == Compaction::Exact {
+            return match self.drop_first_fold() {
+                Ok(()) => Ok(()),
+                Err(e) => {
+                    self.restore(snapshot);
+                    Err(anyhow::anyhow!("{e}; update rolled back"))
+                }
+            };
+        }
+        let _ = self.panels_drop_first();
+        self.tail_slide_at_hot();
         self.gp.x.remove_first_col();
         self.gp.g.remove_first_col();
         self.resolve_or_rollback(Delta::Dropped, snapshot)
@@ -528,6 +814,7 @@ impl OnlineGradientGp {
         let d = self.gp.d();
         anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
         anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
+        self.tail_extend_at(x_new);
         self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
@@ -537,9 +824,19 @@ impl OnlineGradientGp {
 
     /// Deferred-solve companion of [`OnlineGradientGp::drop_first`] (see
     /// [`OnlineGradientGp::append_panels_deferred`]).
+    ///
+    /// Deferred drops **never fold**, regardless of `gp.compaction`: the
+    /// whole point of deferral is that `z` is stale until the caller's next
+    /// solve, and a fold must freeze the *current* joint weight. The GP-X
+    /// anchor-shift path (the only deferred-drop consumer) therefore keeps
+    /// window-forget semantics; exact compaction routes through
+    /// [`OnlineGradientGp::observe_windowed`] / `drop_first`, which re-solve
+    /// at every barrier. An existing tail still has its `at_hot` column
+    /// slid out so both tiers stay aligned.
     pub(crate) fn drop_first_panels_deferred(&mut self) -> anyhow::Result<()> {
         anyhow::ensure!(self.gp.n() > 1, "cannot drop the last observation");
-        self.panels_drop_first();
+        let _ = self.panels_drop_first();
+        self.tail_slide_at_hot();
         self.gp.x.remove_first_col();
         self.gp.g.remove_first_col();
         self.gp.solver = None;
@@ -583,11 +880,14 @@ impl OnlineGradientGp {
         }
     }
 
-    /// Centered right-hand side `G̃ = G − g_c`.
+    /// Centered right-hand side `G̃ = G − g_c − A` where `A` is the cached
+    /// tail field at the hot inputs (`GradientTail::at_hot`). Subtraction
+    /// order is fixed (prior mean first, then tail) so the tail-free result
+    /// stays bitwise identical to the pre-tiered code.
     fn centered_targets(&self) -> Mat {
-        match &self.opts.prior_grad_mean {
+        let (d, n) = (self.gp.d(), self.gp.n());
+        let mut m = match &self.opts.prior_grad_mean {
             Some(gc) => {
-                let (d, n) = (self.gp.d(), self.gp.n());
                 let mut m = self.gp.g.clone();
                 for j in 0..n {
                     let col = m.col_mut(j);
@@ -598,7 +898,17 @@ impl OnlineGradientGp {
                 m
             }
             None => self.gp.g.clone(),
+        };
+        if let Some(tail) = &self.gp.tail {
+            for j in 0..n {
+                let at = tail.at_hot.col(j);
+                let col = m.col_mut(j);
+                for i in 0..d {
+                    col[i] -= at[i];
+                }
+            }
         }
+        m
     }
 
     /// Full cold refit from raw data (cold start + fallback path only).
@@ -607,16 +917,49 @@ impl OnlineGradientGp {
     /// treats non-convergence as an error, so a degenerate streamed
     /// observation cannot silently install unconverged weights.
     fn cold_refit(&mut self, x: &Mat, g: &Mat) -> anyhow::Result<()> {
-        let gp = GradientGp::fit(
+        // The tail survives a cold refit: its frozen members are data, not
+        // derived state. Recompute `at_hot` fresh over the target inputs
+        // (the hot set may have changed shape), fit the hot tier against the
+        // tail-residualized targets, and transplant the tail only once the
+        // fit is known good — `self.gp` stays untouched on any failure.
+        let tail = match &self.gp.tail {
+            Some(t) => {
+                let mut t = t.clone();
+                let mut at = Mat::zeros(x.rows(), 0);
+                for j in 0..x.cols() {
+                    at.push_col(&self.gp.tail_field(&t, x.col(j)));
+                }
+                t.at_hot = at;
+                Some(t)
+            }
+            None => None,
+        };
+        let g_fit = match &tail {
+            Some(t) => {
+                let mut m = g.clone();
+                for j in 0..m.cols() {
+                    let at = t.at_hot.col(j);
+                    let col = m.col_mut(j);
+                    for i in 0..col.len() {
+                        col[i] -= at[i];
+                    }
+                }
+                m
+            }
+            None => g.clone(),
+        };
+        let mut gp = GradientGp::fit(
             self.gp.kernel.clone(),
             self.gp.factors.metric.clone(),
             x,
-            g,
+            &g_fit,
             &self.opts,
         )?;
         if let FitReport::Iterative { converged: false, iters, .. } = &gp.report {
             anyhow::bail!("cold refit CG did not converge in {iters} iterations");
         }
+        gp.g = g.clone();
+        gp.tail = tail;
         self.kinv_age = 0;
         self.gp = gp;
         self.cold_refits += 1;
@@ -625,31 +968,37 @@ impl OnlineGradientGp {
     }
 
     /// Clone the state an update must restore on total failure —
-    /// `O(N² + ND)`, same order as the update itself.
+    /// `O(N² + ND + TD)`, same order as the update itself. Both tiers are
+    /// captured: a failed fold must not leave a half-migrated observation
+    /// (see `failed_fold_rolls_back_both_tiers`).
     fn snapshot(&self) -> Snapshot {
-        (
-            self.gp.factors.clone(),
-            self.gp.x.clone(),
-            self.gp.g.clone(),
-            self.gp.z.clone(),
-            self.kinv_age,
-        )
+        Snapshot {
+            factors: self.gp.factors.clone(),
+            x: self.gp.x.clone(),
+            g: self.gp.g.clone(),
+            z: self.gp.z.clone(),
+            kinv_age: self.kinv_age,
+            tail: self.gp.tail.clone(),
+            compactions: self.compactions,
+        }
     }
 
     fn restore(&mut self, snapshot: Snapshot) {
-        let (factors, x, g, z, kinv_age) = snapshot;
-        self.gp.factors = factors;
-        self.gp.x = x;
-        self.gp.g = g;
-        self.gp.z = z;
-        self.kinv_age = kinv_age;
+        self.gp.factors = snapshot.factors;
+        self.gp.x = snapshot.x;
+        self.gp.g = snapshot.g;
+        self.gp.z = snapshot.z;
+        self.kinv_age = snapshot.kinv_age;
+        self.gp.tail = snapshot.tail;
+        self.compactions = snapshot.compactions;
         self.resync_shards();
     }
 
     /// Incremental re-solve; on failure, one cold refit from the (already
-    /// updated) raw data; if that fails too, roll back to the snapshot so
-    /// the engine keeps serving its previous consistent posterior.
-    fn resolve_or_rollback(&mut self, delta: Delta, snapshot: Snapshot) -> anyhow::Result<()> {
+    /// updated) raw data. Does **not** roll back — callers that hold a
+    /// snapshot wrap this (directly via [`Self::resolve_or_rollback`], or
+    /// around a whole append-then-fold sequence in `observe_windowed`).
+    fn resolve_with_fallback(&mut self, delta: Delta) -> anyhow::Result<()> {
         let first = match self.resolve_weights(delta) {
             Ok(()) => return Ok(()),
             Err(e) => e,
@@ -658,12 +1007,21 @@ impl OnlineGradientGp {
         let g = self.gp.g.clone();
         match self.cold_refit(&x, &g) {
             Ok(()) => Ok(()),
-            Err(e2) => {
+            Err(e2) => Err(anyhow::anyhow!(
+                "online update failed ({first}); cold refit also failed ({e2})"
+            )),
+        }
+    }
+
+    /// [`Self::resolve_with_fallback`] plus rollback: if the cold refit
+    /// fails too, restore the snapshot so the engine keeps serving its
+    /// previous consistent posterior.
+    fn resolve_or_rollback(&mut self, delta: Delta, snapshot: Snapshot) -> anyhow::Result<()> {
+        match self.resolve_with_fallback(delta) {
+            Ok(()) => Ok(()),
+            Err(e) => {
                 self.restore(snapshot);
-                Err(anyhow::anyhow!(
-                    "online update failed ({first}); cold refit also failed ({e2}); \
-                     update rolled back"
-                ))
+                Err(anyhow::anyhow!("{e}; update rolled back"))
             }
         }
     }
@@ -781,7 +1139,7 @@ impl GradientModel for OnlineGradientGp {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::SquaredExponential;
+    use crate::kernels::{ExponentialKernel, SquaredExponential};
     use crate::rng::Rng;
 
     fn sample(d: usize, n: usize, seed: u64) -> (Mat, Mat) {
@@ -1015,5 +1373,169 @@ mod tests {
             Err(e) => e.to_string(),
         };
         assert!(err.contains("D×N"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn exact_compaction_is_exact_at_the_fold_barrier() {
+        // Immediately after a fold barrier, hot window + compacted tail must
+        // equal the *unbounded* cold posterior on ALL observations (see the
+        // module docs: the joint solve's retained block absorbs the evicted
+        // column exactly). Both kernel classes, with and without noise.
+        let cases: Vec<(Arc<dyn ScalarKernel>, Metric, f64, Option<Vec<f64>>)> = vec![
+            (Arc::new(SquaredExponential), Metric::Iso(0.6), 0.0, None),
+            (Arc::new(SquaredExponential), Metric::Iso(0.6), 1e-3, None),
+            (
+                Arc::new(ExponentialKernel),
+                Metric::Iso(0.2),
+                0.0,
+                Some(vec![0.1, -0.2, 0.3, 0.05]),
+            ),
+        ];
+        for (idx, (kern, metric, noise, center)) in cases.into_iter().enumerate() {
+            let (x, g) = sample(4, 6, 70 + idx as u64);
+            let opts = FitOptions { noise, center, ..Default::default() };
+            let w = 3;
+            let mut online = OnlineGradientGp::fit(
+                kern.clone(),
+                metric.clone(),
+                &x.block(0, 0, 4, 5),
+                &g.block(0, 0, 4, 5),
+                &opts,
+            )
+            .unwrap();
+            online.set_compaction(Compaction::Exact);
+            // appends the 6th observation (joint solve over all 6), then
+            // folds down to the window — three barrier-exact fold-ops
+            online.observe_windowed(x.col(5), g.col(5), w).unwrap();
+            assert_eq!(online.n(), w, "case {idx}");
+            assert_eq!(online.tail_len(), 3, "case {idx}");
+            assert_eq!(online.compactions(), 3, "case {idx}");
+            assert_eq!(online.cold_refits(), 1, "case {idx}: folding must not refit");
+            let cold = GradientGp::fit(kern, metric, &x, &g, &opts).unwrap();
+            let xq = vec![0.3, -0.5, 0.2, 0.7];
+            let po = online.gp().predict_gradient(&xq);
+            let pc = cold.predict_gradient(&xq);
+            for i in 0..4 {
+                assert!(
+                    (po[i] - pc[i]).abs() < 1e-7 * (1.0 + pc[i].abs()),
+                    "case {idx} dim {i}: {} vs {}",
+                    po[i],
+                    pc[i]
+                );
+            }
+            let vo = online.gp().predict_value(&xq);
+            let vc = cold.predict_value(&xq);
+            assert!((vo - vc).abs() < 1e-7 * (1.0 + vc.abs()), "case {idx}: {vo} vs {vc}");
+            let ho = online.gp().predict_hessian(&xq);
+            let hc = cold.predict_hessian(&xq);
+            assert!(
+                (&ho - &hc).max_abs() < 1e-6 * (1.0 + hc.max_abs()),
+                "case {idx} Hessian: {} apart",
+                (&ho - &hc).max_abs()
+            );
+        }
+    }
+
+    #[test]
+    fn window_one_with_tail_keeps_both_tiers_aligned() {
+        let (x, g) = sample(3, 4, 80);
+        let opts = FitOptions::default();
+        let mut m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x.block(0, 0, 3, 2),
+            &g.block(0, 0, 3, 2),
+            &opts,
+        )
+        .unwrap();
+        m.set_compaction(Compaction::Exact);
+        // window = 1: the new observation is what survives, everything else
+        // folds — the smallest hot tier the engine supports
+        m.observe_windowed(x.col(2), g.col(2), 1).unwrap();
+        assert_eq!(m.n(), 1);
+        assert_eq!(m.gp().x().col(0), x.col(2));
+        assert_eq!(m.tail_len(), 2);
+        // barrier exactness still holds at the extreme window
+        let cold = GradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x.block(0, 0, 3, 3),
+            &g.block(0, 0, 3, 3),
+            &opts,
+        )
+        .unwrap();
+        let xq = vec![0.2, -0.4, 0.6];
+        let po = m.gp().predict_gradient(&xq);
+        let pc = cold.predict_gradient(&xq);
+        for i in 0..3 {
+            assert!((po[i] - pc[i]).abs() < 1e-7 * (1.0 + pc[i].abs()), "dim {i}");
+        }
+        // and at_hot stays a single column in lockstep through further slides
+        m.observe_windowed(x.col(3), g.col(3), 1).unwrap();
+        assert_eq!(m.n(), 1);
+        assert_eq!(m.tail_len(), 3);
+        assert_eq!(m.gp().tail().unwrap().at_hot.cols(), 1);
+    }
+
+    #[test]
+    fn tail_max_caps_the_tail_and_degrades_to_forget() {
+        let (x, g) = sample(3, 6, 85);
+        let mut m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x.block(0, 0, 3, 2),
+            &g.block(0, 0, 3, 2),
+            &FitOptions::default(),
+        )
+        .unwrap();
+        m.set_compaction(Compaction::Exact);
+        m.set_tail_max(2);
+        for j in 2..6 {
+            m.observe_windowed(x.col(j), g.col(j), 2).unwrap();
+        }
+        // four slides, capacity two: the last two evictions were forgotten
+        assert_eq!(m.tail_len(), 2);
+        assert_eq!(m.compactions(), 2);
+        assert_eq!(m.n(), 2);
+    }
+
+    #[test]
+    fn failed_fold_rolls_back_both_tiers() {
+        let (x, g) = sample(4, 5, 90);
+        let w = 3;
+        let mut m = OnlineGradientGp::fit(
+            Arc::new(SquaredExponential),
+            Metric::Iso(0.5),
+            &x.block(0, 0, 4, 3),
+            &g.block(0, 0, 4, 3),
+            &FitOptions::default(),
+        )
+        .unwrap();
+        m.set_compaction(Compaction::Exact);
+        for j in 3..5 {
+            m.observe_windowed(x.col(j), g.col(j), w).unwrap();
+        }
+        assert_eq!(m.tail_len(), 2);
+        let xq = vec![0.3, -0.1, 0.4, 0.2];
+        let before = m.gp().predict_gradient(&xq);
+        let (n0, t0, c0) = (m.n(), m.tail_len(), m.compactions());
+        // duplicating a hot point makes the barrier solve singular: the
+        // whole step — the append AND any folds behind it — must roll back,
+        // leaving BOTH tiers exactly as they were
+        let dup = m.gp().x().col(0).to_vec();
+        let gd = g.col(0).to_vec();
+        assert!(m.observe_windowed(&dup, &gd, w).is_err());
+        assert_eq!((m.n(), m.tail_len(), m.compactions()), (n0, t0, c0));
+        let after = m.gp().predict_gradient(&xq);
+        for i in 0..4 {
+            assert_eq!(before[i], after[i], "rollback must restore both tiers exactly");
+        }
+        // and the engine keeps accepting valid folds afterwards
+        let mut rng = Rng::new(91);
+        let xn = rng.gauss_vec(4);
+        let gn = rng.gauss_vec(4);
+        m.observe_windowed(&xn, &gn, w).unwrap();
+        assert_eq!(m.n(), w);
+        assert_eq!(m.tail_len(), t0 + 1);
     }
 }

@@ -18,11 +18,29 @@
 //! ```
 //! (the last term is the paper's `Λ·Tr(M̆)`; it exists only in the
 //! stationary case, where `∂²r/∂x∂x = 2Λ ≠ 0`).
+//!
+//! ## Tiered posterior
+//!
+//! When the online engine has folded evictions into a
+//! [`GradientTail`](super::GradientTail), every **mean** prediction composes
+//! both tiers: the tail's frozen representer field — the same per-point
+//! formulas as above, with the frozen weights `W` in place of `Z` — is
+//! accumulated into the identical pre-`Λ` buffer as the hot window, so `Λ`
+//! is still applied exactly once and the tail-free path stays bit-for-bit
+//! unchanged. The gradient, value and Hessian means all carry the tail term.
+//!
+//! **Covariance queries stay hot-tier-only by design**, not as an
+//! approximation shortcut: the tiered model treats the tail as a
+//! deterministic mean field (its weights were frozen at their fold barriers
+//! and carry no residual uncertainty), so the hot window's posterior
+//! covariance *is* the model's covariance. [`GradientGp::predict_value_var`]
+//! and [`GradientGp::predict_gradient_cov`] are therefore exactly correct
+//! under that model and untouched by compaction.
 
 use crate::kernels::KernelClass;
 use crate::linalg::{par, Mat};
 
-use super::GradientGp;
+use super::{GradientGp, GradientTail};
 
 /// Low-rank structure of the posterior Hessian mean (Eq. 12):
 /// `H̄ = α·Λ + W S Wᵀ` with `W = [ΛX̃⋆, ΛZ] ∈ R^{D×2N}`.
@@ -185,6 +203,125 @@ impl GradientGp {
         }
     }
 
+    /// The same scalar-derivative panels over the **compacted tail**: tail
+    /// points in place of the hot window, frozen weights `W` in place of
+    /// `Z`. Fresh `O(T·D)` kernel work per query — the tail is a small dense
+    /// component that never touches the sharded hot path.
+    fn tail_query_panels(&self, tail: &GradientTail, xq: &[f64]) -> QueryPanels {
+        let d = self.d();
+        let t = tail.len();
+        assert_eq!(xq.len(), d, "query dimension mismatch");
+        let f = self.factors();
+        let kern = self.kernel();
+        match f.class {
+            KernelClass::DotProduct => {
+                let c = self.center_vec();
+                let xtq_v: Vec<f64> = (0..d).map(|i| xq[i] - c[i]).collect();
+                let xtq = Mat::from_vec(d, 1, xtq_v);
+                let lam_xtq = f.metric.apply_mat(&xtq);
+                let mut kp = vec![0.0; t];
+                let mut kpp = vec![0.0; t];
+                let mut kppp = vec![0.0; t];
+                let mut m = vec![0.0; t];
+                for e in 0..t {
+                    let xe = tail.xt.col(e);
+                    let we = tail.w.col(e);
+                    let lq = lam_xtq.col(0);
+                    let mut r = 0.0;
+                    let mut me = 0.0;
+                    for i in 0..d {
+                        r += lq[i] * xe[i];
+                        me += lq[i] * we[i];
+                    }
+                    kp[e] = kern.dk(r);
+                    kpp[e] = kern.d2k(r);
+                    kppp[e] = kern.d3k(r);
+                    m[e] = me;
+                }
+                QueryPanels { xtq, lam_xtq, kp, kpp, kppp, m }
+            }
+            KernelClass::Stationary => {
+                let mut xtq = Mat::zeros(d, t);
+                for e in 0..t {
+                    let xe = tail.xt.col(e);
+                    let col = xtq.col_mut(e);
+                    for i in 0..d {
+                        col[i] = xq[i] - xe[i];
+                    }
+                }
+                let lam_xtq = f.metric.apply_mat(&xtq);
+                let mut kp = vec![0.0; t];
+                let mut kpp = vec![0.0; t];
+                let mut kppp = vec![0.0; t];
+                let mut m = vec![0.0; t];
+                for e in 0..t {
+                    let de = xtq.col(e);
+                    let lde = lam_xtq.col(e);
+                    let we = tail.w.col(e);
+                    let mut r = 0.0;
+                    let mut me = 0.0;
+                    for i in 0..d {
+                        r += de[i] * lde[i];
+                        me += lde[i] * we[i];
+                    }
+                    let r = r.max(0.0);
+                    kp[e] = kern.dk(r);
+                    // same Matérn guard as the hot panels
+                    let g2 = kern.d2k(r);
+                    let g3 = kern.d3k(r);
+                    kpp[e] = if g2.is_finite() { g2 } else { 0.0 };
+                    kppp[e] = if g3.is_finite() { g3 } else { 0.0 };
+                    m[e] = me;
+                }
+                QueryPanels { xtq, lam_xtq, kp, kpp, kppp, m }
+            }
+        }
+    }
+
+    /// Accumulate the tail's pre-`Λ` representer combination at the query
+    /// into `out` — one code path (hence one bit pattern) shared by
+    /// [`GradientGp::predict_gradient`] (same buffer as the hot window, `Λ`
+    /// applied once at the end) and [`GradientGp::tail_field`].
+    fn accumulate_tail(&self, tail: &GradientTail, xq: &[f64], out: &mut [f64]) {
+        let d = self.d();
+        let tq = self.tail_query_panels(tail, xq);
+        match self.factors().class {
+            KernelClass::DotProduct => {
+                for e in 0..tail.len() {
+                    let we = tail.w.col(e);
+                    let xe = tail.xt.col(e);
+                    let w1 = tq.kp[e];
+                    let w2 = tq.kpp[e] * tq.m[e];
+                    for i in 0..d {
+                        out[i] += w1 * we[i] + w2 * xe[i];
+                    }
+                }
+            }
+            KernelClass::Stationary => {
+                for e in 0..tail.len() {
+                    let we = tail.w.col(e);
+                    let de = tq.xtq.col(e);
+                    let w1 = -2.0 * tq.kp[e];
+                    let w2 = -4.0 * tq.kpp[e] * tq.m[e];
+                    for i in 0..d {
+                        out[i] += w1 * we[i] + w2 * de[i];
+                    }
+                }
+            }
+        }
+    }
+
+    /// The tail's gradient field at one point (post-`Λ`, no prior mean):
+    /// `Σ_e block(x, e)·w_e`. The online engine appends this as the new
+    /// `at_hot` column whenever the hot window gains a point.
+    pub(super) fn tail_field(&self, tail: &GradientTail, xq: &[f64]) -> Vec<f64> {
+        let d = self.d();
+        let mut out = vec![0.0; d];
+        self.accumulate_tail(tail, xq, &mut out);
+        let m = Mat::from_vec(d, 1, out);
+        self.factors().metric.apply_mat(&m).into_vec()
+    }
+
     /// Posterior mean of `∇f(x⋆)`.
     pub fn predict_gradient(&self, xq: &[f64]) -> Vec<f64> {
         let (d, n) = (self.d(), self.n());
@@ -215,6 +352,12 @@ impl GradientGp {
                     }
                 }
             }
+        }
+        // tiered posterior: the compacted tail's frozen representer field
+        // accumulates into the same pre-Λ buffer (absent tail = no-op, so
+        // the window-forget path stays bitwise identical)
+        if let Some(tail) = self.tail() {
+            self.accumulate_tail(tail, xq, &mut out);
         }
         // apply Λ to the accumulated (Z k′ + X̃(k″⊙m)) combination
         let out_mat = Mat::from_vec(d, 1, out);
@@ -272,6 +415,13 @@ impl GradientGp {
         for b in 0..n {
             v += scale * q.kp[b] * q.m[b];
         }
+        // compacted-tail contribution — same form, frozen weights
+        if let Some(tail) = self.tail() {
+            let tq = self.tail_query_panels(tail, xq);
+            for e in 0..tail.len() {
+                v += scale * tq.kp[e] * tq.m[e];
+            }
+        }
         if let Some(gc) = self.prior_grad_mean_opt() {
             for i in 0..self.d() {
                 v += gc[i] * xq[i];
@@ -283,6 +433,8 @@ impl GradientGp {
     /// Posterior variance of `f(x⋆)`: `k(r⋆⋆) − cᵀ (∇K∇′)⁻¹ c` with `c` the
     /// cross-covariance between `f(x⋆)` and the gradient observations.
     /// Costs one extra Gram solve (amortized via the cached factorization).
+    /// Hot-tier-only under the tiered posterior (see the module docs: the
+    /// compacted tail is a deterministic mean field).
     pub fn predict_value_var(&self, xq: &[f64]) -> anyhow::Result<f64> {
         let (d, n) = (self.d(), self.n());
         let f = self.factors();
@@ -344,12 +496,42 @@ impl GradientGp {
                 (q.lam_xtq.clone(), m, hat, alpha)
             }
         };
-        let w = xpanel.hcat(&lam_z);
-        let mut s = Mat::zeros(2 * n, 2 * n);
-        for b in 0..n {
+        // tiered posterior: the tail extends the low-rank panels (the Hessian
+        // mean is the Jacobian of the gradient mean, which carries the tail
+        // term — `hessian_is_jacobian_of_predicted_gradient` pins this with
+        // a tail in the online tests). Without a tail this block is a no-op
+        // and W/S keep their historical 2N shape.
+        let (mut xpanel, mut zpanel, mut s_m, mut s_hat, mut alpha) =
+            (xpanel, lam_z, s_m, s_hat, alpha);
+        if let Some(tail) = self.tail() {
+            let t = tail.len();
+            let tq = self.tail_query_panels(tail, xq);
+            let lam_w = f.metric.apply_mat(&tail.w);
+            let (xp_t, m_t, hat_t, alpha_t) = match f.class {
+                KernelClass::DotProduct => {
+                    let m: Vec<f64> = (0..t).map(|e| tq.kppp[e] * tq.m[e]).collect();
+                    (tail.lam_xt.clone(), m, tq.kpp.clone(), 0.0)
+                }
+                KernelClass::Stationary => {
+                    let m: Vec<f64> = (0..t).map(|e| -8.0 * tq.kppp[e] * tq.m[e]).collect();
+                    let hat: Vec<f64> = tq.kpp.iter().map(|v| -4.0 * v).collect();
+                    let alpha_t: f64 = (0..t).map(|e| -4.0 * tq.kpp[e] * tq.m[e]).sum();
+                    (tq.lam_xtq.clone(), m, hat, alpha_t)
+                }
+            };
+            xpanel = xpanel.hcat(&xp_t);
+            zpanel = zpanel.hcat(&lam_w);
+            s_m.extend_from_slice(&m_t);
+            s_hat.extend_from_slice(&hat_t);
+            alpha += alpha_t;
+        }
+        let nn = s_m.len();
+        let w = xpanel.hcat(&zpanel);
+        let mut s = Mat::zeros(2 * nn, 2 * nn);
+        for b in 0..nn {
             s[(b, b)] = s_m[b];
-            s[(b, n + b)] = s_hat[b];
-            s[(n + b, b)] = s_hat[b];
+            s[(b, nn + b)] = s_hat[b];
+            s[(nn + b, b)] = s_hat[b];
         }
         let _ = d;
         HessianParts { alpha, w, s }
@@ -368,7 +550,9 @@ impl GradientGp {
     /// the cached factorization, the iterative path runs a single block-CG
     /// Krylov sequence instead of `D` independent CG runs. Intended for
     /// diagnostics and moderate `D` (e.g. the posterior ellipses of Fig. 5);
-    /// the stacked right-hand sides take `O(ND·D)` memory.
+    /// the stacked right-hand sides take `O(ND·D)` memory. Hot-tier-only
+    /// under the tiered posterior (see the module docs: the compacted tail
+    /// is a deterministic mean field and contributes no covariance).
     pub fn predict_gradient_cov(&self, xq: &[f64]) -> anyhow::Result<Mat> {
         let (d, n) = (self.d(), self.n());
         let f = self.factors();

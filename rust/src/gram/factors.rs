@@ -57,6 +57,36 @@ pub struct GramFactors {
     pub center: Option<Vec<f64>>,
 }
 
+/// Panel slices of the observation evicted by [`GramFactors::drop_first`]:
+/// the first row of each effective `N×N` panel *before* the shrink (so index
+/// `0` is the evicted point's own diagonal entry and index `j ≥ 1` pairs it
+/// with what becomes retained column `j − 1`), plus its input columns.
+///
+/// These are exactly the cross terms the dense Gram assembly
+/// ([`GramFactors::to_dense`]) would place in block row `0`, so a consumer
+/// can reconstruct the evicted observation's coupling to the retained window
+/// without a single kernel evaluation.
+#[derive(Clone, Debug)]
+pub struct EvictedPanels {
+    /// First row of `K̂′` (`noise/λ` folded into entry 0, off-diagonals clean).
+    pub kp: Vec<f64>,
+    /// First row of `K̂″` (Matérn-guarded diagonal at entry 0).
+    pub kpp: Vec<f64>,
+    /// First row of the scalar-argument panel `r`.
+    pub r: Vec<f64>,
+    /// Evicted input column `x̃_e ∈ R^D` (centered for dot-product kernels).
+    pub xt: Vec<f64>,
+    /// Evicted `Λx̃_e ∈ R^D`.
+    pub lam_xt: Vec<f64>,
+}
+
+impl EvictedPanels {
+    /// Memory held by the slices, in f64 counts (tail accounting).
+    pub fn memory_f64(&self) -> usize {
+        self.kp.len() + self.kpp.len() + self.r.len() + self.xt.len() + self.lam_xt.len()
+    }
+}
+
 impl GramFactors {
     /// Build the factors from data `X ∈ R^{D×N}` (columns = points).
     ///
@@ -276,8 +306,30 @@ impl GramFactors {
 
     /// Drop the oldest observation in place (sliding-window companion of
     /// [`GramFactors::append`]): `O(ND + N²)` copies, zero kernel work.
-    pub fn drop_first(&mut self) {
+    ///
+    /// Returns the evicted observation's panel slices instead of discarding
+    /// them: the first *row* of each effective `N×N` panel (entry `0` is the
+    /// evicted point's own diagonal, entries `1..` pair it with each retained
+    /// point) plus its input columns. The tiered posterior's fold-op
+    /// ([`crate::gp::OnlineGradientGp`] with `gp.compaction = exact`)
+    /// consumes these to push the evicted column into the compacted tail
+    /// with **zero kernel re-evaluation**; window-forget callers simply
+    /// ignore the return value.
+    pub fn drop_first(&mut self) -> EvictedPanels {
         assert!(self.n() > 1, "cannot drop the last observation");
+        let n = self.n();
+        let mut ev = EvictedPanels {
+            kp: vec![0.0; n],
+            kpp: vec![0.0; n],
+            r: vec![0.0; n],
+            xt: self.xt.col(0).to_vec(),
+            lam_xt: self.lam_xt.col(0).to_vec(),
+        };
+        for b in 0..n {
+            ev.kp[b] = self.kp_eff[(0, b)];
+            ev.kpp[b] = self.kpp_eff[(0, b)];
+            ev.r[b] = self.r[(0, b)];
+        }
         self.h = shrink_first(&self.h);
         self.r = shrink_first(&self.r);
         self.kp_eff = shrink_first(&self.kp_eff);
@@ -285,6 +337,7 @@ impl GramFactors {
         self.xt.remove_first_col();
         self.lam_xt.remove_first_col();
         self.lam_xt_t = self.lam_xt.t();
+        ev
     }
 
     /// Number of observations `N`.
@@ -612,6 +665,45 @@ mod tests {
                 actual,
                 "memory_f64 must count r, K̂′, K̂″, H, X̃, ΛX̃, (ΛX̃)ᵀ and the center"
             );
+        }
+    }
+
+    #[test]
+    fn drop_first_returns_the_evicted_panel_slices() {
+        // the fold-op's entire input: the slices must be bitwise equal to the
+        // pre-drop panels' first row/column, and the tail accountant must
+        // count exactly those buffers (PR 3 accounting style).
+        let (d, n) = (5, 4);
+        let x = sample_x(d, n, 77);
+        let c = vec![0.2, -0.1, 0.05, 0.3, -0.25];
+        let cases = vec![
+            GramFactors::with_noise(&SquaredExponential, &x, Metric::Iso(0.7), None, 1e-3),
+            GramFactors::new(&Poly2Kernel, &x, Metric::Iso(0.9), Some(&c)),
+        ];
+        for mut f in cases {
+            let before = f.clone();
+            let ev = f.drop_first();
+            assert_eq!(ev.kp.len(), n);
+            assert_eq!(ev.kpp.len(), n);
+            assert_eq!(ev.r.len(), n);
+            assert_eq!(ev.xt.len(), d);
+            assert_eq!(ev.lam_xt.len(), d);
+            for b in 0..n {
+                assert_eq!(ev.kp[b], before.kp_eff[(0, b)], "kp[{b}]");
+                assert_eq!(ev.kpp[b], before.kpp_eff[(0, b)], "kpp[{b}]");
+                assert_eq!(ev.r[b], before.r[(0, b)], "r[{b}]");
+            }
+            assert_eq!(ev.xt.as_slice(), before.xt.col(0), "xt");
+            assert_eq!(ev.lam_xt.as_slice(), before.lam_xt.col(0), "lam_xt");
+            assert_eq!(
+                ev.memory_f64(),
+                3 * n + 2 * d,
+                "EvictedPanels::memory_f64 must count kp, kpp, r, x̃ and Λx̃"
+            );
+            // the retained window is untouched by the capture
+            let mut serial = before.clone();
+            serial.drop_first();
+            assert_factors_match(&f, &serial, 0.0, "post-capture window");
         }
     }
 

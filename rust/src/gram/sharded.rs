@@ -1249,15 +1249,18 @@ impl ShardedGramFactors {
 
     /// Drop the oldest observation from `f` and slide the shard boundaries
     /// over the retained panels — zero kernel work, zero recomputation
-    /// (and, for remote shards, a zero-payload wire frame).
-    pub fn drop_first(&mut self, f: &mut GramFactors) {
+    /// (and, for remote shards, a zero-payload wire frame). The evicted
+    /// panel slices are passed through for the tiered-posterior fold-op;
+    /// the shards themselves never see them (the tail is coordinator-local).
+    pub fn drop_first(&mut self, f: &mut GramFactors) -> crate::gram::EvictedPanels {
         assert_eq!(f.n(), self.n, "shard engine out of sync with factors");
-        f.drop_first();
+        let ev = f.drop_first();
         if self.is_degraded() {
             self.pool = None;
         }
         self.refresh_local(f);
         self.push_delta(f, None);
+        ev
     }
 
     /// Inline full-range application on the retained fallback state — the

@@ -221,6 +221,9 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  serving core: server.max_batch, server.deadline_us (batch coalescing), \
                  server.executors (engine-pool threads, native engine only), \
                  server.max_queue (admission bound; overload = fast error)\n\
+                 tiered posterior: gp.window (hot window), gp.compaction forget|exact \
+                 (exact = fold evictions into the compacted tail), gp.tail_max \
+                 (tail cap; 0 = unbounded)\n\
                  durability: --wal > GDKRON_WAL_PATH > server.wal_path (unset = no WAL); \
                  --lease > GDKRON_LEASE_PATH > server.lease_path > <wal>.lease; \
                  server.wal_fsync, server.wal_snapshot_interval, server.lease_ttl_ms, \
@@ -446,12 +449,14 @@ fn standby(args: &[String]) -> anyhow::Result<()> {
             let (engine, window) = replica.promote()?;
             println!(
                 "standby: PROMOTED at epoch {} — seq {}, N={} D={} window={} \
-                 cold_refits={} replayed_rollbacks={}",
+                 tail={} folds={} cold_refits={} replayed_rollbacks={}",
                 keeper.epoch(),
                 seq,
                 engine.gp().n(),
                 engine.gp().d(),
                 window,
+                engine.tail_len(),
+                engine.compactions(),
                 engine.cold_refits(),
                 errs
             );

@@ -20,7 +20,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use gdkron::coordinator::{Standby, WalOptions, WalPaths, WalWriter};
-use gdkron::gp::{FitMethod, FitOptions, OnlineGradientGp};
+use gdkron::gp::{Compaction, FitMethod, FitOptions, OnlineGradientGp};
 use gdkron::gram::registry::{now_unix_ms, read_lease};
 use gdkron::gram::remote::serve;
 use gdkron::gram::{LeaseKeeper, Metric, RegistryConfig};
@@ -196,6 +196,117 @@ fn primary_death_standby_steal_and_fenced_zombie() {
     );
     assert_bits_eq(promoted.gp().z(), mirror.gp().z(), "Z after the zombie's fenced write");
     assert_eq!(promoted.cold_refits(), 1, "steady state must stay incremental");
+
+    for p in [&paths.wal, &paths.snap, &lease] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// Both tiers must survive a failover bitwise: hot window AND compacted
+/// tail, field for field.
+fn assert_tiers_eq(a: &OnlineGradientGp, b: &OnlineGradientGp, what: &str) {
+    assert_bits_eq(a.gp().x(), b.gp().x(), &format!("{what}: X"));
+    assert_bits_eq(a.gp().g(), b.gp().g(), &format!("{what}: G"));
+    assert_bits_eq(a.gp().z(), b.gp().z(), &format!("{what}: Z"));
+    assert_eq!(a.tail_len(), b.tail_len(), "{what}: tail length");
+    assert_eq!(a.compactions(), b.compactions(), "{what}: fold count");
+    if let (Some(at), Some(bt)) = (a.gp().tail(), b.gp().tail()) {
+        assert_bits_eq(&at.xt, &bt.xt, &format!("{what}: tail X̃"));
+        assert_bits_eq(&at.lam_xt, &bt.lam_xt, &format!("{what}: tail ΛX̃"));
+        assert_bits_eq(&at.w, &bt.w, &format!("{what}: tail W"));
+        assert_bits_eq(&at.at_hot, &bt.at_hot, &format!("{what}: tail at_hot"));
+    }
+}
+
+#[test]
+fn windowed_failover_carries_the_compacted_tail_bitwise() {
+    // the tiered-posterior leg of the chaos pin: a windowed primary with
+    // `gp.compaction = exact` degrades and fails over, and the promoted
+    // standby carries BOTH tiers — folds replayed from the barrier
+    // sequence alone, the mid-stream snapshot restoring at_hot verbatim.
+    let base = std::env::temp_dir()
+        .join(format!("gdkron-chaos-fold-{}.wal", std::process::id()));
+    let paths = WalPaths::from_base(&base);
+    let mut lease_os = base.clone().into_os_string();
+    lease_os.push(".lease");
+    let lease = std::path::PathBuf::from(lease_os);
+    for p in [&paths.wal, &paths.snap, &lease] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    let addrs = vec![spawn_worker(), spawn_worker()];
+    let win = 3;
+    let (d, n0) = (4usize, 2usize);
+    let mut rng = Rng::new(72);
+    let x0 = Mat::from_fn(d, n0, |_, _| rng.gauss());
+    let g0 = Mat::from_fn(d, n0, |_, _| rng.gauss());
+    let mut primary = fit(&x0, &g0);
+    let mut mirror = fit(&x0, &g0);
+    primary.set_compaction(Compaction::Exact);
+    mirror.set_compaction(Compaction::Exact);
+
+    let keeper = LeaseKeeper::acquire(&lease, "primary", TTL).expect("fresh lease");
+    primary.set_remote_registry(registry(addrs.clone(), keeper.epoch())).expect("attach");
+    assert_eq!(primary.shards(), 2);
+    // snapshot_interval 3: a compaction lands mid-stream, so the failover
+    // also proves the snapshot serializes the tail verbatim
+    let wal_opts = WalOptions { fsync: true, snapshot_interval: 3 };
+    let mut wal = WalWriter::create(paths.clone(), wal_opts, &primary, win).expect("wal");
+
+    for _ in 0..6 {
+        let xc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        let gc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        wal.log_observe(&xc, &gc).expect("WAL-first append");
+        primary.observe_windowed(&xc, &gc, win).expect("primary observe");
+        mirror.observe_windowed(&xc, &gc, win).expect("mirror observe");
+        if wal.snapshot_due() {
+            wal.write_snapshot(&primary).expect("snapshot compaction");
+        }
+        keeper.renew().expect("primary heartbeat");
+    }
+    assert_eq!(primary.n(), win, "window must be saturated");
+    assert_eq!(primary.tail_len(), 5, "five evictions must have folded");
+    assert!(primary.shard_degradation().is_none(), "fleet must be healthy pre-fault");
+    assert_tiers_eq(&primary, &mirror, "sharded primary vs unsharded mirror");
+
+    // PRIMARY DIES; the lease lapses
+    drop(keeper);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let l = read_lease(&lease).unwrap().expect("lease file exists");
+        if l.expired_at(now_unix_ms()) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "lease must lapse once renewals stop");
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // STANDBY TAKES OVER with both tiers intact
+    let mut sb = Standby::new(paths.clone(), Arc::new(SquaredExponential), fit_method());
+    let r = sb.catch_up().expect("catch-up");
+    assert_eq!(r.apply_errors, 0);
+    let thief = LeaseKeeper::acquire(&lease, "standby", TTL).expect("steal a lapsed lease");
+    assert_eq!(thief.epoch(), 2);
+    let (mut promoted, window) = sb.promote().expect("promote");
+    assert_eq!(window, win, "genesis must carry the window boundary");
+    assert_eq!(promoted.compaction(), Compaction::Exact, "genesis must carry the policy");
+    promoted
+        .set_remote_registry(registry(addrs, thief.epoch()))
+        .expect("claimed re-attach at the stolen epoch");
+    assert_tiers_eq(&promoted, &mirror, "promoted standby");
+    assert_eq!(promoted.cold_refits(), 1, "failover must not cold-refit");
+
+    // and the new primary keeps folding: the tail stays bitwise through
+    // post-failover windowed serving
+    for _ in 0..2 {
+        let xc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        let gc: Vec<f64> = (0..d).map(|_| rng.gauss()).collect();
+        promoted.observe_windowed(&xc, &gc, win).expect("post-failover observe");
+        mirror.observe_windowed(&xc, &gc, win).expect("mirror observe");
+        thief.renew().expect("new primary heartbeat");
+    }
+    assert_eq!(promoted.tail_len(), 7);
+    assert_tiers_eq(&promoted, &mirror, "post-failover folds");
 
     for p in [&paths.wal, &paths.snap, &lease] {
         let _ = std::fs::remove_file(p);

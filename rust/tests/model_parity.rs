@@ -1,0 +1,212 @@
+//! Cross-implementation parity suite for the [`GradientModel`] surface.
+//!
+//! Every conditioning engine the crate exposes — cold [`GradientGp`],
+//! [`OnlineGradientGp`] grown incrementally, the same engine with its
+//! Gram operator sharded in-process or across loopback-TCP workers, and
+//! the tiered (hot-window + compacted-tail) posterior — must agree on
+//! `predict_gradients` / `predict_gradient_cov` when conditioned on the
+//! same effective data:
+//!
+//! * incremental growth matches a cold fit to ≤ 1e-8 relative;
+//! * sharded and remote-backed engines match the unsharded engine
+//!   **bitwise** (the transport pins are op-level, this suite pins them
+//!   at the model surface);
+//! * at a fold barrier, the tiered posterior's *mean* matches a cold fit
+//!   on the **full** history, while its covariance matches a cold fit on
+//!   the **hot window** — the documented frozen-representer semantics
+//!   (`docs/ARCHITECTURE.md`, "Tiered posterior").
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use gdkron::gp::{
+    Compaction, FitMethod, FitOptions, GradientGp, GradientModel, OnlineGradientGp,
+};
+use gdkron::gram::remote::serve;
+use gdkron::gram::Metric;
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::Mat;
+use gdkron::rng::Rng;
+use gdkron::solvers::CgOptions;
+
+const D: usize = 6;
+const TOTAL: usize = 8;
+const WINDOW: usize = 4;
+
+fn sample(seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (Mat::from_fn(D, TOTAL, |_, _| rng.gauss()), Mat::from_fn(D, TOTAL, |_, _| rng.gauss()))
+}
+
+fn queries(count: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(D, count, |_, _| rng.gauss())
+}
+
+fn fit_online(x: &Mat, g: &Mat, opts: &FitOptions) -> OnlineGradientGp {
+    OnlineGradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.3),
+        &x.block(0, 0, D, WINDOW),
+        &g.block(0, 0, D, WINDOW),
+        opts,
+    )
+    .expect("initial online fit")
+}
+
+fn assert_close(a: &Mat, b: &Mat, tol: f64, label: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{label}: shape");
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            let (u, v) = (a[(i, j)], b[(i, j)]);
+            assert!(
+                (u - v).abs() <= tol * (1.0 + v.abs()),
+                "{label}: ({i},{j}): {u} vs {v}"
+            );
+        }
+    }
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, label: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{label}: shape");
+    for j in 0..a.cols() {
+        for i in 0..a.rows() {
+            assert_eq!(
+                a[(i, j)].to_bits(),
+                b[(i, j)].to_bits(),
+                "{label}: ({i},{j}) differs in bits: {} vs {}",
+                a[(i, j)],
+                b[(i, j)]
+            );
+        }
+    }
+}
+
+/// Spawn a real shard worker on an ephemeral loopback port.
+fn spawn_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = serve(listener);
+    });
+    addr
+}
+
+#[test]
+fn grown_online_engine_matches_the_cold_fit_on_the_full_history() {
+    let (x, g) = sample(11);
+    let opts = FitOptions { method: FitMethod::Exact, ..Default::default() };
+    let cold = GradientGp::fit(Arc::new(SquaredExponential), Metric::Iso(0.3), &x, &g, &opts)
+        .expect("cold fit");
+    let mut online = fit_online(&x, &g, &opts);
+    for j in WINDOW..TOTAL {
+        online.observe(x.col(j), g.col(j)).expect("observe");
+    }
+    let xqs = queries(5, 21);
+    assert_close(&online.predict_gradients(&xqs), &cold.predict_gradients(&xqs), 1e-8, "grads");
+    let xq = xqs.col(0);
+    let co = online.predict_gradient_cov(xq).expect("online cov");
+    let cc = cold.predict_gradient_cov(xq).expect("cold cov");
+    assert_close(&co, &cc, 1e-8, "gradient cov");
+}
+
+#[test]
+fn sharded_and_remote_engines_match_the_unsharded_engine_bitwise() {
+    // iterative engine so the operator applications actually fan out over
+    // the shard transports; same observe stream on all three engines
+    let (x, g) = sample(12);
+    let cg = CgOptions { rtol: 1e-12, max_iters: 50_000, ..Default::default() };
+    let opts = FitOptions { method: FitMethod::Iterative(cg), ..Default::default() };
+    let mut plain = fit_online(&x, &g, &opts);
+    let mut sharded = fit_online(&x, &g, &opts);
+    sharded.set_shards(2);
+    let mut remote = fit_online(&x, &g, &opts);
+    let addrs = vec![spawn_worker(), spawn_worker()];
+    remote.set_remote_shards(&addrs, Duration::from_secs(5)).expect("connect remote shards");
+    for j in WINDOW..TOTAL {
+        plain.observe(x.col(j), g.col(j)).expect("plain observe");
+        sharded.observe(x.col(j), g.col(j)).expect("sharded observe");
+        remote.observe(x.col(j), g.col(j)).expect("remote observe");
+    }
+    assert_eq!(sharded.shards(), 2);
+    assert_eq!(remote.shards(), 2);
+    assert!(remote.shard_degradation().is_none(), "remote engine degraded");
+
+    let xqs = queries(5, 22);
+    let want = plain.predict_gradients(&xqs);
+    assert_bits_eq(&sharded.predict_gradients(&xqs), &want, "sharded grads");
+    assert_bits_eq(&remote.predict_gradients(&xqs), &want, "remote grads");
+    let xq = xqs.col(0);
+    let want_cov = plain.predict_gradient_cov(xq).expect("plain cov");
+    let sharded_cov = sharded.predict_gradient_cov(xq).expect("sharded cov");
+    let remote_cov = remote.predict_gradient_cov(xq).expect("remote cov");
+    assert_bits_eq(&sharded_cov, &want_cov, "sharded cov");
+    assert_bits_eq(&remote_cov, &want_cov, "remote cov");
+}
+
+#[test]
+fn tiered_posterior_mean_matches_full_history_cov_matches_hot_window() {
+    let (x, g) = sample(13);
+    let opts = FitOptions { method: FitMethod::Exact, ..Default::default() };
+
+    // engine with exact compaction: every eviction folds into the tail, so
+    // at the fold barrier the composite mean equals the cold fit on the
+    // FULL history even though only WINDOW columns stay hot. (Folds are
+    // exact until the next append — so condition on everything, then
+    // evict; the interleaved observe_windowed legs live in gp/online.rs.)
+    let mut tiered =
+        OnlineGradientGp::fit(Arc::new(SquaredExponential), Metric::Iso(0.3), &x, &g, &opts)
+            .expect("full online fit");
+    tiered.set_compaction(Compaction::Exact);
+    for _ in WINDOW..TOTAL {
+        tiered.drop_first().expect("drop_first fold");
+    }
+    assert_eq!(tiered.n(), WINDOW);
+    assert_eq!(tiered.tail_len(), TOTAL - WINDOW);
+    assert_eq!(tiered.compactions(), (TOTAL - WINDOW) as u64);
+
+    let cold_full =
+        GradientGp::fit(Arc::new(SquaredExponential), Metric::Iso(0.3), &x, &g, &opts)
+            .expect("cold full fit");
+    let xqs = queries(5, 23);
+    assert_close(
+        &tiered.predict_gradients(&xqs),
+        &cold_full.predict_gradients(&xqs),
+        1e-7,
+        "tiered grads vs full history",
+    );
+
+    // covariance is a hot-tier quantity by design: the tail is a frozen
+    // mean-field shift, so the posterior covariance is the cold fit on the
+    // hot window's inputs (targets never enter a covariance)
+    let cold_window = GradientGp::fit(
+        Arc::new(SquaredExponential),
+        Metric::Iso(0.3),
+        &x.block(0, TOTAL - WINDOW, D, WINDOW),
+        &g.block(0, TOTAL - WINDOW, D, WINDOW),
+        &opts,
+    )
+    .expect("cold window fit");
+    let xq = xqs.col(0);
+    let ct = tiered.predict_gradient_cov(xq).expect("tiered cov");
+    let cw = cold_window.predict_gradient_cov(xq).expect("window cov");
+    assert_close(&ct, &cw, 1e-8, "tiered cov vs hot window");
+
+    // and the default forget engine stays the pre-tail windowed posterior:
+    // mean AND covariance both match the cold window fit
+    let mut forget = fit_online(&x, &g, &opts);
+    for j in WINDOW..TOTAL {
+        forget.observe_windowed(x.col(j), g.col(j), WINDOW).expect("forget observe");
+    }
+    assert_eq!(forget.tail_len(), 0);
+    assert_close(
+        &forget.predict_gradients(&xqs),
+        &cold_window.predict_gradients(&xqs),
+        1e-8,
+        "forget grads vs window",
+    );
+    let cf = forget.predict_gradient_cov(xq).expect("forget cov");
+    assert_close(&cf, &cw, 1e-8, "forget cov vs window");
+}

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use gdkron::coordinator::{Standby, WalOptions, WalPaths, WalWriter};
-use gdkron::gp::{FitMethod, FitOptions, OnlineGradientGp};
+use gdkron::gp::{Compaction, FitMethod, FitOptions, OnlineGradientGp};
 use gdkron::gram::Metric;
 use gdkron::kernels::SquaredExponential;
 use gdkron::linalg::Mat;
@@ -55,6 +55,19 @@ fn assert_replica_matches(replica: &OnlineGradientGp, primary: &OnlineGradientGp
     assert_bits_eq(replica.gp().x(), primary.gp().x(), "X");
     assert_bits_eq(replica.gp().g(), primary.gp().g(), "G");
     assert_bits_eq(replica.gp().z(), primary.gp().z(), "Z (representer weights)");
+    assert_tail_matches(replica, primary);
+}
+
+/// Both tiers pin bitwise: the compacted tail (when present) must replay
+/// to the same bits as the live engine's, field for field.
+fn assert_tail_matches(replica: &OnlineGradientGp, primary: &OnlineGradientGp) {
+    assert_eq!(replica.tail_len(), primary.tail_len(), "tail length");
+    assert_eq!(replica.compactions(), primary.compactions(), "fold count");
+    let (Some(rt), Some(pt)) = (replica.gp().tail(), primary.gp().tail()) else { return };
+    assert_bits_eq(&rt.xt, &pt.xt, "tail X̃");
+    assert_bits_eq(&rt.lam_xt, &pt.lam_xt, "tail ΛX̃");
+    assert_bits_eq(&rt.w, &pt.w, "tail W (frozen weights)");
+    assert_bits_eq(&rt.at_hot, &pt.at_hot, "tail at_hot cache");
 }
 
 /// WAL-first discipline, as the serving engine drives it: log, then apply.
@@ -208,5 +221,54 @@ fn drop_first_and_set_targets_replay_bitwise() {
     let (promoted, window) = sb.promote().unwrap();
     assert_eq!(window, 0);
     assert_replica_matches(&promoted, &eng);
+    cleanup(&p);
+}
+
+#[test]
+fn exact_compaction_replays_the_fold_sequence_bitwise() {
+    // a fold is a pure function of the observe/drop barrier sequence, so
+    // the WAL carries no fold records: the genesis policy bytes alone must
+    // make the standby rebuild the primary's tail to the exact same bits —
+    // including the tail_max-capped degrade-to-forget eviction at the end.
+    let p = paths("fold");
+    let win = 3;
+    let mut eng = primary(3, 2, 26);
+    eng.set_compaction(Compaction::Exact);
+    eng.set_tail_max(4);
+    let opts = WalOptions { fsync: false, snapshot_interval: 1_000 };
+    let mut wal = WalWriter::create(p.clone(), opts, &eng, win).unwrap();
+    let mut rng = Rng::new(11);
+    // n starts at 2: the first observe just fills the window, the next
+    // five each evict — four folds, then the cap degrades the fifth to
+    // a plain forget
+    for _ in 0..6 {
+        let x: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+        let g: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+        observe(&mut wal, &mut eng, &x, &g, win);
+    }
+    assert_eq!(eng.n(), win);
+    assert_eq!(eng.tail_len(), 4, "tail_max must cap the tail");
+    assert_eq!(eng.compactions(), 4);
+
+    let mut sb = standby_for(&p);
+    let r = sb.catch_up().unwrap();
+    assert_eq!(r.apply_errors, 0);
+    let replica = sb.engine().unwrap();
+    assert_eq!(replica.compaction(), Compaction::Exact, "genesis must carry the policy");
+    assert_eq!(replica.tail_max(), 4, "genesis must carry the cap");
+    assert_replica_matches(replica, &eng);
+    assert_eq!(replica.cold_refits(), 1, "replay must stay incremental");
+
+    // snapshot leg: the tail serializes verbatim (at_hot is stored, not
+    // recomputed), so a snapshot-restored standby is just as bitwise
+    wal.write_snapshot(&eng).unwrap();
+    let x: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+    let g: Vec<f64> = (0..3).map(|_| rng.gauss()).collect();
+    observe(&mut wal, &mut eng, &x, &g, win);
+    let mut sb2 = standby_for(&p);
+    let r = sb2.catch_up().unwrap();
+    assert!(r.snapshot_loaded, "fresh standby must restore from the sidecar");
+    assert_eq!((r.applied, r.apply_errors), (1, 0));
+    assert_replica_matches(sb2.engine().unwrap(), &eng);
     cleanup(&p);
 }
