@@ -1,0 +1,223 @@
+//! Bench: the mixed-precision panel tier — f32 storage, f64 accumulation,
+//! refinement-certified solves (`gram.precision = mixed`).
+//!
+//! Two modes:
+//!
+//! ```bash
+//! cargo bench --bench precision_tier            # pins + the D=1024 N=8 K=8
+//!                                               # timed panel products
+//! cargo bench --bench precision_tier -- --test  # CI smoke: every pin, tiny
+//!                                               # timing, no throughput
+//!                                               # asserts
+//! ```
+//!
+//! Three pins run in **both** modes (all deterministic):
+//!
+//! * the mixed panel product sits within the documented entrywise bound
+//!   `(1.01·ε_f32 + 8·k·ε_f64)·(|A|·|B|)` of the f64 reference,
+//! * a tier-backed `WoodburySolver::solve_refined` meets the pinned
+//!   [`REFINE_RTOL`] true relative residual against the exact operator,
+//! * the v4 f32 wire frames carry ≤ 0.55× the bytes of their f64
+//!   counterparts on the D=1024/N=8 serving shape — the acceptance
+//!   criterion, measured on real encoded frames, not estimated.
+//!
+//! The timed section reports GFLOP/s *and* bytes-moved for the same panel
+//! product in both storage tiers: the flop count is identical by
+//! construction, so the bytes column is the one that moves.
+
+use std::time::Duration;
+
+use gdkron::bench_util::{bench_with, black_box, gemm_flops};
+use gdkron::gram::wire::{AppendFrame, CoordFrame, SyncFrame};
+use gdkron::gram::{GramFactors, GramOperator, Metric, WoodburySolver};
+use gdkron::kernels::SquaredExponential;
+use gdkron::linalg::{gemm, par, Mat, MatF32};
+use gdkron::rng::Rng;
+use gdkron::solvers::{LinearOp, REFINE_RTOL};
+
+fn sample(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.gauss())
+}
+
+/// Pin 1: `widen-at-pack ∘ f64-accumulate` keeps the mixed product inside
+/// the documented envelope — storage rounding (`1.01·ε_f32`) plus the
+/// blocked-reduction term (`8·k·ε_f64`), both scaled by `|A|·|B|`.
+fn check_mixed_bound(m: usize, k: usize, n: usize) {
+    let a = sample(m, k, 31 + (m * 13 + k * 5 + n) as u64);
+    let b = sample(k, n, 37 + (m + k * 11 + n * 3) as u64);
+    let a32 = MatF32::round_from(&a);
+    let mut mixed = Mat::zeros(m, n);
+    par::mixed_matmul_into(&a32, &b, &mut mixed, false);
+    let exact = a.matmul(&b);
+    let abs_prod = a.map(f64::abs).matmul(&b.map(f64::abs));
+    let coeff = 1.01 * f64::from(f32::EPSILON) + 8.0 * (k.max(1) as f64) * f64::EPSILON;
+    for j in 0..n {
+        for i in 0..m {
+            let bound = coeff * abs_prod[(i, j)].abs().max(1e-300);
+            let err = (mixed[(i, j)] - exact[(i, j)]).abs();
+            assert!(
+                err <= bound,
+                "m={m} k={k} n={n}: entry ({i},{j}) error {err:e} exceeds the pinned mixed \
+                 bound {bound:e}"
+            );
+        }
+    }
+}
+
+/// Pin 2: the solve path. A tier-backed factor set solved through
+/// `solve_refined` must meet [`REFINE_RTOL`] measured against the **exact**
+/// operator — the end-to-end promise `docs/CONFIG.md` makes for
+/// `gram.precision = mixed`.
+fn check_solve_pin() {
+    let (d, n) = (48usize, 6usize);
+    let x = sample(d, n, 71);
+    let g = sample(d, n, 72);
+    let mut f = GramFactors::with_noise(&SquaredExponential, &x, Metric::Iso(0.6), None, 1e-6);
+    if !f.tier_active() {
+        // deterministic regardless of GDKRON_PRECISION in the environment
+        f.enable_tier();
+    }
+    let solver = WoodburySolver::new(&f).expect("woodbury factorization");
+    let z = solver.solve_refined(&f, &g).expect("refined solve");
+    let op = GramOperator::new_exact(&f);
+    let mut y = vec![0.0; d * n];
+    op.apply(z.as_slice(), &mut y);
+    let (mut rr, mut bb) = (0.0_f64, 0.0_f64);
+    for (gi, yi) in g.as_slice().iter().zip(&y) {
+        rr += (gi - yi) * (gi - yi);
+        bb += gi * gi;
+    }
+    let rel = rr.sqrt() / bb.sqrt();
+    assert!(
+        rel <= REFINE_RTOL,
+        "refined mixed solve: true relative residual {rel:e} misses the pinned {REFINE_RTOL:e}"
+    );
+}
+
+fn encoded_len(frame: &CoordFrame) -> usize {
+    let mut buf: Vec<u8> = Vec::new();
+    frame.write_to(&mut buf).expect("frame encode");
+    buf.len()
+}
+
+/// Pin 3 (the acceptance criterion): real encoded v4 frames at the
+/// D=1024/N=8 serving shape carry ≤ 0.55× the bytes of the f64 frames,
+/// for both the panel broadcast (sync) and the per-observe border (append).
+fn check_wire_bytes() {
+    let (d, n) = (1024usize, 8usize);
+    let x = sample(d, n, 90);
+    let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.8), None);
+    let sync = Box::new(SyncFrame {
+        shard_id: 0,
+        nshards: 1,
+        class: f.class,
+        metric: f.metric.clone(),
+        xt: f.xt.clone(),
+        lam_xt: f.lam_xt.clone(),
+        kp_eff: f.kp_eff.clone(),
+        kpp_eff: f.kpp_eff.clone(),
+        h: f.h.clone(),
+    });
+    let sync_full = encoded_len(&CoordFrame::SyncAt { revision: 1, sync: sync.clone() });
+    let sync_tier = encoded_len(&CoordFrame::SyncAtF32 { revision: 1, sync });
+    let sync_ratio = sync_tier as f64 / sync_full as f64;
+    println!(
+        "sync frame  D={d} N={n}: f64 {sync_full} B, f32 tier {sync_tier} B ({sync_ratio:.3}x)"
+    );
+
+    let mk_append = || {
+        Box::new(AppendFrame {
+            xt_new: x.col(0).to_vec(),
+            lam_new: x.col(1).to_vec(),
+            h_col: vec![0.5; n],
+            kp_col: vec![0.25; n + 1],
+            kpp_col: vec![0.125; n + 1],
+        })
+    };
+    let app_full = encoded_len(&CoordFrame::Append(mk_append()));
+    let app_tier = encoded_len(&CoordFrame::AppendF32(mk_append()));
+    let app_ratio = app_tier as f64 / app_full as f64;
+    println!(
+        "append frame D={d} N={n}: f64 {app_full} B, f32 tier {app_tier} B ({app_ratio:.3}x)"
+    );
+
+    assert!(
+        sync_ratio <= 0.55,
+        "acceptance pin failed: tiered sync frame is {sync_ratio:.3}x the f64 bytes (> 0.55x)"
+    );
+    assert!(
+        app_ratio <= 0.55,
+        "acceptance pin failed: tiered append frame is {app_ratio:.3}x the f64 bytes (> 0.55x)"
+    );
+}
+
+/// Timed: the P-shaped panel product `Vᵀ(ΛX̃)` at serving scale in both
+/// storage tiers, GFLOP/s and bytes-moved side by side. The kernels run the
+/// identical KC-blocked f64 reduction; only the packed operand width
+/// changes, so the resident-panel traffic halves at equal flops.
+fn timed(target: Duration, samples: usize) {
+    let (d, n, kk) = (1024usize, 8usize, 8usize);
+    let lam = sample(d, n, 21);
+    let lam32 = MatF32::round_from(&lam);
+    let vs: Vec<Mat> = (0..kk).map(|k| sample(d, n, 200 + k as u64)).collect();
+    let mut out = Mat::zeros(n, n);
+    let flops = kk as u64 * gemm_flops(n, d, n);
+    // per-iteration operand traffic: K reads of V (f64) + the resident
+    // ΛX̃ panel (f64 vs f32) + K writes of the N×N result
+    let bytes_f64 = kk * (d * n * 8) + d * n * 8 + kk * n * n * 8;
+    let bytes_f32 = kk * (d * n * 8) + d * n * 4 + kk * n * n * 8;
+
+    let s64 = bench_with("panel_p f64  D=1024 N=8 K=8", target, samples, &mut || {
+        for v in &vs {
+            gemm::t_matmul_into(v, &lam, &mut out);
+        }
+        black_box(&out);
+    });
+    let r64 = s64.report_gflops(flops);
+    println!(
+        "{:<44} {:>14.2} MB moved/iter ({:.2} GB/s)",
+        "panel_p f64 [bytes]",
+        bytes_f64 as f64 / 1e6,
+        bytes_f64 as f64 / s64.median_ns.max(1.0)
+    );
+
+    let s32 = bench_with("panel_p f32t D=1024 N=8 K=8", target, samples, &mut || {
+        for v in &vs {
+            par::mixed_t_matmul_into(v, &lam32, &mut out);
+        }
+        black_box(&out);
+    });
+    let r32 = s32.report_gflops(flops);
+    println!(
+        "{:<44} {:>14.2} MB moved/iter ({:.2} GB/s)",
+        "panel_p f32t [bytes]",
+        bytes_f32 as f64 / 1e6,
+        bytes_f32 as f64 / s32.median_ns.max(1.0)
+    );
+    println!(
+        "panel bytes: {:.3}x (tier/f64); throughput: {:.2}x",
+        bytes_f32 as f64 / bytes_f64 as f64,
+        r32 / r64.max(1e-12)
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--test");
+    println!("# precision_tier — f32 panel storage, f64 accumulation, refined solves");
+
+    // deterministic pins run in every mode
+    for (m, k, n) in [(1, 1, 1), (7, 9, 5), (33, 64, 17), (70, 257, 9), (1024, 8, 8)] {
+        check_mixed_bound(m, k, n);
+    }
+    check_solve_pin();
+    check_wire_bytes();
+
+    if smoke {
+        timed(Duration::from_millis(20), 5);
+    } else {
+        timed(Duration::from_millis(400), 11);
+    }
+    println!("ok");
+}

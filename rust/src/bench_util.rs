@@ -70,7 +70,11 @@ pub fn bench_with(
         for _ in 0..iters_per_sample {
             f();
         }
-        times.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        // floor like the warmup read above: a sub-resolution timer can
+        // return zero elapsed for a tiny shape, and downstream ratios
+        // (gflops, speedups) divide by the median of these samples
+        let elapsed = t.elapsed().max(Duration::from_nanos(1));
+        times.push(elapsed.as_nanos() as f64 / iters_per_sample as f64);
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median = times[times.len() / 2];
@@ -146,6 +150,23 @@ mod tests {
         assert_eq!(s.gflops(2_000), 2.0);
         assert_eq!(gemm_flops(10, 20, 30), 12_000);
         assert_eq!(gemm_flops(0, 20, 30), 0);
+    }
+
+    #[test]
+    fn gflops_is_finite_on_a_zero_duration_stat() {
+        // a timer that read zero for every sample must not surface as
+        // inf/NaN GFLOP/s: the rate divisor floors at 1 ns
+        let s = BenchStats {
+            name: "degenerate".into(),
+            median_ns: 0.0,
+            mad_ns: 0.0,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        let rate = s.gflops(2_000);
+        assert!(rate.is_finite(), "zero-duration stat produced {rate}");
+        assert_eq!(rate, 2_000.0);
+        assert!(s.gflops(0) == 0.0);
     }
 
     #[test]

@@ -229,6 +229,47 @@ fn resolve_gemm_from(
         .unwrap_or(crate::linalg::gemm::GemmMode::Exact)
 }
 
+/// Resolve the panel storage precision for the mixed-precision tier
+/// ([`crate::linalg::gemm::Precision`]).
+///
+/// Priority: the launcher's `--precision` flag (installed process-wide via
+/// [`crate::linalg::gemm::set_global_precision`]), then the
+/// `GDKRON_PRECISION` environment variable, then the `gram.precision`
+/// config key; absent (or unparseable) everywhere,
+/// [`crate::linalg::gemm::Precision::F64`] — the byte-for-byte-inert
+/// default. All three spellings share
+/// [`crate::linalg::gemm::parse_precision`] (`f64` | `mixed`,
+/// case-insensitive). The launcher feeds the result to
+/// [`crate::linalg::gemm::set_precision`]. Like the gemm mode, a fleet
+/// must run one precision uniformly — remote workers resolve
+/// `GDKRON_PRECISION` in their own process.
+pub fn resolve_precision(config: &Config) -> crate::linalg::gemm::Precision {
+    resolve_precision_from(
+        config,
+        std::env::var("GDKRON_PRECISION").ok().as_deref(),
+        crate::linalg::gemm::global_precision(),
+    )
+}
+
+/// Pure core of [`resolve_precision`] (env/CLI values injected for
+/// testability).
+fn resolve_precision_from(
+    config: &Config,
+    env_val: Option<&str>,
+    cli: Option<crate::linalg::gemm::Precision>,
+) -> crate::linalg::gemm::Precision {
+    if let Some(p) = cli {
+        return p;
+    }
+    if let Some(p) = env_val.and_then(crate::linalg::gemm::parse_precision) {
+        return p;
+    }
+    config
+        .str("gram.precision")
+        .and_then(crate::linalg::gemm::parse_precision)
+        .unwrap_or(crate::linalg::gemm::Precision::F64)
+}
+
 /// Resolve the **remote** shard worker addresses for the cross-node Gram
 /// transport ([`crate::gram::remote`]).
 ///
@@ -565,6 +606,14 @@ pub const KNOBS: &[Knob] = &[
         sample: "[gram]\ngemm = \"fast\"",
     },
     Knob {
+        key: "gram.precision",
+        cli: Some("--precision"),
+        env: Some("GDKRON_PRECISION"),
+        default: "f64",
+        validation: "f64 | mixed, case-insensitive; unparseable = f64",
+        sample: "[gram]\nprecision = \"mixed\"",
+    },
+    Knob {
         key: "gram.remote_shards",
         cli: None,
         env: Some("GDKRON_REMOTE_SHARDS"),
@@ -842,6 +891,30 @@ jitter = 1e-10
         assert_eq!(resolve_gemm_from(&empty, None, None), GemmMode::Exact);
         let invalid = Config::from_str("[gram]\ngemm = \"blocked\"\n").unwrap();
         assert_eq!(resolve_gemm_from(&invalid, None, None), GemmMode::Exact);
+    }
+
+    #[test]
+    fn precision_resolution_order() {
+        use crate::linalg::gemm::Precision;
+        let cfg = Config::from_str("[gram]\nprecision = \"mixed\"\n").unwrap();
+        // CLI beats env beats config
+        assert_eq!(
+            resolve_precision_from(&cfg, Some("mixed"), Some(Precision::F64)),
+            Precision::F64
+        );
+        assert_eq!(resolve_precision_from(&cfg, Some("f64"), None), Precision::F64);
+        assert_eq!(resolve_precision_from(&cfg, Some(" MIXED "), None), Precision::Mixed);
+        // bad env falls through to config
+        assert_eq!(resolve_precision_from(&cfg, Some("zonk"), None), Precision::Mixed);
+        assert_eq!(resolve_precision_from(&cfg, None, None), Precision::Mixed);
+        // config spelling is case-insensitive too
+        let caps = Config::from_str("[gram]\nprecision = \"F64\"\n").unwrap();
+        assert_eq!(resolve_precision_from(&caps, None, None), Precision::F64);
+        // no knob anywhere, or an unparseable one → the inert f64 default
+        let empty = Config::from_str("").unwrap();
+        assert_eq!(resolve_precision_from(&empty, None, None), Precision::F64);
+        let invalid = Config::from_str("[gram]\nprecision = \"f32\"\n").unwrap();
+        assert_eq!(resolve_precision_from(&invalid, None, None), Precision::F64);
     }
 
     #[test]

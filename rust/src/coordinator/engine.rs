@@ -141,11 +141,16 @@ impl NativeEngine {
     /// every streamed `observe` slides them with the panels, and
     /// `gp.window` bounds the per-shard memory.
     ///
-    /// Note: `gram.gemm` is **not** applied here — the panel-gemm mode is
-    /// process-global, like the `threads` pool, and is installed once by
+    /// Note: `gram.gemm` and `gram.precision` are **not** applied here —
+    /// the panel-gemm mode and the storage-precision tier are
+    /// process-global, like the `threads` pool, and are installed once by
     /// the launcher ([`crate::config::resolve_gemm`] +
-    /// [`crate::linalg::gemm::set_mode`], or `GDKRON_GEMM` in worker
-    /// processes), not per engine.
+    /// [`crate::linalg::gemm::set_mode`];
+    /// [`crate::config::resolve_precision`] +
+    /// [`crate::linalg::gemm::set_precision`]; or `GDKRON_GEMM` /
+    /// `GDKRON_PRECISION` in worker processes), not per engine. Both must
+    /// be fleet-uniform: a mixed-tier coordinator refuses to sync panels to
+    /// a worker whose negotiated wire version predates the f32 frames.
     pub fn from_config(gp: GradientGp, config: &Config) -> Self {
         let online = config.bool_or("gp.online", true);
         let window = config.int_or("gp.window", 0).max(0) as usize;

@@ -365,7 +365,7 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<SnapshotData> {
     let kpp_eff = d.mat()?;
     let lam_xt_t = d.mat()?;
     let h = d.mat()?;
-    let factors = crate::gram::GramFactors {
+    let mut factors = crate::gram::GramFactors {
         class,
         xt,
         lam_xt,
@@ -377,7 +377,14 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<SnapshotData> {
         metric,
         noise,
         center,
+        tier: None,
     };
+    // The tier is never serialized: it is a pure function of the f64
+    // panels, so re-deriving it here reproduces the pre-crash bits exactly
+    // (standby failover stays deterministic in mixed mode).
+    if crate::linalg::gemm::precision() == crate::linalg::gemm::Precision::Mixed {
+        factors.enable_tier();
+    }
     let x = d.mat()?;
     let g = d.mat()?;
     let z = d.mat()?;

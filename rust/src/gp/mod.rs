@@ -43,7 +43,10 @@ use std::sync::Arc;
 use crate::gram::{poly2_solve, GramFactors, GramOperator, Metric, WoodburySolver};
 use crate::kernels::{AnalyticPath, ScalarKernel};
 use crate::linalg::Mat;
-use crate::solvers::{block_cg_solve, cg_solve, CgOptions, JacobiPrecond};
+use crate::solvers::{
+    block_cg_solve, cg_solve, refine_with, CgOptions, JacobiPrecond, LinearOp, RefineResult,
+    MAX_REFINE_ROUNDS, REFINE_RTOL,
+};
 
 /// Relative CG tolerance for *extra* right-hand-side solves: the variance /
 /// covariance queries ([`GradientGp::solve_rhs`], [`GradientGp::solve_rhs_block`])
@@ -52,6 +55,91 @@ use crate::solvers::{block_cg_solve, cg_solve, CgOptions, JacobiPrecond};
 /// subtractive formulas (`prior − reduction`) where residual error enters at
 /// first order. One named constant instead of duplicated literals.
 pub const EXTRA_RHS_RTOL: f64 = 1e-10;
+
+/// Mixed-precision residual correction for the CG solve paths: the Krylov
+/// iterations run on the tiered (f32-panel) operator — that is what makes
+/// them cheap — while the outer rounds measure the true residual against the
+/// exact f64 operator and re-solve it through the same inner CG until the
+/// pinned [`REFINE_RTOL`] bound holds ([`refine_with`]). Callers gate on
+/// [`GramFactors::tier_active`], keeping the default `f64` mode byte-inert.
+fn refine_cg(
+    factors: &GramFactors,
+    b: &[f64],
+    x0: Vec<f64>,
+    cg_opts: &CgOptions,
+) -> anyhow::Result<RefineResult> {
+    let exact = GramOperator::new_exact(factors);
+    let tiered = GramOperator::new(factors);
+    refine_with(&exact, b, x0, REFINE_RTOL, MAX_REFINE_ROUNDS, |r| {
+        let res = cg_solve(&tiered, r, None, cg_opts);
+        anyhow::ensure!(
+            res.converged,
+            "refinement CG did not converge on the residual system"
+        );
+        Ok(res.x)
+    })
+}
+
+/// Block-shaped variant of [`refine_cg`]: one exact block application
+/// measures every column's true residual, and a single inner block-CG run
+/// corrects all columns together — refinement keeps the batched structure
+/// the serving path pays for. Same stall contract as
+/// [`refine_with`]: a non-improving round is rolled back and the best
+/// iterate returned; residual growth beyond 4× is an error.
+fn refine_block_cg(
+    factors: &GramFactors,
+    rhs: &Mat,
+    mut x: Mat,
+    cg_opts: &CgOptions,
+) -> anyhow::Result<Mat> {
+    let exact = GramOperator::new_exact(factors);
+    let tiered = GramOperator::new(factors);
+    let mut ax = Mat::zeros(rhs.rows(), rhs.cols());
+    exact.apply_block(&x, &mut ax);
+    let mut rel = block_rel_residual(rhs, &ax);
+    let mut rounds = 0;
+    while rel > REFINE_RTOL && rounds < MAX_REFINE_ROUNDS {
+        let r = rhs - &ax;
+        let corr = block_cg_solve(&tiered, &r, cg_opts);
+        anyhow::ensure!(
+            corr.all_converged(),
+            "refinement block CG did not converge on the residual system"
+        );
+        x.axpy(1.0, &corr.x);
+        rounds += 1;
+        exact.apply_block(&x, &mut ax);
+        let next = block_rel_residual(rhs, &ax);
+        if next <= REFINE_RTOL || next < rel {
+            rel = next;
+            continue;
+        }
+        // Stalled at the f64 floor: undo the non-improving correction and
+        // serve the best iterate.
+        x.axpy(-1.0, &corr.x);
+        anyhow::ensure!(
+            next.is_finite() && next <= rel * 4.0,
+            "block iterative refinement diverged: residual grew from {rel:.3e} to {next:.3e}"
+        );
+        break;
+    }
+    Ok(x)
+}
+
+/// Worst per-column relative ℓ₂ residual `‖b_j − (Ax)_j‖ / ‖b_j‖` across the
+/// block — the same per-system measure [`refine_with`] drives to
+/// [`REFINE_RTOL`].
+fn block_rel_residual(rhs: &Mat, ax: &Mat) -> f64 {
+    (0..rhs.cols())
+        .map(|j| {
+            let (mut rr, mut bb) = (0.0_f64, 0.0_f64);
+            for (p, q) in rhs.col(j).iter().zip(ax.col(j)) {
+                rr += (p - q) * (p - q);
+                bb += p * p;
+            }
+            rr.sqrt() / bb.sqrt().max(f64::MIN_POSITIVE)
+        })
+        .fold(0.0, f64::max)
+}
 
 /// How to solve the gradient Gram system.
 #[derive(Clone, Debug)]
@@ -312,7 +400,9 @@ impl GradientGp {
             }
             FitMethod::Exact => {
                 let solver = WoodburySolver::new(&factors)?;
-                let z = solver.solve(&factors, &gt);
+                // byte-inert `solve` when untiered; refinement-certified
+                // under `gram.precision = mixed`
+                let z = solver.solve_refined(&factors, &gt)?;
                 (z, Some(solver), FitReport::Exact)
             }
             FitMethod::Iterative(cg_opts) => {
@@ -323,8 +413,17 @@ impl GradientGp {
                 }
                 let res = cg_solve(&op, gt.as_slice(), None, &cg_opts);
                 let bnorm = gt.fro_norm().max(f64::MIN_POSITIVE);
-                let rel = res.resid_history.last().copied().unwrap_or(f64::NAN) / bnorm;
-                let z = Mat::from_vec(d, n, res.x);
+                let mut rel = res.resid_history.last().copied().unwrap_or(f64::NAN) / bnorm;
+                let x = if factors.tier_active() {
+                    // CG converged against the f32-tier operator; correct the
+                    // true residual against the exact one
+                    let refined = refine_cg(&factors, gt.as_slice(), res.x, &cg_opts)?;
+                    rel = refined.rel_residual;
+                    refined.x
+                } else {
+                    res.x
+                };
+                let z = Mat::from_vec(d, n, x);
                 (
                     z,
                     None,
@@ -372,6 +471,22 @@ impl GradientGp {
     /// The Gram factors.
     pub fn factors(&self) -> &GramFactors {
         &self.factors
+    }
+
+    /// Install the f32 storage tier on this engine's factors regardless of
+    /// the process-global `gram.precision` knob ([`GramFactors::enable_tier`]).
+    /// The authoritative f64 panels are untouched — the already-fitted
+    /// weights stay valid — but every later panel matvec dispatches through
+    /// the mixed kernels and every solve is refinement-certified. Tests and
+    /// tools use this instead of mutating the process knob (which other
+    /// threads share).
+    pub fn enable_precision_tier(&mut self) {
+        self.factors.enable_tier();
+    }
+
+    /// Whether this engine's factors carry the f32 storage tier.
+    pub fn precision_tier_active(&self) -> bool {
+        self.factors.tier_active()
     }
 
     /// Observation locations.
@@ -429,22 +544,23 @@ impl GradientGp {
     /// the exact factorization when available and falling back to CG.
     pub fn solve_rhs(&self, rhs: &Mat) -> anyhow::Result<Mat> {
         if let Some(solver) = &self.solver {
-            return Ok(solver.solve(&self.factors, rhs));
+            return solver.solve_refined(&self.factors, rhs);
         }
         let op = GramOperator::new(&self.factors);
-        let res = cg_solve(
-            &op,
-            rhs.as_slice(),
-            None,
-            &CgOptions {
-                rtol: EXTRA_RHS_RTOL,
-                precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
-                track_history: false,
-                ..Default::default()
-            },
-        );
+        let opts = CgOptions {
+            rtol: EXTRA_RHS_RTOL,
+            precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
+            track_history: false,
+            ..Default::default()
+        };
+        let res = cg_solve(&op, rhs.as_slice(), None, &opts);
         anyhow::ensure!(res.converged, "CG did not converge on extra RHS");
-        Ok(Mat::from_vec(rhs.rows(), rhs.cols(), res.x))
+        let x = if self.factors.tier_active() {
+            refine_cg(&self.factors, rhs.as_slice(), res.x, &opts)?.x
+        } else {
+            res.x
+        };
+        Ok(Mat::from_vec(rhs.rows(), rhs.cols(), x))
     }
 
     /// Solve `(∇K∇′)vec(W_i) = rhs_i` for `K` extra right-hand sides at
@@ -468,22 +584,19 @@ impl GradientGp {
             let mut out = Mat::zeros(d * n, rhs.cols());
             for j in 0..rhs.cols() {
                 let col = Mat::from_vec(d, n, rhs.col(j).to_vec());
-                let sol = solver.solve(&self.factors, &col);
+                let sol = solver.solve_refined(&self.factors, &col)?;
                 out.col_mut(j).copy_from_slice(sol.as_slice());
             }
             return Ok(out);
         }
         let op = GramOperator::new(&self.factors);
-        let res = block_cg_solve(
-            &op,
-            rhs,
-            &CgOptions {
-                rtol: EXTRA_RHS_RTOL,
-                precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
-                track_history: false,
-                ..Default::default()
-            },
-        );
+        let opts = CgOptions {
+            rtol: EXTRA_RHS_RTOL,
+            precond: Some(JacobiPrecond::new(&self.factors.gram_diag())),
+            track_history: false,
+            ..Default::default()
+        };
+        let res = block_cg_solve(&op, rhs, &opts);
         anyhow::ensure!(
             res.all_converged(),
             "block CG did not converge on {} extra RHS (iters {}, fallback cols {})",
@@ -491,6 +604,9 @@ impl GradientGp {
             res.iters,
             res.fallback_cols
         );
+        if self.factors.tier_active() {
+            return refine_block_cg(&self.factors, rhs, res.x, &opts);
+        }
         Ok(res.x)
     }
 }

@@ -68,8 +68,10 @@ use crate::gram::{
     ShardedGramFactors, WoodburySolver,
 };
 use crate::kernels::{KernelClass, ScalarKernel};
-use crate::linalg::{bordered_inverse_append, bordered_inverse_drop_first, Lu, Mat};
-use crate::solvers::{cg_solve, CgResult, JacobiPrecond};
+use crate::linalg::{bordered_inverse_append, bordered_inverse_drop_first, quantize_f32, Lu, Mat};
+use crate::solvers::{
+    cg_solve, refine_with, CgResult, JacobiPrecond, MAX_REFINE_ROUNDS, REFINE_RTOL,
+};
 
 use super::{Compaction, FitMethod, FitOptions, FitReport, GradientGp, GradientModel, GradientTail};
 
@@ -406,6 +408,22 @@ impl OnlineGradientGp {
         self.gp.tail_len()
     }
 
+    /// Install the f32 storage tier on this engine's factors regardless of
+    /// the process-global `gram.precision` knob
+    /// ([`crate::gram::GramFactors::enable_tier`]). Call **before**
+    /// [`OnlineGradientGp::set_shards`] / `set_remote_shards` so the shard
+    /// mirrors are built tiered — the shard engines snapshot the factors'
+    /// tier state at construction. Tests and tools use this instead of
+    /// mutating the process knob (which other threads share).
+    pub fn enable_precision_tier(&mut self) {
+        self.gp.factors.enable_tier();
+    }
+
+    /// Whether this engine's factors carry the f32 storage tier.
+    pub fn precision_tier_active(&self) -> bool {
+        self.gp.factors.tier_active()
+    }
+
     /// Shard the Gram operator across `shards` persistent in-process
     /// workers (`gram.shards` config knob; `<= 1` = the single-shard path,
     /// no worker threads). The shard boundaries follow every subsequent
@@ -507,14 +525,36 @@ impl OnlineGradientGp {
     /// Extend `at_hot` with the tail's field at a newly appended point —
     /// must run for **every** append, in any mode, so the cached field stays
     /// in lockstep with the hot columns. Fresh `O(T·D)` kernel work; no-op
-    /// without a tail.
-    fn tail_extend_at(&mut self, x_new: &[f64]) {
-        if self.gp.tail.is_some() {
-            let field = {
-                let t = self.gp.tail.as_ref().unwrap();
+    /// without a tail. Errors (instead of panicking) on a tail whose cached
+    /// columns are out of lockstep with the hot window, so callers return
+    /// through their rollback path and keep serving the previous posterior.
+    fn tail_extend_at(&mut self, x_new: &[f64]) -> anyhow::Result<()> {
+        let mut field = match self.gp.tail.as_ref() {
+            None => return Ok(()),
+            Some(t) => {
+                anyhow::ensure!(
+                    t.at_hot.cols() == self.gp.n(),
+                    "tail at_hot has {} cached columns for a hot window of {} — tail state \
+                     inconsistent",
+                    t.at_hot.cols(),
+                    self.gp.n()
+                );
                 self.gp.tail_field(t, x_new)
-            };
-            self.gp.tail.as_mut().unwrap().at_hot.push_col(&field);
+            }
+        };
+        if self.gp.factors.tier_active() {
+            // mixed tier: `at_hot` is f32-stored — quantize at the write site
+            // so WAL replay and failover reproduce identical bits
+            for v in &mut field {
+                *v = quantize_f32(*v);
+            }
+        }
+        match self.gp.tail.as_mut() {
+            Some(t) => {
+                t.at_hot.push_col(&field);
+                Ok(())
+            }
+            None => anyhow::bail!("tail vanished while extending at_hot — tail state inconsistent"),
         }
     }
 
@@ -585,6 +625,14 @@ impl OnlineGradientGp {
                         col[i] += kp * lam_w[i] + kpp * (ev.lam_xt[i] - lxj[i]) * s;
                     }
                 }
+            }
+        }
+        if self.gp.factors.tier_active() {
+            // mixed tier: `at_hot` is f32-stored — quantize at the write
+            // site (idempotent, so re-quantizing carried-over columns after
+            // the fold increments keeps WAL replay bit-identical)
+            for v in at_hot.as_mut_slice() {
+                *v = quantize_f32(*v);
             }
         }
         match self.gp.tail.as_mut() {
@@ -688,7 +736,10 @@ impl OnlineGradientGp {
             return self.cold_refit(&x, &g);
         }
         let snapshot = self.snapshot();
-        self.tail_extend_at(x_new);
+        if let Err(e) = self.tail_extend_at(x_new) {
+            self.restore(snapshot);
+            return Err(anyhow::anyhow!("{e}; update rolled back"));
+        }
         self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
@@ -729,7 +780,10 @@ impl OnlineGradientGp {
         let snapshot = self.snapshot();
         // append first, then trim — append-before-trim keeps even a window
         // of 1 exact (the new point is what survives).
-        self.tail_extend_at(x_new);
+        if let Err(e) = self.tail_extend_at(x_new) {
+            self.restore(snapshot);
+            return Err(anyhow::anyhow!("{e}; update rolled back"));
+        }
         self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
@@ -814,7 +868,9 @@ impl OnlineGradientGp {
         let d = self.gp.d();
         anyhow::ensure!(x_new.len() == d, "x_new dimension mismatch");
         anyhow::ensure!(g_new.len() == d, "g_new dimension mismatch");
-        self.tail_extend_at(x_new);
+        // nothing is mutated before this check, so an inconsistent tail
+        // surfaces to the caller (who owns the barrier snapshot) cleanly
+        self.tail_extend_at(x_new)?;
         self.panels_append(x_new);
         self.gp.x.push_col(x_new);
         self.gp.g.push_col(g_new);
@@ -928,6 +984,14 @@ impl OnlineGradientGp {
                 let mut at = Mat::zeros(x.rows(), 0);
                 for j in 0..x.cols() {
                     at.push_col(&self.gp.tail_field(&t, x.col(j)));
+                }
+                if self.gp.factors.tier_active() {
+                    // quantize before `g_fit` is residualized below, so the
+                    // refit sees the same f32-stored field the live path
+                    // maintains incrementally
+                    for v in at.as_mut_slice() {
+                        *v = quantize_f32(*v);
+                    }
                 }
                 t.at_hot = at;
                 Some(t)
@@ -1044,7 +1108,8 @@ impl OnlineGradientGp {
                 if delta == Delta::Rhs {
                     if let Some(solver) = &self.gp.solver {
                         // locations unchanged: pure back-substitution
-                        self.gp.z = solver.solve(&self.gp.factors, &gt);
+                        // (refinement-certified under the mixed tier)
+                        self.gp.z = solver.solve_refined(&self.gp.factors, &gt)?;
                         self.gp.report = FitReport::Exact;
                         return Ok(());
                     }
@@ -1080,7 +1145,7 @@ impl OnlineGradientGp {
                     }
                 };
                 let solver = WoodburySolver::from_panels(&self.gp.factors, kinv)?;
-                self.gp.z = solver.solve(&self.gp.factors, &gt);
+                self.gp.z = solver.solve_refined(&self.gp.factors, &gt)?;
                 self.gp.solver = Some(solver);
                 self.kinv_age = age;
                 self.gp.report = FitReport::Exact;
@@ -1115,8 +1180,35 @@ impl OnlineGradientGp {
                     res.iters
                 );
                 let bnorm = gt.fro_norm().max(f64::MIN_POSITIVE);
-                let rel = res.resid_history.last().copied().unwrap_or(f64::NAN) / bnorm;
-                self.gp.z = Mat::from_vec(d, n, res.x);
+                let mut rel = res.resid_history.last().copied().unwrap_or(f64::NAN) / bnorm;
+                let x = if self.gp.factors.tier_active() {
+                    // the Krylov iterations above ran on the f32-tier
+                    // operator (sharded or in-process — same kernels);
+                    // correct the true residual against the exact one
+                    let exact = GramOperator::new_exact(&self.gp.factors);
+                    let zero = Mat::zeros(d, n);
+                    let refined = refine_with(
+                        &exact,
+                        gt.as_slice(),
+                        res.x,
+                        REFINE_RTOL,
+                        MAX_REFINE_ROUNDS,
+                        |r| {
+                            let rm = Mat::from_vec(d, n, r.to_vec());
+                            let rr = self.cg_resolve(&rm, &zero, &cg_opts)?;
+                            anyhow::ensure!(
+                                rr.converged,
+                                "refinement CG re-solve did not converge on the residual system"
+                            );
+                            Ok(rr.x)
+                        },
+                    )?;
+                    rel = refined.rel_residual;
+                    refined.x
+                } else {
+                    res.x
+                };
+                self.gp.z = Mat::from_vec(d, n, x);
                 self.gp.solver = None;
                 self.gp.report = FitReport::Iterative {
                     iters: res.iters,

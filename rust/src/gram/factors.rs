@@ -17,9 +17,41 @@
 //! construction keeps every downstream formula identical for both classes.
 
 use crate::kernels::{KernelClass, ScalarKernel};
-use crate::linalg::{slice_dot, Mat};
+use crate::linalg::gemm::{self, Precision};
+use crate::linalg::{slice_dot, Mat, MatF32};
 
 use super::Metric;
+
+/// The f32 storage tier (`gram.precision = mixed`): rounded shadows of the
+/// four large panels the matvec/apply/solve kernels actually stream. The
+/// authoritative f64 panels above stay exact — every factor-level
+/// invariant (append == cold rebuild, border bit-identity, WAL replay)
+/// holds verbatim in mixed mode — and the tier is **re-derived from them**
+/// after every mutation, entry-by-entry nearest-f32 rounding. Because
+/// `widen ∘ round` is a pure function of the f64 bits, a tier derived
+/// here, one rebuilt by a remote worker from an f32 wire frame, and one
+/// rebuilt after failover are bit-identical (see [`crate::linalg::lowp`]).
+#[derive(Clone, Debug)]
+pub struct TierF32 {
+    /// Rounded `X̃` (`D×N`).
+    pub xt: MatF32,
+    /// Rounded `ΛX̃` (`D×N`).
+    pub lam_xt: MatF32,
+    /// Rounded `(ΛX̃)ᵀ` (`N×D`).
+    pub lam_xt_t: MatF32,
+    /// Rounded cross-Gram `H` (`N×N`).
+    pub h: MatF32,
+}
+
+impl TierF32 {
+    /// Tier bytes resident (exactly half the f64 bytes of the same panels).
+    pub fn memory_bytes(&self) -> usize {
+        self.xt.memory_bytes()
+            + self.lam_xt.memory_bytes()
+            + self.lam_xt_t.memory_bytes()
+            + self.h.memory_bytes()
+    }
+}
 
 /// Compact representation of `∇K∇′`: everything inference needs, in
 /// `O(N² + ND)` memory.
@@ -55,6 +87,14 @@ pub struct GramFactors {
     /// Dot-product center `c` (`None` = zero center / stationary kernel) —
     /// retained so appended columns are centered consistently.
     pub center: Option<Vec<f64>>,
+    /// The f32 storage tier (`None` in the default `f64` precision — in
+    /// which case nothing about this struct, byte for byte, differs from
+    /// the pre-tier engine). Built by the constructor when
+    /// `gram.precision = mixed` (or explicitly via
+    /// [`GramFactors::enable_tier`]) and re-derived after every mutation.
+    /// Dispatch is data-driven: the kernels check `tier.is_some()`, never
+    /// the knob.
+    pub tier: Option<TierF32>,
 }
 
 /// Panel slices of the observation evicted by [`GramFactors::drop_first`]:
@@ -186,7 +226,56 @@ impl GramFactors {
             KernelClass::DotProduct => center.map(|c| c.to_vec()),
             KernelClass::Stationary => None,
         };
-        GramFactors { class, xt, lam_xt, r, kp_eff, kpp_eff, lam_xt_t, h, metric, noise, center }
+        let mut f = GramFactors {
+            class,
+            xt,
+            lam_xt,
+            r,
+            kp_eff,
+            kpp_eff,
+            lam_xt_t,
+            h,
+            metric,
+            noise,
+            center,
+            tier: None,
+        };
+        if gemm::precision() == Precision::Mixed {
+            f.enable_tier();
+        }
+        f
+    }
+
+    /// Derive the f32 storage tier from the authoritative f64 panels.
+    fn derive_tier(&self) -> TierF32 {
+        TierF32 {
+            xt: MatF32::round_from(&self.xt),
+            lam_xt: MatF32::round_from(&self.lam_xt),
+            lam_xt_t: MatF32::round_from(&self.lam_xt_t),
+            h: MatF32::round_from(&self.h),
+        }
+    }
+
+    /// Install (or re-derive) the f32 storage tier, regardless of the
+    /// `gram.precision` knob. The constructor calls this when the knob says
+    /// `mixed`; tests and tools call it to exercise the tier explicitly.
+    pub fn enable_tier(&mut self) {
+        self.tier = Some(self.derive_tier());
+    }
+
+    /// Re-derive the tier if one is installed — called after every panel
+    /// mutation so the shadow never goes stale. Mutation behaviour is
+    /// knob-independent on purpose: once built (or not), a factor set keeps
+    /// its tier state for life.
+    fn refresh_tier(&mut self) {
+        if self.tier.is_some() {
+            self.tier = Some(self.derive_tier());
+        }
+    }
+
+    /// Whether the f32 storage tier is active for this factor set.
+    pub fn tier_active(&self) -> bool {
+        self.tier.is_some()
     }
 
     /// Append one observation at `x_new` in place — the online conditioning
@@ -301,6 +390,7 @@ impl GramFactors {
         self.xt.push_col(&xt_new);
         self.lam_xt.push_col(&lam_new);
         self.lam_xt_t = self.lam_xt.t();
+        self.refresh_tier();
         (kp_col, kpp_col)
     }
 
@@ -337,6 +427,7 @@ impl GramFactors {
         self.xt.remove_first_col();
         self.lam_xt.remove_first_col();
         self.lam_xt_t = self.lam_xt.t();
+        self.refresh_tier();
         ev
     }
 
@@ -357,7 +448,10 @@ impl GramFactors {
     /// online state keeps all three alive), and the dot-product center.
     /// `gp.window` sizing and the sharded engine's per-shard memory bounds
     /// read this, so it must match the actual buffers
-    /// (`memory_f64_counts_every_retained_panel` pins it).
+    /// (`memory_f64_counts_every_retained_panel` pins it). The f32 tier,
+    /// when active, is *additional* resident memory accounted separately in
+    /// bytes ([`TierF32::memory_bytes`]) — mixed mode trades a 1.5× resident
+    /// footprint on the coordinator for 0.5× streamed/transported bytes.
     pub fn memory_f64(&self) -> usize {
         4 * self.n() * self.n()
             + 3 * self.n() * self.d()
@@ -779,6 +873,45 @@ mod tests {
         assert_factors_match(&f, &cold, 1e-12, "sliding window");
         // and the dense Gram built from the evolved factors is consistent
         assert!((&f.to_dense() - &cold.to_dense()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn tier_tracks_every_mutation_and_matches_fresh_derivation() {
+        let d = 5;
+        let x = sample_x(d, 4, 91);
+        let mut f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.7), None);
+        f.enable_tier();
+        let check = |f: &GramFactors, what: &str| {
+            let t = f.tier.as_ref().expect("tier must stay installed");
+            assert!(t.xt == crate::linalg::MatF32::round_from(&f.xt), "{what}: xt");
+            assert!(t.lam_xt == crate::linalg::MatF32::round_from(&f.lam_xt), "{what}: lam_xt");
+            assert!(
+                t.lam_xt_t == crate::linalg::MatF32::round_from(&f.lam_xt_t),
+                "{what}: lam_xt_t"
+            );
+            assert!(t.h == crate::linalg::MatF32::round_from(&f.h), "{what}: h");
+        };
+        check(&f, "fresh");
+        f.append(&SquaredExponential, &[0.3, -0.1, 0.2, 0.0, 0.4]);
+        check(&f, "after append");
+        f.drop_first();
+        check(&f, "after drop_first");
+        // tier bytes are exactly half the f64 bytes of the same four panels
+        let t = f.tier.as_ref().unwrap();
+        let panel_f64_bytes = 8 * (3 * f.xt.rows() * f.xt.cols() + f.h.rows() * f.h.cols());
+        assert_eq!(t.memory_bytes() * 2, panel_f64_bytes);
+    }
+
+    #[test]
+    fn tier_presence_follows_the_precision_knob_at_construction() {
+        // under the default leg no tier is built (byte-inert); under the
+        // GDKRON_PRECISION=mixed CI leg every constructor installs one.
+        let x = sample_x(4, 3, 92);
+        let f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.8), None);
+        match gemm::precision() {
+            Precision::F64 => assert!(!f.tier_active()),
+            Precision::Mixed => assert!(f.tier_active()),
+        }
     }
 
     #[test]

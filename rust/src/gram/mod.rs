@@ -51,7 +51,7 @@ pub mod sharded;
 pub mod wire;
 mod woodbury;
 
-pub use factors::{EvictedPanels, GramFactors};
+pub use factors::{EvictedPanels, GramFactors, TierF32};
 pub use matvec::{GramOperator, MatvecWorkspace};
 pub use metric::Metric;
 pub use poly2::{poly2_solve, Poly2Solve};

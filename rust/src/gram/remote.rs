@@ -58,6 +58,19 @@
 //! primary still holds its TCP connection (and once any coordinator has
 //! claimed, unclaimed state frames are rejected too, so the zombie cannot
 //! sneak back in by reconnecting without a claim).
+//!
+//! **Mixed-precision tier (v4)**: a coordinator running `gram.precision =
+//! mixed` broadcasts its factor panels as f32 ([`CoordFrame::SyncAtF32`] /
+//! [`CoordFrame::AppendF32`]) — half the sync and append-column bytes. The
+//! worker widens them back to f64 mirrors and re-derives the f32 storage
+//! tier by rounding; since `round ∘ widen` is the identity, the worker's
+//! tier holds the coordinator's tier bits exactly and the mixed apply
+//! kernels ([`super::sharded`]) produce bit-identical output blocks. The
+//! append cross-Gram border is *not* fanned out in mixed mode (the
+//! coordinator computes it serially on its exact panels), so the worker's
+//! widened mirrors never leak tier rounding into exact state. A mixed
+//! coordinator refuses pre-v4 workers — precision must be fleet-uniform,
+//! like the gemm mode.
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -180,10 +193,14 @@ struct Mirror {
     /// (v2 `SyncAt`; plain v1 `Sync` means 0), bumped on every delta —
     /// in lockstep with the coordinator, reported by `Pong`.
     revision: u64,
+    /// Whether the coordinator runs the mixed tier (it synced with a v4
+    /// `SyncAtF32`): the mirror re-derives the f32 storage tier by rounding
+    /// its widened panels, and the apply kernels dispatch on it.
+    tiered: bool,
 }
 
 impl Mirror {
-    fn from_sync(sf: SyncFrame, revision: u64) -> anyhow::Result<Self> {
+    fn from_sync(sf: SyncFrame, revision: u64, tiered: bool) -> anyhow::Result<Self> {
         let SyncFrame { shard_id, nshards, class, metric, xt, lam_xt, kp_eff, kpp_eff, h } = sf;
         let nshards = nshards as usize;
         let shard_id = shard_id as usize;
@@ -207,9 +224,10 @@ impl Mirror {
         if let super::Metric::Diag(ls) = &metric {
             anyhow::ensure!(ls.len() == d, "metric diagonal length {} != D={d}", ls.len());
         }
-        let shared = SharedPanels::from_parts(class, metric.clone(), xt.clone(), lam_xt.clone());
+        let shared =
+            SharedPanels::from_parts(class, metric.clone(), xt.clone(), lam_xt.clone(), tiered);
         let (lo, hi) = shard_plan(n, nshards)[shard_id];
-        let state = build_state_from_panels(&kp_eff, &kpp_eff, &h, &lam_xt, lo, hi);
+        let state = build_state_from_panels(&kp_eff, &kpp_eff, &h, &lam_xt, lo, hi, tiered);
         Ok(Mirror {
             shard_id,
             nshards,
@@ -225,6 +243,7 @@ impl Mirror {
             lo,
             hi,
             revision,
+            tiered,
         })
     }
 
@@ -240,9 +259,17 @@ impl Mirror {
             self.metric.clone(),
             self.xt.clone(),
             self.lam_xt.clone(),
+            self.tiered,
         );
-        self.state =
-            build_state_from_panels(&self.kp_eff, &self.kpp_eff, &self.h, &self.lam_xt, lo, hi);
+        self.state = build_state_from_panels(
+            &self.kp_eff,
+            &self.kpp_eff,
+            &self.h,
+            &self.lam_xt,
+            lo,
+            hi,
+            self.tiered,
+        );
     }
 
     /// Grow the mirror by the shipped borders — pure copies, zero kernel
@@ -445,18 +472,40 @@ fn serve_conn(
                     mirror.as_ref().map_or((0, false), |m| (m.revision, true));
                 WorkerFrame::Pong { nonce, epoch, revision, synced }.write_to(&mut stream)?;
             }
-            CoordFrame::Sync(sf) => match Mirror::from_sync(*sf, 0) {
+            CoordFrame::Sync(sf) => match Mirror::from_sync(*sf, 0, false) {
                 Ok(m) => mirror = Some(m),
                 Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
             },
-            CoordFrame::SyncAt { revision, sync } => match Mirror::from_sync(*sync, revision) {
-                Ok(m) => mirror = Some(m),
-                Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
-            },
+            CoordFrame::SyncAt { revision, sync } => {
+                match Mirror::from_sync(*sync, revision, false) {
+                    Ok(m) => mirror = Some(m),
+                    Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
+                }
+            }
+            CoordFrame::SyncAtF32 { revision, sync } => {
+                match Mirror::from_sync(*sync, revision, true) {
+                    Ok(m) => mirror = Some(m),
+                    Err(e) => return Err(fail(&mut stream, format!("bad sync frame: {e}"))),
+                }
+            }
             CoordFrame::Append(af) => {
                 let Some(m) = mirror.as_mut() else {
                     return Err(fail(&mut stream, "append before sync".into()));
                 };
+                if m.tiered {
+                    return Err(fail(&mut stream, "f64 append to a mixed-tier mirror".into()));
+                }
+                if let Err(e) = m.append(*af) {
+                    return Err(fail(&mut stream, format!("bad append delta: {e}")));
+                }
+            }
+            CoordFrame::AppendF32(af) => {
+                let Some(m) = mirror.as_mut() else {
+                    return Err(fail(&mut stream, "append before sync".into()));
+                };
+                if !m.tiered {
+                    return Err(fail(&mut stream, "f32 append to an untiered mirror".into()));
+                }
                 if let Err(e) = m.append(*af) {
                     return Err(fail(&mut stream, format!("bad append delta: {e}")));
                 }
@@ -794,6 +843,19 @@ impl ShardEndpoint for RemoteEndpoint {
             kpp_eff: f.kpp_eff.clone(),
             h: f.h.clone(),
         });
+        if f.tier_active() {
+            // mixed tier: half-width factor panels, v4 only — precision
+            // must be fleet-uniform, so a pre-v4 worker is a hard error
+            // (upgrade workers before flipping gram.precision)
+            anyhow::ensure!(
+                self.negotiated >= 4,
+                "{} speaks wire v{}, which has no mixed-precision frames \
+                 (upgrade it before enabling gram.precision = mixed)",
+                self.describe(),
+                self.negotiated
+            );
+            return self.send(&CoordFrame::SyncAtF32 { revision, sync });
+        }
         if self.negotiated >= 2 {
             self.send(&CoordFrame::SyncAt { revision, sync })
         } else {
@@ -807,20 +869,31 @@ impl ShardEndpoint for RemoteEndpoint {
 
     fn append(
         &mut self,
-        _f: &GramFactors,
+        f: &GramFactors,
         _shared: &Arc<SharedPanels>,
         delta: &AppendDelta,
         _nshards: usize,
         _lo: usize,
         _hi: usize,
     ) -> anyhow::Result<()> {
-        self.send(&CoordFrame::Append(Box::new(AppendFrame {
+        let af = Box::new(AppendFrame {
             xt_new: delta.xt_new.clone(),
             lam_new: delta.lam_new.clone(),
             h_col: delta.h_col.clone(),
             kp_col: delta.kp_col.clone(),
             kpp_col: delta.kpp_col.clone(),
-        })))
+        });
+        if f.tier_active() {
+            anyhow::ensure!(
+                self.negotiated >= 4,
+                "{} speaks wire v{}, which has no mixed-precision frames \
+                 (upgrade it before enabling gram.precision = mixed)",
+                self.describe(),
+                self.negotiated
+            );
+            return self.send(&CoordFrame::AppendF32(af));
+        }
+        self.send(&CoordFrame::Append(af))
     }
 
     fn drop_first(

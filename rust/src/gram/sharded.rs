@@ -36,7 +36,18 @@
 //!   unsharded still holds bit-for-bit within fast mode (and within exact
 //!   mode, as always), just not *across* the two modes. Every node of a
 //!   fleet must run the same mode (remote workers resolve `GDKRON_GEMM`
-//!   in their own process).
+//!   in their own process). The mixed-precision tier (`gram.precision =
+//!   mixed`, [`crate::linalg::gemm::Precision`]) rides the same argument:
+//!   when the factors carry an f32 tier, the per-shard kernels run the
+//!   identical blocked products on the f32 panels (widened at pack time,
+//!   f64 accumulation, same k-blocking) — so sharded == single-shard ==
+//!   remote holds bit-for-bit *within* mixed mode too, and the tier bits
+//!   themselves are reproduced exactly on workers because rounding a
+//!   widened f32 value returns the same f32 (`round ∘ widen = id`). The
+//!   append cross-Gram border is the one exception: in mixed mode it is
+//!   computed serially on the coordinator (see
+//!   [`ShardedGramFactors::append`]) so the authoritative f64 `H` panel
+//!   never absorbs tier rounding.
 //!
 //! Online deltas follow the conditioning engine (PR 2): `append` computes
 //! the new cross-Gram border *in parallel* — each shard contributes the
@@ -82,7 +93,7 @@ use std::time::Duration;
 
 use crate::kernels::{KernelClass, ScalarKernel};
 use crate::linalg::gemm::{self, GemmMode, View};
-use crate::linalg::{matmul_acc_col_slice, slice_dot, Mat};
+use crate::linalg::{matmul_acc_col_slice, slice_dot, Mat, MatF32};
 use crate::solvers::LinearOp;
 
 use super::factors::{h_border_corner, h_border_range};
@@ -157,8 +168,20 @@ pub(crate) struct SharedPanels {
     pub(crate) xt: Mat,
     /// `ΛX̃` (`D×N`): the dot-product correction reads all columns.
     pub(crate) lam_xt: Mat,
+    /// f32 shadow of `X̃`/`ΛX̃` — present iff the factors carry the mixed
+    /// storage tier; the apply kernels dispatch on it. Rounded from the
+    /// same f64 bits on coordinator and worker alike (`widen ∘ round` is
+    /// the identity on wire-shipped f32 panels), so both sides stream
+    /// identical tier bits.
+    pub(crate) tier: Option<PanelTier>,
     pub(crate) d: usize,
     pub(crate) n: usize,
+}
+
+/// The shard-shared slice of the f32 storage tier.
+pub(crate) struct PanelTier {
+    pub(crate) xt: MatF32,
+    pub(crate) lam_xt: MatF32,
 }
 
 impl SharedPanels {
@@ -168,20 +191,32 @@ impl SharedPanels {
             metric: f.metric.clone(),
             xt: f.xt.clone(),
             lam_xt: f.lam_xt.clone(),
+            tier: f
+                .tier
+                .as_ref()
+                .map(|t| PanelTier { xt: t.xt.clone(), lam_xt: t.lam_xt.clone() }),
             d: f.d(),
             n: f.n(),
         })
     }
 
-    /// Assemble from mirrored panels (the remote worker's side).
+    /// Assemble from mirrored panels (the remote worker's side). `tiered`
+    /// re-derives the f32 tier by rounding the mirrors — for tier panels
+    /// shipped as f32 wire frames the mirrors are widened-f32 values, so
+    /// the rounding recovers the coordinator's tier bits exactly.
     pub(crate) fn from_parts(
         class: KernelClass,
         metric: Metric,
         xt: Mat,
         lam_xt: Mat,
+        tiered: bool,
     ) -> Arc<Self> {
         let (d, n) = (xt.rows(), xt.cols());
-        Arc::new(SharedPanels { class, metric, xt, lam_xt, d, n })
+        let tier = tiered.then(|| PanelTier {
+            xt: MatF32::round_from(&xt),
+            lam_xt: MatF32::round_from(&lam_xt),
+        });
+        Arc::new(SharedPanels { class, metric, xt, lam_xt, tier, d, n })
     }
 }
 
@@ -205,6 +240,10 @@ pub(crate) struct ShardState {
     h_cols: Mat,
     /// Rows `lo..hi` of `(ΛX̃)ᵀ` (`B×D`) — the shard's block of `P = XᵀΛV`.
     lam_xt_t: Mat,
+    /// f32 shadow of the `(ΛX̃)ᵀ` rows — present iff the mixed tier is
+    /// active. Rounded entrywise from the f64 rows, hence identical bits on
+    /// coordinator and worker.
+    lam_xt_t32: Option<MatF32>,
 }
 
 impl ShardState {
@@ -230,6 +269,7 @@ pub(crate) fn build_state_from_panels(
     lam_xt: &Mat,
     lo: usize,
     hi: usize,
+    tiered: bool,
 ) -> ShardState {
     let n = kp_eff.rows();
     let d = lam_xt.rows();
@@ -242,11 +282,13 @@ pub(crate) fn build_state_from_panels(
         kpp_rows: Mat::from_fn(n, b, |bb, j| kpp_eff[(lo + j, bb)]),
         h_cols: h.block(0, lo, n, b),
         lam_xt_t: Mat::from_fn(b, d, |j, i| lam_xt[(i, lo + j)]),
+        lam_xt_t32: tiered
+            .then(|| MatF32::from_fn(b, d, |j, i| lam_xt[(i, lo + j)] as f32)),
     }
 }
 
 fn build_state(f: &GramFactors, lo: usize, hi: usize) -> ShardState {
-    build_state_from_panels(&f.kp_eff, &f.kpp_eff, &f.h, &f.lam_xt, lo, hi)
+    build_state_from_panels(&f.kp_eff, &f.kpp_eff, &f.h, &f.lam_xt, lo, hi, f.tier_active())
 }
 
 /// The `O(N + D)` payload an online append ships to remote workers: the
@@ -342,6 +384,9 @@ enum ApplyMsg {
 /// replicating the serial per-column arithmetic of
 /// [`GramFactors::matvec_into`] exactly.
 pub(crate) fn apply_dot(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
+    if sh.tier.is_some() {
+        return apply_dot_mixed(sh, st, xin);
+    }
     if gemm::mode() == GemmMode::Fast {
         return apply_dot_fast(sh, st, xin);
     }
@@ -429,10 +474,61 @@ fn apply_dot_fast(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
     block
 }
 
+/// Mixed-tier variant of [`apply_dot`]: the `(ΛX̃)` factors come from the
+/// f32 tier (widened at pack time), `K̂′`/`K̂″` and every reduction stay f64.
+/// This mirrors the serial mixed kernel in `matvec.rs` product-for-product;
+/// because the blocked core's per-element arithmetic depends only on
+/// k-dimension blocking, the column-sliced tier products match the serial
+/// mixed path bit-for-bit regardless of shard count.
+fn apply_dot_mixed(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> Mat {
+    let (d, n) = (sh.d, sh.n);
+    let b = st.hi - st.lo;
+    let k_count = xin.cols();
+    let mut block = Mat::zeros(b * d, k_count);
+    let mut t1 = vec![0.0; d * b];
+    let mut t2 = vec![0.0; d * b];
+    let mut pblk = vec![0.0; n * b];
+    let mut mblk = Mat::zeros(n, b);
+    let tier = sh.tier.as_ref().expect("mixed dot kernel requires the tier");
+    let lam_v = tier.lam_xt.view();
+    for k in 0..k_count {
+        let v = xin.col(k); // a vec'd D×N right-hand side, column-major
+        let vmat = View::col_major(v, d, n);
+        // term1 block: V · K̂′[:, lo..hi] (exact f64 panel)
+        gemm::gemm_view(vmat, View::of(&st.kp_cols), &mut t1, false);
+        // P[:, lo..hi] = Vᵀ · (ΛX̃)₃₂[:, lo..hi]
+        gemm::gemm_view(vmat.transposed(), lam_v.col_range(st.lo, st.hi), &mut pblk, false);
+        // M[:, lo..hi] = K̂″[:, lo..hi] ⊙ P[:, lo..hi]
+        for j in 0..b {
+            let kppc = st.kpp_cols.col(j);
+            let pc = &pblk[j * n..(j + 1) * n];
+            let mc = mblk.col_mut(j);
+            for bb in 0..n {
+                mc[bb] = kppc[bb] * pc[bb];
+            }
+        }
+        // term2 block: (ΛX̃)₃₂ · M[:, lo..hi]
+        gemm::gemm_view(lam_v, View::of(&mblk), &mut t2, false);
+        let ocol = block.col_mut(k);
+        for j in 0..b {
+            let t1c = &t1[j * d..(j + 1) * d];
+            let t2c = &t2[j * d..(j + 1) * d];
+            let o = &mut ocol[j * d..(j + 1) * d];
+            for i in 0..d {
+                o[i] = sh.metric.diag_entry(i) * t1c[i] + t2c[i];
+            }
+        }
+    }
+    block
+}
+
 /// Stationary phase 1: this shard's `B×N` block of `P = (ΛX)ᵀV` per RHS,
 /// plus the `B×K` slice of the `P` diagonal (the only cross-shard
 /// dependency of the stationary matvec).
 pub(crate) fn apply_phase_p(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
+    if st.lam_xt_t32.is_some() {
+        return apply_phase_p_mixed(sh, st, xin);
+    }
     if gemm::mode() == GemmMode::Fast {
         return apply_phase_p_fast(sh, st, xin);
     }
@@ -488,6 +584,35 @@ fn apply_phase_p_fast(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat
     (pblocks, diag)
 }
 
+/// Mixed-tier variant of [`apply_phase_p`]: the shard's `P` rows come from
+/// the f32 `(ΛX̃)ᵀ` rows (widened at pack time, f64 accumulation).
+/// Row-partitioning the left operand never changes per-element arithmetic
+/// in the blocked core, so the rows match the serial mixed `P` bit-for-bit.
+fn apply_phase_p_mixed(sh: &SharedPanels, st: &ShardState, xin: &Mat) -> (Vec<Mat>, Mat) {
+    let d = sh.d;
+    let b = st.hi - st.lo;
+    let n = sh.n;
+    let k_count = xin.cols();
+    let mut pblocks = Vec::with_capacity(k_count);
+    let mut diag = Mat::zeros(b, k_count);
+    let lam_t = st
+        .lam_xt_t32
+        .as_ref()
+        .expect("mixed stationary kernel requires the f32 P rows")
+        .view();
+    for k in 0..k_count {
+        let v = xin.col(k);
+        let mut p = Mat::zeros(b, n);
+        // P[lo..hi, :] = (ΛX̃)ᵀ₃₂[lo..hi, :] · V
+        gemm::gemm_view(lam_t, View::col_major(v, d, n), p.as_mut_slice(), false);
+        for j in 0..b {
+            diag[(j, k)] = p[(j, st.lo + j)];
+        }
+        pblocks.push(p);
+    }
+    (pblocks, diag)
+}
+
 /// Stationary phase 2: with the gathered full `P` diagonal (`N×K`), finish
 /// the shard's output rows — again replicating the serial per-column
 /// arithmetic (term1 accumulation, `W` sweep in increasing `b`, `M3`
@@ -499,6 +624,9 @@ pub(crate) fn apply_finish_stationary(
     pblocks: &[Mat],
     pdiag: &Mat,
 ) -> Mat {
+    if sh.tier.is_some() {
+        return apply_finish_stationary_mixed(sh, st, xin, pblocks, pdiag);
+    }
     if gemm::mode() == GemmMode::Fast {
         return apply_finish_stationary_fast(sh, st, xin, pblocks, pdiag);
     }
@@ -572,6 +700,57 @@ fn apply_finish_stationary_fast(
             m3c[a] += wsum;
         }
         // t1 += X̃ · M3[:, lo..hi]
+        gemm::gemm_view(xt_v, View::of(&m3), &mut t1, true);
+        let ocol = block.col_mut(k);
+        for j in 0..b {
+            let t1c = &t1[j * d..(j + 1) * d];
+            let o = &mut ocol[j * d..(j + 1) * d];
+            for i in 0..d {
+                o[i] = sh.metric.diag_entry(i) * t1c[i];
+            }
+        }
+    }
+    block
+}
+
+/// Mixed-tier variant of [`apply_finish_stationary`]: term1 runs on the
+/// exact f64 `K̂′` columns, the `W` sweep stays the byte-identical scalar
+/// loop (its `P` inputs already carry the tier rounding), and the `M3`
+/// product reads the f32 `X̃` tier panel. Product-for-product this is the
+/// serial mixed stationary kernel restricted to the shard's columns.
+fn apply_finish_stationary_mixed(
+    sh: &SharedPanels,
+    st: &ShardState,
+    xin: &Mat,
+    pblocks: &[Mat],
+    pdiag: &Mat,
+) -> Mat {
+    let (d, n) = (sh.d, sh.n);
+    let b = st.hi - st.lo;
+    let k_count = xin.cols();
+    let mut block = Mat::zeros(b * d, k_count);
+    let mut t1 = vec![0.0; d * b];
+    let mut m3 = Mat::zeros(n, b);
+    let xt_v = sh.tier.as_ref().expect("mixed stationary kernel requires the tier").xt.view();
+    for k in 0..k_count {
+        let v = xin.col(k);
+        let p = &pblocks[k];
+        // term1 block: V · K̂′[:, lo..hi] (exact f64 panel)
+        gemm::gemm_view(View::col_major(v, d, n), View::of(&st.kp_cols), &mut t1, false);
+        // W_ab = K̂″_ab (P_ab − P_bb); M3[:,a] = −W_{a,:}ᵀ + w_a e_a
+        for j in 0..b {
+            let a = st.lo + j;
+            let kpr = st.kpp_rows.col(j); // row a of K̂″, contiguous
+            let m3c = m3.col_mut(j);
+            let mut wsum = 0.0;
+            for bb in 0..n {
+                let w = kpr[bb] * (p[(j, bb)] - pdiag[(bb, k)]);
+                m3c[bb] = -w;
+                wsum += w;
+            }
+            m3c[a] += wsum;
+        }
+        // t1 += X̃₃₂ · M3[:, lo..hi]
         gemm::gemm_view(xt_v, View::of(&m3), &mut t1, true);
         let ocol = block.col_mut(k);
         for j in 0..b {
@@ -1226,7 +1405,15 @@ impl ShardedGramFactors {
         let n = f.n();
         let (xt_new, lam_new) = f.append_prelude(kernel, x_new);
         let mut h_col = vec![0.0; n + 1];
-        if let Err(e) = self.gather_hborder(&lam_new, &mut h_col[..n]) {
+        if f.tier_active() {
+            // Mixed tier: the cross-Gram border feeds the *authoritative*
+            // f64 `H`, which must stay exact — but remote workers only hold
+            // widened-f32 mirrors of `X̃` in mixed mode, so their dots would
+            // carry tier rounding into the exact panel. Compute the border
+            // serially on the coordinator instead (identical dot products to
+            // the serial append; the fan-out only saved `O(ND)` flops).
+            h_border_range(&f.xt, &lam_new, 0, n, &mut h_col[..n]);
+        } else if let Err(e) = self.gather_hborder(&lam_new, &mut h_col[..n]) {
             self.note_degraded(format!("h-border fan-out failed ({e})"));
             self.pool = None;
             h_border_range(&f.xt, &lam_new, 0, n, &mut h_col[..n]);
@@ -1709,5 +1896,31 @@ mod tests {
         let mut inline = Mat::zeros(24, 2);
         engine.apply_fallback(&xin, &mut inline);
         assert!((&pooled - &inline).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn mixed_tier_apply_is_shard_count_invariant_and_matches_serial_mixed() {
+        // within mixed mode the bit-identity pin must hold exactly like it
+        // does within exact and fast modes: serial == 1 shard == many shards
+        use crate::kernels::Poly2Kernel;
+        let mut rng = Rng::new(31);
+        for kernel in [&SquaredExponential as &dyn ScalarKernel, &Poly2Kernel] {
+            let x = Mat::from_fn(6, 7, |_, _| rng.gauss());
+            let mut f = GramFactors::new(kernel, &x, Metric::Iso(0.8), None);
+            f.enable_tier();
+            let xin = Mat::from_fn(42, 3, |_, _| rng.gauss());
+            let mut serial = Mat::zeros(42, 3);
+            let op = super::super::GramOperator::new(&f);
+            op.apply_block(&xin, &mut serial);
+            for shards in [1, 3, 5] {
+                let engine = ShardedGramFactors::new(&f, shards);
+                let mut pooled = Mat::zeros(42, 3);
+                engine.apply_block_into(&xin, &mut pooled).unwrap();
+                assert!(
+                    (&pooled - &serial).max_abs() == 0.0,
+                    "mixed apply must be bit-identical across shard counts (shards={shards})"
+                );
+            }
+        }
     }
 }

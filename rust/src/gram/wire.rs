@@ -56,6 +56,22 @@
 //!   primary still holds its TCP connection. See `docs/OPERATIONS.md` for
 //!   the failover runbook.
 //!
+//! **v4 (the mixed-precision tier)** adds the half-width panel frames:
+//! * [`CoordFrame::SyncAtF32`] / [`CoordFrame::AppendF32`] — the same
+//!   payloads as `SyncAt` / `Append`, but the *factor* panels (`X̃`, `ΛX̃`,
+//!   the cross-Gram `H`; the append's `xt_new`/`lam_new` columns) ship as
+//!   IEEE-754 f32 bit patterns — half the broadcast and border bytes. The
+//!   derivative panels (`K̂′`, `K̂″`) and the installed append borders stay
+//!   f64: they feed the exact solve path. Encoding rounds the coordinator's
+//!   f64 values to f32 (`v as f32`); decoding widens back to f64. Because
+//!   `round ∘ widen` is the identity on f32 values, the worker re-rounding
+//!   its widened mirrors reproduces the coordinator's storage-tier bits
+//!   exactly — the within-mixed-mode transport bit-identity pin. These
+//!   frames are only sent when `gram.precision = mixed`
+//!   ([`crate::linalg::gemm::Precision`]) and only on v4-negotiated
+//!   connections; a mixed coordinator refuses to drive pre-v4 workers
+//!   (precision, like the gemm mode, must be fleet-uniform).
+//!
 //! The same `Enc`/`Dec` codec (crate-private) backs the coordinator's
 //! on-disk snapshot + WAL records ([`crate::coordinator::wal`]): one
 //! framing discipline, one defensive decoder, for sockets and files alike.
@@ -71,8 +87,9 @@ pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"GDKW");
 
 /// Protocol version; bumped on any frame-layout change. v2 added the
 /// health/registry frames (`Ping`/`Pong`/`SyncAt`); v3 added the epoch
-/// fence (`Claim`/`ClaimAck`).
-pub const WIRE_VERSION: u16 = 3;
+/// fence (`Claim`/`ClaimAck`); v4 added the mixed-precision tier frames
+/// (`SyncAtF32`/`AppendF32`).
+pub const WIRE_VERSION: u16 = 4;
 
 /// Oldest coordinator version a worker still serves (the Hello handshake
 /// negotiates down to it): v1 peers simply never see the v2 frames.
@@ -96,6 +113,9 @@ const TAG_PING: u8 = 0x09;
 const TAG_SYNC_AT: u8 = 0x0A;
 // v3 coordinator tags (never sent below a v3-negotiated connection).
 const TAG_CLAIM: u8 = 0x0B;
+// v4 coordinator tags (never sent below a v4-negotiated connection).
+const TAG_SYNC_AT_F32: u8 = 0x0C;
+const TAG_APPEND_F32: u8 = 0x0D;
 // Worker → coordinator tags.
 const TAG_HELLO_ACK: u8 = 0x81;
 const TAG_HBORDER_SLICE: u8 = 0x82;
@@ -110,6 +130,7 @@ const TAG_CLAIM_ACK: u8 = 0x87;
 /// Full shard-state broadcast: the shared panels plus the square
 /// derivative panels the worker mirrors, and the worker's place in the
 /// deterministic plan ([`super::sharded::shard_plan`]).
+#[derive(Clone)]
 pub struct SyncFrame {
     pub shard_id: u32,
     pub nshards: u32,
@@ -159,6 +180,14 @@ pub enum CoordFrame {
     /// Answered by [`WorkerFrame::ClaimAck`] if the epoch is at or above
     /// the worker's fence, rejected with [`WorkerFrame::Err`] otherwise.
     Claim { epoch: u64 },
+    /// v4 mixed-tier `SyncAt`: identical payload semantics, but `xt`,
+    /// `lam_xt` and `h` travel as f32 bit patterns (rounded on encode,
+    /// widened on decode — the decoded struct always holds f64). `kp_eff`
+    /// and `kpp_eff` stay f64.
+    SyncAtF32 { revision: u64, sync: Box<SyncFrame> },
+    /// v4 mixed-tier `Append`: `xt_new`/`lam_new` travel as f32,
+    /// `h_col`/`kp_col`/`kpp_col` stay f64 (they extend exact panels).
+    AppendF32(Box<AppendFrame>),
 }
 
 /// Worker → coordinator messages.
@@ -227,6 +256,28 @@ impl Enc {
         }
     }
 
+    /// f32 bit pattern of the *rounded* value — the v4 tier frames' element
+    /// codec. Rounding happens here, on encode, so the wire never carries a
+    /// wider value than the storage tier holds.
+    fn f32(&mut self, v: f64) {
+        self.buf.extend_from_slice(&(v as f32).to_bits().to_le_bytes());
+    }
+
+    fn vec_f32(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    fn mat_f32(&mut self, m: &Mat) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &x in m.as_slice() {
+            self.f32(x);
+        }
+    }
+
     pub(crate) fn string(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
@@ -266,6 +317,19 @@ impl Enc {
         self.mat(&sf.kp_eff);
         self.mat(&sf.kpp_eff);
         self.mat(&sf.h);
+    }
+
+    /// v4 tier layout: factor panels in f32, derivative panels in f64.
+    fn sync_f32(&mut self, sf: &SyncFrame) {
+        self.u32(sf.shard_id);
+        self.u32(sf.nshards);
+        self.class(sf.class);
+        self.metric(&sf.metric);
+        self.mat_f32(&sf.xt);
+        self.mat_f32(&sf.lam_xt);
+        self.mat(&sf.kp_eff);
+        self.mat(&sf.kpp_eff);
+        self.mat_f32(&sf.h);
     }
 }
 
@@ -348,6 +412,43 @@ impl<'a> Dec<'a> {
         Ok(v)
     }
 
+    /// An f32 bit pattern widened to f64 — the v4 tier frames' element
+    /// codec. Widening is exact, so `round(widen(x)) == x` and the worker's
+    /// re-derived storage tier matches the coordinator's bit-for-bit.
+    fn f32(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from(f32::from_bits(self.u32()?)))
+    }
+
+    fn vec_f32(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn mat_f32(&mut self) -> anyhow::Result<Mat> {
+        let rows = self.len(0)?;
+        let cols = self.len(0)?;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
+        let bytes = count
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
+        anyhow::ensure!(
+            bytes <= self.remaining(),
+            "short frame: {rows}x{cols} f32 matrix declared, {} bytes left",
+            self.remaining()
+        );
+        let mut data = Vec::with_capacity(count);
+        for _ in 0..count {
+            data.push(self.f32()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
     pub(crate) fn mat(&mut self) -> anyhow::Result<Mat> {
         let rows = self.len(0)?;
         let cols = self.len(0)?;
@@ -410,6 +511,20 @@ impl<'a> Dec<'a> {
             kp_eff: self.mat()?,
             kpp_eff: self.mat()?,
             h: self.mat()?,
+        })
+    }
+
+    fn sync_f32(&mut self) -> anyhow::Result<SyncFrame> {
+        Ok(SyncFrame {
+            shard_id: self.u32()?,
+            nshards: self.u32()?,
+            class: self.class()?,
+            metric: self.metric()?,
+            xt: self.mat_f32()?,
+            lam_xt: self.mat_f32()?,
+            kp_eff: self.mat()?,
+            kpp_eff: self.mat()?,
+            h: self.mat_f32()?,
         })
     }
 
@@ -535,6 +650,19 @@ impl CoordFrame {
                 e.u64(*epoch);
                 TAG_CLAIM
             }
+            CoordFrame::SyncAtF32 { revision, sync } => {
+                e.u64(*revision);
+                e.sync_f32(sync);
+                TAG_SYNC_AT_F32
+            }
+            CoordFrame::AppendF32(af) => {
+                e.vec_f32(&af.xt_new);
+                e.vec_f32(&af.lam_new);
+                e.vec_f64(&af.h_col);
+                e.vec_f64(&af.kp_col);
+                e.vec_f64(&af.kpp_col);
+                TAG_APPEND_F32
+            }
         };
         write_frame(w, tag, &e.buf)
     }
@@ -562,6 +690,17 @@ impl CoordFrame {
             TAG_SHUTDOWN => CoordFrame::Shutdown,
             TAG_PING => CoordFrame::Ping { nonce: d.u64()? },
             TAG_CLAIM => CoordFrame::Claim { epoch: d.u64()? },
+            TAG_SYNC_AT_F32 => {
+                let revision = d.u64()?;
+                CoordFrame::SyncAtF32 { revision, sync: Box::new(d.sync_f32()?) }
+            }
+            TAG_APPEND_F32 => CoordFrame::AppendF32(Box::new(AppendFrame {
+                xt_new: d.vec_f32()?,
+                lam_new: d.vec_f32()?,
+                h_col: d.vec_f64()?,
+                kp_col: d.vec_f64()?,
+                kpp_col: d.vec_f64()?,
+            })),
             t => anyhow::bail!("unknown coordinator frame tag {t:#04x}"),
         };
         d.finish()?;
@@ -785,6 +924,85 @@ mod tests {
             }
             _ => panic!("wrong frame"),
         }
+    }
+
+    #[test]
+    fn sync_at_f32_rounds_factor_panels_and_keeps_derivative_panels_exact() {
+        // awkward values that do NOT survive f32 rounding, to prove which
+        // panels take the tier codec and which stay f64
+        let fine = 1.0 + f64::EPSILON * 37.0;
+        let sf = SyncFrame {
+            shard_id: 0,
+            nshards: 2,
+            class: KernelClass::Stationary,
+            metric: Metric::Iso(0.6),
+            xt: Mat::from_fn(3, 4, |i, j| fine * (1 + i + 3 * j) as f64),
+            lam_xt: Mat::from_fn(3, 4, |i, j| fine * (2 + i * j) as f64),
+            kp_eff: Mat::from_fn(4, 4, |i, j| fine * (1 + i + j) as f64),
+            kpp_eff: Mat::from_fn(4, 4, |i, j| fine * (3 + i) as f64 * (1 + j) as f64),
+            h: Mat::from_fn(4, 4, |i, j| fine * (5 + i + 2 * j) as f64),
+        };
+        let got = match roundtrip_coord(&CoordFrame::SyncAtF32 { revision: 7, sync: Box::new(sf.clone()) }) {
+            CoordFrame::SyncAtF32 { revision, sync } => {
+                assert_eq!(revision, 7);
+                sync
+            }
+            _ => panic!("wrong frame"),
+        };
+        for (dst, src) in [(&got.xt, &sf.xt), (&got.lam_xt, &sf.lam_xt), (&got.h, &sf.h)] {
+            for (a, b) in dst.as_slice().iter().zip(src.as_slice()) {
+                assert_eq!(a.to_bits(), f64::from(*b as f32).to_bits(), "factor panels round to f32");
+                assert_ne!(a.to_bits(), b.to_bits(), "the test values must actually be rounded");
+            }
+        }
+        for (dst, src) in [(&got.kp_eff, &sf.kp_eff), (&got.kpp_eff, &sf.kpp_eff)] {
+            for (a, b) in dst.as_slice().iter().zip(src.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "derivative panels stay exact f64");
+            }
+        }
+        // re-encoding the widened frame is a byte-for-byte fixpoint:
+        // round ∘ widen = id on f32 values
+        let mut first = Vec::new();
+        CoordFrame::SyncAtF32 { revision: 7, sync: got.clone() }.write_to(&mut first).unwrap();
+        let mut second = Vec::new();
+        CoordFrame::SyncAtF32 { revision: 7, sync: got }.write_to(&mut second).unwrap();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn append_f32_rounds_columns_and_halves_their_bytes() {
+        let fine = 0.1f64; // not representable in f32
+        let af = AppendFrame {
+            xt_new: vec![fine, 2.0 * fine],
+            lam_new: vec![3.0 * fine, 4.0 * fine],
+            h_col: vec![fine; 3],
+            kp_col: vec![5.0 * fine; 3],
+            kpp_col: vec![6.0 * fine; 3],
+        };
+        match roundtrip_coord(&CoordFrame::AppendF32(Box::new(af))) {
+            CoordFrame::AppendF32(got) => {
+                assert_eq!(got.xt_new, vec![f64::from(fine as f32), f64::from((2.0 * fine) as f32)]);
+                assert_eq!(got.h_col, vec![fine; 3], "installed borders stay exact f64");
+                assert_eq!(got.kp_col, vec![5.0 * fine; 3]);
+            }
+            _ => panic!("wrong frame"),
+        }
+        // byte accounting: the f32 columns cost 4 bytes/entry instead of 8
+        let enc = |frame: &CoordFrame| {
+            let mut b = Vec::new();
+            frame.write_to(&mut b).unwrap();
+            b.len()
+        };
+        let mk = || AppendFrame {
+            xt_new: vec![1.0; 10],
+            lam_new: vec![1.0; 10],
+            h_col: vec![1.0; 5],
+            kp_col: vec![1.0; 5],
+            kpp_col: vec![1.0; 5],
+        };
+        let full = enc(&CoordFrame::Append(Box::new(mk())));
+        let tier = enc(&CoordFrame::AppendF32(Box::new(mk())));
+        assert_eq!(full - tier, 4 * (10 + 10), "xt_new and lam_new halve");
     }
 
     #[test]

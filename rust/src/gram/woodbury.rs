@@ -27,8 +27,9 @@
 
 use crate::kernels::KernelClass;
 use crate::linalg::{Lu, Mat};
+use crate::solvers::{refine_with, MAX_REFINE_ROUNDS, REFINE_RTOL};
 
-use super::GramFactors;
+use super::{GramFactors, GramOperator};
 
 /// Reusable exact solver: factorizations are computed once per
 /// [`GramFactors`] and amortized over many right-hand sides (prediction
@@ -214,6 +215,37 @@ impl WoodburySolver {
             }
         }
     }
+
+    /// [`WoodburySolver::solve`] with the mixed-precision serving contract:
+    /// on untiered factors (`gram.precision = f64`, the default) this *is*
+    /// `solve` — byte-inert. On tiered factors the direct solve still runs
+    /// entirely on the exact f64 panels (the tier is a derived shadow; see
+    /// [`super::GramFactors`]), but the serving contract promises a
+    /// *verified* residual, so the answer is passed through
+    /// [`refine_with`] against the exact operator
+    /// ([`GramOperator::new_exact`]) — typically zero correction rounds,
+    /// one exact matvec to certify [`REFINE_RTOL`], a correction round only
+    /// when the window is ill-conditioned enough for the direct solve to
+    /// miss it.
+    pub fn solve_refined(&self, f: &GramFactors, rhs: &Mat) -> anyhow::Result<Mat> {
+        let z = self.solve(f, rhs);
+        if !f.tier_active() {
+            return Ok(z);
+        }
+        let op = GramOperator::new_exact(f);
+        let res = refine_with(
+            &op,
+            rhs.as_slice(),
+            z.into_vec(),
+            REFINE_RTOL,
+            MAX_REFINE_ROUNDS,
+            |r| {
+                let rm = Mat::from_vec(f.d(), self.n, r.to_vec());
+                Ok(self.solve(f, &rm).into_vec())
+            },
+        )?;
+        Ok(Mat::from_vec(f.d(), self.n, res.x))
+    }
 }
 
 /// One-shot convenience: factor + solve.
@@ -238,6 +270,18 @@ mod tests {
         (x, g)
     }
 
+    /// Verification matvec pinned to the exact-f64 kernels: the direct solve
+    /// under test is exact regardless of `gram.precision`, so its residual
+    /// must be checked against the exact operator (under the mixed CI leg
+    /// `f.matvec` would route through the f32 tier and inflate the residual
+    /// past these tolerances).
+    fn exact_matvec(f: &GramFactors, z: &Mat) -> Mat {
+        let mut out = Mat::zeros(f.d(), f.n());
+        let mut ws = crate::gram::MatvecWorkspace::new(f.d(), f.n());
+        f.matvec_exact(z, &mut out, &mut ws);
+        out
+    }
+
     fn check_solve(
         kern: &dyn ScalarKernel,
         metric: Metric,
@@ -250,8 +294,8 @@ mod tests {
         let (x, g) = sample(d, n, seed);
         let f = GramFactors::new(kern, &x, metric, center);
         let z = woodbury_solve(&f, &g).expect("woodbury solve");
-        // verify through the (independently tested) matvec
-        let back = f.matvec(&z);
+        // verify through the (independently tested) exact matvec
+        let back = exact_matvec(&f, &z);
         let err = (&back - &g).max_abs();
         assert!(err < tol, "{}: residual {err}", kern.name());
         // and against the dense oracle
@@ -340,8 +384,8 @@ mod tests {
         let solver = WoodburySolver::new(&f).unwrap();
         let z1 = solver.solve(&f, &g1);
         let z2 = solver.solve(&f, &g2);
-        assert!((&f.matvec(&z1) - &g1).max_abs() < 1e-9);
-        assert!((&f.matvec(&z2) - &g2).max_abs() < 1e-9);
+        assert!((&exact_matvec(&f, &z1) - &g1).max_abs() < 1e-9);
+        assert!((&exact_matvec(&f, &z2) - &g2).max_abs() < 1e-9);
     }
 
     #[test]
@@ -360,7 +404,7 @@ mod tests {
         let z = online.solve(&f, &g);
         let z_cold = WoodburySolver::new(&f).unwrap().solve(&f, &g);
         assert!((&z - &z_cold).max_abs() < 1e-9 * (1.0 + z_cold.max_abs()));
-        assert!((&f.matvec(&z) - &g).max_abs() < 1e-8);
+        assert!((&exact_matvec(&f, &z) - &g).max_abs() < 1e-8);
     }
 
     #[test]
@@ -377,5 +421,28 @@ mod tests {
     fn single_observation() {
         check_solve(&SquaredExponential, Metric::Iso(0.9), None, 5, 1, 13, 1e-9);
         check_solve(&Poly2Kernel, Metric::Iso(0.9), None, 5, 1, 14, 1e-9);
+    }
+
+    #[test]
+    fn solve_refined_is_solve_when_untiered_and_certified_when_tiered() {
+        let (x, g) = sample(6, 4, 30);
+        let mut f = GramFactors::new(&SquaredExponential, &x, Metric::Iso(0.5), None);
+        let solver = WoodburySolver::new(&f).unwrap();
+        if !f.tier_active() {
+            // default precision: byte-inert — solve_refined IS solve
+            let plain = solver.solve(&f, &g);
+            let refined = solver.solve_refined(&f, &g).unwrap();
+            assert_eq!(plain.as_slice(), refined.as_slice());
+        }
+        // tiered: the direct solve still runs on exact panels; refinement
+        // certifies (and if needed restores) the pinned true residual
+        f.enable_tier();
+        let refined = solver.solve_refined(&f, &g).unwrap();
+        let r = (&exact_matvec(&f, &refined) - &g).max_abs();
+        let scale = g.max_abs().max(1.0);
+        assert!(
+            r <= crate::solvers::REFINE_RTOL * scale * 1e3,
+            "refined residual {r} not near the pinned bound"
+        );
     }
 }

@@ -187,6 +187,11 @@ mod tests {
         let kern = MaternHalfInteger::new(3);
         let f = GramFactors::new(&kern, &x, Metric::Iso(0.4), None);
         let z = woodbury_solve(&f, &g).unwrap();
-        assert!((&f.matvec(&z) - &g).max_abs() < 1e-7 * (1.0 + g.max_abs()));
+        // verify through the tier-independent exact surface: under the
+        // GDKRON_PRECISION=mixed CI leg `f.matvec` carries ~ε_f32 rounding
+        let mut back = Mat::zeros(6, 3);
+        let mut ws = crate::gram::MatvecWorkspace::new(6, 3);
+        f.matvec_exact(&z, &mut back, &mut ws);
+        assert!((&back - &g).max_abs() < 1e-7 * (1.0 + g.max_abs()));
     }
 }

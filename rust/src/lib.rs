@@ -132,6 +132,16 @@
 //!   pin holds verbatim) vs `fast` (cache-blocked, `8·k·ε·(|A|·|B|)`
 //!   entrywise envelope, deterministic within the mode;
 //!   `tests/gemm_path.rs`), and why a fleet must run one mode uniformly.
+//! * **Precision tier** — `gram.precision = f64` (default; byte-inert) vs
+//!   `mixed` ([`linalg::gemm::Precision`]): an f32 storage/transport tier
+//!   for the large factor panels with all accumulation in f64
+//!   (widen-at-pack in the blocked gemm core), halved sync/append panel
+//!   bytes on the remote transport ([`gram::wire`] v4 frames), and
+//!   CG-plus-iterative-refinement on the solve path
+//!   ([`solvers::refine_with`]) back to a `1e-10` true relative residual.
+//!   Deterministic and partition-bit-identical within the mode; like the
+//!   gemm mode, a fleet must run one precision uniformly
+//!   (`benches/precision_tier.rs` reports the bytes/throughput trade).
 //! * **Serving core** — the work-bag scheduler's barrier semantics, sizing
 //!   `server.executors` × `runtime.threads`, the fast-fail backpressure
 //!   contract (`server.max_queue`), and reading the [`coordinator`]

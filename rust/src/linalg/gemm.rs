@@ -52,6 +52,34 @@
 //! Knob resolution (single source of truth:
 //! [`crate::config::resolve_gemm`]): `--gemm` CLI flag > `GDKRON_GEMM` env
 //! var > `gram.gemm` config key > `exact`.
+//!
+//! # The mixed-precision tier ([`Precision`])
+//!
+//! Orthogonal to the mode knob, `gram.precision = mixed` turns on an **f32
+//! storage tier** for the large factor panels (see
+//! [`crate::gram::GramFactors`]): panel *storage and transport* drop to
+//! f32, while every product still **accumulates in f64** — the f32 operands
+//! are widened back to f64 at pack time, so the blocked core below runs the
+//! exact same f64 FMA arithmetic with the exact same `KC`-only reduction
+//! order. Consequently all within-mode partition/shard/transport
+//! bit-identity guarantees carry over to the tier unchanged, and the
+//! accuracy contract tightens to storage rounding plus summation error:
+//!
+//! ```text
+//! |mixed − f64| ≤ (1.01·ε_f32 + 8·k·ε_f64) · (|A|·|B|)   entrywise,
+//! ```
+//!
+//! with `ε_f32 = 2⁻²³` (each operand is rounded to nearest once, a ≤ ε_f32/2
+//! relative perturbation; the 1% slack covers the cross term). The default
+//! `f64` precision is byte-for-byte inert: no tier is built, no dispatch
+//! site changes arithmetic.
+//!
+//! Knob resolution (single source of truth:
+//! [`crate::config::resolve_precision`]): `--precision` CLI flag >
+//! `GDKRON_PRECISION` env var > `gram.precision` config key > `f64`. Like
+//! `GDKRON_GEMM`, the value must be uniform across a fleet — remote shard
+//! workers derive their arithmetic from the frames they receive, but a
+//! mixed coordinator requires wire-v4 workers (see [`crate::gram::wire`]).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -142,6 +170,96 @@ pub fn global_gemm() -> Option<GemmMode> {
 }
 
 // ---------------------------------------------------------------------------
+// The precision knob (see the module doc's mixed-tier section).
+// ---------------------------------------------------------------------------
+
+/// Which storage tier the large factor panels live in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Everything f64, byte-for-byte the pre-knob behaviour. The default.
+    F64,
+    /// f32 panel storage + transport, f64 accumulation, iterative
+    /// refinement on the solve path. Opt-in; error contract in the module
+    /// doc and `docs/CONFIG.md`.
+    Mixed,
+}
+
+/// Parse a precision string (CLI flag, env var or config value): trimmed,
+/// case-insensitive `f64` / `mixed`. Single source of truth for every
+/// spelling of the knob — [`crate::config::resolve_precision`] and the
+/// launcher's `--precision` flag both route through it.
+pub fn parse_precision(v: &str) -> Option<Precision> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "f64" => Some(Precision::F64),
+        "mixed" => Some(Precision::Mixed),
+        _ => None,
+    }
+}
+
+fn encode_precision(p: Precision) -> usize {
+    match p {
+        Precision::F64 => 1,
+        Precision::Mixed => 2,
+    }
+}
+
+fn decode_precision(v: usize) -> Option<Precision> {
+    match v {
+        1 => Some(Precision::F64),
+        2 => Some(Precision::Mixed),
+        _ => None,
+    }
+}
+
+/// 0 = uninitialized; first [`precision`] call resolves `GDKRON_PRECISION`.
+static PRECISION: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide panel precision consulted by the tier-construction
+/// sites (`GramFactors::rebuild_tier`, the sharded snapshot plumbing, the
+/// wire senders). Dispatch inside the kernels is data-driven — they look at
+/// whether a tier is *present*, not at this knob — so flipping it only
+/// affects factor sets built afterwards.
+///
+/// Resolution order: last [`set_precision`] call, else `GDKRON_PRECISION`,
+/// else [`Precision::F64`].
+pub fn precision() -> Precision {
+    if let Some(p) = decode_precision(PRECISION.load(Ordering::Relaxed)) {
+        return p;
+    }
+    let p = std::env::var("GDKRON_PRECISION")
+        .ok()
+        .and_then(|v| parse_precision(&v))
+        .unwrap_or(Precision::F64);
+    PRECISION.store(encode_precision(p), Ordering::Relaxed);
+    p
+}
+
+/// Set the process-wide precision (overrides the lazy env default).
+pub fn set_precision(p: Precision) {
+    PRECISION.store(encode_precision(p), Ordering::Relaxed);
+}
+
+/// Process-wide `--precision` CLI override (0 = unset); mirrors
+/// [`CLI_GEMM`]. [`crate::config::resolve_precision`] gives it top
+/// precedence.
+static CLI_PRECISION: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the `--precision` CLI override.
+pub fn set_global_precision(p: Precision) {
+    CLI_PRECISION.store(encode_precision(p), Ordering::Relaxed);
+}
+
+/// Remove the CLI override (tests).
+pub fn clear_global_precision() {
+    CLI_PRECISION.store(0, Ordering::Relaxed);
+}
+
+/// The CLI override, if one was installed.
+pub fn global_precision() -> Option<Precision> {
+    decode_precision(CLI_PRECISION.load(Ordering::Relaxed))
+}
+
+// ---------------------------------------------------------------------------
 // Blocking constants.
 // ---------------------------------------------------------------------------
 
@@ -164,29 +282,48 @@ const NC: usize = 256;
 // Strided views: one packing core serves all four product orientations.
 // ---------------------------------------------------------------------------
 
+/// An element type the packing routines can widen to f64. The microkernel
+/// and the pack buffers are always f64 — f32 panels are widened **once, at
+/// pack time**, so every downstream FMA runs identical f64 arithmetic in
+/// the identical `KC` reduction order regardless of the storage tier.
+pub(crate) trait PanelElem: Copy + Send + Sync + 'static {
+    fn widen(self) -> f64;
+}
+
+impl PanelElem for f64 {
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self
+    }
+}
+
+impl PanelElem for f32 {
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self as f64
+    }
+}
+
 /// A read-only strided matrix view: element `(i, j)` is
 /// `data[i*rs + j*cs]`. Column-major `Mat`s are `{rs: 1, cs: rows}`;
 /// [`View::transposed`] swaps the strides, which is how the `aᵀ·b` and
-/// `a·bᵀ` entry points reuse the same packing routines.
+/// `a·bᵀ` entry points reuse the same packing routines. The element type
+/// defaults to f64; `View<f32>` is the storage-tier variant (widened at
+/// pack time, see [`PanelElem`]).
 #[derive(Clone, Copy)]
-pub(crate) struct View<'a> {
-    pub data: &'a [f64],
+pub(crate) struct View<'a, T = f64> {
+    pub data: &'a [T],
     pub rows: usize,
     pub cols: usize,
     pub rs: usize,
     pub cs: usize,
 }
 
-impl<'a> View<'a> {
+impl<'a, T: PanelElem> View<'a, T> {
     /// View over a column-major `rows × cols` slice.
-    pub fn col_major(data: &'a [f64], rows: usize, cols: usize) -> Self {
+    pub fn col_major(data: &'a [T], rows: usize, cols: usize) -> Self {
         debug_assert!(data.len() >= rows * cols);
         View { data, rows, cols, rs: 1, cs: rows }
-    }
-
-    /// View over a whole `Mat`.
-    pub fn of(m: &'a Mat) -> Self {
-        View::col_major(m.as_slice(), m.rows(), m.cols())
     }
 
     /// The transposed view (no data movement).
@@ -201,8 +338,15 @@ impl<'a> View<'a> {
     }
 
     #[inline(always)]
-    fn at(&self, i: usize, j: usize) -> f64 {
+    fn at(&self, i: usize, j: usize) -> T {
         self.data[i * self.rs + j * self.cs]
+    }
+}
+
+impl<'a> View<'a> {
+    /// View over a whole `Mat`.
+    pub fn of(m: &'a Mat) -> Self {
+        View::col_major(m.as_slice(), m.rows(), m.cols())
     }
 }
 
@@ -215,7 +359,7 @@ impl<'a> View<'a> {
 /// microkernel reads `MR` contiguous values per k-step. Rows past `mc` are
 /// zero-padded — the padded lanes accumulate garbage-free zeros and are
 /// never written back.
-fn pack_a(a: View, ic: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f64]) {
+fn pack_a<T: PanelElem>(a: View<T>, ic: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f64]) {
     let strips = (mc + MR - 1) / MR;
     for s in 0..strips {
         let i0 = s * MR;
@@ -224,7 +368,7 @@ fn pack_a(a: View, ic: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f64]
         for p in 0..kc {
             let d = &mut dst[p * MR..(p + 1) * MR];
             for i in 0..rows {
-                d[i] = a.at(ic + i0 + i, pc + p);
+                d[i] = a.at(ic + i0 + i, pc + p).widen();
             }
             for v in d.iter_mut().skip(rows) {
                 *v = 0.0;
@@ -235,7 +379,7 @@ fn pack_a(a: View, ic: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f64]
 
 /// Pack the `kc × nc` sub-panel of `b` at `(pc, jc)` into `NR`-column
 /// strips, laid out `[p·NR + j]`; columns past `nc` are zero-padded.
-fn pack_b(b: View, jc: usize, nc: usize, pc: usize, kc: usize, bpack: &mut [f64]) {
+fn pack_b<T: PanelElem>(b: View<T>, jc: usize, nc: usize, pc: usize, kc: usize, bpack: &mut [f64]) {
     let strips = (nc + NR - 1) / NR;
     for t in 0..strips {
         let j0 = t * NR;
@@ -244,7 +388,7 @@ fn pack_b(b: View, jc: usize, nc: usize, pc: usize, kc: usize, bpack: &mut [f64]
         for p in 0..kc {
             let d = &mut dst[p * NR..(p + 1) * NR];
             for j in 0..cols {
-                d[j] = b.at(pc + p, jc + j0 + j);
+                d[j] = b.at(pc + p, jc + j0 + j).widen();
             }
             for v in d.iter_mut().skip(cols) {
                 *v = 0.0;
@@ -349,7 +493,16 @@ fn micro(ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
 /// lane per `KC` block, accumulated in increasing-`k` order, regardless of
 /// `m`/`n` blocking or which column/row sub-range of a larger product this
 /// call covers. See the partition-invariance tests in `tests/gemm_path.rs`.
-pub(crate) fn gemm_view(a: View, b: View, c: &mut [f64], accumulate: bool) {
+/// The contract is element-type generic: f32 operands are widened at pack
+/// time ([`PanelElem`]), so the `View<f32>` instantiations inherit it
+/// verbatim, and the `View<f64>` instantiation is byte-identical to the
+/// pre-generic kernel.
+pub(crate) fn gemm_view<TA: PanelElem, TB: PanelElem>(
+    a: View<TA>,
+    b: View<TB>,
+    c: &mut [f64],
+    accumulate: bool,
+) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     assert_eq!(b.rows, k, "gemm inner-dimension mismatch");
     assert_eq!(c.len(), m * n, "gemm output size mismatch");
@@ -484,6 +637,83 @@ mod tests {
         assert_eq!(global_gemm(), Some(GemmMode::Fast));
         clear_global_gemm();
         assert_eq!(global_gemm(), None);
+    }
+
+    #[test]
+    fn parse_precision_accepts_both_tiers_case_insensitively() {
+        assert_eq!(parse_precision("f64"), Some(Precision::F64));
+        assert_eq!(parse_precision(" MIXED\n"), Some(Precision::Mixed));
+        assert_eq!(parse_precision("Mixed"), Some(Precision::Mixed));
+        assert_eq!(parse_precision("f32"), None);
+        assert_eq!(parse_precision(""), None);
+    }
+
+    #[test]
+    fn precision_cli_override_installs_and_clears() {
+        clear_global_precision();
+        assert_eq!(global_precision(), None);
+        set_global_precision(Precision::Mixed);
+        assert_eq!(global_precision(), Some(Precision::Mixed));
+        clear_global_precision();
+        assert_eq!(global_precision(), None);
+    }
+
+    /// Round a matrix to its f32 storage-tier image (column-major).
+    fn round32(m: &Mat) -> Vec<f32> {
+        m.as_slice().iter().map(|&v| v as f32).collect()
+    }
+
+    /// Mixed-tier error budget `(1.01·ε_f32 + 8·k·ε_f64)·(|A|·|B|)` from
+    /// the module contract.
+    fn mixed_err_ok(mixed: &Mat, exact: &Mat, abs_prod: &Mat, k: usize) -> bool {
+        let eps32 = f32::EPSILON as f64;
+        let mut ok = true;
+        for j in 0..mixed.cols() {
+            for i in 0..mixed.rows() {
+                let bound = (1.01 * eps32 + 8.0 * (k.max(1) as f64) * f64::EPSILON)
+                    * abs_prod[(i, j)].max(1e-300);
+                ok &= (mixed[(i, j)] - exact[(i, j)]).abs() <= bound;
+            }
+        }
+        ok
+    }
+
+    #[test]
+    fn f32_packed_matmul_meets_mixed_bound_vs_f64() {
+        for &(m, k, n) in &[(1, 1, 1), (7, 9, 5), (13, 300, 17), (70, 257, 9)] {
+            let a = sample(m, k, 59);
+            let b = sample(k, n, 61);
+            let exact = a.matmul(&b);
+            let a32 = round32(&a);
+            let av = View::<f32>::col_major(&a32, m, k);
+            let mut mixed = Mat::zeros(m, n);
+            gemm_view(av, View::of(&b), mixed.as_mut_slice(), false);
+            let abs = a.map(f64::abs).matmul(&b.map(f64::abs));
+            assert!(mixed_err_ok(&mixed, &exact, &abs, k), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn f32_packed_column_partition_is_bit_invariant() {
+        // same invariance the f64 pin rests on, instantiated at View<f32>:
+        // within the mixed tier, thread/shard output partitioning must not
+        // change a single bit.
+        let (m, k, n) = (37, 300, 23);
+        let a = sample(m, k, 67);
+        let b = sample(k, n, 71);
+        let a32 = round32(&a);
+        let av = View::<f32>::col_major(&a32, m, k);
+        let mut full = Mat::zeros(m, n);
+        gemm_view(av, View::of(&b), full.as_mut_slice(), false);
+        for split in [0, 1, 7, n] {
+            let bv = View::of(&b);
+            let mut lo = Mat::zeros(m, split);
+            let mut ro = Mat::zeros(m, n - split);
+            gemm_view(av, bv.col_range(0, split), lo.as_mut_slice(), false);
+            gemm_view(av, bv.col_range(split, n), ro.as_mut_slice(), false);
+            let glued = lo.hcat(&ro);
+            assert!(glued == full, "split {split} must be bit-identical");
+        }
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! The f32 storage tier: column-major f32 matrices + quantization helpers.
+//!
+//! `gram.precision = mixed` (see [`super::gemm::Precision`]) stores the
+//! large factor panels twice: the authoritative f64 panels (unchanged, so
+//! every factor-level invariant and cold-rebuild pin holds verbatim) plus a
+//! derived [`MatF32`] shadow that the matvec/apply/solve kernels actually
+//! stream. The shadow is **deterministically derived**: every entry is the
+//! f64 entry rounded to nearest-f32 (`as f32`, IEEE round-to-nearest-even),
+//! and `widen ∘ round` is a pure function of the f64 bits — so a tier built
+//! on the coordinator, a tier rebuilt on a remote worker from an f32 wire
+//! frame, and a tier rebuilt after failover from the WAL are bit-identical.
+//!
+//! Accuracy: rounding perturbs each entry by ≤ `ε_f32/2 = 2⁻²⁴` relative;
+//! the product-level consequence is the mixed-tier bound documented in
+//! [`super::gemm`]. Memory/bandwidth: exactly 0.5× the f64 panel bytes.
+
+use super::gemm::View;
+use super::Mat;
+
+/// A column-major f32 matrix — the storage-tier twin of [`Mat`]. Kept
+/// deliberately minimal: the tier is read-only input to the widening gemm
+/// core and the wire encoder; all mutation happens by re-deriving from the
+/// f64 source of truth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl MatF32 {
+    /// Build from a generator (column-major fill order, like
+    /// `Mat::from_fn`).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        MatF32 { data, rows, cols }
+    }
+
+    /// Round every entry of an f64 matrix to its f32 image.
+    pub fn round_from(m: &Mat) -> Self {
+        MatF32 {
+            data: m.as_slice().iter().map(|&v| v as f32).collect(),
+            rows: m.rows(),
+            cols: m.cols(),
+        }
+    }
+
+    /// Build from raw column-major storage.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatF32 storage size mismatch");
+        MatF32 { data, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Widen back to f64 (used by refinement paths that need a `Mat`
+    /// oracle over the tier bits, and by the wire decoder).
+    pub fn widen(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self[(i, j)] as f64)
+    }
+
+    /// Gemm view over the whole matrix (widened at pack time).
+    pub(crate) fn view(&self) -> View<'_, f32> {
+        View::col_major(&self.data, self.rows, self.cols)
+    }
+
+    /// Tier bytes actually resident (`rows·cols·4`).
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatF32 {
+    type Output = f32;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[j * self.rows + i]
+    }
+}
+
+/// Round an f64 value through f32 storage and back — the quantization the
+/// mixed tier applies to tail `at_hot` entries at their write sites.
+/// Idempotent (`q(q(x)) = q(x)`), and `q` of an f64 that is already an
+/// exact f32 image is the identity — which is why WAL replay and failover
+/// reproduce identical bits: the recovered values are already quantized.
+#[inline(always)]
+pub fn quantize_f32(v: f64) -> f64 {
+    (v as f32) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_is_idempotent_and_indexing_is_column_major() {
+        let m = Mat::from_fn(3, 2, |i, j| 1.0 + i as f64 * 0.1 + j as f64 * 7.0);
+        let t = MatF32::round_from(&m);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 2);
+        for j in 0..2 {
+            for i in 0..3 {
+                assert_eq!(t[(i, j)], m[(i, j)] as f32);
+                assert_eq!(quantize_f32(m[(i, j)]), t[(i, j)] as f64);
+                // idempotence: quantizing the widened tier value is a no-op
+                assert_eq!(quantize_f32(quantize_f32(m[(i, j)])), quantize_f32(m[(i, j)]));
+            }
+        }
+        // widen is the exact inverse image of the tier bits
+        let w = t.widen();
+        for j in 0..2 {
+            for i in 0..3 {
+                assert_eq!(w[(i, j)], t[(i, j)] as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn tier_bytes_are_half_the_f64_panel() {
+        let m = Mat::zeros(16, 9);
+        let t = MatF32::round_from(&m);
+        assert_eq!(t.memory_bytes() * 2, m.as_slice().len() * 8);
+    }
+
+    #[test]
+    fn from_fn_and_round_from_agree() {
+        let m = Mat::from_fn(5, 4, |i, j| (i * 31 + j * 17) as f64 * 0.123456789);
+        let a = MatF32::round_from(&m);
+        let b = MatF32::from_fn(5, 4, |i, j| m[(i, j)] as f32);
+        assert_eq!(a, b);
+    }
+}

@@ -16,10 +16,17 @@
 //! ones; the opt-in `fast` mode reroutes them through the cache-blocked
 //! [`gemm`] core, which trades that cross-mode bit-identity (never the
 //! cross-thread/cross-shard one) for several-fold higher flop rates.
+//!
+//! Orthogonally, the `gram.precision` knob (also in [`gemm`]) adds an
+//! opt-in f32 *storage* tier ([`lowp`]) for the large factor panels —
+//! storage and transport drop to f32, accumulation stays f64 via widening
+//! at pack time, and the solve path recovers f64-quality weights by
+//! iterative refinement.
 
 mod chol;
 mod eig;
 pub mod gemm;
+pub mod lowp;
 mod lu;
 mod mat;
 pub mod par;
@@ -28,6 +35,7 @@ mod update;
 
 pub use chol::{Cholesky, NotPositiveDefinite};
 pub use eig::sym_eig;
+pub use lowp::{quantize_f32, MatF32};
 pub use lu::Lu;
 pub use mat::Mat;
 // Per-column product kernels, shared (crate-wide) with the sharded Gram

@@ -34,9 +34,9 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::gemm::{self, GemmMode, View};
+use super::gemm::{self, GemmMode, PanelElem, View};
 use super::mat::{matmul_acc_col, matmul_t_col, t_matmul_col};
-use super::Mat;
+use super::{Mat, MatF32};
 
 /// Upper bound on the worker count (sanity clamp for bad env values).
 pub const MAX_THREADS: usize = 256;
@@ -276,6 +276,85 @@ fn fast_product(kind: Kind, accumulate: bool, a: &Mat, b: &Mat, out: &mut Mat, n
     });
 }
 
+// ---------------------------------------------------------------------------
+// Mixed-tier fan-outs (gram.precision = mixed).
+//
+// Same contiguous-column-block partitioning as `fast_product`, same blocked
+// kernel underneath — so the same thread-count bit-invariance argument
+// applies verbatim — but generic over the operand element types, which is
+// how the f32 storage tier flows into an all-f64 accumulation. Kept
+// separate from `fast_product` on purpose: the f64 fast path must stay
+// byte-identical to its pre-tier self.
+// ---------------------------------------------------------------------------
+
+/// Blocked fan-out over contiguous column blocks of `out`. `av`/`bview`
+/// are the full product operands; each worker computes one column range of
+/// `out` from the matching `col_range` of `bview`.
+fn blocked_fan_out<TA: PanelElem, TB: PanelElem>(
+    av: View<TA>,
+    bview: View<TB>,
+    out: &mut Mat,
+    accumulate: bool,
+    nthreads: usize,
+) {
+    let m = out.rows();
+    let cols = out.cols();
+    if cols == 0 {
+        return;
+    }
+    let t = nthreads.clamp(1, cols);
+    if t == 1 || m == 0 {
+        gemm::gemm_view(av, bview, out.as_mut_slice(), accumulate);
+        return;
+    }
+    let block = (cols + t - 1) / t;
+    std::thread::scope(|s| {
+        let mut chunks = out.as_mut_slice().chunks_mut(block * m).enumerate();
+        let first = chunks.next();
+        for (ci, chunk) in chunks {
+            let j0 = ci * block;
+            let j1 = j0 + chunk.len() / m;
+            s.spawn(move || gemm::gemm_view(av, bview.col_range(j0, j1), chunk, accumulate));
+        }
+        if let Some((_, chunk)) = first {
+            gemm::gemm_view(av, bview.col_range(0, chunk.len() / m), chunk, accumulate);
+        }
+    });
+}
+
+/// `out = a32 · b` (or `out += a32 · b` when `accumulate`): f32
+/// storage-tier left operand, widened at pack time, f64 accumulation.
+/// Thread count uses the fast-mode quantum — it is the same blocked kernel.
+pub fn mixed_matmul_into(a32: &MatF32, b: &Mat, out: &mut Mat, accumulate: bool) {
+    assert_eq!(a32.cols(), b.rows(), "mixed matmul shape mismatch");
+    assert_eq!(out.rows(), a32.rows());
+    assert_eq!(out.cols(), b.cols());
+    let flops = 2 * a32.rows() * a32.cols() * out.cols();
+    let t = effective_threads(flops, out.cols(), GemmMode::Fast);
+    blocked_fan_out(a32.view(), View::of(b), out, accumulate, t);
+}
+
+/// `out = aᵀ · b32`: f64 transposed left operand against an f32
+/// storage-tier right operand.
+pub fn mixed_t_matmul_into(a: &Mat, b32: &MatF32, out: &mut Mat) {
+    assert_eq!(a.rows(), b32.rows(), "mixed t_matmul shape mismatch");
+    assert_eq!(out.rows(), a.cols());
+    assert_eq!(out.cols(), b32.cols());
+    let flops = 2 * a.rows() * a.cols() * out.cols();
+    let t = effective_threads(flops, out.cols(), GemmMode::Fast);
+    blocked_fan_out(View::of(a).transposed(), b32.view(), out, false, t);
+}
+
+/// Forced-blocked f64 `out = a · b`. Mixed-mode kernels use this for their
+/// exact-f64 sub-products so mixed arithmetic never depends on the
+/// `gram.gemm` knob — serial, sharded and remote mixed paths all run the
+/// identical blocked reduction regardless of how the mode knob is set.
+pub fn blocked_matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let flops = Kind::Mul.check(a, b, out);
+    let t = effective_threads(flops, out.cols(), GemmMode::Fast);
+    blocked_fan_out(View::of(a), View::of(b), out, false, t);
+}
+
 /// `out = a * b`, parallel over output columns (auto thread count).
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
     let mode = gemm::mode();
@@ -427,6 +506,55 @@ mod tests {
         // k = 65 < KC = 256, so the product is a single depth block and the
         // accumulate path adds exactly one partial onto the seed: acc must
         // equal seed + prod bitwise.
+        let want = &seed + &prod;
+        assert!((&got - &want).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn mixed_fan_out_is_thread_count_invariant_and_matches_widened_reference() {
+        let a = sample(23, 300, 81);
+        let b = sample(300, 29, 83);
+        let a32 = MatF32::round_from(&a);
+        // single-thread blocked result over the widened tier is the anchor
+        let mut one = Mat::zeros(23, 29);
+        blocked_fan_out(a32.view(), View::of(&b), &mut one, false, 1);
+        for t in [2, 3, 5, 8] {
+            let mut got = Mat::zeros(23, 29);
+            blocked_fan_out(a32.view(), View::of(&b), &mut got, false, t);
+            assert!(got == one, "mixed fan-out threads={t} must be bit-identical");
+        }
+        // and the anchor equals the forced-blocked f64 product of the
+        // widened tier bitwise (widening at pack == widening up front)
+        let wide = a32.widen();
+        let mut ref_blocked = Mat::zeros(23, 29);
+        blocked_matmul_into(&wide, &b, &mut ref_blocked);
+        assert!(one == ref_blocked);
+    }
+
+    #[test]
+    fn mixed_t_matmul_matches_widened_reference_bitwise() {
+        let a = sample(40, 13, 87);
+        let b = sample(40, 17, 89);
+        let b32 = MatF32::round_from(&b);
+        let mut got = Mat::zeros(13, 17);
+        mixed_t_matmul_into(&a, &b32, &mut got);
+        let wide = b32.widen();
+        let mut want = Mat::zeros(13, 17);
+        blocked_fan_out(View::of(&a).transposed(), View::of(&wide), &mut want, false, 1);
+        assert!(got == want);
+    }
+
+    #[test]
+    fn mixed_matmul_accumulates_onto_seed() {
+        let a = sample(9, 65, 91);
+        let b = sample(65, 6, 93);
+        let a32 = MatF32::round_from(&a);
+        let seed = sample(9, 6, 95);
+        let mut got = seed.clone();
+        mixed_matmul_into(&a32, &b, &mut got, true);
+        let mut prod = Mat::zeros(9, 6);
+        mixed_matmul_into(&a32, &b, &mut prod, false);
+        // k = 65 < KC: single depth block, so acc == seed + prod bitwise
         let want = &seed + &prod;
         assert!((&got - &want).max_abs() == 0.0);
     }

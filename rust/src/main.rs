@@ -133,6 +133,21 @@ fn apply_gemm(opts: &Opts) {
     gdkron::linalg::gemm::set_mode(gdkron::config::resolve_gemm(&opts.config));
 }
 
+/// Apply the panel-precision knob: `--precision` flag beats
+/// `GDKRON_PRECISION` beats `gram.precision` in the config; absent
+/// everywhere, `f64` — byte-for-byte inert. Same install/resolve/apply
+/// shape as [`apply_gemm`]
+/// ([`gdkron::linalg::gemm::set_global_precision`] →
+/// [`gdkron::config::resolve_precision`] →
+/// [`gdkron::linalg::gemm::set_precision`]).
+fn apply_precision(opts: &Opts) {
+    let flag = opts.flags.get("precision").and_then(|v| gdkron::linalg::gemm::parse_precision(v));
+    if let Some(p) = flag {
+        gdkron::linalg::gemm::set_global_precision(p);
+    }
+    gdkron::linalg::gemm::set_precision(gdkron::config::resolve_precision(&opts.config));
+}
+
 fn dispatch(args: &[String]) -> anyhow::Result<()> {
     match args.first().map(String::as_str) {
         Some("exp") => {
@@ -143,6 +158,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             apply_threads(&opts);
             apply_shards(&opts);
             apply_gemm(&opts);
+            apply_precision(&opts);
             run_experiment(id, &opts)
         }
         Some("run") => {
@@ -158,6 +174,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             apply_threads(&opts);
             apply_shards(&opts);
             apply_gemm(&opts);
+            apply_precision(&opts);
             run_experiment(&id, &opts)
         }
         Some("artifacts") => {
@@ -214,6 +231,8 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
                  (1 = single shard)\n\
                  panel gemm: --gemm exact|fast > GDKRON_GEMM > gram.gemm \
                  (exact = default, bit-identity pinned; fast = cache-blocked kernels)\n\
+                 panel precision: --precision f64|mixed > GDKRON_PRECISION > gram.precision \
+                 (f64 = default, byte-inert; mixed = f32 storage tier + refinement)\n\
                  remote gram shards: GDKRON_REGISTRY_FILE > gram.registry_file > \
                  GDKRON_REMOTE_SHARDS > gram.remote_shards (empty = in-process); \
                  health knobs: gram.health_interval_ms, gram.reconnect_backoff_ms, \
@@ -394,6 +413,7 @@ fn standby(args: &[String]) -> anyhow::Result<()> {
     apply_threads(&opts);
     apply_shards(&opts);
     apply_gemm(&opts);
+    apply_precision(&opts);
 
     // install the CLI overrides so the shared resolvers (and any engine this
     // process later builds from the same config) see flag > env > config

@@ -10,6 +10,13 @@
 //! applications instead of `K` independent CG runs. Both report convergence
 //! telemetry that the experiments (Fig. 4: 520 iterations to rtol 1e-6)
 //! consume directly.
+//!
+//! [`refine_with`] is the mixed-precision companion (`gram.precision =
+//! mixed`, [`crate::linalg::gemm::Precision`]): classic iterative
+//! refinement that wraps *any* inner solve — typically one running on the
+//! f32 storage tier — and corrects it against an **exact** f64 operator
+//! until the true relative residual meets [`REFINE_RTOL`]. The inner solve
+//! supplies speed; the outer loop restores f64-level accuracy.
 
 mod block_cg;
 
@@ -189,6 +196,96 @@ pub fn cg_solve(op: &dyn LinearOp, b: &[f64], x0: Option<&[f64]>, opts: &CgOptio
     CgResult { x, iters, converged, resid_history: history }
 }
 
+/// Target true relative residual for mixed-precision iterative refinement:
+/// comfortably below the model-parity tolerance, comfortably above what one
+/// f64 solve can promise on an ill-conditioned window. Pinned by
+/// `refinement_reaches_the_pinned_residual_from_a_rounded_inner_solve`
+/// below and asserted by `benches/precision_tier.rs`.
+pub const REFINE_RTOL: f64 = 1e-10;
+
+/// Cap on refinement rounds: each round contracts the residual by roughly
+/// the inner solve's accuracy (~`ε_f32` per round for a tier-backed inner
+/// solve), so a handful of rounds reaches [`REFINE_RTOL`]; more means the
+/// inner solve is broken and iterating further cannot help.
+pub const MAX_REFINE_ROUNDS: usize = 8;
+
+/// Outcome of [`refine_with`].
+#[derive(Clone, Debug)]
+pub struct RefineResult {
+    /// Refined solution estimate.
+    pub x: Vec<f64>,
+    /// Correction rounds performed (0 = `x0` already met the tolerance).
+    pub rounds: usize,
+    /// Final true relative residual `‖b − A x‖ / ‖b‖` against `exact`.
+    pub rel_residual: f64,
+}
+
+/// Iterative refinement of `A x = b` against the **exact** operator:
+/// starting from `x0` (an inner solve's answer — e.g. CG over the f32
+/// storage tier), repeat `r ← b − A x` (exact f64), `d ← solve(r)` (the
+/// inner solve again, on the residual), `x ← x + d`, until the true
+/// relative residual is at most `rtol` or `max_rounds` corrections have
+/// been spent. A round that makes no progress (the residual floor of the
+/// inner solve/operator pair) is rolled back and the best iterate returned
+/// with its achieved residual; a round that *grows* the residual
+/// substantially means the inner solve is broken and errors out — the
+/// result would silently be garbage.
+///
+/// This is the classic mixed-precision scheme (low-precision solver inside,
+/// high-precision residuals outside): each round multiplies the error by
+/// the inner solve's relative accuracy, so a tier-backed inner solve
+/// (`~1e-7` per round) reaches [`REFINE_RTOL`] in a few rounds.
+pub fn refine_with(
+    exact: &dyn LinearOp,
+    b: &[f64],
+    x0: Vec<f64>,
+    rtol: f64,
+    max_rounds: usize,
+    mut solve: impl FnMut(&[f64]) -> anyhow::Result<Vec<f64>>,
+) -> anyhow::Result<RefineResult> {
+    let n = exact.dim();
+    anyhow::ensure!(b.len() == n, "refinement rhs length {} != {n}", b.len());
+    anyhow::ensure!(x0.len() == n, "refinement x0 length {} != {n}", x0.len());
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut x = x0;
+    let mut ax = vec![0.0; n];
+    let mut r = vec![0.0; n];
+    let residual = |x: &[f64], ax: &mut Vec<f64>, r: &mut Vec<f64>| {
+        exact.apply(x, ax);
+        for i in 0..n {
+            r[i] = b[i] - ax[i];
+        }
+        norm2(r) / bnorm
+    };
+    let mut rel = residual(&x, &mut ax, &mut r);
+    let mut rounds = 0;
+    while rel > rtol && rounds < max_rounds {
+        let d = solve(&r)?;
+        anyhow::ensure!(d.len() == n, "refinement correction length {} != {n}", d.len());
+        for i in 0..n {
+            x[i] += d[i];
+        }
+        rounds += 1;
+        let next = residual(&x, &mut ax, &mut r);
+        if next <= rtol || next < rel {
+            rel = next;
+            continue;
+        }
+        // No progress: reject the correction and stop at the best iterate.
+        for i in 0..n {
+            x[i] -= d[i];
+        }
+        rounds -= 1;
+        anyhow::ensure!(
+            next.is_finite() && next <= rel * 4.0,
+            "iterative refinement diverged: relative residual {next:.3e} after a correction \
+             round (was {rel:.3e}) — the inner solve is too inaccurate to contract"
+        );
+        break;
+    }
+    Ok(RefineResult { x, rounds, rel_residual: rel })
+}
+
 #[inline]
 pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
@@ -292,6 +389,52 @@ mod tests {
         let warm0: Vec<f64> = xstar.iter().map(|v| v * 0.99).collect();
         let warm = cg_solve(&a, &b, Some(&warm0), &CgOptions { rtol: 1e-8, ..Default::default() });
         assert!(warm.iters <= cold.iters);
+    }
+
+    #[test]
+    fn refinement_reaches_the_pinned_residual_from_a_rounded_inner_solve() {
+        // inner solve: the exact solution rounded to f32 — the accuracy a
+        // tier-backed solver delivers per round
+        let spec: Vec<f64> = (1..=16).map(|i| (i as f64).powi(2)).collect();
+        let a = spd_with_spectrum(&spec, 21);
+        let xstar: Vec<f64> = (0..16).map(|i| (i as f64 * 0.7).cos()).collect();
+        let b = a.matvec(&xstar);
+        let lu = |rhs: &[f64]| -> Vec<f64> {
+            let exact = cg_solve(&a, rhs, None, &CgOptions { rtol: 1e-14, ..Default::default() });
+            exact.x.iter().map(|&v| (v as f32) as f64).collect()
+        };
+        let x0 = lu(&b);
+        let res = refine_with(&a, &b, x0, REFINE_RTOL, MAX_REFINE_ROUNDS, |r| Ok(lu(r))).unwrap();
+        assert!(res.rel_residual <= REFINE_RTOL, "rel residual {}", res.rel_residual);
+        assert!(res.rounds >= 1, "an f32-rounded start cannot already meet 1e-10");
+        assert!(res.rounds <= 4, "f32-accurate rounds must contract fast, took {}", res.rounds);
+    }
+
+    #[test]
+    fn refinement_is_a_no_op_on_an_already_exact_start() {
+        let spec: Vec<f64> = (1..=8).map(|i| i as f64).collect();
+        let a = spd_with_spectrum(&spec, 2);
+        let xstar: Vec<f64> = (0..8).map(|i| (i as f64).sin()).collect();
+        let b = a.matvec(&xstar);
+        let res = refine_with(&a, &b, xstar.clone(), 1e-10, MAX_REFINE_ROUNDS, |_| {
+            panic!("must not call the inner solve when x0 already meets rtol")
+        })
+        .unwrap();
+        assert_eq!(res.rounds, 0);
+        assert_eq!(res.x, xstar);
+    }
+
+    #[test]
+    fn refinement_rejects_a_non_contracting_inner_solve() {
+        let a = Mat::eye(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        // inner "solve" that returns garbage: the residual cannot contract
+        let err = refine_with(&a, &b, vec![0.0; 4], 1e-12, MAX_REFINE_ROUNDS, |_| {
+            Ok(vec![100.0, -100.0, 100.0, -100.0])
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("diverged"), "unexpected error: {err}");
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! throughput claim: solving `K = 8` right-hand sides on a `D=256, N=8` SE
 //! Gram operator with one block-CG run costs **fewer total operator
 //! applications** than eight sequential `cg_solve` runs.
+//!
+//! All operators here are built through `GramOperator::new_exact`: these
+//! are solver-plumbing oracles pinned at f64 tolerances, so they must stay
+//! inert under the `GDKRON_PRECISION=mixed` CI leg (where `new` would
+//! dispatch the ~ε_f32 tier kernels). The mixed operator's own solve
+//! accuracy is pinned by `benches/precision_tier.rs` and
+//! `tests/model_parity.rs`.
 
 use gdkron::gram::{GramFactors, GramOperator, Metric};
 use gdkron::kernels::{Matern52, ScalarKernel, SquaredExponential};
@@ -36,7 +43,7 @@ fn gauss_block(rows: usize, cols: usize, seed: u64) -> Mat {
 fn check_block_matches_columnwise(kern: &dyn ScalarKernel, seed: u64) {
     let (d, n, k) = (12, 5, 4);
     let f = factors(kern, d, n, seed);
-    let op = GramOperator::new(&f);
+    let op = GramOperator::new_exact(&f);
     let b = gauss_block(d * n, k, seed + 100);
     let opts = CgOptions {
         rtol: 1e-11,
@@ -92,7 +99,7 @@ fn block_cg_matches_columnwise_cg_on_matern52_gram() {
 #[test]
 fn iteration_cap_exercises_per_column_convergence_flags() {
     let f = factors(&SquaredExponential, 10, 4, 3);
-    let op = GramOperator::new(&f);
+    let op = GramOperator::new_exact(&f);
     let b = gauss_block(40, 3, 33);
     // unreachable tolerance + tiny cap: nothing converges, every column
     // must report its own (false) flag and a finite residual.
@@ -127,7 +134,7 @@ fn iteration_cap_exercises_per_column_convergence_flags() {
 fn block_cg_beats_sequential_cg_on_serving_batch() {
     let (d, n, k) = (256, 8, 8);
     let f = factors(&SquaredExponential, d, n, 4);
-    let op = GramOperator::new(&f);
+    let op = GramOperator::new_exact(&f);
     let b = gauss_block(d * n, k, 44);
     let opts = CgOptions {
         rtol: 1e-6,

@@ -11,7 +11,8 @@
 //! * `gram.remote_timeout_ms` / `gram.remote_gather_factor` /
 //!   `gram.health_interval_ms` / `gram.reconnect_backoff_ms` > defaults,
 //!   with non-positive values rejected;
-//! * `--gemm` > `GDKRON_GEMM` > `gram.gemm` > `exact`.
+//! * `--gemm` > `GDKRON_GEMM` > `gram.gemm` > `exact`;
+//! * `--precision` > `GDKRON_PRECISION` > `gram.precision` > `f64`.
 //!
 //! Environment-mutating cases are serialized behind a shared mutex (and
 //! restore the prior value on drop), so `cargo test -q` stays race-free no
@@ -21,11 +22,15 @@ use std::sync::{Mutex, MutexGuard};
 
 use gdkron::config::{
     health_interval, reconnect_backoff, remote_gather_factor, remote_shard_timeout,
-    resolve_gemm, resolve_registry_file, resolve_remote_shards, resolve_shards, Config,
+    resolve_gemm, resolve_precision, resolve_registry_file, resolve_remote_shards,
+    resolve_shards, Config,
 };
 use gdkron::gram::remote::RESULT_TIMEOUT_FACTOR;
 use gdkron::gram::sharded::{clear_global_shards, set_global_shards, MAX_SHARDS};
-use gdkron::linalg::gemm::{clear_global_gemm, set_global_gemm, GemmMode};
+use gdkron::linalg::gemm::{
+    clear_global_gemm, clear_global_precision, set_global_gemm, set_global_precision, GemmMode,
+    Precision,
+};
 
 /// Serializes every test that touches the process environment or the
 /// process-global `--shards` override.
@@ -133,6 +138,40 @@ fn gemm_cli_beats_env_beats_config_beats_default() {
     // ... and a malformed config value falls through to the default
     let bad = Config::from_str("[gram]\ngemm = \"turbo\"\n").unwrap();
     assert_eq!(resolve_gemm(&bad), GemmMode::Exact);
+}
+
+#[test]
+fn precision_cli_beats_env_beats_config_beats_default() {
+    let _lock = env_lock();
+    let cfg = Config::from_str("[gram]\nprecision = \"mixed\"\n").unwrap();
+
+    // default: no knob anywhere → f64 (the byte-for-byte inert tier)
+    let _e = EnvGuard::unset("GDKRON_PRECISION");
+    clear_global_precision();
+    let empty = Config::from_str("").unwrap();
+    assert_eq!(resolve_precision(&empty), Precision::F64);
+
+    // config beats default
+    assert_eq!(resolve_precision(&cfg), Precision::Mixed);
+
+    // env beats config (case/whitespace-insensitive)
+    let _e2 = EnvGuard::set("GDKRON_PRECISION", " F64 ");
+    assert_eq!(resolve_precision(&cfg), Precision::F64);
+
+    // CLI (process-global override) beats env
+    set_global_precision(Precision::Mixed);
+    assert_eq!(resolve_precision(&cfg), Precision::Mixed);
+
+    // clearing the override falls back to the env level again
+    clear_global_precision();
+    assert_eq!(resolve_precision(&cfg), Precision::F64);
+
+    // a malformed env value falls through to the config level
+    let _e3 = EnvGuard::set("GDKRON_PRECISION", "f32");
+    assert_eq!(resolve_precision(&cfg), Precision::Mixed);
+    // ... and a malformed config value falls through to the default
+    let bad = Config::from_str("[gram]\nprecision = \"bf16\"\n").unwrap();
+    assert_eq!(resolve_precision(&bad), Precision::F64);
 }
 
 #[test]

@@ -147,6 +147,68 @@ fn sharded_and_remote_engines_match_the_unsharded_engine_bitwise() {
 }
 
 #[test]
+fn mixed_precision_engine_tracks_f64_and_is_bitwise_shard_invariant() {
+    // The mixed leg: `gram.precision = mixed` × `gp.compaction = exact` ×
+    // sharded, at the model surface. The tier kernels always run the
+    // blocked fast-path products, so this leg also pins the
+    // `gram.gemm = fast` interaction without mutating the process-global
+    // knob (other test threads share it — hence `enable_precision_tier`).
+    //
+    // Two pins:
+    // * mixed tracks the f64 engine within 1e-5 relative (tier rounding
+    //   is ~1e-7, refinement certifies solves to 1e-10);
+    // * *within* mixed mode, shard partitioning is bit-invisible — the
+    //   op-level invariance pin (`gram/sharded.rs`), held end-to-end.
+    let (x, g) = sample(14);
+    let cg = CgOptions { rtol: 1e-12, max_iters: 50_000, ..Default::default() };
+    let opts = FitOptions { method: FitMethod::Iterative(cg), ..Default::default() };
+
+    let mut plain = fit_online(&x, &g, &opts);
+    plain.set_compaction(Compaction::Exact);
+    let mut mixed = fit_online(&x, &g, &opts);
+    mixed.enable_precision_tier();
+    mixed.set_compaction(Compaction::Exact);
+    let mut mixed_sharded = fit_online(&x, &g, &opts);
+    mixed_sharded.enable_precision_tier();
+    mixed_sharded.set_compaction(Compaction::Exact);
+    // tier first, then shards: the shard mirrors snapshot tier state
+    mixed_sharded.set_shards(2);
+    assert_eq!(mixed_sharded.shards(), 2);
+
+    for j in WINDOW..TOTAL {
+        plain.observe(x.col(j), g.col(j)).expect("plain observe");
+        mixed.observe(x.col(j), g.col(j)).expect("mixed observe");
+        mixed_sharded.observe(x.col(j), g.col(j)).expect("mixed sharded observe");
+    }
+    // exact-compaction folds so the tiered at_hot quantization path runs
+    for _ in 0..2 {
+        plain.drop_first().expect("plain fold");
+        mixed.drop_first().expect("mixed fold");
+        mixed_sharded.drop_first().expect("mixed sharded fold");
+    }
+    assert!(mixed.precision_tier_active());
+    assert!(mixed_sharded.precision_tier_active());
+    assert_eq!(mixed.tail_len(), 2);
+
+    let xqs = queries(5, 24);
+    let f64_grads = plain.predict_gradients(&xqs);
+    let mixed_grads = mixed.predict_gradients(&xqs);
+    assert_close(&mixed_grads, &f64_grads, 1e-5, "mixed grads vs f64");
+    assert_bits_eq(
+        &mixed_sharded.predict_gradients(&xqs),
+        &mixed_grads,
+        "mixed sharded grads vs mixed serial",
+    );
+
+    let xq = xqs.col(0);
+    let f64_cov = plain.predict_gradient_cov(xq).expect("plain cov");
+    let mixed_cov = mixed.predict_gradient_cov(xq).expect("mixed cov");
+    let sharded_cov = mixed_sharded.predict_gradient_cov(xq).expect("mixed sharded cov");
+    assert_close(&mixed_cov, &f64_cov, 1e-5, "mixed cov vs f64");
+    assert_bits_eq(&sharded_cov, &mixed_cov, "mixed sharded cov vs mixed serial");
+}
+
+#[test]
 fn tiered_posterior_mean_matches_full_history_cov_matches_hot_window() {
     let (x, g) = sample(13);
     let opts = FitOptions { method: FitMethod::Exact, ..Default::default() };

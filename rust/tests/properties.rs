@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use gdkron::gp::{FitOptions, GradientGp};
-use gdkron::gram::{woodbury_solve, GramFactors, GramOperator, Metric};
+use gdkron::gram::{woodbury_solve, GramFactors, GramOperator, MatvecWorkspace, Metric};
 use gdkron::kernels::{
     ExponentialKernel, Matern32, Matern52, RationalQuadratic, ScalarKernel, SquaredExponential,
 };
@@ -58,9 +58,13 @@ fn property_matvec_equals_dense_gram() {
         let got = f.matvec(&v);
         let want = dense.matvec(v.as_slice());
         let scale = 1.0 + want.iter().fold(0.0_f64, |m, v| m.max(v.abs()));
+        // under the GDKRON_PRECISION=mixed CI leg the constructor installs
+        // the f32 tier: matvec accuracy is then bounded by storage
+        // rounding (~ε_f32), not f64 summation
+        let tol = if f.tier_active() { 1e-5 } else { 1e-9 };
         for (i, (g, w)) in got.as_slice().iter().zip(&want).enumerate() {
             assert!(
-                (g - w).abs() < 1e-9 * scale,
+                (g - w).abs() < tol * scale,
                 "case {case} ({}, d={d}, n={n}) entry {i}: {g} vs {w}",
                 kern.name()
             );
@@ -85,7 +89,13 @@ fn property_woodbury_solves_the_system() {
         // wrong answer); whenever the solver *claims* success the residual
         // must vanish.
         if let Ok(z) = woodbury_solve(&f, &g) {
-            let back = f.matvec(&z);
+            // residual through the tier-independent exact surface: the
+            // direct solve runs on the exact panels, so its claim is
+            // checked against the exact operator even when the mixed CI
+            // leg has installed the f32 tier
+            let mut back = Mat::zeros(f.d(), f.n());
+            let mut ws = MatvecWorkspace::new(f.d(), f.n());
+            f.matvec_exact(&z, &mut back, &mut ws);
             let err = (&back - &g).max_abs();
             assert!(
                 err < 1e-6 * (1.0 + g.max_abs()),
@@ -218,8 +228,12 @@ fn property_gram_operator_is_symmetric() {
         let utav: f64 = u.iter().zip(&av).map(|(a, b)| a * b).sum();
         let vtau: f64 = v.iter().zip(&au).map(|(a, b)| a * b).sum();
         let scale = utav.abs().max(vtau.abs()).max(1.0);
+        // the mixed tier rounds each panel independently, so the operator
+        // is symmetric only to ~ε_f32 — which is why the tiered solve path
+        // is refinement-certified rather than trusted blindly
+        let tol = if f.tier_active() { 2e-6 } else { 1e-9 };
         assert!(
-            (utav - vtau).abs() < 1e-9 * scale,
+            (utav - vtau).abs() < tol * scale,
             "{}: asymmetry {utav} vs {vtau}",
             kern.name()
         );

@@ -8,8 +8,10 @@
 //! CI run fuzzes the same corpus):
 //!
 //! * round-trip property for **every** frame type, including the v2
-//!   health/registry frames (`Ping`/`Pong`/`SyncAt`) and the v3
-//!   epoch-fence frames (`Claim`/`ClaimAck`): encode → frame-read →
+//!   health/registry frames (`Ping`/`Pong`/`SyncAt`), the v3
+//!   epoch-fence frames (`Claim`/`ClaimAck`) and the v4 mixed-tier
+//!   frames (`SyncAtF32`/`AppendF32` — `round ∘ widen = id` makes even
+//!   the narrowed panels re-encode exactly): encode → frame-read →
 //!   decode → re-encode is byte-identical;
 //! * every truncation of every valid encoding is a clean error;
 //! * length-field inflation (header promising more payload than sent, up
@@ -69,6 +71,8 @@ fn coord_corpus() -> Vec<(&'static str, CoordFrame)> {
         ("shutdown", CoordFrame::Shutdown),
         ("ping", CoordFrame::Ping { nonce: 0x0123_4567_89AB_CDEF }),
         ("claim", CoordFrame::Claim { epoch: u64::MAX - 3 }),
+        ("sync_at_f32", CoordFrame::SyncAtF32 { revision: u64::MAX - 2, sync: sync_frame() }),
+        ("append_f32", CoordFrame::AppendF32(append_frame())),
     ]
 }
 
@@ -113,7 +117,7 @@ fn all_encodings() -> Vec<(String, Vec<u8>)> {
 fn corpus_covers_every_frame_type() {
     // if a frame variant is added without a corpus entry, this pin fails
     // (update BOTH when the protocol grows)
-    assert_eq!(coord_corpus().len(), 11, "coordinator corpus out of date");
+    assert_eq!(coord_corpus().len(), 13, "coordinator corpus out of date");
     assert_eq!(worker_corpus().len(), 7, "worker corpus out of date");
     assert!(
         coord_corpus().iter().any(|(n, _)| *n == "ping")
@@ -125,6 +129,34 @@ fn corpus_covers_every_frame_type() {
         coord_corpus().iter().any(|(n, _)| *n == "claim")
             && worker_corpus().iter().any(|(n, _)| *n == "claim_ack"),
         "the v3 epoch-fence frames must be fuzzed"
+    );
+    assert!(
+        coord_corpus().iter().any(|(n, _)| *n == "sync_at_f32")
+            && coord_corpus().iter().any(|(n, _)| *n == "append_f32"),
+        "the v4 mixed-tier frames must be fuzzed"
+    );
+}
+
+#[test]
+fn f32_tier_frames_are_smaller_by_exactly_the_narrowed_elements() {
+    // size pin for the v4 frames: the f32 variants carry the identical
+    // payload layout except that the tier panels travel 4 bytes/element
+    // instead of 8. For the exemplars: SyncAtF32 narrows xt (3×2),
+    // lam_xt (3×2) and h (2×2) = 16 elements; AppendF32 narrows xt_new
+    // (3) and lam_new (3) = 6 elements. kp/kpp panels stay f64 in both.
+    let sync_full = encode_coord(&CoordFrame::SyncAt { revision: 9, sync: sync_frame() });
+    let sync_tier = encode_coord(&CoordFrame::SyncAtF32 { revision: 9, sync: sync_frame() });
+    assert_eq!(
+        sync_full.len() - sync_tier.len(),
+        16 * 4,
+        "SyncAtF32 must save exactly 4 bytes per tier-panel element"
+    );
+    let app_full = encode_coord(&CoordFrame::Append(append_frame()));
+    let app_tier = encode_coord(&CoordFrame::AppendF32(append_frame()));
+    assert_eq!(
+        app_full.len() - app_tier.len(),
+        6 * 4,
+        "AppendF32 must save exactly 4 bytes per narrowed border element"
     );
 }
 
@@ -210,7 +242,7 @@ fn every_tag_value_decodes_without_panicking() {
     payloads.push(empty);
     // the current tag space (update when the protocol grows — the corpus
     // coverage pin above will remind you)
-    let coord_known = 0x01u8..=0x0B;
+    let coord_known = 0x01u8..=0x0D;
     let worker_known = 0x81u8..=0x87;
     for tag in 0u8..=255 {
         for payload in &payloads {
